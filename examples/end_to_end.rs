@@ -1,0 +1,138 @@
+//! End-to-end driver — the full-system validation run recorded in
+//! EXPERIMENTS.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end -- [scale]
+//! ```
+//!
+//! Exercises all three layers on every benchmark of the suite:
+//!   L1/L2  — AOT JAX/Pallas kernels executed via PJRT from the map phase
+//!            (when artifacts are built; verified against native),
+//!   L3     — the MR4R coordinator with the memsim heap, both execution
+//!            flows, and both baselines,
+//! and prints the paper's headline metrics: per-benchmark optimizer
+//! speedup (claim: up to 2.0×, SM ≤ 1), gap to Phoenix++ (claim: ~17%),
+//! and the WC GC-time collapse (Figs. 8/9 mechanism).
+
+use mr4r::api::config::OptimizeMode;
+use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use mr4r::benchmarks::Backend;
+use mr4r::harness::scaled_heap;
+use mr4r::memsim::GcPolicy;
+use mr4r::util::table::{f2, TextTable};
+use mr4r::util::timer::{geomean, measure};
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.004);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4);
+    // Timings use the native backend so all frameworks pay identical map
+    // compute (Phoenix++'s HG path is per-pixel and never calls a kernel);
+    // the PJRT backend then re-runs each workload to prove the three
+    // layers compose and produce identical results.
+    let backend = Backend::Native;
+    let pjrt = match Backend::auto() {
+        Backend::Pjrt(ks) => Some(Backend::Pjrt(ks)),
+        Backend::Native => None,
+    };
+    println!(
+        "end-to-end: scale={scale}, threads={threads}, timing backend=native, pjrt={}",
+        if pjrt.is_some() { "verified" } else { "not built (make artifacts)" }
+    );
+
+    let (iters, warmup) = (3, 1);
+    let mut table = TextTable::new(vec![
+        "bench", "flow", "unopt(s)", "opt(s)", "speedup", "ppp(s)", "opt/ppp", "gc% unopt",
+        "gc% opt",
+    ]);
+    let mut speedups = Vec::new();
+    let mut vs_ppp = Vec::new();
+
+    for id in BenchId::ALL {
+        let w = prepare(id, scale, 42, backend.clone());
+
+        let heap_u = scaled_heap(scale, GcPolicy::Parallel, 1.0);
+        let unopt = measure(warmup, iters, || {
+            w.run(
+                Framework::Mr4r,
+                &RunParams::fast(threads)
+                    .with_optimize(OptimizeMode::Off)
+                    .with_heap(heap_u.clone()),
+            );
+        })
+        .mean();
+        let gc_u = heap_u.stats();
+
+        let heap_o = scaled_heap(scale, GcPolicy::Parallel, 1.0);
+        let mut flow = String::new();
+        let opt = measure(warmup, iters, || {
+            let o = w.run(
+                Framework::Mr4r,
+                &RunParams::fast(threads).with_heap(heap_o.clone()),
+            );
+            flow = o.metrics.map(|m| m.flow.label().to_string()).unwrap_or_default();
+        })
+        .mean();
+        let gc_o = heap_o.stats();
+
+        let ppp = measure(warmup, iters, || {
+            w.run(Framework::PhoenixPP, &RunParams::fast(threads));
+        })
+        .mean();
+
+        // Digest equivalence across every engine, every run.
+        let d_opt = w.run(Framework::Mr4r, &RunParams::fast(threads)).digest;
+        let d_unopt = w
+            .run(
+                Framework::Mr4r,
+                &RunParams::fast(threads).with_optimize(OptimizeMode::Off),
+            )
+            .digest;
+        let d_ppp = w.run(Framework::PhoenixPP, &RunParams::fast(threads)).digest;
+        let d_ph = w.run(Framework::Phoenix, &RunParams::fast(threads)).digest;
+        assert_eq!(d_opt, d_unopt, "{}: optimizer changed results", id.code());
+        assert_eq!(d_opt, d_ppp, "{}: phoenix++ result mismatch", id.code());
+        assert_eq!(d_opt, d_ph, "{}: phoenix result mismatch", id.code());
+        // Three-layer composition: same digest through the PJRT kernels.
+        if let Some(pjrt_backend) = &pjrt {
+            let wp = prepare(id, scale, 42, pjrt_backend.clone());
+            let d_pjrt = wp.run(Framework::Mr4r, &RunParams::fast(threads)).digest;
+            assert_eq!(d_opt, d_pjrt, "{}: pjrt result mismatch", id.code());
+        }
+
+        let speedup = unopt / opt;
+        speedups.push(speedup);
+        vs_ppp.push(ppp / opt);
+        // GC share is per total accumulated run time across iterations.
+        let gcpct = |gc: &mr4r::memsim::GcStats, total: f64| {
+            100.0 * gc.gc_seconds / (total * (iters + warmup) as f64).max(1e-9)
+        };
+        table.row(vec![
+            id.code().to_string(),
+            flow.clone(),
+            format!("{unopt:.3}"),
+            format!("{opt:.3}"),
+            f2(speedup),
+            format!("{ppp:.3}"),
+            f2(ppp / opt),
+            f2(gcpct(&gc_u, unopt)),
+            f2(gcpct(&gc_o, opt)),
+        ]);
+    }
+
+    println!("\n{}", table.render());
+    let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+    println!("headline: max optimizer speedup {max:.2}x (paper: up to 2.0x)");
+    println!(
+        "headline: optimized MR4R at {:.2}x of Phoenix++ geomean (paper: within 17%)",
+        geomean(&vs_ppp)
+    );
+    println!(
+        "all digests equal across frameworks, flows{} ✓",
+        if pjrt.is_some() { ", and the PJRT kernel path" } else { "" }
+    );
+}

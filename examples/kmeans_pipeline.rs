@@ -1,0 +1,75 @@
+//! K-Means pipeline — the paper's "challenge" benchmark end to end, with
+//! the numeric assignment running through the AOT JAX/Pallas kernel when
+//! artifacts are built (`make artifacts`), native Rust otherwise.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example kmeans_pipeline
+//! ```
+//!
+//! Demonstrates the combiner-with-state resolution the paper describes:
+//! the emitted value is `[Σx, Σy, Σz, n]`, folded by the generated
+//! vector-sum combiner, normalized outside the reduce.
+
+use mr4r::api::config::OptimizeMode;
+use mr4r::benchmarks::{datagen, kmeans, Backend};
+use mr4r::api::JobConfig;
+use mr4r::optimizer::agent::OptimizerAgent;
+use mr4r::util::timer::Stopwatch;
+
+fn main() {
+    let backend = Backend::auto();
+    println!("backend: {}", backend.name());
+    if matches!(backend, Backend::Native) {
+        println!("(run `make artifacts` to route assignment through the Pallas kernel)");
+    }
+
+    let data = datagen::kmeans_points(0.02, 2024);
+    println!(
+        "{} points, {} initial centroids, {} Lloyd iterations",
+        data.points.len(),
+        data.initial_centroids.len(),
+        kmeans::ITERATIONS
+    );
+
+    let agent = OptimizerAgent::new();
+    let before = kmeans::mean_distance(&data, &data.initial_centroids, &backend);
+
+    let sw = Stopwatch::start();
+    let (centroids, metrics) = kmeans::run_mr4r(
+        &data,
+        &JobConfig::fast().with_threads(4),
+        &agent,
+        &backend,
+    );
+    let optimized_secs = sw.secs();
+    let after = kmeans::mean_distance(&data, &centroids, &backend);
+
+    let sw = Stopwatch::start();
+    let (centroids_off, _) = kmeans::run_mr4r(
+        &data,
+        &JobConfig::fast()
+            .with_threads(4)
+            .with_optimize(OptimizeMode::Off),
+        &agent,
+        &backend,
+    );
+    let unoptimized_secs = sw.secs();
+
+    println!("\nclustering quality (mean point→centroid distance):");
+    println!("  initial   : {before:.3}");
+    println!("  converged : {after:.3}");
+    println!("\nlast-iteration flow: {}", metrics.flow.label());
+    println!("optimized run   : {optimized_secs:.3}s");
+    println!("unoptimized run : {unoptimized_secs:.3}s");
+    println!(
+        "results equal   : {}",
+        kmeans::digest_centroids(&centroids) == kmeans::digest_centroids(&centroids_off)
+    );
+
+    assert!(after < before, "Lloyd iterations must improve clustering");
+    assert_eq!(
+        kmeans::digest_centroids(&centroids),
+        kmeans::digest_centroids(&centroids_off),
+        "optimizer must not change results"
+    );
+}

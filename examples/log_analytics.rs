@@ -1,0 +1,132 @@
+//! Log analytics — the kind of "smaller Big Data job" the paper's intro
+//! motivates (most cloud jobs fit one node; Appuswamy et al. [1]).
+//!
+//! ```bash
+//! cargo run --release --example log_analytics
+//! ```
+//!
+//! Two MapReduce jobs over synthetic web-server logs sharing one optimizer
+//! agent (as a long-lived application would):
+//!
+//! 1. status-code counts — sum reducer → combining flow;
+//! 2. per-endpoint p-worst latency — max reducer → combining flow;
+//! 3. a session-dedup job whose reducer has an early exit → the agent
+//!    *rejects* it and the reduce flow runs (transparently, correctly).
+
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::{Emitter, JobConfig, MapReduce};
+use mr4r::optimizer::agent::OptimizerAgent;
+use mr4r::optimizer::ast::specs;
+use mr4r::optimizer::builder::canon;
+use mr4r::util::prng::Xoshiro256;
+
+/// One synthetic access-log line: "METHOD /path STATUS LATENCY_MS".
+fn synth_logs(n: usize, seed: u64) -> Vec<String> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let endpoints = [
+        "/api/users", "/api/orders", "/api/search", "/static/app.js", "/health",
+    ];
+    let statuses = [200u32, 200, 200, 200, 301, 404, 500];
+    (0..n)
+        .map(|_| {
+            let ep = rng.pick(&endpoints);
+            let st = rng.pick(&statuses);
+            let lat = (rng.unit_f64() * rng.unit_f64() * 900.0 + 1.0) as u64;
+            format!("GET {ep} {st} {lat}")
+        })
+        .collect()
+}
+
+fn main() {
+    let logs = synth_logs(200_000, 7);
+    let agent = OptimizerAgent::new();
+
+    // --- Job 1: requests per status code (sum → optimizable) ---
+    let status_mapper = |line: &String, em: &mut dyn Emitter<i64, i64>| {
+        let mut it = line.split(' ');
+        let status: i64 = it.nth(2).and_then(|s| s.parse().ok()).unwrap_or(0);
+        em.emit(status, 1);
+    };
+    let job1 = MapReduce::new(
+        status_mapper,
+        RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
+    )
+    .with_config(JobConfig::fast())
+    .with_agent(agent.clone());
+    let (mut by_status, r1) = job1.run_with_report(&logs);
+    by_status.sort_by_key(|kv| kv.key);
+    println!("requests by status ({} flow):", r1.metrics.flow.label());
+    for kv in &by_status {
+        println!("  {}  {:>7}", kv.key, kv.value);
+    }
+
+    // --- Job 2: worst latency per endpoint (max → optimizable) ---
+    let latency_mapper = |line: &String, em: &mut dyn Emitter<String, i64>| {
+        let mut it = line.split(' ');
+        let ep = it.nth(1).unwrap_or("?").to_string();
+        let lat: i64 = it.nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
+        em.emit(ep, lat);
+    };
+    let job2 = MapReduce::new(
+        latency_mapper,
+        RirReducer::<String, i64>::new(canon::max_i64("logs.worst_latency")),
+    )
+    .with_config(JobConfig::fast())
+    .with_agent(agent.clone());
+    let (mut worst, r2) = job2.run_with_report(&logs);
+    worst.sort_by(|a, b| b.value.cmp(&a.value));
+    println!("\nworst latency per endpoint ({} flow):", r2.metrics.flow.label());
+    for kv in &worst {
+        println!("  {:>5}ms  {}", kv.value, kv.key);
+    }
+
+    // --- Job 2b: mean latency per endpoint, written in the declarative
+    // reducer DSL (compiled to RIR, then transformed to a combiner —
+    // semantic information flowing from the API down, paper §6) ---
+    let mean_mapper = |line: &String, em: &mut dyn Emitter<String, f64>| {
+        let mut it = line.split(' ');
+        let ep = it.nth(1).unwrap_or("?").to_string();
+        let lat: f64 = it.nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.0);
+        em.emit(ep, lat);
+    };
+    let job2b = MapReduce::new(
+        mean_mapper,
+        RirReducer::<String, f64>::new(
+            specs::mean_f64("logs.mean_latency").compile().expect("spec compiles"),
+        ),
+    )
+    .with_config(JobConfig::fast())
+    .with_agent(agent.clone());
+    let (mut means, r2b) = job2b.run_with_report(&logs);
+    means.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    println!("\nmean latency per endpoint ({} flow, DSL-compiled reducer):", r2b.metrics.flow.label());
+    for kv in &means {
+        println!("  {:>7.1}ms  {}", kv.value, kv.key);
+    }
+    assert_eq!(r2b.metrics.flow.label(), "combine");
+
+    // --- Job 3: a non-transformable reducer (early exit) ---
+    let job3 = MapReduce::new(
+        status_mapper,
+        RirReducer::<i64, i64>::new(canon::early_exit("logs.first_burst")),
+    )
+    .with_config(JobConfig::fast())
+    .with_agent(agent.clone());
+    let (_, r3) = job3.run_with_report(&logs);
+    println!(
+        "\nnon-fold reducer: flow={} (agent said: {})",
+        r3.metrics.flow.label(),
+        r3.metrics.fallback_reason.as_deref().unwrap_or("-")
+    );
+
+    let stats = agent.stats();
+    println!(
+        "\nagent: {} classes optimized, {} rejected, detection {:.0}us/class",
+        stats.optimized,
+        stats.rejected,
+        stats.detection.mean() * 1e6
+    );
+    assert_eq!(r1.metrics.flow.label(), "combine");
+    assert_eq!(r2.metrics.flow.label(), "combine");
+    assert_eq!(r3.metrics.flow.label(), "reduce");
+}

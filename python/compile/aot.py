@@ -1,0 +1,51 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not `.serialize()`d protos) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with `return_tuple=True`,
+so the Rust side unwraps a 1-tuple. See /opt/xla-example/README.md.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--only", default=None, help="comma-separated subset of artifact names"
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    for name, (fn, example_args) in model.exports().items():
+        if only and name not in only:
+            continue
+        text = to_hlo_text(fn, example_args)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+if __name__ == "__main__":
+    main()

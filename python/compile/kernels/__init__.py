@@ -1,0 +1,24 @@
+"""L1 — Pallas kernels for the benchmark suite's numeric map phases.
+
+Every kernel is written with ``interpret=True``: the CPU PJRT client the
+Rust coordinator uses cannot execute Mosaic custom-calls, so the interpret
+path is the execution vehicle while the kernel *structure* (BlockSpec
+tiling, MXU-shaped contractions, VMEM-sized blocks) is authored for TPU.
+See DESIGN.md §Hardware-Adaptation for the VMEM/MXU sizing notes.
+
+Shape contract: ``SHAPES`` here must match
+``rust/src/runtime/artifacts.rs::shapes``.
+"""
+
+SHAPES = {
+    "MM_TILE": 128,
+    "HG_CHUNK": 4096,
+    "HG_BINS": 256,
+    "KM_POINTS": 1024,
+    "KM_CENTROIDS": 128,
+    "KM_DIMS": 3,
+    "LR_CHUNK": 4096,
+    "PC_BLOCK": 512,
+}
+
+from . import histogram, kmeans, linreg, matmul, matmul_grid, pca, ref  # noqa: E402,F401

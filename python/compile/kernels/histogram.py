@@ -1,0 +1,46 @@
+"""HG binning kernel — histogram as a one-hot contraction.
+
+GPU histogram kernels scatter with atomics into shared-memory bins; TPUs
+have no scatter-atomics, so the canonical adaptation (DESIGN.md
+§Hardware-Adaptation) is a **one-hot matmul**: build the (CHUNK, BINS)
+one-hot matrix of each sample's bin and contract the sample axis on the
+MXU. VMEM: 4096×256 one-hot f32 = 4 MiB — inside budget; on real hardware
+the one-hot would be bf16 (2 MiB) or int8.
+
+Padding convention: values outside [0, BINS) contribute to no bin, so the
+Rust side pads short chunks with 512.0.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import SHAPES
+
+CHUNK = SHAPES["HG_CHUNK"]
+BINS = SHAPES["HG_BINS"]
+
+
+def _kernel(v_ref, o_ref):
+    vals = v_ref[...]
+    bins = jax.lax.broadcasted_iota(jnp.float32, (CHUNK, BINS), 1)
+    onehot = (vals[:, None] == bins).astype(jnp.float32)
+    # Contract the sample axis: ones(1, CHUNK) @ onehot → (1, BINS).
+    ones = jnp.ones((1, CHUNK), jnp.float32)
+    o_ref[...] = jnp.dot(ones, onehot, preferred_element_type=jnp.float32)[0]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def histogram_chunk(values):
+    """Counts per bin for one CHUNK of integer-valued f32 samples."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((BINS,), jnp.float32),
+        interpret=True,
+    )(values)
+
+
+def example_args():
+    return (jax.ShapeDtypeStruct((CHUNK,), jnp.float32),)

@@ -1,0 +1,56 @@
+"""KM assignment kernel — nearest centroid via the matmul expansion.
+
+The GPU formulation loops centroids in shared memory per thread-block; the
+TPU adaptation expands the squared distance as
+
+    |p - c|^2 = |p|^2 - 2 p.c + |c|^2
+
+so the (P, C) distance matrix is one MXU contraction (p @ c.T) plus rank-1
+row/column corrections, then an argmin over the centroid axis. VMEM:
+1024×128 f32 distances = 512 KiB + 1024×3 points + 128×3 centroids —
+trivially resident.
+
+Unused centroid slots are padded with huge coordinates by the caller, so
+|c|^2 ≈ 1e60 keeps them out of every argmin.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import SHAPES
+
+P = SHAPES["KM_POINTS"]
+C = SHAPES["KM_CENTROIDS"]
+D = SHAPES["KM_DIMS"]
+
+
+def _kernel(p_ref, c_ref, o_ref):
+    pts = p_ref[...]
+    cents = c_ref[...]
+    # -2 p.c term on the MXU; norms as rank-1 corrections.
+    cross = jnp.dot(pts, cents.T, preferred_element_type=jnp.float32)
+    cn = (cents * cents).sum(axis=1)
+    # |p|^2 is constant per row — it cannot change the argmin, so skip it
+    # (saves a broadcast; the distances are relative).
+    d = cn[None, :] - 2.0 * cross
+    o_ref[...] = jnp.argmin(d, axis=1).astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def kmeans_assign(points, centroids):
+    """Nearest-centroid index (as f32) for each of P points."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((P,), jnp.float32),
+        interpret=True,
+    )(points, centroids)
+
+
+def example_args():
+    return (
+        jax.ShapeDtypeStruct((P, D), jnp.float32),
+        jax.ShapeDtypeStruct((C, D), jnp.float32),
+    )

@@ -1,0 +1,40 @@
+"""LR moment kernel — the five regression sums in one pass.
+
+(Sx, Sy, Sxx, Syy, Sxy) over a (CHUNK, 2) sample block. Pure VPU
+reduction work (no MXU): one (CHUNK, 2) load from VMEM (32 KiB) and five
+lane-reductions. Zero rows are the padding convention (they add nothing
+to any moment).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import SHAPES
+
+CHUNK = SHAPES["LR_CHUNK"]
+
+
+def _kernel(xy_ref, o_ref):
+    xy = xy_ref[...]
+    x = xy[:, 0]
+    y = xy[:, 1]
+    o_ref[...] = jnp.stack(
+        [x.sum(), y.sum(), (x * x).sum(), (y * y).sum(), (x * y).sum()]
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def linreg_moments(xy):
+    """Moment sums of one (CHUNK, 2) block."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((5,), jnp.float32),
+        interpret=True,
+    )(xy)
+
+
+def example_args():
+    return (jax.ShapeDtypeStruct((CHUNK, 2), jnp.float32),)

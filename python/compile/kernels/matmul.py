@@ -1,0 +1,42 @@
+"""MM tile-matmul kernel — the MXU showcase.
+
+One (128, 128) f32 × (128, 128) f32 tile product. 128 is the MXU systolic
+array edge; three f32 tiles resident (A, B, C) cost 3 × 64 KiB = 192 KiB of
+VMEM, far under the ~16 MiB budget, leaving room for double-buffering the
+HBM→VMEM stream when the Rust coordinator sweeps k-blocks.
+
+The grid is 1×1 on purpose: the *coordinator* owns the block schedule (it
+is the MapReduce task structure of the MM benchmark), so the kernel is the
+innermost tile contraction only.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import SHAPES
+
+T = SHAPES["MM_TILE"]
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    # Single fused MXU contraction; preferred_element_type pins the f32
+    # accumulator (bf16 inputs would still accumulate in f32 on TPU).
+    o_ref[...] = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul_tile(a, b):
+    """C = A @ B for one (T, T) tile pair (f32)."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((T, T), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def example_args():
+    spec = jax.ShapeDtypeStruct((T, T), jnp.float32)
+    return (spec, spec)

@@ -1,0 +1,57 @@
+"""Grid-scheduled matmul — the full BlockSpec/grid Pallas pattern.
+
+Where `matmul.py` is a single-tile contraction (the coordinator owns the
+block schedule), this kernel expresses the whole (N, N) product *inside*
+Pallas: a 3-d grid over (i, j, k) blocks with `BlockSpec` index maps
+staging one A-tile and one B-tile into VMEM per step and accumulating the
+output tile in place. This is the DESIGN.md §Hardware-Adaptation mapping
+of a GPU threadblock schedule onto the TPU's HBM->VMEM pipeline: the
+Mosaic compiler double-buffers the streamed tiles because consecutive k
+steps touch disjoint HBM blocks.
+
+VMEM per step: 3 x 128^2 f32 tiles = 192 KiB; the k-innermost grid order
+keeps the output tile resident across the contraction.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import SHAPES
+
+T = SHAPES["MM_TILE"]
+# Fixed AOT size: 4x4 blocks of 128 = 512x512 operands.
+N = 4 * T
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    # First k step of each (i, j) tile zeroes the accumulator.
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def matmul_grid(a, b):
+    """C = A @ B for (N, N) f32 operands, blocked (T, T) on a 3-d grid."""
+    blocks = N // T
+    return pl.pallas_call(
+        _kernel,
+        grid=(blocks, blocks, blocks),
+        in_specs=[
+            pl.BlockSpec((T, T), lambda i, j, k: (i, k)),
+            pl.BlockSpec((T, T), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((T, T), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, N), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def example_args():
+    spec = jax.ShapeDtypeStruct((N, N), jnp.float32)
+    return (spec, spec)

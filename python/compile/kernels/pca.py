@@ -1,0 +1,37 @@
+"""PC covariance-partial kernel.
+
+(Sa, Sb, Sab) for one (2, BLOCK) row-pair block — the partials the PCA
+benchmark's reduce phase sums per row pair. VPU reductions over a 4 KiB
+block; zero columns are the padding convention.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import SHAPES
+
+BLOCK = SHAPES["PC_BLOCK"]
+
+
+def _kernel(r_ref, o_ref):
+    rows = r_ref[...]
+    a = rows[0]
+    b = rows[1]
+    o_ref[...] = jnp.stack([a.sum(), b.sum(), (a * b).sum()])
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pca_pair(rows):
+    """Covariance partials of one row-pair block."""
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((3,), jnp.float32),
+        interpret=True,
+    )(rows)
+
+
+def example_args():
+    return (jax.ShapeDtypeStruct((2, BLOCK), jnp.float32),)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles — the correctness reference for every Pallas kernel.
+
+These are the "obviously correct" formulations; pytest/hypothesis assert
+``kernel(x) ~= ref(x)`` across random inputs and paddings.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_tile(a, b):
+    """C = A @ B for one (T, T) f32 tile pair."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def histogram_chunk(values, bins=256):
+    """Per-bin counts of integer-valued f32 samples; values >= bins are
+    padding and must not be counted."""
+    idx = values.astype(jnp.int32)
+    valid = (values >= 0) & (values < bins)
+    return jnp.zeros((bins,), jnp.float32).at[jnp.where(valid, idx, 0)].add(
+        valid.astype(jnp.float32)
+    )
+
+
+def kmeans_assign(points, centroids):
+    """Nearest-centroid index (f32) per point, squared-L2 metric."""
+    d = ((points[:, None, :] - centroids[None, :, :]) ** 2).sum(-1)
+    return jnp.argmin(d, axis=1).astype(jnp.float32)
+
+
+def linreg_moments(xy):
+    """(Sx, Sy, Sxx, Syy, Sxy) over an (N, 2) block."""
+    x, y = xy[:, 0], xy[:, 1]
+    return jnp.stack(
+        [x.sum(), y.sum(), (x * x).sum(), (y * y).sum(), (x * y).sum()]
+    )
+
+
+def pca_pair(rows):
+    """(Sa, Sb, Sab) over a (2, N) row-pair block."""
+    a, b = rows[0], rows[1]
+    return jnp.stack([a.sum(), b.sum(), (a * b).sum()])

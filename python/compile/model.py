@@ -1,0 +1,76 @@
+"""L2 — the JAX compute graphs the coordinator's artifacts are lowered from.
+
+For a data-pipeline paper the "model" is the per-benchmark numeric map
+phase. Each exported graph wraps one L1 Pallas kernel (so the kernel
+lowers into the same HLO module); `kmeans_step` additionally demonstrates
+a *fused* L2 graph (assignment + segment-sum in one module) that the
+optimizer-eliminated reduce phase corresponds to on the array side.
+
+Exports (name -> (fn, example_args)) drive `aot.py`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import SHAPES, histogram, kmeans, linreg, matmul, matmul_grid, pca
+
+
+def matmul_tile(a, b):
+    """MM benchmark map phase: one output tile partial product."""
+    return matmul.matmul_tile(a, b)
+
+
+def histogram_chunk(values):
+    """HG benchmark map phase: per-chunk per-bin counts."""
+    return histogram.histogram_chunk(values)
+
+
+def kmeans_assign(points, centroids):
+    """KM benchmark map phase: nearest-centroid assignment."""
+    return kmeans.kmeans_assign(points, centroids)
+
+
+def linreg_moments(xy):
+    """LR chunked map phase: the five moment sums."""
+    return linreg.linreg_moments(xy)
+
+
+def pca_pair(rows):
+    """PC benchmark map phase: covariance partials of one row pair."""
+    return pca.pca_pair(rows)
+
+
+def matmul_full(a, b):
+    """Whole-matrix product on the Pallas 3-d grid schedule (512x512)."""
+    return matmul_grid.matmul_grid(a, b)
+
+
+def kmeans_step(points, centroids):
+    """A fused Lloyd half-step: assign + per-cluster coordinate sums and
+    counts, entirely on the array side.
+
+    This is the L2 rendering of what the paper's optimizer does at L3:
+    the per-point (key, value) emission plus reduce collapses into a
+    segment-sum at emit time. Exported for the end-to-end example and the
+    L2 fusion test; the MapReduce benchmarks intentionally do NOT use it
+    (they exercise the coordinator's combine flow instead).
+    """
+    assign = kmeans.kmeans_assign(points, centroids).astype(jnp.int32)
+    c = SHAPES["KM_CENTROIDS"]
+    onehot = jax.nn.one_hot(assign, c, dtype=jnp.float32)  # (P, C)
+    sums = jnp.dot(onehot.T, points, preferred_element_type=jnp.float32)
+    counts = onehot.sum(axis=0)
+    return sums, counts
+
+
+def exports():
+    """name -> (fn, example_args) for every AOT artifact."""
+    return {
+        "matmul": (matmul_tile, matmul.example_args()),
+        "matmul_grid": (matmul_full, matmul_grid.example_args()),
+        "histogram": (histogram_chunk, histogram.example_args()),
+        "kmeans": (kmeans_assign, kmeans.example_args()),
+        "linreg": (linreg_moments, linreg.example_args()),
+        "pca": (pca_pair, pca.example_args()),
+        "kmeans_step": (kmeans_step, kmeans.example_args()),
+    }

@@ -1,0 +1,171 @@
+"""Kernel-vs-oracle correctness: every Pallas kernel against its pure-jnp
+reference, with hypothesis sweeping data distributions and paddings.
+
+Shapes are fixed by the AOT contract (SHAPES); what varies is the data —
+magnitudes, signs, padding fractions, degenerate fills — which is where
+kernel bugs (wrong axis, padding leak, accumulator dtype) actually live.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import SHAPES, histogram, kmeans, linreg, matmul, pca, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+T = SHAPES["MM_TILE"]
+HG_CHUNK, HG_BINS = SHAPES["HG_CHUNK"], SHAPES["HG_BINS"]
+P, C, D = SHAPES["KM_POINTS"], SHAPES["KM_CENTROIDS"], SHAPES["KM_DIMS"]
+LR_CHUNK = SHAPES["LR_CHUNK"]
+PC_BLOCK = SHAPES["PC_BLOCK"]
+
+HYP = dict(max_examples=12, deadline=None)
+
+
+def rng_array(seed, shape, lo, hi, dtype=np.float32):
+    r = np.random.default_rng(seed)
+    return r.uniform(lo, hi, size=shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+@settings(**HYP)
+@given(seed=st.integers(0, 2**31 - 1), scale=st.sampled_from([0.1, 1.0, 8.0]))
+def test_matmul_matches_ref(seed, scale):
+    a = rng_array(seed, (T, T), -scale, scale)
+    b = rng_array(seed + 1, (T, T), -scale, scale)
+    got = matmul.matmul_tile(a, b)
+    want = ref.matmul_tile(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4 * scale * scale)
+
+
+def test_matmul_zero_and_identity():
+    z = np.zeros((T, T), np.float32)
+    eye = np.eye(T, dtype=np.float32)
+    a = rng_array(7, (T, T), -3, 3)
+    np.testing.assert_array_equal(matmul.matmul_tile(a, z), z)
+    np.testing.assert_allclose(matmul.matmul_tile(a, eye), a, rtol=1e-6)
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_grid_matches_ref(seed):
+    from compile.kernels import matmul_grid
+    n = matmul_grid.N
+    a = rng_array(seed, (n, n), -2, 2)
+    b = rng_array(seed + 1, (n, n), -2, 2)
+    got = matmul_grid.matmul_grid(a, b)
+    want = ref.matmul_tile(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_matmul_grid_blocked_equals_single_tiles():
+    # The grid schedule must equal composing the single-tile kernel over
+    # the same block decomposition (L1-internal consistency).
+    from compile.kernels import matmul_grid
+    n, t = matmul_grid.N, T
+    a = rng_array(3, (n, n), -1, 1)
+    b = rng_array(4, (n, n), -1, 1)
+    got = np.asarray(matmul_grid.matmul_grid(a, b))
+    want = np.zeros((n, n), np.float32)
+    for i in range(n // t):
+        for j in range(n // t):
+            acc = np.zeros((t, t), np.float32)
+            for k in range(n // t):
+                ta = a[i*t:(i+1)*t, k*t:(k+1)*t]
+                tb = b[k*t:(k+1)*t, j*t:(j+1)*t]
+                acc += np.asarray(matmul.matmul_tile(ta, tb))
+            want[i*t:(i+1)*t, j*t:(j+1)*t] = acc
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+# ------------------------------------------------------------- histogram
+
+@settings(**HYP)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    pad_frac=st.sampled_from([0.0, 0.25, 0.9]),
+)
+def test_histogram_matches_ref(seed, pad_frac):
+    r = np.random.default_rng(seed)
+    vals = r.integers(0, HG_BINS, HG_CHUNK).astype(np.float32)
+    n_pad = int(HG_CHUNK * pad_frac)
+    if n_pad:
+        vals[-n_pad:] = 512.0  # padding convention
+    got = histogram.histogram_chunk(vals)
+    want = ref.histogram_chunk(vals, HG_BINS)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert float(np.asarray(got).sum()) == HG_CHUNK - n_pad
+
+
+def test_histogram_single_bin():
+    vals = np.full((HG_CHUNK,), 37.0, np.float32)
+    got = np.asarray(histogram.histogram_chunk(vals))
+    assert got[37] == HG_CHUNK
+    assert got.sum() == HG_CHUNK
+
+
+# ---------------------------------------------------------------- kmeans
+
+@settings(**HYP)
+@given(seed=st.integers(0, 2**31 - 1), live=st.sampled_from([2, 17, 100, C]))
+def test_kmeans_matches_ref(seed, live):
+    r = np.random.default_rng(seed)
+    pts = r.uniform(-100, 100, (P, D)).astype(np.float32)
+    cents = np.full((C, D), 1e30, np.float32)
+    cents[:live] = r.uniform(-100, 100, (live, D)).astype(np.float32)
+    got = np.asarray(kmeans.kmeans_assign(pts, cents))
+    want = np.asarray(ref.kmeans_assign(pts, cents))
+    # Ties can fall either way between the two formulations; require the
+    # chosen centroid's distance to match the optimum instead of indices.
+    d_got = ((pts - cents[got.astype(int)]) ** 2).sum(1)
+    d_want = ((pts - cents[want.astype(int)]) ** 2).sum(1)
+    np.testing.assert_allclose(d_got, d_want, rtol=1e-3, atol=1e-2)
+    assert (got < live).all(), "padded centroid slots must never win"
+
+
+def test_kmeans_exact_on_separated_clusters():
+    cents = np.full((C, D), 1e30, np.float32)
+    cents[0] = [0, 0, 0]
+    cents[1] = [50, 0, 0]
+    pts = np.zeros((P, D), np.float32)
+    pts[: P // 2] += [1, 1, 1]
+    pts[P // 2 :] += [49, 0, 0]
+    got = np.asarray(kmeans.kmeans_assign(pts, cents))
+    assert (got[: P // 2] == 0).all()
+    assert (got[P // 2 :] == 1).all()
+
+
+# ---------------------------------------------------------------- linreg
+
+@settings(**HYP)
+@given(seed=st.integers(0, 2**31 - 1), pad_frac=st.sampled_from([0.0, 0.5]))
+def test_linreg_matches_ref(seed, pad_frac):
+    xy = rng_array(seed, (LR_CHUNK, 2), -10, 10)
+    n_pad = int(LR_CHUNK * pad_frac)
+    if n_pad:
+        xy[-n_pad:] = 0.0
+    got = np.asarray(linreg.linreg_moments(xy))
+    want = np.asarray(ref.linreg_moments(xy))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+# ------------------------------------------------------------------- pca
+
+@settings(**HYP)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_pca_matches_ref(seed):
+    rows = rng_array(seed, (2, PC_BLOCK), -5, 5)
+    got = np.asarray(pca.pca_pair(rows))
+    want = np.asarray(ref.pca_pair(rows))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-2)
+
+
+def test_pca_zero_padding_is_neutral():
+    rows = np.zeros((2, PC_BLOCK), np.float32)
+    rows[0, 0], rows[1, 0] = 3.0, 4.0
+    got = np.asarray(pca.pca_pair(rows))
+    np.testing.assert_array_equal(got, [3.0, 4.0, 12.0])

@@ -1,0 +1,44 @@
+"""L2 graph tests: the fused kmeans_step against its unfused composition,
+plus export-table/shape-contract checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import SHAPES, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+P, C, D = SHAPES["KM_POINTS"], SHAPES["KM_CENTROIDS"], SHAPES["KM_DIMS"]
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kmeans_step_equals_unfused(seed):
+    r = np.random.default_rng(seed)
+    pts = r.uniform(-50, 50, (P, D)).astype(np.float32)
+    cents = np.full((C, D), 1e30, np.float32)
+    cents[:10] = r.uniform(-50, 50, (10, D)).astype(np.float32)
+
+    sums, counts = model.kmeans_step(pts, cents)
+    assign = np.asarray(ref.kmeans_assign(pts, cents)).astype(int)
+    want_counts = np.bincount(assign, minlength=C).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(counts), want_counts)
+    want_sums = np.zeros((C, D), np.float32)
+    np.add.at(want_sums, assign, pts)
+    np.testing.assert_allclose(np.asarray(sums), want_sums, rtol=1e-4, atol=1e-2)
+
+
+def test_exports_cover_rust_kernel_names():
+    names = set(model.exports().keys())
+    # The Rust runtime loads exactly these five; kmeans_step is extra.
+    assert {"matmul", "histogram", "kmeans", "linreg", "pca"} <= names
+
+
+def test_exports_are_lowerable():
+    # Every export must trace and lower (the cheap 90% of `make artifacts`).
+    for name, (fn, args) in model.exports().items():
+        lowered = jax.jit(fn).lower(*args)
+        assert lowered.compiler_ir("stablehlo") is not None, name

@@ -1,0 +1,53 @@
+//! Shared bench plumbing (criterion is not in the offline vendor set, so
+//! benches are `harness = false` binaries using the crate's own measure/
+//! table utilities).
+//!
+//! Environment knobs:
+//!   MR4R_BENCH_SCALE   input scale        (default 0.004)
+//!   MR4R_BENCH_ITERS   measured iters     (default 3)
+//!   MR4R_BENCH_WARMUP  warm-up iters      (default 1)
+//!   MR4R_BENCH_THREADS max threads        (default all cores)
+
+pub fn scale() -> f64 {
+    std::env::var("MR4R_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.004)
+}
+
+pub fn iters() -> usize {
+    std::env::var("MR4R_BENCH_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3)
+}
+
+pub fn warmup() -> usize {
+    std::env::var("MR4R_BENCH_WARMUP")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+pub fn max_threads() -> usize {
+    std::env::var("MR4R_BENCH_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .max(8)
+        })
+}
+
+pub fn banner(name: &str, what: &str) {
+    println!("\n### bench {name} — {what}");
+    println!(
+        "### scale={} iters={} warmup={} threads={}",
+        scale(),
+        iters(),
+        warmup(),
+        max_threads()
+    );
+}

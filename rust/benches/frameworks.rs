@@ -1,0 +1,60 @@
+//! Bench: Figure 6 — MR4R and Phoenix vs Phoenix++ across the suite.
+//!
+//! `cargo bench --bench frameworks`
+
+mod common;
+
+use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use mr4r::benchmarks::Backend;
+use mr4r::harness::scaled_heap;
+use mr4r::memsim::GcPolicy;
+use mr4r::util::table::{f2, TextTable};
+use mr4r::util::timer::{geomean, measure};
+
+fn main() {
+    common::banner("frameworks", "Fig. 6: speedup relative to Phoenix++");
+    let t = common::max_threads();
+    let mut table = TextTable::new(vec!["bench", "ppp(s)", "phoenix(s)", "mr4r(s)", "ph/ppp", "mr4r/ppp"]);
+    let mut ph_r = Vec::new();
+    let mut mr_r = Vec::new();
+
+    for id in BenchId::ALL {
+        let w = prepare(id, common::scale(), 42, Backend::Native);
+        let ppp = measure(common::warmup(), common::iters(), || {
+            w.run(Framework::PhoenixPP, &RunParams::fast(t));
+        })
+        .median();
+        let ph = measure(common::warmup(), common::iters(), || {
+            w.run(Framework::Phoenix, &RunParams::fast(t));
+        })
+        .median();
+        let mr = measure(common::warmup(), common::iters(), || {
+            w.run(
+                Framework::Mr4r,
+                &RunParams::fast(t)
+                    .with_heap(scaled_heap(common::scale(), GcPolicy::Parallel, 1.0)),
+            );
+        })
+        .median();
+        ph_r.push(ppp / ph);
+        mr_r.push(ppp / mr);
+        table.row(vec![
+            id.code().to_string(),
+            format!("{ppp:.4}"),
+            format!("{ph:.4}"),
+            format!("{mr:.4}"),
+            f2(ppp / ph),
+            f2(ppp / mr),
+        ]);
+    }
+    table.row(vec![
+        "geomean".to_string(),
+        "".to_string(),
+        "".to_string(),
+        "".to_string(),
+        f2(geomean(&ph_r)),
+        f2(geomean(&mr_r)),
+    ]);
+    println!("{}", table.render());
+    println!("paper anchors: workstation medians 0.39 (phoenix), 0.66 (mr4j); server @64t: 0.20 / 0.76");
+}

@@ -1,0 +1,75 @@
+//! Bench: Figures 8–10 — GC behaviour: the WC timeline pair and the
+//! {GC policy × heap size} sweep for WC and SM (the two extremes).
+//!
+//! `cargo bench --bench gc_sweep`
+
+mod common;
+
+use mr4r::api::config::OptimizeMode;
+use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use mr4r::benchmarks::Backend;
+use mr4r::harness::scaled_heap;
+use mr4r::memsim::GcPolicy;
+use mr4r::util::table::{f2, TextTable};
+use mr4r::util::timer::measure;
+
+fn main() {
+    common::banner("gc_sweep", "Figs. 8-10: GC behaviour ± optimizer");
+    let t = common::max_threads();
+
+    // Fig 8/9 condensed: one WC run each way, GC stats.
+    let w = prepare(BenchId::WC, common::scale(), 42, Backend::Native);
+    let mut fig89 = TextTable::new(vec![
+        "config", "secs", "minor", "major", "gc(s)", "gc%", "promoted MB",
+    ]);
+    for (label, mode) in [("unoptimized", OptimizeMode::Off), ("optimized", OptimizeMode::Auto)] {
+        let heap = scaled_heap(common::scale(), GcPolicy::Parallel, 1.0);
+        let s = measure(0, 1, || {
+            w.run(
+                Framework::Mr4r,
+                &RunParams::fast(t).with_optimize(mode).with_heap(heap.clone()),
+            );
+        });
+        let g = heap.stats();
+        fig89.row(vec![
+            label.to_string(),
+            format!("{:.4}", s.median()),
+            g.minor_collections.to_string(),
+            g.major_collections.to_string(),
+            format!("{:.4}", g.gc_seconds),
+            f2(100.0 * g.gc_seconds / s.median().max(1e-9)),
+            f2(g.promoted_bytes as f64 / 1e6),
+        ]);
+    }
+    println!("{}", fig89.render());
+
+    // Fig 10 condensed: policy × heap sweep, WC (best case) and SM (worst).
+    let mut fig10 = TextTable::new(vec!["bench", "policy", "heap x", "speedup"]);
+    for id in [BenchId::WC, BenchId::SM] {
+        let w = prepare(id, common::scale(), 42, Backend::Native);
+        for policy in GcPolicy::ALL {
+            for frac in [0.5, 1.0, 2.0] {
+                let timed = |mode: OptimizeMode| {
+                    measure(0, common::iters().min(2), || {
+                        w.run(
+                            Framework::Mr4r,
+                            &RunParams::fast(t)
+                                .with_optimize(mode)
+                                .with_heap(scaled_heap(common::scale(), policy, frac)),
+                        );
+                    })
+                    .median()
+                };
+                let speedup = timed(OptimizeMode::Off) / timed(OptimizeMode::Auto);
+                fig10.row(vec![
+                    id.code().to_string(),
+                    policy.name().to_string(),
+                    format!("{frac}"),
+                    f2(speedup),
+                ]);
+            }
+        }
+    }
+    println!("{}", fig10.render());
+    println!("paper shape: WC speedups >> 1 in every config; SM hovers at/below 1.");
+}

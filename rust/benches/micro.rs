@@ -1,0 +1,186 @@
+//! Bench: microbenchmarks of the L3 substrates — the profile targets of
+//! the performance pass (EXPERIMENTS.md §Perf).
+//!
+//! * collector emit throughput: list vs holder vs shard counts
+//! * RIR: interpreted reduce vs interpreted combine vs fast-path combine
+//! * scheduler: per-task overhead and steal behaviour
+//! * memsim: TLAB-batched accounting overhead
+//!
+//! `cargo bench --bench micro`
+
+mod common;
+
+use std::sync::Arc;
+
+use mr4r::coordinator::collector::{CollectorCohorts, HolderCollector, ListCollector};
+use mr4r::coordinator::scheduler::TaskPool;
+use mr4r::memsim::SimHeap;
+use mr4r::optimizer::agent::OptimizerAgent;
+use mr4r::optimizer::builder::canon;
+use mr4r::optimizer::interp::{run_reduce, ReduceCtx};
+use mr4r::optimizer::value::Val;
+use mr4r::util::table::TextTable;
+use mr4r::util::timer::Stopwatch;
+
+const EMITS: usize = 400_000;
+const KEYS: usize = 1024;
+
+fn emit_throughput(threads: usize, shard_factor: usize) -> (f64, f64) {
+    let heap = SimHeap::disabled();
+    let cohorts = CollectorCohorts {
+        keys: heap.cohort("k"),
+        intermediate: heap.cohort("i"),
+        holders: heap.cohort("h"),
+    };
+    let shards = (threads * shard_factor).next_power_of_two();
+
+    // List mode.
+    let list: ListCollector<i64, i64> = ListCollector::new(shards);
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let list = &list;
+            let heap = Arc::clone(&heap);
+            let cohorts = &cohorts;
+            s.spawn(move || {
+                let mut alloc = heap.thread_alloc();
+                for i in 0..EMITS / threads {
+                    list.emit(((i * 31 + tid) % KEYS) as i64, 1, &mut alloc, cohorts);
+                }
+            });
+        }
+    });
+    let list_rate = EMITS as f64 / sw.secs();
+
+    // Holder mode.
+    let agent = OptimizerAgent::new();
+    let combiner = agent
+        .process(&canon::sum_i64("micro"))
+        .combiner()
+        .cloned()
+        .unwrap();
+    let holder: HolderCollector<i64> = HolderCollector::new(shards, combiner);
+    let sw = Stopwatch::start();
+    std::thread::scope(|s| {
+        for tid in 0..threads {
+            let holder = &holder;
+            let heap = Arc::clone(&heap);
+            let cohorts = &cohorts;
+            s.spawn(move || {
+                let mut alloc = heap.thread_alloc();
+                for i in 0..EMITS / threads {
+                    holder.emit(
+                        ((i * 31 + tid) % KEYS) as i64,
+                        Val::I64(1),
+                        &mut alloc,
+                        cohorts,
+                    );
+                }
+            });
+        }
+    });
+    let holder_rate = EMITS as f64 / sw.secs();
+    (list_rate, holder_rate)
+}
+
+fn main() {
+    common::banner("micro", "substrate microbenchmarks");
+
+    // --- Collector ---
+    let mut t = TextTable::new(vec!["threads", "shards/т", "list Memit/s", "holder Memit/s"]);
+    for threads in [1, 2, 4, common::max_threads()] {
+        for shard_factor in [4, 16] {
+            let (l, h) = emit_throughput(threads, shard_factor);
+            t.row(vec![
+                threads.to_string(),
+                shard_factor.to_string(),
+                format!("{:.2}", l / 1e6),
+                format!("{:.2}", h / 1e6),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- RIR execution strategies ---
+    let values: Vec<Val> = (0..10_000).map(|i| Val::I64(i % 100)).collect();
+    let key = Val::I64(0);
+    let prog = canon::sum_i64("micro-sum");
+    let agent = OptimizerAgent::new();
+    let fast = agent.process(&prog).combiner().cloned().unwrap();
+    let generic = fast.without_fast_path();
+
+    let mut t = TextTable::new(vec!["strategy", "Mvalues/s"]);
+    let reps = 50;
+    let sw = Stopwatch::start();
+    for _ in 0..reps {
+        let ctx = ReduceCtx::new(&key, &values);
+        run_reduce(&prog, &ctx, |_| {}).unwrap();
+    }
+    t.row(vec![
+        "interpreted reduce".to_string(),
+        format!("{:.2}", reps as f64 * values.len() as f64 / sw.secs() / 1e6),
+    ]);
+    for (label, c) in [("generic combine", &generic), ("fast-path combine", &fast)] {
+        let sw = Stopwatch::start();
+        for _ in 0..reps {
+            let mut h = c.initialize();
+            for v in &values {
+                c.combine(&mut h, v).unwrap();
+            }
+            let _ = c.finalize(h, &key).unwrap();
+        }
+        t.row(vec![
+            label.to_string(),
+            format!("{:.2}", reps as f64 * values.len() as f64 / sw.secs() / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- Scheduler ---
+    let mut t = TextTable::new(vec!["threads", "tasks", "Mtasks/s", "steals"]);
+    for threads in [1, 4, common::max_threads()] {
+        let pool = TaskPool::new(threads);
+        let n = 200_000;
+        let sw = Stopwatch::start();
+        let stats = pool.run(
+            (0..n)
+                .map(|_| move |_w: usize| std::hint::black_box(()))
+                .collect::<Vec<_>>(),
+        );
+        t.row(vec![
+            threads.to_string(),
+            n.to_string(),
+            format!("{:.2}", n as f64 / sw.secs() / 1e6),
+            stats.steals.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- memsim accounting overhead ---
+    let mut t = TextTable::new(vec!["heap", "Mops/s"]);
+    for (label, heap) in [
+        ("disabled", SimHeap::disabled()),
+        (
+            "enabled (no pauses)",
+            SimHeap::new(mr4r::memsim::HeapParams {
+                time_scale: 0.0,
+                total_bytes: 1 << 30,
+                ..Default::default()
+            }),
+        ),
+    ] {
+        let c = heap.cohort("bench");
+        let mut a = heap.thread_alloc();
+        let n = 2_000_000;
+        let sw = Stopwatch::start();
+        for _ in 0..n {
+            a.scratch(c, 48);
+        }
+        a.flush();
+        t.row(vec![
+            label.to_string(),
+            format!("{:.1}", n as f64 / sw.secs() / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,57 @@
+//! Bench: Figure 7 / Figure 10 core — optimizer on/off per benchmark,
+//! plus the GenericOnly ablation (interpreted combiner without compiled
+//! fast paths — separates "eliminate the reduce phase + allocations" from
+//! "better generated code", the two effects §5 discusses).
+//!
+//! `cargo bench --bench optimizer`
+
+mod common;
+
+use mr4r::api::config::OptimizeMode;
+use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use mr4r::benchmarks::Backend;
+use mr4r::harness::scaled_heap;
+use mr4r::memsim::GcPolicy;
+use mr4r::util::table::{f2, TextTable};
+use mr4r::util::timer::measure;
+
+fn main() {
+    common::banner("optimizer", "Fig. 7: MR4R ± optimizer (+ GenericOnly ablation)");
+    let t = common::max_threads();
+    let mut table = TextTable::new(vec![
+        "bench",
+        "unopt(s)",
+        "generic(s)",
+        "opt(s)",
+        "speedup",
+        "fastpath gain",
+    ]);
+
+    for id in BenchId::ALL {
+        let w = prepare(id, common::scale(), 42, Backend::Native);
+        let mut timed = |mode: OptimizeMode| {
+            measure(common::warmup(), common::iters(), || {
+                w.run(
+                    Framework::Mr4r,
+                    &RunParams::fast(t)
+                        .with_optimize(mode)
+                        .with_heap(scaled_heap(common::scale(), GcPolicy::Parallel, 1.0)),
+                );
+            })
+            .median()
+        };
+        let unopt = timed(OptimizeMode::Off);
+        let generic = timed(OptimizeMode::GenericOnly);
+        let opt = timed(OptimizeMode::Auto);
+        table.row(vec![
+            id.code().to_string(),
+            format!("{unopt:.4}"),
+            format!("{generic:.4}"),
+            format!("{opt:.4}"),
+            f2(unopt / opt),
+            f2(generic / opt),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("paper: up to 2.0x speedup; SM <= 1. `fastpath gain` is this repo's ablation of the compiled combine path.");
+}

@@ -1,0 +1,39 @@
+//! Bench: Figure 5 — MR4R thread-count scalability per benchmark.
+//!
+//! `cargo bench --bench scalability` (env knobs in benches/common).
+
+mod common;
+
+use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use mr4r::benchmarks::Backend;
+use mr4r::harness::{scaled_heap, thread_sweep};
+use mr4r::memsim::GcPolicy;
+use mr4r::util::table::{f2, TextTable};
+use mr4r::util::timer::measure;
+
+fn main() {
+    common::banner("scalability", "Fig. 5: MR4R speedup vs 1 thread");
+    let threads = thread_sweep(common::max_threads());
+    let mut header: Vec<String> = vec!["bench".into()];
+    header.extend(threads.iter().map(|t| format!("{t}t")));
+    let mut table = TextTable::new(header);
+
+    for id in BenchId::ALL {
+        let w = prepare(id, common::scale(), 42, Backend::Native);
+        let mut base = f64::NAN;
+        let mut row = vec![id.code().to_string()];
+        for (i, &t) in threads.iter().enumerate() {
+            let params = RunParams::fast(t)
+                .with_heap(scaled_heap(common::scale(), GcPolicy::Parallel, 1.0));
+            let s = measure(common::warmup(), common::iters(), || {
+                w.run(Framework::Mr4r, &params);
+            });
+            if i == 0 {
+                base = s.median();
+            }
+            row.push(f2(base / s.median()));
+        }
+        table.row(row);
+    }
+    println!("{}", table.render());
+}

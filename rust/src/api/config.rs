@@ -1,0 +1,144 @@
+//! Job configuration.
+//!
+//! Deliberately small: the paper's point (§2.3–2.4) is that MR4J needs *no*
+//! manual tuning where Phoenix demands cache sizes and thread counts and
+//! Phoenix++ demands compile-time container choices. Everything here has a
+//! working default; benchmarks only override `threads` (for the sweep
+//! figures) and the optimizer mode (for the ± optimizer comparisons).
+
+use std::sync::Arc;
+
+use crate::memsim::{HeapParams, SimHeap};
+
+/// Whether the agent may rewrite reducers (Figures 7–10 compare
+/// `Off` vs `Auto`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OptimizeMode {
+    /// Transform every reducer the analysis accepts (the default — the
+    /// whole point is zero user involvement).
+    Auto,
+    /// Never transform: always run the reduce flow (the paper's baseline
+    /// MR4J configuration).
+    Off,
+    /// Transform but suppress compiled fast paths, forcing the interpreted
+    /// combiner — the ablation separating "eliminate the reduce phase +
+    /// allocation" from "better generated code".
+    GenericOnly,
+}
+
+/// Which execution flow a job actually took (reported in
+/// [`crate::coordinator::pipeline::FlowMetrics`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecutionFlow {
+    Reduce,
+    Combine,
+}
+
+impl ExecutionFlow {
+    pub fn label(self) -> &'static str {
+        match self {
+            ExecutionFlow::Reduce => "reduce",
+            ExecutionFlow::Combine => "combine",
+        }
+    }
+}
+
+/// Per-job runtime configuration.
+#[derive(Clone)]
+pub struct JobConfig {
+    /// Worker threads (paper sweeps 1..#hardware threads).
+    pub threads: usize,
+    /// Map task granularity: chunks per thread submitted to the pool.
+    /// More chunks → better stealing, more queue traffic.
+    pub tasks_per_thread: usize,
+    /// Optimizer mode.
+    pub optimize: OptimizeMode,
+    /// Simulated managed heap charged by the collectors (see
+    /// [`crate::memsim`]). Use [`SimHeap::disabled`] for pure-speed runs.
+    pub heap: Arc<SimHeap>,
+    /// Simulated short-lived garbage per map-phase emit, bytes — the
+    /// tokenization/boxing scratch a Java mapper produces (e.g. the
+    /// `toUpperCase`/`Matcher.group` strings in Figure 2's word count).
+    /// Benchmark definitions set this per workload.
+    pub scratch_per_emit: u64,
+}
+
+impl JobConfig {
+    /// Defaults: all cores, auto optimization, accounting heap.
+    pub fn new() -> Self {
+        JobConfig {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+            tasks_per_thread: 4,
+            optimize: OptimizeMode::Auto,
+            heap: SimHeap::new(HeapParams::default()),
+            scratch_per_emit: 0,
+        }
+    }
+
+    /// Defaults with the memsim disabled — benchmarking the raw runtime.
+    pub fn fast() -> Self {
+        JobConfig {
+            heap: SimHeap::disabled(),
+            ..Self::new()
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_optimize(mut self, mode: OptimizeMode) -> Self {
+        self.optimize = mode;
+        self
+    }
+
+    pub fn with_heap(mut self, heap: Arc<SimHeap>) -> Self {
+        self.heap = heap;
+        self
+    }
+
+    pub fn with_scratch_per_emit(mut self, bytes: u64) -> Self {
+        self.scratch_per_emit = bytes;
+        self
+    }
+
+    pub fn with_tasks_per_thread(mut self, t: usize) -> Self {
+        self.tasks_per_thread = t.max(1);
+        self
+    }
+}
+
+impl Default for JobConfig {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = JobConfig::new();
+        assert!(c.threads >= 1);
+        assert!(c.tasks_per_thread >= 1);
+        assert_eq!(c.optimize, OptimizeMode::Auto);
+        assert!(c.heap.enabled());
+    }
+
+    #[test]
+    fn fast_config_disables_heap() {
+        assert!(!JobConfig::fast().heap.enabled());
+    }
+
+    #[test]
+    fn builders_clamp() {
+        let c = JobConfig::new().with_threads(0).with_tasks_per_thread(0);
+        assert_eq!(c.threads, 1);
+        assert_eq!(c.tasks_per_thread, 1);
+    }
+}

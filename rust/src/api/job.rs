@@ -1,0 +1,148 @@
+//! The `MapReduce` façade — the paper Figure 2 entry point:
+//!
+//! ```ignore
+//! MapReduce<S, S, I> mrj = new MapReduce<>(mapper, reducer);
+//! return mrj.run(input);
+//! ```
+
+use std::hash::Hash;
+use std::sync::Arc;
+
+use super::config::JobConfig;
+use super::traits::{KeyValue, Mapper, Reducer};
+use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::value::RirValue;
+
+/// A configured MapReduce job over inputs `I`, keys `K`, values `V`.
+pub struct MapReduce<I, K, V> {
+    mapper: Arc<dyn Mapper<I, K, V>>,
+    reducer: Arc<dyn Reducer<K, V>>,
+    config: JobConfig,
+    agent: OptimizerAgent,
+}
+
+/// What a run returns beyond the result pairs.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub metrics: FlowMetrics,
+}
+
+impl<I, K, V> MapReduce<I, K, V>
+where
+    I: Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    /// Create a job with default configuration (paper: "a minimal API ...
+    /// exposing only the fundamental API elements").
+    pub fn new(
+        mapper: impl Mapper<I, K, V> + 'static,
+        reducer: impl Reducer<K, V> + 'static,
+    ) -> Self {
+        MapReduce {
+            mapper: Arc::new(mapper),
+            reducer: Arc::new(reducer),
+            config: JobConfig::new(),
+            agent: OptimizerAgent::new(),
+        }
+    }
+
+    /// Replace the configuration.
+    pub fn with_config(mut self, config: JobConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    /// Share an optimizer agent across jobs (so per-class caching and the
+    /// §4.3 timing stats span a whole application, as a real agent would).
+    pub fn with_agent(mut self, agent: OptimizerAgent) -> Self {
+        self.agent = agent;
+        self
+    }
+
+    pub fn config(&self) -> &JobConfig {
+        &self.config
+    }
+
+    pub fn agent(&self) -> &OptimizerAgent {
+        &self.agent
+    }
+
+    /// Run the job, returning the result pairs.
+    pub fn run(&self, inputs: &[I]) -> Vec<KeyValue<K, V>> {
+        self.run_with_report(inputs).0
+    }
+
+    /// Run the job, returning results plus metrics (what the harness uses).
+    pub fn run_with_report(&self, inputs: &[I]) -> (Vec<KeyValue<K, V>>, JobReport) {
+        let (results, metrics) = run_job(
+            self.mapper.as_ref(),
+            self.reducer.as_ref(),
+            inputs,
+            &self.config,
+            &self.agent,
+        );
+        (results, JobReport { metrics })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::{ExecutionFlow, OptimizeMode};
+    use crate::api::reducers::RirReducer;
+    use crate::api::traits::Emitter;
+    use crate::optimizer::builder::canon;
+
+    #[test]
+    fn facade_runs_word_count() {
+        let mr: MapReduce<String, String, i64> = MapReduce::new(
+            |line: &String, em: &mut dyn Emitter<String, i64>| {
+                for w in line.split(' ') {
+                    em.emit(w.to_string(), 1);
+                }
+            },
+            RirReducer::new(canon::sum_i64("wc")),
+        )
+        .with_config(JobConfig::fast().with_threads(2));
+
+        let mut out = mr.run(&["a b a".to_string(), "b a".to_string()]);
+        out.sort_by(|x, y| x.key.cmp(&y.key));
+        assert_eq!(out.len(), 2);
+        assert_eq!((out[0].key.as_str(), out[0].value), ("a", 3));
+        assert_eq!((out[1].key.as_str(), out[1].value), ("b", 2));
+    }
+
+    #[test]
+    fn report_exposes_flow() {
+        let mr: MapReduce<String, String, i64> = MapReduce::new(
+            |line: &String, em: &mut dyn Emitter<String, i64>| {
+                em.emit(line.clone(), 1);
+            },
+            RirReducer::new(canon::sum_i64("wc-flow")),
+        )
+        .with_config(JobConfig::fast().with_optimize(OptimizeMode::Auto));
+        let (_, report) = mr.run_with_report(&["x".to_string()]);
+        assert_eq!(report.metrics.flow, ExecutionFlow::Combine);
+    }
+
+    #[test]
+    fn shared_agent_caches_across_jobs() {
+        let agent = OptimizerAgent::new();
+        for _ in 0..3 {
+            let mr: MapReduce<String, String, i64> = MapReduce::new(
+                |line: &String, em: &mut dyn Emitter<String, i64>| {
+                    em.emit(line.clone(), 1);
+                },
+                RirReducer::new(canon::sum_i64("shared-class")),
+            )
+            .with_config(JobConfig::fast())
+            .with_agent(agent.clone());
+            mr.run(&["x".to_string()]);
+        }
+        let stats = agent.stats();
+        assert_eq!(stats.optimized, 1, "one transformation");
+        assert_eq!(stats.cache_hits, 2, "two cache hits");
+    }
+}

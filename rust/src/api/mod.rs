@@ -1,0 +1,19 @@
+//! The public MR4R programming surface — the Rust rendering of paper
+//! Figure 2's API (`Mapper`, `Reducer`, `Emitter`, `MapReduce`).
+//!
+//! Design principles follow the paper's §2.4 list: a minimal API close to
+//! the original Google formulation, no manual tuning knobs required, and an
+//! optimizer that engages *transparently* — user code defines `map` and
+//! `reduce` only; whether the runtime executes the reduce flow or the
+//! combining flow is decided by the [`crate::optimizer::agent`], never by
+//! the application.
+
+pub mod config;
+pub mod job;
+pub mod reducers;
+pub mod traits;
+
+pub use config::{ExecutionFlow, JobConfig, OptimizeMode};
+pub use job::{JobReport, MapReduce};
+pub use reducers::RirReducer;
+pub use traits::{Emitter, HeapSized, KeyKind, KeyValue, Mapper, Reducer, VecEmitter};

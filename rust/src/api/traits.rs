@@ -1,0 +1,210 @@
+//! Core traits: `Mapper`, `Reducer`, `Emitter` (paper Fig. 2).
+
+use crate::optimizer::rir::Program;
+
+/// A (key, value) pair — the currency of the framework.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KeyValue<K, V> {
+    pub key: K,
+    pub value: V,
+}
+
+impl<K, V> KeyValue<K, V> {
+    pub fn new(key: K, value: V) -> Self {
+        KeyValue { key, value }
+    }
+}
+
+/// Receives emitted (key, value) pairs. The map phase gets an emitter
+/// backed by the intermediate collector; the reduce phase gets one backed
+/// by the result buffer. Which collector implementation sits behind the
+/// interface is exactly what the optimizer swaps (paper §3.1: "a different
+/// implementation of the emitter interface provided to the map method").
+pub trait Emitter<K, V> {
+    fn emit(&mut self, key: K, value: V);
+}
+
+/// A plain `Vec`-backed emitter (tests, reduce-phase output).
+#[derive(Debug, Default)]
+pub struct VecEmitter<K, V> {
+    pub pairs: Vec<KeyValue<K, V>>,
+}
+
+impl<K, V> VecEmitter<K, V> {
+    pub fn new() -> Self {
+        VecEmitter { pairs: Vec::new() }
+    }
+}
+
+impl<K, V> Emitter<K, V> for VecEmitter<K, V> {
+    fn emit(&mut self, key: K, value: V) {
+        self.pairs.push(KeyValue::new(key, value));
+    }
+}
+
+/// User-supplied map task. `I` is one input split element.
+///
+/// Must be `Send + Sync`: one mapper instance is shared by all worker
+/// threads, mirroring MR4J where the anonymous `Mapper` instance is shared
+/// across ForkJoin tasks (and therefore must be stateless or thread-safe —
+/// the same correctness obligation the paper notes in §3.1.1).
+pub trait Mapper<I, K, V>: Send + Sync {
+    fn map(&self, input: &I, emitter: &mut dyn Emitter<K, V>);
+}
+
+impl<I, K, V, F> Mapper<I, K, V> for F
+where
+    F: Fn(&I, &mut dyn Emitter<K, V>) + Send + Sync,
+{
+    fn map(&self, input: &I, emitter: &mut dyn Emitter<K, V>) {
+        self(input, emitter)
+    }
+}
+
+/// User-supplied reduce task: combines all intermediate values collected
+/// for `key` into result pairs.
+///
+/// `rir()` is the co-design hook: reducers authored in RIR (the bytecode
+/// stand-in, see [`crate::optimizer::rir`]) expose their program so the
+/// optimizer agent can analyze and transform them. Native closures return
+/// `None` and always take the unoptimized flow — they are this repo's
+/// "opaque bytecode the dynamic compiler cannot see across".
+pub trait Reducer<K, V>: Send + Sync {
+    fn reduce(&self, key: &K, values: &[V], emitter: &mut dyn Emitter<K, V>);
+
+    /// RIR program behind this reducer, if it was authored as one.
+    fn rir(&self) -> Option<&Program> {
+        None
+    }
+
+    /// Stable name used by the agent's per-class bookkeeping (paper §4.3
+    /// reports detection/transformation time per class).
+    fn class_name(&self) -> &str {
+        "anonymous-reducer"
+    }
+}
+
+/// Native closure reducers (not optimizable — the control case).
+pub struct FnReducer<F> {
+    pub name: String,
+    pub f: F,
+}
+
+impl<K, V, F> Reducer<K, V> for FnReducer<F>
+where
+    F: Fn(&K, &[V], &mut dyn Emitter<K, V>) + Send + Sync,
+{
+    fn reduce(&self, key: &K, values: &[V], emitter: &mut dyn Emitter<K, V>) {
+        (self.f)(key, values, emitter)
+    }
+
+    fn class_name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Estimated managed-heap footprint of a value, used by the memsim
+/// accounting (a boxed Java object ≈ 16-byte header + fields).
+pub trait HeapSized {
+    fn heap_bytes(&self) -> u64;
+}
+
+impl HeapSized for i64 {
+    fn heap_bytes(&self) -> u64 {
+        16 // boxed Long
+    }
+}
+
+impl HeapSized for f64 {
+    fn heap_bytes(&self) -> u64 {
+        16 // boxed Double
+    }
+}
+
+impl HeapSized for u64 {
+    fn heap_bytes(&self) -> u64 {
+        16
+    }
+}
+
+impl HeapSized for String {
+    fn heap_bytes(&self) -> u64 {
+        40 + self.len() as u64 // String header + char[] payload
+    }
+}
+
+impl<T: HeapSized> HeapSized for Vec<T> {
+    fn heap_bytes(&self) -> u64 {
+        24 + self.iter().map(|x| x.heap_bytes()).sum::<u64>()
+    }
+}
+
+impl HeapSized for (f64, i64) {
+    fn heap_bytes(&self) -> u64 {
+        32
+    }
+}
+
+/// Key cardinality classes from Table 2 (Small / Medium / Large), used by
+/// the datagen to label datasets and by the Table 2 harness.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KeyKind {
+    Small,
+    Medium,
+    Large,
+}
+
+impl KeyKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            KeyKind::Small => "Small",
+            KeyKind::Medium => "Medium",
+            KeyKind::Large => "Large",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_emitter_collects_in_order() {
+        let mut e: VecEmitter<&str, i64> = VecEmitter::new();
+        e.emit("a", 1);
+        e.emit("b", 2);
+        assert_eq!(e.pairs.len(), 2);
+        assert_eq!(e.pairs[0], KeyValue::new("a", 1));
+    }
+
+    #[test]
+    fn closures_are_mappers() {
+        let m = |x: &i64, e: &mut dyn Emitter<i64, i64>| e.emit(*x % 3, *x);
+        let mut out = VecEmitter::new();
+        m.map(&10, &mut out);
+        assert_eq!(out.pairs, vec![KeyValue::new(1, 10)]);
+    }
+
+    #[test]
+    fn fn_reducer_runs_and_is_opaque() {
+        let r = FnReducer {
+            name: "sum".into(),
+            f: |k: &String, vs: &[i64], e: &mut dyn Emitter<String, i64>| {
+                e.emit(k.clone(), vs.iter().sum())
+            },
+        };
+        let mut out = VecEmitter::new();
+        r.reduce(&"x".to_string(), &[1, 2, 3], &mut out);
+        assert_eq!(out.pairs[0].value, 6);
+        assert!(r.rir().is_none(), "closures must be opaque to the optimizer");
+        assert_eq!(r.class_name(), "sum");
+    }
+
+    #[test]
+    fn heap_sizes_scale_with_payload() {
+        assert_eq!(3i64.heap_bytes(), 16);
+        assert!("hello".to_string().heap_bytes() > 40);
+        let v = vec![1f64, 2.0, 3.0];
+        assert_eq!(v.heap_bytes(), 24 + 3 * 16);
+    }
+}

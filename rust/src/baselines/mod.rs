@@ -1,0 +1,26 @@
+//! Comparator runtimes — re-implementations of the two frameworks the
+//! paper evaluates MR4J against (§2.2.2, §4):
+//!
+//! * [`phoenix`] — Phoenix 2.0-like (Yoo et al., C): per-thread keyval
+//!   tables holding *value arrays*, an explicit cross-thread **merge
+//!   phase**, then a parallel reduce phase. Optional manual combiner
+//!   function (the user-written optimization the paper's §2.3 criticizes
+//!   for duplicating code).
+//! * [`phoenixpp`] — Phoenix++ 1.0-like (Talbot et al., C++): modular
+//!   *container/combiner* design — per-thread containers combine values
+//!   **inline at emit time** (never materializing value lists), with a
+//!   cheap per-key merge. Container choice (hash vs fixed-size array) is a
+//!   compile-time decision of the benchmark author, mirroring the
+//!   "intimate understanding of the internal workings" the paper notes
+//!   Phoenix++ demands.
+//!
+//! Neither baseline touches the memsim: they model *unmanaged* (C/C++)
+//! memory, which is precisely the asymmetry the paper studies — MR4J pays
+//! the GC, Phoenix/Phoenix++ pay their framework-structural costs (merge
+//! passes, rigid containers).
+
+pub mod phoenix;
+pub mod phoenixpp;
+
+pub use phoenix::{PhoenixConfig, PhoenixJob};
+pub use phoenixpp::{ArrayContainer, CombineOp, Container, HashContainer, PppJob, SumOp};

@@ -1,0 +1,232 @@
+//! Phoenix 2.0-like baseline.
+//!
+//! Faithful to the design points the paper contrasts against (§2.2.2,
+//! §2.3):
+//!
+//! * map workers write into **per-thread** keyval tables ("the collection
+//!   of intermediate (key, value) pairs is local to each worker thread"),
+//!   each key holding a growable value array;
+//! * an optional **manual combiner** supplied by the user collapses a
+//!   key's value buffer once it reaches a small threshold — Phoenix's
+//!   hand-written optimization, duplicated application code and all;
+//! * after the map phase, a **merge phase** consolidates the per-thread
+//!   tables into a global table (an extra pass over every surviving value;
+//!   this structural cost is what collapses Phoenix at high thread counts
+//!   — paper: 0.20× of Phoenix++ at 64 threads);
+//! * a parallel reduce phase over the merged table.
+
+use std::hash::Hash;
+use std::sync::Mutex;
+
+use crate::coordinator::scheduler::TaskPool;
+use crate::coordinator::splitter::split_indices;
+use crate::util::hash::FxHashMap;
+
+/// Hardware-specific manual tuning Phoenix demands (paper §4.1.2:
+/// "configured manually using hardware specific parameters").
+#[derive(Clone, Debug)]
+pub struct PhoenixConfig {
+    pub threads: usize,
+    /// Items per map sub-chunk, derived from L1 cache size in the real
+    /// framework.
+    pub chunk_items: usize,
+    /// Value-buffer length at which the manual combiner (if any) collapses
+    /// a key's values ("incrementally combines intermediate values in a
+    /// small buffer").
+    pub combine_threshold: usize,
+}
+
+impl PhoenixConfig {
+    pub fn new(threads: usize) -> Self {
+        PhoenixConfig {
+            threads: threads.max(1),
+            chunk_items: 1024,
+            combine_threshold: 8,
+        }
+    }
+}
+
+/// A Phoenix job. `reduce` collapses a value list to a single value
+/// (Phoenix's API yields one value per key); `combiner` is the optional
+/// manual optimization.
+pub struct PhoenixJob<'a, I, K, V> {
+    pub map: &'a (dyn Fn(&I, &mut dyn FnMut(K, V)) + Sync),
+    pub reduce: &'a (dyn Fn(&K, &[V]) -> V + Sync),
+    /// Manual combiner: fold `b` into `a`.
+    pub combiner: Option<&'a (dyn Fn(&mut V, &V) + Sync)>,
+}
+
+impl<I, K, V> PhoenixJob<'_, I, K, V>
+where
+    I: Sync,
+    K: Hash + Eq + Clone + Send + Sync,
+    V: Clone + Send + Sync,
+{
+    /// Execute map → merge → reduce.
+    pub fn run(&self, inputs: &[I], cfg: &PhoenixConfig) -> Vec<(K, V)> {
+        let pool = TaskPool::new(cfg.threads);
+
+        // ---- Map phase: one table per map task (≙ per worker thread) ----
+        let ranges = split_indices(inputs.len(), cfg.threads);
+        let n_tables = ranges.len();
+        let tables: Vec<Mutex<FxHashMap<K, Vec<V>>>> =
+            (0..n_tables).map(|_| Mutex::new(FxHashMap::default())).collect();
+        let tasks: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(tid, range)| {
+                let tables = &tables;
+                move |_wid: usize| {
+                    let mut local: FxHashMap<K, Vec<V>> = FxHashMap::default();
+                    for input in &inputs[range] {
+                        (self.map)(input, &mut |k: K, v: V| {
+                            let list = local.entry(k).or_default();
+                            list.push(v);
+                            if let Some(comb) = self.combiner {
+                                if list.len() >= 8 {
+                                    // Collapse the buffer to one value —
+                                    // Phoenix's manual combining.
+                                    let (first, rest) = list.split_first_mut().unwrap();
+                                    for r in rest.iter() {
+                                        comb(first, r);
+                                    }
+                                    list.truncate(1);
+                                }
+                            }
+                        });
+                    }
+                    *tables[tid].lock().unwrap() = local;
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        let thread_tables: Vec<FxHashMap<K, Vec<V>>> =
+            tables.into_iter().map(|m| m.into_inner().unwrap()).collect();
+
+        // ---- Merge phase ----
+        // Phoenix's merge workers consolidate per-thread tables; every
+        // surviving value is moved again. Sequential fold here (the real
+        // framework's merge tree also serializes at the root), so merge
+        // cost grows with thread count × key spread — the NUMA-unfriendly
+        // part of the design.
+        let mut merged: FxHashMap<K, Vec<V>> = FxHashMap::default();
+        for table in thread_tables {
+            for (k, mut vs) in table {
+                merged.entry(k).or_default().append(&mut vs);
+            }
+        }
+
+        // ---- Reduce phase ----
+        let entries: Vec<(K, Vec<V>)> = merged.into_iter().collect();
+        let out: Mutex<Vec<(K, V)>> = Mutex::new(Vec::new());
+        let ranges = split_indices(entries.len(), cfg.threads * 4);
+        let tasks: Vec<_> = ranges
+            .into_iter()
+            .map(|range| {
+                let entries = &entries;
+                let out = &out;
+                move |_wid: usize| {
+                    let mut local = Vec::with_capacity(range.len());
+                    for (k, vs) in &entries[range] {
+                        local.push((k.clone(), (self.reduce)(k, vs)));
+                    }
+                    out.lock().unwrap().extend(local);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        out.into_inner().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wc_map(line: &String, emit: &mut dyn FnMut(String, i64)) {
+        for w in line.split_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    }
+
+    fn sum_reduce(_k: &String, vs: &[i64]) -> i64 {
+        vs.iter().sum()
+    }
+
+    fn inputs() -> Vec<String> {
+        vec![
+            "a b a c".to_string(),
+            "b a".to_string(),
+            "c c c".to_string(),
+        ]
+    }
+
+    fn sorted(mut v: Vec<(String, i64)>) -> Vec<(String, i64)> {
+        v.sort();
+        v
+    }
+
+    #[test]
+    fn word_count_without_combiner() {
+        let job = PhoenixJob {
+            map: &wc_map,
+            reduce: &sum_reduce,
+            combiner: None,
+        };
+        let out = job.run(&inputs(), &PhoenixConfig::new(2));
+        assert_eq!(
+            sorted(out),
+            vec![
+                ("a".to_string(), 3),
+                ("b".to_string(), 2),
+                ("c".to_string(), 4)
+            ]
+        );
+    }
+
+    #[test]
+    fn manual_combiner_gives_same_answer() {
+        let job_plain = PhoenixJob {
+            map: &wc_map,
+            reduce: &sum_reduce,
+            combiner: None,
+        };
+        let comb = |a: &mut i64, b: &i64| *a += *b;
+        let job_comb = PhoenixJob {
+            map: &wc_map,
+            reduce: &sum_reduce,
+            combiner: Some(&comb),
+        };
+        // Enough repeats to cross the combine threshold.
+        let big: Vec<String> = (0..100).map(|_| "x y x".to_string()).collect();
+        let a = sorted(job_plain.run(&big, &PhoenixConfig::new(3)));
+        let b = sorted(job_comb.run(&big, &PhoenixConfig::new(3)));
+        assert_eq!(a, b);
+        assert_eq!(a[0], ("x".to_string(), 200));
+    }
+
+    #[test]
+    fn single_thread_matches_parallel() {
+        let job = PhoenixJob {
+            map: &wc_map,
+            reduce: &sum_reduce,
+            combiner: None,
+        };
+        let big: Vec<String> = (0..50)
+            .map(|i| format!("w{} w{} shared", i % 7, i % 3))
+            .collect();
+        let seq = sorted(job.run(&big, &PhoenixConfig::new(1)));
+        let par = sorted(job.run(&big, &PhoenixConfig::new(8)));
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn empty_input() {
+        let job = PhoenixJob {
+            map: &wc_map,
+            reduce: &sum_reduce,
+            combiner: None,
+        };
+        assert!(job.run(&[], &PhoenixConfig::new(4)).is_empty());
+    }
+}

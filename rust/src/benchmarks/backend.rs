@@ -1,0 +1,217 @@
+//! Compute backend for the numeric map phases: native Rust or the
+//! AOT-compiled JAX/Pallas kernels via PJRT.
+//!
+//! Every numeric benchmark's hot map computation is expressed once against
+//! this enum so the *same* benchmark code runs (a) pure-native for tests
+//! and baseline comparisons, and (b) through the PJRT runtime to prove the
+//! three layers compose (the end-to-end example and `tests/pjrt_runtime`).
+//! `Native` is also the correctness oracle for the kernels on the Rust
+//! side (the Python side has `ref.py`).
+
+use std::sync::Arc;
+
+use crate::runtime::artifacts::{shapes, KernelSet};
+
+/// Which engine executes the numeric map-phase compute.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure Rust (always available).
+    Native,
+    /// AOT kernels through the PJRT CPU client.
+    Pjrt(Arc<KernelSet>),
+}
+
+impl Backend {
+    /// Probe for artifacts; PJRT if present, native otherwise.
+    pub fn auto() -> Backend {
+        match KernelSet::try_load() {
+            Some(ks) => Backend::Pjrt(ks),
+            None => Backend::Native,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Tile matmul: `a (t×t) × b (t×t)` where `t == shapes::MM_TILE`.
+    pub fn matmul_tile(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let t = shapes::MM_TILE;
+        match self {
+            Backend::Pjrt(ks) => ks.matmul_tile(a, b).expect("matmul kernel"),
+            Backend::Native => {
+                // ikj loop order: streams b rows, vectorizes the inner j.
+                let mut c = vec![0.0f32; t * t];
+                for i in 0..t {
+                    for k in 0..t {
+                        let aik = a[i * t + k];
+                        if aik == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[k * t..(k + 1) * t];
+                        let crow = &mut c[i * t..(i + 1) * t];
+                        for j in 0..t {
+                            crow[j] += aik * brow[j];
+                        }
+                    }
+                }
+                c
+            }
+        }
+    }
+
+    /// Histogram of one channel chunk (`shapes::HG_CHUNK` values in
+    /// `[0, 256)`; values ≥ 256 are padding and ignored).
+    pub fn histogram_chunk(&self, values: &[f32]) -> Vec<f32> {
+        match self {
+            Backend::Pjrt(ks) => ks.histogram_chunk(values).expect("histogram kernel"),
+            Backend::Native => {
+                let mut counts = vec![0.0f32; shapes::HG_BINS];
+                for &v in values {
+                    let b = v as usize;
+                    if b < shapes::HG_BINS {
+                        counts[b] += 1.0;
+                    }
+                }
+                counts
+            }
+        }
+    }
+
+    /// Nearest-centroid index per point. `points`: KM_POINTS×3 row-major,
+    /// `centroids`: KM_CENTROIDS×3 (pad unused slots with huge coords).
+    pub fn kmeans_assign(&self, points: &[f32], centroids: &[f32]) -> Vec<f32> {
+        match self {
+            Backend::Pjrt(ks) => ks.kmeans_assign(points, centroids).expect("kmeans kernel"),
+            Backend::Native => {
+                let d = shapes::KM_DIMS;
+                let np = shapes::KM_POINTS;
+                let nc = shapes::KM_CENTROIDS;
+                let mut out = Vec::with_capacity(np);
+                for p in 0..np {
+                    let px = &points[p * d..(p + 1) * d];
+                    let mut best = 0usize;
+                    let mut best_d = f32::INFINITY;
+                    for c in 0..nc {
+                        let cx = &centroids[c * d..(c + 1) * d];
+                        let mut dist = 0.0f32;
+                        for k in 0..d {
+                            let diff = px[k] - cx[k];
+                            dist += diff * diff;
+                        }
+                        if dist < best_d {
+                            best_d = dist;
+                            best = c;
+                        }
+                    }
+                    out.push(best as f32);
+                }
+                out
+            }
+        }
+    }
+
+    /// `(Σx, Σy, Σx², Σy², Σxy)` of an LR_CHUNK×2 block (zero-padded).
+    pub fn linreg_moments(&self, xy: &[f32]) -> Vec<f32> {
+        match self {
+            Backend::Pjrt(ks) => ks.linreg_moments(xy).expect("linreg kernel"),
+            Backend::Native => {
+                let (mut sx, mut sy, mut sxx, mut syy, mut sxy) = (0f32, 0f32, 0f32, 0f32, 0f32);
+                for row in xy.chunks_exact(2) {
+                    let (x, y) = (row[0], row[1]);
+                    sx += x;
+                    sy += y;
+                    sxx += x * x;
+                    syy += y * y;
+                    sxy += x * y;
+                }
+                vec![sx, sy, sxx, syy, sxy]
+            }
+        }
+    }
+
+    /// `(Σa, Σb, Σab)` of two PC_BLOCK row blocks (zero-padded).
+    pub fn pca_pair(&self, rows: &[f32]) -> Vec<f32> {
+        match self {
+            Backend::Pjrt(ks) => ks.pca_pair(rows).expect("pca kernel"),
+            Backend::Native => {
+                let n = shapes::PC_BLOCK;
+                let (a, b) = rows.split_at(n);
+                let sa: f32 = a.iter().sum();
+                let sb: f32 = b.iter().sum();
+                let sab: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+                vec![sa, sb, sab]
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_matmul_identity() {
+        let t = shapes::MM_TILE;
+        let mut eye = vec![0.0f32; t * t];
+        for i in 0..t {
+            eye[i * t + i] = 1.0;
+        }
+        let mut a = vec![0.0f32; t * t];
+        for (i, v) in a.iter_mut().enumerate() {
+            *v = (i % 7) as f32 - 3.0;
+        }
+        let c = Backend::Native.matmul_tile(&a, &eye);
+        assert_eq!(c, a);
+    }
+
+    #[test]
+    fn native_histogram_counts() {
+        let mut vals = vec![300.0f32; shapes::HG_CHUNK]; // all padding
+        vals[0] = 5.0;
+        vals[1] = 5.0;
+        vals[2] = 255.0;
+        let h = Backend::Native.histogram_chunk(&vals);
+        assert_eq!(h[5], 2.0);
+        assert_eq!(h[255], 1.0);
+        assert_eq!(h.iter().sum::<f32>(), 3.0);
+    }
+
+    #[test]
+    fn native_kmeans_assigns_nearest() {
+        let mut centroids = vec![1e30f32; shapes::KM_CENTROIDS * 3];
+        centroids[0..3].copy_from_slice(&[0.0, 0.0, 0.0]);
+        centroids[3..6].copy_from_slice(&[10.0, 0.0, 0.0]);
+        let mut points = vec![0.0f32; shapes::KM_POINTS * 3];
+        points[0..3].copy_from_slice(&[1.0, 0.0, 0.0]); // → c0
+        points[3..6].copy_from_slice(&[9.0, 0.0, 0.0]); // → c1
+        let a = Backend::Native.kmeans_assign(&points, &centroids);
+        assert_eq!(a[0], 0.0);
+        assert_eq!(a[1], 1.0);
+    }
+
+    #[test]
+    fn native_linreg_moments() {
+        let mut xy = vec![0.0f32; shapes::LR_CHUNK * 2];
+        xy[0] = 2.0;
+        xy[1] = 3.0; // (2,3)
+        xy[2] = 4.0;
+        xy[3] = 5.0; // (4,5)
+        let m = Backend::Native.linreg_moments(&xy);
+        assert_eq!(m, vec![6.0, 8.0, 20.0, 34.0, 26.0]);
+    }
+
+    #[test]
+    fn native_pca_pair() {
+        let mut rows = vec![0.0f32; 2 * shapes::PC_BLOCK];
+        rows[0] = 1.0;
+        rows[1] = 2.0;
+        rows[shapes::PC_BLOCK] = 3.0;
+        rows[shapes::PC_BLOCK + 1] = 4.0;
+        let p = Backend::Native.pca_pair(&rows);
+        assert_eq!(p, vec![3.0, 7.0, 11.0]);
+    }
+}

@@ -1,0 +1,288 @@
+//! Synthetic dataset generators — paper Table 2, scaled.
+//!
+//! The Phoenix-distributed inputs are themselves synthetic; what matters to
+//! the figures is the *cardinality structure* (key count vs value count
+//! classes in Table 2), which these generators preserve exactly while
+//! scaling byte volume by `scale` (1.0 ≈ paper-sized; defaults in the
+//! harness use ~1/100 so a full figure sweep runs in minutes).
+//!
+//! | id | paper input                         | keys   | values |
+//! |----|-------------------------------------|--------|--------|
+//! | HG | 1.4 GB 24-bit bitmap                | Medium | Large  |
+//! | KM | 500 000 3-d points (100 clusters)   | Small  | Large  |
+//! | LR | 3.5 GB points file                  | Small  | Large  |
+//! | MM | 3000×3000 integer matrices          | Medium | Medium |
+//! | PC | 3000×3000 integer matrix            | Medium | Medium |
+//! | SM | 500 MB key file                     | Small  | Small  |
+//! | WC | 500 MB text document                | Large  | Large  |
+
+use crate::util::prng::Xoshiro256;
+
+/// Word Count: lines of space-separated words with a Zipf-like frequency
+/// distribution over a sizable vocabulary (Large keys, Large values).
+pub fn wordcount_text(scale: f64, seed: u64) -> Vec<String> {
+    let mut rng = Xoshiro256::seeded(seed);
+    // Paper: 500 MB text. scale=1.0 ≈ 70M words; default harness scale
+    // 0.01 → ~700k words ≈ 5 MB.
+    let total_words = ((70_000_000.0 * scale) as usize).max(1_000);
+    let vocab_size = ((20_000.0 * scale.sqrt()) as usize).clamp(200, 40_000);
+    let vocab: Vec<String> = (0..vocab_size)
+        .map(|i| {
+            // Injective word per index: scramble then base-26 encode, with
+            // a leading length-varying prefix for natural word shapes.
+            let mut x = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 16;
+            let mut w = String::new();
+            for _ in 0..(2 + i % 4) {
+                w.push((b'a' + (x % 26) as u8) as char);
+                x /= 26;
+            }
+            // Unique suffix: base-26 of the index itself.
+            let mut n = i;
+            loop {
+                w.push((b'a' + (n % 26) as u8) as char);
+                n /= 26;
+                if n == 0 {
+                    break;
+                }
+            }
+            w
+        })
+        .collect();
+    let words_per_line = 12usize;
+    let lines = total_words / words_per_line;
+    (0..lines)
+        .map(|_| {
+            let mut line = String::with_capacity(words_per_line * 7);
+            for i in 0..words_per_line {
+                if i > 0 {
+                    line.push(' ');
+                }
+                // Zipf-ish: rank ∝ u^3 concentrates mass on low ranks.
+                let u = rng.unit_f64();
+                let rank = ((u * u * u) * vocab_size as f64) as usize;
+                line.push_str(&vocab[rank.min(vocab_size - 1)]);
+            }
+            line
+        })
+        .collect()
+}
+
+/// Histogram: RGB pixel bytes (Medium keys = 3×256 bins, Large values).
+/// Paper: 1.4 GB bitmap ≈ 470M pixels.
+pub fn histogram_pixels(scale: f64, seed: u64) -> Vec<u8> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let pixels = ((470_000_000.0 * scale) as usize).max(30_000);
+    let mut out = Vec::with_capacity(pixels * 3);
+    for _ in 0..pixels {
+        // Channel-correlated distribution so bins are non-uniform (real
+        // images are not white noise).
+        let base = rng.below(256) as u8;
+        out.push(base);
+        out.push(base.wrapping_add(rng.below(64) as u8));
+        out.push((rng.below(256) as u8) / 2);
+    }
+    out
+}
+
+/// K-Means: `n` 3-d points drawn around `clusters` Gaussian centers
+/// (Small keys = clusters, Large values = points).
+pub struct KmeansData {
+    pub points: Vec<[f64; 3]>,
+    pub initial_centroids: Vec<[f64; 3]>,
+}
+
+pub fn kmeans_points(scale: f64, seed: u64) -> KmeansData {
+    let mut rng = Xoshiro256::seeded(seed);
+    let n = ((500_000.0 * scale) as usize).max(2_000);
+    let clusters = 100usize.min(n / 20).max(4);
+    let centers: Vec<[f64; 3]> = (0..clusters)
+        .map(|_| {
+            [
+                rng.f64_in(-100.0, 100.0),
+                rng.f64_in(-100.0, 100.0),
+                rng.f64_in(-100.0, 100.0),
+            ]
+        })
+        .collect();
+    let points: Vec<[f64; 3]> = (0..n)
+        .map(|_| {
+            let c = centers[rng.below(clusters as u64) as usize];
+            [
+                c[0] + rng.normal() * 4.0,
+                c[1] + rng.normal() * 4.0,
+                c[2] + rng.normal() * 4.0,
+            ]
+        })
+        .collect();
+    // Initial centroids: first `clusters` points (deterministic, standard).
+    let initial_centroids = points.iter().take(clusters).copied().collect();
+    KmeansData {
+        points,
+        initial_centroids,
+    }
+}
+
+/// Linear Regression: (x, y) samples of a noisy line (Small keys = 5
+/// moment sums, Large values). Paper: 3.5 GB file of point pairs.
+pub fn linreg_points(scale: f64, seed: u64) -> Vec<(f64, f64)> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let n = ((230_000_000.0 * scale) as usize).max(20_000);
+    let (a, b) = (0.7, 12.5);
+    (0..n)
+        .map(|_| {
+            let x = rng.f64_in(0.0, 100.0);
+            let y = a * x + b + rng.normal() * 3.0;
+            (x, y)
+        })
+        .collect()
+}
+
+/// Matrix Multiply / PCA: square f32 matrix with deterministic pseudo-
+/// random entries (Medium keys, Medium values). Paper: 3000×3000 ints.
+pub struct MatrixData {
+    pub n: usize,
+    /// Row-major `n × n`.
+    pub data: Vec<f32>,
+}
+
+pub fn square_matrix(scale: f64, seed: u64) -> MatrixData {
+    let mut rng = Xoshiro256::seeded(seed);
+    let n = ((3000.0 * scale.sqrt()) as usize).clamp(48, 3000);
+    // Keep entries small so f32 tile sums stay exact enough to compare
+    // against the f64 native path.
+    let data: Vec<f32> = (0..n * n)
+        .map(|_| (rng.below(8) as f32) - 3.5)
+        .collect();
+    MatrixData { n, data }
+}
+
+/// String Match: a haystack of random lowercase text plus the paper's
+/// 4 search keys (Small keys, Small values — "four keys with 910 values").
+pub struct StringMatchData {
+    pub haystack: Vec<String>,
+    pub needles: Vec<String>,
+}
+
+pub fn stringmatch_file(scale: f64, seed: u64) -> StringMatchData {
+    let mut rng = Xoshiro256::seeded(seed);
+    let needles: Vec<String> = ["helloworld", "howareyou", "ferrari", "whotheman"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    // Paper: 500 MB of encrypted keys scanned for 4 plaintext keys.
+    let total_bytes = ((500_000_000.0 * scale) as usize).max(200_000);
+    let line_len = 64usize;
+    let lines = total_bytes / line_len;
+    // Poisson-thin needle occurrences so total matches stay in the
+    // hundreds (the "910 values" regime) independent of scale.
+    let target_matches = 910.0;
+    let p_line = (target_matches / lines as f64).min(0.5);
+    (0..lines)
+        .map(|_| {
+            let mut line: String = (0..line_len)
+                .map(|_| (b'a' + rng.below(26) as u8) as char)
+                .collect();
+            if rng.chance(p_line) {
+                let needle = rng.pick(&needles).clone();
+                let pos = rng.range(0, line_len - needle.len());
+                line.replace_range(pos..pos + needle.len(), &needle);
+            }
+            line
+        })
+        .collect::<Vec<_>>()
+        .pipe(|haystack| StringMatchData { haystack, needles })
+}
+
+/// Tiny pipe helper (keeps generator bodies expression-shaped).
+trait Pipe: Sized {
+    fn pipe<T>(self, f: impl FnOnce(Self) -> T) -> T {
+        f(self)
+    }
+}
+impl<T> Pipe for T {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    const S: f64 = 0.001; // minimal scale for tests
+
+    #[test]
+    fn wordcount_shape() {
+        let lines = wordcount_text(S, 1);
+        assert!(lines.len() >= 80);
+        let distinct: HashSet<&str> = lines.iter().flat_map(|l| l.split(' ')).collect();
+        // Large key class: hundreds+ of distinct words even at tiny scale.
+        assert!(distinct.len() >= 150, "distinct words: {}", distinct.len());
+        // Zipf: the most common word should dominate.
+        let mut counts = std::collections::HashMap::new();
+        for w in lines.iter().flat_map(|l| l.split(' ')) {
+            *counts.entry(w).or_insert(0usize) += 1;
+        }
+        let max = counts.values().max().unwrap();
+        let total: usize = counts.values().sum();
+        assert!(*max * 20 > total / 10, "head word too flat");
+    }
+
+    #[test]
+    fn wordcount_deterministic() {
+        assert_eq!(wordcount_text(S, 7)[0], wordcount_text(S, 7)[0]);
+        assert_ne!(wordcount_text(S, 7)[0], wordcount_text(S, 8)[0]);
+    }
+
+    #[test]
+    fn histogram_is_rgb_triplets() {
+        let px = histogram_pixels(0.0001, 2);
+        assert_eq!(px.len() % 3, 0);
+        assert!(px.len() >= 90_000);
+    }
+
+    #[test]
+    fn kmeans_clusters_and_points() {
+        let d = kmeans_points(0.01, 3);
+        assert!(d.points.len() >= 2_000);
+        assert!(d.initial_centroids.len() >= 4);
+        assert!(d.initial_centroids.len() <= 100);
+        // Points live in a bounded region (centers ±100, noise σ=4).
+        assert!(d
+            .points
+            .iter()
+            .all(|p| p.iter().all(|c| c.abs() < 150.0)));
+    }
+
+    #[test]
+    fn linreg_points_follow_line() {
+        let pts = linreg_points(0.0001, 4);
+        assert!(pts.len() >= 20_000);
+        let n = pts.len() as f64;
+        let sx: f64 = pts.iter().map(|p| p.0).sum();
+        let sy: f64 = pts.iter().map(|p| p.1).sum();
+        let sxx: f64 = pts.iter().map(|p| p.0 * p.0).sum();
+        let sxy: f64 = pts.iter().map(|p| p.0 * p.1).sum();
+        let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+        assert!((slope - 0.7).abs() < 0.02, "slope {slope}");
+    }
+
+    #[test]
+    fn matrix_square_and_bounded() {
+        let m = square_matrix(0.001, 5);
+        assert_eq!(m.data.len(), m.n * m.n);
+        assert!(m.n >= 48);
+        assert!(m.data.iter().all(|x| x.abs() <= 4.0));
+    }
+
+    #[test]
+    fn stringmatch_has_sparse_matches() {
+        let d = stringmatch_file(0.001, 6);
+        assert_eq!(d.needles.len(), 4);
+        let matches: usize = d
+            .haystack
+            .iter()
+            .map(|line| d.needles.iter().filter(|n| line.contains(*n)).count())
+            .sum();
+        // Small values class: a handful of matches, not thousands.
+        assert!(matches > 0, "needles must occur");
+        assert!(matches < 5_000, "matches: {matches}");
+    }
+}

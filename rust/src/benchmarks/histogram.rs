@@ -1,0 +1,180 @@
+//! Histogram (HG) — per-channel pixel-value counts of an RGB image.
+//!
+//! Medium keys (3 × 256 bins) × Large values (one partial count per chunk
+//! per touched bin; 1.4 × 10⁹ values at paper scale). Per the paper's
+//! fairness note, Phoenix and MR4R "iterate over chunks of data, emitting
+//! values after partial combination in the map method", while Phoenix++
+//! iterates individual pixels into its fixed `ArrayContainer` — exactly
+//! what each framework is best at.
+
+use std::sync::Arc;
+
+use crate::api::reducers::RirReducer;
+use crate::api::traits::{Emitter, KeyValue};
+use crate::api::JobConfig;
+use crate::baselines::phoenixpp::Container;
+use crate::baselines::{ArrayContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
+use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::builder::canon;
+use crate::runtime::artifacts::shapes::{HG_BINS, HG_CHUNK};
+
+use super::backend::Backend;
+
+/// Bins: 3 channels × 256 intensities (keys are `channel * 256 + value`).
+pub const BINS: usize = 3 * HG_BINS;
+
+/// Pixels per map input chunk (×3 bytes each).
+pub const PIXELS_PER_CHUNK: usize = HG_CHUNK;
+
+/// Split the flat RGB byte stream into map inputs.
+pub fn chunk_pixels(pixels: &[u8]) -> Vec<&[u8]> {
+    pixels.chunks(PIXELS_PER_CHUNK * 3).collect()
+}
+
+/// Per-chunk partial counts for one channel, routed through the compute
+/// backend (the Pallas one-hot-matmul kernel under PJRT).
+fn channel_counts(backend: &Backend, chunk: &[u8], channel: usize) -> Vec<f32> {
+    let mut vals = vec![512.0f32; HG_CHUNK]; // ≥256 ⇒ padding, never counted
+    for (i, px) in chunk.chunks(3).enumerate() {
+        vals[i] = px[channel] as f32;
+    }
+    backend.histogram_chunk(&vals)
+}
+
+/// The MR4R mapper: partial-combine a chunk, emit per-bin counts.
+pub fn mapper(backend: Backend) -> impl Fn(&&[u8], &mut dyn Emitter<i64, i64>) + Send + Sync {
+    move |chunk: &&[u8], emitter: &mut dyn Emitter<i64, i64>| {
+        for channel in 0..3 {
+            let counts = channel_counts(&backend, chunk, channel);
+            for (bin, &c) in counts.iter().enumerate() {
+                if c > 0.0 {
+                    emitter.emit((channel * HG_BINS + bin) as i64, c as i64);
+                }
+            }
+        }
+    }
+}
+
+pub fn reducer() -> RirReducer<i64, i64> {
+    RirReducer::new(canon::sum_i64("histogram.sum"))
+}
+
+pub fn run_mr4r(
+    pixels: &[u8],
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<KeyValue<i64, i64>>, FlowMetrics) {
+    let chunks = chunk_pixels(pixels);
+    let cfg = cfg.clone().with_scratch_per_emit(16);
+    let m = mapper(backend.clone());
+    let r = reducer();
+    run_job(&m, &r, &chunks, &cfg, agent)
+}
+
+pub fn run_phoenix(pixels: &[u8], threads: usize, backend: &Backend) -> Vec<(i64, i64)> {
+    let chunks = chunk_pixels(pixels);
+    let backend = backend.clone();
+    let map = move |chunk: &&[u8], emit: &mut dyn FnMut(i64, i64)| {
+        for channel in 0..3 {
+            let counts = channel_counts(&backend, chunk, channel);
+            for (bin, &c) in counts.iter().enumerate() {
+                if c > 0.0 {
+                    emit((channel * HG_BINS + bin) as i64, c as i64);
+                }
+            }
+        }
+    };
+    let reduce = |_k: &i64, vs: &[i64]| vs.iter().sum::<i64>();
+    let comb = |a: &mut i64, b: &i64| *a += *b;
+    PhoenixJob {
+        map: &map,
+        reduce: &reduce,
+        combiner: Some(&comb),
+    }
+    .run(&chunks, &PhoenixConfig::new(threads))
+}
+
+/// Phoenix++: per-pixel emission into a fixed 768-slot array container
+/// (the compile-time container choice the paper describes).
+pub fn run_phoenixpp(pixels: &[u8], threads: usize) -> Vec<(i64, i64)> {
+    let chunks = chunk_pixels(pixels);
+    let map = |chunk: &&[u8], emit: &mut dyn FnMut(usize, i64)| {
+        for px in chunk.chunks_exact(3) {
+            emit(px[0] as usize, 1);
+            emit(HG_BINS + px[1] as usize, 1);
+            emit(2 * HG_BINS + px[2] as usize, 1);
+        }
+    };
+    let out = PppJob {
+        map: &map,
+        combiner: &SumOp,
+        container: &|| Box::new(ArrayContainer::<i64>::new(BINS)) as Box<dyn Container<usize, i64>>,
+        finalize: None,
+    }
+    .run(&chunks, threads);
+    out.into_iter().map(|(k, v)| (k as i64, v)).collect()
+}
+
+/// Arc-holding variant used by the suite (datasets owned by the workload).
+pub fn run_mr4r_owned(
+    pixels: &Arc<Vec<u8>>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<KeyValue<i64, i64>>, FlowMetrics) {
+    run_mr4r(pixels, cfg, agent, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::OptimizeMode;
+    use crate::benchmarks::{datagen, digest_pairs};
+
+    fn kv_pairs(kv: Vec<KeyValue<i64, i64>>) -> Vec<(i64, i64)> {
+        kv.into_iter().map(|p| (p.key, p.value)).collect()
+    }
+
+    #[test]
+    fn frameworks_agree_and_totals_match() {
+        let pixels = datagen::histogram_pixels(0.0001, 9);
+        let n_pixels = (pixels.len() / 3) as i64;
+        let agent = OptimizerAgent::new();
+        let backend = Backend::Native;
+
+        let (mr, m) = run_mr4r(&pixels, &JobConfig::fast().with_threads(4), &agent, &backend);
+        assert_eq!(m.flow.label(), "combine");
+        let total: i64 = mr.iter().map(|kv| kv.value).sum();
+        assert_eq!(total, 3 * n_pixels, "every pixel counted in all 3 channels");
+
+        let d = digest_pairs(&kv_pairs(mr));
+        assert_eq!(d, digest_pairs(&run_phoenix(&pixels, 4, &backend)));
+        assert_eq!(d, digest_pairs(&run_phoenixpp(&pixels, 4)));
+
+        let (unopt, mu) = run_mr4r(
+            &pixels,
+            &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
+            &agent,
+            &backend,
+        );
+        assert_eq!(mu.flow.label(), "reduce");
+        assert_eq!(d, digest_pairs(&kv_pairs(unopt)));
+    }
+
+    #[test]
+    fn key_space_is_three_channels() {
+        let pixels = datagen::histogram_pixels(0.0001, 10);
+        let agent = OptimizerAgent::new();
+        let (mr, _) = run_mr4r(
+            &pixels,
+            &JobConfig::fast().with_threads(2),
+            &agent,
+            &Backend::Native,
+        );
+        assert!(mr.iter().all(|kv| (0..BINS as i64).contains(&kv.key)));
+        // Medium key class: hundreds of live bins.
+        assert!(mr.len() > 300, "live bins: {}", mr.len());
+    }
+}

@@ -1,0 +1,278 @@
+//! K-Means Clustering (KM) — Small keys (≤100 clusters) × Large values
+//! (one coordinate-sum vector per point).
+//!
+//! The paper singles KM out: "The challenge for all three frameworks was
+//! to generate a combiner ... as it requires state to obtain the average".
+//! The resolution (theirs and ours): the emitted value is the *running sum
+//! of point coordinates with the count riding along* — `[Σx, Σy, Σz, n]` —
+//! which folds associatively (`sum_vec`); normalization to the mean
+//! happens outside the reduce ("in the main body of the application for
+//! Phoenix and Phoenix++", and for MR4R in the driving loop below).
+//! The assignment step routes through the compute backend (the Pallas
+//! distance-argmin kernel under PJRT).
+
+use std::sync::Arc;
+
+use crate::api::reducers::RirReducer;
+use crate::api::traits::{Emitter, KeyValue};
+use crate::api::JobConfig;
+use crate::baselines::phoenixpp::Container;
+use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
+use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::builder::canon;
+use crate::runtime::artifacts::shapes::{KM_CENTROIDS, KM_DIMS, KM_POINTS};
+
+use super::backend::Backend;
+use super::datagen::KmeansData;
+
+/// Lloyd iterations per run (fixed, as in the Phoenix benchmark).
+pub const ITERATIONS: usize = 5;
+
+/// Pad centroids into the kernel's fixed slot count; empty slots sit at
+/// +BIG so they never win the argmin.
+fn padded_centroids(centroids: &[[f64; 3]]) -> Vec<f32> {
+    let mut out = vec![1e30f32; KM_CENTROIDS * KM_DIMS];
+    for (i, c) in centroids.iter().take(KM_CENTROIDS).enumerate() {
+        for d in 0..KM_DIMS {
+            out[i * KM_DIMS + d] = c[d] as f32;
+        }
+    }
+    out
+}
+
+/// Assign a block of ≤KM_POINTS points; returns cluster ids.
+fn assign_block(backend: &Backend, pts: &[[f64; 3]], centroids_pad: &[f32]) -> Vec<usize> {
+    let mut flat = vec![1e30f32; KM_POINTS * KM_DIMS];
+    for (i, p) in pts.iter().enumerate() {
+        for d in 0..KM_DIMS {
+            flat[i * KM_DIMS + d] = p[d] as f32;
+        }
+    }
+    backend
+        .kmeans_assign(&flat, centroids_pad)
+        .into_iter()
+        .take(pts.len())
+        .map(|f| f as usize)
+        .collect()
+}
+
+/// One Lloyd iteration as a MapReduce job on MR4R.
+fn mr4r_iteration(
+    points: &[[f64; 3]],
+    centroids: &[[f64; 3]],
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<KeyValue<i64, Vec<f64>>>, FlowMetrics) {
+    let blocks: Vec<&[[f64; 3]]> = points.chunks(KM_POINTS).collect();
+    let cpad = padded_centroids(centroids);
+    let backend = backend.clone();
+    let mapper = move |block: &&[[f64; 3]], em: &mut dyn Emitter<i64, Vec<f64>>| {
+        let assign = assign_block(&backend, block, &cpad);
+        for (p, &c) in block.iter().zip(&assign) {
+            // Value = [Σx, Σy, Σz, count] seed for one point.
+            em.emit(c as i64, vec![p[0], p[1], p[2], 1.0]);
+        }
+    };
+    let reducer: RirReducer<i64, Vec<f64>> =
+        RirReducer::new(canon::sum_vec("kmeans.sumvec", KM_DIMS + 1));
+    let cfg = cfg.clone().with_scratch_per_emit(24);
+    run_job(&mapper, &reducer, &blocks, &cfg, agent)
+}
+
+/// Sum vectors → new centroids (the normalization outside the reduce).
+fn normalize(sums: &[(i64, Vec<f64>)], prev: &[[f64; 3]]) -> Vec<[f64; 3]> {
+    let mut next = prev.to_vec();
+    for (k, s) in sums {
+        let n = s[KM_DIMS].max(1.0);
+        next[*k as usize] = [s[0] / n, s[1] / n, s[2] / n];
+    }
+    next
+}
+
+/// Full MR4R K-Means: ITERATIONS jobs; returns final centroids plus the
+/// metrics of the last iteration (the steady-state job the figures use).
+pub fn run_mr4r(
+    data: &KmeansData,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<[f64; 3]>, FlowMetrics) {
+    let mut centroids = data.initial_centroids.clone();
+    let mut last_metrics = None;
+    for _ in 0..ITERATIONS {
+        let (sums, m) = mr4r_iteration(&data.points, &centroids, cfg, agent, backend);
+        let pairs: Vec<(i64, Vec<f64>)> =
+            sums.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        centroids = normalize(&pairs, &centroids);
+        last_metrics = Some(m);
+    }
+    (centroids, last_metrics.expect("≥1 iteration"))
+}
+
+/// Phoenix: same chunked assignment, per-point emission, manual vector
+/// combiner (the duplicated user code §2.3 complains about).
+pub fn run_phoenix(
+    data: &KmeansData,
+    threads: usize,
+    backend: &Backend,
+) -> Vec<[f64; 3]> {
+    let mut centroids = data.initial_centroids.clone();
+    for _ in 0..ITERATIONS {
+        let blocks: Vec<&[[f64; 3]]> = data.points.chunks(KM_POINTS).collect();
+        let cpad = padded_centroids(&centroids);
+        let backend = backend.clone();
+        let map = move |block: &&[[f64; 3]], emit: &mut dyn FnMut(i64, Vec<f64>)| {
+            let assign = assign_block(&backend, block, &cpad);
+            for (p, &c) in block.iter().zip(&assign) {
+                emit(c as i64, vec![p[0], p[1], p[2], 1.0]);
+            }
+        };
+        let reduce = |_k: &i64, vs: &[Vec<f64>]| {
+            let mut acc = vec![0.0; KM_DIMS + 1];
+            for v in vs {
+                for (a, b) in acc.iter_mut().zip(v) {
+                    *a += b;
+                }
+            }
+            acc
+        };
+        let comb = |a: &mut Vec<f64>, b: &Vec<f64>| {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        };
+        let sums = PhoenixJob {
+            map: &map,
+            reduce: &reduce,
+            combiner: Some(&comb),
+        }
+        .run(&blocks, &PhoenixConfig::new(threads));
+        centroids = normalize(&sums, &centroids);
+    }
+    centroids
+}
+
+/// Phoenix++: hash container with the vector sum combiner; normalization
+/// in `finalize` (its post-processing hook).
+pub fn run_phoenixpp(
+    data: &KmeansData,
+    threads: usize,
+    backend: &Backend,
+) -> Vec<[f64; 3]> {
+    let mut centroids = data.initial_centroids.clone();
+    for _ in 0..ITERATIONS {
+        let blocks: Vec<&[[f64; 3]]> = data.points.chunks(KM_POINTS).collect();
+        let cpad = padded_centroids(&centroids);
+        let backend = backend.clone();
+        let map = move |block: &&[[f64; 3]], emit: &mut dyn FnMut(i64, Vec<f64>)| {
+            let assign = assign_block(&backend, block, &cpad);
+            for (p, &c) in block.iter().zip(&assign) {
+                emit(c as i64, vec![p[0], p[1], p[2], 1.0]);
+            }
+        };
+        let sums = PppJob {
+            map: &map,
+            combiner: &SumOp,
+            container: &|| {
+                Box::new(HashContainer::<i64, Vec<f64>>::default())
+                    as Box<dyn Container<i64, Vec<f64>>>
+            },
+            finalize: None,
+        }
+        .run(&blocks, threads);
+        centroids = normalize(&sums, &centroids);
+    }
+    centroids
+}
+
+/// Digest centroids with coarse quantization (summation-order tolerant).
+pub fn digest_centroids(centroids: &[[f64; 3]]) -> u64 {
+    let pairs: Vec<(i64, Vec<f64>)> = centroids
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            (
+                i as i64,
+                c.iter().map(|v| (v * 1e3).round() / 1e3).collect(),
+            )
+        })
+        .collect();
+    super::digest_pairs(&pairs)
+}
+
+/// Clustering quality: mean distance of each point to its centroid
+/// (sanity metric for the end-to-end example).
+pub fn mean_distance(data: &KmeansData, centroids: &[[f64; 3]], backend: &Backend) -> f64 {
+    let cpad = padded_centroids(centroids);
+    let mut total = 0.0;
+    for block in data.points.chunks(KM_POINTS) {
+        let assign = assign_block(backend, block, &cpad);
+        for (p, &c) in block.iter().zip(&assign) {
+            let cc = centroids[c];
+            total += (0..3).map(|d| (p[d] - cc[d]).powi(2)).sum::<f64>().sqrt();
+        }
+    }
+    total / data.points.len() as f64
+}
+
+/// Arc-holding runner used by the suite.
+pub fn run_mr4r_owned(
+    data: &Arc<KmeansData>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<[f64; 3]>, FlowMetrics) {
+    run_mr4r(data, cfg, agent, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::OptimizeMode;
+    use crate::benchmarks::datagen;
+
+    #[test]
+    fn frameworks_converge_to_same_centroids() {
+        let data = datagen::kmeans_points(0.005, 21);
+        let agent = OptimizerAgent::new();
+        let backend = Backend::Native;
+        let (c_mr, m) = run_mr4r(&data, &JobConfig::fast().with_threads(4), &agent, &backend);
+        assert_eq!(m.flow.label(), "combine");
+        let c_ph = run_phoenix(&data, 4, &backend);
+        let c_pp = run_phoenixpp(&data, 4, &backend);
+        assert_eq!(digest_centroids(&c_mr), digest_centroids(&c_ph));
+        assert_eq!(digest_centroids(&c_mr), digest_centroids(&c_pp));
+    }
+
+    #[test]
+    fn optimizer_on_off_same_result() {
+        let data = datagen::kmeans_points(0.004, 22);
+        let agent = OptimizerAgent::new();
+        let backend = Backend::Native;
+        let (c_on, _) = run_mr4r(&data, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let (c_off, m_off) = run_mr4r(
+            &data,
+            &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
+            &agent,
+            &backend,
+        );
+        assert_eq!(m_off.flow.label(), "reduce");
+        assert_eq!(digest_centroids(&c_on), digest_centroids(&c_off));
+    }
+
+    #[test]
+    fn clustering_improves_over_random() {
+        let data = datagen::kmeans_points(0.004, 23);
+        let agent = OptimizerAgent::new();
+        let backend = Backend::Native;
+        let before = mean_distance(&data, &data.initial_centroids, &backend);
+        let (after_c, _) = run_mr4r(&data, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let after = mean_distance(&data, &after_c, &backend);
+        assert!(
+            after < before * 0.9,
+            "Lloyd must tighten clusters: {before} → {after}"
+        );
+    }
+}

@@ -1,0 +1,216 @@
+//! Linear Regression (LR) — Small keys (5 moment sums) × Large values
+//! (one partial per chunk per moment; ~10⁶ values at paper scale).
+//!
+//! The Phoenix formulation processes points in cache-sized chunks, each
+//! map task accumulating local moment sums and emitting one partial per
+//! moment key — the same partial-combination-in-map structure the paper
+//! notes for Histogram. The chunk computation routes through the compute
+//! backend (the Pallas moment kernel under PJRT); the reduce sums the
+//! partials; the closed-form fit happens in the driver.
+
+use std::sync::Arc;
+
+use crate::api::reducers::RirReducer;
+use crate::api::traits::{Emitter, KeyValue};
+use crate::api::JobConfig;
+use crate::baselines::phoenixpp::Container;
+use crate::baselines::{ArrayContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
+use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::builder::canon;
+use crate::runtime::artifacts::shapes::LR_CHUNK;
+
+use super::backend::Backend;
+
+/// Moment keys.
+pub const SX: i64 = 0;
+pub const SY: i64 = 1;
+pub const SXX: i64 = 2;
+pub const SYY: i64 = 3;
+pub const SXY: i64 = 4;
+
+/// Split points into kernel-sized chunks.
+pub fn chunk_points(points: &[(f64, f64)]) -> Vec<&[(f64, f64)]> {
+    points.chunks(LR_CHUNK).collect()
+}
+
+/// Per-chunk moments via the backend (zero rows pad short chunks).
+fn chunk_moments(backend: &Backend, chunk: &[(f64, f64)]) -> Vec<f32> {
+    let mut xy = vec![0.0f32; LR_CHUNK * 2];
+    for (i, &(x, y)) in chunk.iter().enumerate() {
+        xy[2 * i] = x as f32;
+        xy[2 * i + 1] = y as f32;
+    }
+    backend.linreg_moments(&xy)
+}
+
+/// The shared map computation: one chunk → 5 moment partials.
+fn map_chunk(
+    backend: &Backend,
+    chunk: &[(f64, f64)],
+    mut emit: impl FnMut(i64, f64),
+) {
+    let m = chunk_moments(backend, chunk);
+    emit(SX, m[0] as f64);
+    emit(SY, m[1] as f64);
+    emit(SXX, m[2] as f64);
+    emit(SYY, m[3] as f64);
+    emit(SXY, m[4] as f64);
+}
+
+pub fn reducer() -> RirReducer<i64, f64> {
+    RirReducer::new(canon::sum_f64("linreg.sum"))
+}
+
+pub fn run_mr4r(
+    points: &[(f64, f64)],
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<KeyValue<i64, f64>>, FlowMetrics) {
+    let chunks = chunk_points(points);
+    let backend = backend.clone();
+    let mapper = move |chunk: &&[(f64, f64)], em: &mut dyn Emitter<i64, f64>| {
+        map_chunk(&backend, chunk, |k, v| em.emit(k, v));
+    };
+    let cfg = cfg.clone().with_scratch_per_emit(16);
+    let r = reducer();
+    run_job(&mapper, &r, &chunks, &cfg, agent)
+}
+
+pub fn run_phoenix(
+    points: &[(f64, f64)],
+    threads: usize,
+    backend: &Backend,
+) -> Vec<(i64, f64)> {
+    let chunks = chunk_points(points);
+    let backend = backend.clone();
+    let map = move |chunk: &&[(f64, f64)], emit: &mut dyn FnMut(i64, f64)| {
+        map_chunk(&backend, chunk, |k, v| emit(k, v));
+    };
+    let reduce = |_k: &i64, vs: &[f64]| vs.iter().sum::<f64>();
+    let comb = |a: &mut f64, b: &f64| *a += *b;
+    PhoenixJob {
+        map: &map,
+        reduce: &reduce,
+        combiner: Some(&comb),
+    }
+    .run(&chunks, &PhoenixConfig::new(threads))
+}
+
+pub fn run_phoenixpp(
+    points: &[(f64, f64)],
+    threads: usize,
+    backend: &Backend,
+) -> Vec<(i64, f64)> {
+    let chunks = chunk_points(points);
+    let backend = backend.clone();
+    let map = move |chunk: &&[(f64, f64)], emit: &mut dyn FnMut(usize, f64)| {
+        map_chunk(&backend, chunk, |k, v| emit(k as usize, v));
+    };
+    let out = PppJob {
+        map: &map,
+        combiner: &SumOp,
+        container: &|| Box::new(ArrayContainer::<f64>::new(5)) as Box<dyn Container<usize, f64>>,
+        finalize: None,
+    }
+    .run(&chunks, threads);
+    out.into_iter().map(|(k, v)| (k as i64, v)).collect()
+}
+
+/// Closed-form fit from the moment sums: (slope, intercept).
+pub fn fit(moments: &[(i64, f64)], n: usize) -> (f64, f64) {
+    let get = |key: i64| {
+        moments
+            .iter()
+            .find(|(k, _)| *k == key)
+            .map(|(_, v)| *v)
+            .unwrap_or(0.0)
+    };
+    let n = n as f64;
+    let (sx, sy, sxx, sxy) = (get(SX), get(SY), get(SXX), get(SXY));
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    (slope, intercept)
+}
+
+/// Digest the *fit* (means are summation-order stable), not the raw sums.
+pub fn digest_fit(moments: &[(i64, f64)], n: usize) -> u64 {
+    let (a, b) = fit(moments, n);
+    super::digest_pairs(&[
+        (0i64, (a * 1e6).round() / 1e6),
+        (1i64, (b * 1e4).round() / 1e4),
+    ])
+}
+
+/// Arc-holding runner used by the suite.
+pub fn run_mr4r_owned(
+    points: &Arc<Vec<(f64, f64)>>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<KeyValue<i64, f64>>, FlowMetrics) {
+    run_mr4r(points, cfg, agent, backend)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::OptimizeMode;
+    use crate::benchmarks::datagen;
+
+    #[test]
+    fn recovers_the_generating_line() {
+        let pts = datagen::linreg_points(0.0001, 31);
+        let agent = OptimizerAgent::new();
+        let (out, m) = run_mr4r(
+            &pts,
+            &JobConfig::fast().with_threads(4),
+            &agent,
+            &Backend::Native,
+        );
+        assert_eq!(m.flow.label(), "combine");
+        assert_eq!(out.len(), 5);
+        let moments: Vec<(i64, f64)> = out.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        let (slope, intercept) = fit(&moments, pts.len());
+        assert!((slope - 0.7).abs() < 0.02, "slope {slope}");
+        assert!((intercept - 12.5).abs() < 1.0, "intercept {intercept}");
+    }
+
+    #[test]
+    fn frameworks_agree_on_the_fit() {
+        let pts = datagen::linreg_points(0.00005, 32);
+        let agent = OptimizerAgent::new();
+        let backend = Backend::Native;
+        let (mr, _) = run_mr4r(&pts, &JobConfig::fast().with_threads(4), &agent, &backend);
+        let mr: Vec<(i64, f64)> = mr.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        let d = digest_fit(&mr, pts.len());
+        assert_eq!(d, digest_fit(&run_phoenix(&pts, 4, &backend), pts.len()));
+        assert_eq!(d, digest_fit(&run_phoenixpp(&pts, 4, &backend), pts.len()));
+
+        let (unopt, mu) = run_mr4r(
+            &pts,
+            &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
+            &agent,
+            &backend,
+        );
+        assert_eq!(mu.flow.label(), "reduce");
+        let unopt: Vec<(i64, f64)> = unopt.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        assert_eq!(d, digest_fit(&unopt, pts.len()));
+    }
+
+    #[test]
+    fn emits_five_partials_per_chunk() {
+        let pts = datagen::linreg_points(0.0001, 33);
+        let n_chunks = pts.len().div_ceil(LR_CHUNK);
+        let agent = OptimizerAgent::new();
+        let (_, m) = run_mr4r(
+            &pts,
+            &JobConfig::fast().with_threads(2),
+            &agent,
+            &Backend::Native,
+        );
+        assert_eq!(m.emits as usize, 5 * n_chunks);
+        assert_eq!(m.keys, 5);
+    }
+}

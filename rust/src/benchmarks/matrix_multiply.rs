@@ -1,0 +1,276 @@
+//! Matrix Multiply (MM) — Medium keys (output cells) × Medium values
+//! (one partial product per k-block).
+//!
+//! The MapReduce formulation: the k dimension is blocked; each map task
+//! computes one `(i-block × k-block × j-block)` tile product through the
+//! compute backend (the Pallas MXU-tile kernel under PJRT) and emits a
+//! partial value per output cell; the reduce sums partials across
+//! k-blocks. Matrices are zero-padded to the tile size.
+
+use std::sync::Arc;
+
+use crate::api::reducers::RirReducer;
+use crate::api::traits::{Emitter, KeyValue};
+use crate::api::JobConfig;
+use crate::baselines::phoenixpp::Container;
+use crate::baselines::{ArrayContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
+use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::builder::canon;
+use crate::runtime::artifacts::shapes::MM_TILE;
+
+use super::backend::Backend;
+use super::datagen::MatrixData;
+
+/// Zero-pad a row-major n×n matrix to tiles×tiles blocks of MM_TILE.
+pub struct PaddedMatrix {
+    pub n: usize,
+    pub blocks: usize,
+    pub data: Vec<f32>, // (blocks*T) × (blocks*T) row-major
+}
+
+pub fn pad(m: &MatrixData) -> PaddedMatrix {
+    let t = MM_TILE;
+    let blocks = m.n.div_ceil(t);
+    let np = blocks * t;
+    let mut data = vec![0.0f32; np * np];
+    for i in 0..m.n {
+        data[i * np..i * np + m.n].copy_from_slice(&m.data[i * m.n..(i + 1) * m.n]);
+    }
+    PaddedMatrix {
+        n: m.n,
+        blocks,
+        data,
+    }
+}
+
+/// Extract tile (bi, bj) as a dense MM_TILE² buffer.
+fn tile(p: &PaddedMatrix, bi: usize, bj: usize) -> Vec<f32> {
+    let t = MM_TILE;
+    let np = p.blocks * t;
+    let mut out = vec![0.0f32; t * t];
+    for r in 0..t {
+        let src = (bi * t + r) * np + bj * t;
+        out[r * t..(r + 1) * t].copy_from_slice(&p.data[src..src + t]);
+    }
+    out
+}
+
+/// Map inputs: one task per (i-block, j-block, k-block).
+pub fn tasks(blocks: usize) -> Vec<(usize, usize, usize)> {
+    let mut v = Vec::with_capacity(blocks * blocks * blocks);
+    for bi in 0..blocks {
+        for bj in 0..blocks {
+            for bk in 0..blocks {
+                v.push((bi, bj, bk));
+            }
+        }
+    }
+    v
+}
+
+/// The shared map computation: tile product → per-cell emissions.
+fn map_tile(
+    a: &PaddedMatrix,
+    b: &PaddedMatrix,
+    backend: &Backend,
+    task: (usize, usize, usize),
+    mut emit: impl FnMut(i64, f64),
+) {
+    let (bi, bj, bk) = task;
+    let t = MM_TILE;
+    let ta = tile(a, bi, bk);
+    let tb = tile(b, bk, bj);
+    let c = backend.matmul_tile(&ta, &tb);
+    // Emit only cells inside the true n×n result (skip padding).
+    for r in 0..t {
+        let i = bi * t + r;
+        if i >= a.n {
+            break;
+        }
+        for col in 0..t {
+            let j = bj * t + col;
+            if j >= a.n {
+                break;
+            }
+            let v = c[r * t + col];
+            emit((i * a.n + j) as i64, v as f64);
+        }
+    }
+}
+
+pub fn reducer() -> RirReducer<i64, f64> {
+    RirReducer::new(canon::sum_f64("matmul.sum"))
+}
+
+pub fn run_mr4r(
+    a: &PaddedMatrix,
+    b: &PaddedMatrix,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<KeyValue<i64, f64>>, FlowMetrics) {
+    let inputs = tasks(a.blocks);
+    let backend = backend.clone();
+    let mapper = move |task: &(usize, usize, usize), em: &mut dyn Emitter<i64, f64>| {
+        map_tile(a, b, &backend, *task, |k, v| em.emit(k, v));
+    };
+    let r = reducer();
+    let cfg = cfg.clone().with_scratch_per_emit(8);
+    run_job(&mapper, &r, &inputs, &cfg, agent)
+}
+
+pub fn run_phoenix(
+    a: &PaddedMatrix,
+    b: &PaddedMatrix,
+    threads: usize,
+    backend: &Backend,
+) -> Vec<(i64, f64)> {
+    let inputs = tasks(a.blocks);
+    let backend = backend.clone();
+    let map = move |task: &(usize, usize, usize), emit: &mut dyn FnMut(i64, f64)| {
+        map_tile(a, b, &backend, *task, |k, v| emit(k, v));
+    };
+    let reduce = |_k: &i64, vs: &[f64]| vs.iter().sum::<f64>();
+    let comb = |x: &mut f64, y: &f64| *x += *y;
+    PhoenixJob {
+        map: &map,
+        reduce: &reduce,
+        combiner: Some(&comb),
+    }
+    .run(&inputs, &PhoenixConfig::new(threads))
+}
+
+pub fn run_phoenixpp(
+    a: &PaddedMatrix,
+    b: &PaddedMatrix,
+    threads: usize,
+    backend: &Backend,
+) -> Vec<(i64, f64)> {
+    let inputs = tasks(a.blocks);
+    let n = a.n;
+    let backend = backend.clone();
+    let map = move |task: &(usize, usize, usize), emit: &mut dyn FnMut(usize, f64)| {
+        map_tile(a, b, &backend, *task, |k, v| emit(k as usize, v));
+    };
+    let out = PppJob {
+        map: &map,
+        combiner: &SumOp,
+        container: &move || {
+            Box::new(ArrayContainer::<f64>::new(n * n)) as Box<dyn Container<usize, f64>>
+        },
+        finalize: None,
+    }
+    .run(&inputs, threads);
+    out.into_iter().map(|(k, v)| (k as i64, v)).collect()
+}
+
+/// Reference product (f64, straightforward triple loop) for validation.
+pub fn reference(a: &MatrixData, b: &MatrixData) -> Vec<f64> {
+    let n = a.n;
+    let mut c = vec![0.0f64; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            let aik = a.data[i * n + k] as f64;
+            for j in 0..n {
+                c[i * n + j] += aik * b.data[k * n + j] as f64;
+            }
+        }
+    }
+    c
+}
+
+/// Shared holder for the suite (A, B padded once).
+pub struct MmWorkload {
+    pub a: PaddedMatrix,
+    pub b: PaddedMatrix,
+}
+
+pub fn prepare(scale: f64, seed: u64) -> Arc<MmWorkload> {
+    let a = super::datagen::square_matrix(scale, seed);
+    let b = super::datagen::square_matrix(scale, seed.wrapping_add(1));
+    Arc::new(MmWorkload {
+        a: pad(&a),
+        b: pad(&b),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::OptimizeMode;
+    use crate::benchmarks::{datagen, digest_pairs};
+
+    fn small() -> (MatrixData, MatrixData) {
+        (
+            datagen::square_matrix(0.0003, 41),
+            datagen::square_matrix(0.0003, 42),
+        )
+    }
+
+    #[test]
+    fn matches_reference_product() {
+        let (ma, mb) = small();
+        let (a, b) = (pad(&ma), pad(&mb));
+        let agent = OptimizerAgent::new();
+        let (out, m) = run_mr4r(
+            &a,
+            &b,
+            &JobConfig::fast().with_threads(4),
+            &agent,
+            &Backend::Native,
+        );
+        assert_eq!(m.flow.label(), "combine");
+        let reference = reference(&ma, &mb);
+        assert_eq!(out.len(), ma.n * ma.n);
+        for kv in &out {
+            let expect = reference[kv.key as usize];
+            assert!(
+                (kv.value - expect).abs() < 1e-6,
+                "cell {}: {} vs {}",
+                kv.key,
+                kv.value,
+                expect
+            );
+        }
+    }
+
+    #[test]
+    fn frameworks_agree() {
+        let (ma, mb) = small();
+        let (a, b) = (pad(&ma), pad(&mb));
+        let agent = OptimizerAgent::new();
+        let backend = Backend::Native;
+        let (mr, _) = run_mr4r(&a, &b, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let mr: Vec<(i64, f64)> = mr.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        let d = digest_pairs(&mr);
+        assert_eq!(d, digest_pairs(&run_phoenix(&a, &b, 2, &backend)));
+        assert_eq!(d, digest_pairs(&run_phoenixpp(&a, &b, 2, &backend)));
+
+        let (unopt, mu) = run_mr4r(
+            &a,
+            &b,
+            &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
+            &agent,
+            &backend,
+        );
+        assert_eq!(mu.flow.label(), "reduce");
+        let unopt: Vec<(i64, f64)> = unopt.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        assert_eq!(d, digest_pairs(&unopt));
+    }
+
+    #[test]
+    fn padding_preserves_values() {
+        let m = datagen::square_matrix(0.0003, 43);
+        let p = pad(&m);
+        assert_eq!(p.blocks * MM_TILE % MM_TILE, 0);
+        let np = p.blocks * MM_TILE;
+        for i in 0..m.n {
+            for j in 0..m.n {
+                assert_eq!(p.data[i * np + j], m.data[i * m.n + j]);
+            }
+        }
+        // Padding region is zero.
+        assert_eq!(p.data[(np - 1) * np + (np - 1)], 0.0);
+    }
+}

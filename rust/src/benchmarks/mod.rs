@@ -1,0 +1,98 @@
+//! The seven-benchmark suite (paper §4.1.3, Table 2): Histogram, K-Means,
+//! Linear Regression, Matrix Multiply, PCA, String Match, Word Count —
+//! each implemented on all three frameworks (MR4R, Phoenix, Phoenix++)
+//! with the *same algorithm* per the paper's fairness note
+//! ("modifications have been made to the original benchmarks" so all
+//! frameworks run identical work).
+//!
+//! Layout: one module per benchmark exposing `generate`, `run_mr4r`,
+//! `run_phoenix`, `run_phoenixpp`, and a result digest for cross-framework
+//! equivalence tests; [`suite`] packages them behind a uniform interface
+//! for the figure harness; [`backend`] routes the numeric map-phase
+//! compute to native Rust or the AOT PJRT kernels.
+
+pub mod backend;
+pub mod datagen;
+pub mod histogram;
+pub mod kmeans;
+pub mod linear_regression;
+pub mod matrix_multiply;
+pub mod pca;
+pub mod string_match;
+pub mod suite;
+pub mod word_count;
+
+pub use backend::Backend;
+pub use suite::{BenchId, Framework, Outcome, RunParams, Workload};
+
+use crate::util::hash::fxhash;
+
+/// Digest a result set irrespective of order: hash of the sorted,
+/// canonically-formatted pairs. Floats are formatted with 6 significant
+/// digits so framework-dependent summation order does not flip the digest.
+pub fn digest_pairs<K: std::fmt::Display, V: DigestValue>(pairs: &[(K, V)]) -> u64 {
+    let mut rows: Vec<String> = pairs
+        .iter()
+        .map(|(k, v)| format!("{k}\u{1}{}", v.digest_repr()))
+        .collect();
+    rows.sort_unstable();
+    fxhash(&rows)
+}
+
+/// Canonical string form of a result value for digesting.
+pub trait DigestValue {
+    fn digest_repr(&self) -> String;
+}
+
+impl DigestValue for i64 {
+    fn digest_repr(&self) -> String {
+        self.to_string()
+    }
+}
+
+impl DigestValue for f64 {
+    fn digest_repr(&self) -> String {
+        if *self == 0.0 {
+            "0".to_string()
+        } else {
+            format!("{self:.6e}")
+        }
+    }
+}
+
+impl DigestValue for Vec<f64> {
+    fn digest_repr(&self) -> String {
+        self.iter()
+            .map(|v| v.digest_repr())
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digest_is_order_independent() {
+        let a = vec![("x".to_string(), 1i64), ("y".to_string(), 2)];
+        let b = vec![("y".to_string(), 2i64), ("x".to_string(), 1)];
+        assert_eq!(digest_pairs(&a), digest_pairs(&b));
+    }
+
+    #[test]
+    fn digest_distinguishes_values() {
+        let a = vec![("x".to_string(), 1i64)];
+        let b = vec![("x".to_string(), 2i64)];
+        assert_ne!(digest_pairs(&a), digest_pairs(&b));
+    }
+
+    #[test]
+    fn float_digest_tolerates_low_bits() {
+        let a = vec![(0i64, 1.0000000001f64)];
+        let b = vec![(0i64, 1.0000000002f64)];
+        assert_eq!(digest_pairs(&a), digest_pairs(&b));
+        let c = vec![(0i64, 1.001f64)];
+        assert_ne!(digest_pairs(&a), digest_pairs(&c));
+    }
+}

@@ -1,0 +1,248 @@
+//! Principal Component Analysis (PC) — Medium keys (row pairs) × Medium
+//! values (one partial per column block).
+//!
+//! The Phoenix PCA computes the covariance matrix of a row-major data
+//! matrix. Map tasks process one (row i, row j) pair per column block
+//! through the compute backend (the Pallas dot/sum kernel under PJRT),
+//! emitting `[Σa, Σb, Σab]` partials keyed by the pair; reduce sums the
+//! partials; the driver converts sums to covariances.
+
+use std::sync::Arc;
+
+use crate::api::reducers::RirReducer;
+use crate::api::traits::{Emitter, KeyValue};
+use crate::api::JobConfig;
+use crate::baselines::phoenixpp::Container;
+use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
+use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::builder::canon;
+use crate::runtime::artifacts::shapes::PC_BLOCK;
+use crate::util::prng::Xoshiro256;
+
+use super::backend::Backend;
+use super::datagen::MatrixData;
+
+/// Row pairs sampled per run (Medium key class without the O(n²) blowup).
+pub fn sample_pairs(n: usize, seed: u64) -> Vec<(usize, usize)> {
+    let mut rng = Xoshiro256::seeded(seed ^ 0x9CA0);
+    let count = (2 * n).min(n * (n - 1) / 2).max(1);
+    let mut pairs = Vec::with_capacity(count);
+    for _ in 0..count {
+        let i = rng.range(0, n);
+        let j = rng.range(0, n);
+        let (i, j) = if i <= j { (i, j) } else { (j, i) };
+        pairs.push((i, j));
+    }
+    pairs.sort_unstable();
+    pairs.dedup();
+    pairs
+}
+
+/// Map inputs: (pair index, column block index).
+pub fn tasks(pairs: &[(usize, usize)], n: usize) -> Vec<(usize, usize)> {
+    let blocks = n.div_ceil(PC_BLOCK);
+    let mut v = Vec::with_capacity(pairs.len() * blocks);
+    for (pi, _) in pairs.iter().enumerate() {
+        for b in 0..blocks {
+            v.push((pi, b));
+        }
+    }
+    v
+}
+
+/// Shared map computation: one (pair, block) → `[Σa, Σb, Σab]` partial.
+fn map_block(
+    m: &MatrixData,
+    pairs: &[(usize, usize)],
+    backend: &Backend,
+    task: (usize, usize),
+    mut emit: impl FnMut(i64, Vec<f64>),
+) {
+    let (pi, blk) = task;
+    let (ri, rj) = pairs[pi];
+    let lo = blk * PC_BLOCK;
+    let hi = ((blk + 1) * PC_BLOCK).min(m.n);
+    let mut rows = vec![0.0f32; 2 * PC_BLOCK];
+    for (t, c) in (lo..hi).enumerate() {
+        rows[t] = m.data[ri * m.n + c];
+        rows[PC_BLOCK + t] = m.data[rj * m.n + c];
+    }
+    let p = backend.pca_pair(&rows);
+    emit(
+        (ri * m.n + rj) as i64,
+        vec![p[0] as f64, p[1] as f64, p[2] as f64],
+    );
+}
+
+pub fn reducer() -> RirReducer<i64, Vec<f64>> {
+    RirReducer::new(canon::sum_vec("pca.sumvec", 3))
+}
+
+pub fn run_mr4r(
+    m: &MatrixData,
+    pairs: &[(usize, usize)],
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    backend: &Backend,
+) -> (Vec<KeyValue<i64, Vec<f64>>>, FlowMetrics) {
+    let inputs = tasks(pairs, m.n);
+    let backend = backend.clone();
+    let mapper = move |task: &(usize, usize), em: &mut dyn Emitter<i64, Vec<f64>>| {
+        map_block(m, pairs, &backend, *task, |k, v| em.emit(k, v));
+    };
+    let r = reducer();
+    let cfg = cfg.clone().with_scratch_per_emit(24);
+    run_job(&mapper, &r, &inputs, &cfg, agent)
+}
+
+pub fn run_phoenix(
+    m: &MatrixData,
+    pairs: &[(usize, usize)],
+    threads: usize,
+    backend: &Backend,
+) -> Vec<(i64, Vec<f64>)> {
+    let inputs = tasks(pairs, m.n);
+    let backend = backend.clone();
+    let map = move |task: &(usize, usize), emit: &mut dyn FnMut(i64, Vec<f64>)| {
+        map_block(m, pairs, &backend, *task, |k, v| emit(k, v));
+    };
+    let reduce = |_k: &i64, vs: &[Vec<f64>]| {
+        let mut acc = vec![0.0; 3];
+        for v in vs {
+            for (a, b) in acc.iter_mut().zip(v) {
+                *a += b;
+            }
+        }
+        acc
+    };
+    let comb = |a: &mut Vec<f64>, b: &Vec<f64>| {
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+    };
+    PhoenixJob {
+        map: &map,
+        reduce: &reduce,
+        combiner: Some(&comb),
+    }
+    .run(&inputs, &PhoenixConfig::new(threads))
+}
+
+pub fn run_phoenixpp(
+    m: &MatrixData,
+    pairs: &[(usize, usize)],
+    threads: usize,
+    backend: &Backend,
+) -> Vec<(i64, Vec<f64>)> {
+    let inputs = tasks(pairs, m.n);
+    let backend = backend.clone();
+    let map = move |task: &(usize, usize), emit: &mut dyn FnMut(i64, Vec<f64>)| {
+        map_block(m, pairs, &backend, *task, |k, v| emit(k, v));
+    };
+    PppJob {
+        map: &map,
+        combiner: &SumOp,
+        container: &|| {
+            Box::new(HashContainer::<i64, Vec<f64>>::default())
+                as Box<dyn Container<i64, Vec<f64>>>
+        },
+        finalize: None,
+    }
+    .run(&inputs, threads)
+}
+
+/// Covariance of a pair from its summed partials.
+pub fn covariance(sums: &[f64], n: usize) -> f64 {
+    let nf = n as f64;
+    sums[2] / nf - (sums[0] / nf) * (sums[1] / nf)
+}
+
+/// Digest covariances (quantized).
+pub fn digest_cov(pairs: &[(i64, Vec<f64>)], n: usize) -> u64 {
+    let rows: Vec<(i64, f64)> = pairs
+        .iter()
+        .map(|(k, s)| (*k, (covariance(s, n) * 1e6).round() / 1e6))
+        .collect();
+    super::digest_pairs(&rows)
+}
+
+/// Suite workload: matrix + sampled pairs.
+pub struct PcWorkload {
+    pub matrix: MatrixData,
+    pub pairs: Vec<(usize, usize)>,
+}
+
+pub fn prepare(scale: f64, seed: u64) -> Arc<PcWorkload> {
+    let matrix = super::datagen::square_matrix(scale, seed);
+    let pairs = sample_pairs(matrix.n, seed);
+    Arc::new(PcWorkload { matrix, pairs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::OptimizeMode;
+    use crate::benchmarks::datagen;
+
+    #[test]
+    fn covariance_matches_direct_computation() {
+        let m = datagen::square_matrix(0.0003, 51);
+        let pairs = sample_pairs(m.n, 52);
+        let agent = OptimizerAgent::new();
+        let (out, flow) = run_mr4r(
+            &m,
+            &pairs,
+            &JobConfig::fast().with_threads(4),
+            &agent,
+            &Backend::Native,
+        );
+        assert_eq!(flow.flow.label(), "combine");
+        assert_eq!(out.len(), pairs.len());
+        // Spot-check one pair against a direct f64 computation.
+        let kv = &out[0];
+        let (ri, rj) = ((kv.key as usize) / m.n, (kv.key as usize) % m.n);
+        let a: Vec<f64> = (0..m.n).map(|c| m.data[ri * m.n + c] as f64).collect();
+        let b: Vec<f64> = (0..m.n).map(|c| m.data[rj * m.n + c] as f64).collect();
+        let n = m.n as f64;
+        let direct = a.iter().zip(&b).map(|(x, y)| x * y).sum::<f64>() / n
+            - (a.iter().sum::<f64>() / n) * (b.iter().sum::<f64>() / n);
+        let got = covariance(&kv.value, m.n);
+        assert!((got - direct).abs() < 1e-3, "{got} vs {direct}");
+    }
+
+    #[test]
+    fn frameworks_agree() {
+        let m = datagen::square_matrix(0.0003, 53);
+        let pairs = sample_pairs(m.n, 54);
+        let agent = OptimizerAgent::new();
+        let backend = Backend::Native;
+        let (mr, _) = run_mr4r(&m, &pairs, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let mr: Vec<(i64, Vec<f64>)> = mr.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        let d = digest_cov(&mr, m.n);
+        assert_eq!(d, digest_cov(&run_phoenix(&m, &pairs, 2, &backend), m.n));
+        assert_eq!(d, digest_cov(&run_phoenixpp(&m, &pairs, 2, &backend), m.n));
+
+        let (unopt, mu) = run_mr4r(
+            &m,
+            &pairs,
+            &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
+            &agent,
+            &backend,
+        );
+        assert_eq!(mu.flow.label(), "reduce");
+        let unopt: Vec<(i64, Vec<f64>)> =
+            unopt.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        assert_eq!(d, digest_cov(&unopt, m.n));
+    }
+
+    #[test]
+    fn pair_sampling_is_canonical() {
+        let pairs = sample_pairs(100, 7);
+        assert!(!pairs.is_empty());
+        assert!(pairs.iter().all(|&(i, j)| i <= j && j < 100));
+        let mut dedup = pairs.clone();
+        dedup.dedup();
+        assert_eq!(dedup.len(), pairs.len());
+    }
+}

@@ -1,0 +1,514 @@
+//! Uniform access to the seven benchmarks for the figure harness: prepare
+//! a [`Workload`] once (dataset generation + padding), then run it on any
+//! framework / thread count / optimizer mode and get a timed [`Outcome`]
+//! with a result digest for equivalence checking.
+
+use std::sync::Arc;
+
+use crate::api::config::{JobConfig, OptimizeMode};
+use crate::api::traits::{KeyKind, KeyValue};
+use crate::coordinator::pipeline::FlowMetrics;
+use crate::memsim::SimHeap;
+use crate::optimizer::agent::OptimizerAgent;
+use crate::util::timer::Stopwatch;
+
+use super::backend::Backend;
+use super::{
+    digest_pairs, histogram, kmeans, linear_regression, matrix_multiply, pca, string_match,
+    word_count,
+};
+
+/// Benchmark identifiers, in the paper's (alphabetical) order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BenchId {
+    HG,
+    KM,
+    LR,
+    MM,
+    PC,
+    SM,
+    WC,
+}
+
+impl BenchId {
+    pub const ALL: [BenchId; 7] = [
+        BenchId::HG,
+        BenchId::KM,
+        BenchId::LR,
+        BenchId::MM,
+        BenchId::PC,
+        BenchId::SM,
+        BenchId::WC,
+    ];
+
+    pub fn code(self) -> &'static str {
+        match self {
+            BenchId::HG => "HG",
+            BenchId::KM => "KM",
+            BenchId::LR => "LR",
+            BenchId::MM => "MM",
+            BenchId::PC => "PC",
+            BenchId::SM => "SM",
+            BenchId::WC => "WC",
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BenchId::HG => "Histogram",
+            BenchId::KM => "K-Means Clustering",
+            BenchId::LR => "Linear Regression",
+            BenchId::MM => "Matrix Multiply",
+            BenchId::PC => "Principal Component Analysis",
+            BenchId::SM => "String Match",
+            BenchId::WC => "Word Count",
+        }
+    }
+
+    pub fn from_code(s: &str) -> Option<BenchId> {
+        Self::ALL.iter().copied().find(|b| b.code().eq_ignore_ascii_case(s))
+    }
+
+    /// Table 2 key/value cardinality classes.
+    pub fn cardinality(self) -> (KeyKind, KeyKind) {
+        match self {
+            BenchId::HG => (KeyKind::Medium, KeyKind::Large),
+            BenchId::KM => (KeyKind::Small, KeyKind::Large),
+            BenchId::LR => (KeyKind::Small, KeyKind::Large),
+            BenchId::MM => (KeyKind::Medium, KeyKind::Medium),
+            BenchId::PC => (KeyKind::Medium, KeyKind::Medium),
+            BenchId::SM => (KeyKind::Small, KeyKind::Small),
+            BenchId::WC => (KeyKind::Large, KeyKind::Large),
+        }
+    }
+
+    /// Table 2 input description (at scale 1.0).
+    pub fn input_description(self) -> &'static str {
+        match self {
+            BenchId::HG => "1.4GB 24-bit bitmap image",
+            BenchId::KM => "500,000 3-d points (100 clusters)",
+            BenchId::LR => "3.5GB file",
+            BenchId::MM => "3,000 x 3,000 integer matrices",
+            BenchId::PC => "3,000 x 3,000 integer matrix",
+            BenchId::SM => "500MB key file",
+            BenchId::WC => "500MB text document",
+        }
+    }
+}
+
+/// Which framework executes the workload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Framework {
+    Mr4r,
+    Phoenix,
+    PhoenixPP,
+}
+
+impl Framework {
+    pub const ALL: [Framework; 3] = [Framework::Mr4r, Framework::Phoenix, Framework::PhoenixPP];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Framework::Mr4r => "mr4r",
+            Framework::Phoenix => "phoenix",
+            Framework::PhoenixPP => "phoenix++",
+        }
+    }
+}
+
+/// MR4R run parameters (baselines use only `threads`).
+#[derive(Clone)]
+pub struct RunParams {
+    pub threads: usize,
+    pub optimize: OptimizeMode,
+    /// Managed-heap simulation for the MR4R run. `None` → disabled heap
+    /// (pure-runtime comparisons); `Some` → GC accounting + pause
+    /// injection (the Java-cost-included comparisons of Figs. 6–10).
+    pub heap: Option<Arc<SimHeap>>,
+}
+
+impl RunParams {
+    pub fn fast(threads: usize) -> RunParams {
+        RunParams {
+            threads,
+            optimize: OptimizeMode::Auto,
+            heap: None,
+        }
+    }
+
+    pub fn with_optimize(mut self, m: OptimizeMode) -> Self {
+        self.optimize = m;
+        self
+    }
+
+    pub fn with_heap(mut self, h: Arc<SimHeap>) -> Self {
+        self.heap = Some(h);
+        self
+    }
+
+    fn job_config(&self) -> JobConfig {
+        let base = match &self.heap {
+            Some(h) => JobConfig::new().with_heap(Arc::clone(h)),
+            None => JobConfig::fast(),
+        };
+        base.with_threads(self.threads).with_optimize(self.optimize)
+    }
+}
+
+/// One timed run.
+#[derive(Clone, Debug)]
+pub struct Outcome {
+    pub secs: f64,
+    /// Order-independent result digest (cross-framework equivalence).
+    pub digest: u64,
+    /// MR4R-only job metrics.
+    pub metrics: Option<FlowMetrics>,
+}
+
+type Mr4rFn = Box<dyn Fn(&RunParams) -> Outcome + Send + Sync>;
+type BaselineFn = Box<dyn Fn(usize) -> Outcome + Send + Sync>;
+
+/// A prepared benchmark: dataset generated, ready to run repeatedly.
+pub struct Workload {
+    pub id: BenchId,
+    mr4r: Mr4rFn,
+    phoenix: BaselineFn,
+    phoenixpp: BaselineFn,
+    /// Map-phase emit volume at this scale (for Table 2 reporting).
+    pub approx_bytes: usize,
+}
+
+impl Workload {
+    pub fn run(&self, fw: Framework, params: &RunParams) -> Outcome {
+        match fw {
+            Framework::Mr4r => (self.mr4r)(params),
+            Framework::Phoenix => (self.phoenix)(params.threads),
+            Framework::PhoenixPP => (self.phoenixpp)(params.threads),
+        }
+    }
+}
+
+fn kv_to_pairs<K, V>(kv: Vec<KeyValue<K, V>>) -> Vec<(K, V)> {
+    kv.into_iter().map(|p| (p.key, p.value)).collect()
+}
+
+/// Generate the dataset for `id` and wrap it as a [`Workload`]. The agent
+/// is shared across runs of the same workload (per-class transformation
+/// caching, like a long-lived JVM).
+pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload {
+    let agent = OptimizerAgent::new();
+    match id {
+        BenchId::WC => {
+            let lines = Arc::new(super::datagen::wordcount_text(scale, seed));
+            let approx_bytes = lines.iter().map(|l| l.len()).sum();
+            let l1 = Arc::clone(&lines);
+            let l2 = Arc::clone(&lines);
+            let l3 = Arc::clone(&lines);
+            Workload {
+                id,
+                mr4r: Box::new(move |p| {
+                    let sw = Stopwatch::start();
+                    let (out, m) = word_count::run_mr4r(&l1, &p.job_config(), &agent);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&kv_to_pairs(out)),
+                        metrics: Some(m),
+                    }
+                }),
+                phoenix: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = word_count::run_phoenix(&l2, t);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                phoenixpp: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = word_count::run_phoenixpp(&l3, t);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                approx_bytes,
+            }
+        }
+        BenchId::HG => {
+            let pixels = Arc::new(super::datagen::histogram_pixels(scale, seed));
+            let approx_bytes = pixels.len();
+            let (p1, p2, p3) = (Arc::clone(&pixels), Arc::clone(&pixels), Arc::clone(&pixels));
+            let (b1, b2) = (backend.clone(), backend.clone());
+            Workload {
+                id,
+                mr4r: Box::new(move |p| {
+                    let sw = Stopwatch::start();
+                    let (out, m) = histogram::run_mr4r(&p1, &p.job_config(), &agent, &b1);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&kv_to_pairs(out)),
+                        metrics: Some(m),
+                    }
+                }),
+                phoenix: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = histogram::run_phoenix(&p2, t, &b2);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                phoenixpp: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = histogram::run_phoenixpp(&p3, t);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                approx_bytes,
+            }
+        }
+        BenchId::KM => {
+            let data = Arc::new(super::datagen::kmeans_points(scale, seed));
+            let approx_bytes = data.points.len() * 24;
+            let (d1, d2, d3) = (Arc::clone(&data), Arc::clone(&data), Arc::clone(&data));
+            let (b1, b2, b3) = (backend.clone(), backend.clone(), backend.clone());
+            Workload {
+                id,
+                mr4r: Box::new(move |p| {
+                    let sw = Stopwatch::start();
+                    let (cents, m) = kmeans::run_mr4r(&d1, &p.job_config(), &agent, &b1);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: kmeans::digest_centroids(&cents),
+                        metrics: Some(m),
+                    }
+                }),
+                phoenix: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let cents = kmeans::run_phoenix(&d2, t, &b2);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: kmeans::digest_centroids(&cents),
+                        metrics: None,
+                    }
+                }),
+                phoenixpp: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let cents = kmeans::run_phoenixpp(&d3, t, &b3);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: kmeans::digest_centroids(&cents),
+                        metrics: None,
+                    }
+                }),
+                approx_bytes,
+            }
+        }
+        BenchId::LR => {
+            let pts = Arc::new(super::datagen::linreg_points(scale, seed));
+            let n = pts.len();
+            let approx_bytes = n * 16;
+            let (p1, p2, p3) = (Arc::clone(&pts), Arc::clone(&pts), Arc::clone(&pts));
+            let (b1, b2, b3) = (backend.clone(), backend.clone(), backend.clone());
+            Workload {
+                id,
+                mr4r: Box::new(move |p| {
+                    let sw = Stopwatch::start();
+                    let (out, m) =
+                        linear_regression::run_mr4r(&p1, &p.job_config(), &agent, &b1);
+                    let out = kv_to_pairs(out);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: linear_regression::digest_fit(&out, n),
+                        metrics: Some(m),
+                    }
+                }),
+                phoenix: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = linear_regression::run_phoenix(&p2, t, &b2);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: linear_regression::digest_fit(&out, n),
+                        metrics: None,
+                    }
+                }),
+                phoenixpp: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = linear_regression::run_phoenixpp(&p3, t, &b3);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: linear_regression::digest_fit(&out, n),
+                        metrics: None,
+                    }
+                }),
+                approx_bytes,
+            }
+        }
+        BenchId::MM => {
+            let w = matrix_multiply::prepare(scale, seed);
+            let approx_bytes = w.a.data.len() * 4 * 2;
+            let (w1, w2, w3) = (Arc::clone(&w), Arc::clone(&w), Arc::clone(&w));
+            let (b1, b2, b3) = (backend.clone(), backend.clone(), backend.clone());
+            Workload {
+                id,
+                mr4r: Box::new(move |p| {
+                    let sw = Stopwatch::start();
+                    let (out, m) =
+                        matrix_multiply::run_mr4r(&w1.a, &w1.b, &p.job_config(), &agent, &b1);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&kv_to_pairs(out)),
+                        metrics: Some(m),
+                    }
+                }),
+                phoenix: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = matrix_multiply::run_phoenix(&w2.a, &w2.b, t, &b2);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                phoenixpp: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = matrix_multiply::run_phoenixpp(&w3.a, &w3.b, t, &b3);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                approx_bytes,
+            }
+        }
+        BenchId::PC => {
+            let w = pca::prepare(scale, seed);
+            let n = w.matrix.n;
+            let approx_bytes = w.matrix.data.len() * 4;
+            let (w1, w2, w3) = (Arc::clone(&w), Arc::clone(&w), Arc::clone(&w));
+            let (b1, b2, b3) = (backend.clone(), backend.clone(), backend.clone());
+            Workload {
+                id,
+                mr4r: Box::new(move |p| {
+                    let sw = Stopwatch::start();
+                    let (out, m) =
+                        pca::run_mr4r(&w1.matrix, &w1.pairs, &p.job_config(), &agent, &b1);
+                    let out = kv_to_pairs(out);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: pca::digest_cov(&out, n),
+                        metrics: Some(m),
+                    }
+                }),
+                phoenix: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = pca::run_phoenix(&w2.matrix, &w2.pairs, t, &b2);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: pca::digest_cov(&out, n),
+                        metrics: None,
+                    }
+                }),
+                phoenixpp: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = pca::run_phoenixpp(&w3.matrix, &w3.pairs, t, &b3);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: pca::digest_cov(&out, n),
+                        metrics: None,
+                    }
+                }),
+                approx_bytes,
+            }
+        }
+        BenchId::SM => {
+            let data = string_match::prepare(scale, seed);
+            let approx_bytes = data.haystack.iter().map(|l| l.len()).sum();
+            let (d1, d2, d3) = (Arc::clone(&data), Arc::clone(&data), Arc::clone(&data));
+            Workload {
+                id,
+                mr4r: Box::new(move |p| {
+                    let sw = Stopwatch::start();
+                    let (out, m) = string_match::run_mr4r(&d1, &p.job_config(), &agent);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&kv_to_pairs(out)),
+                        metrics: Some(m),
+                    }
+                }),
+                phoenix: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = string_match::run_phoenix(&d2, t);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                phoenixpp: Box::new(move |t| {
+                    let sw = Stopwatch::start();
+                    let out = string_match::run_phoenixpp(&d3, t);
+                    Outcome {
+                        secs: sw.secs(),
+                        digest: digest_pairs(&out),
+                        metrics: None,
+                    }
+                }),
+                approx_bytes,
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip() {
+        for id in BenchId::ALL {
+            assert_eq!(BenchId::from_code(id.code()), Some(id));
+            assert_eq!(BenchId::from_code(&id.code().to_lowercase()), Some(id));
+        }
+        assert_eq!(BenchId::from_code("XX"), None);
+    }
+
+    #[test]
+    fn every_workload_agrees_across_frameworks() {
+        // Tiny scale smoke across the whole suite — the heavyweight
+        // equivalence tests live per-benchmark and in rust/tests/.
+        for id in BenchId::ALL {
+            let w = prepare(id, 0.0002, 77, Backend::Native);
+            let p = RunParams::fast(2);
+            let mr = w.run(Framework::Mr4r, &p);
+            let ph = w.run(Framework::Phoenix, &p);
+            let pp = w.run(Framework::PhoenixPP, &p);
+            assert_eq!(mr.digest, ph.digest, "{}: mr4r vs phoenix", id.code());
+            assert_eq!(mr.digest, pp.digest, "{}: mr4r vs phoenix++", id.code());
+            assert!(mr.metrics.is_some());
+            assert!(mr.secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn optimizer_off_same_digest() {
+        for id in [BenchId::WC, BenchId::SM] {
+            let w = prepare(id, 0.0002, 78, Backend::Native);
+            let on = w.run(Framework::Mr4r, &RunParams::fast(2));
+            let off = w.run(
+                Framework::Mr4r,
+                &RunParams::fast(2).with_optimize(OptimizeMode::Off),
+            );
+            assert_eq!(on.digest, off.digest, "{}", id.code());
+            assert_eq!(on.metrics.unwrap().flow.label(), "combine");
+            assert_eq!(off.metrics.unwrap().flow.label(), "reduce");
+        }
+    }
+}

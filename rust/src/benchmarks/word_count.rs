@@ -1,0 +1,121 @@
+//! Word Count (WC) — the paper's running example (Figures 1–4).
+//!
+//! Large keys × Large values: the workload where intermediate-value
+//! allocation hurts most and the optimizer gains most (Figures 8–10).
+
+use crate::api::reducers::RirReducer;
+use crate::api::traits::{Emitter, KeyValue};
+use crate::api::JobConfig;
+use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
+use crate::baselines::phoenixpp::Container;
+use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::builder::canon;
+
+/// Simulated short-lived bytes per emit: the per-line `toUpperCase` copy,
+/// the `Matcher` state, the `group()` string, the boxed `1`, and iterator
+/// objects of Figure 2's mapper — a few hundred bytes of nursery churn per
+/// token in a real JVM (Figure 8's measured churn backs this up).
+pub const WC_SCRATCH_PER_EMIT: u64 = 384;
+
+/// The MR4R mapper (shared verbatim with the baselines' map closures).
+pub fn map_line(line: &String, emitter: &mut dyn Emitter<String, i64>) {
+    for w in line.split_ascii_whitespace() {
+        emitter.emit(w.to_string(), 1);
+    }
+}
+
+/// The reducer — RIR `sum_i64`, the program Figure 4 transforms.
+pub fn reducer() -> RirReducer<String, i64> {
+    RirReducer::new(canon::sum_i64("wordcount.sum"))
+}
+
+pub fn run_mr4r(
+    lines: &[String],
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+) -> (Vec<KeyValue<String, i64>>, FlowMetrics) {
+    let cfg = cfg.clone().with_scratch_per_emit(WC_SCRATCH_PER_EMIT);
+    let r = reducer();
+    run_job(&map_line, &r, lines, &cfg, agent)
+}
+
+pub fn run_phoenix(lines: &[String], threads: usize) -> Vec<(String, i64)> {
+    let map = |line: &String, emit: &mut dyn FnMut(String, i64)| {
+        for w in line.split_ascii_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    };
+    let reduce = |_k: &String, vs: &[i64]| vs.iter().sum::<i64>();
+    // The hand-written combiner Phoenix ships for WC (paper §2.3: user
+    // code duplicated into the combiner).
+    let comb = |a: &mut i64, b: &i64| *a += *b;
+    PhoenixJob {
+        map: &map,
+        reduce: &reduce,
+        combiner: Some(&comb),
+    }
+    .run(lines, &PhoenixConfig::new(threads))
+}
+
+pub fn run_phoenixpp(lines: &[String], threads: usize) -> Vec<(String, i64)> {
+    let map = |line: &String, emit: &mut dyn FnMut(String, i64)| {
+        for w in line.split_ascii_whitespace() {
+            emit(w.to_string(), 1);
+        }
+    };
+    PppJob {
+        map: &map,
+        combiner: &SumOp,
+        container: &|| {
+            Box::new(HashContainer::<String, i64>::default())
+                as Box<dyn Container<String, i64>>
+        },
+        finalize: None,
+    }
+    .run(lines, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::OptimizeMode;
+    use crate::benchmarks::{datagen, digest_pairs};
+
+    fn kv_pairs(kv: Vec<KeyValue<String, i64>>) -> Vec<(String, i64)> {
+        kv.into_iter().map(|p| (p.key, p.value)).collect()
+    }
+
+    #[test]
+    fn all_frameworks_and_flows_agree() {
+        let lines = datagen::wordcount_text(0.0005, 11);
+        let agent = OptimizerAgent::new();
+        let (opt, m_opt) = run_mr4r(
+            &lines,
+            &JobConfig::fast().with_threads(4),
+            &agent,
+        );
+        let (unopt, m_unopt) = run_mr4r(
+            &lines,
+            &JobConfig::fast().with_threads(4).with_optimize(OptimizeMode::Off),
+            &agent,
+        );
+        assert_eq!(m_opt.flow.label(), "combine");
+        assert_eq!(m_unopt.flow.label(), "reduce");
+        let d = digest_pairs(&kv_pairs(opt));
+        assert_eq!(d, digest_pairs(&kv_pairs(unopt)));
+        assert_eq!(d, digest_pairs(&run_phoenix(&lines, 4)));
+        assert_eq!(d, digest_pairs(&run_phoenixpp(&lines, 4)));
+    }
+
+    #[test]
+    fn counts_sum_to_word_total() {
+        let lines = datagen::wordcount_text(0.0003, 3);
+        let total_words: usize = lines.iter().map(|l| l.split(' ').count()).sum();
+        let agent = OptimizerAgent::new();
+        let (out, m) = run_mr4r(&lines, &JobConfig::fast().with_threads(2), &agent);
+        let sum: i64 = out.iter().map(|kv| kv.value).sum();
+        assert_eq!(sum as usize, total_words);
+        assert_eq!(m.emits as usize, total_words);
+    }
+}

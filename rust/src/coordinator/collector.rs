@@ -1,0 +1,309 @@
+//! The intermediate (key, value) collector — "the thread-safe hash table"
+//! at the center of MR4J's design (§2.4), in its two forms:
+//!
+//! * [`ListCollector`] — the original execution flow: "a new key would
+//!   instantiate a new list to collect values". Every emit appends a boxed
+//!   value to the key's list; the whole population stays live until the
+//!   reduce phase consumes it — the allocation behaviour behind Figure 8.
+//! * [`HolderCollector`] — the optimized flow: "a new key will instantiate
+//!   a new holder and the value will be combined with the intermediate
+//!   value held". One holder per key; emits mutate in place — Figure 9.
+//!
+//! Both are sharded by key hash: emit locks only the shard owning the key,
+//! so the map phase scales while preserving the shared-table semantics the
+//! paper describes (as opposed to Phoenix's per-thread tables merged
+//! later — that design lives in [`crate::baselines::phoenix`]).
+
+use std::hash::Hash;
+use std::sync::Mutex;
+
+use crate::api::traits::HeapSized;
+use crate::memsim::{CohortId, ThreadAlloc};
+use crate::optimizer::combiner::{Combiner, Holder};
+use crate::optimizer::value::Val;
+use crate::util::hash::{fxhash, FxHashMap};
+
+/// Simulated per-element overhead beyond the boxed payload: the
+/// `ArrayList` slot, the amortized growth garbage of the backing array,
+/// and object alignment. Calibrated against the paper's Figure 8, whose
+/// measured WC heap churn is ~10 GB for ~70M intermediate values
+/// (≈140 B/value total; our 16 B payload + 32 B overhead is conservative).
+pub const LIST_SLOT_BYTES: u64 = 32;
+
+/// Memsim cohorts the collectors charge allocations to.
+#[derive(Clone, Copy, Debug)]
+pub struct CollectorCohorts {
+    /// Key objects interned into the table.
+    pub keys: CohortId,
+    /// Boxed intermediate values + list slots (reduce flow).
+    pub intermediate: CohortId,
+    /// Per-key holders (combining flow).
+    pub holders: CohortId,
+}
+
+/// Pick a shard count: enough shards that `threads` workers rarely collide
+/// (power of two for mask indexing).
+pub fn shard_count(threads: usize) -> usize {
+    (threads * 16).next_power_of_two().max(16)
+}
+
+#[inline]
+fn shard_of(hash: u64, n_shards: usize) -> usize {
+    // High bits: FxHash's low bits are weaker.
+    (hash >> 48) as usize & (n_shards - 1)
+}
+
+// ---------------------------------------------------------------------
+// Reduce-flow collector: key → Vec<V>
+// ---------------------------------------------------------------------
+
+/// Sharded key → value-list table.
+pub struct ListCollector<K, V> {
+    shards: Vec<Mutex<FxHashMap<K, Vec<V>>>>,
+}
+
+impl<K: Hash + Eq + HeapSized, V: HeapSized> ListCollector<K, V> {
+    pub fn new(n_shards: usize) -> Self {
+        let n = n_shards.next_power_of_two().max(1);
+        ListCollector {
+            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
+        }
+    }
+
+    /// Append `v` to `k`'s list, charging the allocation to the memsim
+    /// cohorts (one boxed value + list slot per emit; key bytes on first
+    /// sight — the exact lifetime pattern the paper's Figure 8 explains).
+    pub fn emit(&self, k: K, v: V, alloc: &mut ThreadAlloc, cohorts: &CollectorCohorts) {
+        let value_bytes = v.heap_bytes() + LIST_SLOT_BYTES;
+        let shard = shard_of(fxhash(&k), self.shards.len());
+        let mut map = self.shards[shard].lock().unwrap();
+        // Single-probe entry API: one hash + one lookup per emit (§Perf).
+        match map.entry(k) {
+            std::collections::hash_map::Entry::Occupied(mut e) => e.get_mut().push(v),
+            std::collections::hash_map::Entry::Vacant(e) => {
+                alloc.alloc(cohorts.keys, e.key().heap_bytes() + 48); // key + entry
+                e.insert(vec![v]);
+            }
+        }
+        drop(map);
+        alloc.alloc(cohorts.intermediate, value_bytes);
+    }
+
+    /// Number of distinct keys.
+    pub fn key_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Total collected values.
+    pub fn value_count(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().map(Vec::len).sum::<usize>())
+            .sum()
+    }
+
+    /// Take the shard maps out for the (parallel, per-shard) reduce phase.
+    pub fn into_shards(self) -> Vec<FxHashMap<K, Vec<V>>> {
+        self.shards
+            .into_iter()
+            .map(|s| s.into_inner().unwrap())
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Combine-flow collector: key → Holder
+// ---------------------------------------------------------------------
+
+/// Sharded key → holder table driven by a generated [`Combiner`].
+pub struct HolderCollector<K> {
+    shards: Vec<Mutex<FxHashMap<K, Holder>>>,
+    combiner: Combiner,
+}
+
+impl<K: Hash + Eq + HeapSized> HolderCollector<K> {
+    pub fn new(n_shards: usize, combiner: Combiner) -> Self {
+        let n = n_shards.next_power_of_two().max(1);
+        HolderCollector {
+            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            combiner,
+        }
+    }
+
+    pub fn combiner(&self) -> &Combiner {
+        &self.combiner
+    }
+
+    /// Combine `v` into `k`'s holder (creating it on first sight — the only
+    /// allocation this flow performs per key).
+    pub fn emit(&self, k: K, v: Val, alloc: &mut ThreadAlloc, cohorts: &CollectorCohorts) {
+        let shard = shard_of(fxhash(&k), self.shards.len());
+        let mut map = self.shards[shard].lock().unwrap();
+        match map.entry(k) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                self.combiner
+                    .combine(e.get_mut(), &v)
+                    .expect("verified combiner on well-typed values");
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let mut holder = self.combiner.initialize();
+                self.combiner
+                    .combine(&mut holder, &v)
+                    .expect("verified combiner on well-typed values");
+                alloc.alloc(cohorts.keys, e.key().heap_bytes() + 48);
+                alloc.alloc(cohorts.holders, holder.heap_bytes());
+                e.insert(holder);
+            }
+        }
+    }
+
+    pub fn key_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    /// Take the shard maps out for the (parallel) finalization phase.
+    pub fn into_shards(self) -> (Vec<FxHashMap<K, Holder>>, Combiner) {
+        (
+            self.shards
+                .into_iter()
+                .map(|s| s.into_inner().unwrap())
+                .collect(),
+            self.combiner,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::SimHeap;
+    use crate::optimizer::{agent::OptimizerAgent, builder::canon};
+
+    fn cohorts(heap: &std::sync::Arc<SimHeap>) -> CollectorCohorts {
+        CollectorCohorts {
+            keys: heap.cohort("keys"),
+            intermediate: heap.cohort("intermediate"),
+            holders: heap.cohort("holders"),
+        }
+    }
+
+    #[test]
+    fn list_collector_groups_by_key() {
+        let heap = SimHeap::disabled();
+        let c = cohorts(&heap);
+        let mut a = heap.thread_alloc();
+        let col: ListCollector<String, i64> = ListCollector::new(8);
+        for i in 0..100i64 {
+            col.emit(format!("k{}", i % 10), i, &mut a, &c);
+        }
+        assert_eq!(col.key_count(), 10);
+        assert_eq!(col.value_count(), 100);
+        let shards = col.into_shards();
+        let total: i64 = shards
+            .iter()
+            .flat_map(|m| m.values())
+            .flat_map(|v| v.iter())
+            .sum();
+        assert_eq!(total, (0..100).sum::<i64>());
+    }
+
+    #[test]
+    fn list_collector_accounts_per_value() {
+        let heap = SimHeap::new(crate::memsim::HeapParams::no_injection());
+        let c = cohorts(&heap);
+        let mut a = heap.thread_alloc();
+        let col: ListCollector<i64, i64> = ListCollector::new(8);
+        for i in 0..1000i64 {
+            col.emit(i % 4, 1, &mut a, &c);
+        }
+        a.flush();
+        // 1000 values × (16 + slot) + 4 keys.
+        let s = heap.stats();
+        assert!(s.allocated_objects >= 1000);
+        assert!(s.allocated_bytes >= 1000 * (16 + LIST_SLOT_BYTES));
+    }
+
+    #[test]
+    fn holder_collector_combines_incrementally() {
+        let heap = SimHeap::disabled();
+        let c = cohorts(&heap);
+        let mut a = heap.thread_alloc();
+        let agent = OptimizerAgent::new();
+        let combiner = agent
+            .process(&canon::sum_i64("s"))
+            .combiner()
+            .cloned()
+            .unwrap();
+        let col: HolderCollector<String> = HolderCollector::new(8, combiner);
+        for i in 0..100i64 {
+            col.emit(format!("k{}", i % 5), Val::I64(i), &mut a, &c);
+        }
+        assert_eq!(col.key_count(), 5);
+        let (shards, combiner) = col.into_shards();
+        let mut total = 0i64;
+        for m in shards {
+            for (k, h) in m {
+                let v = combiner.finalize(h, &Val::Str(k)).unwrap();
+                total += v.as_i64().unwrap();
+            }
+        }
+        assert_eq!(total, (0..100).sum::<i64>());
+    }
+
+    #[test]
+    fn holder_collector_allocates_per_key_not_per_value() {
+        let heap = SimHeap::new(crate::memsim::HeapParams::no_injection());
+        let c = cohorts(&heap);
+        let mut a = heap.thread_alloc();
+        let agent = OptimizerAgent::new();
+        let combiner = agent
+            .process(&canon::sum_i64("s"))
+            .combiner()
+            .cloned()
+            .unwrap();
+        let col: HolderCollector<i64> = HolderCollector::new(8, combiner);
+        for i in 0..10_000i64 {
+            col.emit(i % 8, Val::I64(1), &mut a, &c);
+        }
+        a.flush();
+        let s = heap.stats();
+        // 8 keys → 16 allocations (key + holder), not 10 000.
+        assert!(
+            s.allocated_objects <= 32,
+            "combining flow must allocate per key: {} objects",
+            s.allocated_objects
+        );
+    }
+
+    #[test]
+    fn concurrent_emits_preserve_every_value() {
+        use std::sync::Arc;
+        let heap = SimHeap::disabled();
+        let c = cohorts(&heap);
+        let col: Arc<ListCollector<u64, i64>> = Arc::new(ListCollector::new(32));
+        let threads = 8;
+        let per = 5_000u64;
+        std::thread::scope(|s| {
+            for t in 0..threads {
+                let col = Arc::clone(&col);
+                let heap = Arc::clone(&heap);
+                let c = c;
+                s.spawn(move || {
+                    let mut a = heap.thread_alloc();
+                    for i in 0..per {
+                        col.emit((t * per + i) % 97, 1, &mut a, &c);
+                    }
+                });
+            }
+        });
+        assert_eq!(col.value_count() as u64, threads * per);
+        assert_eq!(col.key_count(), 97);
+    }
+
+    #[test]
+    fn shard_count_is_pow2_and_scales() {
+        assert!(shard_count(1) >= 16);
+        assert!(shard_count(8).is_power_of_two());
+        assert!(shard_count(64) >= 64);
+    }
+}

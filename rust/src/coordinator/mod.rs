@@ -1,0 +1,28 @@
+//! The MR4R runtime coordinator — scheduling, input splitting, intermediate
+//! collection, and the two execution flows.
+//!
+//! The paper's §2.4 names the two central design elements: "the scheduler
+//! and the collector of intermediate (key, value) pairs". Here:
+//!
+//! * [`scheduler`] — a from-scratch work-stealing task pool (the JDK
+//!   ForkJoinPool stand-in; nothing like rayon exists in the offline vendor
+//!   set, and the paper's framing makes the scheduler part of the system
+//!   anyway).
+//! * [`splitter`] — input chunking: "the input is split and individually
+//!   passed as an argument to the map method".
+//! * [`collector`] — the thread-safe hash table of intermediate pairs, in
+//!   two modes: per-key value **lists** (reduce flow) and per-key
+//!   **holders** (combining flow). Sharded by key hash to keep lock
+//!   contention off the emit hot path.
+//! * [`pipeline`] — drives map → (reduce | finalize) with phase barriers,
+//!   memsim accounting, and per-phase metrics.
+
+pub mod collector;
+pub mod pipeline;
+pub mod scheduler;
+pub mod splitter;
+
+pub use collector::{HolderCollector, ListCollector};
+pub use pipeline::{run_job, FlowMetrics};
+pub use scheduler::TaskPool;
+pub use splitter::split_indices;

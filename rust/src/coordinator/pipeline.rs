@@ -1,0 +1,545 @@
+//! The phase driver: map → barrier → (reduce | finalize) → results.
+//!
+//! This is where the two execution flows of the paper materialize:
+//!
+//! * **Reduce flow** (original): map tasks emit into a [`ListCollector`];
+//!   after the barrier, reduce tasks interpret the user's reducer over each
+//!   key's value list. Intermediate values live from emit until their key
+//!   is reduced — the whole map phase at minimum — which is what promotes
+//!   them into the old generation in the memsim.
+//! * **Combine flow** (optimized): map tasks emit into a
+//!   [`HolderCollector`] that applies the generated combiner at emit time;
+//!   after the barrier, finalize tasks convert holders into results. The
+//!   reduce phase is *gone* — paper §3's headline transformation.
+
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::collector::{shard_count, CollectorCohorts, HolderCollector, ListCollector};
+use super::scheduler::{PoolStats, TaskPool};
+use super::splitter::split_indices;
+use crate::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
+use crate::api::traits::{Emitter, HeapSized, KeyValue, Mapper, Reducer};
+use crate::memsim::{CohortId, GcStats, ThreadAlloc};
+use crate::optimizer::agent::{Decision, OptimizerAgent};
+use crate::optimizer::value::RirValue;
+use crate::util::timer::Stopwatch;
+
+/// Per-job measurements (the figures are built from these).
+#[derive(Clone, Debug)]
+pub struct FlowMetrics {
+    /// Which flow ran.
+    pub flow: ExecutionFlow,
+    /// Why the combine flow was not taken (when it wasn't).
+    pub fallback_reason: Option<String>,
+    pub map_secs: f64,
+    /// Reduce (or finalize) phase time.
+    pub reduce_secs: f64,
+    pub total_secs: f64,
+    /// Map-phase emits.
+    pub emits: u64,
+    /// Distinct intermediate keys.
+    pub keys: u64,
+    /// Result pairs produced.
+    pub results: u64,
+    /// GC activity during this job (delta of the shared heap's stats).
+    pub gc: GcStats,
+    /// Map-phase scheduling stats.
+    pub map_pool: PoolStats,
+}
+
+/// The memsim cohorts a job charges.
+struct JobCohorts {
+    collector: CollectorCohorts,
+    scratch: CohortId,
+    results: CohortId,
+}
+
+fn job_cohorts(cfg: &JobConfig) -> JobCohorts {
+    JobCohorts {
+        collector: CollectorCohorts {
+            keys: cfg.heap.cohort("mr4r.keys"),
+            intermediate: cfg.heap.cohort("mr4r.intermediate"),
+            holders: cfg.heap.cohort("mr4r.holders"),
+        },
+        scratch: cfg.heap.cohort("mr4r.scratch"),
+        results: cfg.heap.cohort("mr4r.results"),
+    }
+}
+
+/// Run a complete MapReduce job. The agent decides the flow; results are
+/// identical either way (asserted extensively in `rust/tests/`).
+pub fn run_job<I, K, V>(
+    mapper: &dyn Mapper<I, K, V>,
+    reducer: &dyn Reducer<K, V>,
+    inputs: &[I],
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+) -> (Vec<KeyValue<K, V>>, FlowMetrics)
+where
+    I: Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    // --- Flow decision (the "class load time" hook) -------------------
+    let decision = match (cfg.optimize, reducer.rir()) {
+        (OptimizeMode::Off, _) => None,
+        (_, None) => {
+            agent.note_opaque();
+            Some(Decision::Opaque)
+        }
+        (mode, Some(program)) => {
+            let d = agent.process(program);
+            match (mode, d) {
+                (OptimizeMode::GenericOnly, Decision::Combine(c)) => {
+                    Some(Decision::Combine(c.without_fast_path()))
+                }
+                (_, d) => Some(d),
+            }
+        }
+    };
+
+    match decision {
+        Some(Decision::Combine(combiner)) => {
+            run_combine_flow(mapper, inputs, cfg, combiner, None)
+        }
+        Some(Decision::Fallback(reason)) => {
+            run_reduce_flow(mapper, reducer, inputs, cfg, Some(reason.to_string()))
+        }
+        Some(Decision::Opaque) => {
+            run_reduce_flow(mapper, reducer, inputs, cfg, Some("opaque reducer".into()))
+        }
+        None => run_reduce_flow(mapper, reducer, inputs, cfg, Some("optimizer off".into())),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Map-phase emitters
+// ---------------------------------------------------------------------
+
+/// Emitter backing the original flow: append to the key's value list.
+struct ListEmitter<'a, K: Hash + Eq + HeapSized, V: HeapSized> {
+    collector: &'a ListCollector<K, V>,
+    alloc: ThreadAlloc,
+    cohorts: CollectorCohorts,
+    scratch: CohortId,
+    scratch_per_emit: u64,
+    emits: u64,
+}
+
+impl<K: Hash + Eq + HeapSized, V: HeapSized> Emitter<K, V> for ListEmitter<'_, K, V> {
+    #[inline]
+    fn emit(&mut self, key: K, value: V) {
+        if self.scratch_per_emit > 0 {
+            self.alloc.scratch(self.scratch, self.scratch_per_emit);
+        }
+        self.collector
+            .emit(key, value, &mut self.alloc, &self.cohorts);
+        self.emits += 1;
+    }
+}
+
+/// Emitter backing the optimized flow: combine into the key's holder.
+struct CombineEmitter<'a, K: Hash + Eq + HeapSized, V: RirValue> {
+    collector: &'a HolderCollector<K>,
+    alloc: ThreadAlloc,
+    cohorts: CollectorCohorts,
+    scratch: CohortId,
+    scratch_per_emit: u64,
+    emits: u64,
+    _v: std::marker::PhantomData<fn(V)>,
+}
+
+impl<K: Hash + Eq + HeapSized, V: RirValue> Emitter<K, V> for CombineEmitter<'_, K, V> {
+    #[inline]
+    fn emit(&mut self, key: K, value: V) {
+        if self.scratch_per_emit > 0 {
+            self.alloc.scratch(self.scratch, self.scratch_per_emit);
+        }
+        self.collector
+            .emit(key, value.into_val(), &mut self.alloc, &self.cohorts);
+        self.emits += 1;
+    }
+}
+
+/// Result emitter used by reduce/finalize tasks.
+struct ResultEmitter<K, V> {
+    out: Vec<KeyValue<K, V>>,
+}
+
+impl<K, V> Emitter<K, V> for ResultEmitter<K, V> {
+    fn emit(&mut self, key: K, value: V) {
+        self.out.push(KeyValue::new(key, value));
+    }
+}
+
+// ---------------------------------------------------------------------
+// The two flows
+// ---------------------------------------------------------------------
+
+fn run_reduce_flow<I, K, V>(
+    mapper: &dyn Mapper<I, K, V>,
+    reducer: &dyn Reducer<K, V>,
+    inputs: &[I],
+    cfg: &JobConfig,
+    fallback_reason: Option<String>,
+) -> (Vec<KeyValue<K, V>>, FlowMetrics)
+where
+    I: Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    let total_sw = Stopwatch::start();
+    let cohorts = job_cohorts(cfg);
+    let gc_before = cfg.heap.stats();
+    let pool = TaskPool::new(cfg.threads);
+    let collector: ListCollector<K, V> = ListCollector::new(shard_count(cfg.threads));
+    let emits = AtomicU64::new(0);
+
+    // ---- Map phase ----
+    let map_sw = Stopwatch::start();
+    let chunks = split_indices(inputs.len(), cfg.threads * cfg.tasks_per_thread);
+    let map_pool = pool.run(
+        chunks
+            .into_iter()
+            .map(|range| {
+                let collector = &collector;
+                let emits = &emits;
+                let cohorts = &cohorts;
+                move |_wid: usize| {
+                    let mut em = ListEmitter {
+                        collector,
+                        alloc: cfg.heap.thread_alloc(),
+                        cohorts: cohorts.collector,
+                        scratch: cohorts.scratch,
+                        scratch_per_emit: cfg.scratch_per_emit,
+                        emits: 0,
+                    };
+                    for input in &inputs[range] {
+                        mapper.map(input, &mut em);
+                    }
+                    em.alloc.flush();
+                    emits.fetch_add(em.emits, Ordering::Relaxed);
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    let map_secs = map_sw.secs();
+
+    // ---- Barrier; reduce phase over shards ----
+    let reduce_sw = Stopwatch::start();
+    let keys = collector.key_count() as u64;
+    let shards = collector.into_shards();
+    let results: Mutex<Vec<KeyValue<K, V>>> = Mutex::new(Vec::new());
+    pool.run(
+        shards
+            .into_iter()
+            .map(|shard| {
+                let results = &results;
+                let cohorts = &cohorts;
+                move |_wid: usize| {
+                    let mut alloc = cfg.heap.thread_alloc();
+                    let mut em = ResultEmitter { out: Vec::new() };
+                    for (k, values) in shard {
+                        reducer.reduce(&k, &values, &mut em);
+                        // The key's list dies once reduced (paper Fig. 1:
+                        // values are consumed by the reduce method).
+                        let bytes: u64 = values
+                            .iter()
+                            .map(|v| v.heap_bytes() + super::collector::LIST_SLOT_BYTES)
+                            .sum();
+                        alloc.free(cohorts.collector.intermediate, bytes);
+                    }
+                    for kv in &em.out {
+                        alloc.alloc(cohorts.results, kv.value.heap_bytes());
+                    }
+                    alloc.flush();
+                    results.lock().unwrap().extend(em.out);
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    let reduce_secs = reduce_sw.secs();
+
+    let results = results.into_inner().unwrap();
+    finish_job(cfg, &cohorts);
+    let metrics = FlowMetrics {
+        flow: ExecutionFlow::Reduce,
+        fallback_reason,
+        map_secs,
+        reduce_secs,
+        total_secs: total_sw.secs(),
+        emits: emits.load(Ordering::Relaxed),
+        keys,
+        results: results.len() as u64,
+        gc: cfg.heap.stats().since(&gc_before),
+        map_pool,
+    };
+    (results, metrics)
+}
+
+fn run_combine_flow<I, K, V>(
+    mapper: &dyn Mapper<I, K, V>,
+    inputs: &[I],
+    cfg: &JobConfig,
+    combiner: crate::optimizer::combiner::Combiner,
+    fallback_reason: Option<String>,
+) -> (Vec<KeyValue<K, V>>, FlowMetrics)
+where
+    I: Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    let total_sw = Stopwatch::start();
+    let cohorts = job_cohorts(cfg);
+    let gc_before = cfg.heap.stats();
+    let pool = TaskPool::new(cfg.threads);
+    let collector: HolderCollector<K> =
+        HolderCollector::new(shard_count(cfg.threads), combiner);
+    let emits = AtomicU64::new(0);
+
+    // ---- Map phase (combining at emit time) ----
+    let map_sw = Stopwatch::start();
+    let chunks = split_indices(inputs.len(), cfg.threads * cfg.tasks_per_thread);
+    let map_pool = pool.run(
+        chunks
+            .into_iter()
+            .map(|range| {
+                let collector = &collector;
+                let emits = &emits;
+                let cohorts = &cohorts;
+                move |_wid: usize| {
+                    let mut em: CombineEmitter<'_, K, V> = CombineEmitter {
+                        collector,
+                        alloc: cfg.heap.thread_alloc(),
+                        cohorts: cohorts.collector,
+                        scratch: cohorts.scratch,
+                        scratch_per_emit: cfg.scratch_per_emit,
+                        emits: 0,
+                        _v: std::marker::PhantomData,
+                    };
+                    for input in &inputs[range] {
+                        mapper.map(input, &mut em);
+                    }
+                    em.alloc.flush();
+                    emits.fetch_add(em.emits, Ordering::Relaxed);
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    let map_secs = map_sw.secs();
+
+    // ---- Barrier; finalize phase (no reduce phase at all) ----
+    let fin_sw = Stopwatch::start();
+    let keys = collector.key_count() as u64;
+    let (shards, combiner) = collector.into_shards();
+    let results: Mutex<Vec<KeyValue<K, V>>> = Mutex::new(Vec::new());
+    pool.run(
+        shards
+            .into_iter()
+            .map(|shard| {
+                let results = &results;
+                let cohorts = &cohorts;
+                let combiner = &combiner;
+                move |_wid: usize| {
+                    let mut alloc = cfg.heap.thread_alloc();
+                    let mut out = Vec::with_capacity(shard.len());
+                    for (k, holder) in shard {
+                        alloc.free(cohorts.collector.holders, holder.heap_bytes());
+                        let key_val = k.to_val();
+                        let v = combiner
+                            .finalize(holder, &key_val)
+                            .expect("verified combiner");
+                        let v = V::from_val(v)
+                            .expect("combiner produces the reducer's value type");
+                        alloc.alloc(cohorts.results, v.heap_bytes());
+                        out.push(KeyValue::new(k, v));
+                    }
+                    alloc.flush();
+                    results.lock().unwrap().extend(out);
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    let reduce_secs = fin_sw.secs();
+
+    let results = results.into_inner().unwrap();
+    finish_job(cfg, &cohorts);
+    let metrics = FlowMetrics {
+        flow: ExecutionFlow::Combine,
+        fallback_reason,
+        map_secs,
+        reduce_secs,
+        total_secs: total_sw.secs(),
+        emits: emits.load(Ordering::Relaxed),
+        keys,
+        results: results.len() as u64,
+        gc: cfg.heap.stats().since(&gc_before),
+        map_pool,
+    };
+    (results, metrics)
+}
+
+/// End-of-job heap hygiene: every job-scoped cohort is dead now.
+fn finish_job(cfg: &JobConfig, cohorts: &JobCohorts) {
+    cfg.heap.release_cohort(cohorts.collector.keys);
+    cfg.heap.release_cohort(cohorts.collector.intermediate);
+    cfg.heap.release_cohort(cohorts.collector.holders);
+    cfg.heap.release_cohort(cohorts.scratch);
+    cfg.heap.release_cohort(cohorts.results);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::reducers::RirReducer;
+    use crate::optimizer::builder::canon;
+
+    /// Word-count-shaped mapper over pre-tokenized lines.
+    fn wc_mapper(line: &String, em: &mut dyn Emitter<String, i64>) {
+        for w in line.split_whitespace() {
+            em.emit(w.to_string(), 1);
+        }
+    }
+
+    fn lines() -> Vec<String> {
+        vec![
+            "the quick brown fox".into(),
+            "the lazy dog".into(),
+            "the quick dog".into(),
+        ]
+    }
+
+    fn sorted(mut v: Vec<KeyValue<String, i64>>) -> Vec<(String, i64)> {
+        v.sort_by(|a, b| a.key.cmp(&b.key));
+        v.into_iter().map(|kv| (kv.key, kv.value)).collect()
+    }
+
+    #[test]
+    fn reduce_and_combine_flows_agree() {
+        let inputs = lines();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc"));
+        let agent = OptimizerAgent::new();
+
+        let cfg_off = JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off);
+        let (r1, m1) = run_job(&wc_mapper, &reducer, &inputs, &cfg_off, &agent);
+        assert_eq!(m1.flow, ExecutionFlow::Reduce);
+
+        let cfg_on = JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Auto);
+        let (r2, m2) = run_job(&wc_mapper, &reducer, &inputs, &cfg_on, &agent);
+        assert_eq!(m2.flow, ExecutionFlow::Combine);
+
+        assert_eq!(sorted(r1), sorted(r2));
+        assert_eq!(m1.emits, 10);
+        assert_eq!(m1.keys, 6);
+        assert_eq!(m2.emits, m1.emits);
+        assert_eq!(m2.keys, m1.keys);
+    }
+
+    #[test]
+    fn counts_are_correct() {
+        let inputs = lines();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc"));
+        let agent = OptimizerAgent::new();
+        let (r, _) = run_job(
+            &wc_mapper,
+            &reducer,
+            &inputs,
+            &JobConfig::fast().with_threads(4),
+            &agent,
+        );
+        let r = sorted(r);
+        assert_eq!(
+            r,
+            vec![
+                ("brown".to_string(), 1),
+                ("dog".to_string(), 2),
+                ("fox".to_string(), 1),
+                ("lazy".to_string(), 1),
+                ("quick".to_string(), 2),
+                ("the".to_string(), 3),
+            ]
+        );
+    }
+
+    #[test]
+    fn non_transformable_reducer_falls_back() {
+        let inputs = lines();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::early_exit("ee"));
+        let agent = OptimizerAgent::new();
+        let (_, m) = run_job(
+            &wc_mapper,
+            &reducer,
+            &inputs,
+            &JobConfig::fast().with_optimize(OptimizeMode::Auto),
+            &agent,
+        );
+        assert_eq!(m.flow, ExecutionFlow::Reduce);
+        assert!(m.fallback_reason.unwrap().contains("early exit"));
+    }
+
+    #[test]
+    fn generic_only_suppresses_fast_path_but_matches() {
+        let inputs = lines();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc2"));
+        let agent = OptimizerAgent::new();
+        let (r_fast, m_fast) = run_job(
+            &wc_mapper,
+            &reducer,
+            &inputs,
+            &JobConfig::fast().with_optimize(OptimizeMode::Auto),
+            &agent,
+        );
+        let (r_gen, m_gen) = run_job(
+            &wc_mapper,
+            &reducer,
+            &inputs,
+            &JobConfig::fast().with_optimize(OptimizeMode::GenericOnly),
+            &agent,
+        );
+        assert_eq!(m_fast.flow, ExecutionFlow::Combine);
+        assert_eq!(m_gen.flow, ExecutionFlow::Combine);
+        assert_eq!(sorted(r_fast), sorted(r_gen));
+    }
+
+    #[test]
+    fn empty_input_runs() {
+        let inputs: Vec<String> = Vec::new();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc3"));
+        let agent = OptimizerAgent::new();
+        let (r, m) = run_job(&wc_mapper, &reducer, &inputs, &JobConfig::fast(), &agent);
+        assert!(r.is_empty());
+        assert_eq!(m.emits, 0);
+    }
+
+    #[test]
+    fn combine_flow_allocates_less(){
+        // The paper's mechanism end-to-end: many values per key.
+        let inputs: Vec<String> =
+            (0..200).map(|_| "a b c a b a".to_string()).collect();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc4"));
+        let agent = OptimizerAgent::new();
+
+        let heap_off = crate::memsim::SimHeap::new(crate::memsim::HeapParams::no_injection());
+        let cfg_off = JobConfig::new()
+            .with_heap(heap_off)
+            .with_optimize(OptimizeMode::Off)
+            .with_threads(2);
+        let (_, m_off) = run_job(&wc_mapper, &reducer, &inputs, &cfg_off, &agent);
+
+        let heap_on = crate::memsim::SimHeap::new(crate::memsim::HeapParams::no_injection());
+        let cfg_on = JobConfig::new()
+            .with_heap(heap_on)
+            .with_optimize(OptimizeMode::Auto)
+            .with_threads(2);
+        let (_, m_on) = run_job(&wc_mapper, &reducer, &inputs, &cfg_on, &agent);
+
+        assert!(
+            m_on.gc.allocated_objects * 10 < m_off.gc.allocated_objects,
+            "combine flow must allocate ≥10× fewer objects: {} vs {}",
+            m_on.gc.allocated_objects,
+            m_off.gc.allocated_objects
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! A work-stealing task pool — the ForkJoinPool stand-in (paper §2.4: "The
+//! ForkJoinPool class ... provide\[s\] a clean, off-the-shelf scheduler
+//! focusing on lightweight tasks executing on worker threads accessed from
+//! a work-stealing queue").
+//!
+//! Shape: a run submits a flat batch of tasks; each worker owns a deque
+//! seeded round-robin; workers pop their own deque LIFO (cache-warm) and
+//! steal FIFO from victims when empty (cold end — classic Chase-Lev
+//! discipline, implemented with mutexed deques since task granularity here
+//! is a whole input chunk, thousands of map calls, so queue ops are far off
+//! the critical path).
+//!
+//! Workers are OS threads scoped to the run (`std::thread::scope`), so
+//! tasks may borrow from the caller's stack — which is exactly how the
+//! pipeline hands collectors and mappers to workers without `Arc`ing the
+//! world.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Counters exposed for tests and the perf harness.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    pub executed: usize,
+    pub steals: usize,
+}
+
+/// A batch-mode work-stealing pool.
+#[derive(Debug)]
+pub struct TaskPool {
+    threads: usize,
+}
+
+impl TaskPool {
+    /// A pool with `threads` workers (≥ 1).
+    pub fn new(threads: usize) -> Self {
+        TaskPool {
+            threads: threads.max(1),
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every task to completion; returns scheduling stats.
+    ///
+    /// Tasks are `FnOnce` closures that may borrow non-`'static` state
+    /// (scoped threads). Panics in tasks propagate after all workers join.
+    pub fn run<'scope, F>(&self, tasks: Vec<F>) -> PoolStats
+    where
+        F: FnOnce(usize) + Send + 'scope,
+    {
+        if tasks.is_empty() {
+            return PoolStats::default();
+        }
+        let n_workers = self.threads.min(tasks.len()).max(1);
+        // Seed the deques round-robin.
+        let queues: Vec<Mutex<VecDeque<F>>> = (0..n_workers)
+            .map(|_| Mutex::new(VecDeque::new()))
+            .collect();
+        for (i, t) in tasks.into_iter().enumerate() {
+            queues[i % n_workers].lock().unwrap().push_back(t);
+        }
+        let executed = AtomicUsize::new(0);
+        let steals = AtomicUsize::new(0);
+
+        std::thread::scope(|s| {
+            for wid in 0..n_workers {
+                let queues = &queues;
+                let executed = &executed;
+                let steals = &steals;
+                s.spawn(move || {
+                    loop {
+                        // Own queue first: LIFO end (most recently pushed →
+                        // warm caches for recursive spawn patterns).
+                        let task = queues[wid].lock().unwrap().pop_back();
+                        if let Some(t) = task {
+                            t(wid);
+                            executed.fetch_add(1, Ordering::Relaxed);
+                            continue;
+                        }
+                        // Steal: scan victims from wid+1, take the FIFO end.
+                        let mut stolen = None;
+                        for off in 1..n_workers {
+                            let victim = (wid + off) % n_workers;
+                            if let Some(t) = queues[victim].lock().unwrap().pop_front() {
+                                stolen = Some(t);
+                                break;
+                            }
+                        }
+                        match stolen {
+                            Some(t) => {
+                                steals.fetch_add(1, Ordering::Relaxed);
+                                t(wid);
+                                executed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // All queues empty: batch mode → done.
+                            None => break,
+                        }
+                    }
+                });
+            }
+        });
+
+        PoolStats {
+            executed: executed.load(Ordering::Relaxed),
+            steals: steals.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Convenience: run the same closure over every index in `0..n` with
+    /// automatic chunking — the map-phase shape.
+    pub fn run_indexed<'scope, F>(&self, n: usize, f: F) -> PoolStats
+    where
+        F: Fn(usize, usize) + Send + Sync + 'scope,
+    {
+        // One task per chunk; ~4 chunks per worker balances stealing
+        // opportunity against queue traffic (Phoenix uses a similar
+        // heuristic for its task granularity).
+        let chunks = super::splitter::split_indices(n, self.threads * 4);
+        let f = &f;
+        self.run(
+            chunks
+                .into_iter()
+                .map(|range| {
+                    move |wid: usize| {
+                        for i in range {
+                            f(wid, i);
+                        }
+                    }
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_every_task_exactly_once() {
+        let pool = TaskPool::new(4);
+        let n = 1000;
+        let counter = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..n)
+            .map(|_| {
+                let c = &counter;
+                move |_wid: usize| {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        let stats = pool.run(tasks);
+        assert_eq!(counter.load(Ordering::Relaxed), n);
+        assert_eq!(stats.executed, n);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let pool = TaskPool::new(4);
+        let stats = pool.run(Vec::<fn(usize)>::new());
+        assert_eq!(stats.executed, 0);
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = TaskPool::new(1);
+        let acc = AtomicU64::new(0);
+        let tasks: Vec<_> = (0..64u64)
+            .map(|i| {
+                let acc = &acc;
+                move |_w: usize| {
+                    acc.fetch_add(i, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(tasks);
+        assert_eq!(acc.load(Ordering::Relaxed), 63 * 64 / 2);
+    }
+
+    #[test]
+    fn imbalanced_tasks_get_stolen() {
+        // A long task placed at the LIFO end of worker 0's queue: worker 0
+        // pops it first and blocks; its remaining short tasks can only be
+        // finished by worker 1 stealing them.
+        let pool = TaskPool::new(2);
+        let done = AtomicUsize::new(0);
+        let done_ref = &done;
+        let n_short = 400;
+        let mut tasks: Vec<Box<dyn FnOnce(usize) + Send>> = Vec::new();
+        for _ in 0..n_short {
+            tasks.push(Box::new(move |_w| {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                done_ref.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        // Index 400 % 2 == 0 → back of worker 0's deque → popped first.
+        tasks.push(Box::new(move |_w| {
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            done_ref.fetch_add(1, Ordering::Relaxed);
+        }));
+        let stats = pool.run(tasks);
+        assert_eq!(done.load(Ordering::Relaxed), n_short + 1);
+        assert!(stats.steals > 0, "expected steals on imbalanced load");
+    }
+
+    #[test]
+    fn run_indexed_covers_range() {
+        let pool = TaskPool::new(3);
+        let n = 997; // prime → uneven chunks
+        let hits: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+        pool.run_indexed(n, |_wid, i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn tasks_can_borrow_stack_state() {
+        let pool = TaskPool::new(2);
+        let data = vec![1u64, 2, 3, 4];
+        let sum = AtomicU64::new(0);
+        pool.run_indexed(data.len(), |_w, i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn worker_ids_are_in_range() {
+        let pool = TaskPool::new(4);
+        let bad = AtomicUsize::new(0);
+        pool.run_indexed(200, |wid, _i| {
+            if wid >= 4 {
+                bad.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(bad.load(Ordering::Relaxed), 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Input splitting: carve `0..n` into near-equal contiguous chunks, one
+//! per map task (paper §2.1: "the input is split and individually passed
+//! as an argument to the map method").
+
+use std::ops::Range;
+
+/// Split `0..n` into at most `parts` contiguous ranges whose lengths differ
+/// by at most one. Returns fewer ranges when `n < parts`; never returns an
+/// empty range.
+pub fn split_indices(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 || parts == 0 {
+        return Vec::new();
+    }
+    let parts = parts.min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Split a slice by chunk *size* rather than count (Phoenix-style fixed
+/// chunking, where the chunk size is derived from the L1 cache size).
+pub fn split_by_chunk(n: usize, chunk: usize) -> Vec<Range<usize>> {
+    if n == 0 || chunk == 0 {
+        return Vec::new();
+    }
+    (0..n.div_ceil(chunk))
+        .map(|i| i * chunk..((i + 1) * chunk).min(n))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn covers(ranges: &[Range<usize>], n: usize) {
+        let mut next = 0;
+        for r in ranges {
+            assert_eq!(r.start, next, "ranges must be contiguous");
+            assert!(r.end > r.start, "no empty ranges");
+            next = r.end;
+        }
+        assert_eq!(next, n, "ranges must cover 0..n");
+    }
+
+    #[test]
+    fn exact_division() {
+        let r = split_indices(100, 4);
+        assert_eq!(r.len(), 4);
+        covers(&r, 100);
+        assert!(r.iter().all(|r| r.len() == 25));
+    }
+
+    #[test]
+    fn remainder_spread() {
+        let r = split_indices(10, 3);
+        covers(&r, 10);
+        let lens: Vec<usize> = r.iter().map(|r| r.len()).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn fewer_items_than_parts() {
+        let r = split_indices(3, 8);
+        assert_eq!(r.len(), 3);
+        covers(&r, 3);
+    }
+
+    #[test]
+    fn degenerate_cases() {
+        assert!(split_indices(0, 4).is_empty());
+        assert!(split_indices(4, 0).is_empty());
+    }
+
+    #[test]
+    fn chunked_split() {
+        let r = split_by_chunk(10, 4);
+        assert_eq!(r, vec![0..4, 4..8, 8..10]);
+        assert!(split_by_chunk(0, 4).is_empty());
+        assert!(split_by_chunk(5, 0).is_empty());
+    }
+
+    #[test]
+    fn property_all_splits_cover() {
+        use crate::testkit::prop::{assert_prop, usize_in, Gen};
+        let gen: Gen<(usize, usize)> = Gen::new(|r, _| (r.range(0, 5000), r.range(1, 64)));
+        let _ = usize_in(0, 0); // keep import used in older rustc lints
+        assert_prop("split covers", &gen, |&(n, parts)| {
+            let ranges = split_indices(n, parts);
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            if total != n {
+                return Err(format!("covered {total} of {n}"));
+            }
+            if ranges.len() > parts.max(1) {
+                return Err("too many parts".into());
+            }
+            let (min, max) = ranges.iter().fold((usize::MAX, 0), |(lo, hi), r| {
+                (lo.min(r.len()), hi.max(r.len()))
+            });
+            if !ranges.is_empty() && max - min > 1 {
+                return Err(format!("imbalance: min {min} max {max}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,102 @@
+//! Figure 10 — per-benchmark optimizer speedup averaged over all
+//! combinations of {GC algorithm × heap size × thread count}.
+//!
+//! Paper shape: HG and WC (most (key, value) traffic) gain the most; SM
+//! dips below 1.0 (holder-maintenance overhead, few keys/values); the
+//! rest sit in between.
+
+use super::report::{HarnessOpts, Report};
+use super::{scaled_heap, thread_sweep};
+use crate::api::config::OptimizeMode;
+use crate::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use crate::benchmarks::Backend;
+use crate::memsim::GcPolicy;
+use crate::util::json::Json;
+use crate::util::table::{f2, TextTable};
+use crate::util::timer::{geomean, measure};
+
+/// Heap-size multipliers swept (relative to the scaled 12 GB baseline).
+const HEAP_FRACS: [f64; 3] = [0.5, 1.0, 2.0];
+
+pub fn run(opts: &HarnessOpts, backend: &Backend) -> Report {
+    let threads = thread_sweep(opts.max_threads);
+    let mut table = TextTable::new(vec!["bench", "mean speedup", "min", "max", "configs"]);
+    let mut json = Json::arr();
+
+    for id in BenchId::ALL {
+        let w = prepare(id, opts.scale, opts.seed, backend.clone());
+        let mut speedups = Vec::new();
+        for policy in GcPolicy::ALL {
+            for frac in HEAP_FRACS {
+                for &t in &threads {
+                    let unopt = measure(opts.warmup.min(1), opts.iters.min(2), || {
+                        w.run(
+                            Framework::Mr4r,
+                            &RunParams::fast(t)
+                                .with_optimize(OptimizeMode::Off)
+                                .with_heap(scaled_heap(opts.scale, policy, frac)),
+                        );
+                    })
+                    .median();
+                    let opt = measure(opts.warmup.min(1), opts.iters.min(2), || {
+                        w.run(
+                            Framework::Mr4r,
+                            &RunParams::fast(t)
+                                .with_heap(scaled_heap(opts.scale, policy, frac)),
+                        );
+                    })
+                    .median();
+                    speedups.push(unopt / opt);
+                }
+            }
+        }
+        let (min, max) = speedups
+            .iter()
+            .fold((f64::INFINITY, 0.0f64), |(lo, hi), &s| (lo.min(s), hi.max(s)));
+        let mean = geomean(&speedups);
+        table.row(vec![
+            id.code().to_string(),
+            f2(mean),
+            f2(min),
+            f2(max),
+            speedups.len().to_string(),
+        ]);
+        json.push(
+            Json::obj()
+                .set("bench", id.code())
+                .set("mean_speedup", mean)
+                .set("min", min)
+                .set("max", max)
+                .set("configs", speedups.len()),
+        );
+    }
+
+    let mut r = Report::new(
+        "fig10",
+        "Optimizer speedup averaged over {GC algorithm x heap size x threads}",
+        table,
+    );
+    r.json = json;
+    r.note("paper shape: HG and WC improve most (most intermediate pairs); SM < 1 (4 keys / 910 values — holder overhead); others in between.");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig10_runs_tiny_subset() {
+        // Full fig10 is the most expensive report; the tiny-scale smoke
+        // uses 1 thread count and the suite's smallest inputs.
+        let opts = HarnessOpts {
+            scale: 0.0002,
+            iters: 1,
+            warmup: 0,
+            max_threads: 1,
+            ..Default::default()
+        };
+        let r = run(&opts, &Backend::Native);
+        assert!(r.render().contains("mean speedup"));
+    }
+}

@@ -1,0 +1,83 @@
+//! Figure 5 — MR4R scalability (speedup vs its own 1-thread run).
+//!
+//! Paper shape: three groups on the 64-thread server — compute-heavy
+//! benchmarks (MM, KM) scale well; chunked streamers (HG, LR, PC, WC)
+//! scale to a plateau; SM (tiny pair traffic, scan-bound) saturates
+//! earliest. Workstation average: 2.85× on 4 cores, 3.73× on 8
+//! hyperthreads.
+
+use super::report::{HarnessOpts, Report};
+use super::{scaled_heap, thread_sweep};
+use crate::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use crate::benchmarks::Backend;
+use crate::memsim::GcPolicy;
+use crate::util::json::Json;
+use crate::util::table::{f2, TextTable};
+use crate::util::timer::{geomean, measure};
+
+pub fn run(opts: &HarnessOpts, backend: &Backend) -> Report {
+    let threads = thread_sweep(opts.max_threads);
+    let mut header: Vec<String> = vec!["bench".into()];
+    header.extend(threads.iter().map(|t| format!("{t}t")));
+    let mut table = TextTable::new(header);
+    let mut json = Json::arr();
+
+    let mut per_thread_speedups: Vec<Vec<f64>> = vec![Vec::new(); threads.len()];
+    for id in BenchId::ALL {
+        let w = prepare(id, opts.scale, opts.seed, backend.clone());
+        let mut base = f64::NAN;
+        let mut row = vec![id.code().to_string()];
+        let mut series = Json::arr();
+        for (ti, &t) in threads.iter().enumerate() {
+            // Fresh heap per point (the paper restarts the JVM per run).
+            let params = RunParams::fast(t)
+                .with_heap(scaled_heap(opts.scale, GcPolicy::Parallel, 1.0));
+            let samples = measure(opts.warmup, opts.iters, || {
+                w.run(Framework::Mr4r, &params);
+            });
+            let secs = samples.median();
+            if ti == 0 {
+                base = secs;
+            }
+            let speedup = base / secs;
+            per_thread_speedups[ti].push(speedup);
+            row.push(f2(speedup));
+            series.push(Json::obj().set("threads", t).set("secs", secs).set("speedup", speedup));
+        }
+        table.row(row);
+        json.push(Json::obj().set("bench", id.code()).set("series", series));
+    }
+    // Geomean row (the paper quotes averages).
+    let mut row = vec!["geomean".to_string()];
+    for s in &per_thread_speedups {
+        row.push(f2(geomean(s)));
+    }
+    table.row(row);
+
+    let mut r = Report::new(
+        "fig5",
+        "MR4R scalability (speedup vs 1 thread, per benchmark)",
+        table,
+    );
+    r.json = json;
+    r.note("paper shape: MM/KM scale best; SM saturates first; workstation averages were 2.85x @4 cores, 3.73x @8 hyperthreads.");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_runs_tiny() {
+        let opts = HarnessOpts {
+            scale: 0.0002,
+            iters: 1,
+            warmup: 0,
+            max_threads: 2,
+            ..Default::default()
+        };
+        let r = run(&opts, &Backend::Native);
+        assert!(r.render().contains("geomean"));
+    }
+}

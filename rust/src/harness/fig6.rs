@@ -1,0 +1,102 @@
+//! Figure 6 — Phoenix and MR4R speedup relative to Phoenix++, per thread
+//! count (geomean over the benchmark suite).
+//!
+//! Paper shape: Phoenix++ wins throughout (ratios < 1); MR4R sits between
+//! Phoenix++ and Phoenix (workstation medians ≈ 0.66 for MR4J vs 0.39 for
+//! Phoenix); Phoenix collapses at high thread counts (0.20 at 64 threads)
+//! while MR4R holds (0.76).
+
+use super::report::{HarnessOpts, Report};
+use super::{scaled_heap, thread_sweep};
+use crate::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use crate::benchmarks::Backend;
+use crate::memsim::GcPolicy;
+use crate::util::json::Json;
+use crate::util::table::{f2, TextTable};
+use crate::util::timer::{geomean, measure};
+
+pub fn run(opts: &HarnessOpts, backend: &Backend) -> Report {
+    let threads = thread_sweep(opts.max_threads);
+    let mut table = TextTable::new(vec![
+        "threads",
+        "phoenix/ppp",
+        "mr4r/ppp",
+        "(paper: phoenix)",
+        "(paper: mr4j)",
+    ]);
+    let mut json = Json::arr();
+
+    // Paper reference points (server figure, eyeballed anchors at 1–16
+    // same-socket vs 64 threads) for the note columns.
+    let paper_anchor = |t: usize, max: usize| -> (String, String) {
+        if t == max && max >= 8 {
+            ("0.20".to_string(), "0.76".to_string())
+        } else {
+            ("0.81".to_string(), "0.61".to_string())
+        }
+    };
+
+    let workloads: Vec<_> = BenchId::ALL
+        .iter()
+        .map(|&id| prepare(id, opts.scale, opts.seed, backend.clone()))
+        .collect();
+
+    for &t in &threads {
+        let mut ph_ratios = Vec::new();
+        let mut mr_ratios = Vec::new();
+        for w in &workloads {
+            let ppp = measure(opts.warmup, opts.iters, || {
+                w.run(Framework::PhoenixPP, &RunParams::fast(t));
+            })
+            .median();
+            let ph = measure(opts.warmup, opts.iters, || {
+                w.run(Framework::Phoenix, &RunParams::fast(t));
+            })
+            .median();
+            let params = RunParams::fast(t)
+                .with_heap(scaled_heap(opts.scale, GcPolicy::Parallel, 1.0));
+            let mr = measure(opts.warmup, opts.iters, || {
+                w.run(Framework::Mr4r, &params);
+            })
+            .median();
+            ph_ratios.push(ppp / ph);
+            mr_ratios.push(ppp / mr);
+        }
+        let (pa, pm) = paper_anchor(t, opts.max_threads);
+        let (gph, gmr) = (geomean(&ph_ratios), geomean(&mr_ratios));
+        table.row(vec![t.to_string(), f2(gph), f2(gmr), pa, pm]);
+        json.push(
+            Json::obj()
+                .set("threads", t)
+                .set("phoenix_over_ppp", gph)
+                .set("mr4r_over_ppp", gmr),
+        );
+    }
+
+    let mut r = Report::new(
+        "fig6",
+        "Speedup of Phoenix and MR4R relative to Phoenix++ (geomean across suite)",
+        table,
+    );
+    r.json = json;
+    r.note("shape to hold: both ratios < 1 (Phoenix++ fastest); mr4r ≥ phoenix, gap widening with threads (paper: 0.76 vs 0.20 at full threads). MR4R runs include the simulated GC cost; baselines are unmanaged.");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_runs_tiny() {
+        let opts = HarnessOpts {
+            scale: 0.0002,
+            iters: 1,
+            warmup: 0,
+            max_threads: 2,
+            ..Default::default()
+        };
+        let r = run(&opts, &Backend::Native);
+        assert!(r.render().contains("mr4r/ppp"));
+    }
+}

@@ -1,0 +1,110 @@
+//! Figure 7 — MR4R per-benchmark speedup relative to Phoenix++, with and
+//! without the optimizer (full thread count).
+//!
+//! Paper shape: the optimizer closes the gap to Phoenix++ everywhere
+//! except SM; the headline claims are "up to 2.0x" self-speedup and
+//! "within 17%" of Phoenix++ after optimization.
+
+use super::report::{HarnessOpts, Report};
+use super::scaled_heap;
+use crate::api::config::OptimizeMode;
+use crate::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use crate::benchmarks::Backend;
+use crate::memsim::GcPolicy;
+use crate::util::json::Json;
+use crate::util::table::{f2, TextTable};
+use crate::util::timer::{geomean, measure};
+
+pub fn run(opts: &HarnessOpts, backend: &Backend) -> Report {
+    let t = opts.max_threads;
+    let mut table = TextTable::new(vec![
+        "bench",
+        "unopt/ppp",
+        "opt/ppp",
+        "optimizer speedup",
+    ]);
+    let mut json = Json::arr();
+    let mut opt_ratios = Vec::new();
+    let mut self_speedups = Vec::new();
+
+    for id in BenchId::ALL {
+        let w = prepare(id, opts.scale, opts.seed, backend.clone());
+        let ppp = measure(opts.warmup, opts.iters, || {
+            w.run(Framework::PhoenixPP, &RunParams::fast(t));
+        })
+        .median();
+        let unopt = measure(opts.warmup, opts.iters, || {
+            w.run(
+                Framework::Mr4r,
+                &RunParams::fast(t)
+                    .with_optimize(OptimizeMode::Off)
+                    .with_heap(scaled_heap(opts.scale, GcPolicy::Parallel, 1.0)),
+            );
+        })
+        .median();
+        let opt = measure(opts.warmup, opts.iters, || {
+            w.run(
+                Framework::Mr4r,
+                &RunParams::fast(t)
+                    .with_heap(scaled_heap(opts.scale, GcPolicy::Parallel, 1.0)),
+            );
+        })
+        .median();
+        let (u_ratio, o_ratio, self_speedup) = (ppp / unopt, ppp / opt, unopt / opt);
+        opt_ratios.push(o_ratio);
+        self_speedups.push(self_speedup);
+        table.row(vec![
+            id.code().to_string(),
+            f2(u_ratio),
+            f2(o_ratio),
+            f2(self_speedup),
+        ]);
+        json.push(
+            Json::obj()
+                .set("bench", id.code())
+                .set("unopt_over_ppp", u_ratio)
+                .set("opt_over_ppp", o_ratio)
+                .set("optimizer_speedup", self_speedup),
+        );
+    }
+    table.row(vec![
+        "geomean".to_string(),
+        "".to_string(),
+        f2(geomean(&opt_ratios)),
+        f2(geomean(&self_speedups)),
+    ]);
+
+    let max_speedup = self_speedups.iter().cloned().fold(0.0f64, f64::max);
+    let gap = (1.0 - geomean(&opt_ratios)).abs() * 100.0;
+    let mut r = Report::new(
+        "fig7",
+        "MR4R ± optimizer relative to Phoenix++ (per benchmark, full threads)",
+        table,
+    );
+    r.json = Json::obj()
+        .set("benches", r.json.clone())
+        .set("max_optimizer_speedup", max_speedup)
+        .set("gap_to_ppp_pct", gap);
+    r.note(format!(
+        "paper claims: up to 2.0x optimizer speedup (measured max {max_speedup:.2}x); optimized MR4J within 17% of Phoenix++ (measured gap {gap:.0}%). SM is expected <= 1."
+    ));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7_runs_tiny() {
+        let opts = HarnessOpts {
+            scale: 0.0002,
+            iters: 1,
+            warmup: 0,
+            max_threads: 2,
+            ..Default::default()
+        };
+        let r = run(&opts, &Backend::Native);
+        assert!(r.render().contains("optimizer speedup"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Figures 8 and 9 — Word Count heap usage and %GC-time timeline, without
+//! (Fig. 8) and with (Fig. 9) the optimizer.
+//!
+//! Paper shape: similar heap-usage ramps in both, but the unoptimized run
+//! spends an escalating share of runtime in GC (premature promotion →
+//! major collections), while the optimized run's GC share stays flat and
+//! small.
+
+use super::report::{HarnessOpts, Report};
+use super::scaled_heap;
+use crate::api::config::OptimizeMode;
+use crate::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use crate::benchmarks::Backend;
+use crate::memsim::{GcPolicy, TimelineEvent};
+use crate::util::json::Json;
+use crate::util::table::TextTable;
+
+const BINS: usize = 24;
+
+pub fn run(opts: &HarnessOpts, backend: &Backend, optimized: bool) -> Report {
+    let (id, title, mode) = if optimized {
+        (
+            "fig9",
+            "Word Count on optimized MR4R: heap usage and %runtime in GC",
+            OptimizeMode::Auto,
+        )
+    } else {
+        (
+            "fig8",
+            "Word Count on MR4R: heap usage and %runtime in GC",
+            OptimizeMode::Off,
+        )
+    };
+
+    let w = prepare(BenchId::WC, opts.scale, opts.seed, backend.clone());
+    let heap = scaled_heap(opts.scale, GcPolicy::Parallel, 1.0);
+    let params = RunParams::fast(opts.max_threads)
+        .with_optimize(mode)
+        .with_heap(heap.clone());
+    let outcome = w.run(Framework::Mr4r, &params);
+    let m = outcome.metrics.expect("mr4r metrics");
+
+    let tl = heap.timeline();
+    let mut table = TextTable::new(vec!["t (s)", "heap used (MB)", "%GC in window"]);
+    let mut json = Json::arr();
+    for (t, heap_used, gc_frac) in tl.binned(BINS) {
+        table.row(vec![
+            format!("{t:.3}"),
+            format!("{:.1}", heap_used as f64 / 1e6),
+            format!("{:.1}", gc_frac * 100.0),
+        ]);
+        json.push(
+            Json::obj()
+                .set("t", t)
+                .set("heap_mb", heap_used as f64 / 1e6)
+                .set("gc_pct", gc_frac * 100.0),
+        );
+    }
+
+    let stats = heap.stats();
+    let mut r = Report::new(id, title, table);
+    r.json = Json::obj()
+        .set("series", json)
+        .set("minor_collections", stats.minor_collections)
+        .set("major_collections", stats.major_collections)
+        .set("gc_seconds", stats.gc_seconds)
+        .set("total_seconds", outcome.secs)
+        .set("promoted_mb", stats.promoted_bytes as f64 / 1e6)
+        .set("flow", m.flow.label());
+    r.note(format!(
+        "flow={}; minor GCs={}, major GCs={}, promoted {:.1}MB, GC share {:.1}% of {:.3}s run.",
+        m.flow.label(),
+        stats.minor_collections,
+        stats.major_collections,
+        stats.promoted_bytes as f64 / 1e6,
+        100.0 * stats.gc_seconds / outcome.secs.max(1e-9),
+        outcome.secs,
+    ));
+    r.note(format!(
+        "minor-GC timeline events: {}, major: {} (paper shape: majors only in fig8, GC share flat in fig9).",
+        tl.count(TimelineEvent::MinorGc),
+        tl.count(TimelineEvent::MajorGc)
+    ));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig8_vs_fig9_gc_shapes() {
+        let opts = HarnessOpts {
+            scale: 0.002,
+            iters: 1,
+            warmup: 0,
+            max_threads: 2,
+            ..Default::default()
+        };
+        let unopt = run(&opts, &Backend::Native, false);
+        let opt = run(&opts, &Backend::Native, true);
+        // The core claim: unoptimized WC promotes and majors; optimized
+        // doesn't (or vastly less).
+        let get = |r: &Report, key: &str| -> f64 {
+            match &r.json {
+                crate::util::json::Json::Obj(fields) => fields
+                    .iter()
+                    .find(|(k, _)| k == key)
+                    .and_then(|(_, v)| match v {
+                        crate::util::json::Json::Num(n) => Some(*n),
+                        _ => None,
+                    })
+                    .unwrap_or(f64::NAN),
+                _ => f64::NAN,
+            }
+        };
+        let u_major = get(&unopt, "major_collections");
+        let o_major = get(&opt, "major_collections");
+        assert!(
+            u_major >= 1.0,
+            "unoptimized WC must trigger major GCs, got {u_major}"
+        );
+        assert!(
+            o_major <= u_major / 2.0,
+            "optimized WC must have far fewer majors: {o_major} vs {u_major}"
+        );
+        let u_gc = get(&unopt, "gc_seconds");
+        let o_gc = get(&opt, "gc_seconds");
+        assert!(
+            o_gc < u_gc * 0.6,
+            "optimized GC time must collapse: {o_gc} vs {u_gc}"
+        );
+    }
+}

@@ -1,0 +1,88 @@
+//! The figure/table reproduction harness — one module per artifact of the
+//! paper's evaluation section, each regenerating the same rows/series the
+//! paper reports (shape, not absolute numbers — see EXPERIMENTS.md).
+//!
+//! | module | reproduces |
+//! |---|---|
+//! | [`table1`] | Table 1 — hardware/software configuration |
+//! | [`table2`] | Table 2 — benchmark input data + cardinality classes |
+//! | [`fig5`] | Fig. 5 — MR4R scalability vs 1 thread |
+//! | [`fig6`] | Fig. 6 — Phoenix & MR4R speedup relative to Phoenix++ |
+//! | [`fig7`] | Fig. 7 — per-benchmark MR4R ± optimizer vs Phoenix++ |
+//! | [`fig89`] | Figs. 8/9 — WC heap usage + %GC timelines, ± optimizer |
+//! | [`fig10`] | Fig. 10 — optimizer speedup averaged over GC configs |
+//! | [`overhead`] | §4.3 — per-class detection/transformation times |
+
+pub mod fig10;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig89;
+pub mod overhead;
+pub mod report;
+pub mod table1;
+pub mod table2;
+
+pub use report::{HarnessOpts, Report};
+
+use crate::benchmarks::Backend;
+use crate::memsim::{GcPolicy, HeapParams, SimHeap};
+use std::sync::Arc;
+
+/// A fresh simulated heap sized for the configured input scale (the paper
+/// uses a 12 GB heap for paper-scale inputs; we scale proportionally with
+/// a floor so tiny test runs still exercise collections).
+pub fn scaled_heap(scale: f64, policy: GcPolicy, heap_frac: f64) -> Arc<SimHeap> {
+    let total = ((12.0 * (1u64 << 30) as f64 * scale * heap_frac) as u64).max(24 << 20);
+    SimHeap::new(HeapParams {
+        total_bytes: total,
+        policy,
+        ..HeapParams::default()
+    })
+}
+
+/// Thread counts to sweep: powers of two up to the machine (the paper
+/// sweeps 1..64 on the server).
+pub fn thread_sweep(max_threads: usize) -> Vec<usize> {
+    let mut v = vec![1usize];
+    while *v.last().unwrap() * 2 <= max_threads {
+        v.push(v.last().unwrap() * 2);
+    }
+    if *v.last().unwrap() != max_threads {
+        v.push(max_threads);
+    }
+    v
+}
+
+/// Run all harness modules (the `mr4r figures all` entry).
+pub fn run_all(opts: &HarnessOpts, backend: &Backend) -> Vec<Report> {
+    vec![
+        table1::run(opts),
+        table2::run(opts, backend),
+        fig5::run(opts, backend),
+        fig6::run(opts, backend),
+        fig7::run(opts, backend),
+        fig89::run(opts, backend, false),
+        fig89::run(opts, backend, true),
+        fig10::run(opts, backend),
+        overhead::run(opts),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_sweep_shapes() {
+        assert_eq!(thread_sweep(1), vec![1]);
+        assert_eq!(thread_sweep(8), vec![1, 2, 4, 8]);
+        assert_eq!(thread_sweep(6), vec![1, 2, 4, 6]);
+    }
+
+    #[test]
+    fn scaled_heap_has_floor() {
+        let h = scaled_heap(1e-9, GcPolicy::Parallel, 1.0);
+        assert!(h.params().total_bytes >= 24 << 20);
+    }
+}

@@ -1,0 +1,144 @@
+//! Report plumbing: every harness module produces a [`Report`] — a titled
+//! text table plus notes — that can be printed to the console and written
+//! to `reports/<id>.{txt,csv,json}` for plotting.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+use crate::util::table::TextTable;
+
+/// Options shared by all harness modules.
+#[derive(Clone, Debug)]
+pub struct HarnessOpts {
+    /// Input scale relative to the paper's datasets (1.0 = paper-sized).
+    pub scale: f64,
+    /// Dataset seed.
+    pub seed: u64,
+    /// Measured iterations per point (paper: 10).
+    pub iters: usize,
+    /// Warm-up iterations discarded (paper: 5 for Java).
+    pub warmup: usize,
+    /// Max worker threads (paper: 8 workstation / 64 server). Defaults to
+    /// at least 8 even on smaller hosts: worker threads are a framework
+    /// dimension, not a core count — oversubscription still exposes the
+    /// per-thread structural costs the figures compare (e.g. Phoenix's
+    /// merge phase growing with thread tables).
+    pub max_threads: usize,
+}
+
+impl Default for HarnessOpts {
+    fn default() -> Self {
+        HarnessOpts {
+            scale: 0.004,
+            seed: 42,
+            iters: 3,
+            warmup: 1,
+            max_threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .max(8),
+        }
+    }
+}
+
+impl HarnessOpts {
+    /// The paper's full protocol (10 iters, 5 warm-up) at a given scale.
+    pub fn paper_protocol(scale: f64) -> Self {
+        HarnessOpts {
+            scale,
+            iters: 10,
+            warmup: 5,
+            ..Default::default()
+        }
+    }
+}
+
+/// One reproduced table/figure.
+#[derive(Debug)]
+pub struct Report {
+    /// Stable id (`fig5`, `table2`, ...) — the output file stem.
+    pub id: String,
+    /// Human title matching the paper's caption.
+    pub title: String,
+    pub table: TextTable,
+    /// Prose notes: expected paper shape vs what this run shows.
+    pub notes: Vec<String>,
+    /// Structured payload mirrored to JSON.
+    pub json: Json,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str, table: TextTable) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            table,
+            notes: Vec::new(),
+            json: Json::obj(),
+        }
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    /// Render for the console.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} — {} ==\n{}", self.id, self.title, self.table.render());
+        for n in &self.notes {
+            out.push_str(&format!("note: {n}\n"));
+        }
+        out
+    }
+
+    /// Write `<dir>/<id>.txt`, `.csv`, `.json`.
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{}.txt", self.id)), self.render())?;
+        std::fs::write(dir.join(format!("{}.csv", self.id)), self.table.to_csv())?;
+        let doc = Json::obj()
+            .set("id", self.id.as_str())
+            .set("title", self.title.as_str())
+            .set(
+                "notes",
+                Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+            )
+            .set("data", self.json.clone());
+        std::fs::write(dir.join(format!("{}.json", self.id)), doc.pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_renders_and_writes() {
+        let mut t = TextTable::new(vec!["bench", "speedup"]);
+        t.row(vec!["WC", "1.92"]);
+        let mut r = Report::new("figX", "demo", t);
+        r.note("expected shape: up");
+        let s = r.render();
+        assert!(s.contains("figX"));
+        assert!(s.contains("WC"));
+        assert!(s.contains("note: expected"));
+
+        let dir = std::env::temp_dir().join(format!("mr4r-report-{}", std::process::id()));
+        r.write_to(&dir).unwrap();
+        assert!(dir.join("figX.txt").exists());
+        assert!(dir.join("figX.csv").exists());
+        assert!(dir.join("figX.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn default_opts_sane() {
+        let o = HarnessOpts::default();
+        assert!(o.scale > 0.0 && o.iters >= 1 && o.max_threads >= 1);
+        let p = HarnessOpts::paper_protocol(0.01);
+        assert_eq!(p.iters, 10);
+        assert_eq!(p.warmup, 5);
+    }
+}

@@ -1,0 +1,94 @@
+//! Table 1 — hardware and software configuration.
+//!
+//! The paper's table lists the two evaluation machines (i7-4770
+//! workstation, 64-core Opteron server). We cannot conjure their hardware;
+//! this table reports the *host actually used*, side by side with the
+//! paper's rows, so every other figure can be read in context.
+
+use super::report::{HarnessOpts, Report};
+use crate::util::json::Json;
+use crate::util::table::TextTable;
+
+/// Best-effort CPU model string from /proc/cpuinfo.
+fn cpu_model() -> String {
+    std::fs::read_to_string("/proc/cpuinfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("model name"))
+                .and_then(|l| l.split(':').nth(1))
+                .map(|m| m.trim().to_string())
+        })
+        .unwrap_or_else(|| "unknown".to_string())
+}
+
+/// Total memory in GiB from /proc/meminfo.
+fn mem_gib() -> f64 {
+    std::fs::read_to_string("/proc/meminfo")
+        .ok()
+        .and_then(|s| {
+            s.lines()
+                .find(|l| l.starts_with("MemTotal"))
+                .and_then(|l| l.split_whitespace().nth(1))
+                .and_then(|kb| kb.parse::<f64>().ok())
+        })
+        .map(|kb| kb / 1024.0 / 1024.0)
+        .unwrap_or(0.0)
+}
+
+pub fn run(_opts: &HarnessOpts) -> Report {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut t = TextTable::new(vec!["field", "paper: workstation", "paper: server", "this host"]);
+    t.row(vec![
+        "Processor".to_string(),
+        "Intel Core i7 4770 3.4 GHz".to_string(),
+        "AMD Opteron 6276 2.3 GHz".to_string(),
+        cpu_model(),
+    ]);
+    t.row(vec![
+        "Hardware threads".to_string(),
+        "8".to_string(),
+        "64".to_string(),
+        threads.to_string(),
+    ]);
+    t.row(vec![
+        "Main memory".to_string(),
+        "16GB".to_string(),
+        "252GB".to_string(),
+        format!("{:.0}GB", mem_gib()),
+    ]);
+    t.row(vec![
+        "Runtime".to_string(),
+        "HotSpot 25.20-b23, 12GB heap".to_string(),
+        "same, -XX:+UseNUMA".to_string(),
+        "MR4R (rust) + memsim generational heap".to_string(),
+    ]);
+    t.row(vec![
+        "Comparators".to_string(),
+        "Phoenix (C, gcc)".to_string(),
+        "Phoenix++ (C++, gcc)".to_string(),
+        "baselines::phoenix / baselines::phoenixpp".to_string(),
+    ]);
+    let mut r = Report::new("table1", "Hardware and software configurations", t);
+    r.json = Json::obj()
+        .set("host_threads", threads)
+        .set("host_cpu", cpu_model())
+        .set("host_mem_gib", mem_gib());
+    r.note("paper hardware is reported verbatim for reference; all measurements in the other reports come from `this host`.");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_reports_host() {
+        let r = run(&HarnessOpts::default());
+        let s = r.render();
+        assert!(s.contains("Hardware threads"));
+        assert!(s.contains("Opteron"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Table 2 — benchmark input data, with the key/value cardinality classes
+//! *measured* from an actual run at the configured scale (asserting the
+//! generators preserve the paper's cardinality structure).
+
+use super::report::{HarnessOpts, Report};
+use crate::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use crate::benchmarks::Backend;
+use crate::util::json::Json;
+use crate::util::table::TextTable;
+
+pub fn run(opts: &HarnessOpts, backend: &Backend) -> Report {
+    let mut t = TextTable::new(vec![
+        "bench",
+        "paper input",
+        "keys",
+        "values",
+        "scaled bytes",
+        "measured keys",
+        "measured values",
+    ]);
+    let mut json = Json::arr();
+    for id in BenchId::ALL {
+        let w = prepare(id, opts.scale, opts.seed, backend.clone());
+        let outcome = w.run(Framework::Mr4r, &RunParams::fast(opts.max_threads.min(4)));
+        let m = outcome.metrics.as_ref().expect("mr4r metrics");
+        let (kk, vk) = id.cardinality();
+        t.row(vec![
+            id.code().to_string(),
+            id.input_description().to_string(),
+            kk.label().to_string(),
+            vk.label().to_string(),
+            format!("{:.1}MB", w.approx_bytes as f64 / 1e6),
+            m.keys.to_string(),
+            m.emits.to_string(),
+        ]);
+        json.push(
+            Json::obj()
+                .set("bench", id.code())
+                .set("keys", m.keys)
+                .set("values", m.emits)
+                .set("bytes", w.approx_bytes),
+        );
+    }
+    let mut r = Report::new("table2", "Benchmark input data (scaled)", t);
+    r.json = json;
+    r.note(format!(
+        "inputs scaled to {} of the paper's sizes; cardinality classes (Small/Medium/Large) are the paper's and hold per the measured columns.",
+        opts.scale
+    ));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_measures_all_benchmarks() {
+        let opts = HarnessOpts {
+            scale: 0.0002,
+            iters: 1,
+            warmup: 0,
+            ..Default::default()
+        };
+        let r = run(&opts, &Backend::Native);
+        let s = r.render();
+        for id in BenchId::ALL {
+            assert!(s.contains(id.code()), "{} missing", id.code());
+        }
+    }
+
+    #[test]
+    fn cardinality_classes_hold_at_scale() {
+        // WC: many keys; SM: ≤4 keys; KM: ≤100 keys; LR: exactly 5.
+        let opts = HarnessOpts {
+            scale: 0.0005,
+            ..Default::default()
+        };
+        let backend = Backend::Native;
+        let get = |id: BenchId| {
+            let w = prepare(id, opts.scale, opts.seed, backend.clone());
+            let o = w.run(Framework::Mr4r, &RunParams::fast(2));
+            o.metrics.unwrap()
+        };
+        assert!(get(BenchId::WC).keys > 300);
+        assert!(get(BenchId::SM).keys <= 4);
+        assert!(get(BenchId::KM).keys <= 100);
+        assert_eq!(get(BenchId::LR).keys, 5);
+    }
+}

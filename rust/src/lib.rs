@@ -1,0 +1,44 @@
+//! # MR4R — MapReduce for Rust, with a co-designed semantic optimizer
+//!
+//! A reproduction of *"Towards co-designed optimizations in parallel
+//! frameworks: A MapReduce case study"* (Barrett, Kotselidis, Luján, 2016)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The paper introduces MR4J, a lightweight shared-memory MapReduce framework,
+//! plus a *semantically aware* optimizer that transparently rewrites the user's
+//! `reduce` method into a combiner (`initialize`/`combine`/`finalize`) applied
+//! at emit time, eliminating the reduce phase and most intermediate-value
+//! allocation. This crate is the L3 coordinator of the reproduction:
+//!
+//! * [`api`] — the public Mapper/Reducer/Emitter surface (paper Fig. 2).
+//! * [`coordinator`] — work-stealing scheduler, input splitter, sharded
+//!   intermediate collector, and the two execution flows (reduce vs combine).
+//! * [`optimizer`] — the paper's §3 contribution: reducers expressed in a
+//!   stack-machine IR (RIR, the bytecode stand-in), analyzed via a program
+//!   dependency graph and sliced into `initialize`/`combine`/`finalize`.
+//! * [`memsim`] — a generational managed-heap simulator standing in for the
+//!   JVM GC, reproducing the allocation-lifetime mechanism behind Figs. 8–10.
+//! * [`baselines`] — Phoenix- and Phoenix++-like comparator runtimes.
+//! * [`benchmarks`] — the seven-benchmark suite (Table 2) with scaled
+//!   synthetic data generators.
+//! * [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas kernels
+//!   (`artifacts/*.hlo.txt`) from the map phase; Python never runs at
+//!   request time.
+//! * [`harness`] — regenerates every table and figure in the evaluation.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod api;
+pub mod baselines;
+pub mod benchmarks;
+pub mod coordinator;
+pub mod harness;
+pub mod memsim;
+pub mod optimizer;
+pub mod runtime;
+pub mod testkit;
+pub mod util;
+
+pub use api::{Emitter, JobConfig, KeyValue, MapReduce, Mapper, Reducer};
+pub use optimizer::agent::OptimizerAgent;

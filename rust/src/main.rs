@@ -1,0 +1,231 @@
+//! The `mr4r` launcher.
+//!
+//! ```text
+//! mr4r figures <fig5|fig6|fig7|fig8|fig9|fig10|table1|table2|overhead|all>
+//!      [--scale S] [--seed N] [--iters N] [--warmup N] [--threads N]
+//!      [--backend auto|native|pjrt] [--out DIR]
+//! mr4r run --bench WC [--threads N] [--no-optimize] [--scale S]
+//! mr4r explain --bench WC          # show the reducer RIR + agent decision
+//! mr4r info                        # environment, artifacts, backend probe
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use mr4r::api::config::OptimizeMode;
+use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use mr4r::benchmarks::Backend;
+use mr4r::harness::{self, HarnessOpts};
+use mr4r::optimizer::agent::{Decision, OptimizerAgent};
+use mr4r::runtime::artifacts::KernelSet;
+use mr4r::util::cli::{Cli, CliError};
+
+fn cli() -> Cli {
+    Cli::new("mr4r", "MR4R — co-designed MapReduce runtime (paper reproduction)")
+        .opt("scale", "0.004", "input scale relative to the paper's datasets")
+        .opt("seed", "42", "dataset seed")
+        .opt("iters", "3", "measured iterations per data point")
+        .opt("warmup", "1", "warm-up iterations (discarded)")
+        .opt_no_default("threads", "max worker threads (default: max(cores, 8))")
+        .opt("backend", "auto", "numeric backend: auto | native | pjrt")
+        .opt("out", "reports", "report output directory")
+        .opt_no_default("bench", "benchmark code: HG KM LR MM PC SM WC")
+        .switch("no-optimize", "disable the reducer optimizer")
+        .switch("quiet", "suppress per-report console output")
+}
+
+fn backend_from(arg: &str) -> Result<Backend, String> {
+    match arg {
+        "native" => Ok(Backend::Native),
+        "pjrt" => KernelSet::try_load()
+            .map(Backend::Pjrt)
+            .ok_or_else(|| "artifacts missing: run `make artifacts` first".to_string()),
+        "auto" => Ok(Backend::auto()),
+        other => Err(format!("unknown backend `{other}`")),
+    }
+}
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match cli().parse(&argv) {
+        Ok(a) => a,
+        Err(CliError::Help(h)) => {
+            println!("{h}");
+            return ExitCode::SUCCESS;
+        }
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", cli().help_text());
+            return ExitCode::FAILURE;
+        }
+    };
+
+    let command = args.positional().first().map(String::as_str).unwrap_or("");
+    let target = args.positional().get(1).map(String::as_str).unwrap_or("");
+
+    let opts = HarnessOpts {
+        scale: args.parse_or("scale", 0.004),
+        seed: args.parse_or("seed", 42),
+        iters: args.parse_or("iters", 3),
+        warmup: args.parse_or("warmup", 1),
+        max_threads: args.parse_or(
+            "threads",
+            // Worker threads are a framework dimension (paper: 8/64), not
+            // a host core count — default to ≥8 even on small hosts.
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .max(8),
+        ),
+    };
+    let backend = match backend_from(args.get("backend").unwrap_or("auto")) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let out_dir = PathBuf::from(args.get("out").unwrap_or("reports"));
+
+    match command {
+        "figures" => {
+            let reports = match target {
+                "all" | "" => harness::run_all(&opts, &backend),
+                "table1" => vec![harness::table1::run(&opts)],
+                "table2" => vec![harness::table2::run(&opts, &backend)],
+                "fig5" => vec![harness::fig5::run(&opts, &backend)],
+                "fig6" => vec![harness::fig6::run(&opts, &backend)],
+                "fig7" => vec![harness::fig7::run(&opts, &backend)],
+                "fig8" => vec![harness::fig89::run(&opts, &backend, false)],
+                "fig9" => vec![harness::fig89::run(&opts, &backend, true)],
+                "fig10" => vec![harness::fig10::run(&opts, &backend)],
+                "overhead" => vec![harness::overhead::run(&opts)],
+                other => {
+                    eprintln!("unknown figure `{other}`");
+                    return ExitCode::FAILURE;
+                }
+            };
+            for r in &reports {
+                if !args.flag("quiet") {
+                    println!("{}", r.render());
+                }
+                if let Err(e) = r.write_to(&out_dir) {
+                    eprintln!("error writing report {}: {e}", r.id);
+                    return ExitCode::FAILURE;
+                }
+            }
+            println!("wrote {} report(s) to {}", reports.len(), out_dir.display());
+            ExitCode::SUCCESS
+        }
+        "run" => {
+            let Some(id) = args.get("bench").and_then(BenchId::from_code) else {
+                eprintln!("`run` needs --bench <HG|KM|LR|MM|PC|SM|WC>");
+                return ExitCode::FAILURE;
+            };
+            let w = prepare(id, opts.scale, opts.seed, backend.clone());
+            let mode = if args.flag("no-optimize") {
+                OptimizeMode::Off
+            } else {
+                OptimizeMode::Auto
+            };
+            let heap = harness::scaled_heap(opts.scale, mr4r::memsim::GcPolicy::Parallel, 1.0);
+            let params = RunParams::fast(opts.max_threads)
+                .with_optimize(mode)
+                .with_heap(heap.clone());
+            let o = w.run(Framework::Mr4r, &params);
+            let m = o.metrics.expect("mr4r metrics");
+            println!("{} ({}), backend={}", id.code(), id.name(), backend.name());
+            println!("  flow        : {}", m.flow.label());
+            if let Some(r) = &m.fallback_reason {
+                println!("  fallback    : {r}");
+            }
+            println!(
+                "  total       : {:.3}s (map {:.3}s, reduce/finalize {:.3}s)",
+                o.secs, m.map_secs, m.reduce_secs
+            );
+            println!("  emits/keys  : {} / {}", m.emits, m.keys);
+            println!(
+                "  gc          : {} minor, {} major, {:.3}s ({:.1}%)",
+                m.gc.minor_collections,
+                m.gc.major_collections,
+                m.gc.gc_seconds,
+                100.0 * m.gc.gc_seconds / o.secs.max(1e-9)
+            );
+            println!("  digest      : {:016x}", o.digest);
+            ExitCode::SUCCESS
+        }
+        "explain" => {
+            let Some(id) = args.get("bench").and_then(BenchId::from_code) else {
+                eprintln!("`explain` needs --bench <HG|KM|LR|MM|PC|SM|WC>");
+                return ExitCode::FAILURE;
+            };
+            let program = match id {
+                BenchId::WC => mr4r::optimizer::builder::canon::sum_i64("wordcount.sum"),
+                BenchId::HG => mr4r::optimizer::builder::canon::sum_i64("histogram.sum"),
+                BenchId::LR => mr4r::optimizer::builder::canon::sum_f64("linreg.sum"),
+                BenchId::MM => mr4r::optimizer::builder::canon::sum_f64("matmul.sum"),
+                BenchId::KM => mr4r::optimizer::builder::canon::sum_vec("kmeans.sumvec", 4),
+                BenchId::PC => mr4r::optimizer::builder::canon::sum_vec("pca.sumvec", 3),
+                BenchId::SM => mr4r::optimizer::builder::canon::count("stringmatch.count"),
+            };
+            println!("{}", program.disassemble());
+            println!(
+                "safety hints:\n{}",
+                mr4r::optimizer::hints::render_hints(&mr4r::optimizer::hints::analyze_hints(
+                    &program
+                ))
+            );
+            let agent = OptimizerAgent::new();
+            match agent.process(&program) {
+                Decision::Combine(c) => {
+                    println!(
+                        "decision: COMBINE (idiom {:?}, fast path {:?})",
+                        c.idiom(),
+                        c.fast_path()
+                    );
+                    println!(
+                        "holder: {:?} ({} bytes simulated)",
+                        c.initialize(),
+                        c.holder_bytes()
+                    );
+                }
+                Decision::Fallback(r) => println!("decision: FALLBACK — {r}"),
+                Decision::Opaque => println!("decision: OPAQUE"),
+            }
+            let s = agent.stats();
+            println!(
+                "detection {:.1}us, transformation {:.1}us",
+                s.detection.mean() * 1e6,
+                s.transformation.mean() * 1e6
+            );
+            ExitCode::SUCCESS
+        }
+        "info" => {
+            println!(
+                "mr4r {} — three-layer reproduction of Barrett et al. 2016",
+                env!("CARGO_PKG_VERSION")
+            );
+            println!("host threads : {}", opts.max_threads);
+            match KernelSet::try_load() {
+                Some(ks) => println!(
+                    "artifacts    : loaded ({} kernels, platform {})",
+                    mr4r::runtime::KERNEL_NAMES.len(),
+                    ks.platform()
+                ),
+                None => {
+                    println!("artifacts    : NOT built (run `make artifacts`; native backend only)")
+                }
+            }
+            println!("backend      : {}", backend.name());
+            ExitCode::SUCCESS
+        }
+        "" => {
+            eprintln!("{}", cli().help_text());
+            eprintln!("commands: figures | run | explain | info");
+            ExitCode::FAILURE
+        }
+        other => {
+            eprintln!("unknown command `{other}` (try: figures, run, explain, info)");
+            ExitCode::FAILURE
+        }
+    }
+}

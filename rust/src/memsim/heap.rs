@@ -1,0 +1,691 @@
+//! The simulated generational heap.
+//!
+//! See the module docs on [`crate::memsim`] for why this exists. The moving
+//! parts:
+//!
+//! * [`SimHeap`] — shared state: per-cohort age-bucketed live accounting,
+//!   young/old occupancy, GC triggering, pause injection, stats, timeline.
+//! * [`ThreadAlloc`] — per-worker TLAB-like handle batching allocation
+//!   bookkeeping so the hot emit path touches no locks most of the time.
+//! * [`CohortId`] — allocation group. Liveness is managed per cohort: the
+//!   framework frees intermediate-value bytes when the reduce phase consumes
+//!   them, holder bytes at finalization, scratch bytes immediately.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::policy::{CostModel, GcPolicy};
+use super::stats::GcStats;
+use super::timeline::{Timeline, TimelineEvent, TimelinePoint};
+
+/// Maximum supported tenuring threshold (age buckets are a fixed array).
+pub const MAX_TENURE: usize = 8;
+
+/// Identifies an allocation cohort registered with [`SimHeap::cohort`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CohortId(pub(crate) usize);
+
+/// Simulator configuration.
+#[derive(Clone, Debug)]
+pub struct HeapParams {
+    /// Total simulated heap, bytes (paper: 12 GB; scaled with the inputs).
+    pub total_bytes: u64,
+    /// Young generation fraction of the total.
+    pub young_fraction: f64,
+    /// Minor GCs an object must survive before promotion.
+    pub tenure_age: usize,
+    /// GC worker threads (paper: JVM default = #cores).
+    pub gc_threads: usize,
+    /// Collector family.
+    pub policy: GcPolicy,
+    /// Pause cost constants.
+    pub cost: CostModel,
+    /// Multiplier applied when *injecting* pauses into wall-clock.
+    /// 1.0 for figure runs; 0.0 in unit tests (accounting still happens).
+    pub time_scale: f64,
+    /// Minimum interval between periodic timeline samples, seconds.
+    pub sample_every: f64,
+    /// Master switch; when false every call is a cheap no-op.
+    pub enabled: bool,
+}
+
+impl Default for HeapParams {
+    fn default() -> Self {
+        HeapParams {
+            total_bytes: 512 << 20,
+            young_fraction: 0.1,
+            tenure_age: 2,
+            // Simulated GC worker threads (the paper's JVMs default to
+            // #cores: 8 workstation / 64 server). Part of the simulation,
+            // deliberately not tied to this host's core count.
+            gc_threads: 8,
+            policy: GcPolicy::Parallel,
+            cost: CostModel::default(),
+            time_scale: 1.0,
+            sample_every: 2e-3,
+            enabled: true,
+        }
+    }
+}
+
+impl HeapParams {
+    /// A heap that records nothing and never pauses (for pure-perf runs).
+    pub fn disabled() -> Self {
+        HeapParams {
+            enabled: false,
+            ..Default::default()
+        }
+    }
+
+    /// Accounting without wall-clock injection (unit tests).
+    pub fn no_injection() -> Self {
+        HeapParams {
+            time_scale: 0.0,
+            ..Default::default()
+        }
+    }
+
+    pub fn with_policy(mut self, p: GcPolicy) -> Self {
+        self.policy = p;
+        self
+    }
+
+    pub fn with_total(mut self, bytes: u64) -> Self {
+        self.total_bytes = bytes;
+        self
+    }
+
+    fn young_capacity(&self) -> u64 {
+        ((self.total_bytes as f64 * self.young_fraction) as u64).max(1 << 20)
+    }
+
+    fn old_capacity(&self) -> u64 {
+        self.total_bytes - self.young_capacity()
+    }
+}
+
+/// Per-cohort accounting (guarded by the heap mutex).
+#[derive(Clone, Debug, Default)]
+struct Cohort {
+    name: &'static str,
+    /// Live bytes by age; `buckets[0]` is the most recent survivor epoch.
+    buckets: [u64; MAX_TENURE],
+    /// Live bytes promoted to the old generation.
+    old: u64,
+    /// Bytes allocated since the last minor GC (age "-1", not yet a
+    /// survivor).
+    pending_alloc: u64,
+    /// Bytes freed since the last minor GC (applied youngest-first then).
+    pending_free: u64,
+}
+
+impl Cohort {
+    fn live_young(&self) -> u64 {
+        self.buckets.iter().sum::<u64>() + self.pending_alloc.saturating_sub(self.pending_free)
+    }
+}
+
+/// Shared heap internals (everything the collector must see atomically).
+struct HeapCore {
+    cohorts: Vec<Cohort>,
+    /// Old-generation garbage awaiting a major collection.
+    old_garbage: u64,
+    /// Bytes promoted since the last major collection — the Parallel
+    /// collector's ergonomics start a full GC when promotion pressure is
+    /// sustained, long before the old gen is literally full (this is the
+    /// paper's "premature promotion ... results in major collections").
+    promoted_since_major: u64,
+    stats: GcStats,
+    timeline: Timeline,
+    last_sample_t: f64,
+}
+
+/// The simulated heap. Cheap to share (`Arc`); workers allocate through
+/// [`ThreadAlloc`] handles created by [`SimHeap::thread_alloc`].
+pub struct SimHeap {
+    params: HeapParams,
+    /// Approximate young-generation occupancy including garbage; the minor
+    /// GC trigger. Updated by TLAB flushes.
+    young_fill: AtomicU64,
+    /// Old occupancy (live + garbage) — the major GC trigger.
+    old_fill: AtomicU64,
+    core: Mutex<HeapCore>,
+    epoch: Instant,
+}
+
+impl SimHeap {
+    pub fn new(params: HeapParams) -> Arc<SimHeap> {
+        Arc::new(SimHeap {
+            params,
+            young_fill: AtomicU64::new(0),
+            old_fill: AtomicU64::new(0),
+            core: Mutex::new(HeapCore {
+                cohorts: Vec::new(),
+                old_garbage: 0,
+                promoted_since_major: 0,
+                stats: GcStats::default(),
+                timeline: Timeline::new(),
+                last_sample_t: 0.0,
+            }),
+            epoch: Instant::now(),
+        })
+    }
+
+    /// Convenience: default params.
+    pub fn default_heap() -> Arc<SimHeap> {
+        SimHeap::new(HeapParams::default())
+    }
+
+    /// A disabled heap: every operation is a no-op.
+    pub fn disabled() -> Arc<SimHeap> {
+        SimHeap::new(HeapParams::disabled())
+    }
+
+    pub fn params(&self) -> &HeapParams {
+        &self.params
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.params.enabled
+    }
+
+    /// Register (or look up) a named allocation cohort.
+    pub fn cohort(&self, name: &'static str) -> CohortId {
+        let mut core = self.core.lock().unwrap();
+        if let Some(idx) = core.cohorts.iter().position(|c| c.name == name) {
+            return CohortId(idx);
+        }
+        core.cohorts.push(Cohort {
+            name,
+            ..Default::default()
+        });
+        CohortId(core.cohorts.len() - 1)
+    }
+
+    /// Create a per-thread allocation handle.
+    pub fn thread_alloc(self: &Arc<Self>) -> ThreadAlloc {
+        ThreadAlloc {
+            heap: Arc::clone(self),
+            pending: Vec::new(),
+            pending_bytes: 0,
+        }
+    }
+
+    /// Seconds since heap creation (wall clock, includes injected pauses).
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Snapshot the statistics.
+    pub fn stats(&self) -> GcStats {
+        self.core.lock().unwrap().stats
+    }
+
+    /// Clone the timeline recorded so far.
+    pub fn timeline(&self) -> Timeline {
+        self.core.lock().unwrap().timeline.clone()
+    }
+
+    /// Current occupancy (young fill + old fill), bytes.
+    pub fn heap_used(&self) -> u64 {
+        self.young_fill.load(Ordering::Relaxed) + self.old_fill.load(Ordering::Relaxed)
+    }
+
+    /// Live bytes in a cohort (young + old), for assertions in tests.
+    pub fn cohort_live(&self, id: CohortId) -> u64 {
+        let core = self.core.lock().unwrap();
+        let c = &core.cohorts[id.0];
+        c.live_young() + c.old
+    }
+
+    /// Drop every live byte of a cohort (bulk free, e.g. when the reduce
+    /// phase has consumed all intermediate lists).
+    pub fn release_cohort(&self, id: CohortId) {
+        if !self.params.enabled {
+            return;
+        }
+        let mut core = self.core.lock().unwrap();
+        let c = &mut core.cohorts[id.0];
+        // Young bytes become garbage (stay in young_fill until minor GC);
+        // old bytes become old garbage (collected by the next major GC).
+        c.pending_alloc = 0;
+        c.pending_free = 0;
+        c.buckets = [0; MAX_TENURE];
+        let old = std::mem::take(&mut c.old);
+        core.old_garbage += old;
+        // old_fill unchanged: garbage still occupies the old gen.
+        drop(core);
+        let _ = old;
+    }
+
+    /// Fold a batch of (cohort, alloc_bytes, alloc_objects, free_bytes) into
+    /// the shared state and run any due collections. Called by TLAB flushes.
+    fn commit(&self, batch: &[(CohortId, u64, u64, u64)]) {
+        if !self.params.enabled {
+            return;
+        }
+        let mut alloc_total = 0u64;
+        {
+            let mut core = self.core.lock().unwrap();
+            for &(id, ab, ao, fb) in batch {
+                let c = &mut core.cohorts[id.0];
+                c.pending_alloc += ab;
+                c.pending_free += fb;
+                core.stats.allocated_bytes += ab;
+                core.stats.allocated_objects += ao;
+                alloc_total += ab;
+            }
+        }
+        let young = self.young_fill.fetch_add(alloc_total, Ordering::Relaxed) + alloc_total;
+        let trigger =
+            (self.params.young_capacity() as f64 * self.params.policy.young_trigger_fraction())
+                as u64;
+        if young >= trigger {
+            self.minor_gc();
+        } else {
+            self.maybe_sample();
+        }
+    }
+
+    /// Record a periodic timeline sample if enough time has passed.
+    fn maybe_sample(&self) {
+        let t = self.now();
+        let mut core = self.core.lock().unwrap();
+        if t - core.last_sample_t >= self.params.sample_every {
+            core.last_sample_t = t;
+            let used = self.heap_used();
+            core.stats.peak_heap_bytes = core.stats.peak_heap_bytes.max(used);
+            let gc = core.stats.gc_seconds;
+            core.timeline.record(TimelinePoint {
+                t_secs: t,
+                heap_used: used,
+                gc_cum_secs: gc,
+                event: TimelineEvent::Sample,
+            });
+        }
+    }
+
+    /// Run a minor collection: age young cohorts, promote tenured bytes,
+    /// inject the pause, then run a major collection if the old gen filled.
+    fn minor_gc(&self) {
+        let mut core = self.core.lock().unwrap();
+        let tenure = self.params.tenure_age.min(MAX_TENURE);
+        let mut live_young_before = 0u64;
+        let mut promoted = 0u64;
+        let mut old_garbage_delta = 0u64;
+        for c in core.cohorts.iter_mut() {
+            // Apply frees youngest-first: pending allocations die first
+            // (scratch objects), then the youngest survivor buckets.
+            let mut to_free = c.pending_free;
+            c.pending_free = 0;
+            let take = to_free.min(c.pending_alloc);
+            c.pending_alloc -= take;
+            to_free -= take;
+            for b in c.buckets.iter_mut() {
+                let take = to_free.min(*b);
+                *b -= take;
+                to_free -= take;
+            }
+            // Any remaining frees hit the old generation (rare: bulk frees
+            // of promoted data) — they become old garbage.
+            let take = to_free.min(c.old);
+            c.old -= take;
+            old_garbage_delta += take;
+
+            live_young_before += c.live_young();
+
+            // Promote the oldest bucket, shift the rest, file pending
+            // allocations as age-0 survivors.
+            let tenured = c.buckets[tenure - 1];
+            promoted += tenured;
+            c.old += tenured;
+            for age in (1..tenure).rev() {
+                c.buckets[age] = c.buckets[age - 1];
+            }
+            c.buckets[0] = std::mem::take(&mut c.pending_alloc);
+        }
+        core.old_garbage += old_garbage_delta;
+        let live_young_after: u64 = core.cohorts.iter().map(|c| c.live_young()).sum();
+
+        let pause = self.params.policy.minor_pause(
+            live_young_before,
+            self.params.gc_threads,
+            &self.params.cost,
+        );
+        core.stats.minor_collections += 1;
+        core.stats.promoted_bytes += promoted;
+        core.promoted_since_major += promoted;
+        core.stats.gc_seconds += pause;
+
+        self.young_fill.store(live_young_after, Ordering::Relaxed);
+        self.old_fill.fetch_add(promoted, Ordering::Relaxed);
+        let used = self.heap_used();
+        core.stats.peak_heap_bytes = core.stats.peak_heap_bytes.max(used);
+        let gc_cum = core.stats.gc_seconds;
+        let t = self.now();
+        core.last_sample_t = t;
+        core.timeline.record(TimelinePoint {
+            t_secs: t,
+            heap_used: used,
+            gc_cum_secs: gc_cum,
+            event: TimelineEvent::MinorGc,
+        });
+
+        let old_cap = self.params.old_capacity();
+        // Full GC when the old gen is nearly full OR promotion pressure
+        // since the last full collection is sustained (ergonomic trigger).
+        let need_major = self.old_fill.load(Ordering::Relaxed)
+            >= (old_cap as f64 * 0.9) as u64
+            || core.promoted_since_major >= (old_cap as f64 * 0.25) as u64;
+        drop(core);
+
+        self.inject(pause);
+        if need_major {
+            self.major_gc();
+        }
+    }
+
+    /// Full collection: drop old garbage, scan all live data.
+    fn major_gc(&self) {
+        let mut core = self.core.lock().unwrap();
+        let live_old: u64 = core.cohorts.iter().map(|c| c.old).sum();
+        let live_young: u64 = core.cohorts.iter().map(|c| c.live_young()).sum();
+        let pause = self.params.policy.major_pause(
+            live_old + live_young,
+            self.params.gc_threads,
+            &self.params.cost,
+        );
+        core.old_garbage = 0;
+        core.promoted_since_major = 0;
+        core.stats.major_collections += 1;
+        core.stats.gc_seconds += pause;
+        core.stats.major_seconds += pause;
+        self.old_fill.store(live_old, Ordering::Relaxed);
+        let used = self.heap_used();
+        core.stats.peak_heap_bytes = core.stats.peak_heap_bytes.max(used);
+        let gc_cum = core.stats.gc_seconds;
+        let t = self.now();
+        core.timeline.record(TimelinePoint {
+            t_secs: t,
+            heap_used: used,
+            gc_cum_secs: gc_cum,
+            event: TimelineEvent::MajorGc,
+        });
+        drop(core);
+        self.inject(pause);
+    }
+
+    /// Convert a simulated pause into real wall-clock delay.
+    fn inject(&self, pause_secs: f64) {
+        let wall = pause_secs * self.params.time_scale;
+        if wall > 0.0 {
+            // Sleep is fine at these magnitudes (pauses are ≥ 100 µs).
+            std::thread::sleep(std::time::Duration::from_secs_f64(wall));
+        }
+    }
+}
+
+/// Per-thread allocation handle (TLAB analogue). Batches bookkeeping and
+/// commits to the shared heap every [`FLUSH_BYTES`].
+pub struct ThreadAlloc {
+    heap: Arc<SimHeap>,
+    /// (cohort, alloc bytes, alloc objects, free bytes) accumulated locally.
+    pending: Vec<(CohortId, u64, u64, u64)>,
+    pending_bytes: u64,
+}
+
+/// Local bytes buffered before a commit to the shared heap.
+pub const FLUSH_BYTES: u64 = 64 << 10;
+
+impl ThreadAlloc {
+    /// Record an allocation of `bytes` (one object) in `cohort`.
+    #[inline]
+    pub fn alloc(&mut self, cohort: CohortId, bytes: u64) {
+        self.alloc_n(cohort, bytes, 1);
+    }
+
+    /// Record `objects` allocations totalling `bytes` in `cohort`.
+    #[inline]
+    pub fn alloc_n(&mut self, cohort: CohortId, bytes: u64, objects: u64) {
+        self.record(cohort, bytes, objects, 0);
+    }
+
+    /// Record that `bytes` previously allocated in `cohort` became garbage.
+    #[inline]
+    pub fn free(&mut self, cohort: CohortId, bytes: u64) {
+        if !self.heap.params.enabled {
+            return;
+        }
+        match self.pending.iter_mut().find(|p| p.0 == cohort) {
+            Some(p) => p.3 += bytes,
+            None => self.pending.push((cohort, 0, 0, bytes)),
+        }
+    }
+
+    /// Allocate-and-immediately-free: a temporary that dies in the nursery
+    /// (string scratch, iterator boxes). Costs young space but never
+    /// survives a collection. Recorded as one entry so the alloc and the
+    /// free always land in the *same* commit (a flush between them would
+    /// make the temporary look live across a collection).
+    #[inline]
+    pub fn scratch(&mut self, cohort: CohortId, bytes: u64) {
+        self.record(cohort, bytes, 1, bytes);
+    }
+
+    /// Common path: batch (alloc, objects, free) locally, flush when full.
+    #[inline]
+    fn record(&mut self, cohort: CohortId, alloc_bytes: u64, objects: u64, free_bytes: u64) {
+        if !self.heap.params.enabled {
+            return;
+        }
+        match self.pending.iter_mut().find(|p| p.0 == cohort) {
+            Some(p) => {
+                p.1 += alloc_bytes;
+                p.2 += objects;
+                p.3 += free_bytes;
+            }
+            None => self.pending.push((cohort, alloc_bytes, objects, free_bytes)),
+        }
+        self.pending_bytes += alloc_bytes;
+        if self.pending_bytes >= FLUSH_BYTES {
+            self.flush();
+        }
+    }
+
+    /// Push buffered bookkeeping to the shared heap (runs GC if due).
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.heap.commit(&self.pending);
+        self.pending.clear();
+        self.pending_bytes = 0;
+    }
+
+    pub fn heap(&self) -> &Arc<SimHeap> {
+        &self.heap
+    }
+}
+
+impl Drop for ThreadAlloc {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_heap(policy: GcPolicy) -> Arc<SimHeap> {
+        SimHeap::new(HeapParams {
+            total_bytes: 4 << 20, // 1 MiB young, 3 MiB old
+            young_fraction: 0.25,
+            tenure_age: 2,
+            gc_threads: 4,
+            policy,
+            cost: CostModel::default(),
+            time_scale: 0.0, // account, don't sleep
+            sample_every: 1e9,
+            enabled: true,
+        })
+    }
+
+    #[test]
+    fn scratch_objects_die_young_no_promotion() {
+        let heap = tiny_heap(GcPolicy::Parallel);
+        let scratch = heap.cohort("scratch");
+        let mut a = heap.thread_alloc();
+        // 8 MiB of short-lived data through a 1 MiB young gen.
+        for _ in 0..8192 {
+            a.scratch(scratch, 1024);
+        }
+        a.flush();
+        let s = heap.stats();
+        assert!(s.minor_collections >= 4, "minor GCs: {}", s.minor_collections);
+        assert_eq!(s.promoted_bytes, 0, "scratch must never promote");
+        assert_eq!(s.major_collections, 0);
+    }
+
+    #[test]
+    fn long_lived_data_promotes_and_triggers_major() {
+        let heap = tiny_heap(GcPolicy::Parallel);
+        let vals = heap.cohort("intermediate");
+        let mut a = heap.thread_alloc();
+        // 6 MiB of *live* data (never freed) through 1 MiB young / 3 MiB old:
+        // must promote and eventually force a major collection.
+        for _ in 0..6144 {
+            a.alloc(vals, 1024);
+        }
+        a.flush();
+        let s = heap.stats();
+        assert!(s.promoted_bytes > 0, "long-lived data must promote");
+        assert!(s.major_collections >= 1, "old gen must overflow");
+        assert!(heap.cohort_live(vals) >= 6144 * 1024);
+    }
+
+    #[test]
+    fn release_cohort_makes_major_gc_reclaim() {
+        let heap = tiny_heap(GcPolicy::Parallel);
+        let vals = heap.cohort("intermediate");
+        let mut a = heap.thread_alloc();
+        for _ in 0..4096 {
+            a.alloc(vals, 1024);
+        }
+        a.flush();
+        assert!(heap.cohort_live(vals) > 0);
+        heap.release_cohort(vals);
+        assert_eq!(heap.cohort_live(vals), 0);
+    }
+
+    #[test]
+    fn gc_time_accumulates_and_timeline_records() {
+        let heap = tiny_heap(GcPolicy::Serial);
+        let c = heap.cohort("x");
+        let mut a = heap.thread_alloc();
+        for _ in 0..4096 {
+            a.scratch(c, 1024);
+        }
+        a.flush();
+        let s = heap.stats();
+        assert!(s.gc_seconds > 0.0);
+        let tl = heap.timeline();
+        assert!(tl.count(TimelineEvent::MinorGc) as u64 == s.minor_collections);
+    }
+
+    #[test]
+    fn optimized_vs_unoptimized_allocation_shapes() {
+        // The paper's core claim, in miniature: per-value allocation promotes
+        // and majors; per-key holder allocation does not.
+        let run = |per_value: bool| {
+            let heap = tiny_heap(GcPolicy::Parallel);
+            let c = heap.cohort("inter");
+            let scratch = heap.cohort("scratch");
+            let mut a = heap.thread_alloc();
+            let keys = 64u64;
+            let values = 200_000u64;
+            if per_value {
+                for _ in 0..values {
+                    a.alloc(c, 40); // boxed value + list slot
+                    a.scratch(scratch, 24);
+                }
+            } else {
+                for _ in 0..keys {
+                    a.alloc(c, 32); // one holder per key
+                }
+                for _ in 0..values {
+                    a.scratch(scratch, 24); // same scratch traffic
+                }
+            }
+            a.flush();
+            heap.release_cohort(c);
+            heap.stats()
+        };
+        let unopt = run(true);
+        let opt = run(false);
+        assert!(unopt.promoted_bytes > 0);
+        assert!(unopt.major_collections >= 1);
+        assert_eq!(opt.major_collections, 0, "holders must not overflow old gen");
+        assert!(opt.gc_seconds < unopt.gc_seconds * 0.7,
+            "optimized GC {} !<< unoptimized {}", opt.gc_seconds, unopt.gc_seconds);
+    }
+
+    #[test]
+    fn disabled_heap_is_a_noop() {
+        let heap = SimHeap::disabled();
+        let c = heap.cohort("x");
+        let mut a = heap.thread_alloc();
+        for _ in 0..100_000 {
+            a.alloc(c, 4096);
+        }
+        a.flush();
+        let s = heap.stats();
+        assert_eq!(s.allocated_bytes, 0);
+        assert_eq!(s.minor_collections, 0);
+    }
+
+    #[test]
+    fn g1_runs_more_smaller_minors_than_parallel() {
+        let run = |p: GcPolicy| {
+            let heap = tiny_heap(p);
+            let c = heap.cohort("s");
+            let mut a = heap.thread_alloc();
+            for _ in 0..8192 {
+                a.scratch(c, 1024);
+            }
+            a.flush();
+            heap.stats()
+        };
+        let par = run(GcPolicy::Parallel);
+        let g1 = run(GcPolicy::G1ish);
+        assert!(
+            g1.minor_collections > par.minor_collections,
+            "g1 {} !> parallel {}",
+            g1.minor_collections,
+            par.minor_collections
+        );
+    }
+
+    #[test]
+    fn concurrent_allocators_are_consistent() {
+        let heap = tiny_heap(GcPolicy::Parallel);
+        let c = heap.cohort("shared");
+        let threads = 8;
+        let per_thread = 2048u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let heap = Arc::clone(&heap);
+                s.spawn(move || {
+                    let mut a = heap.thread_alloc();
+                    for _ in 0..per_thread {
+                        a.alloc(c, 256);
+                    }
+                });
+            }
+        });
+        let s = heap.stats();
+        assert_eq!(s.allocated_bytes, threads * per_thread * 256);
+        assert_eq!(s.allocated_objects, threads * per_thread);
+    }
+}

@@ -1,0 +1,40 @@
+//! memsim — a generational managed-heap simulator.
+//!
+//! The paper's optimizer speedup is a *memory-management* story: the
+//! unoptimized reduce flow keeps every intermediate value alive across the
+//! whole map phase, so minor collections keep finding them live, prematurely
+//! promote them into the old generation, and eventually trigger major
+//! collections that dominate runtime (Figure 8). The combining flow allocates
+//! one holder per *key* instead of one box per *value*, so the heap stays
+//! shallow and GC time collapses (Figure 9).
+//!
+//! Rust has no garbage collector, so this module reproduces that mechanism
+//! with an instrumented simulator the MR4R collector allocates through:
+//!
+//! * allocations are grouped into **cohorts** (e.g. "intermediate values",
+//!   "holders", "scratch") with per-cohort live accounting;
+//! * a **young generation** with age buckets and a **tenuring threshold**
+//!   models premature promotion;
+//! * an **old generation** whose occupancy triggers major collections;
+//! * three [`policy::GcPolicy`] cost models (Serial / Parallel / G1-like)
+//!   mirror the JVM collectors swept in Figure 10;
+//! * computed pauses are **injected into wall-clock** (the collecting thread
+//!   holds the allocation lock for the pause), so optimized-vs-unoptimized
+//!   wall-clock ratios include the GC effect exactly like the paper's;
+//! * a [`timeline::Timeline`] records (time, heap-used, GC-fraction) samples
+//!   to regenerate Figures 8 and 9.
+//!
+//! The allocation fast path is TLAB-like: threads batch allocation into a
+//! thread-local counter and flush to the shared heap every few KiB, the same
+//! trick HotSpot uses, keeping the simulator off the profile until a
+//! collection actually happens.
+
+pub mod heap;
+pub mod policy;
+pub mod stats;
+pub mod timeline;
+
+pub use heap::{CohortId, HeapParams, SimHeap, ThreadAlloc};
+pub use policy::GcPolicy;
+pub use stats::GcStats;
+pub use timeline::{Timeline, TimelineEvent, TimelinePoint};

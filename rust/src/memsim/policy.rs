@@ -1,0 +1,159 @@
+//! GC policy cost models.
+//!
+//! The paper evaluates the JVM's collectors (the default Parallel collector
+//! in the main figures; "all the combinations of GC algorithms" in Figure
+//! 10). We model the three families that matter for the sweep:
+//!
+//! * **Serial** — single-threaded stop-the-world copying/mark-compact.
+//! * **Parallel** — the paper's default; STW but scanning parallelized
+//!   across GC threads.
+//! * **G1ish** — region-incremental: smaller effective young gen (more,
+//!   shorter pauses) and mostly-concurrent old-gen collection modeled as a
+//!   reduced STW factor plus a throughput tax.
+//!
+//! Costs are expressed per byte *scanned* (live data), which is the
+//! first-order model of tracing collectors: dead objects are free, live
+//! objects cost a copy/scan.
+
+/// Which collector family to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum GcPolicy {
+    Serial,
+    Parallel,
+    G1ish,
+}
+
+impl GcPolicy {
+    pub const ALL: [GcPolicy; 3] = [GcPolicy::Serial, GcPolicy::Parallel, GcPolicy::G1ish];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            GcPolicy::Serial => "serial",
+            GcPolicy::Parallel => "parallel",
+            GcPolicy::G1ish => "g1",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<GcPolicy> {
+        match s {
+            "serial" => Some(GcPolicy::Serial),
+            "parallel" => Some(GcPolicy::Parallel),
+            "g1" | "g1ish" => Some(GcPolicy::G1ish),
+            _ => None,
+        }
+    }
+
+    /// Effective parallelism applied to scan cost.
+    fn scan_parallelism(self, gc_threads: usize) -> f64 {
+        match self {
+            GcPolicy::Serial => 1.0,
+            // Parallel scanning scales sub-linearly (sync + card-table
+            // overheads); 0.75 exponent is a common empirical fit.
+            GcPolicy::Parallel | GcPolicy::G1ish => (gc_threads.max(1) as f64).powf(0.75),
+        }
+    }
+
+    /// Fraction of the nominal young generation used before a minor GC is
+    /// triggered. G1 uses smaller increments (more frequent, shorter pauses).
+    pub fn young_trigger_fraction(self) -> f64 {
+        match self {
+            GcPolicy::Serial | GcPolicy::Parallel => 1.0,
+            GcPolicy::G1ish => 0.5,
+        }
+    }
+
+    /// Seconds of stop-the-world pause for a minor collection that found
+    /// `live_young` bytes live.
+    pub fn minor_pause(self, live_young: u64, gc_threads: usize, cost: &CostModel) -> f64 {
+        let scan = live_young as f64 * cost.minor_per_byte / self.scan_parallelism(gc_threads);
+        cost.minor_base + scan
+    }
+
+    /// Seconds of stop-the-world pause for a major collection over
+    /// `live_total` bytes.
+    pub fn major_pause(self, live_total: u64, gc_threads: usize, cost: &CostModel) -> f64 {
+        let conc_factor = match self {
+            // G1 does most old-gen work concurrently; only ~35% is STW.
+            GcPolicy::G1ish => 0.35,
+            _ => 1.0,
+        };
+        let scan =
+            live_total as f64 * cost.major_per_byte / self.scan_parallelism(gc_threads);
+        (cost.major_base + scan) * conc_factor
+    }
+}
+
+/// Scan-cost constants. Defaults are calibrated so the scaled benchmark
+/// inputs reproduce the paper's GC-time *fractions* (up to ~40% of runtime
+/// for unoptimized Word Count) rather than any absolute pause figure; see
+/// EXPERIMENTS.md §Calibration.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Fixed minor-GC overhead (root scanning, safepoint), seconds.
+    pub minor_base: f64,
+    /// Seconds per live-young byte scanned.
+    pub minor_per_byte: f64,
+    /// Fixed major-GC overhead, seconds.
+    pub major_base: f64,
+    /// Seconds per live byte in a full collection.
+    pub major_per_byte: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel {
+            minor_base: 120e-6,
+            // ~3 GB/s single-threaded young scan/copy rate.
+            minor_per_byte: 1.0 / 3.0e9,
+            major_base: 800e-6,
+            // ~1.2 GB/s single-threaded full mark-compact rate.
+            major_per_byte: 1.0 / 1.2e9,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_roundtrip() {
+        for p in GcPolicy::ALL {
+            assert_eq!(GcPolicy::from_name(p.name()), Some(p));
+        }
+        assert_eq!(GcPolicy::from_name("zgc"), None);
+    }
+
+    #[test]
+    fn parallel_scans_faster_than_serial() {
+        let c = CostModel::default();
+        let live = 64 << 20;
+        let serial = GcPolicy::Serial.minor_pause(live, 8, &c);
+        let par = GcPolicy::Parallel.minor_pause(live, 8, &c);
+        assert!(par < serial, "parallel {par} !< serial {serial}");
+    }
+
+    #[test]
+    fn pause_grows_with_live_data() {
+        let c = CostModel::default();
+        let small = GcPolicy::Parallel.minor_pause(1 << 20, 4, &c);
+        let big = GcPolicy::Parallel.minor_pause(256 << 20, 4, &c);
+        assert!(big > small * 10.0);
+    }
+
+    #[test]
+    fn g1_major_cheaper_than_parallel_major() {
+        let c = CostModel::default();
+        let live = 512 << 20;
+        assert!(
+            GcPolicy::G1ish.major_pause(live, 8, &c)
+                < GcPolicy::Parallel.major_pause(live, 8, &c)
+        );
+    }
+
+    #[test]
+    fn g1_triggers_minor_earlier() {
+        assert!(GcPolicy::G1ish.young_trigger_fraction() < 1.0);
+        assert_eq!(GcPolicy::Parallel.young_trigger_fraction(), 1.0);
+    }
+}

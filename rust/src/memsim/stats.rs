@@ -1,0 +1,82 @@
+//! Aggregate GC statistics reported by the simulator.
+
+/// Counters accumulated over a heap's lifetime (or since `reset`).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct GcStats {
+    /// Total bytes ever allocated.
+    pub allocated_bytes: u64,
+    /// Number of allocation calls (object count analogue).
+    pub allocated_objects: u64,
+    /// Minor (young-generation) collections.
+    pub minor_collections: u64,
+    /// Major (full-heap) collections.
+    pub major_collections: u64,
+    /// Bytes promoted young → old.
+    pub promoted_bytes: u64,
+    /// Total simulated stop-the-world time, seconds.
+    pub gc_seconds: f64,
+    /// Of which, time in major collections.
+    pub major_seconds: f64,
+    /// Peak heap occupancy observed (young fill + old), bytes.
+    pub peak_heap_bytes: u64,
+}
+
+impl GcStats {
+    /// GC share of an elapsed wall-clock interval.
+    pub fn gc_fraction(&self, elapsed_secs: f64) -> f64 {
+        if elapsed_secs <= 0.0 {
+            return 0.0;
+        }
+        (self.gc_seconds / elapsed_secs).clamp(0.0, 1.0)
+    }
+
+    /// Difference of two snapshots (for per-phase accounting).
+    pub fn since(&self, earlier: &GcStats) -> GcStats {
+        GcStats {
+            allocated_bytes: self.allocated_bytes - earlier.allocated_bytes,
+            allocated_objects: self.allocated_objects - earlier.allocated_objects,
+            minor_collections: self.minor_collections - earlier.minor_collections,
+            major_collections: self.major_collections - earlier.major_collections,
+            promoted_bytes: self.promoted_bytes - earlier.promoted_bytes,
+            gc_seconds: self.gc_seconds - earlier.gc_seconds,
+            major_seconds: self.major_seconds - earlier.major_seconds,
+            peak_heap_bytes: self.peak_heap_bytes.max(earlier.peak_heap_bytes),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fraction_clamped() {
+        let s = GcStats {
+            gc_seconds: 2.0,
+            ..Default::default()
+        };
+        assert_eq!(s.gc_fraction(0.0), 0.0);
+        assert_eq!(s.gc_fraction(1.0), 1.0); // clamped
+        assert_eq!(s.gc_fraction(4.0), 0.5);
+    }
+
+    #[test]
+    fn since_subtracts() {
+        let a = GcStats {
+            allocated_bytes: 100,
+            minor_collections: 2,
+            gc_seconds: 1.0,
+            ..Default::default()
+        };
+        let b = GcStats {
+            allocated_bytes: 250,
+            minor_collections: 5,
+            gc_seconds: 1.75,
+            ..Default::default()
+        };
+        let d = b.since(&a);
+        assert_eq!(d.allocated_bytes, 150);
+        assert_eq!(d.minor_collections, 3);
+        assert!((d.gc_seconds - 0.75).abs() < 1e-12);
+    }
+}

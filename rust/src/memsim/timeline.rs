@@ -1,0 +1,144 @@
+//! Heap-usage / GC-time timelines — the data behind Figures 8 and 9.
+//!
+//! The paper plots, for Word Count, heap usage (primary axis) and the
+//! percentage of runtime spent in GC (secondary axis) against execution
+//! time, once without the optimizer (Fig. 8: saw-tooth heap, GC share
+//! climbing as major collections kick in) and once with it (Fig. 9: flat GC
+//! share). The simulator records a [`TimelinePoint`] at every collection and
+//! at periodic allocation milestones; the harness bins these into the plot
+//! series.
+
+/// One sample of heap state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TimelinePoint {
+    /// Seconds since the heap was created (wall clock, includes injected
+    /// pauses — matching how the paper's x-axis includes GC time).
+    pub t_secs: f64,
+    /// Occupied heap bytes (young fill + old generation).
+    pub heap_used: u64,
+    /// Cumulative simulated GC seconds up to this point.
+    pub gc_cum_secs: f64,
+    /// What triggered the sample.
+    pub event: TimelineEvent,
+}
+
+/// Why a timeline point was recorded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimelineEvent {
+    /// Periodic sample on the allocation path.
+    Sample,
+    /// After a minor collection.
+    MinorGc,
+    /// After a major collection.
+    MajorGc,
+}
+
+/// A growable series of [`TimelinePoint`]s.
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    points: Vec<TimelinePoint>,
+}
+
+impl Timeline {
+    pub fn new() -> Self {
+        Timeline { points: Vec::new() }
+    }
+
+    pub fn record(&mut self, p: TimelinePoint) {
+        self.points.push(p);
+    }
+
+    pub fn points(&self) -> &[TimelinePoint] {
+        &self.points
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    /// Bin the timeline into `bins` equal time windows, reporting for each:
+    /// (window end time, max heap used, GC fraction *within the window*).
+    /// This is the exact series Figures 8/9 plot.
+    pub fn binned(&self, bins: usize) -> Vec<(f64, u64, f64)> {
+        if self.points.is_empty() || bins == 0 {
+            return Vec::new();
+        }
+        let t_end = self.points.last().unwrap().t_secs.max(1e-9);
+        let width = t_end / bins as f64;
+        let mut out = Vec::with_capacity(bins);
+        let mut idx = 0usize;
+        let mut last_gc_cum = 0.0f64;
+        let mut last_heap = 0u64;
+        for b in 0..bins {
+            let window_end = width * (b + 1) as f64;
+            let mut max_heap = last_heap;
+            let mut gc_at_end = last_gc_cum;
+            while idx < self.points.len() && self.points[idx].t_secs <= window_end + 1e-12 {
+                max_heap = max_heap.max(self.points[idx].heap_used);
+                gc_at_end = self.points[idx].gc_cum_secs;
+                last_heap = self.points[idx].heap_used;
+                idx += 1;
+            }
+            let gc_frac = ((gc_at_end - last_gc_cum) / width).clamp(0.0, 1.0);
+            last_gc_cum = gc_at_end;
+            out.push((window_end, max_heap, gc_frac));
+        }
+        out
+    }
+
+    /// Count of events of a given kind.
+    pub fn count(&self, event: TimelineEvent) -> usize {
+        self.points.iter().filter(|p| p.event == event).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(t: f64, heap: u64, gc: f64, event: TimelineEvent) -> TimelinePoint {
+        TimelinePoint {
+            t_secs: t,
+            heap_used: heap,
+            gc_cum_secs: gc,
+            event,
+        }
+    }
+
+    #[test]
+    fn binning_tracks_max_heap_and_gc_delta() {
+        let mut tl = Timeline::new();
+        tl.record(pt(0.1, 10, 0.0, TimelineEvent::Sample));
+        tl.record(pt(0.4, 50, 0.05, TimelineEvent::MinorGc));
+        tl.record(pt(0.9, 20, 0.05, TimelineEvent::Sample));
+        tl.record(pt(1.0, 80, 0.25, TimelineEvent::MajorGc));
+        let bins = tl.binned(2);
+        assert_eq!(bins.len(), 2);
+        // Window 1 (0, 0.5]: saw heap 10 and 50, gc went 0 → 0.05.
+        assert_eq!(bins[0].1, 50);
+        assert!((bins[0].2 - 0.05 / 0.5).abs() < 1e-9);
+        // Window 2 (0.5, 1.0]: heap max 80, gc 0.05 → 0.25.
+        assert_eq!(bins[1].1, 80);
+        assert!((bins[1].2 - 0.20 / 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_timeline_bins_empty() {
+        assert!(Timeline::new().binned(10).is_empty());
+    }
+
+    #[test]
+    fn event_counts() {
+        let mut tl = Timeline::new();
+        tl.record(pt(0.1, 1, 0.0, TimelineEvent::MinorGc));
+        tl.record(pt(0.2, 1, 0.0, TimelineEvent::MinorGc));
+        tl.record(pt(0.3, 1, 0.1, TimelineEvent::MajorGc));
+        assert_eq!(tl.count(TimelineEvent::MinorGc), 2);
+        assert_eq!(tl.count(TimelineEvent::MajorGc), 1);
+        assert_eq!(tl.count(TimelineEvent::Sample), 0);
+    }
+}

@@ -1,0 +1,218 @@
+//! The optimizer agent — the Java-agent analogue (paper §3.2).
+//!
+//! In the paper, a Java agent instruments *every* loaded class, detects
+//! subclasses of `Reducer`, and rewrites their bytecode at class-load time.
+//! Here, the agent sits on the reducer-registration path of
+//! [`crate::api::MapReduce`]: every reducer passes through
+//! [`OptimizerAgent::process`], which runs **detection** (cheap structural
+//! check, timed), then **transformation** (PDG analysis + slicing + fast
+//! path compilation, timed), caches the outcome per reducer class, and
+//! reports the per-class timing statistics behind the paper's §4.3 numbers
+//! (81 µs detection / 7.6 ms transformation on their JVM).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use super::analyze::{analyze, detect, Reject};
+use super::combiner::Combiner;
+use super::rir::Program;
+use super::transform::transform;
+use crate::util::timer::{Samples, Stopwatch};
+
+/// Outcome of processing one reducer class.
+#[derive(Clone, Debug)]
+pub enum Decision {
+    /// Transformed: run the combining flow with this combiner.
+    Combine(Combiner),
+    /// Analysis rejected the reducer: run the reduce flow. The reason is
+    /// kept for diagnostics (`mr4r explain`).
+    Fallback(Reject),
+    /// The reducer is opaque (native closure): never optimizable.
+    Opaque,
+}
+
+impl Decision {
+    pub fn combiner(&self) -> Option<&Combiner> {
+        match self {
+            Decision::Combine(c) => Some(c),
+            _ => None,
+        }
+    }
+
+    pub fn is_optimized(&self) -> bool {
+        matches!(self, Decision::Combine(_))
+    }
+}
+
+/// Per-agent timing statistics (paper §4.3).
+#[derive(Clone, Debug, Default)]
+pub struct AgentStats {
+    /// Seconds per detection pass (one per processed class).
+    pub detection: Samples,
+    /// Seconds per transformation pass (only classes that detected).
+    pub transformation: Samples,
+    /// Classes that ended optimized.
+    pub optimized: usize,
+    /// Classes that fell back with a rejection.
+    pub rejected: usize,
+    /// Opaque (closure) reducers seen.
+    pub opaque: usize,
+    /// Cache hits (class processed before).
+    pub cache_hits: usize,
+}
+
+/// The agent. Cheap to clone (shared internals), thread-safe.
+#[derive(Clone, Default)]
+pub struct OptimizerAgent {
+    inner: Arc<Mutex<AgentInner>>,
+}
+
+#[derive(Default)]
+struct AgentInner {
+    cache: HashMap<String, Decision>,
+    stats: AgentStats,
+}
+
+/// Whether optimization is attempted (the paper's optimizer on/off switch
+/// used throughout Figures 7–10).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AgentMode {
+    Enabled,
+    Disabled,
+}
+
+impl OptimizerAgent {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Process a reducer program: detection, then transformation, with
+    /// per-class caching (a class is rewritten once at "load time").
+    pub fn process(&self, program: &Program) -> Decision {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(hit) = inner.cache.get(&program.name).cloned() {
+            inner.stats.cache_hits += 1;
+            return hit;
+        }
+
+        // Detection: the per-class structural scan the agent pays on every
+        // candidate (paper: 81 µs average).
+        let sw = Stopwatch::start();
+        let detected = detect(program);
+        inner.stats.detection.push(sw.secs());
+
+        let decision = if !detected {
+            inner.stats.rejected += 1;
+            Decision::Fallback(Reject::NoLoopNoIdiom)
+        } else {
+            // Transformation: PDG + slicing + fast-path compile
+            // (paper: 7.6 ms average).
+            let sw = Stopwatch::start();
+            let d = match analyze(program) {
+                Ok(a) => {
+                    inner.stats.optimized += 1;
+                    Decision::Combine(transform(Arc::new(program.clone()), a))
+                }
+                Err(r) => {
+                    inner.stats.rejected += 1;
+                    Decision::Fallback(r)
+                }
+            };
+            inner.stats.transformation.push(sw.secs());
+            d
+        };
+
+        inner
+            .cache
+            .insert(program.name.clone(), decision.clone());
+        decision
+    }
+
+    /// Record an opaque (closure) reducer passing the registration hook.
+    pub fn note_opaque(&self) {
+        self.inner.lock().unwrap().stats.opaque += 1;
+    }
+
+    pub fn stats(&self) -> AgentStats {
+        self.inner.lock().unwrap().stats.clone()
+    }
+
+    /// Drop the cache (tests and the overhead harness re-measure cold).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.cache.clear();
+        inner.stats = AgentStats::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::builder::canon;
+
+    #[test]
+    fn accepts_and_caches() {
+        let agent = OptimizerAgent::new();
+        let p = canon::sum_i64("wc-sum");
+        assert!(agent.process(&p).is_optimized());
+        assert!(agent.process(&p).is_optimized());
+        let s = agent.stats();
+        assert_eq!(s.optimized, 1, "second call must hit the cache");
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.detection.len(), 1);
+        assert_eq!(s.transformation.len(), 1);
+    }
+
+    #[test]
+    fn rejects_with_reason() {
+        let agent = OptimizerAgent::new();
+        match agent.process(&canon::early_exit("ee")) {
+            Decision::Fallback(Reject::EarlyExit) => {}
+            other => panic!("expected EarlyExit fallback, got {other:?}"),
+        }
+        assert_eq!(agent.stats().rejected, 1);
+    }
+
+    #[test]
+    fn detection_cheaper_than_transformation() {
+        let agent = OptimizerAgent::new();
+        // Process the full canonical suite to get stable samples.
+        for p in [
+            canon::sum_i64("a"),
+            canon::sum_f64("b"),
+            canon::sum_vec("c", 3),
+            canon::min_f64("d"),
+            canon::max_i64("e"),
+            canon::count("f"),
+            canon::scaled_sum_f64("g", 2.0),
+        ] {
+            agent.process(&p);
+        }
+        let s = agent.stats();
+        assert_eq!(s.optimized, 7);
+        // The paper's relationship: detection ≪ transformation.
+        assert!(
+            s.detection.mean() < s.transformation.mean(),
+            "detect {} !< transform {}",
+            s.detection.mean(),
+            s.transformation.mean()
+        );
+    }
+
+    #[test]
+    fn opaque_reducers_counted() {
+        let agent = OptimizerAgent::new();
+        agent.note_opaque();
+        assert_eq!(agent.stats().opaque, 1);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let agent = OptimizerAgent::new();
+        agent.process(&canon::sum_i64("x"));
+        agent.clear();
+        let s = agent.stats();
+        assert_eq!(s.optimized, 0);
+        assert_eq!(s.detection.len(), 0);
+    }
+}

@@ -1,0 +1,487 @@
+//! Transformability analysis (paper §3.1.1 and §3.2 steps 2–5).
+//!
+//! Decides whether a reducer program can be rewritten into a combiner. The
+//! two paper conditions:
+//!
+//! 1. *"the reducer iterates over all intermediate values"* — there is
+//!    exactly one values-loop, with no early exit;
+//! 2. *"the reduce operation is dependent only on the current intermediate
+//!    value and current value in the iteration"* — PDG sources of every
+//!    loop-body store ⊆ {accumulator locals, current value, constants}.
+//!
+//! Plus the two idioms handled directly: reducers that use only
+//! `values.len()` (COUNT) or only `values[0]` (FIRST).
+
+use super::pdg::{build_region, Source};
+use super::rir::{Instr, Program};
+use super::value::{Ty, Val};
+
+/// How the reducer can be combined.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Idiom {
+    /// General fold: init / per-value combine / finalize slices.
+    Fold,
+    /// Uses only the size of the value list.
+    Count,
+    /// Uses only the first element of the value list.
+    First,
+}
+
+/// Why a reducer cannot be transformed. Each variant is exercised by a
+/// dedicated negative test — rejection is a feature, not an error path.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum Reject {
+    #[error("no loop over the intermediate values and no recognized idiom")]
+    NoLoopNoIdiom,
+    #[error("more than one loop over the values")]
+    MultipleLoops,
+    #[error("early exit from the values loop (does not cover all values)")]
+    EarlyExit,
+    #[error("emit inside the values loop (not a fold)")]
+    EmitInLoop,
+    #[error("initialization has an external data dependency")]
+    ExternInInit,
+    #[error("initialization depends on the key")]
+    KeyInInit,
+    #[error("loop body depends on {0}")]
+    BodyBadSource(String),
+    #[error("loop body consumes stack values produced before the loop")]
+    StackCarriedIntoLoop,
+    #[error("finalization depends on {0}")]
+    FinalBadSource(String),
+    #[error("no emit after the loop")]
+    NoFinalEmit,
+    #[error("multiple emits in finalization (only single-result reducers combine)")]
+    MultipleFinalEmits,
+    #[error("malformed program: {0}")]
+    Malformed(String),
+}
+
+/// A successful analysis: the slice boundaries and inferred holder type.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Analysis {
+    pub idiom: Idiom,
+    /// `[0, loop_start)` — becomes `initialize()`.
+    pub init: (usize, usize),
+    /// `(loop_start, loop_end)` exclusive of markers — becomes
+    /// `combine(holder, v)`.
+    pub body: (usize, usize),
+    /// `(loop_end, emit]` — becomes `finalize(holder)`.
+    pub fin: (usize, usize),
+    /// Types of the holder locals after initialization (paper: "determine
+    /// the holder type required").
+    pub holder_ty: Vec<Ty>,
+    /// Which locals the loop body actually updates (the accumulator set).
+    pub acc_locals: Vec<u8>,
+}
+
+/// Cheap structural pre-check — the *detection* phase the agent times
+/// separately (paper §4.3: 81 µs per class). True means "looks like a
+/// reducer worth analyzing", not "transformable".
+pub fn detect(prog: &Program) -> bool {
+    prog.verify().is_ok()
+        && prog
+            .code
+            .iter()
+            .any(|i| matches!(i, Instr::IterStart | Instr::ValuesLen | Instr::ValuesFirst))
+}
+
+/// Full analysis — the *transformation* phase's front half.
+pub fn analyze(prog: &Program) -> Result<Analysis, Reject> {
+    prog.verify()
+        .map_err(|e| Reject::Malformed(e.to_string()))?;
+
+    let loops = prog
+        .code
+        .iter()
+        .filter(|i| matches!(i, Instr::IterStart))
+        .count();
+    if loops > 1 {
+        return Err(Reject::MultipleLoops);
+    }
+    if loops == 0 {
+        return analyze_idiom(prog);
+    }
+
+    let (lo, hi) = prog.loop_span().expect("one loop exists");
+
+    // Condition 1: the loop covers all values — no early exit.
+    if prog.code[lo + 1..hi]
+        .iter()
+        .any(|i| matches!(i, Instr::BreakIf))
+    {
+        return Err(Reject::EarlyExit);
+    }
+    // A fold has exactly one emit, after the loop.
+    if prog.code[lo + 1..hi]
+        .iter()
+        .any(|i| matches!(i, Instr::Emit))
+    {
+        return Err(Reject::EmitInLoop);
+    }
+
+    // --- Init slice checks (paper step 3) ---
+    let init_pdg =
+        build_region(prog, 0, lo).map_err(|e| Reject::Malformed(e.to_string()))?;
+    for pc in 0..lo {
+        if !matches!(prog.code[pc], Instr::Store(_)) {
+            continue;
+        }
+        for s in init_pdg.sources(prog, pc) {
+            match s {
+                Source::Const => {}
+                Source::Extern => return Err(Reject::ExternInInit),
+                Source::Key => return Err(Reject::KeyInInit),
+                // Values-dependent init (len/first/index) means the
+                // "initialization" needs the materialized list — reject as
+                // an external dependency on the collection.
+                Source::Len | Source::First | Source::Index => {
+                    return Err(Reject::ExternInInit)
+                }
+                Source::Cur => {
+                    return Err(Reject::Malformed("LoadCur before loop".into()))
+                }
+                Source::LocalIn(_) => {
+                    return Err(Reject::Malformed("read of undefined local in init".into()))
+                }
+            }
+        }
+    }
+
+    // --- Body slice checks (paper step 4) ---
+    let body_pdg =
+        build_region(prog, lo + 1, hi).map_err(|e| Reject::Malformed(e.to_string()))?;
+    let mut acc_locals: Vec<u8> = Vec::new();
+    for pc in lo + 1..hi {
+        let store_local = match prog.code[pc] {
+            Instr::Store(l) => l,
+            _ => continue,
+        };
+        if !acc_locals.contains(&store_local) {
+            acc_locals.push(store_local);
+        }
+        for s in body_pdg.sources(prog, pc) {
+            match s {
+                Source::Const | Source::Cur | Source::LocalIn(_) => {}
+                Source::Extern => return Err(Reject::BodyBadSource("an external value".into())),
+                Source::Key => return Err(Reject::BodyBadSource("the key".into())),
+                Source::Len => {
+                    return Err(Reject::BodyBadSource("the value-list length".into()))
+                }
+                Source::First | Source::Index => {
+                    return Err(Reject::BodyBadSource("random value-list access".into()))
+                }
+            }
+        }
+    }
+    // The body must be stack-self-contained: simulate depth over the body;
+    // it must never pop below its entry depth and must return to it.
+    let mut depth = 0isize;
+    for pc in lo + 1..hi {
+        if let Some((pops, pushes)) = prog.code[pc].stack_effect() {
+            depth -= pops as isize;
+            if depth < 0 {
+                return Err(Reject::StackCarriedIntoLoop);
+            }
+            depth += pushes as isize;
+        }
+    }
+    if depth != 0 {
+        return Err(Reject::StackCarriedIntoLoop);
+    }
+
+    // --- Final slice checks (paper step 5) ---
+    let fin_lo = hi + 1;
+    let fin_hi = prog.code.len();
+    let emits: Vec<usize> = (fin_lo..fin_hi)
+        .filter(|&pc| matches!(prog.code[pc], Instr::Emit))
+        .collect();
+    if emits.is_empty() {
+        return Err(Reject::NoFinalEmit);
+    }
+    if emits.len() > 1 {
+        return Err(Reject::MultipleFinalEmits);
+    }
+    let fin_pdg =
+        build_region(prog, fin_lo, fin_hi).map_err(|e| Reject::Malformed(e.to_string()))?;
+    for s in fin_pdg.sources(prog, emits[0]) {
+        match s {
+            Source::Const | Source::LocalIn(_) | Source::Key => {}
+            Source::Extern => return Err(Reject::FinalBadSource("an external value".into())),
+            Source::Cur => return Err(Reject::Malformed("LoadCur after loop".into())),
+            Source::Len | Source::First | Source::Index => {
+                return Err(Reject::FinalBadSource("the value list".into()))
+            }
+        }
+    }
+
+    // Holder type inference: execute the init slice abstractly (it is
+    // constant-only, so concrete execution is exact).
+    let holder_ty = infer_holder(prog, lo)?;
+
+    Ok(Analysis {
+        idiom: Idiom::Fold,
+        init: (0, lo),
+        body: (lo + 1, hi),
+        fin: (fin_lo, fin_hi),
+        holder_ty,
+        acc_locals,
+    })
+}
+
+/// Loop-free programs: COUNT / FIRST idioms.
+fn analyze_idiom(prog: &Program) -> Result<Analysis, Reject> {
+    let uses = |pred: fn(&Instr) -> bool| prog.code.iter().any(pred);
+    let uses_len = uses(|i| matches!(i, Instr::ValuesLen));
+    let uses_first = uses(|i| matches!(i, Instr::ValuesFirst));
+    let uses_index = uses(|i| matches!(i, Instr::ValuesIndex));
+    let uses_extern = uses(|i| matches!(i, Instr::LoadExtern(_)));
+    if uses_extern || uses_index || (uses_len && uses_first) {
+        return Err(Reject::NoLoopNoIdiom);
+    }
+    let emits = prog.code.iter().filter(|i| matches!(i, Instr::Emit)).count();
+    if emits != 1 {
+        return Err(Reject::MultipleFinalEmits);
+    }
+    let idiom = if uses_len {
+        Idiom::Count
+    } else if uses_first {
+        Idiom::First
+    } else {
+        return Err(Reject::NoLoopNoIdiom);
+    };
+    Ok(Analysis {
+        idiom,
+        init: (0, 0),
+        body: (0, 0),
+        fin: (0, prog.code.len()),
+        holder_ty: vec![if idiom == Idiom::Count { Ty::I64 } else { Ty::Nil }],
+        acc_locals: Vec::new(),
+    })
+}
+
+/// Concretely run the constant-only init slice to learn each local's type.
+fn infer_holder(prog: &Program, lo: usize) -> Result<Vec<Ty>, Reject> {
+    use super::interp::{run_slice, ReduceCtx};
+    let key = Val::Nil;
+    let ctx = ReduceCtx::new(&key, &[]);
+    let mut locals = vec![Val::Nil; prog.n_locals as usize];
+    run_slice(prog, 0, lo, &mut locals, None, &ctx)
+        .map_err(|e| Reject::Malformed(format!("init slice failed: {e}")))?;
+    Ok(locals.iter().map(|v| v.ty()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::builder::{canon, ProgramBuilder};
+
+    #[test]
+    fn sum_is_a_fold() {
+        let a = analyze(&canon::sum_i64("s")).unwrap();
+        assert_eq!(a.idiom, Idiom::Fold);
+        assert_eq!(a.holder_ty, vec![Ty::I64]);
+        assert_eq!(a.acc_locals, vec![0]);
+    }
+
+    #[test]
+    fn vec_sum_holder_type() {
+        let a = analyze(&canon::sum_vec("v", 3)).unwrap();
+        assert_eq!(a.holder_ty, vec![Ty::F64Vec]);
+    }
+
+    #[test]
+    fn scaled_sum_has_nontrivial_finalize() {
+        let a = analyze(&canon::scaled_sum_f64("ss", 2.0)).unwrap();
+        assert_eq!(a.idiom, Idiom::Fold);
+        assert!(a.fin.1 - a.fin.0 > 2, "finalize slice includes the scale");
+    }
+
+    #[test]
+    fn count_idiom_detected() {
+        let a = analyze(&canon::count("c")).unwrap();
+        assert_eq!(a.idiom, Idiom::Count);
+    }
+
+    #[test]
+    fn first_idiom_detected() {
+        let a = analyze(&canon::first("f")).unwrap();
+        assert_eq!(a.idiom, Idiom::First);
+    }
+
+    #[test]
+    fn early_exit_rejected() {
+        assert_eq!(analyze(&canon::early_exit("e")), Err(Reject::EarlyExit));
+    }
+
+    #[test]
+    fn extern_init_rejected() {
+        assert_eq!(analyze(&canon::extern_seed("x")), Err(Reject::ExternInInit));
+    }
+
+    #[test]
+    fn random_access_rejected() {
+        assert_eq!(analyze(&canon::random_access("r")), Err(Reject::NoLoopNoIdiom));
+    }
+
+    #[test]
+    fn emit_in_loop_rejected() {
+        assert_eq!(analyze(&canon::emit_in_loop("e")), Err(Reject::EmitInLoop));
+    }
+
+    #[test]
+    fn extern_in_body_rejected() {
+        let p = ProgramBuilder::new("b")
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .load_extern(0)
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        assert!(matches!(analyze(&p), Err(Reject::BodyBadSource(_))));
+    }
+
+    #[test]
+    fn len_in_body_rejected() {
+        let p = ProgramBuilder::new("b")
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .values_len()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        assert!(matches!(analyze(&p), Err(Reject::BodyBadSource(s)) if s.contains("length")));
+    }
+
+    #[test]
+    fn key_dependent_init_rejected() {
+        let p = ProgramBuilder::new("k")
+            .load_key()
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        assert_eq!(analyze(&p), Err(Reject::KeyInInit));
+    }
+
+    #[test]
+    fn key_in_finalize_allowed() {
+        // Emitting something key-derived in finalization is fine — the key
+        // is available at finalize time.
+        let p = ProgramBuilder::new("kf")
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        assert!(analyze(&p).is_ok());
+    }
+
+    #[test]
+    fn two_loops_rejected() {
+        let p = ProgramBuilder::new("2l")
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        assert_eq!(analyze(&p), Err(Reject::MultipleLoops));
+    }
+
+    #[test]
+    fn multi_emit_finalize_rejected() {
+        let p = ProgramBuilder::new("2e")
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        assert_eq!(analyze(&p), Err(Reject::MultipleFinalEmits));
+    }
+
+    #[test]
+    fn detection_is_cheap_and_permissive() {
+        assert!(detect(&canon::sum_i64("s")));
+        assert!(detect(&canon::count("c")));
+        assert!(detect(&canon::early_exit("e"))); // detected, later rejected
+        let no_values = ProgramBuilder::new("nv").const_i64(1).emit().build().unwrap();
+        assert!(!detect(&no_values));
+    }
+
+    #[test]
+    fn multi_local_fold_accepted() {
+        // Two accumulators (sum and count) — LR-style.
+        let p = ProgramBuilder::new("sumcount")
+            .const_f64(0.0)
+            .store(0)
+            .const_i64(0)
+            .store(1)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .load(1)
+            .const_i64(1)
+            .add()
+            .store(1)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        let a = analyze(&p).unwrap();
+        assert_eq!(a.holder_ty, vec![Ty::F64, Ty::I64]);
+        assert_eq!(a.acc_locals, vec![0, 1]);
+    }
+}

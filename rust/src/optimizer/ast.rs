@@ -1,0 +1,392 @@
+//! A declarative reducer language compiled to RIR.
+//!
+//! The paper's closing argument (§6) is that "if semantic information can
+//! be passed from the application developer to the parallel framework and
+//! the compiler, significant performance improvements can be achieved".
+//! [`ReduceSpec`] is that idea one level up from RIR: the user states the
+//! reducer as *expressions* — accumulator initializers, per-value update
+//! rules, and a result expression — and the framework compiles them to an
+//! RIR [`Program`]. By construction the compiled program has the
+//! fold shape the optimizer's analysis accepts (single loop over all
+//! values, accumulator-only dependencies), so the semantic declaration
+//! *is* the optimization license: specs using only accumulators and `Cur`
+//! always take the combining flow.
+//!
+//! Non-fold escapes (`ValuesLen`, `Extern`, `Key` in inits) are still
+//! expressible, and compile to programs the analyzer correctly rejects —
+//! the DSL does not launder unsound reducers into combiners.
+
+use super::rir::{Instr, Program, VerifyError};
+use super::value::Val;
+
+/// Binary operators available in reducer expressions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+}
+
+impl BinOp {
+    fn instr(self) -> Instr {
+        match self {
+            BinOp::Add => Instr::Add,
+            BinOp::Sub => Instr::Sub,
+            BinOp::Mul => Instr::Mul,
+            BinOp::Div => Instr::Div,
+            BinOp::Min => Instr::Min,
+            BinOp::Max => Instr::Max,
+        }
+    }
+}
+
+/// A reducer expression.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    /// Literal.
+    Const(Val),
+    /// Accumulator `n`.
+    Acc(u8),
+    /// The current intermediate value (valid in update rules only).
+    Cur,
+    /// The reduce key (valid in the result expression only).
+    Key,
+    /// `values.len()` — forces the COUNT idiom / rejection path.
+    ValuesLen,
+    /// `values[0]` — forces the FIRST idiom / rejection path.
+    ValuesFirst,
+    /// Captured environment slot — an external data dependency.
+    Extern(u8),
+    /// Binary operation.
+    Bin(BinOp, Box<Expr>, Box<Expr>),
+}
+
+impl Expr {
+    pub fn add(self, rhs: Expr) -> Expr {
+        Expr::Bin(BinOp::Add, Box::new(self), Box::new(rhs))
+    }
+    pub fn sub(self, rhs: Expr) -> Expr {
+        Expr::Bin(BinOp::Sub, Box::new(self), Box::new(rhs))
+    }
+    pub fn mul(self, rhs: Expr) -> Expr {
+        Expr::Bin(BinOp::Mul, Box::new(self), Box::new(rhs))
+    }
+    pub fn div(self, rhs: Expr) -> Expr {
+        Expr::Bin(BinOp::Div, Box::new(self), Box::new(rhs))
+    }
+    pub fn min(self, rhs: Expr) -> Expr {
+        Expr::Bin(BinOp::Min, Box::new(self), Box::new(rhs))
+    }
+    pub fn max(self, rhs: Expr) -> Expr {
+        Expr::Bin(BinOp::Max, Box::new(self), Box::new(rhs))
+    }
+
+    /// Emit postorder stack code for this expression.
+    fn codegen(&self, out: &mut Vec<Instr>) {
+        match self {
+            Expr::Const(v) => out.push(Instr::Const(v.clone())),
+            Expr::Acc(n) => out.push(Instr::Load(*n)),
+            Expr::Cur => out.push(Instr::LoadCur),
+            Expr::Key => out.push(Instr::LoadKey),
+            Expr::ValuesLen => out.push(Instr::ValuesLen),
+            Expr::ValuesFirst => out.push(Instr::ValuesFirst),
+            Expr::Extern(n) => out.push(Instr::LoadExtern(*n)),
+            Expr::Bin(op, l, r) => {
+                l.codegen(out);
+                r.codegen(out);
+                out.push(op.instr());
+            }
+        }
+    }
+
+    /// Does the expression mention `Cur` anywhere?
+    fn uses_cur(&self) -> bool {
+        match self {
+            Expr::Cur => true,
+            Expr::Bin(_, l, r) => l.uses_cur() || r.uses_cur(),
+            _ => false,
+        }
+    }
+}
+
+/// Convenience constructors.
+pub fn lit_i64(x: i64) -> Expr {
+    Expr::Const(Val::I64(x))
+}
+pub fn lit_f64(x: f64) -> Expr {
+    Expr::Const(Val::F64(x))
+}
+pub fn lit_vec(v: Vec<f64>) -> Expr {
+    Expr::Const(Val::F64Vec(v))
+}
+pub fn acc(n: u8) -> Expr {
+    Expr::Acc(n)
+}
+pub fn cur() -> Expr {
+    Expr::Cur
+}
+
+/// Compile-time errors for specs (beyond RIR structural verification).
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum SpecError {
+    #[error("update rule targets accumulator {0} but only {1} are declared")]
+    UnknownAcc(u8, usize),
+    #[error("`Cur` used outside an update rule")]
+    CurOutsideUpdate,
+    #[error("compiled program failed verification: {0}")]
+    Verify(#[from] VerifyError),
+}
+
+/// A declarative reducer: `init` accumulators, apply `update` rules per
+/// value, emit `result`.
+#[derive(Clone, Debug)]
+pub struct ReduceSpec {
+    pub name: String,
+    /// `init[i]` initializes accumulator `i`.
+    pub init: Vec<Expr>,
+    /// Per-value rules, applied in order: `acc[target] = expr`.
+    pub update: Vec<(u8, Expr)>,
+    /// Emitted value (may reference accumulators, consts, `Key`,
+    /// `ValuesLen`/`ValuesFirst` for idioms).
+    pub result: Expr,
+}
+
+impl ReduceSpec {
+    /// A fresh spec with no accumulators.
+    pub fn new(name: impl Into<String>, result: Expr) -> Self {
+        ReduceSpec {
+            name: name.into(),
+            init: Vec::new(),
+            update: Vec::new(),
+            result,
+        }
+    }
+
+    /// Declare an accumulator; returns its expression handle.
+    pub fn with_acc(mut self, init: Expr) -> Self {
+        self.init.push(init);
+        self
+    }
+
+    /// Add a per-value update rule.
+    pub fn with_update(mut self, target: u8, expr: Expr) -> Self {
+        self.update.push((target, expr));
+        self
+    }
+
+    /// Compile to RIR. The emitted shape is exactly the fold skeleton the
+    /// analyzer slices (init / loop body / finalize / emit).
+    pub fn compile(&self) -> Result<Program, SpecError> {
+        // Static checks with readable errors before codegen.
+        for (t, _) in &self.update {
+            if *t as usize >= self.init.len() {
+                return Err(SpecError::UnknownAcc(*t, self.init.len()));
+            }
+        }
+        for e in &self.init {
+            if e.uses_cur() {
+                return Err(SpecError::CurOutsideUpdate);
+            }
+        }
+        if self.result.uses_cur() {
+            return Err(SpecError::CurOutsideUpdate);
+        }
+
+        let mut code = Vec::new();
+        for (i, e) in self.init.iter().enumerate() {
+            e.codegen(&mut code);
+            code.push(Instr::Store(i as u8));
+        }
+        if !self.update.is_empty() {
+            code.push(Instr::IterStart);
+            for (target, e) in &self.update {
+                e.codegen(&mut code);
+                code.push(Instr::Store(*target));
+            }
+            code.push(Instr::IterEnd);
+        }
+        self.result.codegen(&mut code);
+        code.push(Instr::Emit);
+
+        let program = Program::new(self.name.clone(), code, self.init.len() as u8);
+        program.verify()?;
+        Ok(program)
+    }
+}
+
+/// Ready-made specs for common aggregations (the "standard library" a
+/// framework would ship; each compiles to an optimizer-accepted fold).
+pub mod specs {
+    use super::*;
+
+    /// Σ values (i64).
+    pub fn sum_i64(name: &str) -> ReduceSpec {
+        ReduceSpec::new(name, acc(0))
+            .with_acc(lit_i64(0))
+            .with_update(0, acc(0).add(cur()))
+    }
+
+    /// Arithmetic mean: sum and count accumulators, divide at finalize —
+    /// the classic "combiner needs state" aggregation (K-Means' §4.1.3
+    /// challenge, solved exactly as the paper describes: carry the state,
+    /// normalize at the end).
+    pub fn mean_f64(name: &str) -> ReduceSpec {
+        ReduceSpec::new(name, acc(0).div(acc(1)))
+            .with_acc(lit_f64(0.0))
+            .with_acc(lit_f64(0.0))
+            .with_update(0, acc(0).add(cur()))
+            .with_update(1, acc(1).add(lit_f64(1.0)))
+    }
+
+    /// Range width: max − min in one pass.
+    pub fn range_i64(name: &str) -> ReduceSpec {
+        ReduceSpec::new(name, acc(1).sub(acc(0)))
+            .with_acc(lit_i64(i64::MAX))
+            .with_acc(lit_i64(i64::MIN))
+            .with_update(0, acc(0).min(cur()))
+            .with_update(1, acc(1).max(cur()))
+    }
+
+    /// Sum of squares (f64) — variance building block.
+    pub fn sum_sq_f64(name: &str) -> ReduceSpec {
+        ReduceSpec::new(name, acc(0))
+            .with_acc(lit_f64(0.0))
+            .with_update(0, acc(0).add(cur().mul(cur())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::specs;
+    use super::*;
+    use crate::optimizer::agent::OptimizerAgent;
+    use crate::optimizer::analyze::{analyze, Idiom};
+    use crate::optimizer::interp::{run_reduce, ReduceCtx};
+
+    fn run(program: &Program, values: &[Val]) -> Vec<Val> {
+        let key = Val::Str("k".into());
+        let ctx = ReduceCtx::new(&key, values);
+        let mut out = Vec::new();
+        run_reduce(program, &ctx, |v| out.push(v)).unwrap();
+        out
+    }
+
+    fn i64s(xs: &[i64]) -> Vec<Val> {
+        xs.iter().map(|&x| Val::I64(x)).collect()
+    }
+
+    #[test]
+    fn sum_spec_compiles_and_optimizes() {
+        let p = specs::sum_i64("ast.sum").compile().unwrap();
+        assert_eq!(run(&p, &i64s(&[1, 2, 3])), vec![Val::I64(6)]);
+        let a = analyze(&p).unwrap();
+        assert_eq!(a.idiom, Idiom::Fold);
+        // The DSL's sum compiles to the exact shape the fast path matches.
+        let agent = OptimizerAgent::new();
+        let c = agent.process(&p).combiner().cloned().unwrap();
+        assert!(c.fast_path().is_some());
+    }
+
+    #[test]
+    fn mean_spec_divides_at_finalize() {
+        let p = specs::mean_f64("ast.mean").compile().unwrap();
+        let vals: Vec<Val> = [2.0, 4.0, 9.0].iter().map(|&x| Val::F64(x)).collect();
+        assert_eq!(run(&p, &vals), vec![Val::F64(5.0)]);
+        // Two accumulators → transformable fold, no single-acc fast path.
+        let agent = OptimizerAgent::new();
+        let d = agent.process(&p);
+        let c = d.combiner().expect("mean is a fold");
+        assert!(c.fast_path().is_none());
+        // Combiner path computes the same mean.
+        let mut h = c.initialize();
+        for v in &vals {
+            c.combine(&mut h, v).unwrap();
+        }
+        assert_eq!(c.finalize(h, &Val::Nil).unwrap(), Val::F64(5.0));
+    }
+
+    #[test]
+    fn range_spec_two_accumulators() {
+        let p = specs::range_i64("ast.range").compile().unwrap();
+        assert_eq!(run(&p, &i64s(&[5, -3, 9, 0])), vec![Val::I64(12)]);
+        assert!(analyze(&p).is_ok());
+    }
+
+    #[test]
+    fn sum_sq_nested_expression() {
+        let p = specs::sum_sq_f64("ast.sumsq").compile().unwrap();
+        let vals: Vec<Val> = [1.0, 2.0, 3.0].iter().map(|&x| Val::F64(x)).collect();
+        assert_eq!(run(&p, &vals), vec![Val::F64(14.0)]);
+    }
+
+    #[test]
+    fn key_in_result_is_allowed() {
+        let spec = ReduceSpec::new("ast.keyed", Expr::Key)
+            .with_acc(lit_i64(0))
+            .with_update(0, acc(0).add(cur()));
+        let p = spec.compile().unwrap();
+        assert!(analyze(&p).is_ok(), "key in finalize is legal");
+        let out = run(&p, &i64s(&[1]));
+        assert_eq!(out, vec![Val::Str("k".into())]);
+    }
+
+    #[test]
+    fn extern_in_init_compiles_but_rejects() {
+        let spec = ReduceSpec::new("ast.extern", acc(0))
+            .with_acc(Expr::Extern(0))
+            .with_update(0, acc(0).add(cur()));
+        let p = spec.compile().unwrap();
+        assert!(
+            analyze(&p).is_err(),
+            "the DSL must not launder external dependencies into combiners"
+        );
+    }
+
+    #[test]
+    fn count_idiom_via_values_len() {
+        let spec = ReduceSpec::new("ast.count", Expr::ValuesLen);
+        let p = spec.compile().unwrap();
+        let a = analyze(&p).unwrap();
+        assert_eq!(a.idiom, Idiom::Count);
+    }
+
+    #[test]
+    fn spec_errors_are_caught() {
+        let bad = ReduceSpec::new("ast.bad", acc(0))
+            .with_acc(lit_i64(0))
+            .with_update(3, acc(0).add(cur()));
+        assert!(matches!(bad.compile(), Err(SpecError::UnknownAcc(3, 1))));
+
+        let cur_in_init = ReduceSpec::new("ast.bad2", acc(0)).with_acc(cur());
+        assert!(matches!(
+            cur_in_init.compile(),
+            Err(SpecError::CurOutsideUpdate)
+        ));
+
+        let cur_in_result = ReduceSpec::new("ast.bad3", cur());
+        assert!(matches!(
+            cur_in_result.compile(),
+            Err(SpecError::CurOutsideUpdate)
+        ));
+    }
+
+    #[test]
+    fn end_to_end_through_mapreduce() {
+        use crate::api::reducers::RirReducer;
+        use crate::api::traits::Emitter;
+        use crate::api::{JobConfig, MapReduce};
+        let mapper = |x: &i64, em: &mut dyn Emitter<i64, f64>| em.emit(*x % 3, *x as f64);
+        let reducer: RirReducer<i64, f64> =
+            RirReducer::new(specs::mean_f64("ast.e2e.mean").compile().unwrap());
+        let job = MapReduce::new(mapper, reducer).with_config(JobConfig::fast().with_threads(2));
+        let inputs: Vec<i64> = (0..30).collect();
+        let (mut out, report) = job.run_with_report(&inputs);
+        assert_eq!(report.metrics.flow.label(), "combine");
+        out.sort_by_key(|kv| kv.key);
+        // Key 0: mean of {0,3,..,27} = 13.5
+        assert_eq!(out[0].value, 13.5);
+    }
+}

@@ -1,0 +1,415 @@
+//! Fluent construction of RIR programs.
+//!
+//! Benchmarks author their reducers through this builder so application
+//! code stays a single expression, mirroring the anonymous-class style of
+//! the paper's Figure 2. `build()` verifies the program; tests that need
+//! malformed programs use `build_unchecked()`.
+
+use super::rir::{Instr, Program, VerifyError};
+use super::value::Val;
+
+/// Fluent RIR assembler.
+#[derive(Debug)]
+pub struct ProgramBuilder {
+    name: String,
+    code: Vec<Instr>,
+    max_local: Option<u8>,
+}
+
+impl ProgramBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        ProgramBuilder {
+            name: name.into(),
+            code: Vec::new(),
+            max_local: None,
+        }
+    }
+
+    fn track_local(&mut self, n: u8) {
+        self.max_local = Some(self.max_local.map_or(n, |m| m.max(n)));
+    }
+
+    pub fn const_val(mut self, v: Val) -> Self {
+        self.code.push(Instr::Const(v));
+        self
+    }
+
+    pub fn const_i64(self, x: i64) -> Self {
+        self.const_val(Val::I64(x))
+    }
+
+    pub fn const_f64(self, x: f64) -> Self {
+        self.const_val(Val::F64(x))
+    }
+
+    pub fn load(mut self, n: u8) -> Self {
+        self.track_local(n);
+        self.code.push(Instr::Load(n));
+        self
+    }
+
+    pub fn store(mut self, n: u8) -> Self {
+        self.track_local(n);
+        self.code.push(Instr::Store(n));
+        self
+    }
+
+    pub fn load_cur(mut self) -> Self {
+        self.code.push(Instr::LoadCur);
+        self
+    }
+
+    pub fn load_key(mut self) -> Self {
+        self.code.push(Instr::LoadKey);
+        self
+    }
+
+    pub fn values_len(mut self) -> Self {
+        self.code.push(Instr::ValuesLen);
+        self
+    }
+
+    pub fn values_first(mut self) -> Self {
+        self.code.push(Instr::ValuesFirst);
+        self
+    }
+
+    pub fn values_index(mut self) -> Self {
+        self.code.push(Instr::ValuesIndex);
+        self
+    }
+
+    pub fn load_extern(mut self, n: u8) -> Self {
+        self.code.push(Instr::LoadExtern(n));
+        self
+    }
+
+    pub fn iter_start(mut self) -> Self {
+        self.code.push(Instr::IterStart);
+        self
+    }
+
+    pub fn iter_end(mut self) -> Self {
+        self.code.push(Instr::IterEnd);
+        self
+    }
+
+    pub fn break_if(mut self) -> Self {
+        self.code.push(Instr::BreakIf);
+        self
+    }
+
+    pub fn add(mut self) -> Self {
+        self.code.push(Instr::Add);
+        self
+    }
+
+    pub fn sub(mut self) -> Self {
+        self.code.push(Instr::Sub);
+        self
+    }
+
+    pub fn mul(mut self) -> Self {
+        self.code.push(Instr::Mul);
+        self
+    }
+
+    pub fn div(mut self) -> Self {
+        self.code.push(Instr::Div);
+        self
+    }
+
+    pub fn min(mut self) -> Self {
+        self.code.push(Instr::Min);
+        self
+    }
+
+    pub fn max(mut self) -> Self {
+        self.code.push(Instr::Max);
+        self
+    }
+
+    pub fn lt(mut self) -> Self {
+        self.code.push(Instr::Lt);
+        self
+    }
+
+    pub fn select(mut self) -> Self {
+        self.code.push(Instr::Select);
+        self
+    }
+
+    pub fn dup(mut self) -> Self {
+        self.code.push(Instr::Dup);
+        self
+    }
+
+    pub fn pop(mut self) -> Self {
+        self.code.push(Instr::Pop);
+        self
+    }
+
+    pub fn swap(mut self) -> Self {
+        self.code.push(Instr::Swap);
+        self
+    }
+
+    pub fn emit(mut self) -> Self {
+        self.code.push(Instr::Emit);
+        self
+    }
+
+    /// Finish and verify.
+    pub fn build(self) -> Result<Program, VerifyError> {
+        let p = self.build_unchecked();
+        p.verify()?;
+        Ok(p)
+    }
+
+    /// Finish without verification (tests construct malformed programs).
+    pub fn build_unchecked(self) -> Program {
+        let n_locals = self.max_local.map_or(0, |m| m + 1);
+        Program::new(self.name, self.code, n_locals)
+    }
+}
+
+/// Canonical reducer programs used across benchmarks and tests — the
+/// "library" of reducers the suite needs. Each is the RIR spelling of the
+/// reduce method the corresponding Phoenix benchmark writes by hand.
+pub mod canon {
+    use super::*;
+
+    /// `acc = 0; for v { acc += v }; emit acc` — Word Count, Histogram,
+    /// Linear Regression (per-component), PCA partial sums.
+    pub fn sum_i64(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .expect("canonical sum_i64 verifies")
+    }
+
+    /// f64 running sum.
+    pub fn sum_f64(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .const_f64(0.0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .expect("canonical sum_f64 verifies")
+    }
+
+    /// Element-wise vector sum — K-Means: the running sum of point
+    /// coordinates plus count (the "state" the paper calls out as the
+    /// challenge for all three frameworks; the count rides along as the
+    /// final vector component).
+    pub fn sum_vec(name: &str, dims: usize) -> Program {
+        ProgramBuilder::new(name)
+            .const_val(Val::F64Vec(vec![0.0; dims]))
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .expect("canonical sum_vec verifies")
+    }
+
+    /// `acc = +inf; for v { acc = min(acc, v) }; emit acc`.
+    pub fn min_f64(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .const_f64(f64::INFINITY)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .min()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .expect("canonical min_f64 verifies")
+    }
+
+    /// `acc = -inf; for v { acc = max(acc, v) }; emit acc`.
+    pub fn max_i64(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .const_i64(i64::MIN)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .max()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .expect("canonical max_i64 verifies")
+    }
+
+    /// COUNT idiom: `emit values.len()` — String Match-style presence
+    /// counting ("uses the size ... in the intermediate value list").
+    pub fn count(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .values_len()
+            .emit()
+            .build()
+            .expect("canonical count verifies")
+    }
+
+    /// FIRST idiom: `emit values[0]` — dedup-style reducers.
+    pub fn first(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .values_first()
+            .emit()
+            .build()
+            .expect("canonical first verifies")
+    }
+
+    /// Sum followed by a scale in finalization: `emit (sum * c)` — shows a
+    /// non-trivial finalize slice.
+    pub fn scaled_sum_f64(name: &str, scale: f64) -> Program {
+        ProgramBuilder::new(name)
+            .const_f64(0.0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .const_f64(scale)
+            .mul()
+            .emit()
+            .build()
+            .expect("canonical scaled_sum verifies")
+    }
+
+    /// A reducer with an early exit — **must be rejected** by the analyzer.
+    pub fn early_exit(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .const_i64(100)
+            .lt()
+            .break_if()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .expect("early_exit is well-formed (but not transformable)")
+    }
+
+    /// Init block reading captured state — **must be rejected** (external
+    /// data dependency, paper §3.2 step 3).
+    pub fn extern_seed(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .load_extern(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .expect("extern_seed is well-formed (but not transformable)")
+    }
+
+    /// Random access into the value list — **must be rejected**.
+    pub fn random_access(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .const_i64(1)
+            .values_index()
+            .emit()
+            .build()
+            .expect("random_access is well-formed (but not transformable)")
+    }
+
+    /// Emit inside the loop (one output per value) — **must be rejected**
+    /// for combining (it is not a fold).
+    pub fn emit_in_loop(name: &str) -> Program {
+        ProgramBuilder::new(name)
+            .iter_start()
+            .load_cur()
+            .emit()
+            .iter_end()
+            .const_i64(0)
+            .emit()
+            .build()
+            .expect("emit_in_loop is well-formed (but not transformable)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::canon;
+    use super::*;
+
+    #[test]
+    fn builder_counts_locals() {
+        let p = ProgramBuilder::new("t")
+            .const_i64(0)
+            .store(3)
+            .load(3)
+            .emit()
+            .build()
+            .unwrap();
+        assert_eq!(p.n_locals, 4);
+    }
+
+    #[test]
+    fn canonical_programs_all_verify() {
+        for p in [
+            canon::sum_i64("a"),
+            canon::sum_f64("b"),
+            canon::sum_vec("c", 3),
+            canon::min_f64("d"),
+            canon::max_i64("e"),
+            canon::count("f"),
+            canon::first("g"),
+            canon::scaled_sum_f64("h", 0.5),
+            canon::early_exit("i"),
+            canon::extern_seed("j"),
+            canon::random_access("k"),
+            canon::emit_in_loop("l"),
+        ] {
+            p.verify().unwrap_or_else(|e| panic!("{}: {e}", p.name));
+        }
+    }
+
+    #[test]
+    fn build_rejects_malformed() {
+        assert!(ProgramBuilder::new("bad").add().emit().build().is_err());
+    }
+}

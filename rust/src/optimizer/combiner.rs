@@ -1,0 +1,426 @@
+//! Generated combiners — the paper's Figure 4 output.
+//!
+//! A [`Combiner`] packages the three generated methods:
+//!
+//! * `initialize()` — "provides an initial intermediate representation for
+//!   values as a holder type";
+//! * `combine(holder, v)` — "contains the code from the reduce method that
+//!   implements the combining";
+//! * `finalize(holder)` — "converts the intermediate representation of the
+//!   value into its final form".
+//!
+//! Two execution strategies:
+//!
+//! * **Fast paths** — recognized fold shapes (`acc = acc ⊕ cur` with an
+//!   identity finalize) compile to direct Rust operations on an unboxed
+//!   holder. This is the analogue of the paper's observation that the
+//!   rewrite "enacts the dynamic compiler to further improve the generated
+//!   machine code" (scalar replacement of the boxed accumulator).
+//! * **Generic interpretation** — any accepted fold runs its init/body/
+//!   final slices in the RIR interpreter against a boxed locals holder.
+//!   Semantics are identical; tests assert fast ≡ generic.
+
+use std::sync::Arc;
+
+use super::analyze::{Analysis, Idiom};
+use super::interp::{run_slice, EvalError, ReduceCtx};
+use super::rir::{Instr, Program};
+use super::value::{Ty, Val};
+use crate::api::traits::HeapSized;
+
+/// Recognized single-accumulator fold shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FastPath {
+    AddI64,
+    AddF64,
+    AddVec,
+    MinF64,
+    MaxI64,
+    Count,
+    First,
+}
+
+/// The mutable intermediate state — the paper's Holder object.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Holder {
+    /// Generic: the accumulator locals of the sliced program.
+    Locals(Vec<Val>),
+    /// Unboxed fast-path accumulators.
+    I64(i64),
+    F64(f64),
+    Vec(Vec<f64>),
+    /// FIRST idiom: the first value seen, if any.
+    Opt(Option<Val>),
+}
+
+impl HeapSized for Holder {
+    fn heap_bytes(&self) -> u64 {
+        match self {
+            // One mutable boxing object (paper §3.1: "a private
+            // encapsulating object").
+            Holder::I64(_) | Holder::F64(_) => 24,
+            Holder::Opt(v) => 24 + v.as_ref().map_or(0, |v| v.heap_bytes()),
+            Holder::Vec(v) => 24 + 8 * v.len() as u64,
+            Holder::Locals(ls) => 24 + ls.iter().map(|v| v.heap_bytes()).sum::<u64>(),
+        }
+    }
+}
+
+/// A generated combiner for one reducer class.
+#[derive(Clone, Debug)]
+pub struct Combiner {
+    program: Arc<Program>,
+    analysis: Analysis,
+    fast: Option<FastPath>,
+}
+
+impl Combiner {
+    pub(crate) fn new(program: Arc<Program>, analysis: Analysis, fast: Option<FastPath>) -> Self {
+        Combiner {
+            program,
+            analysis,
+            fast,
+        }
+    }
+
+    pub fn idiom(&self) -> Idiom {
+        self.analysis.idiom
+    }
+
+    pub fn fast_path(&self) -> Option<FastPath> {
+        self.fast
+    }
+
+    pub fn program_name(&self) -> &str {
+        &self.program.name
+    }
+
+    /// Force the generic interpreter even where a fast path exists
+    /// (equivalence testing and the ablation bench).
+    pub fn without_fast_path(&self) -> Combiner {
+        Combiner {
+            program: Arc::clone(&self.program),
+            analysis: self.analysis.clone(),
+            fast: None,
+        }
+    }
+
+    /// `Holder initialize();`
+    pub fn initialize(&self) -> Holder {
+        if let Some(fp) = self.fast {
+            return match fp {
+                FastPath::AddI64 => Holder::I64(init_i64(&self.program, &self.analysis, 0)),
+                FastPath::Count => Holder::I64(0),
+                FastPath::AddF64 => Holder::F64(init_f64(&self.program, &self.analysis, 0.0)),
+                FastPath::MinF64 => {
+                    Holder::F64(init_f64(&self.program, &self.analysis, f64::INFINITY))
+                }
+                FastPath::MaxI64 => Holder::I64(init_i64(&self.program, &self.analysis, i64::MIN)),
+                FastPath::AddVec => Holder::Vec(init_vec(&self.program, &self.analysis)),
+                FastPath::First => Holder::Opt(None),
+            };
+        }
+        match self.analysis.idiom {
+            Idiom::Count => Holder::I64(0),
+            Idiom::First => Holder::Opt(None),
+            Idiom::Fold => {
+                let mut locals = vec![Val::Nil; self.program.n_locals as usize];
+                let key = Val::Nil;
+                let ctx = ReduceCtx::new(&key, &[]);
+                let (lo, hi) = self.analysis.init;
+                run_slice(&self.program, lo, hi, &mut locals, None, &ctx)
+                    .expect("init slice verified");
+                Holder::Locals(locals)
+            }
+        }
+    }
+
+    /// `void combine(Holder, V);`
+    pub fn combine(&self, holder: &mut Holder, v: &Val) -> Result<(), EvalError> {
+        if let Some(fp) = self.fast {
+            fast_combine(fp, holder, v);
+            return Ok(());
+        }
+        match self.analysis.idiom {
+            Idiom::Count => {
+                if let Holder::I64(n) = holder {
+                    *n += 1;
+                }
+                Ok(())
+            }
+            Idiom::First => {
+                if let Holder::Opt(slot) = holder {
+                    if slot.is_none() {
+                        *slot = Some(v.clone());
+                    }
+                }
+                Ok(())
+            }
+            Idiom::Fold => {
+                let locals = match holder {
+                    Holder::Locals(ls) => ls,
+                    _ => unreachable!("fold uses Locals holder"),
+                };
+                let key = Val::Nil;
+                let ctx = ReduceCtx::new(&key, &[]);
+                let (lo, hi) = self.analysis.body;
+                run_slice(&self.program, lo, hi, locals, Some(v), &ctx)?;
+                Ok(())
+            }
+        }
+    }
+
+    /// `V finalize(Holder);` — `key` is available at finalization, matching
+    /// the reduce method's signature.
+    pub fn finalize(&self, holder: Holder, key: &Val) -> Result<Val, EvalError> {
+        if let Some(fp) = self.fast {
+            // Fast paths have identity finalize except the idioms.
+            return match (fp, holder) {
+                (FastPath::Count, Holder::I64(n)) => self.finalize_count(n, key),
+                (FastPath::First, Holder::Opt(v)) => self.finalize_first(v, key),
+                (_, Holder::I64(x)) => Ok(Val::I64(x)),
+                (_, Holder::F64(x)) => Ok(Val::F64(x)),
+                (_, Holder::Vec(x)) => Ok(Val::F64Vec(x)),
+                _ => unreachable!("fast holder shape"),
+            };
+        }
+        match self.analysis.idiom {
+            Idiom::Count => {
+                let n = match holder {
+                    Holder::I64(n) => n,
+                    _ => unreachable!(),
+                };
+                self.finalize_count(n, key)
+            }
+            Idiom::First => {
+                let v = match holder {
+                    Holder::Opt(v) => v,
+                    _ => unreachable!(),
+                };
+                self.finalize_first(v, key)
+            }
+            Idiom::Fold => {
+                let mut locals = match holder {
+                    Holder::Locals(ls) => ls,
+                    _ => unreachable!(),
+                };
+                let ctx = ReduceCtx::new(key, &[]);
+                let (lo, hi) = self.analysis.fin;
+                let out = run_slice(&self.program, lo, hi, &mut locals, None, &ctx)?;
+                Ok(out.expect("finalize slice ends in Emit"))
+            }
+        }
+    }
+
+    /// COUNT: re-run the (loop-free) program with `values.len()` replaced by
+    /// the held count.
+    fn finalize_count(&self, n: i64, key: &Val) -> Result<Val, EvalError> {
+        let mut ctx = ReduceCtx::new(key, &[]);
+        ctx.fake_len = Some(n);
+        let mut locals = vec![Val::Nil; self.program.n_locals as usize];
+        let out = run_slice(&self.program, 0, self.program.code.len(), &mut locals, None, &ctx)?;
+        Ok(out.expect("count program ends in Emit"))
+    }
+
+    /// FIRST: re-run with `values[0]` replaced by the held value.
+    fn finalize_first(&self, v: Option<Val>, key: &Val) -> Result<Val, EvalError> {
+        let first = v.expect("finalize called for a key with at least one emit");
+        let mut ctx = ReduceCtx::new(key, &[]);
+        ctx.fake_first = Some(first);
+        let mut locals = vec![Val::Nil; self.program.n_locals as usize];
+        let out = run_slice(&self.program, 0, self.program.code.len(), &mut locals, None, &ctx)?;
+        Ok(out.expect("first program ends in Emit"))
+    }
+
+    /// Expected holder heap footprint for memsim accounting.
+    pub fn holder_bytes(&self) -> u64 {
+        self.initialize().heap_bytes()
+    }
+}
+
+#[inline]
+fn fast_combine(fp: FastPath, holder: &mut Holder, v: &Val) {
+    match (fp, holder, v) {
+        (FastPath::AddI64, Holder::I64(acc), Val::I64(x)) => *acc = acc.wrapping_add(*x),
+        (FastPath::AddF64, Holder::F64(acc), Val::F64(x)) => *acc += x,
+        (FastPath::MinF64, Holder::F64(acc), Val::F64(x)) => *acc = acc.min(*x),
+        (FastPath::MaxI64, Holder::I64(acc), Val::I64(x)) => *acc = (*acc).max(*x),
+        (FastPath::AddVec, Holder::Vec(acc), Val::F64Vec(x)) => {
+            debug_assert_eq!(acc.len(), x.len());
+            for (a, b) in acc.iter_mut().zip(x) {
+                *a += b;
+            }
+        }
+        (FastPath::Count, Holder::I64(acc), _) => *acc += 1,
+        (FastPath::First, Holder::Opt(slot), v) => {
+            if slot.is_none() {
+                *slot = Some(v.clone());
+            }
+        }
+        (fp, h, v) => unreachable!("fast path {fp:?} holder/value mismatch: {h:?} {v:?}"),
+    }
+}
+
+/// Run the init slice and pull out the single accumulator's initial value.
+fn init_i64(prog: &Program, a: &Analysis, default: i64) -> i64 {
+    init_local(prog, a).and_then(|v| v.as_i64()).unwrap_or(default)
+}
+
+fn init_f64(prog: &Program, a: &Analysis, default: f64) -> f64 {
+    init_local(prog, a).and_then(|v| v.as_f64()).unwrap_or(default)
+}
+
+fn init_vec(prog: &Program, a: &Analysis) -> Vec<f64> {
+    match init_local(prog, a) {
+        Some(Val::F64Vec(v)) => v,
+        _ => Vec::new(),
+    }
+}
+
+fn init_local(prog: &Program, a: &Analysis) -> Option<Val> {
+    let acc = *a.acc_locals.first()? as usize;
+    let mut locals = vec![Val::Nil; prog.n_locals as usize];
+    let key = Val::Nil;
+    let ctx = ReduceCtx::new(&key, &[]);
+    run_slice(prog, a.init.0, a.init.1, &mut locals, None, &ctx).ok()?;
+    Some(locals[acc].clone())
+}
+
+/// Detect a fast path from the analysis: single accumulator, body of the
+/// exact shape `Load(a); LoadCur; ⊕; Store(a)`, identity finalize
+/// `Load(a); Emit`. (The idioms always have fast paths.)
+pub(crate) fn detect_fast_path(prog: &Program, a: &Analysis) -> Option<FastPath> {
+    match a.idiom {
+        Idiom::Count => return Some(FastPath::Count),
+        Idiom::First => return Some(FastPath::First),
+        Idiom::Fold => {}
+    }
+    if a.acc_locals.len() != 1 {
+        return None;
+    }
+    let acc = a.acc_locals[0];
+    let body = &prog.code[a.body.0..a.body.1];
+    let op = match body {
+        [Instr::Load(l1), Instr::LoadCur, op, Instr::Store(l2)]
+            if *l1 == acc && *l2 == acc =>
+        {
+            op
+        }
+        _ => return None,
+    };
+    let fin = &prog.code[a.fin.0..a.fin.1];
+    if !matches!(fin, [Instr::Load(l), Instr::Emit] if *l == acc) {
+        return None;
+    }
+    let ty = a.holder_ty.get(acc as usize)?;
+    match (op, ty) {
+        (Instr::Add, Ty::I64) => Some(FastPath::AddI64),
+        (Instr::Add, Ty::F64) => Some(FastPath::AddF64),
+        (Instr::Add, Ty::F64Vec) => Some(FastPath::AddVec),
+        (Instr::Min, Ty::F64) => Some(FastPath::MinF64),
+        (Instr::Max, Ty::I64) => Some(FastPath::MaxI64),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::analyze::analyze;
+    use crate::optimizer::builder::canon;
+    use crate::optimizer::transform::transform;
+
+    fn combiner_for(p: Program) -> Combiner {
+        let a = analyze(&p).unwrap();
+        transform(Arc::new(p), a)
+    }
+
+    fn fold_all(c: &Combiner, vals: &[Val]) -> Val {
+        let mut h = c.initialize();
+        for v in vals {
+            c.combine(&mut h, v).unwrap();
+        }
+        c.finalize(h, &Val::Str("k".into())).unwrap()
+    }
+
+    #[test]
+    fn sum_combiner_matches_reduce() {
+        let c = combiner_for(canon::sum_i64("s"));
+        assert_eq!(c.fast_path(), Some(FastPath::AddI64));
+        let vals: Vec<Val> = (1..=100).map(Val::I64).collect();
+        assert_eq!(fold_all(&c, &vals), Val::I64(5050));
+    }
+
+    #[test]
+    fn generic_equals_fast() {
+        for (p, vals) in [
+            (
+                canon::sum_i64("a"),
+                (1..=50).map(Val::I64).collect::<Vec<_>>(),
+            ),
+            (
+                canon::max_i64("b"),
+                vec![Val::I64(3), Val::I64(99), Val::I64(-5)],
+            ),
+            (
+                canon::min_f64("c"),
+                vec![Val::F64(2.5), Val::F64(-1.0), Val::F64(7.0)],
+            ),
+        ] {
+            let fast = combiner_for(p);
+            assert!(fast.fast_path().is_some());
+            let generic = fast.without_fast_path();
+            assert_eq!(
+                fold_all(&fast, &vals),
+                fold_all(&generic, &vals),
+                "fast != generic for {}",
+                fast.program_name()
+            );
+        }
+    }
+
+    #[test]
+    fn vec_sum_combines_elementwise() {
+        let c = combiner_for(canon::sum_vec("v", 2));
+        assert_eq!(c.fast_path(), Some(FastPath::AddVec));
+        let out = fold_all(
+            &c,
+            &[
+                Val::F64Vec(vec![1.0, 10.0]),
+                Val::F64Vec(vec![2.0, 20.0]),
+            ],
+        );
+        assert_eq!(out, Val::F64Vec(vec![3.0, 30.0]));
+    }
+
+    #[test]
+    fn scaled_sum_uses_generic_finalize() {
+        let c = combiner_for(canon::scaled_sum_f64("ss", 0.25));
+        assert_eq!(c.fast_path(), None, "non-identity finalize → generic");
+        let out = fold_all(&c, &[Val::F64(4.0), Val::F64(4.0)]);
+        assert_eq!(out, Val::F64(2.0));
+    }
+
+    #[test]
+    fn count_idiom_combiner() {
+        let c = combiner_for(canon::count("c"));
+        assert_eq!(c.idiom(), Idiom::Count);
+        let vals = vec![Val::Str("x".into()); 7];
+        assert_eq!(fold_all(&c, &vals), Val::I64(7));
+    }
+
+    #[test]
+    fn first_idiom_combiner() {
+        let c = combiner_for(canon::first("f"));
+        let out = fold_all(&c, &[Val::I64(42), Val::I64(1), Val::I64(2)]);
+        assert_eq!(out, Val::I64(42));
+    }
+
+    #[test]
+    fn holder_bytes_reasonable() {
+        let c = combiner_for(canon::sum_i64("s"));
+        assert!(c.holder_bytes() >= 16 && c.holder_bytes() <= 64);
+        let cv = combiner_for(canon::sum_vec("v", 8));
+        assert!(cv.holder_bytes() >= 24 + 64);
+    }
+}

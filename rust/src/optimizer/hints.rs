@@ -1,0 +1,256 @@
+//! Safety-hint analysis — the paper's §3.1.1 extension realized:
+//!
+//! > "The implemented technique makes possible the potential analysis and
+//! > implementation of verification code that provide hints at where
+//! > violations to the safety of a MapReduce application lie."
+//!
+//! Where [`super::analyze`](mod@super::analyze) answers *can this reducer be combined?*, this
+//! pass answers *is this reducer even a safe MapReduce reducer?* and, when
+//! the answer is "probably not", points at the instruction responsible.
+//! Hints are advisory (the framework still runs the program); the CLI's
+//! `explain` command and the agent's diagnostics surface them.
+
+use super::pdg::{build_region, Source};
+use super::rir::{Instr, Program};
+
+/// Severity of a hint.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Stylistic / performance note.
+    Info,
+    /// Likely semantic hazard under MapReduce's execution freedoms.
+    Warning,
+    /// Violates MapReduce semantics outright.
+    Error,
+}
+
+/// One diagnostic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hint {
+    pub severity: Severity,
+    /// Program counter of the offending instruction (when attributable).
+    pub pc: Option<usize>,
+    pub message: String,
+}
+
+impl Hint {
+    fn new(severity: Severity, pc: Option<usize>, message: impl Into<String>) -> Hint {
+        Hint {
+            severity,
+            pc,
+            message: message.into(),
+        }
+    }
+}
+
+/// Analyze a reducer program for MapReduce-safety hazards.
+///
+/// Checks (each keyed to the semantics the paper leans on):
+/// 1. **Shared mutable state** — `LoadExtern` anywhere: the reducer reads
+///    state outside the (key, values) contract; under parallel reduction
+///    this must be thread-safe, which the framework cannot verify
+///    ("should a value contain shared mutable state ... this must be
+///    thread-safe for the reduce method to provide a correct answer").
+/// 2. **Partial consumption** — `BreakIf`: the reducer may not see all
+///    values; results then depend on value order, which MapReduce leaves
+///    unspecified.
+/// 3. **Order sensitivity** — non-commutative ops (`Sub`, `Div`) folding
+///    `Cur` into an accumulator: correctness then depends on emit order
+///    across map tasks.
+/// 4. **Positional access** — `ValuesIndex`: value-list order is not part
+///    of the MapReduce contract.
+/// 5. **Per-value emission** — `Emit` inside the loop: legal, but the
+///    output multiset then scales with value count (often a fan-out bug).
+/// 6. **Key-dependent initialization** — init depending on `Key`:
+///    combiner-hostile and usually a modeling smell.
+pub fn analyze_hints(prog: &Program) -> Vec<Hint> {
+    let mut hints = Vec::new();
+    let loop_span = prog.loop_span();
+
+    for (pc, ins) in prog.code.iter().enumerate() {
+        match ins {
+            Instr::LoadExtern(slot) => hints.push(Hint::new(
+                Severity::Warning,
+                Some(pc),
+                format!(
+                    "reads captured state (extern {slot}): must be immutable or thread-safe under parallel reduction"
+                ),
+            )),
+            Instr::BreakIf => hints.push(Hint::new(
+                Severity::Error,
+                Some(pc),
+                "early exit: not all intermediate values are consumed; result depends on unspecified value order",
+            )),
+            Instr::ValuesIndex => hints.push(Hint::new(
+                Severity::Warning,
+                Some(pc),
+                "positional access values[i]: value order is not guaranteed by MapReduce",
+            )),
+            Instr::Emit => {
+                if let Some((lo, hi)) = loop_span {
+                    if pc > lo && pc < hi {
+                        hints.push(Hint::new(
+                            Severity::Info,
+                            Some(pc),
+                            "emit inside the values loop: output cardinality scales with value count (fan-out)",
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Order sensitivity: inside the loop, a Sub/Div whose operands include
+    // both an accumulator-carried value and Cur.
+    if let Some((lo, hi)) = loop_span {
+        if let Ok(pdg) = build_region(prog, lo + 1, hi) {
+            for pc in lo + 1..hi {
+                if !matches!(prog.code[pc], Instr::Sub | Instr::Div) {
+                    continue;
+                }
+                let sources = pdg.sources(prog, pc);
+                let carries = sources.iter().any(|s| matches!(s, Source::LocalIn(_)));
+                let uses_cur = sources.contains(&Source::Cur);
+                if carries && uses_cur {
+                    hints.push(Hint::new(
+                        Severity::Warning,
+                        Some(pc),
+                        format!(
+                            "`{}` folds the current value non-commutatively: result depends on emit order across map tasks",
+                            prog.code[pc].mnemonic()
+                        ),
+                    ));
+                }
+            }
+        }
+        // Key-dependent init.
+        if let Ok(pdg) = build_region(prog, 0, lo) {
+            for pc in 0..lo {
+                if matches!(prog.code[pc], Instr::Store(_))
+                    && pdg.sources(prog, pc).contains(&Source::Key)
+                {
+                    hints.push(Hint::new(
+                        Severity::Info,
+                        Some(pc),
+                        "accumulator initialized from the key: prevents combining and is usually a modeling smell",
+                    ));
+                }
+            }
+        }
+    }
+
+    hints.sort_by(|a, b| b.severity.cmp(&a.severity).then(a.pc.cmp(&b.pc)));
+    hints
+}
+
+/// Render hints for the CLI.
+pub fn render_hints(hints: &[Hint]) -> String {
+    if hints.is_empty() {
+        return "no safety hints — reducer is a clean fold\n".to_string();
+    }
+    let mut out = String::new();
+    for h in hints {
+        let sev = match h.severity {
+            Severity::Error => "ERROR",
+            Severity::Warning => "WARN ",
+            Severity::Info => "info ",
+        };
+        let at = h.pc.map(|pc| format!(" @pc {pc}")).unwrap_or_default();
+        out.push_str(&format!("{sev}{at}: {}\n", h.message));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::builder::{canon, ProgramBuilder};
+
+    #[test]
+    fn clean_fold_has_no_hints() {
+        assert!(analyze_hints(&canon::sum_i64("s")).is_empty());
+        assert!(analyze_hints(&canon::count("c")).is_empty());
+    }
+
+    #[test]
+    fn early_exit_is_an_error() {
+        let hints = analyze_hints(&canon::early_exit("e"));
+        assert!(hints.iter().any(|h| h.severity == Severity::Error));
+    }
+
+    #[test]
+    fn extern_is_a_warning_with_location() {
+        let hints = analyze_hints(&canon::extern_seed("x"));
+        let h = hints
+            .iter()
+            .find(|h| h.message.contains("captured state"))
+            .expect("extern hint");
+        assert_eq!(h.severity, Severity::Warning);
+        assert_eq!(h.pc, Some(0));
+    }
+
+    #[test]
+    fn order_sensitive_sub_flagged() {
+        // acc = acc - cur : order-dependent across map tasks.
+        let p = ProgramBuilder::new("sub")
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .sub()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        let hints = analyze_hints(&p);
+        assert!(
+            hints.iter().any(|h| h.message.contains("non-commutatively")),
+            "{hints:?}"
+        );
+    }
+
+    #[test]
+    fn cur_minus_cur_not_flagged() {
+        // acc = acc + (cur - cur*1) : the Sub has no accumulator carry.
+        let p = ProgramBuilder::new("cc")
+            .const_i64(0)
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .load_cur()
+            .sub()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build()
+            .unwrap();
+        let hints = analyze_hints(&p);
+        assert!(
+            !hints.iter().any(|h| h.message.contains("non-commutatively")),
+            "{hints:?}"
+        );
+    }
+
+    #[test]
+    fn emit_in_loop_is_info() {
+        let hints = analyze_hints(&canon::emit_in_loop("e"));
+        assert!(hints
+            .iter()
+            .any(|h| h.severity == Severity::Info && h.message.contains("fan-out")));
+    }
+
+    #[test]
+    fn rendering_orders_by_severity() {
+        let hints = analyze_hints(&canon::early_exit("e"));
+        let text = render_hints(&hints);
+        assert!(text.starts_with("ERROR"));
+        assert!(render_hints(&[]).contains("clean fold"));
+    }
+}

@@ -1,0 +1,403 @@
+//! The RIR interpreter.
+//!
+//! Plays the role of the JVM executing the user's original `reduce`
+//! bytecode: the **unoptimized** reduce flow runs whole programs over the
+//! collected value lists via [`run_reduce`]; the **generic** combining flow
+//! runs transformed slices via [`run_slice`] (recognized patterns are
+//! instead compiled to native closures in
+//! [`crate::optimizer::combiner`] — the "dynamic compiler" analogue).
+
+use super::rir::{Instr, Program};
+use super::value::{TypeError, Val};
+
+/// Evaluation errors (verified programs over well-typed inputs do not hit
+/// these; they guard tests and fuzzing).
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum EvalError {
+    #[error("type error at pc {pc}: {err}")]
+    Type { pc: usize, err: TypeError },
+    #[error("stack underflow at pc {pc}")]
+    Underflow { pc: usize },
+    #[error("ValuesFirst/ValuesIndex on empty or out-of-range value list at pc {pc}")]
+    BadIndex { pc: usize },
+    #[error("LoadExtern({slot}) with no such extern at pc {pc}")]
+    BadExtern { pc: usize, slot: u8 },
+    #[error("BreakIf on non-boolean at pc {pc}")]
+    BadCondition { pc: usize },
+}
+
+/// The execution context for one `reduce(key, values, emitter)` call.
+pub struct ReduceCtx<'a> {
+    pub key: &'a Val,
+    pub values: &'a [Val],
+    /// Captured environment for `LoadExtern` (usually empty).
+    pub externs: &'a [Val],
+    /// Override for `ValuesLen` — how the COUNT-idiom combiner finalizes:
+    /// the original program is re-run with the held count substituted for
+    /// the (never materialized) value list's length.
+    pub fake_len: Option<i64>,
+    /// Override for `ValuesFirst` — the FIRST-idiom analogue.
+    pub fake_first: Option<Val>,
+}
+
+impl<'a> ReduceCtx<'a> {
+    pub fn new(key: &'a Val, values: &'a [Val]) -> Self {
+        ReduceCtx {
+            key,
+            values,
+            externs: &[],
+            fake_len: None,
+            fake_first: None,
+        }
+    }
+
+    pub fn with_externs(mut self, externs: &'a [Val]) -> Self {
+        self.externs = externs;
+        self
+    }
+}
+
+/// Run a full reducer program; every `Emit` invokes `emit` with the value.
+pub fn run_reduce(
+    prog: &Program,
+    ctx: &ReduceCtx<'_>,
+    mut emit: impl FnMut(Val),
+) -> Result<(), EvalError> {
+    let mut locals = vec![Val::Nil; prog.n_locals as usize];
+    let mut stack: Vec<Val> = Vec::with_capacity(8);
+    exec_range(
+        prog,
+        0,
+        prog.code.len(),
+        ctx,
+        &mut locals,
+        &mut stack,
+        None,
+        &mut emit,
+    )
+}
+
+/// Run a straight-line slice `[lo, hi)` of a program with the given locals
+/// and optional current value; returns the value left for `Emit` if the
+/// slice ends with one. Used by the generic combiner
+/// (`initialize`/`combine`/`finalize` are all slices).
+pub fn run_slice(
+    prog: &Program,
+    lo: usize,
+    hi: usize,
+    locals: &mut [Val],
+    cur: Option<&Val>,
+    ctx: &ReduceCtx<'_>,
+) -> Result<Option<Val>, EvalError> {
+    let mut stack: Vec<Val> = Vec::with_capacity(8);
+    let mut emitted = None;
+    exec_range(prog, lo, hi, ctx, locals, &mut stack, cur, &mut |v| {
+        emitted = Some(v)
+    })?;
+    Ok(emitted)
+}
+
+/// Core evaluator over `[lo, hi)`. `cur_override` supplies `LoadCur` for
+/// slice execution; full-program execution iterates `ctx.values` at the
+/// loop construct instead.
+#[allow(clippy::too_many_arguments)]
+fn exec_range(
+    prog: &Program,
+    lo: usize,
+    hi: usize,
+    ctx: &ReduceCtx<'_>,
+    locals: &mut [Val],
+    stack: &mut Vec<Val>,
+    cur_override: Option<&Val>,
+    emit: &mut impl FnMut(Val),
+) -> Result<(), EvalError> {
+    let mut pc = lo;
+    while pc < hi {
+        match &prog.code[pc] {
+            Instr::IterStart => {
+                // Find matching IterEnd (verifier guarantees one, no nesting).
+                let end = prog.code[pc + 1..hi]
+                    .iter()
+                    .position(|i| matches!(i, Instr::IterEnd))
+                    .map(|off| pc + 1 + off)
+                    .expect("verified program has matching IterEnd");
+                'values: for v in ctx.values {
+                    // Execute the body once per value; BreakIf exits.
+                    let mut body_pc = pc + 1;
+                    while body_pc < end {
+                        match &prog.code[body_pc] {
+                            Instr::BreakIf => {
+                                let c = stack.pop().ok_or(EvalError::Underflow { pc: body_pc })?;
+                                match c {
+                                    Val::Bool(true) => break 'values,
+                                    Val::Bool(false) => {}
+                                    _ => return Err(EvalError::BadCondition { pc: body_pc }),
+                                }
+                            }
+                            _ => step(prog, body_pc, ctx, locals, stack, Some(v), emit)?,
+                        }
+                        body_pc += 1;
+                    }
+                }
+                pc = end + 1;
+                continue;
+            }
+            Instr::IterEnd => {
+                // Only reachable when executing a slice that includes a bare
+                // IterEnd — treat as a no-op boundary.
+            }
+            Instr::BreakIf => {
+                // BreakIf outside the interpreted loop (slice execution):
+                // drop the condition; the combiner path never slices programs
+                // containing BreakIf (the analyzer rejects them first).
+                stack.pop().ok_or(EvalError::Underflow { pc })?;
+            }
+            _ => step(prog, pc, ctx, locals, stack, cur_override, emit)?,
+        }
+        pc += 1;
+    }
+    Ok(())
+}
+
+/// Execute one non-control instruction.
+fn step(
+    prog: &Program,
+    pc: usize,
+    ctx: &ReduceCtx<'_>,
+    locals: &mut [Val],
+    stack: &mut Vec<Val>,
+    cur: Option<&Val>,
+    emit: &mut impl FnMut(Val),
+) -> Result<(), EvalError> {
+    let pop = |stack: &mut Vec<Val>| stack.pop().ok_or(EvalError::Underflow { pc });
+    let bin = |stack: &mut Vec<Val>,
+               f: fn(&Val, &Val) -> Result<Val, TypeError>|
+     -> Result<Val, EvalError> {
+        let rhs = stack.pop().ok_or(EvalError::Underflow { pc })?;
+        let lhs = stack.pop().ok_or(EvalError::Underflow { pc })?;
+        f(&lhs, &rhs).map_err(|err| EvalError::Type { pc, err })
+    };
+    match &prog.code[pc] {
+        Instr::Const(v) => stack.push(v.clone()),
+        Instr::Load(n) => stack.push(locals[*n as usize].clone()),
+        Instr::Store(n) => {
+            let v = pop(stack)?;
+            locals[*n as usize] = v;
+        }
+        Instr::LoadCur => {
+            let v = cur.expect("LoadCur outside loop rejected by verifier");
+            stack.push(v.clone());
+        }
+        Instr::LoadKey => stack.push(ctx.key.clone()),
+        Instr::ValuesLen => match ctx.fake_len {
+            Some(n) => stack.push(Val::I64(n)),
+            None => stack.push(Val::I64(ctx.values.len() as i64)),
+        },
+        Instr::ValuesFirst => match &ctx.fake_first {
+            Some(v) => stack.push(v.clone()),
+            None => {
+                let v = ctx.values.first().ok_or(EvalError::BadIndex { pc })?;
+                stack.push(v.clone());
+            }
+        },
+        Instr::ValuesIndex => {
+            let idx = pop(stack)?
+                .as_i64()
+                .ok_or(EvalError::BadIndex { pc })?;
+            let v = ctx
+                .values
+                .get(idx as usize)
+                .ok_or(EvalError::BadIndex { pc })?;
+            stack.push(v.clone());
+        }
+        Instr::LoadExtern(slot) => {
+            let v = ctx
+                .externs
+                .get(*slot as usize)
+                .ok_or(EvalError::BadExtern { pc, slot: *slot })?;
+            stack.push(v.clone());
+        }
+        Instr::Add => {
+            let v = bin(stack, Val::add)?;
+            stack.push(v);
+        }
+        Instr::Sub => {
+            let v = bin(stack, Val::sub)?;
+            stack.push(v);
+        }
+        Instr::Mul => {
+            let v = bin(stack, Val::mul)?;
+            stack.push(v);
+        }
+        Instr::Div => {
+            let v = bin(stack, Val::div)?;
+            stack.push(v);
+        }
+        Instr::Min => {
+            let v = bin(stack, Val::min)?;
+            stack.push(v);
+        }
+        Instr::Max => {
+            let v = bin(stack, Val::max)?;
+            stack.push(v);
+        }
+        Instr::Lt => {
+            let rhs = pop(stack)?;
+            let lhs = pop(stack)?;
+            let r = match (lhs.as_f64(), rhs.as_f64()) {
+                (Some(a), Some(b)) => Val::Bool(a < b),
+                _ => {
+                    return Err(EvalError::Type {
+                        pc,
+                        err: TypeError::Binary("lt", lhs.ty(), rhs.ty()),
+                    })
+                }
+            };
+            stack.push(r);
+        }
+        Instr::Select => {
+            let cond = pop(stack)?;
+            let else_v = pop(stack)?;
+            let then_v = pop(stack)?;
+            match cond {
+                Val::Bool(true) => stack.push(then_v),
+                Val::Bool(false) => stack.push(else_v),
+                _ => return Err(EvalError::BadCondition { pc }),
+            }
+        }
+        Instr::Dup => {
+            let v = pop(stack)?;
+            stack.push(v.clone());
+            stack.push(v);
+        }
+        Instr::Pop => {
+            pop(stack)?;
+        }
+        Instr::Swap => {
+            let a = pop(stack)?;
+            let b = pop(stack)?;
+            stack.push(a);
+            stack.push(b);
+        }
+        Instr::Emit => {
+            let v = pop(stack)?;
+            emit(v);
+        }
+        Instr::IterStart | Instr::IterEnd | Instr::BreakIf => {
+            unreachable!("control handled by exec_range")
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::builder::canon;
+
+    fn run(prog: &Program, values: &[Val]) -> Vec<Val> {
+        let key = Val::Str("k".into());
+        let externs = [Val::I64(1000)];
+        let ctx = ReduceCtx::new(&key, values).with_externs(&externs);
+        let mut out = Vec::new();
+        run_reduce(prog, &ctx, |v| out.push(v)).unwrap();
+        out
+    }
+
+    fn i64s(xs: &[i64]) -> Vec<Val> {
+        xs.iter().map(|&x| Val::I64(x)).collect()
+    }
+
+    #[test]
+    fn sum_reduces() {
+        let out = run(&canon::sum_i64("s"), &i64s(&[1, 2, 3, 4]));
+        assert_eq!(out, vec![Val::I64(10)]);
+    }
+
+    #[test]
+    fn sum_of_empty_is_init() {
+        let out = run(&canon::sum_i64("s"), &[]);
+        assert_eq!(out, vec![Val::I64(0)]);
+    }
+
+    #[test]
+    fn vector_sum_reduces() {
+        let vals = vec![
+            Val::F64Vec(vec![1.0, 2.0, 1.0]),
+            Val::F64Vec(vec![3.0, 4.0, 1.0]),
+        ];
+        let out = run(&canon::sum_vec("v", 3), &vals);
+        assert_eq!(out, vec![Val::F64Vec(vec![4.0, 6.0, 2.0])]);
+    }
+
+    #[test]
+    fn min_max_reduce() {
+        let out = run(
+            &canon::min_f64("m"),
+            &[Val::F64(3.0), Val::F64(-1.0), Val::F64(2.0)],
+        );
+        assert_eq!(out, vec![Val::F64(-1.0)]);
+        let out = run(&canon::max_i64("m"), &i64s(&[3, 9, 2]));
+        assert_eq!(out, vec![Val::I64(9)]);
+    }
+
+    #[test]
+    fn count_and_first_idioms() {
+        assert_eq!(run(&canon::count("c"), &i64s(&[5, 5, 5])), vec![Val::I64(3)]);
+        assert_eq!(run(&canon::first("f"), &i64s(&[7, 8])), vec![Val::I64(7)]);
+    }
+
+    #[test]
+    fn scaled_sum_finalizes() {
+        let out = run(
+            &canon::scaled_sum_f64("ss", 0.5),
+            &[Val::F64(2.0), Val::F64(4.0)],
+        );
+        assert_eq!(out, vec![Val::F64(3.0)]);
+    }
+
+    #[test]
+    fn early_exit_breaks() {
+        // acc starts 0; condition `acc < 100` breaks immediately → emits 0.
+        let out = run(&canon::early_exit("e"), &i64s(&[10, 20]));
+        assert_eq!(out, vec![Val::I64(0)]);
+    }
+
+    #[test]
+    fn extern_reads_environment() {
+        let out = run(&canon::extern_seed("x"), &i64s(&[1, 2]));
+        assert_eq!(out, vec![Val::I64(1003)]); // 1000 + 1 + 2
+    }
+
+    #[test]
+    fn random_access_indexes() {
+        let out = run(&canon::random_access("r"), &i64s(&[10, 20, 30]));
+        assert_eq!(out, vec![Val::I64(20)]);
+    }
+
+    #[test]
+    fn emit_in_loop_emits_per_value() {
+        let out = run(&canon::emit_in_loop("e"), &i64s(&[4, 5]));
+        assert_eq!(out, vec![Val::I64(4), Val::I64(5), Val::I64(0)]);
+    }
+
+    #[test]
+    fn first_on_empty_errors() {
+        let key = Val::Nil;
+        let ctx = ReduceCtx::new(&key, &[]);
+        let err = run_reduce(&canon::first("f"), &ctx, |_| {}).unwrap_err();
+        assert!(matches!(err, EvalError::BadIndex { .. }));
+    }
+
+    #[test]
+    fn slice_execution_runs_body_once() {
+        let p = canon::sum_i64("s");
+        let (lo, hi) = p.loop_span().unwrap();
+        let mut locals = vec![Val::I64(10)];
+        let key = Val::Nil;
+        let ctx = ReduceCtx::new(&key, &[]);
+        let emitted = run_slice(&p, lo + 1, hi, &mut locals, Some(&Val::I64(5)), &ctx).unwrap();
+        assert_eq!(emitted, None);
+        assert_eq!(locals[0], Val::I64(15));
+    }
+}

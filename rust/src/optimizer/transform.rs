@@ -1,0 +1,44 @@
+//! Step 6 of the paper's pipeline: package the verified slices as a
+//! combiner and (where the body matches a recognized shape) attach the
+//! compiled fast path.
+
+use std::sync::Arc;
+
+use super::analyze::Analysis;
+use super::combiner::{detect_fast_path, Combiner};
+use super::rir::Program;
+
+/// Build the combiner for an accepted analysis. Infallible by construction:
+/// `analyze` has already proven the slices well-formed.
+pub fn transform(program: Arc<Program>, analysis: Analysis) -> Combiner {
+    let fast = detect_fast_path(&program, &analysis);
+    Combiner::new(program, analysis, fast)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optimizer::analyze::analyze;
+    use crate::optimizer::builder::canon;
+    use crate::optimizer::combiner::FastPath;
+
+    #[test]
+    fn canonical_fast_paths() {
+        let cases: Vec<(Program, Option<FastPath>)> = vec![
+            (canon::sum_i64("a"), Some(FastPath::AddI64)),
+            (canon::sum_f64("b"), Some(FastPath::AddF64)),
+            (canon::sum_vec("c", 4), Some(FastPath::AddVec)),
+            (canon::min_f64("d"), Some(FastPath::MinF64)),
+            (canon::max_i64("e"), Some(FastPath::MaxI64)),
+            (canon::count("f"), Some(FastPath::Count)),
+            (canon::first("g"), Some(FastPath::First)),
+            (canon::scaled_sum_f64("h", 2.0), None),
+        ];
+        for (p, expect) in cases {
+            let name = p.name.clone();
+            let a = analyze(&p).unwrap();
+            let c = transform(Arc::new(p), a);
+            assert_eq!(c.fast_path(), expect, "{name}");
+        }
+    }
+}

@@ -1,0 +1,266 @@
+//! Runtime values and static types for RIR programs.
+//!
+//! The JVM optimizer works over boxed Java values (with a mutable Holder
+//! class generated per type); RIR works over [`Val`]. The set covers every
+//! value type the benchmark suite emits: counts (`I64`), measures (`F64`),
+//! coordinate accumulators (`F64Vec`, used by K-Means running sums), and
+//! strings (Word Count keys when values round-trip through the IR).
+
+use crate::api::traits::HeapSized;
+
+/// A dynamically-typed RIR value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Val {
+    /// Absent value — the pre-first-combine state of `First` holders.
+    Nil,
+    Bool(bool),
+    I64(i64),
+    F64(f64),
+    F64Vec(Vec<f64>),
+    Str(String),
+}
+
+/// Static type of a [`Val`] (holder type inference, paper §3.1.1's
+/// "determine the holder type required").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ty {
+    Nil,
+    Bool,
+    I64,
+    F64,
+    F64Vec,
+    Str,
+}
+
+impl Val {
+    pub fn ty(&self) -> Ty {
+        match self {
+            Val::Nil => Ty::Nil,
+            Val::Bool(_) => Ty::Bool,
+            Val::I64(_) => Ty::I64,
+            Val::F64(_) => Ty::F64,
+            Val::F64Vec(_) => Ty::F64Vec,
+            Val::Str(_) => Ty::Str,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Val::I64(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Val::F64(x) => Some(*x),
+            Val::I64(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+
+    /// Numeric/vector addition (the workhorse of combiners).
+    pub fn add(&self, rhs: &Val) -> Result<Val, TypeError> {
+        match (self, rhs) {
+            (Val::I64(a), Val::I64(b)) => Ok(Val::I64(a.wrapping_add(*b))),
+            (Val::F64(a), Val::F64(b)) => Ok(Val::F64(a + b)),
+            (Val::I64(a), Val::F64(b)) | (Val::F64(b), Val::I64(a)) => {
+                Ok(Val::F64(*a as f64 + b))
+            }
+            (Val::F64Vec(a), Val::F64Vec(b)) => {
+                if a.len() != b.len() {
+                    return Err(TypeError::VecLen(a.len(), b.len()));
+                }
+                Ok(Val::F64Vec(a.iter().zip(b).map(|(x, y)| x + y).collect()))
+            }
+            (a, b) => Err(TypeError::Binary("add", a.ty(), b.ty())),
+        }
+    }
+
+    pub fn sub(&self, rhs: &Val) -> Result<Val, TypeError> {
+        match (self, rhs) {
+            (Val::I64(a), Val::I64(b)) => Ok(Val::I64(a.wrapping_sub(*b))),
+            (Val::F64(a), Val::F64(b)) => Ok(Val::F64(a - b)),
+            (a, b) => Err(TypeError::Binary("sub", a.ty(), b.ty())),
+        }
+    }
+
+    pub fn mul(&self, rhs: &Val) -> Result<Val, TypeError> {
+        match (self, rhs) {
+            (Val::I64(a), Val::I64(b)) => Ok(Val::I64(a.wrapping_mul(*b))),
+            (Val::F64(a), Val::F64(b)) => Ok(Val::F64(a * b)),
+            (Val::F64Vec(a), Val::F64(s)) => {
+                Ok(Val::F64Vec(a.iter().map(|x| x * s).collect()))
+            }
+            (a, b) => Err(TypeError::Binary("mul", a.ty(), b.ty())),
+        }
+    }
+
+    pub fn div(&self, rhs: &Val) -> Result<Val, TypeError> {
+        match (self, rhs) {
+            (Val::I64(a), Val::I64(b)) if *b != 0 => Ok(Val::I64(a / b)),
+            (Val::I64(_), Val::I64(_)) => Err(TypeError::DivZero),
+            (Val::F64(a), Val::F64(b)) => Ok(Val::F64(a / b)),
+            (Val::F64Vec(a), Val::F64(s)) => {
+                Ok(Val::F64Vec(a.iter().map(|x| x / s).collect()))
+            }
+            (a, b) => Err(TypeError::Binary("div", a.ty(), b.ty())),
+        }
+    }
+
+    pub fn min(&self, rhs: &Val) -> Result<Val, TypeError> {
+        match (self, rhs) {
+            (Val::I64(a), Val::I64(b)) => Ok(Val::I64((*a).min(*b))),
+            (Val::F64(a), Val::F64(b)) => Ok(Val::F64(a.min(*b))),
+            (a, b) => Err(TypeError::Binary("min", a.ty(), b.ty())),
+        }
+    }
+
+    pub fn max(&self, rhs: &Val) -> Result<Val, TypeError> {
+        match (self, rhs) {
+            (Val::I64(a), Val::I64(b)) => Ok(Val::I64((*a).max(*b))),
+            (Val::F64(a), Val::F64(b)) => Ok(Val::F64(a.max(*b))),
+            (a, b) => Err(TypeError::Binary("max", a.ty(), b.ty())),
+        }
+    }
+}
+
+impl HeapSized for Val {
+    fn heap_bytes(&self) -> u64 {
+        match self {
+            Val::Nil | Val::Bool(_) => 16,
+            Val::I64(_) | Val::F64(_) => 16,
+            Val::F64Vec(v) => 24 + 8 * v.len() as u64,
+            Val::Str(s) => 40 + s.len() as u64,
+        }
+    }
+}
+
+/// Type errors surfaced by RIR evaluation.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum TypeError {
+    #[error("`{0}` not defined for ({1:?}, {2:?})")]
+    Binary(&'static str, Ty, Ty),
+    #[error("vector length mismatch: {0} vs {1}")]
+    VecLen(usize, usize),
+    #[error("integer division by zero")]
+    DivZero,
+    #[error("expected {0:?}, found {1:?}")]
+    Expected(Ty, Ty),
+    #[error("stack underflow")]
+    Underflow,
+}
+
+/// User value types convertible to and from [`Val`] — the bound the
+/// combining flow needs on `V`. This plays the role of Java's boxing: the
+/// framework can lift any such value into the IR's domain and back.
+pub trait RirValue: Clone + Send + Sync + HeapSized + 'static {
+    fn to_val(&self) -> Val;
+    fn from_val(v: Val) -> Option<Self>;
+
+    /// Move-lift into the IR domain. Override when the value owns heap
+    /// payload (`Vec<f64>`, `String`) to avoid the per-emit clone on the
+    /// combine-flow hot path.
+    fn into_val(self) -> Val
+    where
+        Self: Sized,
+    {
+        self.to_val()
+    }
+}
+
+impl RirValue for i64 {
+    fn to_val(&self) -> Val {
+        Val::I64(*self)
+    }
+    fn from_val(v: Val) -> Option<Self> {
+        v.as_i64()
+    }
+}
+
+impl RirValue for f64 {
+    fn to_val(&self) -> Val {
+        Val::F64(*self)
+    }
+    fn from_val(v: Val) -> Option<Self> {
+        match v {
+            Val::F64(x) => Some(x),
+            Val::I64(x) => Some(x as f64),
+            _ => None,
+        }
+    }
+}
+
+impl RirValue for Vec<f64> {
+    fn to_val(&self) -> Val {
+        Val::F64Vec(self.clone())
+    }
+    fn from_val(v: Val) -> Option<Self> {
+        match v {
+            Val::F64Vec(x) => Some(x),
+            _ => None,
+        }
+    }
+    fn into_val(self) -> Val {
+        Val::F64Vec(self)
+    }
+}
+
+impl RirValue for String {
+    fn to_val(&self) -> Val {
+        Val::Str(self.clone())
+    }
+    fn from_val(v: Val) -> Option<Self> {
+        match v {
+            Val::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    fn into_val(self) -> Val {
+        Val::Str(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic_dispatch() {
+        assert_eq!(Val::I64(2).add(&Val::I64(3)).unwrap(), Val::I64(5));
+        assert_eq!(Val::F64(0.5).add(&Val::F64(1.0)).unwrap(), Val::F64(1.5));
+        assert_eq!(
+            Val::F64Vec(vec![1.0, 2.0])
+                .add(&Val::F64Vec(vec![3.0, 4.0]))
+                .unwrap(),
+            Val::F64Vec(vec![4.0, 6.0])
+        );
+        assert_eq!(Val::I64(7).max(&Val::I64(3)).unwrap(), Val::I64(7));
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        assert!(matches!(
+            Val::Str("x".into()).add(&Val::I64(1)),
+            Err(TypeError::Binary("add", Ty::Str, Ty::I64))
+        ));
+        assert_eq!(Val::I64(1).div(&Val::I64(0)), Err(TypeError::DivZero));
+        assert!(Val::F64Vec(vec![1.0]).add(&Val::F64Vec(vec![1.0, 2.0])).is_err());
+    }
+
+    #[test]
+    fn rir_value_roundtrip() {
+        assert_eq!(i64::from_val(42i64.to_val()), Some(42));
+        assert_eq!(f64::from_val(2.5f64.to_val()), Some(2.5));
+        let v = vec![1.0, 2.0];
+        assert_eq!(Vec::<f64>::from_val(v.to_val()), Some(v));
+        assert_eq!(String::from_val("hi".to_string().to_val()), Some("hi".into()));
+        assert_eq!(i64::from_val(Val::Str("no".into())), None);
+    }
+
+    #[test]
+    fn heap_bytes_by_shape() {
+        assert_eq!(Val::I64(1).heap_bytes(), 16);
+        assert_eq!(Val::F64Vec(vec![0.0; 4]).heap_bytes(), 24 + 32);
+    }
+}

@@ -1,0 +1,209 @@
+//! The artifact store: named kernels with fixed AOT shapes.
+//!
+//! Shapes are the contract between `python/compile/aot.py` (which lowers
+//! with these exact example shapes) and the typed entry points here.
+//! Callers pad up to the tile shape; padding conventions are chosen so the
+//! padded region contributes nothing (zeros for sums, +BIG for argmin).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use super::client::{CompiledKernel, PjrtContext};
+
+/// Tile sizes — keep in sync with `python/compile/aot.py::SHAPES`.
+pub mod shapes {
+    /// MM: (TILE, TILE) × (TILE, TILE) f32 matmul tile (MXU-aligned).
+    pub const MM_TILE: usize = 128;
+    /// MM grid kernel: full (N, N) product, N = 4 tiles (BlockSpec grid).
+    pub const MM_GRID_N: usize = 512;
+    /// HG: pixels per histogram kernel call.
+    pub const HG_CHUNK: usize = 4096;
+    /// HG: bins per channel.
+    pub const HG_BINS: usize = 256;
+    /// KM: points per assignment call.
+    pub const KM_POINTS: usize = 1024;
+    /// KM: centroid capacity (pad unused with +BIG coordinates).
+    pub const KM_CENTROIDS: usize = 128;
+    /// KM: dimensions.
+    pub const KM_DIMS: usize = 3;
+    /// LR: samples per moment-kernel call.
+    pub const LR_CHUNK: usize = 4096;
+    /// PC: column block per covariance call.
+    pub const PC_BLOCK: usize = 512;
+}
+
+/// Artifact base names (files are `<name>.hlo.txt`).
+pub const KERNEL_NAMES: [&str; 6] = [
+    "matmul",
+    "matmul_grid",
+    "histogram",
+    "kmeans",
+    "linreg",
+    "pca",
+];
+
+/// The non-thread-safe interior: the `xla` crate's handles are `Rc`-based.
+struct Inner {
+    matmul: CompiledKernel,
+    matmul_grid: CompiledKernel,
+    histogram: CompiledKernel,
+    kmeans: CompiledKernel,
+    linreg: CompiledKernel,
+    pca: CompiledKernel,
+    ctx: PjrtContext,
+}
+
+/// All compiled kernels. Construct once, share via `Arc`; every call is
+/// serialized behind one mutex.
+pub struct KernelSet {
+    inner: Mutex<Inner>,
+}
+
+// SAFETY: `Inner` holds `Rc`s and raw PJRT handles that are not
+// auto-Send/Sync. Every access — including anything that could touch an
+// `Rc` refcount — goes through `self.inner.lock()`, so no two threads ever
+// observe the interior concurrently; the handles are created and dropped
+// inside the same serialized critical sections. The PJRT CPU plugin itself
+// holds no thread-affine state (the PJRT C API is documented
+// thread-compatible), so moving the serialized interior between OS threads
+// is sound.
+unsafe impl Send for KernelSet {}
+unsafe impl Sync for KernelSet {}
+
+impl KernelSet {
+    /// Compile every artifact in `dir`. Errors if any is missing — use
+    /// [`KernelSet::try_load`] for the soft probe.
+    pub fn load(dir: &Path) -> Result<Arc<KernelSet>> {
+        let path = |name: &str| -> PathBuf { dir.join(format!("{name}.hlo.txt")) };
+        for name in KERNEL_NAMES {
+            if !path(name).exists() {
+                bail!(
+                    "missing artifact {} — run `make artifacts` first",
+                    path(name).display()
+                );
+            }
+        }
+        let ctx = PjrtContext::cpu()?;
+        let inner = Inner {
+            matmul: ctx.compile_file(&path("matmul"))?,
+            matmul_grid: ctx.compile_file(&path("matmul_grid"))?,
+            histogram: ctx.compile_file(&path("histogram"))?,
+            kmeans: ctx.compile_file(&path("kmeans"))?,
+            linreg: ctx.compile_file(&path("linreg"))?,
+            pca: ctx.compile_file(&path("pca"))?,
+            ctx,
+        };
+        Ok(Arc::new(KernelSet {
+            inner: Mutex::new(inner),
+        }))
+    }
+
+    /// Load from the conventional location (`$MR4R_ARTIFACTS` or
+    /// `artifacts/` under the workspace root), or `None` if the artifacts
+    /// have not been built.
+    pub fn try_load() -> Option<Arc<KernelSet>> {
+        let dir = std::env::var("MR4R_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| default_artifact_dir());
+        KernelSet::load(&dir).ok()
+    }
+
+    pub fn platform(&self) -> String {
+        self.inner.lock().unwrap().ctx.platform()
+    }
+
+    // ---- Typed entry points (shapes per [`shapes`]) ----
+
+    /// `C = A × B` over one MM_TILE² tile pair.
+    pub fn matmul_tile(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        use shapes::MM_TILE as T;
+        debug_assert_eq!(a.len(), T * T);
+        debug_assert_eq!(b.len(), T * T);
+        let inner = self.inner.lock().unwrap();
+        inner.matmul.exec_f32(&[(a, &[T, T]), (b, &[T, T])])
+    }
+
+    /// Full `C = A × B` over (MM_GRID_N)² operands via the grid-scheduled
+    /// Pallas kernel (BlockSpec-staged tiles).
+    pub fn matmul_grid(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        use shapes::MM_GRID_N as N;
+        debug_assert_eq!(a.len(), N * N);
+        debug_assert_eq!(b.len(), N * N);
+        let inner = self.inner.lock().unwrap();
+        inner.matmul_grid.exec_f32(&[(a, &[N, N]), (b, &[N, N])])
+    }
+
+    /// Per-bin counts of one channel chunk (values in `[0, 256)`; pad with
+    /// any value ≥ 256 to exclude).
+    pub fn histogram_chunk(&self, values: &[f32]) -> Result<Vec<f32>> {
+        use shapes::{HG_BINS, HG_CHUNK};
+        debug_assert_eq!(values.len(), HG_CHUNK);
+        let inner = self.inner.lock().unwrap();
+        let out = inner.histogram.exec_f32(&[(values, &[HG_CHUNK])])?;
+        debug_assert_eq!(out.len(), HG_BINS);
+        Ok(out)
+    }
+
+    /// Nearest-centroid assignment for KM_POINTS points over KM_CENTROIDS
+    /// centroid slots; returns f32 indices.
+    pub fn kmeans_assign(&self, points: &[f32], centroids: &[f32]) -> Result<Vec<f32>> {
+        use shapes::{KM_CENTROIDS, KM_DIMS, KM_POINTS};
+        debug_assert_eq!(points.len(), KM_POINTS * KM_DIMS);
+        debug_assert_eq!(centroids.len(), KM_CENTROIDS * KM_DIMS);
+        let inner = self.inner.lock().unwrap();
+        inner.kmeans.exec_f32(&[
+            (points, &[KM_POINTS, KM_DIMS]),
+            (centroids, &[KM_CENTROIDS, KM_DIMS]),
+        ])
+    }
+
+    /// Moment sums `(Σx, Σy, Σx², Σy², Σxy)` of an LR_CHUNK×2 sample block
+    /// (pad with zero rows).
+    pub fn linreg_moments(&self, xy: &[f32]) -> Result<Vec<f32>> {
+        use shapes::LR_CHUNK;
+        debug_assert_eq!(xy.len(), LR_CHUNK * 2);
+        let inner = self.inner.lock().unwrap();
+        let out = inner.linreg.exec_f32(&[(xy, &[LR_CHUNK, 2])])?;
+        debug_assert_eq!(out.len(), 5);
+        Ok(out)
+    }
+
+    /// Covariance partials `(Σa, Σb, Σab)` of two PC_BLOCK-length row
+    /// blocks (pad with zeros).
+    pub fn pca_pair(&self, rows: &[f32]) -> Result<Vec<f32>> {
+        use shapes::PC_BLOCK;
+        debug_assert_eq!(rows.len(), 2 * PC_BLOCK);
+        let inner = self.inner.lock().unwrap();
+        let out = inner.pca.exec_f32(&[(rows, &[2, PC_BLOCK])])?;
+        debug_assert_eq!(out.len(), 3);
+        Ok(out)
+    }
+}
+
+/// `artifacts/` next to the workspace root (where the Makefile puts them).
+fn default_artifact_dir() -> PathBuf {
+    let cwd = PathBuf::from("artifacts");
+    if cwd.exists() {
+        return cwd;
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_name_list_matches_shapes_contract() {
+        assert_eq!(KERNEL_NAMES.len(), 6);
+        assert!(shapes::MM_TILE.is_power_of_two());
+        assert!(shapes::KM_CENTROIDS >= 100, "paper uses 100 clusters");
+    }
+
+    #[test]
+    fn missing_dir_fails_to_load() {
+        assert!(KernelSet::load(Path::new("/nonexistent-dir")).is_err());
+    }
+}

@@ -1,0 +1,92 @@
+//! PJRT client wrapper: HLO text → compiled executable → typed execution.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client. Creating a client is expensive (plugin
+/// initialization); [`super::artifacts::KernelSet`] holds one per process.
+///
+/// NOTE: the upstream `xla` crate's handles are `Rc`-based and not
+/// `Send`/`Sync`; thread-safety is provided one level up (`KernelSet`
+/// serializes every call behind a single mutex).
+pub struct PjrtContext {
+    client: xla::PjRtClient,
+}
+
+impl PjrtContext {
+    /// Initialize the CPU PJRT client.
+    pub fn cpu() -> Result<PjrtContext> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtContext { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn compile_file(&self, path: &Path) -> Result<CompiledKernel> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(CompiledKernel {
+            exe,
+            name: path
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default(),
+        })
+    }
+}
+
+/// One compiled kernel (not `Send`; see [`PjrtContext`] note).
+pub struct CompiledKernel {
+    exe: xla::PjRtLoadedExecutable,
+    name: String,
+}
+
+impl CompiledKernel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Execute with f32 tensor inputs, returning the flattened f32 outputs
+    /// of the (single-tuple) result.
+    ///
+    /// `inputs` are (data, dims) pairs; the AOT side lowered with
+    /// `return_tuple=True`, so the result is always a 1-tuple whose element
+    /// is returned flattened (callers know the output dims statically).
+    pub fn exec_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = lit
+                .reshape(&dims_i64)
+                .with_context(|| format!("reshape input to {dims:?}"))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing kernel {}", self.name))?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let out = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        out.to_vec::<f32>().context("reading f32 output")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The PJRT round-trip is covered by `rust/tests/pjrt_runtime.rs`
+    // (needs `make artifacts` first); nothing to unit-test without an
+    // artifact on disk.
+}

@@ -1,0 +1,16 @@
+//! The PJRT runtime — loads and executes the AOT-compiled JAX/Pallas
+//! kernels from the L3 hot path.
+//!
+//! Build-time Python (`python/compile/aot.py`) lowers each L1/L2 kernel to
+//! **HLO text** in `artifacts/*.hlo.txt` (text, not serialized proto: the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit-id protos; the
+//! text parser reassigns ids — see `/opt/xla-example/README.md`). This
+//! module compiles those artifacts once on a CPU PJRT client and exposes
+//! typed entry points the benchmark mappers call. Python never runs at
+//! job time.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{KernelSet, KERNEL_NAMES};
+pub use client::{CompiledKernel, PjrtContext};

@@ -1,0 +1,7 @@
+//! Test-support substrates.
+//!
+//! `proptest` is not in the offline vendor set, so [`prop`] provides a small
+//! property-testing kit with seeded generation and greedy case minimization.
+//! Used by the coordinator-invariant and optimizer-equivalence properties.
+
+pub mod prop;

@@ -1,0 +1,279 @@
+//! A small property-based testing kit (proptest stand-in).
+//!
+//! Design:
+//! * a [`Gen`] is a function from a PRNG + size budget to a value;
+//! * [`check`] runs N random cases and, on failure, greedily *shrinks* the
+//!   failing case via a user-supplied or combinator-derived shrinker;
+//! * the failing seed is printed so a case can be replayed exactly with
+//!   `check` with `MR4R_PROP_SEED` set.
+//!
+//! The goal is not proptest parity — it is covering the invariants listed in
+//! DESIGN.md §8 (routing, batching, state, RIR-slicing equivalence) with
+//! reproducible random cases.
+
+use crate::util::prng::Xoshiro256;
+
+/// Number of cases per property (env `MR4R_PROP_CASES` overrides).
+pub fn default_cases() -> usize {
+    std::env::var("MR4R_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generator of random values of type `T`.
+pub struct Gen<T> {
+    #[allow(clippy::type_complexity)]
+    f: Box<dyn Fn(&mut Xoshiro256, usize) -> T>,
+}
+
+impl<T: 'static> Gen<T> {
+    pub fn new(f: impl Fn(&mut Xoshiro256, usize) -> T + 'static) -> Self {
+        Gen { f: Box::new(f) }
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256, size: usize) -> T {
+        (self.f)(rng, size)
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, g: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::new(move |r, s| g(self.sample(r, s)))
+    }
+}
+
+/// Uniform usize in `[lo, hi]` (inclusive — convenient for sizes).
+pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+    Gen::new(move |r, _| r.range(lo, hi + 1))
+}
+
+/// Uniform i64 in `[lo, hi]`.
+pub fn i64_in(lo: i64, hi: i64) -> Gen<i64> {
+    Gen::new(move |r, _| lo + r.below((hi - lo + 1) as u64) as i64)
+}
+
+/// f64 in `[lo, hi)`.
+pub fn f64_in(lo: f64, hi: f64) -> Gen<f64> {
+    Gen::new(move |r, _| r.f64_in(lo, hi))
+}
+
+/// Vec of `inner` with length in `[0, max_len]` scaled by the size budget.
+pub fn vec_of<T: 'static>(inner: Gen<T>, max_len: usize) -> Gen<Vec<T>> {
+    Gen::new(move |r, s| {
+        let cap = max_len.min(s.max(1));
+        let len = r.range(0, cap + 1);
+        (0..len).map(|_| inner.sample(r, s)).collect()
+    })
+}
+
+/// Short lowercase ASCII word (for key generation).
+pub fn word(max_len: usize) -> Gen<String> {
+    Gen::new(move |r, _| {
+        let len = r.range(1, max_len.max(2));
+        (0..len)
+            .map(|_| (b'a' + r.below(26) as u8) as char)
+            .collect()
+    })
+}
+
+/// Pick one of a fixed set of values.
+pub fn one_of<T: Clone + 'static>(items: Vec<T>) -> Gen<T> {
+    assert!(!items.is_empty());
+    Gen::new(move |r, _| items[r.below(items.len() as u64) as usize].clone())
+}
+
+/// Result of a property check.
+#[derive(Debug)]
+pub enum PropResult<T> {
+    Pass,
+    Fail {
+        seed: u64,
+        case: T,
+        shrunk: Option<T>,
+        message: String,
+    },
+}
+
+/// Run `prop` over `cases` random inputs drawn from `gen`.
+/// On failure, attempts to shrink using `shrink` (returns candidate smaller
+/// cases; first still-failing candidate is recursed on, up to 200 steps).
+pub fn check_with_shrink<T: Clone + std::fmt::Debug + 'static>(
+    gen: &Gen<T>,
+    cases: usize,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    let base_seed = std::env::var("MR4R_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_1234_u64);
+    for case_idx in 0..cases {
+        let seed = base_seed.wrapping_add(case_idx as u64);
+        let mut rng = Xoshiro256::seeded(seed);
+        // Size budget grows with the case index so early cases are tiny.
+        let size = 1 + case_idx * 64 / cases.max(1);
+        let case = gen.sample(&mut rng, size);
+        if let Err(msg) = prop(&case) {
+            // Greedy shrink.
+            let mut best = case.clone();
+            let mut best_msg = msg.clone();
+            let mut steps = 0;
+            'outer: while steps < 200 {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                    if steps >= 200 {
+                        break;
+                    }
+                }
+                break;
+            }
+            return PropResult::Fail {
+                seed,
+                case,
+                shrunk: Some(best),
+                message: best_msg,
+            };
+        }
+    }
+    PropResult::Pass
+}
+
+/// Run a property without shrinking support.
+pub fn check<T: Clone + std::fmt::Debug + 'static>(
+    gen: &Gen<T>,
+    cases: usize,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> PropResult<T> {
+    check_with_shrink(gen, cases, |_| Vec::new(), prop)
+}
+
+/// Assert a property holds; panics with the (shrunk) counterexample if not.
+/// This is the entry point tests use.
+#[track_caller]
+pub fn assert_prop<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    match check(gen, default_cases(), prop) {
+        PropResult::Pass => {}
+        PropResult::Fail {
+            seed,
+            case,
+            shrunk,
+            message,
+        } => panic!(
+            "property `{name}` failed (replay with MR4R_PROP_SEED={seed}):\n  \
+             message: {message}\n  case: {case:?}\n  shrunk: {shrunk:?}"
+        ),
+    }
+}
+
+/// Assert with a shrinker.
+#[track_caller]
+pub fn assert_prop_shrink<T: Clone + std::fmt::Debug + 'static>(
+    name: &str,
+    gen: &Gen<T>,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> Result<(), String>,
+) {
+    match check_with_shrink(gen, default_cases(), shrink, prop) {
+        PropResult::Pass => {}
+        PropResult::Fail {
+            seed,
+            case,
+            shrunk,
+            message,
+        } => panic!(
+            "property `{name}` failed (replay with MR4R_PROP_SEED={seed}):\n  \
+             message: {message}\n  case: {case:?}\n  shrunk: {shrunk:?}"
+        ),
+    }
+}
+
+/// Standard shrinker for vectors: halves, then single-element removals.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 16 {
+        for i in 0..v.len() {
+            let mut smaller = v.to_vec();
+            smaller.remove(i);
+            out.push(smaller);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let g = usize_in(0, 100);
+        assert_prop("le-100", &g, |&x| {
+            if x <= 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} > 100"))
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_detected() {
+        let g = usize_in(0, 100);
+        match check(&g, 256, |&x| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        }) {
+            PropResult::Fail { .. } => {}
+            PropResult::Pass => panic!("should have found a counterexample"),
+        }
+    }
+
+    #[test]
+    fn shrinking_minimizes_vec() {
+        // Property: no vector contains a 7. Shrinker should reduce any
+        // failing case to a small vector still containing a 7.
+        let g = vec_of(usize_in(0, 10), 30);
+        match check_with_shrink(&g, 512, |v| shrink_vec(v), |v| {
+            if v.contains(&7) {
+                Err("has a 7".into())
+            } else {
+                Ok(())
+            }
+        }) {
+            PropResult::Fail { shrunk, .. } => {
+                let s = shrunk.unwrap();
+                assert!(s.contains(&7));
+                assert!(s.len() <= 3, "not shrunk enough: {s:?}");
+            }
+            PropResult::Pass => panic!("7 should appear in some vector"),
+        }
+    }
+
+    #[test]
+    fn word_gen_shape() {
+        let mut r = Xoshiro256::seeded(1);
+        let g = word(6);
+        for _ in 0..100 {
+            let w = g.sample(&mut r, 10);
+            assert!(!w.is_empty() && w.len() <= 6);
+            assert!(w.chars().all(|c| c.is_ascii_lowercase()));
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Declarative command-line flag parsing (clap is not in the vendor set).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! arguments, and generated `--help` text. Just enough for the `mr4r`
+//! launcher and the example binaries.
+
+use std::collections::BTreeMap;
+
+/// Specification of one flag.
+#[derive(Clone, Debug)]
+struct FlagSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A tiny declarative CLI parser.
+#[derive(Debug, Default)]
+pub struct Cli {
+    bin: &'static str,
+    about: &'static str,
+    flags: Vec<FlagSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<&'static str, String>,
+    bools: BTreeMap<&'static str, bool>,
+    positional: Vec<String>,
+}
+
+/// Error from parsing; `Help` means `--help` was requested.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("{0}")]
+    Help(String),
+    #[error("unknown flag `{0}`")]
+    UnknownFlag(String),
+    #[error("flag `--{0}` requires a value")]
+    MissingValue(&'static str),
+    #[error("invalid value for `--{flag}`: {msg}")]
+    BadValue { flag: &'static str, msg: String },
+}
+
+impl Cli {
+    pub fn new(bin: &'static str, about: &'static str) -> Self {
+        Cli {
+            bin,
+            about,
+            flags: Vec::new(),
+        }
+    }
+
+    /// Register a value-taking flag with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: true,
+            default: Some(default.to_string()),
+        });
+        self
+    }
+
+    /// Register a value-taking flag without a default (optional).
+    pub fn opt_no_default(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: true,
+            default: None,
+        });
+        self
+    }
+
+    /// Register a boolean flag (defaults to false).
+    pub fn switch(mut self, name: &'static str, help: &'static str) -> Self {
+        self.flags.push(FlagSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Render the help text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} [FLAGS]\n\nFLAGS:\n", self.bin, self.about, self.bin);
+        for f in &self.flags {
+            let arg = if f.takes_value {
+                format!("--{} <v>", f.name)
+            } else {
+                format!("--{}", f.name)
+            };
+            let def = f
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("  {arg:<24} {}{def}\n", f.help));
+        }
+        s.push_str("  --help                   show this message\n");
+        s
+    }
+
+    /// Parse a raw argv slice (without the program name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for f in &self.flags {
+            if let Some(d) = &f.default {
+                args.values.insert(f.name, d.clone());
+            }
+            if !f.takes_value {
+                args.bools.insert(f.name, false);
+            }
+        }
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.help_text()));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = self
+                    .flags
+                    .iter()
+                    .find(|f| f.name == name)
+                    .ok_or_else(|| CliError::UnknownFlag(name.to_string()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or(CliError::MissingValue(spec.name))?,
+                    };
+                    args.values.insert(spec.name, val);
+                } else {
+                    args.bools.insert(spec.name, true);
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn parse_env(&self) -> Result<Args, CliError> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        self.parse(&argv)
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &'static str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &'static str) -> bool {
+        self.bools.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Typed accessor: parse the flag's value via `FromStr`.
+    pub fn parse_as<T: std::str::FromStr>(&self, name: &'static str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name).ok_or(CliError::MissingValue(name))?;
+        raw.parse::<T>().map_err(|e| CliError::BadValue {
+            flag: name,
+            msg: format!("{e} (got `{raw}`)"),
+        })
+    }
+
+    /// Typed accessor with an in-code fallback for optional flags.
+    pub fn parse_or<T: std::str::FromStr>(&self, name: &'static str, fallback: T) -> T {
+        self.get(name)
+            .and_then(|raw| raw.parse::<T>().ok())
+            .unwrap_or(fallback)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("threads", "4", "thread count")
+            .opt_no_default("scale", "input scale")
+            .switch("verbose", "chatty")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse(&sv(&[])).unwrap();
+        assert_eq!(a.get("threads"), Some("4"));
+        assert_eq!(a.get("scale"), None);
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cli()
+            .parse(&sv(&["--threads", "8", "--scale=0.5", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.parse_as::<usize>("threads").unwrap(), 8);
+        assert_eq!(a.parse_as::<f64>("scale").unwrap(), 0.5);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&sv(&["fig5", "--threads", "2"])).unwrap();
+        assert_eq!(a.positional(), &["fig5".to_string()]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            cli().parse(&sv(&["--nope"])),
+            Err(CliError::UnknownFlag(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            cli().parse(&sv(&["--threads"])),
+            Err(CliError::MissingValue("threads"))
+        ));
+    }
+
+    #[test]
+    fn help_lists_flags() {
+        let h = cli().help_text();
+        assert!(h.contains("--threads"));
+        assert!(h.contains("--verbose"));
+        let err = cli().parse(&sv(&["--help"]));
+        assert!(matches!(err, Err(CliError::Help(_))));
+    }
+
+    #[test]
+    fn bad_value_reported() {
+        let a = cli().parse(&sv(&["--threads", "zap"])).unwrap();
+        assert!(a.parse_as::<usize>("threads").is_err());
+        assert_eq!(a.parse_or::<usize>("threads", 7), 7);
+    }
+}

@@ -1,0 +1,19 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The offline vendor set contains only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (clap, serde, rand, criterion)
+//! are re-implemented here at the size this project actually needs:
+//!
+//! * [`prng`] — splitmix64 / xoshiro256** deterministic PRNGs (rand stand-in).
+//! * [`timer`] — monotonic stopwatch + aggregate statistics.
+//! * [`json`] — minimal JSON writer for machine-readable reports.
+//! * [`cli`] — declarative flag parser for the `mr4r` binary (clap stand-in).
+//! * [`hash`] — FxHash-style fast hasher used by the collector hot path.
+//! * [`table`] — fixed-width text tables for figure/table output.
+
+pub mod cli;
+pub mod hash;
+pub mod json;
+pub mod prng;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,201 @@
+//! Integration: the full AOT path — JAX/Pallas kernels lowered to HLO
+//! text by `make artifacts`, loaded and executed through the PJRT CPU
+//! client, validated against the native Rust implementations (the Rust
+//! side's oracle; the Python side has `ref.py`).
+//!
+//! These tests skip (pass vacuously, with a note) when `artifacts/` has
+//! not been built, so `cargo test` works in a fresh checkout; CI runs
+//! `make artifacts` first.
+
+use mr4r::benchmarks::backend::Backend;
+use mr4r::runtime::artifacts::{shapes, KernelSet};
+use mr4r::util::prng::Xoshiro256;
+
+fn kernels() -> Option<std::sync::Arc<KernelSet>> {
+    let ks = KernelSet::try_load();
+    if ks.is_none() {
+        eprintln!("NOTE: artifacts/ missing — run `make artifacts`; skipping PJRT test");
+    }
+    ks
+}
+
+#[test]
+fn matmul_kernel_matches_native() {
+    let Some(ks) = kernels() else { return };
+    let t = shapes::MM_TILE;
+    let mut rng = Xoshiro256::seeded(101);
+    let a: Vec<f32> = (0..t * t).map(|_| rng.below(8) as f32 - 3.5).collect();
+    let b: Vec<f32> = (0..t * t).map(|_| rng.below(8) as f32 - 3.5).collect();
+    let pjrt = Backend::Pjrt(ks).matmul_tile(&a, &b);
+    let native = Backend::Native.matmul_tile(&a, &b);
+    assert_eq!(pjrt.len(), native.len());
+    for (i, (x, y)) in pjrt.iter().zip(&native).enumerate() {
+        assert!((x - y).abs() < 1e-3, "cell {i}: pjrt {x} native {y}");
+    }
+}
+
+#[test]
+fn matmul_grid_matches_tiled_composition() {
+    // The grid-scheduled kernel must equal composing the single-tile
+    // kernel over the same (i, j, k) block decomposition.
+    let Some(ks) = kernels() else { return };
+    let (n, t) = (shapes::MM_GRID_N, shapes::MM_TILE);
+    let mut rng = Xoshiro256::seeded(106);
+    let a: Vec<f32> = (0..n * n).map(|_| rng.below(6) as f32 - 2.5).collect();
+    let b: Vec<f32> = (0..n * n).map(|_| rng.below(6) as f32 - 2.5).collect();
+    let grid = ks.matmul_grid(&a, &b).expect("grid kernel");
+    let blocks = n / t;
+    let tile_of = |m: &[f32], bi: usize, bj: usize| -> Vec<f32> {
+        let mut out = vec![0.0f32; t * t];
+        for r in 0..t {
+            let src = (bi * t + r) * n + bj * t;
+            out[r * t..(r + 1) * t].copy_from_slice(&m[src..src + t]);
+        }
+        out
+    };
+    for bi in 0..blocks {
+        for bj in 0..blocks {
+            let mut acc = vec![0.0f32; t * t];
+            for bk in 0..blocks {
+                let c = Backend::Pjrt(ks.clone())
+                    .matmul_tile(&tile_of(&a, bi, bk), &tile_of(&b, bk, bj));
+                for (x, y) in acc.iter_mut().zip(&c) {
+                    *x += y;
+                }
+            }
+            for r in 0..t {
+                for cix in 0..t {
+                    let got = grid[(bi * t + r) * n + bj * t + cix];
+                    let want = acc[r * t + cix];
+                    assert!(
+                        (got - want).abs() < 1e-2,
+                        "block ({bi},{bj}) cell ({r},{cix}): {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn histogram_kernel_matches_native() {
+    let Some(ks) = kernels() else { return };
+    let mut rng = Xoshiro256::seeded(102);
+    let mut vals: Vec<f32> = (0..shapes::HG_CHUNK)
+        .map(|_| rng.below(256) as f32)
+        .collect();
+    // Pad a tail to exercise the exclusion convention.
+    for v in vals.iter_mut().skip(shapes::HG_CHUNK - 100) {
+        *v = 512.0;
+    }
+    let pjrt = Backend::Pjrt(ks).histogram_chunk(&vals);
+    let native = Backend::Native.histogram_chunk(&vals);
+    assert_eq!(pjrt, native);
+    assert_eq!(
+        pjrt.iter().sum::<f32>() as usize,
+        shapes::HG_CHUNK - 100,
+        "padding must not be counted"
+    );
+}
+
+#[test]
+fn kmeans_kernel_matches_native() {
+    let Some(ks) = kernels() else { return };
+    let mut rng = Xoshiro256::seeded(103);
+    let points: Vec<f32> = (0..shapes::KM_POINTS * shapes::KM_DIMS)
+        .map(|_| rng.f64_in(-100.0, 100.0) as f32)
+        .collect();
+    let mut centroids = vec![1e30f32; shapes::KM_CENTROIDS * shapes::KM_DIMS];
+    for c in centroids.iter_mut().take(50 * shapes::KM_DIMS) {
+        *c = rng.f64_in(-100.0, 100.0) as f32;
+    }
+    let pjrt = Backend::Pjrt(ks).kmeans_assign(&points, &centroids);
+    let native = Backend::Native.kmeans_assign(&points, &centroids);
+    // Compare achieved distance (ties may resolve differently between the
+    // |c|²−2p·c formulation and the direct one).
+    let dist = |p: usize, c: usize| -> f32 {
+        (0..3)
+            .map(|d| {
+                let diff = points[p * 3 + d] - centroids[c * 3 + d];
+                diff * diff
+            })
+            .sum()
+    };
+    for p in 0..shapes::KM_POINTS {
+        let (cp, cn) = (pjrt[p] as usize, native[p] as usize);
+        assert!(cp < 50, "padded slot won argmin for point {p}");
+        let (dp, dn) = (dist(p, cp), dist(p, cn));
+        assert!(
+            (dp - dn).abs() <= 1e-2 * dn.max(1.0),
+            "point {p}: pjrt d={dp} native d={dn}"
+        );
+    }
+}
+
+#[test]
+fn linreg_kernel_matches_native() {
+    let Some(ks) = kernels() else { return };
+    let mut rng = Xoshiro256::seeded(104);
+    let mut xy = vec![0.0f32; shapes::LR_CHUNK * 2];
+    for row in xy.chunks_exact_mut(2).take(3000) {
+        row[0] = rng.f64_in(0.0, 100.0) as f32;
+        row[1] = rng.f64_in(0.0, 100.0) as f32;
+    }
+    let pjrt = Backend::Pjrt(ks).linreg_moments(&xy);
+    let native = Backend::Native.linreg_moments(&xy);
+    for (i, (x, y)) in pjrt.iter().zip(&native).enumerate() {
+        let tol = 1e-3 * y.abs().max(1.0);
+        assert!((x - y).abs() < tol, "moment {i}: pjrt {x} native {y}");
+    }
+}
+
+#[test]
+fn pca_kernel_matches_native() {
+    let Some(ks) = kernels() else { return };
+    let mut rng = Xoshiro256::seeded(105);
+    let rows: Vec<f32> = (0..2 * shapes::PC_BLOCK)
+        .map(|_| rng.f64_in(-5.0, 5.0) as f32)
+        .collect();
+    let pjrt = Backend::Pjrt(ks).pca_pair(&rows);
+    let native = Backend::Native.pca_pair(&rows);
+    for (i, (x, y)) in pjrt.iter().zip(&native).enumerate() {
+        assert!((x - y).abs() < 1e-2, "partial {i}: pjrt {x} native {y}");
+    }
+}
+
+#[test]
+fn full_benchmarks_agree_across_backends() {
+    // The real three-layer composition check: HG and MM run end-to-end on
+    // the MR4R coordinator with the PJRT backend and must produce the same
+    // digests as the native backend.
+    let Some(ks) = kernels() else { return };
+    use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+    for id in [BenchId::HG, BenchId::MM, BenchId::KM] {
+        let native = prepare(id, 0.0002, 99, Backend::Native);
+        let pjrt = prepare(id, 0.0002, 99, Backend::Pjrt(ks.clone()));
+        let p = RunParams::fast(2);
+        let a = native.run(Framework::Mr4r, &p);
+        let b = pjrt.run(Framework::Mr4r, &p);
+        assert_eq!(a.digest, b.digest, "{}: native vs pjrt digest", id.code());
+    }
+}
+
+#[test]
+fn kernels_execute_from_multiple_threads() {
+    // The KernelSet's Send/Sync story: serialized interior, callable from
+    // any worker thread concurrently.
+    let Some(ks) = kernels() else { return };
+    let t = shapes::MM_TILE;
+    std::thread::scope(|s| {
+        for seed in 0..4u64 {
+            let ks = ks.clone();
+            s.spawn(move || {
+                let mut rng = Xoshiro256::seeded(seed);
+                let a: Vec<f32> = (0..t * t).map(|_| rng.below(4) as f32).collect();
+                let b: Vec<f32> = (0..t * t).map(|_| rng.below(4) as f32).collect();
+                let c = Backend::Pjrt(ks).matmul_tile(&a, &b);
+                assert_eq!(c.len(), t * t);
+            });
+        }
+    });
+}

@@ -1,0 +1,346 @@
+//! Property-based integration tests (see DESIGN.md §8).
+//!
+//! The headline property is **optimizer equivalence over random reducer
+//! programs**: for any randomly-generated fold program the analyzer
+//! accepts, the combining flow must produce byte-identical results to the
+//! reduce flow. Plus coordinator invariants: routing (every emit lands
+//! exactly once), scheduling (all tasks complete, any thread count), and
+//! memsim conservation.
+
+use mr4r::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::traits::Emitter;
+use mr4r::coordinator::pipeline::run_job;
+use mr4r::optimizer::agent::OptimizerAgent;
+use mr4r::optimizer::builder::ProgramBuilder;
+use mr4r::optimizer::rir::Program;
+use mr4r::testkit::prop::{assert_prop, usize_in, vec_of, Gen};
+use mr4r::util::prng::Xoshiro256;
+
+// ---------------------------------------------------------------------
+// Random fold-program generation
+// ---------------------------------------------------------------------
+
+/// A generated reducer: the program plus a human-readable recipe (for
+/// debuggable counterexamples).
+#[derive(Clone)]
+struct RandomFold {
+    program: Program,
+    recipe: String,
+}
+
+impl std::fmt::Debug for RandomFold {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RandomFold({})\n{}", self.recipe, self.program.disassemble())
+    }
+}
+
+/// Build a random i64 fold: 1–2 accumulators with constant inits, a body
+/// that updates each accumulator from {acc, cur, consts} via {add, min,
+/// max, mul}, and a finalize that combines the accumulators.
+fn gen_fold(label_seed: u64) -> Gen<RandomFold> {
+    Gen::new(move |rng: &mut Xoshiro256, _size| {
+        let n_acc = rng.range(1, 3) as u8;
+        let mut recipe = String::new();
+        let name = format!("prop-fold-{}-{}", label_seed, rng.next_u64());
+        let mut b = ProgramBuilder::new(name);
+        // Init: const per accumulator.
+        let mut inits = Vec::new();
+        for a in 0..n_acc {
+            let c = rng.range(0, 7) as i64 - 3;
+            inits.push(c);
+            b = b.const_i64(c).store(a);
+            recipe.push_str(&format!("acc{a}={c}; "));
+        }
+        // Body: for each accumulator, acc = op(acc, operand) chains.
+        b = b.iter_start();
+        for a in 0..n_acc {
+            b = b.load(a);
+            let chain = rng.range(1, 3);
+            for _ in 0..chain {
+                let (opname, operand) = match rng.range(0, 4) {
+                    0 => ("add", 0),
+                    1 => ("min", 0),
+                    2 => ("max", 0),
+                    _ => ("mul", 0),
+                };
+                let _ = operand;
+                // Operand: cur (mostly) or a small const.
+                let use_cur = rng.chance(0.7);
+                if use_cur {
+                    b = b.load_cur();
+                    recipe.push_str(&format!("acc{a}={opname}(acc{a},cur); "));
+                } else {
+                    let c = rng.range(1, 4) as i64;
+                    b = b.const_i64(c);
+                    recipe.push_str(&format!("acc{a}={opname}(acc{a},{c}); "));
+                }
+                b = match opname {
+                    "add" => b.add(),
+                    "min" => b.min(),
+                    "max" => b.max(),
+                    _ => b.mul(),
+                };
+            }
+            b = b.store(a);
+        }
+        b = b.iter_end();
+        // Finalize: combine accumulators (sum) plus an optional const op.
+        b = b.load(0);
+        for a in 1..n_acc {
+            b = b.load(a).add();
+        }
+        if rng.chance(0.5) {
+            let c = rng.range(1, 5) as i64;
+            b = b.const_i64(c).mul();
+            recipe.push_str(&format!("emit sum(accs)*{c}"));
+        } else {
+            recipe.push_str("emit sum(accs)");
+        }
+        let program = b.emit().build().expect("generated folds are well-formed");
+        RandomFold { program, recipe }
+    })
+}
+
+/// Inputs: keyed values. Key space small so several values share keys.
+fn gen_inputs() -> Gen<Vec<(i64, i64)>> {
+    vec_of(
+        Gen::new(|rng: &mut Xoshiro256, _| {
+            (rng.range(0, 6) as i64, rng.range(0, 41) as i64 - 20)
+        }),
+        400,
+    )
+}
+
+fn run_flow(
+    program: &Program,
+    inputs: &[(i64, i64)],
+    mode: OptimizeMode,
+    threads: usize,
+) -> (Vec<(i64, i64)>, ExecutionFlow) {
+    let mapper = |kv: &(i64, i64), em: &mut dyn Emitter<i64, i64>| em.emit(kv.0, kv.1);
+    // Externs available in case the program reads captured state (only the
+    // non-transformable cases do; folds never touch it).
+    let reducer: RirReducer<i64, i64> = RirReducer::new(program.clone())
+        .with_externs(vec![mr4r::optimizer::value::Val::I64(1000)]);
+    let agent = OptimizerAgent::new();
+    let cfg = JobConfig::fast()
+        .with_threads(threads)
+        .with_optimize(mode)
+        .with_tasks_per_thread(1);
+    let (out, m) = run_job(&mapper, &reducer, inputs, &cfg, &agent);
+    let mut pairs: Vec<(i64, i64)> = out.into_iter().map(|kv| (kv.key, kv.value)).collect();
+    pairs.sort_unstable();
+    (pairs, m.flow)
+}
+
+#[test]
+fn prop_random_folds_combine_equals_reduce() {
+    // Single-threaded: arrival order identical in both flows, so even
+    // order-sensitive folds must agree exactly.
+    let gen: Gen<(RandomFold, Vec<(i64, i64)>)> = {
+        let gf = gen_fold(1);
+        let gi = gen_inputs();
+        Gen::new(move |rng, size| (gf.sample(rng, size), gi.sample(rng, size)))
+    };
+    assert_prop("random folds: combine == reduce", &gen, |(fold, inputs)| {
+        let (r_reduce, f1) = run_flow(&fold.program, inputs, OptimizeMode::Off, 1);
+        let (r_combine, f2) = run_flow(&fold.program, inputs, OptimizeMode::Auto, 1);
+        if f1 != ExecutionFlow::Reduce {
+            return Err("optimize=Off must take reduce flow".into());
+        }
+        if f2 != ExecutionFlow::Combine {
+            return Err(format!("fold not transformed: {}", fold.recipe));
+        }
+        if r_reduce != r_combine {
+            return Err(format!(
+                "flows disagree: reduce={r_reduce:?} combine={r_combine:?}"
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_random_folds_generic_equals_fast() {
+    let gen: Gen<(RandomFold, Vec<(i64, i64)>)> = {
+        let gf = gen_fold(2);
+        let gi = gen_inputs();
+        Gen::new(move |rng, size| (gf.sample(rng, size), gi.sample(rng, size)))
+    };
+    assert_prop("random folds: generic == fast", &gen, |(fold, inputs)| {
+        let (a, _) = run_flow(&fold.program, inputs, OptimizeMode::Auto, 1);
+        let (b, _) = run_flow(&fold.program, inputs, OptimizeMode::GenericOnly, 1);
+        if a != b {
+            return Err(format!("fast={a:?} generic={b:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_commutative_sum_any_thread_count() {
+    // Pure sums are commutative monoids: every thread count and both flows
+    // must agree exactly.
+    let gen: Gen<(Vec<(i64, i64)>, usize)> = {
+        let gi = gen_inputs();
+        let gt = usize_in(1, 8);
+        Gen::new(move |rng, size| (gi.sample(rng, size), gt.sample(rng, size)))
+    };
+    let sum = mr4r::optimizer::builder::canon::sum_i64("prop-sum");
+    assert_prop("sum over any threads", &gen, |(inputs, threads)| {
+        let (seq, _) = run_flow(&sum, inputs, OptimizeMode::Off, 1);
+        let (par_r, _) = run_flow(&sum, inputs, OptimizeMode::Off, *threads);
+        let (par_c, _) = run_flow(&sum, inputs, OptimizeMode::Auto, *threads);
+        if seq != par_r {
+            return Err(format!("reduce flow thread-dependent: {seq:?} vs {par_r:?}"));
+        }
+        if seq != par_c {
+            return Err(format!("combine flow thread-dependent: {seq:?} vs {par_c:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_routing_every_emit_lands_exactly_once() {
+    // Sum of counts == number of emitted values, for any input multiset
+    // and thread count (collector routing invariant).
+    let gen: Gen<(Vec<(i64, i64)>, usize)> = {
+        let gi = gen_inputs();
+        let gt = usize_in(1, 8);
+        Gen::new(move |rng, size| (gi.sample(rng, size), gt.sample(rng, size)))
+    };
+    let count_one = mr4r::optimizer::builder::canon::sum_i64("prop-count");
+    assert_prop("routing conservation", &gen, |(inputs, threads)| {
+        let mapper = |kv: &(i64, i64), em: &mut dyn Emitter<i64, i64>| em.emit(kv.0, 1);
+        let reducer: RirReducer<i64, i64> = RirReducer::new(count_one.clone());
+        let agent = OptimizerAgent::new();
+        let cfg = JobConfig::fast().with_threads(*threads);
+        let (out, m) = run_job(&mapper, &reducer, inputs, &cfg, &agent);
+        let total: i64 = out.iter().map(|kv| kv.value).sum();
+        if total != inputs.len() as i64 {
+            return Err(format!("lost emits: {total} vs {}", inputs.len()));
+        }
+        if m.emits != inputs.len() as u64 {
+            return Err(format!("metrics emits {} vs {}", m.emits, inputs.len()));
+        }
+        let distinct: std::collections::HashSet<i64> =
+            inputs.iter().map(|kv| kv.0).collect();
+        if m.keys != distinct.len() as u64 {
+            return Err(format!("keys {} vs {}", m.keys, distinct.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_nonconforming_programs_fall_back_correctly() {
+    // Programs with early exits / extern reads / random access must run
+    // the reduce flow and produce whatever the program semantics say —
+    // never panic, never take the combine flow.
+    use mr4r::optimizer::builder::canon;
+    let gen: Gen<(usize, Vec<(i64, i64)>)> = {
+        let gi = gen_inputs();
+        let gk = usize_in(0, 2);
+        Gen::new(move |rng, size| (gk.sample(rng, size), gi.sample(rng, size)))
+    };
+    assert_prop("nonconforming fallback", &gen, |(kind, inputs)| {
+        let program = match kind {
+            0 => canon::early_exit("prop-early"),
+            1 => canon::extern_seed("prop-extern"),
+            _ => canon::emit_in_loop("prop-emitloop"),
+        };
+        if inputs.is_empty() {
+            return Ok(());
+        }
+        let (out, flow) = run_flow(&program, inputs, OptimizeMode::Auto, 2);
+        if flow != ExecutionFlow::Reduce {
+            return Err(format!("kind {kind} must fall back, took {flow:?}"));
+        }
+        // Results are program-defined; the invariant is completion with
+        // one-or-more outputs per key touched.
+        let distinct: std::collections::HashSet<i64> = inputs.iter().map(|kv| kv.0).collect();
+        if out.len() < distinct.len() {
+            return Err(format!("missing keys: {} < {}", out.len(), distinct.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_memsim_conservation() {
+    // Allocated bytes reported == bytes pushed through ThreadAllocs, for
+    // any interleaving of alloc/free/scratch across threads.
+    use mr4r::memsim::{HeapParams, SimHeap};
+    let gen = vec_of(
+        Gen::new(|rng: &mut Xoshiro256, _| {
+            (rng.range(0, 3), rng.range(1, 2048) as u64)
+        }),
+        600,
+    );
+    assert_prop("memsim conservation", &gen, |ops| {
+        let heap = SimHeap::new(HeapParams {
+            total_bytes: 8 << 20,
+            time_scale: 0.0,
+            ..HeapParams::default()
+        });
+        let c = heap.cohort("prop");
+        let mut a = heap.thread_alloc();
+        let mut expect_alloc = 0u64;
+        let mut expect_objs = 0u64;
+        for &(kind, bytes) in ops {
+            match kind {
+                0 => {
+                    a.alloc(c, bytes);
+                    expect_alloc += bytes;
+                    expect_objs += 1;
+                }
+                1 => {
+                    a.scratch(c, bytes);
+                    expect_alloc += bytes;
+                    expect_objs += 1;
+                }
+                _ => a.free(c, bytes.min(64)),
+            }
+        }
+        a.flush();
+        let s = heap.stats();
+        if s.allocated_bytes != expect_alloc {
+            return Err(format!("bytes {} vs {expect_alloc}", s.allocated_bytes));
+        }
+        if s.allocated_objects != expect_objs {
+            return Err(format!("objs {} vs {expect_objs}", s.allocated_objects));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_scheduler_completes_all_tasks() {
+    use mr4r::coordinator::scheduler::TaskPool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let gen: Gen<(usize, usize)> = Gen::new(|rng: &mut Xoshiro256, _| {
+        (rng.range(1, 9), rng.range(0, 300))
+    });
+    assert_prop("scheduler completes", &gen, |&(threads, n_tasks)| {
+        let pool = TaskPool::new(threads);
+        let done = AtomicUsize::new(0);
+        let tasks: Vec<_> = (0..n_tasks)
+            .map(|_| {
+                let done = &done;
+                move |_w: usize| {
+                    done.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect();
+        let stats = pool.run(tasks);
+        if done.load(Ordering::Relaxed) != n_tasks {
+            return Err(format!("ran {} of {n_tasks}", done.load(Ordering::Relaxed)));
+        }
+        if stats.executed != n_tasks {
+            return Err(format!("stats.executed {} vs {n_tasks}", stats.executed));
+        }
+        Ok(())
+    });
+}
