@@ -13,6 +13,10 @@
 //! and prints the paper's headline metrics: per-benchmark optimizer
 //! speedup (claim: up to 2.0×, SM ≤ 1), gap to Phoenix++ (claim: ~17%),
 //! and the WC GC-time collapse (Figs. 8/9 mechanism).
+//!
+//! Every MR4R run goes through the `Runtime` session path: each prepared
+//! workload owns one session, so repeated measurement iterations reuse
+//! one worker pool and hit the agent's per-class cache.
 
 use mr4r::api::config::OptimizeMode;
 use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};

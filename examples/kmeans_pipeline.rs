@@ -1,19 +1,22 @@
-//! K-Means pipeline — the paper's "challenge" benchmark end to end, with
-//! the numeric assignment running through the AOT JAX/Pallas kernel when
-//! artifacts are built (`make artifacts`), native Rust otherwise.
+//! K-Means pipeline — the paper's "challenge" benchmark end to end on a
+//! `Runtime` session, with the numeric assignment running through the AOT
+//! JAX/Pallas kernel when artifacts are built (`make artifacts`), native
+//! Rust otherwise.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example kmeans_pipeline
 //! ```
 //!
-//! Demonstrates the combiner-with-state resolution the paper describes:
-//! the emitted value is `[Σx, Σy, Σz, n]`, folded by the generated
-//! vector-sum combiner, normalized outside the reduce.
+//! Demonstrates the combiner-with-state resolution the paper describes
+//! (the emitted value is `[Σx, Σy, Σz, n]`, folded by the generated
+//! vector-sum combiner, normalized outside the reduce) **and** the session
+//! economics: all Lloyd iterations share one worker pool (threads spawn
+//! once) and one agent (the reducer class transforms once, then every
+//! iteration is a cache hit).
 
 use mr4r::api::config::OptimizeMode;
+use mr4r::api::{JobConfig, Runtime};
 use mr4r::benchmarks::{datagen, kmeans, Backend};
-use mr4r::api::JobConfig;
-use mr4r::optimizer::agent::OptimizerAgent;
 use mr4r::util::timer::Stopwatch;
 
 fn main() {
@@ -31,26 +34,23 @@ fn main() {
         kmeans::ITERATIONS
     );
 
-    let agent = OptimizerAgent::new();
+    // One session for the whole driver: pool + agent persist across jobs.
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(4));
     let before = kmeans::mean_distance(&data, &data.initial_centroids, &backend);
 
     let sw = Stopwatch::start();
-    let (centroids, metrics) = kmeans::run_mr4r(
-        &data,
-        &JobConfig::fast().with_threads(4),
-        &agent,
-        &backend,
-    );
+    let (centroids, metrics) =
+        kmeans::run_mr4r(&data, &rt, &JobConfig::fast().with_threads(4), &backend);
     let optimized_secs = sw.secs();
     let after = kmeans::mean_distance(&data, &centroids, &backend);
 
     let sw = Stopwatch::start();
     let (centroids_off, _) = kmeans::run_mr4r(
         &data,
+        &rt,
         &JobConfig::fast()
             .with_threads(4)
             .with_optimize(OptimizeMode::Off),
-        &agent,
         &backend,
     );
     let unoptimized_secs = sw.secs();
@@ -66,10 +66,24 @@ fn main() {
         kmeans::digest_centroids(&centroids) == kmeans::digest_centroids(&centroids_off)
     );
 
+    let stats = rt.agent().stats();
+    println!(
+        "\nsession: {} threads spawned once for {} jobs; reducer class \
+         transformed {} time(s), {} cache hits",
+        rt.spawned_threads(),
+        2 * kmeans::ITERATIONS,
+        stats.optimized,
+        stats.cache_hits
+    );
+
     assert!(after < before, "Lloyd iterations must improve clustering");
     assert_eq!(
         kmeans::digest_centroids(&centroids),
         kmeans::digest_centroids(&centroids_off),
         "optimizer must not change results"
+    );
+    assert!(
+        stats.cache_hits >= kmeans::ITERATIONS - 1,
+        "iterations after the first must hit the per-class cache"
     );
 }

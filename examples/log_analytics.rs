@@ -5,17 +5,21 @@
 //! cargo run --release --example log_analytics
 //! ```
 //!
-//! Two MapReduce jobs over synthetic web-server logs sharing one optimizer
-//! agent (as a long-lived application would):
+//! One `Runtime` session, several MapReduce jobs over synthetic web-server
+//! logs (as a long-lived application would — one pool, one agent):
 //!
 //! 1. status-code counts — sum reducer → combining flow;
 //! 2. per-endpoint p-worst latency — max reducer → combining flow;
-//! 3. a session-dedup job whose reducer has an early exit → the agent
-//!    *rejects* it and the reduce flow runs (transparently, correctly).
+//! 3. mean latency via the declarative reducer DSL;
+//! 4. a **chained** job: job 1's output feeds a status-class rollup
+//!    without re-reading the logs;
+//! 5. a session-dedup job whose reducer has an early exit → the agent
+//!    *rejects* it and the reduce flow runs (transparently, correctly);
+//! 6. the same status count fed from a **streaming source** (chunked
+//!    generator) — identical results without materializing the input.
 
 use mr4r::api::reducers::RirReducer;
-use mr4r::api::{Emitter, JobConfig, MapReduce};
-use mr4r::optimizer::agent::OptimizerAgent;
+use mr4r::api::{ChunkedSource, Emitter, JobConfig, KeyValue, Runtime};
 use mr4r::optimizer::ast::specs;
 use mr4r::optimizer::builder::canon;
 use mr4r::util::prng::Xoshiro256;
@@ -39,7 +43,7 @@ fn synth_logs(n: usize, seed: u64) -> Vec<String> {
 
 fn main() {
     let logs = synth_logs(200_000, 7);
-    let agent = OptimizerAgent::new();
+    let rt = Runtime::with_config(JobConfig::fast());
 
     // --- Job 1: requests per status code (sum → optimizable) ---
     let status_mapper = |line: &String, em: &mut dyn Emitter<i64, i64>| {
@@ -47,18 +51,18 @@ fn main() {
         let status: i64 = it.nth(2).and_then(|s| s.parse().ok()).unwrap_or(0);
         em.emit(status, 1);
     };
-    let job1 = MapReduce::new(
-        status_mapper,
-        RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
-    )
-    .with_config(JobConfig::fast())
-    .with_agent(agent.clone());
-    let (mut by_status, r1) = job1.run_with_report(&logs);
-    by_status.sort_by_key(|kv| kv.key);
-    println!("requests by status ({} flow):", r1.metrics.flow.label());
-    for kv in &by_status {
+    let by_status = rt
+        .job(
+            status_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
+        )
+        .sorted()
+        .run(&logs);
+    println!("requests by status ({} flow):", by_status.metrics().flow.label());
+    for kv in &by_status.pairs {
         println!("  {}  {:>7}", kv.key, kv.value);
     }
+    let flow1 = by_status.metrics().flow.label();
 
     // --- Job 2: worst latency per endpoint (max → optimizable) ---
     let latency_mapper = |line: &String, em: &mut dyn Emitter<String, i64>| {
@@ -67,18 +71,19 @@ fn main() {
         let lat: i64 = it.nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
         em.emit(ep, lat);
     };
-    let job2 = MapReduce::new(
-        latency_mapper,
-        RirReducer::<String, i64>::new(canon::max_i64("logs.worst_latency")),
-    )
-    .with_config(JobConfig::fast())
-    .with_agent(agent.clone());
-    let (mut worst, r2) = job2.run_with_report(&logs);
-    worst.sort_by(|a, b| b.value.cmp(&a.value));
-    println!("\nworst latency per endpoint ({} flow):", r2.metrics.flow.label());
-    for kv in &worst {
+    let worst = rt
+        .job(
+            latency_mapper,
+            RirReducer::<String, i64>::new(canon::max_i64("logs.worst_latency")),
+        )
+        .run(&logs);
+    let mut worst_pairs = worst.pairs.clone();
+    worst_pairs.sort_by(|a, b| b.value.cmp(&a.value));
+    println!("\nworst latency per endpoint ({} flow):", worst.metrics().flow.label());
+    for kv in &worst_pairs {
         println!("  {:>5}ms  {}", kv.value, kv.key);
     }
+    let flow2 = worst.metrics().flow.label();
 
     // --- Job 2b: mean latency per endpoint, written in the declarative
     // reducer DSL (compiled to RIR, then transformed to a combiner —
@@ -89,44 +94,108 @@ fn main() {
         let lat: f64 = it.nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.0);
         em.emit(ep, lat);
     };
-    let job2b = MapReduce::new(
-        mean_mapper,
-        RirReducer::<String, f64>::new(
-            specs::mean_f64("logs.mean_latency").compile().expect("spec compiles"),
-        ),
-    )
-    .with_config(JobConfig::fast())
-    .with_agent(agent.clone());
-    let (mut means, r2b) = job2b.run_with_report(&logs);
-    means.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
-    println!("\nmean latency per endpoint ({} flow, DSL-compiled reducer):", r2b.metrics.flow.label());
-    for kv in &means {
+    let means = rt
+        .job(
+            mean_mapper,
+            RirReducer::<String, f64>::new(
+                specs::mean_f64("logs.mean_latency").compile().expect("spec compiles"),
+            ),
+        )
+        .run(&logs);
+    let mut mean_pairs = means.pairs.clone();
+    mean_pairs.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
+    println!(
+        "\nmean latency per endpoint ({} flow, DSL-compiled reducer):",
+        means.metrics().flow.label()
+    );
+    for kv in &mean_pairs {
         println!("  {:>7.1}ms  {}", kv.value, kv.key);
     }
-    assert_eq!(r2b.metrics.flow.label(), "combine");
+    assert_eq!(means.metrics().flow.label(), "combine");
+
+    // --- Job 1b: chain job 1's output into a status-class rollup
+    // (2xx/3xx/4xx/5xx) — the output IS the next job's input source ---
+    let mut pipe = rt.pipeline();
+    let by_class = pipe.run(
+        &rt.job(
+            |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
+                em.emit(kv.key / 100, kv.value);
+            },
+            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_class")),
+        )
+        .sorted(),
+        by_status,
+    );
+    println!("\nrequests by status class (chained from job 1):");
+    for kv in &by_class.pairs {
+        println!("  {}xx  {:>7}", kv.key, kv.value);
+    }
+    let total: i64 = by_class.pairs.iter().map(|kv| kv.value).sum();
+    assert_eq!(total, logs.len() as i64);
 
     // --- Job 3: a non-transformable reducer (early exit) ---
-    let job3 = MapReduce::new(
-        status_mapper,
-        RirReducer::<i64, i64>::new(canon::early_exit("logs.first_burst")),
-    )
-    .with_config(JobConfig::fast())
-    .with_agent(agent.clone());
-    let (_, r3) = job3.run_with_report(&logs);
+    let first_burst = rt
+        .job(
+            status_mapper,
+            RirReducer::<i64, i64>::new(canon::early_exit("logs.first_burst")),
+        )
+        .run(&logs);
     println!(
         "\nnon-fold reducer: flow={} (agent said: {})",
-        r3.metrics.flow.label(),
-        r3.metrics.fallback_reason.as_deref().unwrap_or("-")
+        first_burst.metrics().flow.label(),
+        first_burst
+            .metrics()
+            .fallback_reason
+            .as_deref()
+            .unwrap_or("-")
     );
+    let flow3 = first_burst.metrics().flow.label();
 
-    let stats = agent.stats();
+    // --- Job 1c: streaming source — same counts without a materialized
+    // input slice (chunks generated on demand) ---
+    let mut served = 0usize;
+    let logs_for_stream = logs.clone();
+    let stream = ChunkedSource::new(move || {
+        if served >= logs_for_stream.len() {
+            return None;
+        }
+        let end = (served + 8192).min(logs_for_stream.len());
+        let chunk = logs_for_stream[served..end].to_vec();
+        served = end;
+        Some(chunk)
+    });
+    let streamed = rt
+        .job(
+            status_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
+        )
+        .sorted()
+        .run(stream);
+    let materialized = rt
+        .job(
+            status_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
+        )
+        .sorted()
+        .run(&logs);
+    assert_eq!(
+        streamed.pairs, materialized.pairs,
+        "streaming source must match the materialized run"
+    );
+    println!("\nstreamed status counts match materialized run: true");
+
+    let stats = rt.agent().stats();
     println!(
-        "\nagent: {} classes optimized, {} rejected, detection {:.0}us/class",
+        "\nsession: {} threads spawned once; agent: {} classes optimized, {} rejected, \
+         {} cache hits, detection {:.0}us/class",
+        rt.spawned_threads(),
         stats.optimized,
         stats.rejected,
+        stats.cache_hits,
         stats.detection.mean() * 1e6
     );
-    assert_eq!(r1.metrics.flow.label(), "combine");
-    assert_eq!(r2.metrics.flow.label(), "combine");
-    assert_eq!(r3.metrics.flow.label(), "reduce");
+    assert_eq!(flow1, "combine");
+    assert_eq!(flow2, "combine");
+    assert_eq!(flow3, "reduce");
+    assert!(stats.cache_hits >= 2, "repeated classes must hit the cache");
 }

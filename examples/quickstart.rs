@@ -1,17 +1,17 @@
-//! Quickstart — the paper's Figure 2 word count, in MR4R.
+//! Quickstart — the paper's Figure 2 word count, on the session runtime.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Shows the whole public API surface: a mapper closure, a reducer
-//! authored as an RIR program (one expression, like the paper's anonymous
-//! class), and the `MapReduce` façade. The optimizer engages on its own —
-//! the report at the end shows the combining flow was taken and the
-//! reduce phase never ran.
+//! Shows the whole public API surface: a `Runtime` session, a mapper
+//! closure, a reducer authored as an RIR program (one expression, like the
+//! paper's anonymous class), and a `JobBuilder` with a sorted output sink.
+//! The optimizer engages on its own — the report at the end shows the
+//! combining flow was taken and the reduce phase never ran.
 
 use mr4r::api::reducers::RirReducer;
-use mr4r::api::{Emitter, JobConfig, MapReduce};
+use mr4r::api::{Emitter, JobConfig, Runtime};
 use mr4r::optimizer::builder::canon;
 
 fn main() {
@@ -22,6 +22,9 @@ fn main() {
         "semantic information is inherent in parallel frameworks".to_string(),
         "the optimizer rewrites the reduce method into a combiner".to_string(),
     ];
+
+    // One session: persistent worker pool + shared optimizer agent.
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(4));
 
     // Figure 2's Mapper: split, emit (word, 1).
     let mapper = |line: &String, em: &mut dyn Emitter<String, i64>| {
@@ -34,22 +37,27 @@ fn main() {
     // agent analyzes): acc = 0; for v in values { acc += v }; emit acc.
     let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("quickstart.sum"));
 
-    let job = MapReduce::new(mapper, reducer).with_config(JobConfig::fast().with_threads(4));
-    let (mut counts, report) = job.run_with_report(&corpus);
+    // `.sorted()` picks the deterministic output sink.
+    let out = rt.job(mapper, reducer).sorted().run(&corpus);
 
+    let mut counts = out.pairs.clone();
     counts.sort_by(|a, b| b.value.cmp(&a.value).then(a.key.cmp(&b.key)));
     println!("top words:");
     for kv in counts.iter().take(8) {
         println!("  {:>3}  {}", kv.value, kv.key);
     }
 
-    let m = &report.metrics;
+    let m = out.metrics();
     println!("\nexecution flow : {} (optimizer engaged transparently)", m.flow.label());
     println!("map emits      : {} into {} keys", m.emits, m.keys);
     println!(
         "phases         : map {:.2}ms + finalize {:.2}ms (no reduce phase)",
         m.map_secs * 1e3,
         m.reduce_secs * 1e3
+    );
+    println!(
+        "session        : {} worker threads spawned once, reused per job",
+        rt.spawned_threads()
     );
     assert_eq!(m.flow.label(), "combine", "optimizer should engage");
 }

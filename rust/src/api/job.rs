@@ -4,13 +4,20 @@
 //! MapReduce<S, S, I> mrj = new MapReduce<>(mapper, reducer);
 //! return mrj.run(input);
 //! ```
+//!
+//! Since the runtime-session redesign this is a thin shim over
+//! [`crate::api::Runtime`]/[`crate::api::JobBuilder`]: the façade lazily
+//! opens a private session on first run and reuses it for every
+//! subsequent `run` on the same instance, so even legacy callers get
+//! pool reuse and per-class agent caching for free.
 
 use std::hash::Hash;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
 
 use super::config::JobConfig;
+use super::runtime::Runtime;
 use super::traits::{KeyValue, Mapper, Reducer};
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::agent::OptimizerAgent;
 use crate::optimizer::value::RirValue;
 
@@ -20,6 +27,9 @@ pub struct MapReduce<I, K, V> {
     reducer: Arc<dyn Reducer<K, V>>,
     config: JobConfig,
     agent: OptimizerAgent,
+    /// The lazily-opened private session (config/agent builders reset it;
+    /// they only run before the first `run` in practice).
+    session: OnceLock<Runtime>,
 }
 
 /// What a run returns beyond the result pairs.
@@ -30,7 +40,7 @@ pub struct JobReport {
 
 impl<I, K, V> MapReduce<I, K, V>
 where
-    I: Sync,
+    I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {
@@ -45,19 +55,23 @@ where
             reducer: Arc::new(reducer),
             config: JobConfig::new(),
             agent: OptimizerAgent::new(),
+            session: OnceLock::new(),
         }
     }
 
     /// Replace the configuration.
     pub fn with_config(mut self, config: JobConfig) -> Self {
         self.config = config;
+        self.session = OnceLock::new();
         self
     }
 
     /// Share an optimizer agent across jobs (so per-class caching and the
     /// §4.3 timing stats span a whole application, as a real agent would).
+    /// New code should share a [`Runtime`] instead.
     pub fn with_agent(mut self, agent: OptimizerAgent) -> Self {
         self.agent = agent;
+        self.session = OnceLock::new();
         self
     }
 
@@ -69,6 +83,12 @@ where
         &self.agent
     }
 
+    fn session(&self) -> &Runtime {
+        self.session.get_or_init(|| {
+            Runtime::with_config_and_agent(self.config.clone(), self.agent.clone())
+        })
+    }
+
     /// Run the job, returning the result pairs.
     pub fn run(&self, inputs: &[I]) -> Vec<KeyValue<K, V>> {
         self.run_with_report(inputs).0
@@ -76,14 +96,11 @@ where
 
     /// Run the job, returning results plus metrics (what the harness uses).
     pub fn run_with_report(&self, inputs: &[I]) -> (Vec<KeyValue<K, V>>, JobReport) {
-        let (results, metrics) = run_job(
-            self.mapper.as_ref(),
-            self.reducer.as_ref(),
-            inputs,
-            &self.config,
-            &self.agent,
-        );
-        (results, JobReport { metrics })
+        let out = self
+            .session()
+            .job_shared(Arc::clone(&self.mapper), Arc::clone(&self.reducer))
+            .run(inputs);
+        (out.pairs, out.report)
     }
 }
 
@@ -144,5 +161,23 @@ mod tests {
         let stats = agent.stats();
         assert_eq!(stats.optimized, 1, "one transformation");
         assert_eq!(stats.cache_hits, 2, "two cache hits");
+    }
+
+    #[test]
+    fn repeat_runs_reuse_the_private_session() {
+        let mr: MapReduce<String, String, i64> = MapReduce::new(
+            |line: &String, em: &mut dyn Emitter<String, i64>| {
+                em.emit(line.clone(), 1);
+            },
+            RirReducer::new(canon::sum_i64("facade-session")),
+        )
+        .with_config(JobConfig::fast().with_threads(2));
+        mr.run(&["x".to_string()]);
+        let spawned = mr.session().spawned_threads();
+        mr.run(&["x".to_string()]);
+        mr.run(&["x".to_string()]);
+        assert_eq!(mr.session().spawned_threads(), spawned);
+        // The façade's agent handle shares internals with the session's.
+        assert_eq!(mr.agent().stats().cache_hits, 2);
     }
 }

@@ -1,5 +1,6 @@
 //! The public MR4R programming surface — the Rust rendering of paper
-//! Figure 2's API (`Mapper`, `Reducer`, `Emitter`, `MapReduce`).
+//! Figure 2's API (`Mapper`, `Reducer`, `Emitter`), grown into a session
+//! runtime.
 //!
 //! Design principles follow the paper's §2.4 list: a minimal API close to
 //! the original Google formulation, no manual tuning knobs required, and an
@@ -7,13 +8,25 @@
 //! `reduce` only; whether the runtime executes the reduce flow or the
 //! combining flow is decided by the [`crate::optimizer::agent`], never by
 //! the application.
+//!
+//! Two entry points share one engine:
+//!
+//! * [`Runtime`]/[`JobBuilder`] — the session API: a persistent worker
+//!   pool, a shared optimizer agent, streaming [`InputSource`]s, output
+//!   ordering contracts, and job chaining via [`Runtime::pipeline`].
+//! * [`MapReduce`] — the paper's one-shot façade, kept as a thin shim
+//!   over a private session.
 
 pub mod config;
 pub mod job;
 pub mod reducers;
+pub mod runtime;
+pub mod source;
 pub mod traits;
 
 pub use config::{ExecutionFlow, JobConfig, OptimizeMode};
 pub use job::{JobReport, MapReduce};
 pub use reducers::RirReducer;
+pub use runtime::{JobBuilder, JobOutput, Pipeline, Runtime};
+pub use source::{ChunkedSource, Feed, InputSource, IterSource};
 pub use traits::{Emitter, HeapSized, KeyKind, KeyValue, Mapper, Reducer, VecEmitter};

@@ -1,0 +1,527 @@
+//! Runtime sessions — the redesigned job API.
+//!
+//! The paper's façade (`MapReduce::new(m, r).run(&input)`) constructs the
+//! whole world per job: a fresh scheduler pool, a fresh optimizer agent,
+//! fresh GC accounting. That is the right shape for a figure harness and
+//! the wrong shape for an application: a k-means driver pays thread-spawn
+//! cost on every Lloyd iteration and the agent re-transforms the same
+//! reducer class it transformed one iteration ago.
+//!
+//! A [`Runtime`] is the session object that owns those long-lived parts:
+//!
+//! * one persistent [`WorkerPool`] reused by every job (threads spawn
+//!   once per session, not once per job);
+//! * one shared [`OptimizerAgent`] (per-class transformation caching and
+//!   §4.3 timing stats span the application, like the real Java agent);
+//! * one default [`SimHeap`] (GC accounting spans the application for
+//!   every job that doesn't swap in its own config).
+//!
+//! Jobs are described by a [`JobBuilder`] and fed from any
+//! [`InputSource`] — a slice, an owned vector, a streaming chunk
+//! generator, or the [`JobOutput`] of a previous job (first-class
+//! chaining). [`Runtime::pipeline`] scopes a chained/iterative sequence
+//! and records per-stage reports.
+//!
+//! ```ignore
+//! let rt = Runtime::new();
+//! let counts = rt
+//!     .job(mapper, RirReducer::new(canon::sum_i64("wc")))
+//!     .sorted()
+//!     .run(&lines);
+//! ```
+
+use std::hash::Hash;
+use std::sync::Arc;
+
+use super::config::{JobConfig, OptimizeMode};
+use super::job::JobReport;
+use super::source::{Feed, InputSource};
+use super::traits::{KeyValue, Mapper, Reducer};
+use crate::coordinator::pipeline::{run_job_on, FlowMetrics};
+use crate::coordinator::scheduler::WorkerPool;
+use crate::memsim::SimHeap;
+use crate::optimizer::agent::OptimizerAgent;
+use crate::optimizer::value::RirValue;
+
+/// A long-lived execution session: worker pool + optimizer agent + heap.
+///
+/// Create one per application (or per tenant), submit many jobs to it.
+/// `Runtime` is `Send + Sync`; jobs are serialized on the pool.
+pub struct Runtime {
+    pool: WorkerPool,
+    agent: OptimizerAgent,
+    config: JobConfig,
+}
+
+impl Runtime {
+    /// A session with default configuration (all cores, auto optimization,
+    /// accounting heap) — the zero-knobs entry point.
+    pub fn new() -> Self {
+        Self::with_config(JobConfig::new())
+    }
+
+    /// A session with the memsim disabled (pure-speed runs).
+    pub fn fast() -> Self {
+        Self::with_config(JobConfig::fast())
+    }
+
+    /// A session whose jobs default to `config`. The worker pool is sized
+    /// to `config.threads` up front and grows on demand if a job asks for
+    /// more.
+    pub fn with_config(config: JobConfig) -> Self {
+        Self::with_config_and_agent(config, OptimizerAgent::new())
+    }
+
+    /// A session sharing an externally-owned agent (the legacy façade
+    /// uses this so `MapReduce::with_agent` keeps its meaning).
+    pub fn with_config_and_agent(config: JobConfig, agent: OptimizerAgent) -> Self {
+        Runtime {
+            pool: WorkerPool::new(config.threads),
+            agent,
+            config,
+        }
+    }
+
+    /// The session's default job configuration.
+    pub fn config(&self) -> &JobConfig {
+        &self.config
+    }
+
+    /// The session-wide optimizer agent (per-class cache + timing stats).
+    pub fn agent(&self) -> &OptimizerAgent {
+        &self.agent
+    }
+
+    /// The session's *default* simulated heap. Jobs inherit it unless
+    /// they replace the whole config ([`JobBuilder::with_config`]) with
+    /// one carrying a different heap — the harness does exactly that for
+    /// per-run GC accounting — so session-wide stats read from here only
+    /// cover jobs that kept the default.
+    pub fn heap(&self) -> &Arc<SimHeap> {
+        &self.config.heap
+    }
+
+    /// The persistent worker pool.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Worker threads spawned by this session so far — stays flat across
+    /// jobs (the pool-reuse observable the tests pin down).
+    pub fn spawned_threads(&self) -> usize {
+        self.pool.spawned_threads()
+    }
+
+    /// Describe a job over this session. `I` is one input element, the
+    /// mapper emits `(K, V)` pairs, the reducer folds per key. Mapper and
+    /// reducer may borrow state that outlives the session borrow (e.g. a
+    /// matrix tile table) — they need not be `'static`.
+    ///
+    /// Jobs on one session are serialized on its worker pool. Do **not**
+    /// submit a job from inside another job's mapper or reducer on the
+    /// same `Runtime` — the inner run would wait on the pool the outer
+    /// job holds and deadlock. Chain jobs from the driver (see
+    /// [`Runtime::pipeline`]) instead.
+    pub fn job<'rt, I, K, V>(
+        &'rt self,
+        mapper: impl Mapper<I, K, V> + 'rt,
+        reducer: impl Reducer<K, V> + 'rt,
+    ) -> JobBuilder<'rt, I, K, V> {
+        self.job_shared(Arc::new(mapper), Arc::new(reducer))
+    }
+
+    /// [`Runtime::job`] taking pre-shared mapper/reducer handles.
+    pub fn job_shared<'rt, I, K, V>(
+        &'rt self,
+        mapper: Arc<dyn Mapper<I, K, V> + 'rt>,
+        reducer: Arc<dyn Reducer<K, V> + 'rt>,
+    ) -> JobBuilder<'rt, I, K, V> {
+        JobBuilder {
+            rt: self,
+            mapper,
+            reducer,
+            config: self.config.clone(),
+            sorter: None,
+        }
+    }
+
+    /// Scope a multi-job pipeline (chaining, iteration) on this session.
+    pub fn pipeline(&self) -> Pipeline<'_> {
+        Pipeline {
+            rt: self,
+            reports: Vec::new(),
+        }
+    }
+}
+
+impl Default for Runtime {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A configured job awaiting input. Built by [`Runtime::job`]; run with
+/// [`JobBuilder::run`] against any [`InputSource`].
+pub struct JobBuilder<'rt, I, K, V> {
+    rt: &'rt Runtime,
+    mapper: Arc<dyn Mapper<I, K, V> + 'rt>,
+    reducer: Arc<dyn Reducer<K, V> + 'rt>,
+    config: JobConfig,
+    /// Output-ordering contract: `None` → pairs grouped by shard in
+    /// shard-index order (within-shard order can vary run to run when
+    /// several workers race on a shard); `Some` → fully sorted by key.
+    sorter: Option<fn(&mut Vec<KeyValue<K, V>>)>,
+}
+
+impl<'rt, I, K, V> JobBuilder<'rt, I, K, V> {
+    /// Replace the whole per-job configuration (defaults come from the
+    /// session).
+    pub fn with_config(mut self, config: JobConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.config = self.config.with_threads(n);
+        self
+    }
+
+    pub fn optimize(mut self, mode: OptimizeMode) -> Self {
+        self.config = self.config.with_optimize(mode);
+        self
+    }
+
+    pub fn scratch_per_emit(mut self, bytes: u64) -> Self {
+        self.config = self.config.with_scratch_per_emit(bytes);
+        self
+    }
+
+    pub fn tasks_per_thread(mut self, n: usize) -> Self {
+        self.config = self.config.with_tasks_per_thread(n);
+        self
+    }
+
+    /// Unordered sink (the default): results arrive grouped by shard in
+    /// shard index order — the cheapest sink. The shard sequence is
+    /// fixed, but order *within* a shard depends on emit interleaving,
+    /// so multi-threaded runs are not reproducible pair-for-pair; use
+    /// [`JobBuilder::sorted`] when output must be deterministic.
+    pub fn unordered(mut self) -> Self {
+        self.sorter = None;
+        self
+    }
+
+    pub fn config(&self) -> &JobConfig {
+        &self.config
+    }
+}
+
+impl<'rt, I, K: Ord, V> JobBuilder<'rt, I, K, V> {
+    /// Sorted sink: results are sorted by key before being returned —
+    /// fully deterministic output for any thread count.
+    pub fn sorted(mut self) -> Self {
+        self.sorter = Some(|v| v.sort_by(|a, b| a.key.cmp(&b.key)));
+        self
+    }
+}
+
+impl<'rt, I, K, V> JobBuilder<'rt, I, K, V>
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    /// Run against any input source (slice, vec, stream, previous job's
+    /// output), consuming the source.
+    pub fn run<S: InputSource<I>>(&self, mut source: S) -> JobOutput<K, V> {
+        self.run_mut(&mut source)
+    }
+
+    /// Run against a source held by the caller (reusable across runs).
+    pub fn run_mut<S: InputSource<I> + ?Sized>(&self, source: &mut S) -> JobOutput<K, V> {
+        self.run_feed(source.feed())
+    }
+
+    fn run_feed(&self, feed: Feed<'_, I>) -> JobOutput<K, V> {
+        let (mut pairs, metrics) = run_job_on(
+            &self.rt.pool,
+            self.mapper.as_ref(),
+            self.reducer.as_ref(),
+            feed,
+            &self.config,
+            &self.rt.agent,
+        );
+        if let Some(sort) = self.sorter {
+            sort(&mut pairs);
+        }
+        JobOutput {
+            pairs,
+            report: JobReport { metrics },
+        }
+    }
+}
+
+/// What a job returns: the result pairs plus the run report. Implements
+/// [`InputSource`] over `KeyValue<K, V>`, so a job's output feeds the
+/// next job in a chain without a copy.
+#[derive(Clone, Debug)]
+pub struct JobOutput<K, V> {
+    pub pairs: Vec<KeyValue<K, V>>,
+    pub report: JobReport,
+}
+
+impl<K, V> JobOutput<K, V> {
+    pub fn metrics(&self) -> &FlowMetrics {
+        &self.report.metrics
+    }
+
+    pub fn len(&self) -> usize {
+        self.pairs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pairs.is_empty()
+    }
+
+    pub fn into_pairs(self) -> Vec<KeyValue<K, V>> {
+        self.pairs
+    }
+
+    /// Results as plain tuples (what the benchmark digests consume).
+    pub fn into_tuples(self) -> Vec<(K, V)> {
+        self.pairs.into_iter().map(|kv| (kv.key, kv.value)).collect()
+    }
+}
+
+impl<K, V> InputSource<KeyValue<K, V>> for JobOutput<K, V> {
+    fn feed(&mut self) -> Feed<'_, KeyValue<K, V>> {
+        Feed::Slice(&self.pairs)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.pairs.len())
+    }
+}
+
+/// A scoped multi-job sequence on one session: chain job outputs into
+/// the next job's input, or iterate a job-shaped step (Lloyd iterations,
+/// power iterations), with every stage's report recorded.
+///
+/// The pipeline adds no scheduling magic of its own — the session pool
+/// already persists — it is the bookkeeping surface: per-stage metrics in
+/// submission order, ready for a driver loop's convergence accounting.
+pub struct Pipeline<'rt> {
+    rt: &'rt Runtime,
+    reports: Vec<JobReport>,
+}
+
+impl<'rt> Pipeline<'rt> {
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Run one stage and record its report.
+    pub fn run<I, K, V, S>(&mut self, job: &JobBuilder<'rt, I, K, V>, source: S) -> JobOutput<K, V>
+    where
+        I: Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + RirValue,
+        V: RirValue,
+        S: InputSource<I>,
+    {
+        let out = job.run(source);
+        self.reports.push(out.report.clone());
+        out
+    }
+
+    /// Drive an iterative workload: fold `step` over `iters` rounds,
+    /// threading `state` through (each round typically builds one job from
+    /// the current state and runs it via [`Pipeline::run`]).
+    pub fn iterate<T, F>(&mut self, iters: usize, mut state: T, mut step: F) -> T
+    where
+        F: FnMut(&mut Pipeline<'rt>, T, usize) -> T,
+    {
+        for i in 0..iters {
+            state = step(self, state, i);
+        }
+        state
+    }
+
+    /// Reports of every stage run so far, in submission order.
+    pub fn reports(&self) -> &[JobReport] {
+        &self.reports
+    }
+
+    pub fn jobs_run(&self) -> usize {
+        self.reports.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::ExecutionFlow;
+    use crate::api::reducers::RirReducer;
+    use crate::api::source::{ChunkedSource, IterSource};
+    use crate::api::traits::Emitter;
+    use crate::optimizer::builder::canon;
+
+    fn wc_mapper(line: &String, em: &mut dyn Emitter<String, i64>) {
+        for w in line.split_whitespace() {
+            em.emit(w.to_string(), 1);
+        }
+    }
+
+    fn lines() -> Vec<String> {
+        vec![
+            "the quick brown fox".into(),
+            "the lazy dog".into(),
+            "the quick dog".into(),
+        ]
+    }
+
+    #[test]
+    fn session_runs_a_job() {
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(2));
+        let out = rt
+            .job(wc_mapper, RirReducer::<String, i64>::new(canon::sum_i64("rt.wc")))
+            .sorted()
+            .run(&lines());
+        assert_eq!(out.metrics().flow, ExecutionFlow::Combine);
+        let pairs = out.into_tuples();
+        assert_eq!(pairs[0], ("brown".to_string(), 1));
+        assert_eq!(pairs.last().unwrap(), &("the".to_string(), 3));
+    }
+
+    #[test]
+    fn sorted_sink_orders_any_thread_count() {
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(4));
+        let inputs: Vec<String> = (0..200)
+            .map(|i| format!("k{:03} k{:03}", i % 90, i % 7))
+            .collect();
+        let out = rt
+            .job(wc_mapper, RirReducer::<String, i64>::new(canon::sum_i64("rt.sorted")))
+            .sorted()
+            .run(&inputs);
+        let keys: Vec<&String> = out.pairs.iter().map(|kv| &kv.key).collect();
+        let mut expect = keys.clone();
+        expect.sort();
+        assert_eq!(keys, expect);
+    }
+
+    #[test]
+    fn one_pool_spawn_across_jobs() {
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(3));
+        assert_eq!(rt.spawned_threads(), 3);
+        for i in 0..4 {
+            rt.job(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("rt.reuse")),
+            )
+            .run(&lines());
+            assert_eq!(rt.spawned_threads(), 3, "job {i} respawned threads");
+        }
+        let stats = rt.agent().stats();
+        assert_eq!(stats.optimized, 1);
+        assert_eq!(stats.cache_hits, 3, "agent cache spans the session");
+    }
+
+    #[test]
+    fn streaming_sources_match_slices() {
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(3));
+        let data = lines();
+        let job = rt.job(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("rt.stream")),
+        );
+        let job = job.sorted();
+
+        let from_slice = job.run(&data).into_tuples();
+
+        let mut queue = data.clone();
+        queue.reverse();
+        let chunked = ChunkedSource::new(move || queue.pop().map(|l| vec![l]));
+        assert_eq!(job.run(chunked).into_tuples(), from_slice);
+
+        let iter_src = IterSource::new(data.clone().into_iter(), 2);
+        assert_eq!(job.run(iter_src).into_tuples(), from_slice);
+    }
+
+    #[test]
+    fn job_output_chains_into_next_job() {
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(2));
+        let mut pipe = rt.pipeline();
+
+        // Stage 1: word counts.
+        let counts = pipe.run(
+            &rt.job(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("rt.chain1")),
+            ),
+            &lines(),
+        );
+
+        // Stage 2: histogram of counts (count → how many words had it),
+        // fed directly from stage 1's output.
+        let by_count = pipe.run(
+            &rt.job(
+                |kv: &KeyValue<String, i64>, em: &mut dyn Emitter<i64, i64>| {
+                    em.emit(kv.value, 1);
+                },
+                RirReducer::<i64, i64>::new(canon::sum_i64("rt.chain2")),
+            )
+            .sorted(),
+            counts,
+        );
+
+        // lines(): the=3, quick=2, dog=2, brown=1, fox=1, lazy=1.
+        assert_eq!(
+            by_count.into_tuples(),
+            vec![(1, 3), (2, 2), (3, 1)]
+        );
+        assert_eq!(pipe.jobs_run(), 2);
+        assert!(pipe
+            .reports()
+            .iter()
+            .all(|r| r.metrics.flow == ExecutionFlow::Combine));
+    }
+
+    #[test]
+    fn iterate_threads_state_and_records_reports() {
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(2));
+        let data: Vec<i64> = (1..=10).collect();
+        let mut pipe = rt.pipeline();
+        // Repeatedly sum and fold the scalar back in — a toy fixed-point
+        // loop with the k-means shape (state → job → state).
+        let total = pipe.iterate(3, 0i64, |pipe, acc, _i| {
+            let out = pipe.run(
+                &rt.job(
+                    move |x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(0, *x + acc),
+                    RirReducer::<i64, i64>::new(canon::sum_i64("rt.iter")),
+                ),
+                &data,
+            );
+            out.pairs[0].value
+        });
+        // i1: Σ(x) = 55; i2: Σ(x + 55) = 55 + 550 = 605; i3: Σ(x+605)=6105.
+        assert_eq!(total, 6105);
+        assert_eq!(pipe.jobs_run(), 3);
+        assert_eq!(rt.agent().stats().cache_hits, 2);
+    }
+
+    #[test]
+    fn per_job_overrides_do_not_touch_session_defaults() {
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(2));
+        let job = rt
+            .job(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("rt.cfg")),
+            )
+            .threads(4)
+            .optimize(OptimizeMode::Off);
+        let out = job.run(&lines());
+        assert_eq!(out.metrics().flow, ExecutionFlow::Reduce);
+        assert_eq!(rt.config().threads, 2);
+        assert_eq!(rt.config().optimize, OptimizeMode::Auto);
+        assert_eq!(rt.spawned_threads(), 4, "pool grew for the wide job");
+    }
+}

@@ -1,0 +1,270 @@
+//! Input sources — how a job's input reaches the map phase.
+//!
+//! The paper's API takes a fully-materialized array (`mrj.run(input)`).
+//! That contract is too narrow to scale or chain: a production session
+//! needs to accept borrowed slices (zero-copy), owned vectors, the output
+//! of a previous job (chaining), and *chunked generators* whose input is
+//! never fully materialized — the framework-level contract richness that
+//! semantics-aware optimizers feed on (Casper; Rao & Wang 2021).
+//!
+//! [`InputSource`] is that contract. A source lowers itself into a
+//! [`Feed`], which the coordinator drives in one of two shapes:
+//!
+//! * [`Feed::Slice`] — random-access input; the splitter carves index
+//!   ranges and map tasks borrow their chunk in place.
+//! * [`Feed::Stream`] — a pull-based chunk generator; map tasks take
+//!   turns pulling the next chunk, so peak memory is bounded by the
+//!   in-flight chunks rather than the whole dataset.
+
+use std::marker::PhantomData;
+
+/// The lowered form of an input source, consumed by the coordinator.
+pub enum Feed<'a, I> {
+    /// Random-access input: split by index ranges, borrowed in place.
+    Slice(&'a [I]),
+    /// Pull-based chunk generator: each call yields the next chunk of
+    /// items, `None` when exhausted. Workers serialize pulls and map the
+    /// chunk they pulled, so generation cost is shared and memory stays
+    /// bounded.
+    Stream(Box<dyn FnMut() -> Option<Vec<I>> + Send + 'a>),
+}
+
+impl<I> std::fmt::Debug for Feed<'_, I> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Feed::Slice(s) => write!(f, "Feed::Slice(len={})", s.len()),
+            Feed::Stream(_) => write!(f, "Feed::Stream"),
+        }
+    }
+}
+
+/// Something a job can consume as input.
+///
+/// Implemented for slices and vectors (materialized inputs), for
+/// [`ChunkedSource`]/[`IterSource`] (streaming inputs), and for
+/// [`crate::api::JobOutput`] (job chaining: the results of one job feed
+/// the next without a copy).
+pub trait InputSource<I> {
+    /// Lower into the feed the coordinator drives. Borrows `self`: the
+    /// source outlives the run, so slice feeds are zero-copy.
+    fn feed(&mut self) -> Feed<'_, I>;
+
+    /// Total item count when cheaply known (streaming sources may not
+    /// know it). Advisory: the coordinator does not consume it yet; it
+    /// is part of the source contract so future splitter/reporting work
+    /// doesn't need to re-touch every implementation.
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+impl<I> InputSource<I> for &[I] {
+    fn feed(&mut self) -> Feed<'_, I> {
+        Feed::Slice(*self)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.len())
+    }
+}
+
+impl<I> InputSource<I> for Vec<I> {
+    fn feed(&mut self) -> Feed<'_, I> {
+        Feed::Slice(self.as_slice())
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.len())
+    }
+}
+
+impl<I> InputSource<I> for &Vec<I> {
+    fn feed(&mut self) -> Feed<'_, I> {
+        Feed::Slice(self.as_slice())
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.len())
+    }
+}
+
+impl<I, const N: usize> InputSource<I> for &[I; N] {
+    fn feed(&mut self) -> Feed<'_, I> {
+        Feed::Slice(self.as_slice())
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(N)
+    }
+}
+
+/// A chunk-generator source: `next` returns successive chunks of input
+/// until `None`. The input is never fully materialized — the shape for
+/// reading a large file section by section, or paging results out of a
+/// store.
+///
+/// ```ignore
+/// let mut remaining = 100_000;
+/// let source = ChunkedSource::new(move || {
+///     if remaining == 0 { return None; }
+///     let n = remaining.min(4096);
+///     remaining -= n;
+///     Some(load_next_lines(n))
+/// });
+/// runtime.job(mapper, reducer).run(source);
+/// ```
+pub struct ChunkedSource<I, F> {
+    next: F,
+    hint: Option<usize>,
+    _items: PhantomData<fn() -> I>,
+}
+
+impl<I, F> ChunkedSource<I, F>
+where
+    F: FnMut() -> Option<Vec<I>> + Send,
+{
+    pub fn new(next: F) -> Self {
+        ChunkedSource {
+            next,
+            hint: None,
+            _items: PhantomData,
+        }
+    }
+
+    /// Attach a total-item hint (reporting only; chunks still stream).
+    pub fn with_len_hint(mut self, items: usize) -> Self {
+        self.hint = Some(items);
+        self
+    }
+}
+
+impl<I, F> InputSource<I> for ChunkedSource<I, F>
+where
+    F: FnMut() -> Option<Vec<I>> + Send,
+{
+    fn feed(&mut self) -> Feed<'_, I> {
+        let next = &mut self.next;
+        Feed::Stream(Box::new(move || next()))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.hint
+    }
+}
+
+/// Adapts any iterator into a streaming source by batching `chunk_items`
+/// elements per pull (one map task processes one batch).
+pub struct IterSource<It> {
+    iter: It,
+    chunk_items: usize,
+}
+
+impl<It: Iterator> IterSource<It> {
+    pub fn new(iter: It, chunk_items: usize) -> Self {
+        IterSource {
+            iter,
+            chunk_items: chunk_items.max(1),
+        }
+    }
+}
+
+impl<I, It> InputSource<I> for IterSource<It>
+where
+    It: Iterator<Item = I> + Send,
+{
+    fn feed(&mut self) -> Feed<'_, I> {
+        let chunk = self.chunk_items;
+        let iter = &mut self.iter;
+        Feed::Stream(Box::new(move || {
+            let mut buf = Vec::with_capacity(chunk);
+            for _ in 0..chunk {
+                match iter.next() {
+                    Some(x) => buf.push(x),
+                    None => break,
+                }
+            }
+            if buf.is_empty() {
+                None
+            } else {
+                Some(buf)
+            }
+        }))
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        match self.iter.size_hint() {
+            (lo, Some(hi)) if lo == hi => Some(hi),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain<I>(mut feed: Feed<'_, I>) -> Vec<I>
+    where
+        I: Clone,
+    {
+        match &mut feed {
+            Feed::Slice(s) => s.to_vec(),
+            Feed::Stream(next) => {
+                let mut out = Vec::new();
+                while let Some(chunk) = next() {
+                    out.extend(chunk);
+                }
+                out
+            }
+        }
+    }
+
+    #[test]
+    fn slices_and_vecs_feed_in_place() {
+        let data = vec![1, 2, 3];
+        let mut s: &[i32] = &data;
+        assert_eq!(InputSource::len_hint(&s), Some(3));
+        assert_eq!(drain(s.feed()), vec![1, 2, 3]);
+
+        let mut v = data.clone();
+        assert_eq!(drain(v.feed()), vec![1, 2, 3]);
+
+        let mut r = &data;
+        assert_eq!(drain(r.feed()), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn chunked_source_streams_until_none() {
+        let mut served = 0usize;
+        let mut src = ChunkedSource::new(move || {
+            if served >= 10 {
+                return None;
+            }
+            let chunk: Vec<usize> = (served..(served + 4).min(10)).collect();
+            served = (served + 4).min(10);
+            Some(chunk)
+        })
+        .with_len_hint(10);
+        assert_eq!(src.len_hint(), Some(10));
+        assert_eq!(drain(src.feed()), (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn iter_source_batches() {
+        let mut src = IterSource::new(0..7, 3);
+        assert_eq!(src.len_hint(), Some(7));
+        let Feed::Stream(mut next) = src.feed() else {
+            panic!("iter source must stream");
+        };
+        assert_eq!(next(), Some(vec![0, 1, 2]));
+        assert_eq!(next(), Some(vec![3, 4, 5]));
+        assert_eq!(next(), Some(vec![6]));
+        assert_eq!(next(), None);
+    }
+
+    #[test]
+    fn chunk_size_clamps_to_one() {
+        let mut src = IterSource::new(0..3, 0);
+        assert_eq!(drain(src.feed()), vec![0, 1, 2]);
+    }
+}

@@ -11,11 +11,10 @@ use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
 use crate::api::traits::{Emitter, KeyValue};
-use crate::api::JobConfig;
+use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{ArrayContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
-use crate::optimizer::agent::OptimizerAgent;
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 use crate::runtime::artifacts::shapes::{HG_BINS, HG_CHUNK};
 
@@ -62,15 +61,16 @@ pub fn reducer() -> RirReducer<i64, i64> {
 
 pub fn run_mr4r(
     pixels: &[u8],
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<KeyValue<i64, i64>>, FlowMetrics) {
     let chunks = chunk_pixels(pixels);
-    let cfg = cfg.clone().with_scratch_per_emit(16);
-    let m = mapper(backend.clone());
-    let r = reducer();
-    run_job(&m, &r, &chunks, &cfg, agent)
+    let out = rt
+        .job(mapper(backend.clone()), reducer())
+        .with_config(cfg.clone().with_scratch_per_emit(16))
+        .run(&chunks);
+    (out.pairs, out.report.metrics)
 }
 
 pub fn run_phoenix(pixels: &[u8], threads: usize, backend: &Backend) -> Vec<(i64, i64)> {
@@ -120,11 +120,11 @@ pub fn run_phoenixpp(pixels: &[u8], threads: usize) -> Vec<(i64, i64)> {
 /// Arc-holding variant used by the suite (datasets owned by the workload).
 pub fn run_mr4r_owned(
     pixels: &Arc<Vec<u8>>,
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<KeyValue<i64, i64>>, FlowMetrics) {
-    run_mr4r(pixels, cfg, agent, backend)
+    run_mr4r(pixels, rt, cfg, backend)
 }
 
 #[cfg(test)]
@@ -141,10 +141,10 @@ mod tests {
     fn frameworks_agree_and_totals_match() {
         let pixels = datagen::histogram_pixels(0.0001, 9);
         let n_pixels = (pixels.len() / 3) as i64;
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let backend = Backend::Native;
 
-        let (mr, m) = run_mr4r(&pixels, &JobConfig::fast().with_threads(4), &agent, &backend);
+        let (mr, m) = run_mr4r(&pixels, &rt, &JobConfig::fast().with_threads(4), &backend);
         assert_eq!(m.flow.label(), "combine");
         let total: i64 = mr.iter().map(|kv| kv.value).sum();
         assert_eq!(total, 3 * n_pixels, "every pixel counted in all 3 channels");
@@ -155,8 +155,8 @@ mod tests {
 
         let (unopt, mu) = run_mr4r(
             &pixels,
+            &rt,
             &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
-            &agent,
             &backend,
         );
         assert_eq!(mu.flow.label(), "reduce");
@@ -166,11 +166,11 @@ mod tests {
     #[test]
     fn key_space_is_three_channels() {
         let pixels = datagen::histogram_pixels(0.0001, 10);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let (mr, _) = run_mr4r(
             &pixels,
+            &rt,
             &JobConfig::fast().with_threads(2),
-            &agent,
             &Backend::Native,
         );
         assert!(mr.iter().all(|kv| (0..BINS as i64).contains(&kv.key)));

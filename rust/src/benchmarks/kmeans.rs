@@ -15,11 +15,10 @@ use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
 use crate::api::traits::{Emitter, KeyValue};
-use crate::api::JobConfig;
+use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
-use crate::optimizer::agent::OptimizerAgent;
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 use crate::runtime::artifacts::shapes::{KM_CENTROIDS, KM_DIMS, KM_POINTS};
 
@@ -30,8 +29,9 @@ use super::datagen::KmeansData;
 pub const ITERATIONS: usize = 5;
 
 /// Pad centroids into the kernel's fixed slot count; empty slots sit at
-/// +BIG so they never win the argmin.
-fn padded_centroids(centroids: &[[f64; 3]]) -> Vec<f32> {
+/// +BIG so they never win the argmin. (Public so the API-equivalence
+/// suite can rebuild the legacy per-job driver on the same math.)
+pub fn padded_centroids(centroids: &[[f64; 3]]) -> Vec<f32> {
     let mut out = vec![1e30f32; KM_CENTROIDS * KM_DIMS];
     for (i, c) in centroids.iter().take(KM_CENTROIDS).enumerate() {
         for d in 0..KM_DIMS {
@@ -42,7 +42,7 @@ fn padded_centroids(centroids: &[[f64; 3]]) -> Vec<f32> {
 }
 
 /// Assign a block of ≤KM_POINTS points; returns cluster ids.
-fn assign_block(backend: &Backend, pts: &[[f64; 3]], centroids_pad: &[f32]) -> Vec<usize> {
+pub fn assign_block(backend: &Backend, pts: &[[f64; 3]], centroids_pad: &[f32]) -> Vec<usize> {
     let mut flat = vec![1e30f32; KM_POINTS * KM_DIMS];
     for (i, p) in pts.iter().enumerate() {
         for d in 0..KM_DIMS {
@@ -57,15 +57,15 @@ fn assign_block(backend: &Backend, pts: &[[f64; 3]], centroids_pad: &[f32]) -> V
         .collect()
 }
 
-/// One Lloyd iteration as a MapReduce job on MR4R.
-fn mr4r_iteration(
-    points: &[[f64; 3]],
+/// One Lloyd iteration described as a job on a session runtime. The
+/// reducer class is the same every iteration ("kmeans.sumvec"), so the
+/// session agent transforms it once and serves cache hits thereafter.
+fn iteration_job<'rt, 'p: 'rt>(
+    rt: &'rt Runtime,
     centroids: &[[f64; 3]],
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
-) -> (Vec<KeyValue<i64, Vec<f64>>>, FlowMetrics) {
-    let blocks: Vec<&[[f64; 3]]> = points.chunks(KM_POINTS).collect();
+) -> crate::api::JobBuilder<'rt, &'p [[f64; 3]], i64, Vec<f64>> {
     let cpad = padded_centroids(centroids);
     let backend = backend.clone();
     let mapper = move |block: &&[[f64; 3]], em: &mut dyn Emitter<i64, Vec<f64>>| {
@@ -77,12 +77,12 @@ fn mr4r_iteration(
     };
     let reducer: RirReducer<i64, Vec<f64>> =
         RirReducer::new(canon::sum_vec("kmeans.sumvec", KM_DIMS + 1));
-    let cfg = cfg.clone().with_scratch_per_emit(24);
-    run_job(&mapper, &reducer, &blocks, &cfg, agent)
+    rt.job(mapper, reducer)
+        .with_config(cfg.clone().with_scratch_per_emit(24))
 }
 
 /// Sum vectors → new centroids (the normalization outside the reduce).
-fn normalize(sums: &[(i64, Vec<f64>)], prev: &[[f64; 3]]) -> Vec<[f64; 3]> {
+pub fn normalize(sums: &[(i64, Vec<f64>)], prev: &[[f64; 3]]) -> Vec<[f64; 3]> {
     let mut next = prev.to_vec();
     for (k, s) in sums {
         let n = s[KM_DIMS].max(1.0);
@@ -91,24 +91,30 @@ fn normalize(sums: &[(i64, Vec<f64>)], prev: &[[f64; 3]]) -> Vec<[f64; 3]> {
     next
 }
 
-/// Full MR4R K-Means: ITERATIONS jobs; returns final centroids plus the
-/// metrics of the last iteration (the steady-state job the figures use).
+/// Full MR4R K-Means as a session pipeline: ITERATIONS chained jobs on
+/// one runtime (threads spawn once, the reducer class transforms once);
+/// returns final centroids plus the metrics of the last iteration (the
+/// steady-state job the figures use).
 pub fn run_mr4r(
     data: &KmeansData,
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<[f64; 3]>, FlowMetrics) {
-    let mut centroids = data.initial_centroids.clone();
-    let mut last_metrics = None;
-    for _ in 0..ITERATIONS {
-        let (sums, m) = mr4r_iteration(&data.points, &centroids, cfg, agent, backend);
-        let pairs: Vec<(i64, Vec<f64>)> =
-            sums.into_iter().map(|kv| (kv.key, kv.value)).collect();
-        centroids = normalize(&pairs, &centroids);
-        last_metrics = Some(m);
-    }
-    (centroids, last_metrics.expect("≥1 iteration"))
+    let blocks: Vec<&[[f64; 3]]> = data.points.chunks(KM_POINTS).collect();
+    let mut pipe = rt.pipeline();
+    let centroids = pipe.iterate(
+        ITERATIONS,
+        data.initial_centroids.clone(),
+        |pipe, centroids, _i| {
+            let job = iteration_job(rt, &centroids, cfg, backend);
+            let sums = pipe.run(&job, &blocks);
+            let pairs: Vec<(i64, Vec<f64>)> = sums.into_tuples();
+            normalize(&pairs, &centroids)
+        },
+    );
+    let last = pipe.reports().last().expect("≥1 iteration");
+    (centroids, last.metrics.clone())
 }
 
 /// Phoenix: same chunked assignment, per-point emission, manual vector
@@ -220,11 +226,11 @@ pub fn mean_distance(data: &KmeansData, centroids: &[[f64; 3]], backend: &Backen
 /// Arc-holding runner used by the suite.
 pub fn run_mr4r_owned(
     data: &Arc<KmeansData>,
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<[f64; 3]>, FlowMetrics) {
-    run_mr4r(data, cfg, agent, backend)
+    run_mr4r(data, rt, cfg, backend)
 }
 
 #[cfg(test)]
@@ -236,10 +242,16 @@ mod tests {
     #[test]
     fn frameworks_converge_to_same_centroids() {
         let data = datagen::kmeans_points(0.005, 21);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let backend = Backend::Native;
-        let (c_mr, m) = run_mr4r(&data, &JobConfig::fast().with_threads(4), &agent, &backend);
+        let (c_mr, m) = run_mr4r(&data, &rt, &JobConfig::fast().with_threads(4), &backend);
         assert_eq!(m.flow.label(), "combine");
+        let stats = rt.agent().stats();
+        assert!(
+            stats.cache_hits >= ITERATIONS - 1,
+            "pipeline must hit the per-class cache: {} hits",
+            stats.cache_hits
+        );
         let c_ph = run_phoenix(&data, 4, &backend);
         let c_pp = run_phoenixpp(&data, 4, &backend);
         assert_eq!(digest_centroids(&c_mr), digest_centroids(&c_ph));
@@ -249,13 +261,13 @@ mod tests {
     #[test]
     fn optimizer_on_off_same_result() {
         let data = datagen::kmeans_points(0.004, 22);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let backend = Backend::Native;
-        let (c_on, _) = run_mr4r(&data, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let (c_on, _) = run_mr4r(&data, &rt, &JobConfig::fast().with_threads(2), &backend);
         let (c_off, m_off) = run_mr4r(
             &data,
+            &rt,
             &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
-            &agent,
             &backend,
         );
         assert_eq!(m_off.flow.label(), "reduce");
@@ -265,10 +277,10 @@ mod tests {
     #[test]
     fn clustering_improves_over_random() {
         let data = datagen::kmeans_points(0.004, 23);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let backend = Backend::Native;
         let before = mean_distance(&data, &data.initial_centroids, &backend);
-        let (after_c, _) = run_mr4r(&data, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let (after_c, _) = run_mr4r(&data, &rt, &JobConfig::fast().with_threads(2), &backend);
         let after = mean_distance(&data, &after_c, &backend);
         assert!(
             after < before * 0.9,

@@ -12,11 +12,10 @@ use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
 use crate::api::traits::{Emitter, KeyValue};
-use crate::api::JobConfig;
+use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{ArrayContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
-use crate::optimizer::agent::OptimizerAgent;
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 use crate::runtime::artifacts::shapes::LR_CHUNK;
 
@@ -64,8 +63,8 @@ pub fn reducer() -> RirReducer<i64, f64> {
 
 pub fn run_mr4r(
     points: &[(f64, f64)],
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<KeyValue<i64, f64>>, FlowMetrics) {
     let chunks = chunk_points(points);
@@ -73,9 +72,11 @@ pub fn run_mr4r(
     let mapper = move |chunk: &&[(f64, f64)], em: &mut dyn Emitter<i64, f64>| {
         map_chunk(&backend, chunk, |k, v| em.emit(k, v));
     };
-    let cfg = cfg.clone().with_scratch_per_emit(16);
-    let r = reducer();
-    run_job(&mapper, &r, &chunks, &cfg, agent)
+    let out = rt
+        .job(mapper, reducer())
+        .with_config(cfg.clone().with_scratch_per_emit(16))
+        .run(&chunks);
+    (out.pairs, out.report.metrics)
 }
 
 pub fn run_phoenix(
@@ -146,11 +147,11 @@ pub fn digest_fit(moments: &[(i64, f64)], n: usize) -> u64 {
 /// Arc-holding runner used by the suite.
 pub fn run_mr4r_owned(
     points: &Arc<Vec<(f64, f64)>>,
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<KeyValue<i64, f64>>, FlowMetrics) {
-    run_mr4r(points, cfg, agent, backend)
+    run_mr4r(points, rt, cfg, backend)
 }
 
 #[cfg(test)]
@@ -162,11 +163,11 @@ mod tests {
     #[test]
     fn recovers_the_generating_line() {
         let pts = datagen::linreg_points(0.0001, 31);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let (out, m) = run_mr4r(
             &pts,
+            &rt,
             &JobConfig::fast().with_threads(4),
-            &agent,
             &Backend::Native,
         );
         assert_eq!(m.flow.label(), "combine");
@@ -180,9 +181,9 @@ mod tests {
     #[test]
     fn frameworks_agree_on_the_fit() {
         let pts = datagen::linreg_points(0.00005, 32);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let backend = Backend::Native;
-        let (mr, _) = run_mr4r(&pts, &JobConfig::fast().with_threads(4), &agent, &backend);
+        let (mr, _) = run_mr4r(&pts, &rt, &JobConfig::fast().with_threads(4), &backend);
         let mr: Vec<(i64, f64)> = mr.into_iter().map(|kv| (kv.key, kv.value)).collect();
         let d = digest_fit(&mr, pts.len());
         assert_eq!(d, digest_fit(&run_phoenix(&pts, 4, &backend), pts.len()));
@@ -190,8 +191,8 @@ mod tests {
 
         let (unopt, mu) = run_mr4r(
             &pts,
+            &rt,
             &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
-            &agent,
             &backend,
         );
         assert_eq!(mu.flow.label(), "reduce");
@@ -203,11 +204,11 @@ mod tests {
     fn emits_five_partials_per_chunk() {
         let pts = datagen::linreg_points(0.0001, 33);
         let n_chunks = pts.len().div_ceil(LR_CHUNK);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let (_, m) = run_mr4r(
             &pts,
+            &rt,
             &JobConfig::fast().with_threads(2),
-            &agent,
             &Backend::Native,
         );
         assert_eq!(m.emits as usize, 5 * n_chunks);

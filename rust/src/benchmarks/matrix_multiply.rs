@@ -11,11 +11,10 @@ use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
 use crate::api::traits::{Emitter, KeyValue};
-use crate::api::JobConfig;
+use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{ArrayContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
-use crate::optimizer::agent::OptimizerAgent;
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 use crate::runtime::artifacts::shapes::MM_TILE;
 
@@ -106,18 +105,21 @@ pub fn reducer() -> RirReducer<i64, f64> {
 pub fn run_mr4r(
     a: &PaddedMatrix,
     b: &PaddedMatrix,
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<KeyValue<i64, f64>>, FlowMetrics) {
     let inputs = tasks(a.blocks);
     let backend = backend.clone();
+    // The mapper borrows the padded matrices — no `'static` needed.
     let mapper = move |task: &(usize, usize, usize), em: &mut dyn Emitter<i64, f64>| {
         map_tile(a, b, &backend, *task, |k, v| em.emit(k, v));
     };
-    let r = reducer();
-    let cfg = cfg.clone().with_scratch_per_emit(8);
-    run_job(&mapper, &r, &inputs, &cfg, agent)
+    let out = rt
+        .job(mapper, reducer())
+        .with_config(cfg.clone().with_scratch_per_emit(8))
+        .run(&inputs);
+    (out.pairs, out.report.metrics)
 }
 
 pub fn run_phoenix(
@@ -212,12 +214,12 @@ mod tests {
     fn matches_reference_product() {
         let (ma, mb) = small();
         let (a, b) = (pad(&ma), pad(&mb));
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let (out, m) = run_mr4r(
             &a,
             &b,
+            &rt,
             &JobConfig::fast().with_threads(4),
-            &agent,
             &Backend::Native,
         );
         assert_eq!(m.flow.label(), "combine");
@@ -239,9 +241,9 @@ mod tests {
     fn frameworks_agree() {
         let (ma, mb) = small();
         let (a, b) = (pad(&ma), pad(&mb));
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let backend = Backend::Native;
-        let (mr, _) = run_mr4r(&a, &b, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let (mr, _) = run_mr4r(&a, &b, &rt, &JobConfig::fast().with_threads(2), &backend);
         let mr: Vec<(i64, f64)> = mr.into_iter().map(|kv| (kv.key, kv.value)).collect();
         let d = digest_pairs(&mr);
         assert_eq!(d, digest_pairs(&run_phoenix(&a, &b, 2, &backend)));
@@ -250,8 +252,8 @@ mod tests {
         let (unopt, mu) = run_mr4r(
             &a,
             &b,
+            &rt,
             &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
-            &agent,
             &backend,
         );
         assert_eq!(mu.flow.label(), "reduce");

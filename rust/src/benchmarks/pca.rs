@@ -11,11 +11,10 @@ use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
 use crate::api::traits::{Emitter, KeyValue};
-use crate::api::JobConfig;
+use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
-use crate::optimizer::agent::OptimizerAgent;
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 use crate::runtime::artifacts::shapes::PC_BLOCK;
 use crate::util::prng::Xoshiro256;
@@ -82,8 +81,8 @@ pub fn reducer() -> RirReducer<i64, Vec<f64>> {
 pub fn run_mr4r(
     m: &MatrixData,
     pairs: &[(usize, usize)],
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
     backend: &Backend,
 ) -> (Vec<KeyValue<i64, Vec<f64>>>, FlowMetrics) {
     let inputs = tasks(pairs, m.n);
@@ -91,9 +90,11 @@ pub fn run_mr4r(
     let mapper = move |task: &(usize, usize), em: &mut dyn Emitter<i64, Vec<f64>>| {
         map_block(m, pairs, &backend, *task, |k, v| em.emit(k, v));
     };
-    let r = reducer();
-    let cfg = cfg.clone().with_scratch_per_emit(24);
-    run_job(&mapper, &r, &inputs, &cfg, agent)
+    let out = rt
+        .job(mapper, reducer())
+        .with_config(cfg.clone().with_scratch_per_emit(24))
+        .run(&inputs);
+    (out.pairs, out.report.metrics)
 }
 
 pub fn run_phoenix(
@@ -189,12 +190,12 @@ mod tests {
     fn covariance_matches_direct_computation() {
         let m = datagen::square_matrix(0.0003, 51);
         let pairs = sample_pairs(m.n, 52);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let (out, flow) = run_mr4r(
             &m,
             &pairs,
+            &rt,
             &JobConfig::fast().with_threads(4),
-            &agent,
             &Backend::Native,
         );
         assert_eq!(flow.flow.label(), "combine");
@@ -215,9 +216,9 @@ mod tests {
     fn frameworks_agree() {
         let m = datagen::square_matrix(0.0003, 53);
         let pairs = sample_pairs(m.n, 54);
-        let agent = OptimizerAgent::new();
+        let rt = Runtime::fast();
         let backend = Backend::Native;
-        let (mr, _) = run_mr4r(&m, &pairs, &JobConfig::fast().with_threads(2), &agent, &backend);
+        let (mr, _) = run_mr4r(&m, &pairs, &rt, &JobConfig::fast().with_threads(2), &backend);
         let mr: Vec<(i64, Vec<f64>)> = mr.into_iter().map(|kv| (kv.key, kv.value)).collect();
         let d = digest_cov(&mr, m.n);
         assert_eq!(d, digest_cov(&run_phoenix(&m, &pairs, 2, &backend), m.n));
@@ -226,8 +227,8 @@ mod tests {
         let (unopt, mu) = run_mr4r(
             &m,
             &pairs,
+            &rt,
             &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
-            &agent,
             &backend,
         );
         assert_eq!(mu.flow.label(), "reduce");

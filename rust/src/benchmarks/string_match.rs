@@ -12,11 +12,10 @@ use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
 use crate::api::traits::{Emitter, KeyValue};
-use crate::api::JobConfig;
+use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
-use crate::optimizer::agent::OptimizerAgent;
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 
 use super::datagen::StringMatchData;
@@ -45,16 +44,18 @@ pub fn reducer() -> RirReducer<String, i64> {
 
 pub fn run_mr4r(
     data: &StringMatchData,
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
 ) -> (Vec<KeyValue<String, i64>>, FlowMetrics) {
     let needles = data.needles.clone();
     let mapper = move |line: &String, em: &mut dyn Emitter<String, i64>| {
         scan_line(line, &needles, |needle| em.emit(needle, 1));
     };
-    let r = reducer();
-    let cfg = cfg.clone().with_scratch_per_emit(32);
-    run_job(&mapper, &r, &data.haystack, &cfg, agent)
+    let out = rt
+        .job(mapper, reducer())
+        .with_config(cfg.clone().with_scratch_per_emit(32))
+        .run(&data.haystack);
+    (out.pairs, out.report.metrics)
 }
 
 pub fn run_phoenix(data: &StringMatchData, threads: usize) -> Vec<(String, i64)> {
@@ -106,6 +107,7 @@ mod tests {
     use super::*;
     use crate::api::config::OptimizeMode;
     use crate::benchmarks::{datagen, digest_pairs};
+    use crate::optimizer::agent::OptimizerAgent;
     use crate::optimizer::analyze::Idiom;
 
     fn kv_pairs(kv: Vec<KeyValue<String, i64>>) -> Vec<(String, i64)> {
@@ -115,8 +117,8 @@ mod tests {
     #[test]
     fn frameworks_agree() {
         let data = datagen::stringmatch_file(0.0005, 61);
-        let agent = OptimizerAgent::new();
-        let (mr, m) = run_mr4r(&data, &JobConfig::fast().with_threads(4), &agent);
+        let rt = Runtime::fast();
+        let (mr, m) = run_mr4r(&data, &rt, &JobConfig::fast().with_threads(4));
         assert_eq!(m.flow.label(), "combine");
         let d = digest_pairs(&kv_pairs(mr));
         assert_eq!(d, digest_pairs(&run_phoenix(&data, 4)));
@@ -124,8 +126,8 @@ mod tests {
 
         let (unopt, mu) = run_mr4r(
             &data,
+            &rt,
             &JobConfig::fast().with_threads(2).with_optimize(OptimizeMode::Off),
-            &agent,
         );
         assert_eq!(mu.flow.label(), "reduce");
         assert_eq!(d, digest_pairs(&kv_pairs(unopt)));
@@ -143,8 +145,8 @@ mod tests {
     #[test]
     fn small_key_small_value_classes() {
         let data = datagen::stringmatch_file(0.001, 62);
-        let agent = OptimizerAgent::new();
-        let (out, m) = run_mr4r(&data, &JobConfig::fast().with_threads(2), &agent);
+        let rt = Runtime::fast();
+        let (out, m) = run_mr4r(&data, &rt, &JobConfig::fast().with_threads(2));
         assert!(out.len() <= 4, "≤4 keys (needles)");
         assert!(m.emits < 10_000, "small value count: {}", m.emits);
         let total: i64 = out.iter().map(|kv| kv.value).sum();

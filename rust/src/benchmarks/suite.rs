@@ -7,9 +7,9 @@ use std::sync::Arc;
 
 use crate::api::config::{JobConfig, OptimizeMode};
 use crate::api::traits::{KeyKind, KeyValue};
+use crate::api::Runtime;
 use crate::coordinator::pipeline::FlowMetrics;
 use crate::memsim::SimHeap;
-use crate::optimizer::agent::OptimizerAgent;
 use crate::util::timer::Stopwatch;
 
 use super::backend::Backend;
@@ -192,11 +192,14 @@ fn kv_to_pairs<K, V>(kv: Vec<KeyValue<K, V>>) -> Vec<(K, V)> {
     kv.into_iter().map(|p| (p.key, p.value)).collect()
 }
 
-/// Generate the dataset for `id` and wrap it as a [`Workload`]. The agent
-/// is shared across runs of the same workload (per-class transformation
-/// caching, like a long-lived JVM).
+/// Generate the dataset for `id` and wrap it as a [`Workload`]. One
+/// [`Runtime`] session is shared across every MR4R run of the workload:
+/// the worker pool spawns once (growing to the widest requested thread
+/// count) and the agent's per-class transformation cache spans runs, like
+/// a long-lived JVM. The pool starts at 1 worker; each run's
+/// `RunParams.threads` grows it on demand.
 pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload {
-    let agent = OptimizerAgent::new();
+    let rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(1)));
     match id {
         BenchId::WC => {
             let lines = Arc::new(super::datagen::wordcount_text(scale, seed));
@@ -208,7 +211,7 @@ pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload
                 id,
                 mr4r: Box::new(move |p| {
                     let sw = Stopwatch::start();
-                    let (out, m) = word_count::run_mr4r(&l1, &p.job_config(), &agent);
+                    let (out, m) = word_count::run_mr4r(&l1, &rt, &p.job_config());
                     Outcome {
                         secs: sw.secs(),
                         digest: digest_pairs(&kv_to_pairs(out)),
@@ -245,7 +248,7 @@ pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload
                 id,
                 mr4r: Box::new(move |p| {
                     let sw = Stopwatch::start();
-                    let (out, m) = histogram::run_mr4r(&p1, &p.job_config(), &agent, &b1);
+                    let (out, m) = histogram::run_mr4r(&p1, &rt, &p.job_config(), &b1);
                     Outcome {
                         secs: sw.secs(),
                         digest: digest_pairs(&kv_to_pairs(out)),
@@ -282,7 +285,7 @@ pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload
                 id,
                 mr4r: Box::new(move |p| {
                     let sw = Stopwatch::start();
-                    let (cents, m) = kmeans::run_mr4r(&d1, &p.job_config(), &agent, &b1);
+                    let (cents, m) = kmeans::run_mr4r(&d1, &rt, &p.job_config(), &b1);
                     Outcome {
                         secs: sw.secs(),
                         digest: kmeans::digest_centroids(&cents),
@@ -321,7 +324,7 @@ pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload
                 mr4r: Box::new(move |p| {
                     let sw = Stopwatch::start();
                     let (out, m) =
-                        linear_regression::run_mr4r(&p1, &p.job_config(), &agent, &b1);
+                        linear_regression::run_mr4r(&p1, &rt, &p.job_config(), &b1);
                     let out = kv_to_pairs(out);
                     Outcome {
                         secs: sw.secs(),
@@ -360,7 +363,7 @@ pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload
                 mr4r: Box::new(move |p| {
                     let sw = Stopwatch::start();
                     let (out, m) =
-                        matrix_multiply::run_mr4r(&w1.a, &w1.b, &p.job_config(), &agent, &b1);
+                        matrix_multiply::run_mr4r(&w1.a, &w1.b, &rt, &p.job_config(), &b1);
                     Outcome {
                         secs: sw.secs(),
                         digest: digest_pairs(&kv_to_pairs(out)),
@@ -399,7 +402,7 @@ pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload
                 mr4r: Box::new(move |p| {
                     let sw = Stopwatch::start();
                     let (out, m) =
-                        pca::run_mr4r(&w1.matrix, &w1.pairs, &p.job_config(), &agent, &b1);
+                        pca::run_mr4r(&w1.matrix, &w1.pairs, &rt, &p.job_config(), &b1);
                     let out = kv_to_pairs(out);
                     Outcome {
                         secs: sw.secs(),
@@ -436,7 +439,7 @@ pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload
                 id,
                 mr4r: Box::new(move |p| {
                     let sw = Stopwatch::start();
-                    let (out, m) = string_match::run_mr4r(&d1, &p.job_config(), &agent);
+                    let (out, m) = string_match::run_mr4r(&d1, &rt, &p.job_config());
                     Outcome {
                         secs: sw.secs(),
                         digest: digest_pairs(&kv_to_pairs(out)),

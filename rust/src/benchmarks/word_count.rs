@@ -5,11 +5,10 @@
 
 use crate::api::reducers::RirReducer;
 use crate::api::traits::{Emitter, KeyValue};
-use crate::api::JobConfig;
+use crate::api::{JobConfig, Runtime};
 use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
 use crate::baselines::phoenixpp::Container;
-use crate::coordinator::pipeline::{run_job, FlowMetrics};
-use crate::optimizer::agent::OptimizerAgent;
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 
 /// Simulated short-lived bytes per emit: the per-line `toUpperCase` copy,
@@ -32,12 +31,14 @@ pub fn reducer() -> RirReducer<String, i64> {
 
 pub fn run_mr4r(
     lines: &[String],
+    rt: &Runtime,
     cfg: &JobConfig,
-    agent: &OptimizerAgent,
 ) -> (Vec<KeyValue<String, i64>>, FlowMetrics) {
-    let cfg = cfg.clone().with_scratch_per_emit(WC_SCRATCH_PER_EMIT);
-    let r = reducer();
-    run_job(&map_line, &r, lines, &cfg, agent)
+    let out = rt
+        .job(map_line, reducer())
+        .with_config(cfg.clone().with_scratch_per_emit(WC_SCRATCH_PER_EMIT))
+        .run(lines);
+    (out.pairs, out.report.metrics)
 }
 
 pub fn run_phoenix(lines: &[String], threads: usize) -> Vec<(String, i64)> {
@@ -89,16 +90,12 @@ mod tests {
     #[test]
     fn all_frameworks_and_flows_agree() {
         let lines = datagen::wordcount_text(0.0005, 11);
-        let agent = OptimizerAgent::new();
-        let (opt, m_opt) = run_mr4r(
-            &lines,
-            &JobConfig::fast().with_threads(4),
-            &agent,
-        );
+        let rt = Runtime::fast();
+        let (opt, m_opt) = run_mr4r(&lines, &rt, &JobConfig::fast().with_threads(4));
         let (unopt, m_unopt) = run_mr4r(
             &lines,
+            &rt,
             &JobConfig::fast().with_threads(4).with_optimize(OptimizeMode::Off),
-            &agent,
         );
         assert_eq!(m_opt.flow.label(), "combine");
         assert_eq!(m_unopt.flow.label(), "reduce");
@@ -112,8 +109,8 @@ mod tests {
     fn counts_sum_to_word_total() {
         let lines = datagen::wordcount_text(0.0003, 3);
         let total_words: usize = lines.iter().map(|l| l.split(' ').count()).sum();
-        let agent = OptimizerAgent::new();
-        let (out, m) = run_mr4r(&lines, &JobConfig::fast().with_threads(2), &agent);
+        let rt = Runtime::fast();
+        let (out, m) = run_mr4r(&lines, &rt, &JobConfig::fast().with_threads(2));
         let sum: i64 = out.iter().map(|kv| kv.value).sum();
         assert_eq!(sum as usize, total_words);
         assert_eq!(m.emits as usize, total_words);

@@ -7,7 +7,9 @@
 //! * [`scheduler`] — a from-scratch work-stealing task pool (the JDK
 //!   ForkJoinPool stand-in; nothing like rayon exists in the offline vendor
 //!   set, and the paper's framing makes the scheduler part of the system
-//!   anyway).
+//!   anyway), in two flavours: the batch-scoped [`TaskPool`] and the
+//!   persistent [`WorkerPool`] that [`crate::api::Runtime`] sessions reuse
+//!   across jobs.
 //! * [`splitter`] — input chunking: "the input is split and individually
 //!   passed as an argument to the map method".
 //! * [`collector`] — the thread-safe hash table of intermediate pairs, in
@@ -23,6 +25,6 @@ pub mod scheduler;
 pub mod splitter;
 
 pub use collector::{HolderCollector, ListCollector};
-pub use pipeline::{run_job, FlowMetrics};
-pub use scheduler::TaskPool;
+pub use pipeline::{run_job, run_job_on, FlowMetrics};
+pub use scheduler::{TaskPool, WorkerPool};
 pub use splitter::split_indices;

@@ -11,15 +11,24 @@
 //!   [`HolderCollector`] that applies the generated combiner at emit time;
 //!   after the barrier, finalize tasks convert holders into results. The
 //!   reduce phase is *gone* — paper §3's headline transformation.
+//!
+//! Jobs execute on a caller-supplied persistent [`WorkerPool`] (the
+//! session pool a [`crate::api::Runtime`] owns), and consume their input
+//! through a [`Feed`] — either a random-access slice split by index
+//! ranges, or a pull-based chunk stream that is never fully materialized.
+//! Result pairs are collected per shard and concatenated in shard index
+//! order, so output ordering does not depend on which reduce task finished
+//! first.
 
 use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use super::collector::{shard_count, CollectorCohorts, HolderCollector, ListCollector};
-use super::scheduler::{PoolStats, TaskPool};
+use super::scheduler::{PoolStats, WorkerPool};
 use super::splitter::split_indices;
 use crate::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
+use crate::api::source::Feed;
 use crate::api::traits::{Emitter, HeapSized, KeyValue, Mapper, Reducer};
 use crate::memsim::{CohortId, GcStats, ThreadAlloc};
 use crate::optimizer::agent::{Decision, OptimizerAgent};
@@ -68,8 +77,10 @@ fn job_cohorts(cfg: &JobConfig) -> JobCohorts {
     }
 }
 
-/// Run a complete MapReduce job. The agent decides the flow; results are
-/// identical either way (asserted extensively in `rust/tests/`).
+/// Run a complete MapReduce job on a transient pool (the legacy slice
+/// entry point — [`crate::api::MapReduce`] and older call sites). New
+/// code should go through [`crate::api::Runtime`], which reuses one pool
+/// across jobs via [`run_job_on`].
 pub fn run_job<I, K, V>(
     mapper: &dyn Mapper<I, K, V>,
     reducer: &dyn Reducer<K, V>,
@@ -78,7 +89,27 @@ pub fn run_job<I, K, V>(
     agent: &OptimizerAgent,
 ) -> (Vec<KeyValue<K, V>>, FlowMetrics)
 where
-    I: Sync,
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    let pool = WorkerPool::new(cfg.threads);
+    run_job_on(&pool, mapper, reducer, Feed::Slice(inputs), cfg, agent)
+}
+
+/// Run a complete MapReduce job on a persistent pool, consuming any
+/// [`Feed`]. The agent decides the flow; results are identical either way
+/// (asserted extensively in `rust/tests/`).
+pub fn run_job_on<I, K, V>(
+    pool: &WorkerPool,
+    mapper: &dyn Mapper<I, K, V>,
+    reducer: &dyn Reducer<K, V>,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+) -> (Vec<KeyValue<K, V>>, FlowMetrics)
+where
+    I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {
@@ -102,15 +133,17 @@ where
 
     match decision {
         Some(Decision::Combine(combiner)) => {
-            run_combine_flow(mapper, inputs, cfg, combiner, None)
+            run_combine_flow(pool, mapper, feed, cfg, combiner)
         }
         Some(Decision::Fallback(reason)) => {
-            run_reduce_flow(mapper, reducer, inputs, cfg, Some(reason.to_string()))
+            run_reduce_flow(pool, mapper, reducer, feed, cfg, Some(reason.to_string()))
         }
         Some(Decision::Opaque) => {
-            run_reduce_flow(mapper, reducer, inputs, cfg, Some("opaque reducer".into()))
+            run_reduce_flow(pool, mapper, reducer, feed, cfg, Some("opaque reducer".into()))
         }
-        None => run_reduce_flow(mapper, reducer, inputs, cfg, Some("optimizer off".into())),
+        None => {
+            run_reduce_flow(pool, mapper, reducer, feed, cfg, Some("optimizer off".into()))
+        }
     }
 }
 
@@ -163,7 +196,7 @@ impl<K: Hash + Eq + HeapSized, V: RirValue> Emitter<K, V> for CombineEmitter<'_,
     }
 }
 
-/// Result emitter used by reduce/finalize tasks.
+/// Result emitter used by reduce tasks.
 struct ResultEmitter<K, V> {
     out: Vec<KeyValue<K, V>>,
 }
@@ -175,68 +208,136 @@ impl<K, V> Emitter<K, V> for ResultEmitter<K, V> {
 }
 
 // ---------------------------------------------------------------------
+// Shared phase drivers
+// ---------------------------------------------------------------------
+
+/// Drive the map phase over a feed: slice feeds are pre-split into index
+/// ranges (one task each, work-stealing balances the rest); stream feeds
+/// run one puller task per worker, each looping "pull chunk → map chunk"
+/// so un-materialized inputs stay bounded in memory. `map_chunk` maps one
+/// chunk of inputs and returns its emit count.
+fn map_phase<I: Send + Sync>(
+    pool: &WorkerPool,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    map_chunk: &(dyn Fn(&[I]) -> u64 + Sync),
+) -> (PoolStats, u64) {
+    let emits = AtomicU64::new(0);
+    let stats = match feed {
+        Feed::Slice(inputs) => {
+            let chunks = split_indices(inputs.len(), cfg.threads * cfg.tasks_per_thread);
+            pool.run(
+                cfg.threads,
+                chunks
+                    .into_iter()
+                    .map(|range| {
+                        let emits = &emits;
+                        move |_wid: usize| {
+                            emits.fetch_add(map_chunk(&inputs[range]), Ordering::Relaxed);
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        }
+        Feed::Stream(puller) => {
+            let puller = Mutex::new(puller);
+            pool.run(
+                cfg.threads,
+                (0..cfg.threads.max(1))
+                    .map(|_| {
+                        let puller = &puller;
+                        let emits = &emits;
+                        move |_wid: usize| loop {
+                            let chunk = {
+                                let mut next = puller.lock().unwrap();
+                                (*next)()
+                            };
+                            match chunk {
+                                Some(items) => {
+                                    emits.fetch_add(map_chunk(&items), Ordering::Relaxed);
+                                }
+                                None => break,
+                            }
+                        }
+                    })
+                    .collect::<Vec<_>>(),
+            )
+        }
+    };
+    (stats, emits.load(Ordering::Relaxed))
+}
+
+/// Collect per-shard result vectors in **shard index order** — reduce and
+/// finalize tasks complete in a nondeterministic order, so each writes
+/// its own indexed slot and the concatenation is order-stable.
+fn concat_shard_results<K, V>(slots: Vec<Mutex<Vec<KeyValue<K, V>>>>) -> Vec<KeyValue<K, V>> {
+    let mut results = Vec::with_capacity(
+        slots
+            .iter()
+            .map(|s| s.lock().map(|v| v.len()).unwrap_or(0))
+            .sum(),
+    );
+    for slot in slots {
+        results.append(&mut slot.into_inner().unwrap());
+    }
+    results
+}
+
+// ---------------------------------------------------------------------
 // The two flows
 // ---------------------------------------------------------------------
 
 fn run_reduce_flow<I, K, V>(
+    pool: &WorkerPool,
     mapper: &dyn Mapper<I, K, V>,
     reducer: &dyn Reducer<K, V>,
-    inputs: &[I],
+    feed: Feed<'_, I>,
     cfg: &JobConfig,
     fallback_reason: Option<String>,
 ) -> (Vec<KeyValue<K, V>>, FlowMetrics)
 where
-    I: Sync,
+    I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {
     let total_sw = Stopwatch::start();
     let cohorts = job_cohorts(cfg);
     let gc_before = cfg.heap.stats();
-    let pool = TaskPool::new(cfg.threads);
     let collector: ListCollector<K, V> = ListCollector::new(shard_count(cfg.threads));
-    let emits = AtomicU64::new(0);
 
     // ---- Map phase ----
     let map_sw = Stopwatch::start();
-    let chunks = split_indices(inputs.len(), cfg.threads * cfg.tasks_per_thread);
-    let map_pool = pool.run(
-        chunks
-            .into_iter()
-            .map(|range| {
-                let collector = &collector;
-                let emits = &emits;
-                let cohorts = &cohorts;
-                move |_wid: usize| {
-                    let mut em = ListEmitter {
-                        collector,
-                        alloc: cfg.heap.thread_alloc(),
-                        cohorts: cohorts.collector,
-                        scratch: cohorts.scratch,
-                        scratch_per_emit: cfg.scratch_per_emit,
-                        emits: 0,
-                    };
-                    for input in &inputs[range] {
-                        mapper.map(input, &mut em);
-                    }
-                    em.alloc.flush();
-                    emits.fetch_add(em.emits, Ordering::Relaxed);
-                }
-            })
-            .collect::<Vec<_>>(),
-    );
+    let map_chunk = |items: &[I]| -> u64 {
+        let mut em = ListEmitter {
+            collector: &collector,
+            alloc: cfg.heap.thread_alloc(),
+            cohorts: cohorts.collector,
+            scratch: cohorts.scratch,
+            scratch_per_emit: cfg.scratch_per_emit,
+            emits: 0,
+        };
+        for input in items {
+            mapper.map(input, &mut em);
+        }
+        em.alloc.flush();
+        em.emits
+    };
+    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
     let map_secs = map_sw.secs();
 
     // ---- Barrier; reduce phase over shards ----
     let reduce_sw = Stopwatch::start();
     let keys = collector.key_count() as u64;
     let shards = collector.into_shards();
-    let results: Mutex<Vec<KeyValue<K, V>>> = Mutex::new(Vec::new());
+    let slots: Vec<Mutex<Vec<KeyValue<K, V>>>> =
+        (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
     pool.run(
+        cfg.threads,
         shards
             .into_iter()
-            .map(|shard| {
-                let results = &results;
+            .enumerate()
+            .map(|(si, shard)| {
+                let slots = &slots;
                 let cohorts = &cohorts;
                 move |_wid: usize| {
                     let mut alloc = cfg.heap.thread_alloc();
@@ -255,14 +356,14 @@ where
                         alloc.alloc(cohorts.results, kv.value.heap_bytes());
                     }
                     alloc.flush();
-                    results.lock().unwrap().extend(em.out);
+                    *slots[si].lock().unwrap() = em.out;
                 }
             })
             .collect::<Vec<_>>(),
     );
     let reduce_secs = reduce_sw.secs();
 
-    let results = results.into_inner().unwrap();
+    let results = concat_shard_results(slots);
     finish_job(cfg, &cohorts);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Reduce,
@@ -270,7 +371,7 @@ where
         map_secs,
         reduce_secs,
         total_secs: total_sw.secs(),
-        emits: emits.load(Ordering::Relaxed),
+        emits,
         keys,
         results: results.len() as u64,
         gc: cfg.heap.stats().since(&gc_before),
@@ -280,66 +381,57 @@ where
 }
 
 fn run_combine_flow<I, K, V>(
+    pool: &WorkerPool,
     mapper: &dyn Mapper<I, K, V>,
-    inputs: &[I],
+    feed: Feed<'_, I>,
     cfg: &JobConfig,
     combiner: crate::optimizer::combiner::Combiner,
-    fallback_reason: Option<String>,
 ) -> (Vec<KeyValue<K, V>>, FlowMetrics)
 where
-    I: Sync,
+    I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {
     let total_sw = Stopwatch::start();
     let cohorts = job_cohorts(cfg);
     let gc_before = cfg.heap.stats();
-    let pool = TaskPool::new(cfg.threads);
     let collector: HolderCollector<K> =
         HolderCollector::new(shard_count(cfg.threads), combiner);
-    let emits = AtomicU64::new(0);
 
     // ---- Map phase (combining at emit time) ----
     let map_sw = Stopwatch::start();
-    let chunks = split_indices(inputs.len(), cfg.threads * cfg.tasks_per_thread);
-    let map_pool = pool.run(
-        chunks
-            .into_iter()
-            .map(|range| {
-                let collector = &collector;
-                let emits = &emits;
-                let cohorts = &cohorts;
-                move |_wid: usize| {
-                    let mut em: CombineEmitter<'_, K, V> = CombineEmitter {
-                        collector,
-                        alloc: cfg.heap.thread_alloc(),
-                        cohorts: cohorts.collector,
-                        scratch: cohorts.scratch,
-                        scratch_per_emit: cfg.scratch_per_emit,
-                        emits: 0,
-                        _v: std::marker::PhantomData,
-                    };
-                    for input in &inputs[range] {
-                        mapper.map(input, &mut em);
-                    }
-                    em.alloc.flush();
-                    emits.fetch_add(em.emits, Ordering::Relaxed);
-                }
-            })
-            .collect::<Vec<_>>(),
-    );
+    let map_chunk = |items: &[I]| -> u64 {
+        let mut em: CombineEmitter<'_, K, V> = CombineEmitter {
+            collector: &collector,
+            alloc: cfg.heap.thread_alloc(),
+            cohorts: cohorts.collector,
+            scratch: cohorts.scratch,
+            scratch_per_emit: cfg.scratch_per_emit,
+            emits: 0,
+            _v: std::marker::PhantomData,
+        };
+        for input in items {
+            mapper.map(input, &mut em);
+        }
+        em.alloc.flush();
+        em.emits
+    };
+    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
     let map_secs = map_sw.secs();
 
     // ---- Barrier; finalize phase (no reduce phase at all) ----
     let fin_sw = Stopwatch::start();
     let keys = collector.key_count() as u64;
     let (shards, combiner) = collector.into_shards();
-    let results: Mutex<Vec<KeyValue<K, V>>> = Mutex::new(Vec::new());
+    let slots: Vec<Mutex<Vec<KeyValue<K, V>>>> =
+        (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
     pool.run(
+        cfg.threads,
         shards
             .into_iter()
-            .map(|shard| {
-                let results = &results;
+            .enumerate()
+            .map(|(si, shard)| {
+                let slots = &slots;
                 let cohorts = &cohorts;
                 let combiner = &combiner;
                 move |_wid: usize| {
@@ -357,22 +449,22 @@ where
                         out.push(KeyValue::new(k, v));
                     }
                     alloc.flush();
-                    results.lock().unwrap().extend(out);
+                    *slots[si].lock().unwrap() = out;
                 }
             })
             .collect::<Vec<_>>(),
     );
     let reduce_secs = fin_sw.secs();
 
-    let results = results.into_inner().unwrap();
+    let results = concat_shard_results(slots);
     finish_job(cfg, &cohorts);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Combine,
-        fallback_reason,
+        fallback_reason: None,
         map_secs,
         reduce_secs,
         total_secs: total_sw.secs(),
-        emits: emits.load(Ordering::Relaxed),
+        emits,
         keys,
         results: results.len() as u64,
         gc: cfg.heap.stats().since(&gc_before),
@@ -514,7 +606,7 @@ mod tests {
     }
 
     #[test]
-    fn combine_flow_allocates_less(){
+    fn combine_flow_allocates_less() {
         // The paper's mechanism end-to-end: many values per key.
         let inputs: Vec<String> =
             (0..200).map(|_| "a b c a b a".to_string()).collect();
@@ -541,5 +633,47 @@ mod tests {
             m_on.gc.allocated_objects,
             m_off.gc.allocated_objects
         );
+    }
+
+    #[test]
+    fn stream_feed_matches_slice_feed() {
+        let inputs = lines();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc5"));
+        let agent = OptimizerAgent::new();
+        let cfg = JobConfig::fast().with_threads(3);
+        let pool = WorkerPool::new(3);
+
+        let (from_slice, ms) = run_job_on(
+            &pool,
+            &wc_mapper,
+            &reducer,
+            Feed::Slice(&inputs),
+            &cfg,
+            &agent,
+        );
+
+        let mut remaining = inputs.clone();
+        remaining.reverse(); // pop() below restores original order
+        let stream = Feed::Stream(Box::new(move || remaining.pop().map(|l| vec![l])));
+        let (from_stream, mm) = run_job_on(&pool, &wc_mapper, &reducer, stream, &cfg, &agent);
+
+        assert_eq!(sorted(from_slice), sorted(from_stream));
+        assert_eq!(ms.emits, mm.emits);
+        assert_eq!(ms.keys, mm.keys);
+    }
+
+    #[test]
+    fn shard_order_concatenation_is_stable() {
+        // Same inputs, same config → same output order (single worker
+        // makes per-shard insertion order deterministic too).
+        let inputs: Vec<String> = (0..50).map(|i| format!("w{} w{}", i % 7, i % 11)).collect();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc6"));
+        let agent = OptimizerAgent::new();
+        let cfg = JobConfig::fast().with_threads(1);
+        let (a, _) = run_job(&wc_mapper, &reducer, &inputs, &cfg, &agent);
+        let (b, _) = run_job(&wc_mapper, &reducer, &inputs, &cfg, &agent);
+        let a: Vec<_> = a.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        let b: Vec<_> = b.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        assert_eq!(a, b);
     }
 }

@@ -17,7 +17,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// Counters exposed for tests and the perf harness.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -136,6 +136,250 @@ impl TaskPool {
     }
 }
 
+// ---------------------------------------------------------------------
+// Persistent worker pool — the runtime-session scheduler
+// ---------------------------------------------------------------------
+
+/// A task queued on a persistent worker (lifetime-erased; see the safety
+/// argument on [`WorkerPool::run`]).
+type Job = Box<dyn FnOnce(usize) + Send + 'static>;
+
+struct PoolState {
+    /// One deque per spawned worker, seeded round-robin per batch.
+    queues: Vec<VecDeque<Job>>,
+    /// Workers allowed to execute the current batch (`wid < active`);
+    /// the rest keep sleeping, so a session pool sized for the machine can
+    /// still run a 1-thread ablation job.
+    active: usize,
+    /// Submitted-but-unfinished tasks of the current batch.
+    pending: usize,
+    executed: usize,
+    steals: usize,
+    panicked: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers sleep here between batches.
+    work_cv: Condvar,
+    /// The submitting thread sleeps here until `pending == 0`.
+    done_cv: Condvar,
+}
+
+impl PoolShared {
+    /// Lock the state, shrugging off poisoning: a panicking task is caught
+    /// before it can poison anything, and batch completion must survive
+    /// sibling panics so the borrow-based safety argument holds.
+    fn lock(&self) -> MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// A **persistent** work-stealing pool: worker OS threads are spawned once
+/// per session and reused by every job, unlike [`TaskPool`] which scopes a
+/// fresh set of threads to each `run` call.
+///
+/// This is the pool a [`crate::api::Runtime`] owns. A k-means pipeline
+/// running 5 Lloyd iterations pays thread-spawn cost once, not 10× (map +
+/// reduce per iteration); [`WorkerPool::spawned_threads`] makes the reuse
+/// observable to tests.
+///
+/// Scheduling discipline matches [`TaskPool`]: per-worker deques seeded
+/// round-robin, LIFO self-pop, FIFO steal from victims. Queue operations
+/// sit under one pool mutex — task granularity is a whole input chunk, so
+/// queue traffic is far off the critical path, and a single mutex keeps
+/// the sleep/wake protocol (two condvars) easy to reason about.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Serializes batches: one job phase owns the workers at a time.
+    batch: Mutex<()>,
+    spawned: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// A session pool with `threads` workers spawned up front (≥ 1). The
+    /// pool grows on demand if a later job asks for more workers.
+    pub fn new(threads: usize) -> Self {
+        let pool = WorkerPool {
+            shared: Arc::new(PoolShared {
+                state: Mutex::new(PoolState {
+                    queues: Vec::new(),
+                    active: 0,
+                    pending: 0,
+                    executed: 0,
+                    steals: 0,
+                    panicked: 0,
+                    shutdown: false,
+                }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+            }),
+            handles: Mutex::new(Vec::new()),
+            batch: Mutex::new(()),
+            spawned: AtomicUsize::new(0),
+        };
+        pool.ensure_workers(threads.max(1));
+        pool
+    }
+
+    /// Total worker threads ever spawned by this pool — the session-reuse
+    /// observable: two jobs on one pool leave this unchanged.
+    pub fn spawned_threads(&self) -> usize {
+        self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Spawn workers until at least `n` exist.
+    fn ensure_workers(&self, n: usize) {
+        let mut handles = self.handles.lock().unwrap_or_else(|e| e.into_inner());
+        let current = self.spawned.load(Ordering::SeqCst);
+        if current >= n {
+            return;
+        }
+        {
+            let mut state = self.shared.lock();
+            state.queues.resize_with(n, VecDeque::new);
+        }
+        for wid in current..n {
+            let shared = Arc::clone(&self.shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mr4r-worker-{wid}"))
+                    .spawn(move || worker_loop(&shared, wid))
+                    .expect("spawn pool worker"),
+            );
+        }
+        self.spawned.store(n, Ordering::SeqCst);
+    }
+
+    /// Run every task to completion on at most `workers` of the pool's
+    /// threads; returns scheduling stats. Panics (after the whole batch
+    /// has drained) if any task panicked.
+    ///
+    /// Tasks may borrow non-`'static` state from the caller's stack, like
+    /// [`TaskPool::run`]. Safety: each task is lifetime-erased to be
+    /// queued on persistent threads, and this function does not return
+    /// until every queued task has finished executing (the `pending`
+    /// count reaches zero under the pool mutex), so no borrow outlives
+    /// the frame that owns it. Do not call `run` from inside a pool task:
+    /// batches are serialized and the nested call would deadlock.
+    pub fn run<'scope, F>(&self, workers: usize, tasks: Vec<F>) -> PoolStats
+    where
+        F: FnOnce(usize) + Send + 'scope,
+    {
+        if tasks.is_empty() {
+            return PoolStats::default();
+        }
+        let workers = workers.max(1).min(tasks.len());
+        self.ensure_workers(workers);
+        let _batch = self.batch.lock().unwrap_or_else(|e| e.into_inner());
+
+        {
+            let mut state = self.shared.lock();
+            state.active = workers;
+            state.pending = tasks.len();
+            state.executed = 0;
+            state.steals = 0;
+            state.panicked = 0;
+            for (i, t) in tasks.into_iter().enumerate() {
+                let job: Box<dyn FnOnce(usize) + Send + 'scope> = Box::new(t);
+                // SAFETY: see above — the wait loop below keeps every
+                // borrow in `job` alive until the job has run.
+                let job: Job = unsafe { std::mem::transmute(job) };
+                state.queues[i % workers].push_back(job);
+            }
+        }
+        self.shared.work_cv.notify_all();
+
+        let mut state = self.shared.lock();
+        while state.pending > 0 {
+            state = self
+                .shared
+                .done_cv
+                .wait(state)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        let stats = PoolStats {
+            executed: state.executed,
+            steals: state.steals,
+        };
+        let panicked = state.panicked;
+        state.active = 0;
+        drop(state);
+        drop(_batch);
+        if panicked > 0 {
+            panic!("{panicked} worker-pool task(s) panicked");
+        }
+        stats
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.lock().shutdown = true;
+        self.shared.work_cv.notify_all();
+        let handles = std::mem::take(
+            &mut *self.handles.lock().unwrap_or_else(|e| e.into_inner()),
+        );
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared, wid: usize) {
+    let mut state = shared.lock();
+    loop {
+        if state.shutdown {
+            return;
+        }
+        let mut task = None;
+        let mut stolen = false;
+        if wid < state.active {
+            // Own queue first: LIFO end (cache-warm).
+            task = state.queues[wid].pop_back();
+            if task.is_none() {
+                // Steal: scan victims from wid+1, take the FIFO end.
+                let n = state.active;
+                for off in 1..n {
+                    let victim = (wid + off) % n;
+                    if let Some(t) = state.queues[victim].pop_front() {
+                        task = Some(t);
+                        stolen = true;
+                        break;
+                    }
+                }
+            }
+        }
+        match task {
+            Some(t) => {
+                if stolen {
+                    state.steals += 1;
+                }
+                drop(state);
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t(wid)))
+                    .is_ok();
+                state = shared.lock();
+                state.executed += 1;
+                if !ok {
+                    state.panicked += 1;
+                }
+                state.pending -= 1;
+                if state.pending == 0 {
+                    shared.done_cv.notify_all();
+                }
+            }
+            None => {
+                state = shared
+                    .work_cv
+                    .wait(state)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -240,5 +484,134 @@ mod tests {
             }
         });
         assert_eq!(bad.load(Ordering::Relaxed), 0);
+    }
+
+    // ---- WorkerPool (persistent session pool) ----
+
+    fn counting_tasks(n: usize, counter: &AtomicUsize) -> Vec<impl FnOnce(usize) + Send + '_> {
+        (0..n)
+            .map(|_| {
+                move |_wid: usize| {
+                    counter.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn worker_pool_executes_every_task() {
+        let pool = WorkerPool::new(4);
+        let counter = AtomicUsize::new(0);
+        let stats = pool.run(4, counting_tasks(1000, &counter));
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(stats.executed, 1000);
+    }
+
+    #[test]
+    fn worker_pool_reuses_threads_across_batches() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.spawned_threads(), 3);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..5 {
+            pool.run(3, counting_tasks(50, &counter));
+        }
+        assert_eq!(counter.load(Ordering::Relaxed), 250);
+        assert_eq!(pool.spawned_threads(), 3, "no respawn across batches");
+    }
+
+    #[test]
+    fn worker_pool_grows_on_demand() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.spawned_threads(), 1);
+        let counter = AtomicUsize::new(0);
+        pool.run(4, counting_tasks(100, &counter));
+        assert_eq!(pool.spawned_threads(), 4);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn worker_pool_respects_batch_worker_limit() {
+        let pool = WorkerPool::new(4);
+        let seen = Mutex::new(std::collections::HashSet::new());
+        let tasks: Vec<_> = (0..200)
+            .map(|_| {
+                let seen = &seen;
+                move |wid: usize| {
+                    seen.lock().unwrap().insert(wid);
+                }
+            })
+            .collect();
+        pool.run(2, tasks);
+        assert!(seen.lock().unwrap().iter().all(|&w| w < 2));
+    }
+
+    #[test]
+    fn worker_pool_tasks_borrow_stack_state() {
+        let pool = WorkerPool::new(2);
+        let data = vec![1u64, 2, 3, 4];
+        let sum = AtomicU64::new(0);
+        let tasks: Vec<_> = (0..data.len())
+            .map(|i| {
+                let data = &data;
+                let sum = &sum;
+                move |_wid: usize| {
+                    sum.fetch_add(data[i], Ordering::Relaxed);
+                }
+            })
+            .collect();
+        pool.run(2, tasks);
+        assert_eq!(sum.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    fn worker_pool_steals_imbalanced_load() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let done_ref = &done;
+        let n_short = 400;
+        let mut tasks: Vec<Box<dyn FnOnce(usize) + Send>> = Vec::new();
+        for _ in 0..n_short {
+            tasks.push(Box::new(move |_w| {
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                done_ref.fetch_add(1, Ordering::Relaxed);
+            }));
+        }
+        // Index 400 % 2 == 0 → back of worker 0's deque → popped first.
+        tasks.push(Box::new(move |_w| {
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            done_ref.fetch_add(1, Ordering::Relaxed);
+        }));
+        let stats = pool.run(2, tasks);
+        assert_eq!(done.load(Ordering::Relaxed), n_short + 1);
+        assert!(stats.steals > 0, "expected steals on imbalanced load");
+    }
+
+    #[test]
+    fn worker_pool_empty_batch_is_fine() {
+        let pool = WorkerPool::new(2);
+        let stats = pool.run(2, Vec::<fn(usize)>::new());
+        assert_eq!(stats.executed, 0);
+    }
+
+    #[test]
+    fn worker_pool_propagates_task_panics_after_drain() {
+        let pool = WorkerPool::new(2);
+        let done = AtomicUsize::new(0);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut tasks: Vec<Box<dyn FnOnce(usize) + Send>> = Vec::new();
+            tasks.push(Box::new(|_w| panic!("boom")));
+            for _ in 0..50 {
+                tasks.push(Box::new(|_w| {
+                    done.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            pool.run(2, tasks);
+        }));
+        assert!(result.is_err(), "task panic must propagate");
+        assert_eq!(done.load(Ordering::Relaxed), 50, "siblings still run");
+        // The pool survives for the next batch.
+        let counter = AtomicUsize::new(0);
+        pool.run(2, counting_tasks(10, &counter));
+        assert_eq!(counter.load(Ordering::Relaxed), 10);
     }
 }

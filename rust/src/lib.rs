@@ -10,9 +10,15 @@
 //! at emit time, eliminating the reduce phase and most intermediate-value
 //! allocation. This crate is the L3 coordinator of the reproduction:
 //!
-//! * [`api`] — the public Mapper/Reducer/Emitter surface (paper Fig. 2).
-//! * [`coordinator`] — work-stealing scheduler, input splitter, sharded
-//!   intermediate collector, and the two execution flows (reduce vs combine).
+//! * [`api`] — the public Mapper/Reducer/Emitter surface (paper Fig. 2),
+//!   plus the session layer: [`api::Runtime`] owns a persistent worker
+//!   pool, a shared optimizer agent, and the simulated heap; jobs are
+//!   built with [`api::JobBuilder`], fed from any [`api::InputSource`]
+//!   (slices, vectors, streaming chunk generators, previous job outputs),
+//!   and chained/iterated through [`api::Runtime::pipeline`].
+//! * [`coordinator`] — work-stealing scheduler (batch + persistent pools),
+//!   input splitter, sharded intermediate collector, and the two
+//!   execution flows (reduce vs combine).
 //! * [`optimizer`] — the paper's §3 contribution: reducers expressed in a
 //!   stack-machine IR (RIR, the bytecode stand-in), analyzed via a program
 //!   dependency graph and sliced into `initialize`/`combine`/`finalize`.
@@ -40,5 +46,8 @@ pub mod runtime;
 pub mod testkit;
 pub mod util;
 
-pub use api::{Emitter, JobConfig, KeyValue, MapReduce, Mapper, Reducer};
+pub use api::{
+    Emitter, InputSource, JobBuilder, JobConfig, JobOutput, KeyValue, MapReduce, Mapper,
+    Pipeline, Reducer, Runtime,
+};
 pub use optimizer::agent::OptimizerAgent;

@@ -1,0 +1,242 @@
+//! Legacy-façade vs session-runtime equivalence.
+//!
+//! The runtime-session redesign must be behaviour-preserving: for
+//! word-count, histogram, and k-means, driving the workload through the
+//! legacy `MapReduce` façade and through the new `Runtime`/`JobBuilder`
+//! path must produce identical results *and* identical `ExecutionFlow`
+//! decisions under every optimizer mode (`Auto`, `Off`, `GenericOnly`).
+//!
+//! Plus the session-economics acceptance criteria: one thread spawn per
+//! session across a multi-job pipeline, and an iterative k-means through
+//! `runtime.pipeline()` that is byte-identical to the legacy per-job loop
+//! while hitting the agent's per-class cache.
+
+use mr4r::api::config::{ExecutionFlow, OptimizeMode};
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::{Emitter, JobConfig, KeyValue, MapReduce, Runtime};
+use mr4r::benchmarks::kmeans::{assign_block, normalize, padded_centroids};
+use mr4r::benchmarks::{datagen, digest_pairs, histogram, kmeans, word_count, Backend};
+use mr4r::optimizer::builder::canon;
+use mr4r::runtime::artifacts::shapes::{KM_DIMS, KM_POINTS};
+
+const MODES: [OptimizeMode; 3] = [
+    OptimizeMode::Auto,
+    OptimizeMode::Off,
+    OptimizeMode::GenericOnly,
+];
+
+fn expected_flow(mode: OptimizeMode) -> ExecutionFlow {
+    match mode {
+        OptimizeMode::Off => ExecutionFlow::Reduce,
+        _ => ExecutionFlow::Combine,
+    }
+}
+
+fn kv_pairs<K, V>(kv: Vec<KeyValue<K, V>>) -> Vec<(K, V)> {
+    kv.into_iter().map(|p| (p.key, p.value)).collect()
+}
+
+#[test]
+fn word_count_same_results_and_flows_on_both_paths() {
+    let lines = datagen::wordcount_text(0.0003, 515);
+    let rt = Runtime::fast();
+    for mode in MODES {
+        let cfg = JobConfig::fast().with_threads(3).with_optimize(mode);
+
+        let legacy: MapReduce<String, String, i64> =
+            MapReduce::new(word_count::map_line, word_count::reducer())
+                .with_config(cfg.clone());
+        let (legacy_out, legacy_report) = legacy.run_with_report(&lines);
+
+        let (new_out, new_metrics) = word_count::run_mr4r(&lines, &rt, &cfg);
+
+        assert_eq!(legacy_report.metrics.flow, expected_flow(mode), "{mode:?}");
+        assert_eq!(new_metrics.flow, legacy_report.metrics.flow, "{mode:?}");
+        assert_eq!(
+            digest_pairs(&kv_pairs(legacy_out)),
+            digest_pairs(&kv_pairs(new_out)),
+            "word count results differ under {mode:?}"
+        );
+    }
+}
+
+#[test]
+fn histogram_same_results_and_flows_on_both_paths() {
+    let pixels = datagen::histogram_pixels(0.0001, 516);
+    let backend = Backend::Native;
+    let rt = Runtime::fast();
+    for mode in MODES {
+        let cfg = JobConfig::fast().with_threads(3).with_optimize(mode);
+
+        // The façade's trait objects are `'static`, so the legacy path
+        // maps over owned chunks (same boundaries as chunk_pixels).
+        let chunks: Vec<Vec<u8>> = histogram::chunk_pixels(&pixels)
+            .into_iter()
+            .map(<[u8]>::to_vec)
+            .collect();
+        let inner = histogram::mapper(backend.clone());
+        let legacy: MapReduce<Vec<u8>, i64, i64> = MapReduce::new(
+            move |chunk: &Vec<u8>, em: &mut dyn Emitter<i64, i64>| {
+                inner(&chunk.as_slice(), em)
+            },
+            histogram::reducer(),
+        )
+        .with_config(cfg.clone());
+        let (legacy_out, legacy_report) = legacy.run_with_report(&chunks);
+
+        let (new_out, new_metrics) = histogram::run_mr4r(&pixels, &rt, &cfg, &backend);
+
+        assert_eq!(legacy_report.metrics.flow, expected_flow(mode), "{mode:?}");
+        assert_eq!(new_metrics.flow, legacy_report.metrics.flow, "{mode:?}");
+        assert_eq!(
+            digest_pairs(&kv_pairs(legacy_out)),
+            digest_pairs(&kv_pairs(new_out)),
+            "histogram results differ under {mode:?}"
+        );
+    }
+}
+
+// --- Legacy k-means: the pre-session per-job loop, reconstructed on the
+// `MapReduce` façade (fresh job object per Lloyd iteration, exactly what
+// the paper-era driver did) over the benchmark's own padding/assignment/
+// normalization helpers, so only the API path differs. ---
+
+fn legacy_kmeans(
+    data: &datagen::KmeansData,
+    cfg: &JobConfig,
+    backend: &Backend,
+) -> Vec<[f64; 3]> {
+    // Owned blocks (same boundaries as the session path's `chunks`): the
+    // façade's trait objects are `'static`, so inputs cannot borrow.
+    let blocks: Vec<Vec<[f64; 3]>> = data
+        .points
+        .chunks(KM_POINTS)
+        .map(<[[f64; 3]]>::to_vec)
+        .collect();
+    let mut centroids = data.initial_centroids.clone();
+    for _ in 0..kmeans::ITERATIONS {
+        let cpad = padded_centroids(&centroids);
+        let b = backend.clone();
+        let mapper = move |block: &Vec<[f64; 3]>, em: &mut dyn Emitter<i64, Vec<f64>>| {
+            let assign = assign_block(&b, block, &cpad);
+            for (p, &c) in block.iter().zip(&assign) {
+                em.emit(c as i64, vec![p[0], p[1], p[2], 1.0]);
+            }
+        };
+        let job: MapReduce<Vec<[f64; 3]>, i64, Vec<f64>> = MapReduce::new(
+            mapper,
+            RirReducer::new(canon::sum_vec("kmeans.sumvec", KM_DIMS + 1)),
+        )
+        .with_config(cfg.clone().with_scratch_per_emit(24));
+        let sums = kv_pairs(job.run(&blocks));
+        centroids = normalize(&sums, &centroids);
+    }
+    centroids
+}
+
+#[test]
+fn kmeans_pipeline_is_byte_identical_to_legacy_per_job_path() {
+    let data = datagen::kmeans_points(0.003, 517);
+    let backend = Backend::Native;
+    // One worker: emit order (and thus float summation order) is fully
+    // deterministic, so "byte-identical" is a meaningful bar.
+    let cfg = JobConfig::fast().with_threads(1);
+
+    let legacy = legacy_kmeans(&data, &cfg, &backend);
+
+    let rt = Runtime::fast();
+    let (session, metrics) = kmeans::run_mr4r(&data, &rt, &cfg, &backend);
+
+    assert_eq!(metrics.flow, ExecutionFlow::Combine);
+    assert_eq!(legacy.len(), session.len());
+    for (i, (l, s)) in legacy.iter().zip(&session).enumerate() {
+        for d in 0..3 {
+            assert_eq!(
+                l[d].to_bits(),
+                s[d].to_bits(),
+                "centroid {i} dim {d}: {} vs {}",
+                l[d],
+                s[d]
+            );
+        }
+    }
+
+    // The agent transforms "kmeans.sumvec" once; every later iteration
+    // must be a per-class cache hit.
+    let stats = rt.agent().stats();
+    assert_eq!(stats.optimized, 1);
+    assert!(
+        stats.cache_hits >= kmeans::ITERATIONS - 1,
+        "expected ≥{} cache hits, got {}",
+        kmeans::ITERATIONS - 1,
+        stats.cache_hits
+    );
+}
+
+#[test]
+fn kmeans_same_flows_and_digest_on_both_paths_all_modes() {
+    let data = datagen::kmeans_points(0.002, 518);
+    let backend = Backend::Native;
+    for mode in MODES {
+        let cfg = JobConfig::fast().with_threads(2).with_optimize(mode);
+        let legacy = legacy_kmeans(&data, &cfg, &backend);
+        let rt = Runtime::fast();
+        let (session, metrics) = kmeans::run_mr4r(&data, &rt, &cfg, &backend);
+        assert_eq!(metrics.flow, expected_flow(mode), "{mode:?}");
+        assert_eq!(
+            kmeans::digest_centroids(&legacy),
+            kmeans::digest_centroids(&session),
+            "k-means centroids differ under {mode:?}"
+        );
+    }
+}
+
+#[test]
+fn two_job_pipeline_spawns_threads_once() {
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(3));
+    assert_eq!(rt.spawned_threads(), 3, "pool sized at session creation");
+
+    let lines = datagen::wordcount_text(0.0002, 519);
+    let mut pipe = rt.pipeline();
+
+    let counts = pipe.run(
+        &rt.job(word_count::map_line, word_count::reducer()),
+        &lines,
+    );
+    let by_count = pipe.run(
+        &rt.job(
+            |kv: &KeyValue<String, i64>, em: &mut dyn Emitter<i64, i64>| {
+                em.emit(kv.value, 1)
+            },
+            RirReducer::<i64, i64>::new(canon::sum_i64("api_eq.by_count")),
+        ),
+        counts,
+    );
+
+    assert_eq!(pipe.jobs_run(), 2);
+    assert!(!by_count.is_empty());
+    assert_eq!(
+        rt.spawned_threads(),
+        3,
+        "a two-job pipeline must spawn worker threads exactly once"
+    );
+}
+
+#[test]
+fn sorted_sink_is_deterministic_across_thread_counts() {
+    let lines = datagen::wordcount_text(0.0002, 520);
+    let rt = Runtime::fast();
+    let mut reference: Option<Vec<(String, i64)>> = None;
+    for threads in [1, 2, 5] {
+        let out = rt
+            .job(word_count::map_line, word_count::reducer())
+            .threads(threads)
+            .sorted()
+            .run(&lines);
+        let pairs = out.into_tuples();
+        match &reference {
+            None => reference = Some(pairs),
+            Some(r) => assert_eq!(&pairs, r, "sorted output differs at {threads} threads"),
+        }
+    }
+}
