@@ -10,9 +10,11 @@
 //! Demonstrates the combiner-with-state resolution the paper describes
 //! (the emitted value is `[Σx, Σy, Σz, n]`, folded by the generated
 //! vector-sum combiner, normalized outside the reduce) **and** the session
-//! economics: all Lloyd iterations share one worker pool (threads spawn
-//! once) and one agent (the reducer class transforms once, then every
-//! iteration is a cache hit).
+//! economics: every Lloyd iteration is a lazy `Dataset` plan
+//! (`rt.dataset(blocks).map_reduce(..).collect()`) on one session, so all
+//! iterations share one worker pool (threads spawn once) and one agent
+//! (the reducer class transforms once, then every iteration — and every
+//! whole-plan pass — is served from session state).
 
 use mr4r::api::config::OptimizeMode;
 use mr4r::api::{JobConfig, Runtime};
@@ -68,12 +70,13 @@ fn main() {
 
     let stats = rt.agent().stats();
     println!(
-        "\nsession: {} threads spawned once for {} jobs; reducer class \
-         transformed {} time(s), {} cache hits",
+        "\nsession: {} threads spawned once for {} plans; reducer class \
+         transformed {} time(s), {} cache hits, {} whole-plan passes",
         rt.spawned_threads(),
         2 * kmeans::ITERATIONS,
         stats.optimized,
-        stats.cache_hits
+        stats.cache_hits,
+        stats.plans
     );
 
     assert!(after < before, "Lloyd iterations must improve clustering");

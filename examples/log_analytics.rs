@@ -1,23 +1,27 @@
 //! Log analytics — the kind of "smaller Big Data job" the paper's intro
-//! motivates (most cloud jobs fit one node; Appuswamy et al. [1]).
+//! motivates (most cloud jobs fit one node; Appuswamy et al. [1]) — on
+//! the **lazy `Dataset` dataflow surface**.
 //!
 //! ```bash
 //! cargo run --release --example log_analytics
 //! ```
 //!
-//! One `Runtime` session, several MapReduce jobs over synthetic web-server
-//! logs (as a long-lived application would — one pool, one agent):
+//! One `Runtime` session, several plans over synthetic web-server logs
+//! (as a long-lived application would — one pool, one agent):
 //!
 //! 1. status-code counts — sum reducer → combining flow;
-//! 2. per-endpoint p-worst latency — max reducer → combining flow;
+//! 2. per-endpoint worst latency — max reducer → combining flow;
 //! 3. mean latency via the declarative reducer DSL;
-//! 4. a **chained** job: job 1's output feeds a status-class rollup
-//!    without re-reading the logs;
+//! 4. a **multi-stage plan**: status counts → filter → status-class
+//!    rollup, recorded lazily; the whole-plan pass fuses the filter into
+//!    the second map phase and streams the first stage's shards straight
+//!    into the second stage's splitter — zero materialized intermediates;
 //! 5. a session-dedup job whose reducer has an early exit → the agent
 //!    *rejects* it and the reduce flow runs (transparently, correctly);
 //! 6. the same status count fed from a **streaming source** (chunked
 //!    generator) — identical results without materializing the input.
 
+use mr4r::api::config::OptimizeMode;
 use mr4r::api::reducers::RirReducer;
 use mr4r::api::{ChunkedSource, Emitter, JobConfig, KeyValue, Runtime};
 use mr4r::optimizer::ast::specs;
@@ -45,26 +49,26 @@ fn main() {
     let logs = synth_logs(200_000, 7);
     let rt = Runtime::with_config(JobConfig::fast());
 
-    // --- Job 1: requests per status code (sum → optimizable) ---
+    // --- Plan 1: requests per status code (sum → optimizable) ---
     let status_mapper = |line: &String, em: &mut dyn Emitter<i64, i64>| {
         let mut it = line.split(' ');
         let status: i64 = it.nth(2).and_then(|s| s.parse().ok()).unwrap_or(0);
         em.emit(status, 1);
     };
     let by_status = rt
-        .job(
+        .dataset(&logs)
+        .map_reduce(
             status_mapper,
             RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
         )
-        .sorted()
-        .run(&logs);
+        .collect_sorted();
     println!("requests by status ({} flow):", by_status.metrics().flow.label());
-    for kv in &by_status.pairs {
+    for kv in &by_status.items {
         println!("  {}  {:>7}", kv.key, kv.value);
     }
     let flow1 = by_status.metrics().flow.label();
 
-    // --- Job 2: worst latency per endpoint (max → optimizable) ---
+    // --- Plan 2: worst latency per endpoint (max → optimizable) ---
     let latency_mapper = |line: &String, em: &mut dyn Emitter<String, i64>| {
         let mut it = line.split(' ');
         let ep = it.nth(1).unwrap_or("?").to_string();
@@ -72,12 +76,13 @@ fn main() {
         em.emit(ep, lat);
     };
     let worst = rt
-        .job(
+        .dataset(&logs)
+        .map_reduce(
             latency_mapper,
             RirReducer::<String, i64>::new(canon::max_i64("logs.worst_latency")),
         )
-        .run(&logs);
-    let mut worst_pairs = worst.pairs.clone();
+        .collect();
+    let mut worst_pairs = worst.items.clone();
     worst_pairs.sort_by(|a, b| b.value.cmp(&a.value));
     println!("\nworst latency per endpoint ({} flow):", worst.metrics().flow.label());
     for kv in &worst_pairs {
@@ -85,7 +90,7 @@ fn main() {
     }
     let flow2 = worst.metrics().flow.label();
 
-    // --- Job 2b: mean latency per endpoint, written in the declarative
+    // --- Plan 2b: mean latency per endpoint, written in the declarative
     // reducer DSL (compiled to RIR, then transformed to a combiner —
     // semantic information flowing from the API down, paper §6) ---
     let mean_mapper = |line: &String, em: &mut dyn Emitter<String, f64>| {
@@ -95,14 +100,15 @@ fn main() {
         em.emit(ep, lat);
     };
     let means = rt
-        .job(
+        .dataset(&logs)
+        .map_reduce(
             mean_mapper,
             RirReducer::<String, f64>::new(
                 specs::mean_f64("logs.mean_latency").compile().expect("spec compiles"),
             ),
         )
-        .run(&logs);
-    let mut mean_pairs = means.pairs.clone();
+        .collect();
+    let mut mean_pairs = means.items.clone();
     mean_pairs.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
     println!(
         "\nmean latency per endpoint ({} flow, DSL-compiled reducer):",
@@ -113,33 +119,71 @@ fn main() {
     }
     assert_eq!(means.metrics().flow.label(), "combine");
 
-    // --- Job 1b: chain job 1's output into a status-class rollup
-    // (2xx/3xx/4xx/5xx) — the output IS the next job's input source ---
-    let mut pipe = rt.pipeline();
-    let by_class = pipe.run(
-        &rt.job(
+    // --- Plan 3: the multi-stage lazy plan. Status counts → drop the
+    // healthy 2xx bulk → roll up by status class, recorded as ONE plan.
+    // Nothing runs until collect(); the whole-plan pass then fuses the
+    // filter into stage 2's mapper and streams stage 1's shard outputs
+    // straight into stage 2's splitter — no JobOutput round-trip.
+    let error_classes = rt
+        .dataset(&logs)
+        .map_reduce(
+            status_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
+        )
+        .filter(|kv: &KeyValue<i64, i64>| kv.key >= 300)
+        .map_reduce(
             |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
                 em.emit(kv.key / 100, kv.value);
             },
             RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_class")),
         )
-        .sorted(),
-        by_status,
-    );
-    println!("\nrequests by status class (chained from job 1):");
-    for kv in &by_class.pairs {
+        .collect_sorted();
+    println!("\nnon-2xx requests by status class (one lazy 2-stage plan):");
+    for kv in &error_classes.items {
         println!("  {}xx  {:>7}", kv.key, kv.value);
     }
-    let total: i64 = by_class.pairs.iter().map(|kv| kv.value).sum();
-    assert_eq!(total, logs.len() as i64);
+    println!(
+        "  plan: {} fused op(s), {} streamed handoff(s), {} materialized intermediates",
+        error_classes.report.fused_ops,
+        error_classes.report.streamed_handoffs,
+        error_classes.report.materialized_pairs,
+    );
+    assert_eq!(error_classes.report.fused_ops, 1);
+    assert_eq!(error_classes.report.streamed_handoffs, 1);
+    assert_eq!(error_classes.report.materialized_pairs, 0);
 
-    // --- Job 3: a non-transformable reducer (early exit) ---
+    // The same plan with the optimizer off runs eagerly: every stage
+    // boundary materializes, and the report shows the round-trips.
+    let eager = rt
+        .dataset(&logs)
+        .optimize(OptimizeMode::Off)
+        .map_reduce(
+            status_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
+        )
+        .filter(|kv: &KeyValue<i64, i64>| kv.key >= 300)
+        .map_reduce(
+            |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
+                em.emit(kv.key / 100, kv.value);
+            },
+            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_class")),
+        )
+        .collect_sorted();
+    assert_eq!(eager.items, error_classes.items, "plan rewrites change nothing");
+    assert!(eager.report.materialized_pairs > 0);
+    println!(
+        "  (optimizer off: {} materialized intermediates, same results)",
+        eager.report.materialized_pairs
+    );
+
+    // --- Plan 4: a non-transformable reducer (early exit) ---
     let first_burst = rt
-        .job(
+        .dataset(&logs)
+        .map_reduce(
             status_mapper,
             RirReducer::<i64, i64>::new(canon::early_exit("logs.first_burst")),
         )
-        .run(&logs);
+        .collect();
     println!(
         "\nnon-fold reducer: flow={} (agent said: {})",
         first_burst.metrics().flow.label(),
@@ -151,7 +195,7 @@ fn main() {
     );
     let flow3 = first_burst.metrics().flow.label();
 
-    // --- Job 1c: streaming source — same counts without a materialized
+    // --- Plan 1c: streaming source — same counts without a materialized
     // input slice (chunks generated on demand) ---
     let mut served = 0usize;
     let logs_for_stream = logs.clone();
@@ -165,21 +209,14 @@ fn main() {
         Some(chunk)
     });
     let streamed = rt
-        .job(
+        .dataset(stream)
+        .map_reduce(
             status_mapper,
             RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
         )
-        .sorted()
-        .run(stream);
-    let materialized = rt
-        .job(
-            status_mapper,
-            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
-        )
-        .sorted()
-        .run(&logs);
+        .collect_sorted();
     assert_eq!(
-        streamed.pairs, materialized.pairs,
+        streamed.items, by_status.items,
         "streaming source must match the materialized run"
     );
     println!("\nstreamed status counts match materialized run: true");
@@ -187,15 +224,18 @@ fn main() {
     let stats = rt.agent().stats();
     println!(
         "\nsession: {} threads spawned once; agent: {} classes optimized, {} rejected, \
-         {} cache hits, detection {:.0}us/class",
+         {} cache hits, {} whole-plan passes ({} ops fused, {} handoffs streamed)",
         rt.spawned_threads(),
         stats.optimized,
         stats.rejected,
         stats.cache_hits,
-        stats.detection.mean() * 1e6
+        stats.plans,
+        stats.fused_stages,
+        stats.streamed_handoffs
     );
     assert_eq!(flow1, "combine");
     assert_eq!(flow2, "combine");
     assert_eq!(flow3, "reduce");
     assert!(stats.cache_hits >= 2, "repeated classes must hit the cache");
+    assert!(stats.plans >= 7, "every collect runs the whole-plan pass");
 }

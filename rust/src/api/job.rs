@@ -40,7 +40,7 @@ pub struct JobReport {
 
 impl<I, K, V> MapReduce<I, K, V>
 where
-    I: Send + Sync,
+    I: Clone + Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {

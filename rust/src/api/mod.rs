@@ -9,16 +9,22 @@
 //! combining flow is decided by the [`crate::optimizer::agent`], never by
 //! the application.
 //!
-//! Two entry points share one engine:
+//! Three entry points share one engine:
 //!
-//! * [`Runtime`]/[`JobBuilder`] — the session API: a persistent worker
-//!   pool, a shared optimizer agent, streaming [`InputSource`]s, output
-//!   ordering contracts, and job chaining via [`Runtime::pipeline`].
+//! * [`Dataset`] — the lazy dataflow API ([`Runtime::dataset`]): record a
+//!   plan of `map`/`filter`/`flat_map`/`map_reduce` stages, execute on
+//!   `collect()` after the agent's whole-plan pass has fused element-wise
+//!   stages and arranged reduce handoffs to stream (see [`plan`]).
+//! * [`Runtime`]/[`JobBuilder`] — the eager session API: a persistent
+//!   worker pool, a shared optimizer agent, streaming [`InputSource`]s,
+//!   output ordering contracts, and job chaining via
+//!   [`Runtime::pipeline`]. Now a thin shim over one-stage plans.
 //! * [`MapReduce`] — the paper's one-shot façade, kept as a thin shim
 //!   over a private session.
 
 pub mod config;
 pub mod job;
+pub mod plan;
 pub mod reducers;
 pub mod runtime;
 pub mod source;
@@ -26,6 +32,7 @@ pub mod traits;
 
 pub use config::{ExecutionFlow, JobConfig, OptimizeMode};
 pub use job::{JobReport, MapReduce};
+pub use plan::{Dataset, PlanOutput, PlanReport, StageInfo, StageKind};
 pub use reducers::RirReducer;
 pub use runtime::{JobBuilder, JobOutput, Pipeline, Runtime};
 pub use source::{ChunkedSource, Feed, InputSource, IterSource};

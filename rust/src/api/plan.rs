@@ -1,0 +1,1008 @@
+//! The lazy dataflow surface: [`Dataset`] — jobs as *plans*, not calls.
+//!
+//! `runtime.dataset(source)` opens a typed, lazy handle over any
+//! [`InputSource`]. Calling [`Dataset::map`], [`Dataset::filter`],
+//! [`Dataset::flat_map`] or [`Dataset::map_reduce`] records a logical
+//! stage; **nothing executes** until a terminal [`Dataset::collect`] /
+//! [`Dataset::collect_sorted`]. At collect time the whole recorded chain
+//! is lowered by [`crate::coordinator::planner`] and optimized by the
+//! session [`OptimizerAgent`](crate::optimizer::agent::OptimizerAgent)'s
+//! whole-plan pass before anything runs.
+//!
+//! # Which rewrites fire, and why
+//!
+//! Each rewrite generalizes a paper mechanism from one job to a plan:
+//!
+//! * **Combiner insertion** (paper §3, Figures 3–4). Every reduce stage
+//!   still goes through the per-class agent path: if the reducer's RIR
+//!   slices into `initialize`/`combine`/`finalize`, the stage runs the
+//!   combining flow — per stage, exactly as an eager job would. The plan
+//!   adds nothing here except that one session agent serves all stages,
+//!   so repeated classes hit the transformation cache.
+//! * **Element-wise fusion** (the §3.1 move — "a different implementation
+//!   of the emitter interface" — applied to stage boundaries). Adjacent
+//!   `map`/`filter`/`flat_map` stages compose into the consumer's mapper,
+//!   so intermediate elements flow value-by-value through closures and no
+//!   intermediate `Vec` is materialized between stages. With the
+//!   optimizer off, each chain materializes between stages instead, and
+//!   the round-trip is charged to
+//!   [`FlowMetrics::materialized_in`](crate::coordinator::pipeline::FlowMetrics).
+//! * **Shard streaming** (the §2.4 collector contract, extended across
+//!   stages). A reduce stage that feeds another stage hands over its
+//!   result *shards* directly as the next map phase's chunk stream — the
+//!   `JobOutput` concatenation (an O(results) copy per stage boundary)
+//!   disappears, and the session [`WorkerPool`] never goes idle between
+//!   stages waiting on a driver round-trip.
+//!
+//! All three stay transparent in the paper's sense (§2.4): the
+//! application records `map`/`map_reduce` calls; whether a stage fuses,
+//! streams, or combines is the agent's decision, never the caller's.
+//!
+//! ```ignore
+//! let rt = Runtime::new();
+//! let rollup = rt
+//!     .dataset(&lines)
+//!     .map_reduce(word_count::map_line, word_count::reducer())
+//!     .filter(|kv| kv.value > 1)
+//!     .map_reduce(hist_mapper, hist_reducer)   // streams shards, fuses filter
+//!     .collect_sorted();
+//! println!("{} fused ops, {} streamed handoffs",
+//!          rollup.report.fused_ops, rollup.report.streamed_handoffs);
+//! ```
+
+use std::hash::Hash;
+use std::ops::Range;
+use std::sync::Arc;
+
+use super::config::{JobConfig, OptimizeMode};
+use super::runtime::Runtime;
+use super::source::{Feed, InputSource};
+use super::traits::{KeyValue, Mapper, Reducer};
+use crate::coordinator::pipeline::{concat_shards, run_job_sharded, FlowMetrics};
+use crate::coordinator::planner::{self, PlanExec};
+use crate::optimizer::value::RirValue;
+
+/// What kind of logical stage a plan node records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageKind {
+    /// The plan's input source.
+    Source,
+    /// One-to-one element transform.
+    Map,
+    /// Element predicate.
+    Filter,
+    /// One-to-many element transform.
+    FlatMap,
+    /// A full map→reduce stage.
+    MapReduce,
+}
+
+/// One recorded logical stage (what the planner lowers).
+#[derive(Clone, Debug)]
+pub struct StageInfo {
+    pub kind: StageKind,
+    /// Human-readable stage name (reducer class name for reduce stages).
+    pub name: String,
+    /// Optimizer mode captured when the stage was recorded.
+    pub optimize: OptimizeMode,
+}
+
+/// An element-wise operator with its input type erased into the closure:
+/// push-based over **borrowed** elements, so fused chains forward values
+/// to the consuming mapper without cloning or buffering. (Materialization
+/// points — unfused staging, terminal collects — clone what they keep;
+/// the fused hot path never does.)
+type ElementOp<'rt, B, T> = Box<dyn Fn(&B, &mut dyn FnMut(&T)) + Send + Sync + 'rt>;
+
+/// The element-wise chain between the nearest stage barrier (source or
+/// upstream reduce output, element type `B`) and the dataset's current
+/// element type `T`.
+enum Chain<'rt, B, T> {
+    /// No operators. `B` and `T` are the same type by construction; the
+    /// two identity functions are the (zero-cost) witnesses that let the
+    /// executor move or borrow barrier elements as `T` without cloning.
+    Direct {
+        by_ref: fn(&B) -> &T,
+        by_val: fn(B) -> T,
+    },
+    /// One or more composed operators.
+    Ops { op: ElementOp<'rt, B, T> },
+}
+
+impl<'rt, T> Chain<'rt, T, T> {
+    fn direct() -> Self {
+        Chain::Direct {
+            by_ref: |x| x,
+            by_val: |x| x,
+        }
+    }
+}
+
+/// The stage barrier a chain hangs off: a real input source, or the whole
+/// upstream plan ending in a reduce stage (types erased at record time).
+enum Base<'rt, B> {
+    Source(Box<dyn InputSource<B> + 'rt>),
+    Stage(Box<dyn PlanStage<'rt, B> + 'rt>),
+}
+
+/// An upstream pipeline ending in a reduce stage with output element type
+/// `Out`. Executing it runs every upstream stage and returns the result
+/// pairs **grouped by collector shard**, so the consumer may stream them.
+trait PlanStage<'rt, Out> {
+    fn execute(self: Box<Self>, exec: &mut PlanExec<'rt>) -> Vec<Vec<Out>>;
+}
+
+/// A lazy, typed dataflow handle: element type `T`, nearest-barrier
+/// element type `B` (an implementation detail — it defaults to `T` and
+/// resets to the pair type at every `map_reduce`).
+///
+/// Cheap to build, executes nothing until [`Dataset::collect`]. See the
+/// [module docs](self) for which rewrites fire at collect time.
+pub struct Dataset<'rt, T, B = T> {
+    rt: &'rt Runtime,
+    base: Base<'rt, B>,
+    chain: Chain<'rt, B, T>,
+    /// Every logical stage recorded so far, in order.
+    stages: Vec<StageInfo>,
+    /// Index of the first stage after the current barrier (the chain's
+    /// stages are `chain_start..stages.len()`).
+    chain_start: usize,
+    /// Configuration snapshot applied to stages recorded from now on.
+    config: JobConfig,
+}
+
+impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
+    /// Logical stages recorded so far (source, element-wise ops, reduces).
+    pub fn stages(&self) -> &[StageInfo] {
+        &self.stages
+    }
+
+    /// Configuration applied to stages recorded from now on.
+    pub fn config(&self) -> &JobConfig {
+        &self.config
+    }
+
+    /// Replace the configuration for subsequently recorded stages. Set
+    /// configuration *before* recording the stages it should govern —
+    /// already-recorded stages keep their snapshot.
+    pub fn with_config(mut self, config: JobConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn optimize(mut self, mode: OptimizeMode) -> Self {
+        self.config = self.config.with_optimize(mode);
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.config = self.config.with_threads(n);
+        self
+    }
+
+    pub fn scratch_per_emit(mut self, bytes: u64) -> Self {
+        self.config = self.config.with_scratch_per_emit(bytes);
+        self
+    }
+
+    pub fn tasks_per_thread(mut self, n: usize) -> Self {
+        self.config = self.config.with_tasks_per_thread(n);
+        self
+    }
+
+    fn push_stage(&mut self, kind: StageKind, name: &str) {
+        self.stages.push(StageInfo {
+            kind,
+            name: name.to_string(),
+            optimize: self.config.optimize,
+        });
+    }
+
+    /// Record a one-to-one element transform.
+    pub fn map<U: 'rt>(
+        mut self,
+        f: impl Fn(&T) -> U + Send + Sync + 'rt,
+    ) -> Dataset<'rt, U, B> {
+        self.push_stage(StageKind::Map, "map");
+        let chain = match self.chain {
+            Chain::Direct { by_ref, .. } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    let u = f(by_ref(b));
+                    sink(&u);
+                }),
+            },
+            Chain::Ops { op } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    op(b, &mut |t: &T| {
+                        let u = f(t);
+                        sink(&u);
+                    })
+                }),
+            },
+        };
+        Dataset {
+            rt: self.rt,
+            base: self.base,
+            chain,
+            stages: self.stages,
+            chain_start: self.chain_start,
+            config: self.config,
+        }
+    }
+
+    /// Record an element predicate. Kept elements flow through the fused
+    /// chain by reference — no clones on the hot path.
+    pub fn filter(mut self, p: impl Fn(&T) -> bool + Send + Sync + 'rt) -> Dataset<'rt, T, B> {
+        self.push_stage(StageKind::Filter, "filter");
+        let chain = match self.chain {
+            Chain::Direct { by_ref, .. } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
+                    let t = by_ref(b);
+                    if p(t) {
+                        sink(t);
+                    }
+                }),
+            },
+            Chain::Ops { op } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
+                    op(b, &mut |t: &T| {
+                        if p(t) {
+                            sink(t);
+                        }
+                    })
+                }),
+            },
+        };
+        Dataset {
+            rt: self.rt,
+            base: self.base,
+            chain,
+            stages: self.stages,
+            chain_start: self.chain_start,
+            config: self.config,
+        }
+    }
+
+    /// Record a one-to-many element transform (`f` pushes any number of
+    /// outputs per input into the sink).
+    pub fn flat_map<U: 'rt>(
+        mut self,
+        f: impl Fn(&T, &mut dyn FnMut(U)) + Send + Sync + 'rt,
+    ) -> Dataset<'rt, U, B> {
+        self.push_stage(StageKind::FlatMap, "flat_map");
+        let chain = match self.chain {
+            Chain::Direct { by_ref, .. } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    f(by_ref(b), &mut |u: U| sink(&u))
+                }),
+            },
+            Chain::Ops { op } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    op(b, &mut |t: &T| f(t, &mut |u: U| sink(&u)))
+                }),
+            },
+        };
+        Dataset {
+            rt: self.rt,
+            base: self.base,
+            chain,
+            stages: self.stages,
+            chain_start: self.chain_start,
+            config: self.config,
+        }
+    }
+
+    /// Record a full map→reduce stage: `mapper` emits `(K, V)` pairs per
+    /// element, `reducer` folds per key. The stage becomes the plan's new
+    /// barrier; its output elements are the result [`KeyValue`] pairs.
+    pub fn map_reduce<K, V>(
+        self,
+        mapper: impl Mapper<T, K, V> + 'rt,
+        reducer: impl Reducer<K, V> + 'rt,
+    ) -> Dataset<'rt, KeyValue<K, V>>
+    where
+        B: Send + Sync,
+        T: Clone + Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + RirValue,
+        V: RirValue,
+    {
+        self.map_reduce_shared(Arc::new(mapper), Arc::new(reducer))
+    }
+
+    /// [`Dataset::map_reduce`] taking pre-shared mapper/reducer handles.
+    /// (`T: Clone` backs the *unfused* path only — with the optimizer off
+    /// an element-wise chain stages its output; the fused path borrows.)
+    pub fn map_reduce_shared<K, V>(
+        self,
+        mapper: Arc<dyn Mapper<T, K, V> + 'rt>,
+        reducer: Arc<dyn Reducer<K, V> + 'rt>,
+    ) -> Dataset<'rt, KeyValue<K, V>>
+    where
+        B: Send + Sync,
+        T: Clone + Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + RirValue,
+        V: RirValue,
+    {
+        let Dataset {
+            rt,
+            base,
+            chain,
+            mut stages,
+            chain_start,
+            config,
+        } = self;
+        let index = stages.len();
+        stages.push(StageInfo {
+            kind: StageKind::MapReduce,
+            name: reducer.class_name().to_string(),
+            optimize: config.optimize,
+        });
+        let stage = ReduceStage {
+            base,
+            chain,
+            chain_range: chain_start..index,
+            index,
+            mapper,
+            reducer,
+            cfg: config.clone(),
+        };
+        Dataset {
+            rt,
+            base: Base::Stage(Box::new(stage)),
+            chain: Chain::direct(),
+            chain_start: stages.len(),
+            stages,
+            config,
+        }
+    }
+
+    /// Execute the plan and materialize the output elements. This is the
+    /// only place anything runs: the planner lowers the recorded stages,
+    /// the agent's whole-plan pass picks placements, and every stage runs
+    /// on the session's persistent worker pool.
+    ///
+    /// `T: Clone` is exercised only where the plan must turn borrowed
+    /// chain outputs into owned results — no-op plans over borrowed
+    /// slices and terminal element-wise chains; reduce outputs move.
+    pub fn collect(self) -> PlanOutput<T>
+    where
+        T: Clone,
+    {
+        let Dataset {
+            rt,
+            base,
+            chain,
+            stages,
+            chain_start,
+            ..
+        } = self;
+        let plan = planner::lower(&stages, rt.agent());
+        let mut exec = PlanExec::new(rt.pool(), rt.agent(), plan);
+        let chain_range = chain_start..stages.len();
+        let fuse = exec.chain_fused(&chain_range);
+        let items: Vec<T> = match base {
+            Base::Source(mut src) => {
+                let hint = src.len_hint();
+                collect_source(src.feed(), &chain, hint)
+            }
+            Base::Stage(upstream) => {
+                let shards = upstream.execute(&mut exec);
+                match &chain {
+                    Chain::Direct { by_val, .. } => {
+                        let mut out = Vec::with_capacity(shards.iter().map(Vec::len).sum());
+                        for shard in shards {
+                            out.extend(shard.into_iter().map(by_val));
+                        }
+                        out
+                    }
+                    Chain::Ops { op } if fuse => {
+                        // Fused terminal: apply the chain while walking the
+                        // shard outputs — no intermediate vector.
+                        let mut out = Vec::new();
+                        for shard in &shards {
+                            for b in shard {
+                                op(b, &mut |t: &T| out.push(t.clone()));
+                            }
+                        }
+                        out
+                    }
+                    Chain::Ops { op } => {
+                        // Unfused terminal: the eager round-trip, measured.
+                        let handoff = concat_shards(shards);
+                        exec.note_materialized(handoff.len() as u64);
+                        let mut out = Vec::new();
+                        for b in &handoff {
+                            op(b, &mut |t: &T| out.push(t.clone()));
+                        }
+                        out
+                    }
+                }
+            }
+        };
+        PlanOutput {
+            items,
+            report: exec.into_report(),
+        }
+    }
+}
+
+impl<'rt, K: 'rt, V: 'rt, B: 'rt> Dataset<'rt, KeyValue<K, V>, B> {
+    /// [`Dataset::collect`], then sort the result pairs by key — the
+    /// deterministic sink (same contract as `JobBuilder::sorted`).
+    pub fn collect_sorted(self) -> PlanOutput<KeyValue<K, V>>
+    where
+        K: Ord + Clone,
+        V: Clone,
+    {
+        let mut out = self.collect();
+        out.items.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+}
+
+impl<'rt, T: 'rt> Dataset<'rt, T> {
+    /// Open a plan over `source` (crate-internal; use
+    /// [`Runtime::dataset`]).
+    pub(crate) fn over(
+        rt: &'rt Runtime,
+        source: Box<dyn InputSource<T> + 'rt>,
+        config: JobConfig,
+    ) -> Dataset<'rt, T> {
+        let optimize = config.optimize;
+        Dataset {
+            rt,
+            base: Base::Source(source),
+            chain: Chain::direct(),
+            stages: vec![StageInfo {
+                kind: StageKind::Source,
+                name: "source".to_string(),
+                optimize,
+            }],
+            chain_start: 1,
+            config,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Physical execution
+// ---------------------------------------------------------------------
+
+/// A recorded reduce stage with everything its execution needs, built at
+/// `map_reduce` time while all four types are still concrete.
+struct ReduceStage<'rt, B, T, K, V> {
+    base: Base<'rt, B>,
+    chain: Chain<'rt, B, T>,
+    /// Logical indices of the chain's element-wise stages.
+    chain_range: Range<usize>,
+    /// Logical index of this reduce stage.
+    index: usize,
+    mapper: Arc<dyn Mapper<T, K, V> + 'rt>,
+    reducer: Arc<dyn Reducer<K, V> + 'rt>,
+    cfg: JobConfig,
+}
+
+/// The upstream chain composed under a consumer's mapper: barrier
+/// elements flow through the element-wise ops straight into `inner`'s
+/// emits — the fusion rewrite, realized.
+struct FusedMapper<'a, 'rt, B, T, K, V> {
+    chain: &'a Chain<'rt, B, T>,
+    inner: &'a dyn Mapper<T, K, V>,
+}
+
+impl<'a, 'rt, B, T, K, V> Mapper<B, K, V> for FusedMapper<'a, 'rt, B, T, K, V>
+where
+    B: Send + Sync,
+    T: Send + Sync,
+    K: Send,
+    V: Send,
+{
+    fn map(&self, input: &B, emitter: &mut dyn super::traits::Emitter<K, V>) {
+        match self.chain {
+            Chain::Direct { by_ref, .. } => self.inner.map(by_ref(input), emitter),
+            Chain::Ops { op } => op(input, &mut |t: &T| self.inner.map(t, emitter)),
+        }
+    }
+}
+
+impl<'rt, B, T, K, V> PlanStage<'rt, KeyValue<K, V>> for ReduceStage<'rt, B, T, K, V>
+where
+    B: Send + Sync + 'rt,
+    T: Clone + Send + Sync + 'rt,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    fn execute(self: Box<Self>, exec: &mut PlanExec<'rt>) -> Vec<Vec<KeyValue<K, V>>> {
+        let ReduceStage {
+            base,
+            chain,
+            chain_range,
+            index,
+            mapper,
+            reducer,
+            cfg,
+        } = *self;
+        let fuse = exec.chain_fused(&chain_range);
+        match base {
+            Base::Source(mut src) => {
+                if fuse {
+                    let fused = FusedMapper {
+                        chain: &chain,
+                        inner: mapper.as_ref(),
+                    };
+                    run_stage(exec, &fused, reducer.as_ref(), src.feed(), &cfg, 0)
+                } else {
+                    // Unfused: the chain materializes its output first (the
+                    // eager API's behaviour between jobs).
+                    let hint = src.len_hint();
+                    let staged = apply_chain(src.feed(), &chain, hint);
+                    let staged_len = staged.len() as u64;
+                    run_stage(
+                        exec,
+                        mapper.as_ref(),
+                        reducer.as_ref(),
+                        Feed::Slice(&staged),
+                        &cfg,
+                        staged_len,
+                    )
+                }
+            }
+            Base::Stage(upstream) => {
+                let shards = upstream.execute(exec);
+                let stream = exec.stream_input(index);
+                match (stream, fuse) {
+                    (true, true) => {
+                        // Streamed handoff into a fused chain: shard
+                        // outputs become the map phase's chunk stream; no
+                        // concatenation, no copy, nothing materialized.
+                        let fused = FusedMapper {
+                            chain: &chain,
+                            inner: mapper.as_ref(),
+                        };
+                        let mut iter = shards.into_iter();
+                        let feed: Feed<'_, B> = Feed::Stream(Box::new(move || iter.next()));
+                        run_stage(exec, &fused, reducer.as_ref(), feed, &cfg, 0)
+                    }
+                    (true, false) => {
+                        // Streamed handoff into an unfused chain: the
+                        // shard pairs reach the chain without a
+                        // concatenated `JobOutput`; only the chain's
+                        // staged output materializes.
+                        let total: usize = shards.iter().map(Vec::len).sum();
+                        let mut iter = shards.into_iter();
+                        let feed: Feed<'_, B> = Feed::Stream(Box::new(move || iter.next()));
+                        let staged = apply_chain(feed, &chain, Some(total));
+                        let staged_len = staged.len() as u64;
+                        run_stage(
+                            exec,
+                            mapper.as_ref(),
+                            reducer.as_ref(),
+                            Feed::Slice(&staged),
+                            &cfg,
+                            staged_len,
+                        )
+                    }
+                    (false, fused_chain) => {
+                        // Materialized handoff: the eager `JobOutput`
+                        // round-trip, measured.
+                        let handoff = concat_shards(shards);
+                        let mut materialized = handoff.len() as u64;
+                        if fused_chain {
+                            let fused = FusedMapper {
+                                chain: &chain,
+                                inner: mapper.as_ref(),
+                            };
+                            run_stage(
+                                exec,
+                                &fused,
+                                reducer.as_ref(),
+                                Feed::Slice(&handoff),
+                                &cfg,
+                                materialized,
+                            )
+                        } else {
+                            let staged = apply_chain(
+                                Feed::Slice(&handoff),
+                                &chain,
+                                Some(handoff.len()),
+                            );
+                            materialized += staged.len() as u64;
+                            run_stage(
+                                exec,
+                                mapper.as_ref(),
+                                reducer.as_ref(),
+                                Feed::Slice(&staged),
+                                &cfg,
+                                materialized,
+                            )
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run one physical reduce stage, recording its metrics (with the
+/// materialized-input count the acceptance criteria compare).
+fn run_stage<'rt, I, K, V>(
+    exec: &mut PlanExec<'rt>,
+    mapper: &dyn Mapper<I, K, V>,
+    reducer: &dyn Reducer<K, V>,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    materialized_in: u64,
+) -> Vec<Vec<KeyValue<K, V>>>
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    let (shards, mut metrics) =
+        run_job_sharded(exec.pool, mapper, reducer, feed, cfg, exec.agent);
+    metrics.materialized_in = materialized_in;
+    exec.note_materialized(materialized_in);
+    exec.push_metrics(metrics);
+    shards
+}
+
+/// Materialize an element-wise chain's output (the unfused path; clones
+/// what it keeps). Only called for chains with operators — direct chains
+/// never materialize.
+fn apply_chain<'rt, B, T: Clone>(
+    feed: Feed<'_, B>,
+    chain: &Chain<'rt, B, T>,
+    hint: Option<usize>,
+) -> Vec<T> {
+    let mut out = Vec::with_capacity(hint.unwrap_or(0));
+    match chain {
+        Chain::Direct { .. } => unreachable!("direct chains never materialize"),
+        Chain::Ops { op } => match feed {
+            Feed::Slice(items) => {
+                for b in items {
+                    op(b, &mut |t: &T| out.push(t.clone()));
+                }
+            }
+            Feed::Stream(mut next) => {
+                while let Some(chunk) = next() {
+                    for b in &chunk {
+                        op(b, &mut |t: &T| out.push(t.clone()));
+                    }
+                }
+            }
+        },
+    }
+    out
+}
+
+/// Drain a source feed through the terminal chain (plans with no reduce
+/// stage at all).
+fn collect_source<'rt, B, T: Clone>(
+    feed: Feed<'_, B>,
+    chain: &Chain<'rt, B, T>,
+    hint: Option<usize>,
+) -> Vec<T> {
+    let mut out = Vec::with_capacity(hint.unwrap_or(0));
+    match (feed, chain) {
+        (Feed::Slice(items), Chain::Direct { by_ref, .. }) => {
+            out.extend(items.iter().map(|b| by_ref(b).clone()));
+        }
+        (Feed::Stream(mut next), Chain::Direct { by_val, .. }) => {
+            while let Some(chunk) = next() {
+                out.extend(chunk.into_iter().map(by_val));
+            }
+        }
+        (Feed::Slice(items), Chain::Ops { op }) => {
+            for b in items {
+                op(b, &mut |t: &T| out.push(t.clone()));
+            }
+        }
+        (Feed::Stream(mut next), Chain::Ops { op }) => {
+            while let Some(chunk) = next() {
+                for b in &chunk {
+                    op(b, &mut |t: &T| out.push(t.clone()));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// Plan output
+// ---------------------------------------------------------------------
+
+/// What a whole plan measured: per-reduce-stage job metrics plus the
+/// plan-level rewrite accounting.
+#[derive(Clone, Debug)]
+pub struct PlanReport {
+    /// Metrics of every executed reduce stage, upstream-first.
+    pub stage_metrics: Vec<FlowMetrics>,
+    /// Element-wise operators composed into a downstream map phase.
+    pub fused_ops: usize,
+    /// Reduce handoffs that streamed shard outputs.
+    pub streamed_handoffs: usize,
+    /// Total elements materialized into plan-level intermediates (equals
+    /// the sum of per-stage
+    /// [`FlowMetrics::materialized_in`](crate::coordinator::pipeline::FlowMetrics)
+    /// plus any unfused terminal chain's input).
+    pub materialized_pairs: u64,
+}
+
+/// What a terminal collect returns: the materialized elements plus the
+/// plan report. Implements [`InputSource`], so a plan's output can feed
+/// another plan (or a legacy job) without a copy.
+#[derive(Clone, Debug)]
+pub struct PlanOutput<T> {
+    pub items: Vec<T>,
+    pub report: PlanReport,
+}
+
+impl<T> PlanOutput<T> {
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn into_items(self) -> Vec<T> {
+        self.items
+    }
+
+    /// Metrics of the plan's final reduce stage.
+    ///
+    /// # Panics
+    /// For plans with no reduce stage (element-wise-only collects have no
+    /// job metrics).
+    pub fn metrics(&self) -> &FlowMetrics {
+        self.report
+            .stage_metrics
+            .last()
+            .expect("plan ran no reduce stage — no job metrics to report")
+    }
+}
+
+impl<K, V> PlanOutput<KeyValue<K, V>> {
+    /// Results as plain tuples (what the benchmark digests consume).
+    pub fn into_tuples(self) -> Vec<(K, V)> {
+        self.items
+            .into_iter()
+            .map(|kv| (kv.key, kv.value))
+            .collect()
+    }
+}
+
+impl<T> InputSource<T> for PlanOutput<T> {
+    fn feed(&mut self) -> Feed<'_, T> {
+        Feed::Slice(&self.items)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.items.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::ExecutionFlow;
+    use crate::api::reducers::RirReducer;
+    use crate::api::traits::Emitter;
+    use crate::optimizer::builder::canon;
+
+    fn wc_mapper(line: &String, em: &mut dyn Emitter<String, i64>) {
+        for w in line.split_whitespace() {
+            em.emit(w.to_string(), 1);
+        }
+    }
+
+    fn lines() -> Vec<String> {
+        vec![
+            "the quick brown fox".into(),
+            "the lazy dog".into(),
+            "the quick dog".into(),
+        ]
+    }
+
+    fn rt() -> Runtime {
+        Runtime::with_config(JobConfig::fast().with_threads(2))
+    }
+
+    #[test]
+    fn one_stage_plan_matches_job_builder() {
+        let rt = rt();
+        let data = lines();
+        let from_plan = rt
+            .dataset(&data)
+            .map_reduce(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("plan.wc")),
+            )
+            .collect_sorted();
+        assert_eq!(from_plan.metrics().flow, ExecutionFlow::Combine);
+        assert_eq!(from_plan.metrics().materialized_in, 0);
+        assert_eq!(from_plan.report.stage_metrics.len(), 1);
+
+        let from_job = rt
+            .job(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("plan.wc")),
+            )
+            .sorted()
+            .run(&data);
+        assert_eq!(from_plan.items, from_job.pairs);
+    }
+
+    #[test]
+    fn element_wise_only_plan_collects() {
+        let rt = rt();
+        let data: Vec<i64> = (0..10).collect();
+        let out = rt
+            .dataset(&data)
+            .map(|x| x * 2)
+            .filter(|x| x % 4 == 0)
+            .flat_map(|x: &i64, sink: &mut dyn FnMut(i64)| {
+                sink(*x);
+                sink(-*x);
+            })
+            .collect();
+        assert_eq!(out.items, vec![0, 0, 4, -4, 8, -8, 12, -12, 16, -16]);
+        assert!(out.report.stage_metrics.is_empty());
+    }
+
+    #[test]
+    fn chained_plan_fuses_and_streams() {
+        let rt = rt();
+        let data = lines();
+        let run = |mode: OptimizeMode| {
+            rt.dataset(&data)
+                .optimize(mode)
+                .map_reduce(
+                    wc_mapper,
+                    RirReducer::<String, i64>::new(canon::sum_i64("plan.chain.wc")),
+                )
+                .filter(|kv| kv.value >= 1)
+                .map_reduce(
+                    |kv: &KeyValue<String, i64>, em: &mut dyn Emitter<i64, i64>| {
+                        em.emit(kv.value, 1)
+                    },
+                    RirReducer::<i64, i64>::new(canon::sum_i64("plan.chain.hist")),
+                )
+                .collect_sorted()
+        };
+        let fused = run(OptimizeMode::Auto);
+        let unfused = run(OptimizeMode::Off);
+
+        // the=3, quick=2, dog=2, brown=1, fox=1, lazy=1.
+        assert_eq!(
+            fused.items,
+            vec![
+                KeyValue::new(1, 3),
+                KeyValue::new(2, 2),
+                KeyValue::new(3, 1)
+            ]
+        );
+        assert_eq!(fused.items, unfused.items, "plan rewrites must not change results");
+
+        assert_eq!(fused.report.fused_ops, 1);
+        assert_eq!(fused.report.streamed_handoffs, 1);
+        assert_eq!(fused.report.materialized_pairs, 0);
+
+        assert_eq!(unfused.report.fused_ops, 0);
+        assert_eq!(unfused.report.streamed_handoffs, 0);
+        assert!(
+            unfused.report.materialized_pairs > 0,
+            "eager handoffs must be measured"
+        );
+        let via_metrics: u64 = unfused
+            .report
+            .stage_metrics
+            .iter()
+            .map(|m| m.materialized_in)
+            .sum();
+        assert_eq!(via_metrics, unfused.report.materialized_pairs);
+    }
+
+    #[test]
+    fn plan_output_feeds_legacy_jobs() {
+        let rt = rt();
+        let data = lines();
+        let counts = rt
+            .dataset(&data)
+            .map_reduce(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("plan.feed.wc")),
+            )
+            .collect();
+        let rollup = rt
+            .job(
+                |kv: &KeyValue<String, i64>, em: &mut dyn Emitter<i64, i64>| {
+                    em.emit(0, kv.value)
+                },
+                RirReducer::<i64, i64>::new(canon::sum_i64("plan.feed.total")),
+            )
+            .run(counts);
+        assert_eq!(rollup.pairs.len(), 1);
+        assert_eq!(rollup.pairs[0].value, 10, "total word occurrences");
+    }
+
+    #[test]
+    fn stages_record_the_logical_dag() {
+        let rt = rt();
+        let data: Vec<i64> = vec![1, 2, 3];
+        let ds = rt
+            .dataset(&data)
+            .map(|x| *x)
+            .filter(|_| true)
+            .map_reduce(
+                |x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(*x, 1),
+                RirReducer::<i64, i64>::new(canon::sum_i64("plan.stages")),
+            );
+        let kinds: Vec<StageKind> = ds.stages().iter().map(|s| s.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                StageKind::Source,
+                StageKind::Map,
+                StageKind::Filter,
+                StageKind::MapReduce
+            ]
+        );
+        assert_eq!(ds.stages()[3].name, "plan.stages");
+    }
+
+    #[test]
+    fn mixed_mode_report_matches_execution() {
+        let rt = rt();
+        let data = lines();
+        let out = rt
+            .dataset(&data)
+            .map_reduce(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("plan.mixed.wc")),
+            )
+            .optimize(OptimizeMode::Off)
+            .filter(|kv: &KeyValue<String, i64>| kv.value >= 1)
+            .optimize(OptimizeMode::Auto)
+            .map_reduce(
+                |kv: &KeyValue<String, i64>, em: &mut dyn Emitter<i64, i64>| {
+                    em.emit(kv.value, 1)
+                },
+                RirReducer::<i64, i64>::new(canon::sum_i64("plan.mixed.hist")),
+            )
+            .collect_sorted();
+        // The Off filter unfuses its chain; the Auto reduce still streams
+        // the handoff — and the report says exactly that.
+        assert_eq!(out.report.fused_ops, 0);
+        assert_eq!(out.report.streamed_handoffs, 1);
+        assert!(
+            out.report.materialized_pairs > 0,
+            "the unfused chain stages its output"
+        );
+        assert_eq!(
+            out.items,
+            vec![
+                KeyValue::new(1, 3),
+                KeyValue::new(2, 2),
+                KeyValue::new(3, 1)
+            ]
+        );
+    }
+
+    #[test]
+    fn off_mode_runs_reduce_flow_per_stage() {
+        let rt = rt();
+        let data = lines();
+        let out = rt
+            .dataset(&data)
+            .optimize(OptimizeMode::Off)
+            .map_reduce(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("plan.off.wc")),
+            )
+            .collect_sorted();
+        assert_eq!(out.metrics().flow, ExecutionFlow::Reduce);
+    }
+}

@@ -35,9 +35,10 @@ use std::sync::Arc;
 
 use super::config::{JobConfig, OptimizeMode};
 use super::job::JobReport;
+use super::plan::Dataset;
 use super::source::{Feed, InputSource};
 use super::traits::{KeyValue, Mapper, Reducer};
-use crate::coordinator::pipeline::{run_job_on, FlowMetrics};
+use crate::coordinator::pipeline::FlowMetrics;
 use crate::coordinator::scheduler::WorkerPool;
 use crate::memsim::SimHeap;
 use crate::optimizer::agent::OptimizerAgent;
@@ -152,6 +153,18 @@ impl Runtime {
             reports: Vec::new(),
         }
     }
+
+    /// Open a **lazy** dataset over any input source. Stages recorded on
+    /// the returned [`Dataset`] (`map`, `filter`, `flat_map`,
+    /// `map_reduce`) execute only at `collect()`, after the session
+    /// agent's whole-plan pass has fused element-wise stages and arranged
+    /// reduce handoffs to stream — see [`crate::api::plan`].
+    pub fn dataset<'rt, I: 'rt>(
+        &'rt self,
+        source: impl InputSource<I> + 'rt,
+    ) -> Dataset<'rt, I> {
+        Dataset::over(self, Box::new(source), self.config.clone())
+    }
 }
 
 impl Default for Runtime {
@@ -227,7 +240,7 @@ impl<'rt, I, K: Ord, V> JobBuilder<'rt, I, K, V> {
 
 impl<'rt, I, K, V> JobBuilder<'rt, I, K, V>
 where
-    I: Send + Sync,
+    I: Clone + Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {
@@ -238,19 +251,25 @@ where
     }
 
     /// Run against a source held by the caller (reusable across runs).
+    ///
+    /// Since the lazy-plan redesign this is a thin shim: the job becomes
+    /// a one-stage [`Dataset`] plan (source → `map_reduce` → collect), so
+    /// eager and lazy callers execute the exact same machinery — the
+    /// equivalence `rust/tests/plan_equivalence.rs` pins down.
     pub fn run_mut<S: InputSource<I> + ?Sized>(&self, source: &mut S) -> JobOutput<K, V> {
-        self.run_feed(source.feed())
-    }
-
-    fn run_feed(&self, feed: Feed<'_, I>) -> JobOutput<K, V> {
-        let (mut pairs, metrics) = run_job_on(
-            &self.rt.pool,
-            self.mapper.as_ref(),
-            self.reducer.as_ref(),
-            feed,
-            &self.config,
-            &self.rt.agent,
-        );
+        let mapper: Arc<dyn Mapper<I, K, V> + '_> = Arc::clone(&self.mapper);
+        let reducer: Arc<dyn Reducer<K, V> + '_> = Arc::clone(&self.reducer);
+        let source: Box<dyn InputSource<I> + '_> = Box::new(source);
+        let out = Dataset::over(self.rt, source, self.config.clone())
+            .map_reduce_shared(mapper, reducer)
+            .collect();
+        let mut pairs = out.items;
+        let metrics = out
+            .report
+            .stage_metrics
+            .into_iter()
+            .next_back()
+            .expect("one-stage plan ran its reduce stage");
         if let Some(sort) = self.sorter {
             sort(&mut pairs);
         }
@@ -310,6 +329,12 @@ impl<K, V> InputSource<KeyValue<K, V>> for JobOutput<K, V> {
 /// The pipeline adds no scheduling magic of its own — the session pool
 /// already persists — it is the bookkeeping surface: per-stage metrics in
 /// submission order, ready for a driver loop's convergence accounting.
+///
+/// Like [`JobBuilder`], this is a shim over the lazy plan layer since the
+/// dataflow redesign: every stage runs as a one-stage [`Dataset`] plan.
+/// When the stages of a chain are known up front, prefer recording them
+/// on one `Dataset` — the whole-plan optimizer can then fuse and stream
+/// across the stage boundaries a `Pipeline` materializes through.
 pub struct Pipeline<'rt> {
     rt: &'rt Runtime,
     reports: Vec<JobReport>,
@@ -323,7 +348,7 @@ impl<'rt> Pipeline<'rt> {
     /// Run one stage and record its report.
     pub fn run<I, K, V, S>(&mut self, job: &JobBuilder<'rt, I, K, V>, source: S) -> JobOutput<K, V>
     where
-        I: Send + Sync,
+        I: Clone + Send + Sync,
         K: Hash + Eq + Clone + Send + Sync + RirValue,
         V: RirValue,
         S: InputSource<I>,

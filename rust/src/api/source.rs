@@ -58,6 +58,16 @@ pub trait InputSource<I> {
     }
 }
 
+impl<I, S: InputSource<I> + ?Sized> InputSource<I> for &mut S {
+    fn feed(&mut self) -> Feed<'_, I> {
+        (**self).feed()
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        (**self).len_hint()
+    }
+}
+
 impl<I> InputSource<I> for &[I] {
     fn feed(&mut self) -> Feed<'_, I> {
         Feed::Slice(*self)
@@ -157,6 +167,8 @@ where
 pub struct IterSource<It> {
     iter: It,
     chunk_items: usize,
+    /// Length recorded at construction by [`IterSource::exact`].
+    exact: Option<usize>,
 }
 
 impl<It: Iterator> IterSource<It> {
@@ -164,6 +176,23 @@ impl<It: Iterator> IterSource<It> {
         IterSource {
             iter,
             chunk_items: chunk_items.max(1),
+            exact: None,
+        }
+    }
+}
+
+impl<It: ExactSizeIterator> IterSource<It> {
+    /// Like [`IterSource::new`], but the length hint comes from
+    /// [`ExactSizeIterator::len`] automatically — shard sizing stops
+    /// guessing for sized iterators whose `size_hint` is loose (chained
+    /// or user-written iterators). The hint is the length *at
+    /// construction*; consume the source once, like any stream.
+    pub fn exact(iter: It, chunk_items: usize) -> Self {
+        let len = iter.len();
+        IterSource {
+            iter,
+            chunk_items: chunk_items.max(1),
+            exact: Some(len),
         }
     }
 }
@@ -192,10 +221,10 @@ where
     }
 
     fn len_hint(&self) -> Option<usize> {
-        match self.iter.size_hint() {
+        self.exact.or_else(|| match self.iter.size_hint() {
             (lo, Some(hi)) if lo == hi => Some(hi),
             _ => None,
-        }
+        })
     }
 }
 
@@ -266,5 +295,111 @@ mod tests {
     fn chunk_size_clamps_to_one() {
         let mut src = IterSource::new(0..3, 0);
         assert_eq!(drain(src.feed()), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn exact_constructor_hints_from_exact_size_iterator() {
+        // A filtered iterator's size_hint is loose (lo != hi), so `new`
+        // cannot hint…
+        let loose = IterSource::new((0..10).filter(|x| x % 2 == 0), 2);
+        assert_eq!(loose.len_hint(), None);
+        // …but a sized iterator through `exact` always does.
+        let mut sized = IterSource::exact(vec![7, 8, 9].into_iter(), 2);
+        assert_eq!(sized.len_hint(), Some(3));
+        assert_eq!(drain(sized.feed()), vec![7, 8, 9]);
+    }
+
+    #[test]
+    fn mut_ref_sources_delegate() {
+        let data = vec![1, 2, 3];
+        let mut inner: &[i32] = &data;
+        let mut src = &mut inner;
+        assert_eq!(InputSource::len_hint(&src), Some(3));
+        assert_eq!(drain(src.feed()), vec![1, 2, 3]);
+    }
+
+    // ---- Edge cases end-to-end through a job ------------------------
+
+    mod job_edges {
+        use super::*;
+        use crate::api::config::JobConfig;
+        use crate::api::reducers::RirReducer;
+        use crate::api::traits::Emitter;
+        use crate::api::Runtime;
+        use crate::optimizer::builder::canon;
+
+        fn count_job(rt: &Runtime, src: impl InputSource<i64>) -> Vec<(i64, i64)> {
+            let out = rt
+                .job(
+                    |x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(*x % 3, 1),
+                    RirReducer::<i64, i64>::new(canon::sum_i64("src.edge")),
+                )
+                .sorted()
+                .run(src);
+            out.into_tuples()
+        }
+
+        fn rt() -> Runtime {
+            Runtime::with_config(JobConfig::fast().with_threads(3))
+        }
+
+        #[test]
+        fn empty_sources_produce_empty_output() {
+            let rt = rt();
+            let empty: Vec<i64> = Vec::new();
+            assert!(count_job(&rt, &empty).is_empty());
+            assert!(count_job(&rt, IterSource::new(std::iter::empty::<i64>(), 4)).is_empty());
+            let chunked: ChunkedSource<i64, _> = ChunkedSource::new(|| None);
+            assert!(count_job(&rt, chunked).is_empty());
+        }
+
+        #[test]
+        fn single_element_chunks_match_slice() {
+            let rt = rt();
+            let data: Vec<i64> = (0..23).collect();
+            let expect = count_job(&rt, &data);
+            assert_eq!(count_job(&rt, IterSource::new(data.clone().into_iter(), 1)), expect);
+        }
+
+        #[test]
+        fn chunk_boundary_equal_to_input_len_matches() {
+            // One chunk exactly the size of the whole input: the stream
+            // path degenerates to a single pull.
+            let rt = rt();
+            let data: Vec<i64> = (0..16).collect();
+            let expect = count_job(&rt, &data);
+            assert_eq!(
+                count_job(&rt, IterSource::exact(data.clone().into_iter(), data.len())),
+                expect
+            );
+            // And chunks that divide the input evenly (boundary lands on
+            // the last element).
+            assert_eq!(count_job(&rt, IterSource::new(data.clone().into_iter(), 4)), expect);
+        }
+
+        #[test]
+        fn chunked_len_hint_misestimates_are_harmless() {
+            // The hint is advisory: over- and under-estimates must not
+            // change results.
+            let rt = rt();
+            let data: Vec<i64> = (0..20).collect();
+            let expect = count_job(&rt, &data);
+            for hint in [1usize, 1000] {
+                let mut served = 0usize;
+                let d = data.clone();
+                let src = ChunkedSource::new(move || {
+                    if served >= d.len() {
+                        return None;
+                    }
+                    let end = (served + 7).min(d.len());
+                    let chunk = d[served..end].to_vec();
+                    served = end;
+                    Some(chunk)
+                })
+                .with_len_hint(hint);
+                assert_eq!(src.len_hint(), Some(hint));
+                assert_eq!(count_job(&rt, src), expect, "hint {hint}");
+            }
+        }
     }
 }

@@ -127,6 +127,18 @@ impl HeapSized for u64 {
     }
 }
 
+impl HeapSized for i32 {
+    fn heap_bytes(&self) -> u64 {
+        16 // boxed Integer (same 16-byte header-dominated footprint)
+    }
+}
+
+impl HeapSized for u32 {
+    fn heap_bytes(&self) -> u64 {
+        16
+    }
+}
+
 impl HeapSized for String {
     fn heap_bytes(&self) -> u64 {
         40 + self.len() as u64 // String header + char[] payload
@@ -142,6 +154,26 @@ impl<T: HeapSized> HeapSized for Vec<T> {
 impl HeapSized for (f64, i64) {
     fn heap_bytes(&self) -> u64 {
         32
+    }
+}
+
+impl HeapSized for (i64, i64) {
+    fn heap_bytes(&self) -> u64 {
+        32 // two boxed longs (plan-stage pair intermediates)
+    }
+}
+
+impl HeapSized for (String, i64) {
+    fn heap_bytes(&self) -> u64 {
+        self.0.heap_bytes() + 16 // string payload + boxed long
+    }
+}
+
+impl<K: HeapSized, V: HeapSized> HeapSized for KeyValue<K, V> {
+    fn heap_bytes(&self) -> u64 {
+        // Pair object header + both boxed fields — what a chained plan
+        // stage's intermediates cost when they round-trip a collector.
+        16 + self.key.heap_bytes() + self.value.heap_bytes()
     }
 }
 
@@ -206,5 +238,19 @@ mod tests {
         assert!("hello".to_string().heap_bytes() > 40);
         let v = vec![1f64, 2.0, 3.0];
         assert_eq!(v.heap_bytes(), 24 + 3 * 16);
+    }
+
+    #[test]
+    fn plan_intermediate_heap_sizes() {
+        assert_eq!(7i32.heap_bytes(), 16);
+        assert_eq!(7u32.heap_bytes(), 16);
+        assert_eq!((1i64, 2i64).heap_bytes(), 32);
+        let sv = ("word".to_string(), 3i64);
+        assert_eq!(sv.heap_bytes(), "word".to_string().heap_bytes() + 16);
+        let kv = KeyValue::new("word".to_string(), 3i64);
+        assert_eq!(
+            kv.heap_bytes(),
+            16 + "word".to_string().heap_bytes() + 16
+        );
     }
 }

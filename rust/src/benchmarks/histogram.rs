@@ -67,10 +67,12 @@ pub fn run_mr4r(
 ) -> (Vec<KeyValue<i64, i64>>, FlowMetrics) {
     let chunks = chunk_pixels(pixels);
     let out = rt
-        .job(mapper(backend.clone()), reducer())
+        .dataset(&chunks)
         .with_config(cfg.clone().with_scratch_per_emit(16))
-        .run(&chunks);
-    (out.pairs, out.report.metrics)
+        .map_reduce(mapper(backend.clone()), reducer())
+        .collect();
+    let metrics = out.metrics().clone();
+    (out.items, metrics)
 }
 
 pub fn run_phoenix(pixels: &[u8], threads: usize, backend: &Backend) -> Vec<(i64, i64)> {

@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
-use crate::api::traits::{Emitter, KeyValue};
+use crate::api::traits::Emitter;
 use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
@@ -57,30 +57,6 @@ pub fn assign_block(backend: &Backend, pts: &[[f64; 3]], centroids_pad: &[f32]) 
         .collect()
 }
 
-/// One Lloyd iteration described as a job on a session runtime. The
-/// reducer class is the same every iteration ("kmeans.sumvec"), so the
-/// session agent transforms it once and serves cache hits thereafter.
-fn iteration_job<'rt, 'p: 'rt>(
-    rt: &'rt Runtime,
-    centroids: &[[f64; 3]],
-    cfg: &JobConfig,
-    backend: &Backend,
-) -> crate::api::JobBuilder<'rt, &'p [[f64; 3]], i64, Vec<f64>> {
-    let cpad = padded_centroids(centroids);
-    let backend = backend.clone();
-    let mapper = move |block: &&[[f64; 3]], em: &mut dyn Emitter<i64, Vec<f64>>| {
-        let assign = assign_block(&backend, block, &cpad);
-        for (p, &c) in block.iter().zip(&assign) {
-            // Value = [Σx, Σy, Σz, count] seed for one point.
-            em.emit(c as i64, vec![p[0], p[1], p[2], 1.0]);
-        }
-    };
-    let reducer: RirReducer<i64, Vec<f64>> =
-        RirReducer::new(canon::sum_vec("kmeans.sumvec", KM_DIMS + 1));
-    rt.job(mapper, reducer)
-        .with_config(cfg.clone().with_scratch_per_emit(24))
-}
-
 /// Sum vectors → new centroids (the normalization outside the reduce).
 pub fn normalize(sums: &[(i64, Vec<f64>)], prev: &[[f64; 3]]) -> Vec<[f64; 3]> {
     let mut next = prev.to_vec();
@@ -91,10 +67,14 @@ pub fn normalize(sums: &[(i64, Vec<f64>)], prev: &[[f64; 3]]) -> Vec<[f64; 3]> {
     next
 }
 
-/// Full MR4R K-Means as a session pipeline: ITERATIONS chained jobs on
-/// one runtime (threads spawn once, the reducer class transforms once);
-/// returns final centroids plus the metrics of the last iteration (the
-/// steady-state job the figures use).
+/// Full MR4R K-Means as a sequence of one-stage plans on one session:
+/// each Lloyd iteration is `rt.dataset(blocks).map_reduce(..).collect()`
+/// (threads spawn once, the reducer class "kmeans.sumvec" transforms once
+/// and every later iteration hits the agent's per-class cache); returns
+/// final centroids plus the metrics of the last iteration (the
+/// steady-state job the figures use). The iterations stay separate plans
+/// because each one's mapper depends on the previous result (the
+/// centroids) — the data dependency that forces a driver round-trip.
 pub fn run_mr4r(
     data: &KmeansData,
     rt: &Runtime,
@@ -102,19 +82,30 @@ pub fn run_mr4r(
     backend: &Backend,
 ) -> (Vec<[f64; 3]>, FlowMetrics) {
     let blocks: Vec<&[[f64; 3]]> = data.points.chunks(KM_POINTS).collect();
-    let mut pipe = rt.pipeline();
-    let centroids = pipe.iterate(
-        ITERATIONS,
-        data.initial_centroids.clone(),
-        |pipe, centroids, _i| {
-            let job = iteration_job(rt, &centroids, cfg, backend);
-            let sums = pipe.run(&job, &blocks);
-            let pairs: Vec<(i64, Vec<f64>)> = sums.into_tuples();
-            normalize(&pairs, &centroids)
-        },
-    );
-    let last = pipe.reports().last().expect("≥1 iteration");
-    (centroids, last.metrics.clone())
+    let mut centroids = data.initial_centroids.clone();
+    let mut last: Option<FlowMetrics> = None;
+    for _ in 0..ITERATIONS {
+        let cpad = padded_centroids(&centroids);
+        let backend = backend.clone();
+        let mapper = move |block: &&[[f64; 3]], em: &mut dyn Emitter<i64, Vec<f64>>| {
+            let assign = assign_block(&backend, block, &cpad);
+            for (p, &c) in block.iter().zip(&assign) {
+                // Value = [Σx, Σy, Σz, count] seed for one point.
+                em.emit(c as i64, vec![p[0], p[1], p[2], 1.0]);
+            }
+        };
+        let reducer: RirReducer<i64, Vec<f64>> =
+            RirReducer::new(canon::sum_vec("kmeans.sumvec", KM_DIMS + 1));
+        let sums = rt
+            .dataset(&blocks)
+            .with_config(cfg.clone().with_scratch_per_emit(24))
+            .map_reduce(mapper, reducer)
+            .collect();
+        last = Some(sums.metrics().clone());
+        let pairs: Vec<(i64, Vec<f64>)> = sums.into_tuples();
+        centroids = normalize(&pairs, &centroids);
+    }
+    (centroids, last.expect("≥1 iteration"))
 }
 
 /// Phoenix: same chunked assignment, per-point emission, manual vector

@@ -73,10 +73,12 @@ pub fn run_mr4r(
         map_chunk(&backend, chunk, |k, v| em.emit(k, v));
     };
     let out = rt
-        .job(mapper, reducer())
+        .dataset(&chunks)
         .with_config(cfg.clone().with_scratch_per_emit(16))
-        .run(&chunks);
-    (out.pairs, out.report.metrics)
+        .map_reduce(mapper, reducer())
+        .collect();
+    let metrics = out.metrics().clone();
+    (out.items, metrics)
 }
 
 pub fn run_phoenix(

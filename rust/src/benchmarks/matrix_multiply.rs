@@ -116,10 +116,12 @@ pub fn run_mr4r(
         map_tile(a, b, &backend, *task, |k, v| em.emit(k, v));
     };
     let out = rt
-        .job(mapper, reducer())
+        .dataset(&inputs)
         .with_config(cfg.clone().with_scratch_per_emit(8))
-        .run(&inputs);
-    (out.pairs, out.report.metrics)
+        .map_reduce(mapper, reducer())
+        .collect();
+    let metrics = out.metrics().clone();
+    (out.items, metrics)
 }
 
 pub fn run_phoenix(

@@ -91,10 +91,12 @@ pub fn run_mr4r(
         map_block(m, pairs, &backend, *task, |k, v| em.emit(k, v));
     };
     let out = rt
-        .job(mapper, reducer())
+        .dataset(&inputs)
         .with_config(cfg.clone().with_scratch_per_emit(24))
-        .run(&inputs);
-    (out.pairs, out.report.metrics)
+        .map_reduce(mapper, reducer())
+        .collect();
+    let metrics = out.metrics().clone();
+    (out.items, metrics)
 }
 
 pub fn run_phoenix(

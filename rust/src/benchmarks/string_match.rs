@@ -52,10 +52,12 @@ pub fn run_mr4r(
         scan_line(line, &needles, |needle| em.emit(needle, 1));
     };
     let out = rt
-        .job(mapper, reducer())
+        .dataset(&data.haystack)
         .with_config(cfg.clone().with_scratch_per_emit(32))
-        .run(&data.haystack);
-    (out.pairs, out.report.metrics)
+        .map_reduce(mapper, reducer())
+        .collect();
+    let metrics = out.metrics().clone();
+    (out.items, metrics)
 }
 
 pub fn run_phoenix(data: &StringMatchData, threads: usize) -> Vec<(String, i64)> {

@@ -35,10 +35,12 @@ pub fn run_mr4r(
     cfg: &JobConfig,
 ) -> (Vec<KeyValue<String, i64>>, FlowMetrics) {
     let out = rt
-        .job(map_line, reducer())
+        .dataset(lines)
         .with_config(cfg.clone().with_scratch_per_emit(WC_SCRATCH_PER_EMIT))
-        .run(lines);
-    (out.pairs, out.report.metrics)
+        .map_reduce(map_line, reducer())
+        .collect();
+    let metrics = out.metrics().clone();
+    (out.items, metrics)
 }
 
 pub fn run_phoenix(lines: &[String], threads: usize) -> Vec<(String, i64)> {

@@ -18,13 +18,19 @@
 //!   contention off the emit hot path.
 //! * [`pipeline`] — drives map → (reduce | finalize) with phase barriers,
 //!   memsim accounting, and per-phase metrics.
+//! * [`planner`] — lowers a lazy [`crate::api::plan::Dataset`]'s logical
+//!   stage list to a physical plan via the optimizer agent's whole-plan
+//!   pass (element-wise fusion, shard streaming) and carries per-plan
+//!   execution state.
 
 pub mod collector;
 pub mod pipeline;
+pub mod planner;
 pub mod scheduler;
 pub mod splitter;
 
 pub use collector::{HolderCollector, ListCollector};
-pub use pipeline::{run_job, run_job_on, FlowMetrics};
+pub use pipeline::{run_job, run_job_on, run_job_sharded, FlowMetrics};
+pub use planner::{lower, PhysicalPlan};
 pub use scheduler::{TaskPool, WorkerPool};
 pub use splitter::split_indices;

@@ -42,6 +42,12 @@ pub struct FlowMetrics {
     pub flow: ExecutionFlow,
     /// Why the combine flow was not taken (when it wasn't).
     pub fallback_reason: Option<String>,
+    /// Input elements that were materialized into a plan-level
+    /// intermediate buffer before this stage's map phase (the `JobOutput`
+    /// round-trip of the eager API). Zero for borrowed sources, streamed
+    /// shard handoffs, and fused element-wise chains; set by the plan
+    /// executor ([`crate::coordinator::planner`]).
+    pub materialized_in: u64,
     pub map_secs: f64,
     /// Reduce (or finalize) phase time.
     pub reduce_secs: f64,
@@ -108,6 +114,28 @@ pub fn run_job_on<I, K, V>(
     cfg: &JobConfig,
     agent: &OptimizerAgent,
 ) -> (Vec<KeyValue<K, V>>, FlowMetrics)
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    let (shards, metrics) = run_job_sharded(pool, mapper, reducer, feed, cfg, agent);
+    (concat_shards(shards), metrics)
+}
+
+/// [`run_job_on`], but returning result pairs **grouped by collector
+/// shard** in shard index order, without concatenating them. This is the
+/// handoff shape the plan executor streams into a downstream stage's
+/// splitter — the concatenation (and its copy) only happens when someone
+/// actually asks for one flat `Vec` (see [`concat_shards`]).
+pub fn run_job_sharded<I, K, V>(
+    pool: &WorkerPool,
+    mapper: &dyn Mapper<I, K, V>,
+    reducer: &dyn Reducer<K, V>,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+) -> (Vec<Vec<KeyValue<K, V>>>, FlowMetrics)
 where
     I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
@@ -267,18 +295,22 @@ fn map_phase<I: Send + Sync>(
     (stats, emits.load(Ordering::Relaxed))
 }
 
-/// Collect per-shard result vectors in **shard index order** — reduce and
+/// Unwrap per-shard result slots in **shard index order** — reduce and
 /// finalize tasks complete in a nondeterministic order, so each writes
-/// its own indexed slot and the concatenation is order-stable.
-fn concat_shard_results<K, V>(slots: Vec<Mutex<Vec<KeyValue<K, V>>>>) -> Vec<KeyValue<K, V>> {
-    let mut results = Vec::with_capacity(
-        slots
-            .iter()
-            .map(|s| s.lock().map(|v| v.len()).unwrap_or(0))
-            .sum(),
-    );
-    for slot in slots {
-        results.append(&mut slot.into_inner().unwrap());
+/// its own indexed slot and the slot sequence is order-stable.
+fn unwrap_slots<K, V>(slots: Vec<Mutex<Vec<KeyValue<K, V>>>>) -> Vec<Vec<KeyValue<K, V>>> {
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap())
+        .collect()
+}
+
+/// Flatten sharded results into one vector, preserving shard index order
+/// (the output ordering contract of [`run_job_on`]).
+pub fn concat_shards<T>(shards: Vec<Vec<T>>) -> Vec<T> {
+    let mut results = Vec::with_capacity(shards.iter().map(Vec::len).sum());
+    for mut shard in shards {
+        results.append(&mut shard);
     }
     results
 }
@@ -294,7 +326,7 @@ fn run_reduce_flow<I, K, V>(
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     fallback_reason: Option<String>,
-) -> (Vec<KeyValue<K, V>>, FlowMetrics)
+) -> (Vec<Vec<KeyValue<K, V>>>, FlowMetrics)
 where
     I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
@@ -363,17 +395,18 @@ where
     );
     let reduce_secs = reduce_sw.secs();
 
-    let results = concat_shard_results(slots);
+    let results = unwrap_slots(slots);
     finish_job(cfg, &cohorts);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Reduce,
         fallback_reason,
+        materialized_in: 0,
         map_secs,
         reduce_secs,
         total_secs: total_sw.secs(),
         emits,
         keys,
-        results: results.len() as u64,
+        results: results.iter().map(|s| s.len() as u64).sum(),
         gc: cfg.heap.stats().since(&gc_before),
         map_pool,
     };
@@ -386,7 +419,7 @@ fn run_combine_flow<I, K, V>(
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     combiner: crate::optimizer::combiner::Combiner,
-) -> (Vec<KeyValue<K, V>>, FlowMetrics)
+) -> (Vec<Vec<KeyValue<K, V>>>, FlowMetrics)
 where
     I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
@@ -456,17 +489,18 @@ where
     );
     let reduce_secs = fin_sw.secs();
 
-    let results = concat_shard_results(slots);
+    let results = unwrap_slots(slots);
     finish_job(cfg, &cohorts);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Combine,
         fallback_reason: None,
+        materialized_in: 0,
         map_secs,
         reduce_secs,
         total_secs: total_sw.secs(),
         emits,
         keys,
-        results: results.len() as u64,
+        results: results.iter().map(|s| s.len() as u64).sum(),
         gc: cfg.heap.stats().since(&gc_before),
         map_pool,
     };

@@ -1,0 +1,258 @@
+//! The physical planner — lowers a lazy [`crate::api::plan::Dataset`]'s
+//! logical stage list into a [`PhysicalPlan`] and carries the state one
+//! plan execution threads through its stages.
+//!
+//! The paper's optimizer sees one reducer class at a time; the planner is
+//! where the framework finally sees a *whole pipeline* at once (the
+//! cross-stage view MANIMAL-style pre-execution analysis exploits). It
+//! delegates the actual placement decisions to the session
+//! [`OptimizerAgent`]'s whole-plan pass ([`OptimizerAgent::plan`]) so the
+//! decision-making — and its statistics — live with the rest of the
+//! semantic optimizer, then packages the result for the executor:
+//!
+//! * which element-wise stages compose into their consumer's map phase
+//!   ([`StageDecision::Fuse`]);
+//! * which reduce handoffs stream shard outputs instead of round-tripping
+//!   through a materialized `JobOutput` ([`StageDecision::StreamInput`]).
+//!
+//! [`PlanExec`] is the per-collect execution context: the session's
+//! worker pool and agent (so every stage reuses one pool, like eager
+//! session jobs), the lowered plan, and the per-stage metrics + plan-wide
+//! materialization accounting that become the final
+//! [`crate::api::plan::PlanReport`].
+
+use std::ops::Range;
+
+use crate::api::config::OptimizeMode;
+use crate::api::plan::{PlanReport, StageInfo, StageKind};
+use crate::coordinator::pipeline::FlowMetrics;
+use crate::coordinator::scheduler::WorkerPool;
+use crate::optimizer::agent::{OptimizerAgent, StageDecision, StageShape};
+
+fn is_element_wise(kind: StageKind) -> bool {
+    matches!(kind, StageKind::Map | StageKind::Filter | StageKind::FlatMap)
+}
+
+/// The lowered plan: one placement per logical stage, plus the counts the
+/// report surfaces.
+#[derive(Clone, Debug)]
+pub struct PhysicalPlan {
+    /// Placement per logical stage, parallel to the recorded stage list.
+    pub decisions: Vec<StageDecision>,
+    /// Element-wise stages composed into a downstream map phase.
+    pub fused_ops: usize,
+    /// Reduce→stage handoffs that stream shard outputs.
+    pub streamed_handoffs: usize,
+}
+
+/// Lower a logical stage list to a physical plan via the agent's
+/// whole-plan pass. Plans are linear chains today, so "does this reduce
+/// follow a reduce" is simply "is there any upstream reduce stage".
+///
+/// Fusion is all-or-nothing per element-wise chain (a half-fused chain
+/// would still materialize), so one optimizer-off stage demotes its whole
+/// contiguous run before the agent decides — keeping the decisions, the
+/// plan report, and the agent's statistics faithful to what the executor
+/// actually does under mixed per-stage modes.
+pub fn lower(stages: &[StageInfo], agent: &OptimizerAgent) -> PhysicalPlan {
+    // Mark every element-wise stage whose contiguous run contains an
+    // optimizer-off stage.
+    let mut chain_off = vec![false; stages.len()];
+    let mut i = 0;
+    while i < stages.len() {
+        if is_element_wise(stages[i].kind) {
+            let start = i;
+            let mut any_off = false;
+            while i < stages.len() && is_element_wise(stages[i].kind) {
+                any_off |= matches!(stages[i].optimize, OptimizeMode::Off);
+                i += 1;
+            }
+            if any_off {
+                for flag in &mut chain_off[start..i] {
+                    *flag = true;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+
+    let mut shapes = Vec::with_capacity(stages.len());
+    let mut seen_reduce = false;
+    for (i, stage) in stages.iter().enumerate() {
+        shapes.push(match stage.kind {
+            StageKind::Source => StageShape::Source,
+            StageKind::Map | StageKind::Filter | StageKind::FlatMap => StageShape::ElementWise {
+                mode: if chain_off[i] {
+                    OptimizeMode::Off
+                } else {
+                    stage.optimize
+                },
+            },
+            StageKind::MapReduce => {
+                let shape = StageShape::Reduce {
+                    mode: stage.optimize,
+                    follows_reduce: seen_reduce,
+                };
+                seen_reduce = true;
+                shape
+            }
+        });
+    }
+    let decisions = agent.plan(&shapes);
+    let fused_ops = decisions
+        .iter()
+        .filter(|d| matches!(d, StageDecision::Fuse))
+        .count();
+    let streamed_handoffs = decisions
+        .iter()
+        .filter(|d| matches!(d, StageDecision::StreamInput))
+        .count();
+    PhysicalPlan {
+        decisions,
+        fused_ops,
+        streamed_handoffs,
+    }
+}
+
+/// Execution context for one plan run (one `collect` call): the session
+/// resources every stage shares, the lowered plan, and the running
+/// measurements.
+pub struct PlanExec<'rt> {
+    pub(crate) pool: &'rt WorkerPool,
+    pub(crate) agent: &'rt OptimizerAgent,
+    plan: PhysicalPlan,
+    stage_metrics: Vec<FlowMetrics>,
+    materialized: u64,
+}
+
+impl<'rt> PlanExec<'rt> {
+    pub(crate) fn new(
+        pool: &'rt WorkerPool,
+        agent: &'rt OptimizerAgent,
+        plan: PhysicalPlan,
+    ) -> Self {
+        PlanExec {
+            pool,
+            agent,
+            plan,
+            stage_metrics: Vec::new(),
+            materialized: 0,
+        }
+    }
+
+    /// True when every element-wise stage in `range` fuses into its
+    /// consumer (vacuously true for an empty chain — a direct handoff).
+    pub(crate) fn chain_fused(&self, range: &Range<usize>) -> bool {
+        range
+            .clone()
+            .all(|i| matches!(self.plan.decisions.get(i), Some(StageDecision::Fuse)))
+    }
+
+    /// True when the reduce stage at logical index `index` consumes its
+    /// upstream's shard outputs as a stream.
+    pub(crate) fn stream_input(&self, index: usize) -> bool {
+        matches!(
+            self.plan.decisions.get(index),
+            Some(StageDecision::StreamInput)
+        )
+    }
+
+    /// Record `n` elements materialized into a plan-level intermediate.
+    pub(crate) fn note_materialized(&mut self, n: u64) {
+        self.materialized += n;
+    }
+
+    /// Record one executed reduce stage's metrics.
+    pub(crate) fn push_metrics(&mut self, metrics: FlowMetrics) {
+        self.stage_metrics.push(metrics);
+    }
+
+    pub(crate) fn into_report(self) -> PlanReport {
+        PlanReport {
+            stage_metrics: self.stage_metrics,
+            fused_ops: self.plan.fused_ops,
+            streamed_handoffs: self.plan.streamed_handoffs,
+            materialized_pairs: self.materialized,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::OptimizeMode;
+
+    fn info(kind: StageKind, mode: OptimizeMode) -> StageInfo {
+        StageInfo {
+            kind,
+            name: "t".into(),
+            optimize: mode,
+        }
+    }
+
+    #[test]
+    fn lower_marks_fusion_and_streaming() {
+        let agent = OptimizerAgent::new();
+        let stages = [
+            info(StageKind::Source, OptimizeMode::Auto),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+            info(StageKind::Filter, OptimizeMode::Auto),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+        ];
+        let plan = lower(&stages, &agent);
+        assert_eq!(plan.fused_ops, 1);
+        assert_eq!(plan.streamed_handoffs, 1);
+        assert_eq!(plan.decisions[1], StageDecision::MaterializeInput);
+        assert_eq!(plan.decisions[3], StageDecision::StreamInput);
+    }
+
+    #[test]
+    fn lower_off_mode_is_fully_materialized() {
+        let agent = OptimizerAgent::new();
+        let stages = [
+            info(StageKind::Source, OptimizeMode::Off),
+            info(StageKind::MapReduce, OptimizeMode::Off),
+            info(StageKind::Map, OptimizeMode::Off),
+            info(StageKind::MapReduce, OptimizeMode::Off),
+        ];
+        let plan = lower(&stages, &agent);
+        assert_eq!(plan.fused_ops, 0);
+        assert_eq!(plan.streamed_handoffs, 0);
+    }
+
+    #[test]
+    fn mixed_mode_chain_is_demoted_whole() {
+        let agent = OptimizerAgent::new();
+        let stages = [
+            info(StageKind::Source, OptimizeMode::Auto),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+            info(StageKind::Map, OptimizeMode::Auto),
+            info(StageKind::Filter, OptimizeMode::Off),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+        ];
+        let plan = lower(&stages, &agent);
+        // One Off stage demotes the whole chain…
+        assert_eq!(plan.decisions[2], StageDecision::Materialize);
+        assert_eq!(plan.decisions[3], StageDecision::Materialize);
+        assert_eq!(plan.fused_ops, 0);
+        // …but the Auto reduce still streams its handoff: the chain
+        // stages, not the handoff, are what the Off stage governs.
+        assert_eq!(plan.decisions[4], StageDecision::StreamInput);
+        assert_eq!(plan.streamed_handoffs, 1);
+    }
+
+    #[test]
+    fn exec_chain_fused_is_vacuous_on_empty_ranges() {
+        let agent = OptimizerAgent::new();
+        let stages = [
+            info(StageKind::Source, OptimizeMode::Off),
+            info(StageKind::MapReduce, OptimizeMode::Off),
+        ];
+        let plan = lower(&stages, &agent);
+        let pool = WorkerPool::new(1);
+        let exec = PlanExec::new(&pool, &agent, plan);
+        assert!(exec.chain_fused(&(1..1)), "empty chain is a direct handoff");
+        assert!(!exec.stream_input(1));
+    }
+}

@@ -15,7 +15,10 @@
 //!   pool, a shared optimizer agent, and the simulated heap; jobs are
 //!   built with [`api::JobBuilder`], fed from any [`api::InputSource`]
 //!   (slices, vectors, streaming chunk generators, previous job outputs),
-//!   and chained/iterated through [`api::Runtime::pipeline`].
+//!   and chained/iterated through [`api::Runtime::pipeline`]. The lazy
+//!   dataflow surface, [`api::plan::Dataset`], records whole multi-stage
+//!   plans and executes them through the whole-plan optimizer (fusion +
+//!   shard streaming) at `collect()` time.
 //! * [`coordinator`] — work-stealing scheduler (batch + persistent pools),
 //!   input splitter, sharded intermediate collector, and the two
 //!   execution flows (reduce vs combine).
@@ -47,7 +50,7 @@ pub mod testkit;
 pub mod util;
 
 pub use api::{
-    Emitter, InputSource, JobBuilder, JobConfig, JobOutput, KeyValue, MapReduce, Mapper,
-    Pipeline, Reducer, Runtime,
+    Dataset, Emitter, InputSource, JobBuilder, JobConfig, JobOutput, KeyValue, MapReduce,
+    Mapper, Pipeline, PlanOutput, PlanReport, Reducer, Runtime,
 };
 pub use optimizer::agent::OptimizerAgent;

@@ -17,6 +17,7 @@ use super::analyze::{analyze, detect, Reject};
 use super::combiner::Combiner;
 use super::rir::Program;
 use super::transform::transform;
+use crate::api::config::OptimizeMode;
 use crate::util::timer::{Samples, Stopwatch};
 
 /// Outcome of processing one reducer class.
@@ -59,6 +60,50 @@ pub struct AgentStats {
     pub opaque: usize,
     /// Cache hits (class processed before).
     pub cache_hits: usize,
+    /// Whole-plan passes run ([`OptimizerAgent::plan`]).
+    pub plans: usize,
+    /// Element-wise stages fused into a downstream map phase.
+    pub fused_stages: usize,
+    /// Reduce→stage handoffs that streamed shard outputs.
+    pub streamed_handoffs: usize,
+}
+
+/// Whole-plan view of one logical stage, built by the planner
+/// ([`crate::coordinator::planner::lower`]) from the DAG a lazy
+/// [`crate::api::plan::Dataset`] records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageShape {
+    /// The plan's input source.
+    Source,
+    /// An element-wise operator (`map`/`filter`/`flat_map`).
+    ElementWise {
+        /// Optimizer mode captured when the stage was recorded.
+        mode: OptimizeMode,
+    },
+    /// A `map_reduce` stage. `follows_reduce` is true when its input is
+    /// the output of an upstream reduce stage (a streamable handoff).
+    Reduce {
+        mode: OptimizeMode,
+        follows_reduce: bool,
+    },
+}
+
+/// Physical placement the whole-plan pass picks for one logical stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageDecision {
+    /// Nothing to decide (source stages).
+    Input,
+    /// Element-wise op composed into the downstream map phase — no
+    /// intermediate `Vec` between the op and the consumer.
+    Fuse,
+    /// Element-wise op materializes its output (optimizer off).
+    Materialize,
+    /// Reduce stage consuming the upstream stage's shard outputs as a
+    /// stream, skipping the `JobOutput` round-trip.
+    StreamInput,
+    /// Reduce stage consuming a materialized input (plan heads, or
+    /// optimizer off).
+    MaterializeInput,
 }
 
 /// The agent. Cheap to clone (shared internals), thread-safe.
@@ -126,6 +171,59 @@ impl OptimizerAgent {
             .cache
             .insert(program.name.clone(), decision.clone());
         decision
+    }
+
+    /// The whole-plan pass: given the logical stages of a lazy plan,
+    /// decide each stage's physical placement. This generalizes the
+    /// per-class rewrite (paper §3: swap the emitter implementation
+    /// behind an unchanged API) to the plan level:
+    ///
+    /// * element-wise stages fuse into the next map phase, so no
+    ///   intermediate `Vec` is materialized between them and their
+    ///   consumer (unless the stage was recorded with the optimizer off);
+    /// * a reduce stage that feeds another stage hands its shard outputs
+    ///   over as a stream, skipping the `JobOutput` round-trip.
+    ///
+    /// Per-reduce-stage combiner insertion is *not* decided here — it
+    /// stays on the per-class [`OptimizerAgent::process`] path, which the
+    /// stage executor consults exactly as eager jobs do.
+    ///
+    /// Like everything else the agent does, this runs transparently: the
+    /// application records `map`/`filter`/`map_reduce` calls and never
+    /// sees the placement.
+    pub fn plan(&self, stages: &[StageShape]) -> Vec<StageDecision> {
+        let mut decisions = Vec::with_capacity(stages.len());
+        let mut fused = 0usize;
+        let mut streamed = 0usize;
+        for stage in stages {
+            decisions.push(match stage {
+                StageShape::Source => StageDecision::Input,
+                StageShape::ElementWise { mode } => {
+                    if matches!(mode, OptimizeMode::Off) {
+                        StageDecision::Materialize
+                    } else {
+                        fused += 1;
+                        StageDecision::Fuse
+                    }
+                }
+                StageShape::Reduce {
+                    mode,
+                    follows_reduce,
+                } => {
+                    if *follows_reduce && !matches!(mode, OptimizeMode::Off) {
+                        streamed += 1;
+                        StageDecision::StreamInput
+                    } else {
+                        StageDecision::MaterializeInput
+                    }
+                }
+            });
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.plans += 1;
+        inner.stats.fused_stages += fused;
+        inner.stats.streamed_handoffs += streamed;
+        decisions
     }
 
     /// Record an opaque (closure) reducer passing the registration hook.
@@ -197,6 +295,70 @@ mod tests {
             s.detection.mean(),
             s.transformation.mean()
         );
+    }
+
+    #[test]
+    fn whole_plan_pass_fuses_and_streams() {
+        use crate::api::config::OptimizeMode;
+        let agent = OptimizerAgent::new();
+        let shape = [
+            StageShape::Source,
+            StageShape::Reduce {
+                mode: OptimizeMode::Auto,
+                follows_reduce: false,
+            },
+            StageShape::ElementWise {
+                mode: OptimizeMode::Auto,
+            },
+            StageShape::Reduce {
+                mode: OptimizeMode::Auto,
+                follows_reduce: true,
+            },
+        ];
+        let d = agent.plan(&shape);
+        assert_eq!(
+            d,
+            vec![
+                StageDecision::Input,
+                StageDecision::MaterializeInput,
+                StageDecision::Fuse,
+                StageDecision::StreamInput,
+            ]
+        );
+        let s = agent.stats();
+        assert_eq!((s.plans, s.fused_stages, s.streamed_handoffs), (1, 1, 1));
+    }
+
+    #[test]
+    fn whole_plan_pass_respects_optimizer_off() {
+        use crate::api::config::OptimizeMode;
+        let agent = OptimizerAgent::new();
+        let shape = [
+            StageShape::Source,
+            StageShape::ElementWise {
+                mode: OptimizeMode::Off,
+            },
+            StageShape::Reduce {
+                mode: OptimizeMode::Off,
+                follows_reduce: false,
+            },
+            StageShape::Reduce {
+                mode: OptimizeMode::Off,
+                follows_reduce: true,
+            },
+        ];
+        let d = agent.plan(&shape);
+        assert_eq!(
+            d,
+            vec![
+                StageDecision::Input,
+                StageDecision::Materialize,
+                StageDecision::MaterializeInput,
+                StageDecision::MaterializeInput,
+            ]
+        );
+        assert_eq!(agent.stats().fused_stages, 0);
+        assert_eq!(agent.stats().streamed_handoffs, 0);
     }
 
     #[test]

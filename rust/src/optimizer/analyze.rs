@@ -29,33 +29,51 @@ pub enum Idiom {
 
 /// Why a reducer cannot be transformed. Each variant is exercised by a
 /// dedicated negative test — rejection is a feature, not an error path.
-#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub enum Reject {
-    #[error("no loop over the intermediate values and no recognized idiom")]
     NoLoopNoIdiom,
-    #[error("more than one loop over the values")]
     MultipleLoops,
-    #[error("early exit from the values loop (does not cover all values)")]
     EarlyExit,
-    #[error("emit inside the values loop (not a fold)")]
     EmitInLoop,
-    #[error("initialization has an external data dependency")]
     ExternInInit,
-    #[error("initialization depends on the key")]
     KeyInInit,
-    #[error("loop body depends on {0}")]
     BodyBadSource(String),
-    #[error("loop body consumes stack values produced before the loop")]
     StackCarriedIntoLoop,
-    #[error("finalization depends on {0}")]
     FinalBadSource(String),
-    #[error("no emit after the loop")]
     NoFinalEmit,
-    #[error("multiple emits in finalization (only single-result reducers combine)")]
     MultipleFinalEmits,
-    #[error("malformed program: {0}")]
     Malformed(String),
 }
+
+impl std::fmt::Display for Reject {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Reject::NoLoopNoIdiom => {
+                write!(f, "no loop over the intermediate values and no recognized idiom")
+            }
+            Reject::MultipleLoops => write!(f, "more than one loop over the values"),
+            Reject::EarlyExit => {
+                write!(f, "early exit from the values loop (does not cover all values)")
+            }
+            Reject::EmitInLoop => write!(f, "emit inside the values loop (not a fold)"),
+            Reject::ExternInInit => write!(f, "initialization has an external data dependency"),
+            Reject::KeyInInit => write!(f, "initialization depends on the key"),
+            Reject::BodyBadSource(src) => write!(f, "loop body depends on {src}"),
+            Reject::StackCarriedIntoLoop => {
+                write!(f, "loop body consumes stack values produced before the loop")
+            }
+            Reject::FinalBadSource(src) => write!(f, "finalization depends on {src}"),
+            Reject::NoFinalEmit => write!(f, "no emit after the loop"),
+            Reject::MultipleFinalEmits => write!(
+                f,
+                "multiple emits in finalization (only single-result reducers combine)"
+            ),
+            Reject::Malformed(msg) => write!(f, "malformed program: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Reject {}
 
 /// A successful analysis: the slice boundaries and inferred holder type.
 #[derive(Clone, Debug, PartialEq)]

@@ -130,14 +130,32 @@ pub fn cur() -> Expr {
 }
 
 /// Compile-time errors for specs (beyond RIR structural verification).
-#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum SpecError {
-    #[error("update rule targets accumulator {0} but only {1} are declared")]
     UnknownAcc(u8, usize),
-    #[error("`Cur` used outside an update rule")]
     CurOutsideUpdate,
-    #[error("compiled program failed verification: {0}")]
-    Verify(#[from] VerifyError),
+    Verify(VerifyError),
+}
+
+impl std::fmt::Display for SpecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpecError::UnknownAcc(acc, n) => write!(
+                f,
+                "update rule targets accumulator {acc} but only {n} are declared"
+            ),
+            SpecError::CurOutsideUpdate => write!(f, "`Cur` used outside an update rule"),
+            SpecError::Verify(e) => write!(f, "compiled program failed verification: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+impl From<VerifyError> for SpecError {
+    fn from(e: VerifyError) -> Self {
+        SpecError::Verify(e)
+    }
 }
 
 /// A declarative reducer: `init` accumulators, apply `update` rules per

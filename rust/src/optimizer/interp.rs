@@ -12,19 +12,33 @@ use super::value::{TypeError, Val};
 
 /// Evaluation errors (verified programs over well-typed inputs do not hit
 /// these; they guard tests and fuzzing).
-#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum EvalError {
-    #[error("type error at pc {pc}: {err}")]
     Type { pc: usize, err: TypeError },
-    #[error("stack underflow at pc {pc}")]
     Underflow { pc: usize },
-    #[error("ValuesFirst/ValuesIndex on empty or out-of-range value list at pc {pc}")]
     BadIndex { pc: usize },
-    #[error("LoadExtern({slot}) with no such extern at pc {pc}")]
     BadExtern { pc: usize, slot: u8 },
-    #[error("BreakIf on non-boolean at pc {pc}")]
     BadCondition { pc: usize },
 }
+
+impl std::fmt::Display for EvalError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EvalError::Type { pc, err } => write!(f, "type error at pc {pc}: {err}"),
+            EvalError::Underflow { pc } => write!(f, "stack underflow at pc {pc}"),
+            EvalError::BadIndex { pc } => write!(
+                f,
+                "ValuesFirst/ValuesIndex on empty or out-of-range value list at pc {pc}"
+            ),
+            EvalError::BadExtern { pc, slot } => {
+                write!(f, "LoadExtern({slot}) with no such extern at pc {pc}")
+            }
+            EvalError::BadCondition { pc } => write!(f, "BreakIf on non-boolean at pc {pc}"),
+        }
+    }
+}
+
+impl std::error::Error for EvalError {}
 
 /// The execution context for one `reduce(key, values, emitter)` call.
 pub struct ReduceCtx<'a> {

@@ -31,7 +31,11 @@
 //! [`agent`] is the Java-agent analogue: it intercepts every reducer
 //! registration, runs detection + transformation, caches the result per
 //! reducer class, and records the per-class timing the paper reports in
-//! §4.3 (81 µs detection / 7.6 ms transformation).
+//! §4.3 (81 µs detection / 7.6 ms transformation). Since the lazy-plan
+//! redesign it also runs a **whole-plan pass**
+//! ([`agent::OptimizerAgent::plan`]): given a [`crate::api::plan::Dataset`]'s
+//! logical stages, it decides element-wise fusion and reduce-handoff
+//! streaming — the cross-stage placements a per-class view cannot see.
 
 pub mod agent;
 pub mod analyze;

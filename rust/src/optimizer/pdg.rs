@@ -43,11 +43,22 @@ pub struct Pdg {
 }
 
 /// Errors only malformed (unverified) programs can produce.
-#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum PdgError {
-    #[error("stack underflow during abstract interpretation at pc {0}")]
     Underflow(usize),
 }
+
+impl std::fmt::Display for PdgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PdgError::Underflow(pc) => {
+                write!(f, "stack underflow during abstract interpretation at pc {pc}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PdgError {}
 
 /// Build the PDG for a straight-line region `[lo, hi)` of `prog`
 /// (loop markers inside are skipped as no-ops; the analyzer calls this per

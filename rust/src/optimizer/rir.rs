@@ -142,21 +142,38 @@ pub struct Program {
 
 /// Structural validation errors (malformed programs are refused before
 /// they reach the interpreter or the analyzer).
-#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum VerifyError {
-    #[error("nested or unmatched loop construct at pc {0}")]
     BadLoopNesting(usize),
-    #[error("LoadCur/BreakIf outside loop at pc {0}")]
     CurOutsideLoop(usize),
-    #[error("stack underflow at pc {0}")]
     Underflow(usize),
-    #[error("program leaves {0} operands on the stack")]
     UnbalancedStack(usize),
-    #[error("local {0} exceeds declared n_locals {1}")]
     BadLocal(u8, u8),
-    #[error("program has no Emit")]
     NoEmit,
 }
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VerifyError::BadLoopNesting(pc) => {
+                write!(f, "nested or unmatched loop construct at pc {pc}")
+            }
+            VerifyError::CurOutsideLoop(pc) => {
+                write!(f, "LoadCur/BreakIf outside loop at pc {pc}")
+            }
+            VerifyError::Underflow(pc) => write!(f, "stack underflow at pc {pc}"),
+            VerifyError::UnbalancedStack(n) => {
+                write!(f, "program leaves {n} operands on the stack")
+            }
+            VerifyError::BadLocal(local, n) => {
+                write!(f, "local {local} exceeds declared n_locals {n}")
+            }
+            VerifyError::NoEmit => write!(f, "program has no Emit"),
+        }
+    }
+}
+
+impl std::error::Error for VerifyError {}
 
 impl Program {
     pub fn new(name: impl Into<String>, code: Vec<Instr>, n_locals: u8) -> Self {

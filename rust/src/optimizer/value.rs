@@ -137,19 +137,28 @@ impl HeapSized for Val {
 }
 
 /// Type errors surfaced by RIR evaluation.
-#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum TypeError {
-    #[error("`{0}` not defined for ({1:?}, {2:?})")]
     Binary(&'static str, Ty, Ty),
-    #[error("vector length mismatch: {0} vs {1}")]
     VecLen(usize, usize),
-    #[error("integer division by zero")]
     DivZero,
-    #[error("expected {0:?}, found {1:?}")]
     Expected(Ty, Ty),
-    #[error("stack underflow")]
     Underflow,
 }
+
+impl std::fmt::Display for TypeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TypeError::Binary(op, a, b) => write!(f, "`{op}` not defined for ({a:?}, {b:?})"),
+            TypeError::VecLen(a, b) => write!(f, "vector length mismatch: {a} vs {b}"),
+            TypeError::DivZero => write!(f, "integer division by zero"),
+            TypeError::Expected(want, got) => write!(f, "expected {want:?}, found {got:?}"),
+            TypeError::Underflow => write!(f, "stack underflow"),
+        }
+    }
+}
+
+impl std::error::Error for TypeError {}
 
 /// User value types convertible to and from [`Val`] — the bound the
 /// combining flow needs on `V`. This plays the role of Java's boxing: the

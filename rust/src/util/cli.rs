@@ -32,17 +32,26 @@ pub struct Args {
 }
 
 /// Error from parsing; `Help` means `--help` was requested.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("{0}")]
     Help(String),
-    #[error("unknown flag `{0}`")]
     UnknownFlag(String),
-    #[error("flag `--{0}` requires a value")]
     MissingValue(&'static str),
-    #[error("invalid value for `--{flag}`: {msg}")]
     BadValue { flag: &'static str, msg: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Help(h) => write!(f, "{h}"),
+            CliError::UnknownFlag(flag) => write!(f, "unknown flag `{flag}`"),
+            CliError::MissingValue(flag) => write!(f, "flag `--{flag}` requires a value"),
+            CliError::BadValue { flag, msg } => write!(f, "invalid value for `--{flag}`: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Cli {
     pub fn new(bin: &'static str, about: &'static str) -> Self {

@@ -1,0 +1,245 @@
+//! Lazy-plan vs eager-job equivalence — the acceptance suite of the
+//! dataflow redesign.
+//!
+//! For word count, histogram, and a three-stage chained pipeline, driving
+//! the workload through the lazy `Dataset` plan API and through the PR 1
+//! `JobBuilder` path must produce **pair-for-pair identical** results and
+//! identical `ExecutionFlow` decisions under every optimizer mode
+//! (`Auto`, `Off`, `GenericOnly`).
+//!
+//! And the plan-level rewrites must be observable: on the chained
+//! workload, the fused/streamed plan reports fewer materialized
+//! intermediate pairs (via `FlowMetrics::materialized_in`) than the
+//! unfused plan — while producing identical output.
+
+use mr4r::api::config::{ExecutionFlow, OptimizeMode};
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::{Emitter, JobConfig, KeyValue, Runtime};
+use mr4r::benchmarks::{datagen, histogram, word_count, Backend};
+use mr4r::optimizer::builder::canon;
+
+const MODES: [OptimizeMode; 3] = [
+    OptimizeMode::Auto,
+    OptimizeMode::Off,
+    OptimizeMode::GenericOnly,
+];
+
+fn expected_flow(mode: OptimizeMode) -> ExecutionFlow {
+    match mode {
+        OptimizeMode::Off => ExecutionFlow::Reduce,
+        _ => ExecutionFlow::Combine,
+    }
+}
+
+fn sorted_tuples<K: Ord + Clone, V: Clone>(kv: &[KeyValue<K, V>]) -> Vec<(K, V)> {
+    let mut out: Vec<(K, V)> = kv
+        .iter()
+        .map(|p| (p.key.clone(), p.value.clone()))
+        .collect();
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    out
+}
+
+#[test]
+fn word_count_plan_matches_job_builder_pair_for_pair() {
+    let lines = datagen::wordcount_text(0.0003, 901);
+    let rt = Runtime::fast();
+    for mode in MODES {
+        let cfg = JobConfig::fast().with_threads(3).with_optimize(mode);
+
+        let job = rt
+            .job(word_count::map_line, word_count::reducer())
+            .with_config(cfg.clone())
+            .run(&lines);
+
+        let plan = rt
+            .dataset(&lines)
+            .with_config(cfg.clone())
+            .map_reduce(word_count::map_line, word_count::reducer())
+            .collect();
+
+        assert_eq!(job.metrics().flow, expected_flow(mode), "{mode:?}");
+        assert_eq!(plan.metrics().flow, job.metrics().flow, "{mode:?}");
+        assert_eq!(
+            sorted_tuples(&plan.items),
+            sorted_tuples(&job.pairs),
+            "word count differs under {mode:?}"
+        );
+    }
+}
+
+#[test]
+fn histogram_plan_matches_job_builder_pair_for_pair() {
+    let pixels = datagen::histogram_pixels(0.0001, 902);
+    let backend = Backend::Native;
+    let rt = Runtime::fast();
+    for mode in MODES {
+        let cfg = JobConfig::fast().with_threads(3).with_optimize(mode);
+        let chunks = histogram::chunk_pixels(&pixels);
+
+        let job = rt
+            .job(histogram::mapper(backend.clone()), histogram::reducer())
+            .with_config(cfg.clone())
+            .run(&chunks);
+
+        let plan = rt
+            .dataset(&chunks)
+            .with_config(cfg.clone())
+            .map_reduce(histogram::mapper(backend.clone()), histogram::reducer())
+            .collect();
+
+        assert_eq!(job.metrics().flow, expected_flow(mode), "{mode:?}");
+        assert_eq!(plan.metrics().flow, job.metrics().flow, "{mode:?}");
+        assert_eq!(
+            sorted_tuples(&plan.items),
+            sorted_tuples(&job.pairs),
+            "histogram differs under {mode:?}"
+        );
+    }
+}
+
+// --- The chained workload: word counts → keep repeated words → count
+// frequency histogram → weighted total. Three reduce stages with
+// element-wise stages between them, all in i64 so equality is exact. ---
+
+fn hist_mapper(kv: &KeyValue<String, i64>, em: &mut dyn Emitter<i64, i64>) {
+    em.emit(kv.value, 1);
+}
+
+fn total_mapper(kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>) {
+    em.emit(0, kv.key * kv.value);
+}
+
+fn chained_plan(
+    rt: &Runtime,
+    lines: &[String],
+    mode: OptimizeMode,
+) -> mr4r::PlanOutput<KeyValue<i64, i64>> {
+    rt.dataset(lines)
+        .with_config(JobConfig::fast().with_threads(3).with_optimize(mode))
+        .map_reduce(
+            word_count::map_line,
+            RirReducer::<String, i64>::new(canon::sum_i64("pe.wc")),
+        )
+        .filter(|kv: &KeyValue<String, i64>| kv.value > 1)
+        .map_reduce(
+            hist_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("pe.hist")),
+        )
+        .map(|kv: &KeyValue<i64, i64>| KeyValue::new(kv.key, kv.value))
+        .map_reduce(
+            total_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("pe.total")),
+        )
+        .collect_sorted()
+}
+
+/// The same three stages on the eager PR 1 surface: each stage a
+/// `JobBuilder` run, each boundary a materialized `Vec`.
+fn chained_jobs(rt: &Runtime, lines: &[String], mode: OptimizeMode) -> Vec<(i64, i64)> {
+    let cfg = JobConfig::fast().with_threads(3).with_optimize(mode);
+    let wc = rt
+        .job(
+            word_count::map_line,
+            RirReducer::<String, i64>::new(canon::sum_i64("pe.wc")),
+        )
+        .with_config(cfg.clone())
+        .run(lines);
+    let filtered: Vec<KeyValue<String, i64>> = wc
+        .pairs
+        .into_iter()
+        .filter(|kv| kv.value > 1)
+        .collect();
+    let hist = rt
+        .job(
+            hist_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("pe.hist")),
+        )
+        .with_config(cfg.clone())
+        .run(&filtered);
+    let mapped: Vec<KeyValue<i64, i64>> = hist
+        .pairs
+        .iter()
+        .map(|kv| KeyValue::new(kv.key, kv.value))
+        .collect();
+    let total = rt
+        .job(
+            total_mapper,
+            RirReducer::<i64, i64>::new(canon::sum_i64("pe.total")),
+        )
+        .with_config(cfg)
+        .run(&mapped);
+    sorted_tuples(&total.pairs)
+}
+
+#[test]
+fn chained_pipeline_plan_matches_job_builder_under_all_modes() {
+    let lines = datagen::wordcount_text(0.0003, 903);
+    let rt = Runtime::fast();
+    for mode in MODES {
+        let plan = chained_plan(&rt, &lines, mode);
+        let jobs = chained_jobs(&rt, &lines, mode);
+
+        assert_eq!(
+            sorted_tuples(&plan.items),
+            jobs,
+            "chained pipeline differs under {mode:?}"
+        );
+        assert_eq!(plan.report.stage_metrics.len(), 3);
+        for (i, m) in plan.report.stage_metrics.iter().enumerate() {
+            assert_eq!(m.flow, expected_flow(mode), "stage {i} under {mode:?}");
+        }
+    }
+}
+
+#[test]
+fn fused_plan_materializes_fewer_intermediate_pairs() {
+    let lines = datagen::wordcount_text(0.0003, 904);
+    let rt = Runtime::fast();
+
+    let fused = chained_plan(&rt, &lines, OptimizeMode::Auto);
+    let unfused = chained_plan(&rt, &lines, OptimizeMode::Off);
+
+    assert_eq!(
+        fused.items, unfused.items,
+        "plan rewrites must not change results"
+    );
+
+    let materialized = |out: &mr4r::PlanOutput<KeyValue<i64, i64>>| -> u64 {
+        out.report
+            .stage_metrics
+            .iter()
+            .map(|m| m.materialized_in)
+            .sum()
+    };
+    let fused_pairs = materialized(&fused);
+    let unfused_pairs = materialized(&unfused);
+    assert_eq!(fused_pairs, 0, "fused/streamed plan round-trips nothing");
+    assert!(
+        fused_pairs < unfused_pairs,
+        "fused plan must materialize fewer intermediate pairs: {fused_pairs} vs {unfused_pairs}"
+    );
+    assert_eq!(
+        unfused_pairs, unfused.report.materialized_pairs,
+        "plan report totals the per-stage FlowMetrics"
+    );
+
+    // The plan report mirrors the decisions.
+    assert_eq!(fused.report.fused_ops, 2, "filter + map fused");
+    assert_eq!(fused.report.streamed_handoffs, 2, "two reduce→reduce handoffs");
+    assert_eq!(unfused.report.fused_ops, 0);
+    assert_eq!(unfused.report.streamed_handoffs, 0);
+}
+
+#[test]
+fn generic_only_plan_still_fuses_and_streams() {
+    let lines = datagen::wordcount_text(0.0002, 905);
+    let rt = Runtime::fast();
+    let out = chained_plan(&rt, &lines, OptimizeMode::GenericOnly);
+    assert_eq!(out.report.fused_ops, 2);
+    assert_eq!(out.report.streamed_handoffs, 2);
+    assert_eq!(out.report.materialized_pairs, 0);
+    for m in &out.report.stage_metrics {
+        assert_eq!(m.flow, ExecutionFlow::Combine);
+    }
+}
