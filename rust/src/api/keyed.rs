@@ -1,0 +1,827 @@
+//! Keyed dataset algebra — **declared** semantics for aggregation.
+//!
+//! The paper's optimizer (§3) *infers* a combiner from the reducer's
+//! bytecode: detection finds the fold, slicing splits it into
+//! `initialize`/`combine`/`finalize` (Fig. 4), and the emitter swap runs
+//! it during the map phase. That channel only reaches reducers authored
+//! in RIR — native closures are opaque and "always take the unoptimized
+//! flow". Casper and the Spark keyed algebra show the same semantic facts
+//! can simply be *declared* at the API layer. This module is that second
+//! channel:
+//!
+//! * [`Aggregator`] is the user-declared holder triple. Its three methods
+//!   map one-to-one onto the paper's Fig. 4 generated methods —
+//!   [`Aggregator::init`] ↔ `initialize()` (the holder for values),
+//!   [`Aggregator::combine`] ↔ `combine(holder, value)` (the fold body),
+//!   [`Aggregator::finish`] ↔ `finalize(holder)` (holder → result) —
+//!   plus the [`Aggregator::ASSOCIATIVE`]/[`Aggregator::COMMUTATIVE`]
+//!   markers standing in for everything the inferred channel's PDG
+//!   analysis has to prove.
+//! * [`KeyedDataset`] is the typed keyed view of a lazy pair
+//!   [`Dataset`]: [`Dataset::key_by`]/[`Dataset::keyed`] open it;
+//!   [`KeyedDataset::map_values`], [`KeyedDataset::group_by_key`],
+//!   [`KeyedDataset::count_by_key`], [`KeyedDataset::reduce_by_key`] and
+//!   [`KeyedDataset::aggregate_by_key`] record keyed stages; two-input
+//!   [`KeyedDataset::join`]/[`KeyedDataset::co_group`] merge keyed plans.
+//!
+//! At collect time a keyed stage lowers like any reduce barrier (fusion,
+//! shard streaming), and the agent's declared channel
+//! ([`process_declared`](crate::optimizer::agent::OptimizerAgent::process_declared))
+//! decides the flow: an associative + commutative aggregator runs the
+//! **in-map combining flow** — workers fold pairs into a sharded table of
+//! unboxed typed holders and the shuffle ships *one holder per key*
+//! instead of every emitted pair; anything else (or `OptimizeMode::Off`)
+//! collects value lists and folds after the barrier. Results are
+//! identical either way; `FlowMetrics::{shuffled_pairs, shuffled_holders,
+//! shuffled_bytes}` and `FlowMetrics::combiner_source`
+//! ([`CombinerSource::Declared`](crate::optimizer::agent::CombinerSource)
+//! vs `Inferred`) report which channel fired and what it saved.
+//!
+//! ```ignore
+//! let rt = Runtime::new();
+//! let per_region = rt
+//!     .dataset(&clicks)                 // (user, url) pairs
+//!     .keyed()
+//!     .join(rt.dataset(&users).keyed()) // (user, (url, region))
+//!     .map(|kv| (kv.value.1.clone(), 1i64))
+//!     .keyed()
+//!     .reduce_by_key(|a, b| a + b)      // declared associative sum
+//!     .collect_sorted();
+//! assert_eq!(per_region.metrics().combiner_source,
+//!            Some(CombinerSource::Declared));
+//! ```
+
+use std::hash::Hash;
+use std::marker::PhantomData;
+use std::ops::Range;
+use std::sync::Arc;
+
+use super::config::{JobConfig, OptimizeMode};
+use super::plan::{
+    apply_chain, Base, Chain, Dataset, PlanOutput, PlanStage, StageInfo, StageKind,
+};
+use super::source::Feed;
+use super::traits::{HeapSized, KeyValue};
+use crate::coordinator::collector::shard_count;
+use crate::coordinator::pipeline::{concat_shards, run_keyed_sharded};
+use crate::coordinator::planner::PlanExec;
+use crate::util::hash::{fxhash, FxHashMap};
+
+// ---------------------------------------------------------------------
+// The declared holder triple
+// ---------------------------------------------------------------------
+
+/// A user-declared combiner: the paper's Fig. 4 `initialize`/`combine`/
+/// `finalize` triple, written by hand instead of sliced from bytecode.
+///
+/// `V` is the emitted value type, `H` the holder (intermediate state),
+/// `O` the finished result. The two `const` markers are the declaration
+/// the optimizer acts on: the in-map combining flow folds values in
+/// whatever order worker emits interleave, so it is granted only when the
+/// fold is declared **associative and commutative**. Declaring a marker
+/// the fold does not honour yields nondeterministic results — the same
+/// contract Spark places on `reduceByKey`.
+pub trait Aggregator<V, H, O>: Send + Sync {
+    /// `combine` may be regrouped: fold(fold(a, b), c) ≡ fold(a, fold(b, c)).
+    const ASSOCIATIVE: bool;
+    /// `combine` may be reordered across values of one key.
+    const COMMUTATIVE: bool;
+
+    /// `initialize()` — a fresh holder (created once per distinct key).
+    fn init(&self) -> H;
+
+    /// `combine(holder, value)` — fold one value into the holder.
+    fn combine(&self, holder: &mut H, value: V);
+
+    /// `finalize(holder)` — convert the holder into its final form.
+    fn finish(&self, holder: H) -> O;
+
+    /// Stable name for the agent's bookkeeping (the class-name analogue).
+    fn name(&self) -> &str {
+        "declared-aggregator"
+    }
+}
+
+/// [`KeyedDataset::reduce_by_key`]'s aggregator: the holder is the
+/// running merge of the key's values (`None` until the first one).
+pub struct Merge<F> {
+    f: F,
+}
+
+impl<F> Merge<F> {
+    pub fn new(f: F) -> Self {
+        Merge { f }
+    }
+}
+
+impl<V, F> Aggregator<V, Option<V>, V> for Merge<F>
+where
+    V: Send + Sync,
+    F: Fn(V, V) -> V + Send + Sync,
+{
+    // Declared by `reduce_by_key`'s API contract: the merge function must
+    // be associative and commutative (document-level, Spark-style).
+    const ASSOCIATIVE: bool = true;
+    const COMMUTATIVE: bool = true;
+
+    fn init(&self) -> Option<V> {
+        None
+    }
+
+    fn combine(&self, holder: &mut Option<V>, value: V) {
+        *holder = Some(match holder.take() {
+            None => value,
+            Some(acc) => (self.f)(acc, value),
+        });
+    }
+
+    fn finish(&self, holder: Option<V>) -> V {
+        holder.expect("holders are only created on first combine")
+    }
+
+    fn name(&self) -> &str {
+        "keyed.merge"
+    }
+}
+
+/// [`KeyedDataset::group_by_key`]'s aggregator. Concatenation is
+/// associative but **not** commutative (element order matters), so the
+/// agent never grants it the combining flow — grouped values always
+/// collect as lists, exactly like Spark's `groupByKey` never map-combines.
+pub struct Group;
+
+impl<V: Send + Sync> Aggregator<V, Vec<V>, Vec<V>> for Group {
+    const ASSOCIATIVE: bool = true;
+    const COMMUTATIVE: bool = false;
+
+    fn init(&self) -> Vec<V> {
+        Vec::new()
+    }
+
+    fn combine(&self, holder: &mut Vec<V>, value: V) {
+        holder.push(value);
+    }
+
+    fn finish(&self, holder: Vec<V>) -> Vec<V> {
+        holder
+    }
+
+    fn name(&self) -> &str {
+        "keyed.group"
+    }
+}
+
+/// [`KeyedDataset::count_by_key`]'s aggregator: values are ignored, the
+/// holder is the count (the COUNT idiom, declared).
+pub struct Count;
+
+impl<V: Send + Sync> Aggregator<V, i64, i64> for Count {
+    const ASSOCIATIVE: bool = true;
+    const COMMUTATIVE: bool = true;
+
+    fn init(&self) -> i64 {
+        0
+    }
+
+    fn combine(&self, holder: &mut i64, _value: V) {
+        *holder += 1;
+    }
+
+    fn finish(&self, holder: i64) -> i64 {
+        holder
+    }
+
+    fn name(&self) -> &str {
+        "keyed.count"
+    }
+}
+
+// ---------------------------------------------------------------------
+// Opening a keyed view
+// ---------------------------------------------------------------------
+
+impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
+    /// Key every element by `f`, keeping the element as the value
+    /// (Spark's `keyBy`). Records an element-wise stage, so it fuses into
+    /// the downstream keyed barrier like any `map`.
+    pub fn key_by<K: 'rt>(
+        self,
+        f: impl Fn(&T) -> K + Send + Sync + 'rt,
+    ) -> KeyedDataset<'rt, K, T, B>
+    where
+        T: Clone,
+    {
+        KeyedDataset {
+            inner: self.map_named("key_by", move |t| (f(t), t.clone())),
+        }
+    }
+}
+
+impl<'rt, K: 'rt, V: 'rt, B: 'rt> Dataset<'rt, (K, V), B> {
+    /// View a pair dataset as keyed. Records no stage — the keyed view is
+    /// free; only the aggregations that follow are plan barriers.
+    pub fn keyed(self) -> KeyedDataset<'rt, K, V, B> {
+        KeyedDataset { inner: self }
+    }
+}
+
+/// A lazy, typed **keyed** dataflow handle over `(K, V)` pairs — the
+/// aggregation surface of the plan API. Built by [`Dataset::key_by`] /
+/// [`Dataset::keyed`]; executes nothing until a terminal aggregation's
+/// `collect()`. See the [module docs](self) for the declared-semantics
+/// contract.
+pub struct KeyedDataset<'rt, K, V, B = (K, V)> {
+    inner: Dataset<'rt, (K, V), B>,
+}
+
+impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedDataset<'rt, K, V, B> {
+    /// Logical stages recorded so far.
+    pub fn stages(&self) -> &[StageInfo] {
+        self.inner.stages()
+    }
+
+    /// Configuration applied to stages recorded from now on.
+    pub fn config(&self) -> &JobConfig {
+        self.inner.config()
+    }
+
+    pub fn with_config(self, config: JobConfig) -> Self {
+        KeyedDataset {
+            inner: self.inner.with_config(config),
+        }
+    }
+
+    pub fn optimize(self, mode: OptimizeMode) -> Self {
+        KeyedDataset {
+            inner: self.inner.optimize(mode),
+        }
+    }
+
+    pub fn threads(self, n: usize) -> Self {
+        KeyedDataset {
+            inner: self.inner.threads(n),
+        }
+    }
+
+    /// Drop back to the plain pair dataset.
+    pub fn into_pairs(self) -> Dataset<'rt, (K, V), B> {
+        self.inner
+    }
+
+    /// Transform values, keeping keys (element-wise; fuses downstream).
+    pub fn map_values<W: 'rt>(
+        self,
+        f: impl Fn(&V) -> W + Send + Sync + 'rt,
+    ) -> KeyedDataset<'rt, K, W, B>
+    where
+        K: Clone,
+    {
+        KeyedDataset {
+            inner: self
+                .inner
+                .map_named("map_values", move |p: &(K, V)| (p.0.clone(), f(&p.1))),
+        }
+    }
+
+    /// The general keyed barrier: fold each key's values through a
+    /// declared [`Aggregator`]. This is where the plan records a
+    /// [`StageKind::KeyedAggregate`] stage; whether it runs the in-map
+    /// combining flow is the agent's decision at collect time.
+    pub fn aggregate_by_key<H, O, A>(self, agg: A) -> Dataset<'rt, KeyValue<K, O>>
+    where
+        B: Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + HeapSized,
+        V: Clone + Send + Sync + HeapSized,
+        H: Send + HeapSized + 'rt,
+        O: Send + HeapSized + 'rt,
+        A: Aggregator<V, H, O> + 'rt,
+    {
+        let Dataset {
+            rt,
+            base,
+            chain,
+            mut stages,
+            chain_start,
+            config,
+        } = self.inner;
+        let index = stages.len();
+        stages.push(StageInfo {
+            kind: StageKind::KeyedAggregate,
+            name: agg.name().to_string(),
+            optimize: config.optimize,
+        });
+        let stage = KeyedStage {
+            base,
+            chain,
+            chain_range: chain_start..index,
+            index,
+            agg: Arc::new(agg),
+            cfg: config.clone(),
+            _out: PhantomData,
+        };
+        Dataset {
+            rt,
+            base: Base::Stage(Box::new(stage)),
+            chain: Chain::direct(),
+            chain_start: stages.len(),
+            stages,
+            config,
+        }
+    }
+
+    /// Fold each key's values with an **associative, commutative** merge
+    /// (Spark's `reduceByKey`). The declaration is the API contract; the
+    /// optimizer acts on it without ever seeing the closure's body — the
+    /// exact capability the inferred channel denies native closures.
+    pub fn reduce_by_key(
+        self,
+        merge: impl Fn(V, V) -> V + Send + Sync + 'rt,
+    ) -> Dataset<'rt, KeyValue<K, V>>
+    where
+        B: Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + HeapSized,
+        V: Clone + Send + Sync + HeapSized + 'rt,
+    {
+        self.aggregate_by_key(Merge::new(merge))
+    }
+
+    /// Collect each key's values into a list (Spark's `groupByKey`;
+    /// never map-combines — see [`Group`]).
+    pub fn group_by_key(self) -> Dataset<'rt, KeyValue<K, Vec<V>>>
+    where
+        B: Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + HeapSized,
+        V: Clone + Send + Sync + HeapSized + 'rt,
+    {
+        self.aggregate_by_key(Group)
+    }
+
+    /// Count values per key (the COUNT idiom, declared).
+    pub fn count_by_key(self) -> Dataset<'rt, KeyValue<K, i64>>
+    where
+        B: Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + HeapSized,
+        V: Clone + Send + Sync + HeapSized,
+    {
+        self.aggregate_by_key(Count)
+    }
+
+    /// Two-input co-group: for every key present in either input, the
+    /// pair of value lists `(Vec<V>, Vec<V2>)`. Both upstream plans run
+    /// as sub-plans (their reports merge into this plan's report); the
+    /// grouped sides hash-merge by key.
+    ///
+    /// The merge itself records no stage metrics, so on a plan that
+    /// *ends* here, [`PlanOutput::metrics`] reports the last executed
+    /// sub-stage (the right input's grouping). Chain an aggregation
+    /// after the co-group for a meaningful final-stage report.
+    pub fn co_group<V2: 'rt, B2: 'rt>(
+        self,
+        other: KeyedDataset<'rt, K, V2, B2>,
+    ) -> Dataset<'rt, KeyValue<K, (Vec<V>, Vec<V2>)>>
+    where
+        B: Send + Sync,
+        B2: Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + HeapSized + 'rt,
+        V: Clone + Send + Sync + HeapSized + 'rt,
+        V2: Clone + Send + Sync + HeapSized + 'rt,
+    {
+        let rt = self.inner.rt;
+        let config = self.inner.config.clone();
+        let optimize = config.optimize;
+        let stage = CoGroupStage {
+            left: Box::new(move || self.group_by_key().collect()),
+            right: Box::new(move || other.group_by_key().collect()),
+            n_shards: shard_count(config.threads),
+        };
+        Dataset {
+            rt,
+            base: Base::Stage(Box::new(stage)),
+            chain: Chain::direct(),
+            stages: vec![StageInfo {
+                kind: StageKind::CoGroup,
+                name: "co_group".to_string(),
+                optimize,
+            }],
+            chain_start: 1,
+            config,
+        }
+    }
+
+    /// Two-input inner join: one output pair per matching `(V, V2)`
+    /// combination per key — a co-group with the cross product expanded
+    /// through a fused `flat_map`. (The second `Dataset` type parameter
+    /// is the co-group barrier the expansion hangs off — an
+    /// implementation detail, as everywhere in the plan API.) As with
+    /// [`KeyedDataset::co_group`], a plan that ends at the join reports
+    /// sub-stage metrics; aggregate after it for a final-stage report.
+    pub fn join<V2: 'rt, B2: 'rt>(
+        self,
+        other: KeyedDataset<'rt, K, V2, B2>,
+    ) -> Dataset<'rt, KeyValue<K, (V, V2)>, KeyValue<K, (Vec<V>, Vec<V2>)>>
+    where
+        B: Send + Sync,
+        B2: Send + Sync,
+        K: Hash + Eq + Clone + Send + Sync + HeapSized + 'rt,
+        V: Clone + Send + Sync + HeapSized + 'rt,
+        V2: Clone + Send + Sync + HeapSized + 'rt,
+    {
+        self.co_group(other).flat_map_named(
+            "join",
+            |kv: &KeyValue<K, (Vec<V>, Vec<V2>)>, sink: &mut dyn FnMut(KeyValue<K, (V, V2)>)| {
+                for left in &kv.value.0 {
+                    for right in &kv.value.1 {
+                        sink(KeyValue::new(
+                            kv.key.clone(),
+                            (left.clone(), right.clone()),
+                        ));
+                    }
+                }
+            },
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Physical execution
+// ---------------------------------------------------------------------
+
+/// A recorded keyed aggregation stage, built while all types are still
+/// concrete (the keyed analogue of `plan.rs`'s `ReduceStage`).
+struct KeyedStage<'rt, B, K, V, H, O, A> {
+    base: Base<'rt, B>,
+    chain: Chain<'rt, B, (K, V)>,
+    /// Logical indices of the chain's element-wise stages.
+    chain_range: Range<usize>,
+    /// Logical index of this keyed stage.
+    index: usize,
+    agg: Arc<A>,
+    cfg: JobConfig,
+    _out: PhantomData<fn() -> (H, O)>,
+}
+
+impl<'rt, B, K, V, H, O, A> PlanStage<'rt, KeyValue<K, O>> for KeyedStage<'rt, B, K, V, H, O, A>
+where
+    B: Send + Sync + 'rt,
+    K: Hash + Eq + Clone + Send + Sync + HeapSized + 'rt,
+    V: Clone + Send + Sync + HeapSized + 'rt,
+    H: Send + HeapSized + 'rt,
+    O: Send + HeapSized + 'rt,
+    A: Aggregator<V, H, O> + 'rt,
+{
+    fn execute(self: Box<Self>, exec: &mut PlanExec<'rt>) -> Vec<Vec<KeyValue<K, O>>> {
+        let KeyedStage {
+            base,
+            chain,
+            chain_range,
+            index,
+            agg,
+            cfg,
+            ..
+        } = *self;
+        let fuse = exec.chain_fused(&chain_range);
+        let agg: &A = &agg;
+        // The upstream chain composed under the keyed stage's pair
+        // stream: barrier elements flow through the element-wise ops and
+        // the resulting pairs are cloned out to the fold (fusion, keyed
+        // edition — the counterpart of `plan.rs`'s `FusedMapper`).
+        let fused_impl = |b: &B, sink: &mut dyn FnMut(K, V)| match &chain {
+            Chain::Direct { by_ref, .. } => {
+                let p = by_ref(b);
+                sink(p.0.clone(), p.1.clone());
+            }
+            Chain::Ops { op } => op(b, &mut |p: &(K, V)| sink(p.0.clone(), p.1.clone())),
+        };
+        let fused_pairs: &(dyn Fn(&B, &mut dyn FnMut(K, V)) + Sync) = &fused_impl;
+        // Pair extraction over an already-staged `(K, V)` buffer (the
+        // unfused paths).
+        let staged_impl = |p: &(K, V), sink: &mut dyn FnMut(K, V)| sink(p.0.clone(), p.1.clone());
+        let staged_pairs: &(dyn Fn(&(K, V), &mut dyn FnMut(K, V)) + Sync) = &staged_impl;
+        match base {
+            Base::Source(mut src) => {
+                if fuse {
+                    run_keyed_stage(exec, fused_pairs, agg, src.feed(), &cfg, 0)
+                } else {
+                    let hint = src.len_hint();
+                    let staged = apply_chain(src.feed(), &chain, hint);
+                    let staged_len = staged.len() as u64;
+                    run_keyed_stage(
+                        exec,
+                        staged_pairs,
+                        agg,
+                        Feed::Slice(&staged),
+                        &cfg,
+                        staged_len,
+                    )
+                }
+            }
+            Base::Stage(upstream) => {
+                let shards = upstream.execute(exec);
+                let stream = exec.stream_input(index);
+                match (stream, fuse) {
+                    (true, true) => {
+                        let mut iter = shards.into_iter();
+                        let feed: Feed<'_, B> = Feed::Stream(Box::new(move || iter.next()));
+                        run_keyed_stage(exec, fused_pairs, agg, feed, &cfg, 0)
+                    }
+                    (true, false) => {
+                        let total: usize = shards.iter().map(Vec::len).sum();
+                        let mut iter = shards.into_iter();
+                        let feed: Feed<'_, B> = Feed::Stream(Box::new(move || iter.next()));
+                        let staged = apply_chain(feed, &chain, Some(total));
+                        let staged_len = staged.len() as u64;
+                        run_keyed_stage(
+                            exec,
+                            staged_pairs,
+                            agg,
+                            Feed::Slice(&staged),
+                            &cfg,
+                            staged_len,
+                        )
+                    }
+                    (false, fused_chain) => {
+                        let handoff = concat_shards(shards);
+                        let mut materialized = handoff.len() as u64;
+                        if fused_chain {
+                            run_keyed_stage(
+                                exec,
+                                fused_pairs,
+                                agg,
+                                Feed::Slice(&handoff),
+                                &cfg,
+                                materialized,
+                            )
+                        } else {
+                            let staged =
+                                apply_chain(Feed::Slice(&handoff), &chain, Some(handoff.len()));
+                            materialized += staged.len() as u64;
+                            run_keyed_stage(
+                                exec,
+                                staged_pairs,
+                                agg,
+                                Feed::Slice(&staged),
+                                &cfg,
+                                materialized,
+                            )
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run one physical keyed stage, recording its metrics (the keyed twin of
+/// `plan.rs`'s `run_stage`).
+fn run_keyed_stage<'rt, I, K, V, H, O, A>(
+    exec: &mut PlanExec<'rt>,
+    pairs: &(dyn Fn(&I, &mut dyn FnMut(K, V)) + Sync),
+    agg: &A,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    materialized_in: u64,
+) -> Vec<Vec<KeyValue<K, O>>>
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + HeapSized,
+    V: Send + HeapSized,
+    H: Send + HeapSized,
+    O: Send + HeapSized,
+    A: Aggregator<V, H, O>,
+{
+    let (shards, mut metrics) = run_keyed_sharded(
+        exec.pool,
+        agg.name(),
+        A::ASSOCIATIVE,
+        A::COMMUTATIVE,
+        pairs,
+        || agg.init(),
+        |h: &mut H, v: V| agg.combine(h, v),
+        |h: H| agg.finish(h),
+        feed,
+        cfg,
+        exec.agent,
+    );
+    metrics.materialized_in = materialized_in;
+    exec.note_materialized(materialized_in);
+    exec.push_metrics(metrics);
+    shards
+}
+
+/// A two-input co-group barrier. Each side is a deferred sub-plan
+/// (`group_by_key().collect()` over the session runtime); execution runs
+/// both, absorbs their reports, and hash-merges the grouped outputs.
+struct CoGroupStage<'rt, K, V, V2> {
+    left: Box<dyn FnOnce() -> PlanOutput<KeyValue<K, Vec<V>>> + 'rt>,
+    right: Box<dyn FnOnce() -> PlanOutput<KeyValue<K, Vec<V2>>> + 'rt>,
+    /// Output shard count (power of two). The merged table is re-sharded
+    /// by key hash so a downstream streamed stage parallelizes — one big
+    /// shard would hand the whole co-group output to a single worker.
+    n_shards: usize,
+}
+
+impl<'rt, K, V, V2> PlanStage<'rt, KeyValue<K, (Vec<V>, Vec<V2>)>> for CoGroupStage<'rt, K, V, V2>
+where
+    K: Hash + Eq + 'rt,
+    V: 'rt,
+    V2: 'rt,
+{
+    fn execute(
+        self: Box<Self>,
+        exec: &mut PlanExec<'rt>,
+    ) -> Vec<Vec<KeyValue<K, (Vec<V>, Vec<V2>)>>> {
+        let CoGroupStage {
+            left,
+            right,
+            n_shards,
+        } = *self;
+        let PlanOutput {
+            items: left,
+            report: left_report,
+        } = left();
+        let PlanOutput {
+            items: right,
+            report: right_report,
+        } = right();
+        exec.absorb(left_report);
+        exec.absorb(right_report);
+        // Hash-merge (the co-group's working table, analogous to a
+        // collector — not charged as a plan-level materialization).
+        let mut table: FxHashMap<K, (Vec<V>, Vec<V2>)> = FxHashMap::default();
+        for kv in left {
+            table.entry(kv.key).or_default().0 = kv.value;
+        }
+        for kv in right {
+            table.entry(kv.key).or_default().1 = kv.value;
+        }
+        // Re-shard by key hash (high bits, like every collector) so the
+        // consumer's streamed map phase has chunks to balance across
+        // workers.
+        let n = n_shards.next_power_of_two().max(1);
+        let mut shards: Vec<Vec<KeyValue<K, (Vec<V>, Vec<V2>)>>> =
+            (0..n).map(|_| Vec::new()).collect();
+        for (k, groups) in table {
+            let s = (fxhash(&k) >> 48) as usize & (n - 1);
+            shards[s].push(KeyValue::new(k, groups));
+        }
+        shards
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::config::ExecutionFlow;
+    use crate::api::runtime::Runtime;
+    use crate::optimizer::agent::CombinerSource;
+
+    fn rt() -> Runtime {
+        Runtime::with_config(JobConfig::fast().with_threads(2))
+    }
+
+    fn pairs() -> Vec<(String, i64)> {
+        vec![
+            ("a".into(), 1),
+            ("b".into(), 10),
+            ("a".into(), 2),
+            ("c".into(), 100),
+            ("b".into(), 20),
+            ("a".into(), 4),
+        ]
+    }
+
+    #[test]
+    fn reduce_by_key_sums_and_reports_declared() {
+        let rt = rt();
+        let data = pairs();
+        let out = rt
+            .dataset(&data)
+            .keyed()
+            .reduce_by_key(|a, b| a + b)
+            .collect_sorted();
+        assert_eq!(
+            out.items,
+            vec![
+                KeyValue::new("a".to_string(), 7),
+                KeyValue::new("b".to_string(), 30),
+                KeyValue::new("c".to_string(), 100),
+            ]
+        );
+        assert_eq!(out.metrics().flow, ExecutionFlow::Combine);
+        assert_eq!(out.metrics().combiner_source, Some(CombinerSource::Declared));
+        assert_eq!(out.metrics().shuffled_pairs, 0);
+        assert_eq!(out.metrics().shuffled_holders, 3);
+        assert_eq!(rt.agent().stats().declared_accepted, 1);
+    }
+
+    #[test]
+    fn group_by_key_keeps_the_list_flow() {
+        let rt = rt();
+        let data = pairs();
+        let out = rt
+            .dataset(&data)
+            .keyed()
+            .group_by_key()
+            .collect_sorted();
+        assert_eq!(out.metrics().flow, ExecutionFlow::Reduce);
+        assert_eq!(out.metrics().combiner_source, None);
+        assert!(out
+            .metrics()
+            .fallback_reason
+            .as_deref()
+            .unwrap()
+            .contains("non-commutative"));
+        let mut a_vals = out.items[0].value.clone();
+        a_vals.sort_unstable();
+        assert_eq!((out.items[0].key.as_str(), a_vals), ("a", vec![1, 2, 4]));
+        assert_eq!(rt.agent().stats().declared_rejected, 1);
+    }
+
+    #[test]
+    fn key_by_map_values_count_by_key_compose() {
+        let rt = rt();
+        let words: Vec<String> = ["spark", "flink", "spark", "mr4r", "spark"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let out = rt
+            .dataset(&words)
+            .key_by(|w| w.len() as i64)
+            .map_values(|w| w.clone())
+            .count_by_key()
+            .collect_sorted();
+        assert_eq!(
+            out.items,
+            vec![KeyValue::new(4, 1), KeyValue::new(5, 4)]
+        );
+        assert_eq!(out.report.stage_metrics.len(), 1, "one keyed barrier ran");
+    }
+
+    #[test]
+    fn join_and_co_group_merge_two_plans() {
+        let rt = rt();
+        let clicks: Vec<(String, String)> = vec![
+            ("u1".into(), "/home".into()),
+            ("u2".into(), "/buy".into()),
+            ("u1".into(), "/buy".into()),
+            ("u3".into(), "/home".into()),
+        ];
+        let users: Vec<(String, String)> = vec![
+            ("u1".into(), "eu".into()),
+            ("u2".into(), "us".into()),
+        ];
+        let joined = rt
+            .dataset(&clicks)
+            .keyed()
+            .join(rt.dataset(&users).keyed())
+            .collect();
+        let mut rows: Vec<(String, (String, String))> = joined
+            .iter()
+            .map(|kv| (kv.key.clone(), kv.value.clone()))
+            .collect();
+        rows.sort();
+        assert_eq!(
+            rows,
+            vec![
+                ("u1".to_string(), ("/buy".to_string(), "eu".to_string())),
+                ("u1".to_string(), ("/home".to_string(), "eu".to_string())),
+                ("u2".to_string(), ("/buy".to_string(), "us".to_string())),
+            ],
+            "inner join drops the unmatched u3"
+        );
+        // Both sub-plans' stage metrics surface in the outer report.
+        assert_eq!(joined.report.stage_metrics.len(), 2);
+
+        let cg = rt
+            .dataset(&clicks)
+            .keyed()
+            .co_group(rt.dataset(&users).keyed())
+            .collect_sorted();
+        assert_eq!(cg.items.len(), 3, "co-group keeps unmatched keys");
+        let u3 = cg.items.iter().find(|kv| kv.key == "u3").unwrap();
+        assert_eq!(u3.value.0.len(), 1);
+        assert!(u3.value.1.is_empty());
+    }
+
+    #[test]
+    fn keyed_stage_streams_a_reduce_handoff() {
+        let rt = rt();
+        let data = pairs();
+        let out = rt
+            .dataset(&data)
+            .keyed()
+            .reduce_by_key(|a, b| a + b)
+            .map(|kv| (kv.value % 10, 1i64))
+            .keyed()
+            .count_by_key()
+            .collect_sorted();
+        // Sums 7, 30, 100 → last digits 7, 0, 0.
+        assert_eq!(
+            out.items,
+            vec![KeyValue::new(0, 2), KeyValue::new(7, 1)]
+        );
+        assert_eq!(out.report.streamed_handoffs, 1);
+        assert_eq!(out.report.fused_ops, 1);
+        assert_eq!(out.report.materialized_pairs, 0);
+    }
+}

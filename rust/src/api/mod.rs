@@ -14,7 +14,11 @@
 //! * [`Dataset`] — the lazy dataflow API ([`Runtime::dataset`]): record a
 //!   plan of `map`/`filter`/`flat_map`/`map_reduce` stages, execute on
 //!   `collect()` after the agent's whole-plan pass has fused element-wise
-//!   stages and arranged reduce handoffs to stream (see [`plan`]).
+//!   stages and arranged reduce handoffs to stream (see [`plan`]). Its
+//!   keyed view ([`KeyedDataset`], via `key_by`/`keyed`) adds the
+//!   declared-semantics algebra — `reduce_by_key`, `aggregate_by_key`
+//!   with a user [`Aggregator`] triple, `group_by_key`, `count_by_key`,
+//!   and two-input `join`/`co_group` (see [`keyed`]).
 //! * [`Runtime`]/[`JobBuilder`] — the eager session API: a persistent
 //!   worker pool, a shared optimizer agent, streaming [`InputSource`]s,
 //!   output ordering contracts, and job chaining via
@@ -24,6 +28,7 @@
 
 pub mod config;
 pub mod job;
+pub mod keyed;
 pub mod plan;
 pub mod reducers;
 pub mod runtime;
@@ -32,6 +37,7 @@ pub mod traits;
 
 pub use config::{ExecutionFlow, JobConfig, OptimizeMode};
 pub use job::{JobReport, MapReduce};
+pub use keyed::{Aggregator, KeyedDataset};
 pub use plan::{Dataset, PlanOutput, PlanReport, StageInfo, StageKind};
 pub use reducers::RirReducer;
 pub use runtime::{JobBuilder, JobOutput, Pipeline, Runtime};

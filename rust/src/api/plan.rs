@@ -75,6 +75,12 @@ pub enum StageKind {
     FlatMap,
     /// A full map→reduce stage.
     MapReduce,
+    /// A keyed aggregation stage (`aggregate_by_key` and friends — the
+    /// declared-semantics barrier, see [`crate::api::keyed`]).
+    KeyedAggregate,
+    /// A two-input co-group barrier (`co_group`/`join`): both upstream
+    /// plans execute as sub-plans and merge by key.
+    CoGroup,
 }
 
 /// One recorded logical stage (what the planner lowers).
@@ -97,7 +103,7 @@ type ElementOp<'rt, B, T> = Box<dyn Fn(&B, &mut dyn FnMut(&T)) + Send + Sync + '
 /// The element-wise chain between the nearest stage barrier (source or
 /// upstream reduce output, element type `B`) and the dataset's current
 /// element type `T`.
-enum Chain<'rt, B, T> {
+pub(crate) enum Chain<'rt, B, T> {
     /// No operators. `B` and `T` are the same type by construction; the
     /// two identity functions are the (zero-cost) witnesses that let the
     /// executor move or borrow barrier elements as `T` without cloning.
@@ -110,7 +116,7 @@ enum Chain<'rt, B, T> {
 }
 
 impl<'rt, T> Chain<'rt, T, T> {
-    fn direct() -> Self {
+    pub(crate) fn direct() -> Self {
         Chain::Direct {
             by_ref: |x| x,
             by_val: |x| x,
@@ -120,7 +126,7 @@ impl<'rt, T> Chain<'rt, T, T> {
 
 /// The stage barrier a chain hangs off: a real input source, or the whole
 /// upstream plan ending in a reduce stage (types erased at record time).
-enum Base<'rt, B> {
+pub(crate) enum Base<'rt, B> {
     Source(Box<dyn InputSource<B> + 'rt>),
     Stage(Box<dyn PlanStage<'rt, B> + 'rt>),
 }
@@ -128,7 +134,9 @@ enum Base<'rt, B> {
 /// An upstream pipeline ending in a reduce stage with output element type
 /// `Out`. Executing it runs every upstream stage and returns the result
 /// pairs **grouped by collector shard**, so the consumer may stream them.
-trait PlanStage<'rt, Out> {
+/// (Implemented by [`ReduceStage`] here and by the keyed/co-group stages
+/// in [`crate::api::keyed`].)
+pub(crate) trait PlanStage<'rt, Out> {
     fn execute(self: Box<Self>, exec: &mut PlanExec<'rt>) -> Vec<Vec<Out>>;
 }
 
@@ -139,16 +147,16 @@ trait PlanStage<'rt, Out> {
 /// Cheap to build, executes nothing until [`Dataset::collect`]. See the
 /// [module docs](self) for which rewrites fire at collect time.
 pub struct Dataset<'rt, T, B = T> {
-    rt: &'rt Runtime,
-    base: Base<'rt, B>,
-    chain: Chain<'rt, B, T>,
+    pub(crate) rt: &'rt Runtime,
+    pub(crate) base: Base<'rt, B>,
+    pub(crate) chain: Chain<'rt, B, T>,
     /// Every logical stage recorded so far, in order.
-    stages: Vec<StageInfo>,
+    pub(crate) stages: Vec<StageInfo>,
     /// Index of the first stage after the current barrier (the chain's
     /// stages are `chain_start..stages.len()`).
-    chain_start: usize,
+    pub(crate) chain_start: usize,
     /// Configuration snapshot applied to stages recorded from now on.
-    config: JobConfig,
+    pub(crate) config: JobConfig,
 }
 
 impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
@@ -200,10 +208,20 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
 
     /// Record a one-to-one element transform.
     pub fn map<U: 'rt>(
-        mut self,
+        self,
         f: impl Fn(&T) -> U + Send + Sync + 'rt,
     ) -> Dataset<'rt, U, B> {
-        self.push_stage(StageKind::Map, "map");
+        self.map_named("map", f)
+    }
+
+    /// [`Dataset::map`] with an explicit stage name (the keyed layer
+    /// records `key_by`/`map_values` through this).
+    pub(crate) fn map_named<U: 'rt>(
+        mut self,
+        name: &str,
+        f: impl Fn(&T) -> U + Send + Sync + 'rt,
+    ) -> Dataset<'rt, U, B> {
+        self.push_stage(StageKind::Map, name);
         let chain = match self.chain {
             Chain::Direct { by_ref, .. } => Chain::Ops {
                 op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
@@ -266,10 +284,20 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     /// Record a one-to-many element transform (`f` pushes any number of
     /// outputs per input into the sink).
     pub fn flat_map<U: 'rt>(
-        mut self,
+        self,
         f: impl Fn(&T, &mut dyn FnMut(U)) + Send + Sync + 'rt,
     ) -> Dataset<'rt, U, B> {
-        self.push_stage(StageKind::FlatMap, "flat_map");
+        self.flat_map_named("flat_map", f)
+    }
+
+    /// [`Dataset::flat_map`] with an explicit stage name (`join` records
+    /// its cross-product expansion through this).
+    pub(crate) fn flat_map_named<U: 'rt>(
+        mut self,
+        name: &str,
+        f: impl Fn(&T, &mut dyn FnMut(U)) + Send + Sync + 'rt,
+    ) -> Dataset<'rt, U, B> {
+        self.push_stage(StageKind::FlatMap, name);
         let chain = match self.chain {
             Chain::Direct { by_ref, .. } => Chain::Ops {
                 op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
@@ -649,7 +677,7 @@ where
 /// Materialize an element-wise chain's output (the unfused path; clones
 /// what it keeps). Only called for chains with operators — direct chains
 /// never materialize.
-fn apply_chain<'rt, B, T: Clone>(
+pub(crate) fn apply_chain<'rt, B, T: Clone>(
     feed: Feed<'_, B>,
     chain: &Chain<'rt, B, T>,
     hint: Option<usize>,
@@ -751,6 +779,11 @@ impl<T> PlanOutput<T> {
         self.items
     }
 
+    /// Iterate the materialized items by reference.
+    pub fn iter(&self) -> std::slice::Iter<'_, T> {
+        self.items.iter()
+    }
+
     /// Metrics of the plan's final reduce stage.
     ///
     /// # Panics
@@ -767,10 +800,28 @@ impl<T> PlanOutput<T> {
 impl<K, V> PlanOutput<KeyValue<K, V>> {
     /// Results as plain tuples (what the benchmark digests consume).
     pub fn into_tuples(self) -> Vec<(K, V)> {
-        self.items
-            .into_iter()
-            .map(|kv| (kv.key, kv.value))
-            .collect()
+        self.into_iter().map(|kv| (kv.key, kv.value)).collect()
+    }
+}
+
+/// Owned iteration: `for item in plan.collect() { … }` — no more
+/// `.into_items().into_iter()` at call sites. The report is dropped; keep
+/// a reference to it first if the run's metrics matter.
+impl<T> IntoIterator for PlanOutput<T> {
+    type Item = T;
+    type IntoIter = std::vec::IntoIter<T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.items.into_iter()
+    }
+}
+
+impl<'a, T> IntoIterator for &'a PlanOutput<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> Self::IntoIter {
+        self.items.iter()
     }
 }
 
@@ -903,6 +954,18 @@ mod tests {
             .map(|m| m.materialized_in)
             .sum();
         assert_eq!(via_metrics, unfused.report.materialized_pairs);
+    }
+
+    #[test]
+    fn plan_output_iterates_owned_and_borrowed() {
+        let rt = rt();
+        let data: Vec<i64> = (0..5).collect();
+        let out = rt.dataset(&data).map(|x| x + 1).collect();
+        let by_ref: i64 = (&out).into_iter().sum();
+        assert_eq!(by_ref, 15);
+        assert_eq!(out.iter().count(), 5);
+        let owned: Vec<i64> = out.into_iter().collect();
+        assert_eq!(owned, vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

@@ -121,6 +121,18 @@ impl HeapSized for f64 {
     }
 }
 
+impl HeapSized for f32 {
+    fn heap_bytes(&self) -> u64 {
+        16 // boxed Float (header-dominated, same as Double)
+    }
+}
+
+impl HeapSized for usize {
+    fn heap_bytes(&self) -> u64 {
+        16
+    }
+}
+
 impl HeapSized for u64 {
     fn heap_bytes(&self) -> u64 {
         16
@@ -151,21 +163,20 @@ impl<T: HeapSized> HeapSized for Vec<T> {
     }
 }
 
-impl HeapSized for (f64, i64) {
+/// Pairs as one boxed object with two boxed fields — the shape of keyed
+/// `(K, V)` intermediates and of plan-stage tuples. (Replaces the old
+/// per-type pair impls so keyed holders over any sized types account.)
+impl<A: HeapSized, B: HeapSized> HeapSized for (A, B) {
     fn heap_bytes(&self) -> u64 {
-        32
+        16 + self.0.heap_bytes() + self.1.heap_bytes()
     }
 }
 
-impl HeapSized for (i64, i64) {
+/// `Option` holders (e.g. `reduce_by_key`'s pre-first-merge state): the
+/// empty box before the first combine, box + payload after.
+impl<T: HeapSized> HeapSized for Option<T> {
     fn heap_bytes(&self) -> u64 {
-        32 // two boxed longs (plan-stage pair intermediates)
-    }
-}
-
-impl HeapSized for (String, i64) {
-    fn heap_bytes(&self) -> u64 {
-        self.0.heap_bytes() + 16 // string payload + boxed long
+        16 + self.as_ref().map_or(0, HeapSized::heap_bytes)
     }
 }
 
@@ -244,13 +255,28 @@ mod tests {
     fn plan_intermediate_heap_sizes() {
         assert_eq!(7i32.heap_bytes(), 16);
         assert_eq!(7u32.heap_bytes(), 16);
-        assert_eq!((1i64, 2i64).heap_bytes(), 32);
+        assert_eq!(7usize.heap_bytes(), 16);
+        assert_eq!(7f32.heap_bytes(), 16);
+        // Pairs: one pair object + both boxed fields.
+        assert_eq!((1i64, 2i64).heap_bytes(), 48);
+        assert_eq!((1f64, 2f64).heap_bytes(), 48);
         let sv = ("word".to_string(), 3i64);
-        assert_eq!(sv.heap_bytes(), "word".to_string().heap_bytes() + 16);
+        assert_eq!(sv.heap_bytes(), 16 + "word".to_string().heap_bytes() + 16);
         let kv = KeyValue::new("word".to_string(), 3i64);
         assert_eq!(
             kv.heap_bytes(),
             16 + "word".to_string().heap_bytes() + 16
+        );
+    }
+
+    #[test]
+    fn option_holders_account_payload_after_first_combine() {
+        let empty: Option<i64> = None;
+        assert_eq!(empty.heap_bytes(), 16);
+        assert_eq!(Some(3i64).heap_bytes(), 32);
+        assert_eq!(
+            Some(("k".to_string(), 1i64)).heap_bytes(),
+            16 + ("k".to_string(), 1i64).heap_bytes()
         );
     }
 }

@@ -59,6 +59,10 @@ pub fn reducer() -> RirReducer<i64, i64> {
     RirReducer::new(canon::sum_i64("histogram.sum"))
 }
 
+/// Histogram on the keyed dataset algebra: each chunk flat-maps to
+/// `(bin, partial-count)` pairs and `reduce_by_key` sums them through the
+/// declared channel. [`mapper`]/[`reducer`] keep the RIR formulation for
+/// the inferred channel.
 pub fn run_mr4r(
     pixels: &[u8],
     rt: &Runtime,
@@ -66,10 +70,25 @@ pub fn run_mr4r(
     backend: &Backend,
 ) -> (Vec<KeyValue<i64, i64>>, FlowMetrics) {
     let chunks = chunk_pixels(pixels);
+    let b = backend.clone();
+    // The chunk flat_map records before the caller's config lands: it is
+    // the paper's mapper and always fuses into the aggregate's map
+    // phase; only the aggregation flow is swept by `cfg.optimize`.
     let out = rt
         .dataset(&chunks)
+        .flat_map(move |chunk: &&[u8], sink: &mut dyn FnMut((i64, i64))| {
+            for channel in 0..3 {
+                let counts = channel_counts(&b, chunk, channel);
+                for (bin, &c) in counts.iter().enumerate() {
+                    if c > 0.0 {
+                        sink(((channel * HG_BINS + bin) as i64, c as i64));
+                    }
+                }
+            }
+        })
         .with_config(cfg.clone().with_scratch_per_emit(16))
-        .map_reduce(mapper(backend.clone()), reducer())
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
         .collect();
     let metrics = out.metrics().clone();
     (out.items, metrics)

@@ -11,7 +11,7 @@
 use std::sync::Arc;
 
 use crate::api::reducers::RirReducer;
-use crate::api::traits::{Emitter, KeyValue};
+use crate::api::traits::KeyValue;
 use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{ArrayContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
@@ -61,6 +61,10 @@ pub fn reducer() -> RirReducer<i64, f64> {
     RirReducer::new(canon::sum_f64("linreg.sum"))
 }
 
+/// Linear regression on the keyed dataset algebra: each chunk flat-maps
+/// to five `(moment, partial)` pairs and `reduce_by_key` sums them
+/// through the declared channel. [`reducer`] keeps the RIR formulation
+/// for the inferred channel.
 pub fn run_mr4r(
     points: &[(f64, f64)],
     rt: &Runtime,
@@ -69,13 +73,17 @@ pub fn run_mr4r(
 ) -> (Vec<KeyValue<i64, f64>>, FlowMetrics) {
     let chunks = chunk_points(points);
     let backend = backend.clone();
-    let mapper = move |chunk: &&[(f64, f64)], em: &mut dyn Emitter<i64, f64>| {
-        map_chunk(&backend, chunk, |k, v| em.emit(k, v));
-    };
+    // The moment flat_map records before the caller's config lands: it
+    // is the paper's mapper and always fuses into the aggregate's map
+    // phase; only the aggregation flow is swept by `cfg.optimize`.
     let out = rt
         .dataset(&chunks)
+        .flat_map(move |chunk: &&[(f64, f64)], sink: &mut dyn FnMut((i64, f64))| {
+            map_chunk(&backend, chunk, |k, v| sink((k, v)));
+        })
         .with_config(cfg.clone().with_scratch_per_emit(16))
-        .map_reduce(mapper, reducer())
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
         .collect();
     let metrics = out.metrics().clone();
     (out.items, metrics)

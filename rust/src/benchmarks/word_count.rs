@@ -29,15 +29,31 @@ pub fn reducer() -> RirReducer<String, i64> {
     RirReducer::new(canon::sum_i64("wordcount.sum"))
 }
 
+/// Word count on the keyed dataset algebra: tokenize into `(word, 1)`
+/// pairs, then `reduce_by_key` — the *declared* channel (the merge's
+/// associativity/commutativity is API contract, so the agent grants the
+/// in-map combining flow without any RIR analysis). The RIR formulation
+/// stays available via [`map_line`]/[`reducer`] for the inferred channel
+/// (equivalence pinned in `rust/tests/keyed_equivalence.rs`).
 pub fn run_mr4r(
     lines: &[String],
     rt: &Runtime,
     cfg: &JobConfig,
 ) -> (Vec<KeyValue<String, i64>>, FlowMetrics) {
+    // The tokenizing flat_map is recorded *before* the caller's config
+    // lands, so it always fuses into the aggregate's map phase — it is
+    // the paper's mapper, not an optimizer-controlled plan stage; only
+    // the aggregation flow is swept by `cfg.optimize`.
     let out = rt
         .dataset(lines)
+        .flat_map(|line: &String, sink: &mut dyn FnMut((String, i64))| {
+            for w in line.split_ascii_whitespace() {
+                sink((w.to_string(), 1));
+            }
+        })
         .with_config(cfg.clone().with_scratch_per_emit(WC_SCRATCH_PER_EMIT))
-        .map_reduce(map_line, reducer())
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
         .collect();
     let metrics = out.metrics().clone();
     (out.items, metrics)

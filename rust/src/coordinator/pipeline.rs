@@ -24,14 +24,16 @@ use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use super::collector::{shard_count, CollectorCohorts, HolderCollector, ListCollector};
+use super::collector::{
+    shard_count, AggregateCollector, CollectorCohorts, HolderCollector, ListCollector,
+};
 use super::scheduler::{PoolStats, WorkerPool};
 use super::splitter::split_indices;
 use crate::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
 use crate::api::source::Feed;
 use crate::api::traits::{Emitter, HeapSized, KeyValue, Mapper, Reducer};
 use crate::memsim::{CohortId, GcStats, ThreadAlloc};
-use crate::optimizer::agent::{Decision, OptimizerAgent};
+use crate::optimizer::agent::{CombinerSource, Decision, OptimizerAgent};
 use crate::optimizer::value::RirValue;
 use crate::util::timer::Stopwatch;
 
@@ -40,8 +42,24 @@ use crate::util::timer::Stopwatch;
 pub struct FlowMetrics {
     /// Which flow ran.
     pub flow: ExecutionFlow,
+    /// Which semantic channel supplied the combiner when the combine flow
+    /// ran: [`CombinerSource::Inferred`] for RIR-analyzed reducers,
+    /// [`CombinerSource::Declared`] for keyed [`crate::api::keyed::Aggregator`]
+    /// stages. `None` when no combining rewrite fired.
+    pub combiner_source: Option<CombinerSource>,
     /// Why the combine flow was not taken (when it wasn't).
     pub fallback_reason: Option<String>,
+    /// Intermediate values shipped *individually* across the map→reduce
+    /// barrier (the reduce flow ships every surviving emit).
+    pub shuffled_pairs: u64,
+    /// Per-key holders shipped across the barrier instead (the combining
+    /// flows collapse the pair stream in the map phase).
+    pub shuffled_holders: u64,
+    /// Payload heap bytes crossing the barrier — boxed values + list
+    /// slots for the reduce flow, holder footprints for combining flows.
+    /// The declared-vs-materialized comparison the keyed acceptance
+    /// criteria measure.
+    pub shuffled_bytes: u64,
     /// Input elements that were materialized into a plan-level
     /// intermediate buffer before this stage's map phase (the `JobOutput`
     /// round-trip of the eager API). Zero for borrowed sources, streamed
@@ -361,6 +379,7 @@ where
     let reduce_sw = Stopwatch::start();
     let keys = collector.key_count() as u64;
     let shards = collector.into_shards();
+    let shuffled_bytes = AtomicU64::new(0);
     let slots: Vec<Mutex<Vec<KeyValue<K, V>>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
     pool.run(
@@ -371,8 +390,10 @@ where
             .map(|(si, shard)| {
                 let slots = &slots;
                 let cohorts = &cohorts;
+                let shuffled_bytes = &shuffled_bytes;
                 move |_wid: usize| {
                     let mut alloc = cfg.heap.thread_alloc();
+                    let mut shard_bytes = 0u64;
                     let mut em = ResultEmitter { out: Vec::new() };
                     for (k, values) in shard {
                         reducer.reduce(&k, &values, &mut em);
@@ -382,12 +403,14 @@ where
                             .iter()
                             .map(|v| v.heap_bytes() + super::collector::LIST_SLOT_BYTES)
                             .sum();
+                        shard_bytes += bytes;
                         alloc.free(cohorts.collector.intermediate, bytes);
                     }
                     for kv in &em.out {
                         alloc.alloc(cohorts.results, kv.value.heap_bytes());
                     }
                     alloc.flush();
+                    shuffled_bytes.fetch_add(shard_bytes, Ordering::Relaxed);
                     *slots[si].lock().unwrap() = em.out;
                 }
             })
@@ -399,7 +422,11 @@ where
     finish_job(cfg, &cohorts);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Reduce,
+        combiner_source: None,
         fallback_reason,
+        shuffled_pairs: emits,
+        shuffled_holders: 0,
+        shuffled_bytes: shuffled_bytes.load(Ordering::Relaxed),
         materialized_in: 0,
         map_secs,
         reduce_secs,
@@ -456,6 +483,7 @@ where
     let fin_sw = Stopwatch::start();
     let keys = collector.key_count() as u64;
     let (shards, combiner) = collector.into_shards();
+    let shuffled_bytes = AtomicU64::new(0);
     let slots: Vec<Mutex<Vec<KeyValue<K, V>>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
     pool.run(
@@ -467,10 +495,13 @@ where
                 let slots = &slots;
                 let cohorts = &cohorts;
                 let combiner = &combiner;
+                let shuffled_bytes = &shuffled_bytes;
                 move |_wid: usize| {
                     let mut alloc = cfg.heap.thread_alloc();
+                    let mut shard_bytes = 0u64;
                     let mut out = Vec::with_capacity(shard.len());
                     for (k, holder) in shard {
+                        shard_bytes += holder.heap_bytes();
                         alloc.free(cohorts.collector.holders, holder.heap_bytes());
                         let key_val = k.to_val();
                         let v = combiner
@@ -482,6 +513,7 @@ where
                         out.push(KeyValue::new(k, v));
                     }
                     alloc.flush();
+                    shuffled_bytes.fetch_add(shard_bytes, Ordering::Relaxed);
                     *slots[si].lock().unwrap() = out;
                 }
             })
@@ -493,7 +525,297 @@ where
     finish_job(cfg, &cohorts);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Combine,
+        combiner_source: Some(CombinerSource::Inferred),
         fallback_reason: None,
+        shuffled_pairs: 0,
+        shuffled_holders: keys,
+        shuffled_bytes: shuffled_bytes.load(Ordering::Relaxed),
+        materialized_in: 0,
+        map_secs,
+        reduce_secs,
+        total_secs: total_sw.secs(),
+        emits,
+        keys,
+        results: results.iter().map(|s| s.len() as u64).sum(),
+        gc: cfg.heap.stats().since(&gc_before),
+        map_pool,
+    };
+    (results, metrics)
+}
+
+// ---------------------------------------------------------------------
+// Keyed flows (the declared-semantics channel)
+// ---------------------------------------------------------------------
+
+/// Pair extraction the keyed flows drive — the keyed analogue of a
+/// [`Mapper`]: one input element pushes any number of `(K, V)` pairs into
+/// the sink (the stage's fused element-wise chain lives inside this
+/// closure, exactly like [`crate::api::plan`]'s `FusedMapper`).
+pub type PairFn<'a, I, K, V> = &'a (dyn Fn(&I, &mut dyn FnMut(K, V)) + Sync);
+
+/// Run one keyed aggregation stage, sharded. The *declared* counterpart
+/// of [`run_job_sharded`]: instead of consulting the agent's RIR analysis,
+/// the stage hands over its [`crate::api::keyed::Aggregator`]'s holder
+/// triple (as closures) plus the declared algebraic markers, and the
+/// agent's declared channel ([`OptimizerAgent::process_declared`]) decides
+/// whether the in-map combining flow may run:
+///
+/// * **Combining flow** (associative + commutative, optimizer on): every
+///   worker folds pairs straight into a sharded table of *unboxed typed
+///   holders* ([`AggregateCollector`]); the barrier ships one holder per
+///   key instead of every emitted pair — the paper's Fig. 4 rewrite, with
+///   the triple supplied by the user rather than sliced from bytecode.
+/// * **List flow** (optimizer off, or a marker missing): pairs collect
+///   into per-key lists ([`ListCollector`]) and the holder triple runs
+///   sequentially per key after the barrier — the measured baseline.
+///
+/// Results are identical either way (`rust/tests/keyed_equivalence.rs`);
+/// [`FlowMetrics::shuffled_pairs`]/[`FlowMetrics::shuffled_holders`]/
+/// [`FlowMetrics::shuffled_bytes`] quantify the difference.
+#[allow(clippy::too_many_arguments)]
+pub fn run_keyed_sharded<I, K, V, H, O, FI, FC, FF>(
+    pool: &WorkerPool,
+    class: &str,
+    associative: bool,
+    commutative: bool,
+    pairs: PairFn<'_, I, K, V>,
+    init: FI,
+    fold: FC,
+    finish: FF,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+) -> (Vec<Vec<KeyValue<K, O>>>, FlowMetrics)
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + HeapSized,
+    V: Send + HeapSized,
+    H: Send + HeapSized,
+    O: Send + HeapSized,
+    FI: Fn() -> H + Sync,
+    FC: Fn(&mut H, V) + Sync,
+    FF: Fn(H) -> O + Sync,
+{
+    let combine = match cfg.optimize {
+        OptimizeMode::Off => false,
+        _ => agent.process_declared(class, associative, commutative),
+    };
+    if combine {
+        run_declared_combine_flow(pool, pairs, &init, &fold, &finish, feed, cfg)
+    } else {
+        let reason = if matches!(cfg.optimize, OptimizeMode::Off) {
+            "optimizer off"
+        } else if !associative {
+            "declared non-associative"
+        } else {
+            "declared non-commutative"
+        };
+        run_keyed_list_flow(pool, pairs, &init, &fold, &finish, feed, cfg, reason)
+    }
+}
+
+/// The declared combining flow: fold pairs into typed holders at emit
+/// time, ship one holder per key (mirrors [`run_combine_flow`]).
+fn run_declared_combine_flow<I, K, V, H, O>(
+    pool: &WorkerPool,
+    pairs: PairFn<'_, I, K, V>,
+    init: &(dyn Fn() -> H + Sync),
+    fold: &(dyn Fn(&mut H, V) + Sync),
+    finish: &(dyn Fn(H) -> O + Sync),
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+) -> (Vec<Vec<KeyValue<K, O>>>, FlowMetrics)
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + HeapSized,
+    V: Send + HeapSized,
+    H: Send + HeapSized,
+    O: Send + HeapSized,
+{
+    let total_sw = Stopwatch::start();
+    let cohorts = job_cohorts(cfg);
+    let gc_before = cfg.heap.stats();
+    let collector: AggregateCollector<K, H> =
+        AggregateCollector::new(shard_count(cfg.threads));
+
+    // ---- Map phase (combining at emit time) ----
+    let map_sw = Stopwatch::start();
+    let map_chunk = |items: &[I]| -> u64 {
+        let mut alloc = cfg.heap.thread_alloc();
+        let mut emits = 0u64;
+        for input in items {
+            pairs(input, &mut |k, v| {
+                if cfg.scratch_per_emit > 0 {
+                    alloc.scratch(cohorts.scratch, cfg.scratch_per_emit);
+                }
+                collector.combine(k, v, init, fold, &mut alloc, &cohorts.collector);
+                emits += 1;
+            });
+        }
+        alloc.flush();
+        emits
+    };
+    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
+    let map_secs = map_sw.secs();
+
+    // ---- Barrier; finish phase (one holder per key) ----
+    let fin_sw = Stopwatch::start();
+    let keys = collector.key_count() as u64;
+    let shards = collector.into_shards();
+    let shuffled_bytes = AtomicU64::new(0);
+    let slots: Vec<Mutex<Vec<KeyValue<K, O>>>> =
+        (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
+    pool.run(
+        cfg.threads,
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(si, shard)| {
+                let slots = &slots;
+                let cohorts = &cohorts;
+                let shuffled_bytes = &shuffled_bytes;
+                move |_wid: usize| {
+                    let mut alloc = cfg.heap.thread_alloc();
+                    let mut shard_bytes = 0u64;
+                    let mut out = Vec::with_capacity(shard.len());
+                    for (k, holder) in shard {
+                        let hb = holder.heap_bytes();
+                        shard_bytes += hb;
+                        alloc.free(cohorts.collector.holders, hb);
+                        let o = finish(holder);
+                        alloc.alloc(cohorts.results, o.heap_bytes());
+                        out.push(KeyValue::new(k, o));
+                    }
+                    alloc.flush();
+                    shuffled_bytes.fetch_add(shard_bytes, Ordering::Relaxed);
+                    *slots[si].lock().unwrap() = out;
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    let reduce_secs = fin_sw.secs();
+
+    let results = unwrap_slots(slots);
+    finish_job(cfg, &cohorts);
+    let metrics = FlowMetrics {
+        flow: ExecutionFlow::Combine,
+        combiner_source: Some(CombinerSource::Declared),
+        fallback_reason: None,
+        shuffled_pairs: 0,
+        shuffled_holders: keys,
+        shuffled_bytes: shuffled_bytes.load(Ordering::Relaxed),
+        materialized_in: 0,
+        map_secs,
+        reduce_secs,
+        total_secs: total_sw.secs(),
+        emits,
+        keys,
+        results: results.iter().map(|s| s.len() as u64).sum(),
+        gc: cfg.heap.stats().since(&gc_before),
+        map_pool,
+    };
+    (results, metrics)
+}
+
+/// The keyed list flow: collect every pair, run the holder triple
+/// sequentially per key after the barrier (mirrors [`run_reduce_flow`]).
+#[allow(clippy::too_many_arguments)]
+fn run_keyed_list_flow<I, K, V, H, O>(
+    pool: &WorkerPool,
+    pairs: PairFn<'_, I, K, V>,
+    init: &(dyn Fn() -> H + Sync),
+    fold: &(dyn Fn(&mut H, V) + Sync),
+    finish: &(dyn Fn(H) -> O + Sync),
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    fallback_reason: &str,
+) -> (Vec<Vec<KeyValue<K, O>>>, FlowMetrics)
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + HeapSized,
+    V: Send + HeapSized,
+    H: Send + HeapSized,
+    O: Send + HeapSized,
+{
+    let total_sw = Stopwatch::start();
+    let cohorts = job_cohorts(cfg);
+    let gc_before = cfg.heap.stats();
+    let collector: ListCollector<K, V> = ListCollector::new(shard_count(cfg.threads));
+
+    // ---- Map phase ----
+    let map_sw = Stopwatch::start();
+    let map_chunk = |items: &[I]| -> u64 {
+        let mut alloc = cfg.heap.thread_alloc();
+        let mut emits = 0u64;
+        for input in items {
+            pairs(input, &mut |k, v| {
+                if cfg.scratch_per_emit > 0 {
+                    alloc.scratch(cohorts.scratch, cfg.scratch_per_emit);
+                }
+                collector.emit(k, v, &mut alloc, &cohorts.collector);
+                emits += 1;
+            });
+        }
+        alloc.flush();
+        emits
+    };
+    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
+    let map_secs = map_sw.secs();
+
+    // ---- Barrier; per-key fold over shards ----
+    let reduce_sw = Stopwatch::start();
+    let keys = collector.key_count() as u64;
+    let shards = collector.into_shards();
+    let shuffled_bytes = AtomicU64::new(0);
+    let slots: Vec<Mutex<Vec<KeyValue<K, O>>>> =
+        (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
+    pool.run(
+        cfg.threads,
+        shards
+            .into_iter()
+            .enumerate()
+            .map(|(si, shard)| {
+                let slots = &slots;
+                let cohorts = &cohorts;
+                let shuffled_bytes = &shuffled_bytes;
+                move |_wid: usize| {
+                    let mut alloc = cfg.heap.thread_alloc();
+                    let mut shard_bytes = 0u64;
+                    let mut out = Vec::with_capacity(shard.len());
+                    for (k, values) in shard {
+                        let bytes: u64 = values
+                            .iter()
+                            .map(|v| v.heap_bytes() + super::collector::LIST_SLOT_BYTES)
+                            .sum();
+                        shard_bytes += bytes;
+                        let mut holder = init();
+                        for v in values {
+                            fold(&mut holder, v);
+                        }
+                        // The key's list dies once folded (paper Fig. 1).
+                        alloc.free(cohorts.collector.intermediate, bytes);
+                        let o = finish(holder);
+                        alloc.alloc(cohorts.results, o.heap_bytes());
+                        out.push(KeyValue::new(k, o));
+                    }
+                    alloc.flush();
+                    shuffled_bytes.fetch_add(shard_bytes, Ordering::Relaxed);
+                    *slots[si].lock().unwrap() = out;
+                }
+            })
+            .collect::<Vec<_>>(),
+    );
+    let reduce_secs = reduce_sw.secs();
+
+    let results = unwrap_slots(slots);
+    finish_job(cfg, &cohorts);
+    let metrics = FlowMetrics {
+        flow: ExecutionFlow::Reduce,
+        combiner_source: None,
+        fallback_reason: Some(fallback_reason.to_string()),
+        shuffled_pairs: emits,
+        shuffled_holders: 0,
+        shuffled_bytes: shuffled_bytes.load(Ordering::Relaxed),
         materialized_in: 0,
         map_secs,
         reduce_secs,

@@ -89,13 +89,29 @@ pub fn lower(stages: &[StageInfo], agent: &OptimizerAgent) -> PhysicalPlan {
                     stage.optimize
                 },
             },
-            StageKind::MapReduce => {
+            // Keyed aggregation is a reduce-shaped barrier to the
+            // whole-plan pass: it can fuse its upstream chain and stream
+            // a reduce handoff exactly like `map_reduce`; whether its
+            // *combining* rewrite fires is decided per stage by the
+            // agent's declared channel at execution time (mirroring the
+            // per-class inferred path).
+            StageKind::MapReduce | StageKind::KeyedAggregate => {
                 let shape = StageShape::Reduce {
                     mode: stage.optimize,
                     follows_reduce: seen_reduce,
                 };
                 seen_reduce = true;
                 shape
+            }
+            // A co-group executes both inputs as sub-plans of its own, so
+            // the outer plan never streams into it — but its *output* is
+            // sharded like any reduce stage, so downstream stages may.
+            StageKind::CoGroup => {
+                seen_reduce = true;
+                StageShape::Reduce {
+                    mode: stage.optimize,
+                    follows_reduce: false,
+                }
             }
         });
     }
@@ -124,6 +140,10 @@ pub struct PlanExec<'rt> {
     plan: PhysicalPlan,
     stage_metrics: Vec<FlowMetrics>,
     materialized: u64,
+    /// Rewrite counts absorbed from sub-plans (two-input stages execute
+    /// each input as its own lowered plan and merge the accounting here).
+    absorbed_fused: usize,
+    absorbed_streamed: usize,
 }
 
 impl<'rt> PlanExec<'rt> {
@@ -138,6 +158,8 @@ impl<'rt> PlanExec<'rt> {
             plan,
             stage_metrics: Vec::new(),
             materialized: 0,
+            absorbed_fused: 0,
+            absorbed_streamed: 0,
         }
     }
 
@@ -168,11 +190,22 @@ impl<'rt> PlanExec<'rt> {
         self.stage_metrics.push(metrics);
     }
 
+    /// Merge a sub-plan's report into this execution (two-input stages:
+    /// each co-group input runs as its own lowered plan). Stage metrics
+    /// append in execution order; rewrite and materialization accounting
+    /// add up, so the outer [`PlanReport`] covers the whole tree.
+    pub(crate) fn absorb(&mut self, report: PlanReport) {
+        self.absorbed_fused += report.fused_ops;
+        self.absorbed_streamed += report.streamed_handoffs;
+        self.materialized += report.materialized_pairs;
+        self.stage_metrics.extend(report.stage_metrics);
+    }
+
     pub(crate) fn into_report(self) -> PlanReport {
         PlanReport {
             stage_metrics: self.stage_metrics,
-            fused_ops: self.plan.fused_ops,
-            streamed_handoffs: self.plan.streamed_handoffs,
+            fused_ops: self.plan.fused_ops + self.absorbed_fused,
+            streamed_handoffs: self.plan.streamed_handoffs + self.absorbed_streamed,
             materialized_pairs: self.materialized,
         }
     }
@@ -240,6 +273,23 @@ mod tests {
         // stages, not the handoff, are what the Off stage governs.
         assert_eq!(plan.decisions[4], StageDecision::StreamInput);
         assert_eq!(plan.streamed_handoffs, 1);
+    }
+
+    #[test]
+    fn keyed_stages_lower_like_reduces_and_cogroups_never_stream_in() {
+        let agent = OptimizerAgent::new();
+        let stages = [
+            info(StageKind::CoGroup, OptimizeMode::Auto),
+            info(StageKind::FlatMap, OptimizeMode::Auto),
+            info(StageKind::KeyedAggregate, OptimizeMode::Auto),
+        ];
+        let plan = lower(&stages, &agent);
+        // The co-group materializes its own inputs (sub-plans), but its
+        // sharded output streams into the downstream keyed aggregate.
+        assert_eq!(plan.decisions[0], StageDecision::MaterializeInput);
+        assert_eq!(plan.decisions[1], StageDecision::Fuse);
+        assert_eq!(plan.decisions[2], StageDecision::StreamInput);
+        assert_eq!((plan.fused_ops, plan.streamed_handoffs), (1, 1));
     }
 
     #[test]

@@ -18,7 +18,10 @@
 //!   and chained/iterated through [`api::Runtime::pipeline`]. The lazy
 //!   dataflow surface, [`api::plan::Dataset`], records whole multi-stage
 //!   plans and executes them through the whole-plan optimizer (fusion +
-//!   shard streaming) at `collect()` time.
+//!   shard streaming) at `collect()` time; its keyed view
+//!   ([`api::keyed`]) adds the declared-semantics aggregation algebra
+//!   (`reduce_by_key`/`aggregate_by_key`/`join`) beside the inferred RIR
+//!   channel.
 //! * [`coordinator`] — work-stealing scheduler (batch + persistent pools),
 //!   input splitter, sharded intermediate collector, and the two
 //!   execution flows (reduce vs combine).

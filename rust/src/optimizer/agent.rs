@@ -45,6 +45,34 @@ impl Decision {
     }
 }
 
+/// Which semantic channel supplied a stage's combining rewrite.
+///
+/// The paper has exactly one channel: semantics *inferred* from the
+/// reducer's bytecode (here, its RIR) by detection + analysis. The keyed
+/// dataset algebra ([`crate::api::keyed`]) adds a second: semantics
+/// *declared* by the user through the [`crate::api::keyed::Aggregator`]
+/// holder triple and its `ASSOCIATIVE`/`COMMUTATIVE` markers (the
+/// Casper-style contract surface). [`crate::coordinator::pipeline::FlowMetrics`]
+/// reports which channel fired for each executed stage.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CombinerSource {
+    /// Declared at the API layer: the user supplied `init`/`combine`/
+    /// `finish` plus the algebraic markers; nothing to analyze.
+    Declared,
+    /// Inferred from the reducer's RIR by the agent's detection +
+    /// transformation passes (paper §3).
+    Inferred,
+}
+
+impl CombinerSource {
+    pub fn label(self) -> &'static str {
+        match self {
+            CombinerSource::Declared => "declared",
+            CombinerSource::Inferred => "inferred",
+        }
+    }
+}
+
 /// Per-agent timing statistics (paper §4.3).
 #[derive(Clone, Debug, Default)]
 pub struct AgentStats {
@@ -58,6 +86,12 @@ pub struct AgentStats {
     pub rejected: usize,
     /// Opaque (closure) reducers seen.
     pub opaque: usize,
+    /// Declared aggregators accepted for in-map combining (associative
+    /// and commutative markers both present).
+    pub declared_accepted: usize,
+    /// Declared aggregators refused the combining flow (a marker is
+    /// missing, so per-key folding order cannot be freely rearranged).
+    pub declared_rejected: usize,
     /// Cache hits (class processed before).
     pub cache_hits: usize,
     /// Whole-plan passes run ([`OptimizerAgent::plan`]).
@@ -226,6 +260,31 @@ impl OptimizerAgent {
         decisions
     }
 
+    /// The declared-semantics channel: a keyed stage registers its
+    /// [`crate::api::keyed::Aggregator`]'s algebraic markers and asks
+    /// whether the in-map combining flow may run. There is no detection
+    /// or transformation pass to time — the declaration *is* the analysis
+    /// result, which is exactly the co-design trade: the inferred channel
+    /// pays §4.3's per-class analysis cost and works on unmodified
+    /// reducers; the declared channel costs the user three methods and
+    /// two markers and can never be rejected for an analysis blind spot.
+    ///
+    /// Combining is granted only when the fold is declared associative
+    /// *and* commutative: the sharded holder table applies `combine` in
+    /// whatever order worker emits interleave, so any order-sensitive
+    /// fold must keep the reduce flow (exactly why Spark's `reduceByKey`
+    /// demands both properties while `groupByKey` never map-combines).
+    pub fn process_declared(&self, _class: &str, associative: bool, commutative: bool) -> bool {
+        let accept = associative && commutative;
+        let mut inner = self.inner.lock().unwrap();
+        if accept {
+            inner.stats.declared_accepted += 1;
+        } else {
+            inner.stats.declared_rejected += 1;
+        }
+        accept
+    }
+
     /// Record an opaque (closure) reducer passing the registration hook.
     pub fn note_opaque(&self) {
         self.inner.lock().unwrap().stats.opaque += 1;
@@ -359,6 +418,16 @@ mod tests {
         );
         assert_eq!(agent.stats().fused_stages, 0);
         assert_eq!(agent.stats().streamed_handoffs, 0);
+    }
+
+    #[test]
+    fn declared_channel_requires_both_markers() {
+        let agent = OptimizerAgent::new();
+        assert!(agent.process_declared("sum", true, true));
+        assert!(!agent.process_declared("concat", true, false));
+        assert!(!agent.process_declared("sub", false, true));
+        let s = agent.stats();
+        assert_eq!((s.declared_accepted, s.declared_rejected), (1, 2));
     }
 
     #[test]

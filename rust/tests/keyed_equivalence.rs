@@ -1,0 +1,389 @@
+//! Keyed-plan equivalence — the declared channel vs the inferred channel.
+//!
+//! The keyed dataset algebra must be a pure API redesign: for the same
+//! workload, `reduce_by_key`/`aggregate_by_key` over declared semantics
+//! and `map_reduce` over an RIR reducer must produce identical results
+//! under every optimizer mode (`Auto`, `Off`, `GenericOnly`), and the
+//! declared combining flow must provably collapse the shuffle — fewer
+//! holders than pairs, fewer bytes than the list flow ships — while the
+//! `PlanReport` names the channel that fired (`CombinerSource::Declared`
+//! vs `Inferred`). Plus join/co_group correctness on a two-source plan.
+
+use mr4r::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
+use mr4r::api::keyed::Aggregator;
+use mr4r::api::{Emitter, KeyValue, Runtime};
+use mr4r::benchmarks::{datagen, word_count};
+use mr4r::optimizer::agent::CombinerSource;
+
+const MODES: [OptimizeMode; 3] = [
+    OptimizeMode::Auto,
+    OptimizeMode::Off,
+    OptimizeMode::GenericOnly,
+];
+
+fn rt(threads: usize) -> Runtime {
+    Runtime::with_config(JobConfig::fast().with_threads(threads))
+}
+
+/// The keyed word count used throughout: `(word, 1)` pairs, declared sum.
+fn keyed_wc(
+    rt: &Runtime,
+    lines: &[String],
+    mode: OptimizeMode,
+) -> mr4r::api::PlanOutput<KeyValue<String, i64>> {
+    rt.dataset(lines)
+        .optimize(mode)
+        .flat_map(|line: &String, sink: &mut dyn FnMut((String, i64))| {
+            for w in line.split_ascii_whitespace() {
+                sink((w.to_string(), 1));
+            }
+        })
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .collect_sorted()
+}
+
+/// The same workload through the inferred channel (RIR reducer).
+fn inferred_wc(
+    rt: &Runtime,
+    lines: &[String],
+    mode: OptimizeMode,
+) -> mr4r::api::PlanOutput<KeyValue<String, i64>> {
+    rt.dataset(lines)
+        .optimize(mode)
+        .map_reduce(word_count::map_line, word_count::reducer())
+        .collect_sorted()
+}
+
+#[test]
+fn reduce_by_key_matches_map_reduce_pair_for_pair_under_every_mode() {
+    let lines = datagen::wordcount_text(0.0003, 311);
+    let rt = rt(3);
+    for mode in MODES {
+        let declared = keyed_wc(&rt, &lines, mode);
+        let inferred = inferred_wc(&rt, &lines, mode);
+        assert_eq!(
+            declared.items, inferred.items,
+            "keyed vs map_reduce results differ under {mode:?}"
+        );
+        let expect_flow = match mode {
+            OptimizeMode::Off => ExecutionFlow::Reduce,
+            _ => ExecutionFlow::Combine,
+        };
+        assert_eq!(declared.metrics().flow, expect_flow, "{mode:?}");
+        assert_eq!(inferred.metrics().flow, expect_flow, "{mode:?}");
+    }
+}
+
+/// A hand-declared aggregator with a non-trivial holder: mean via a
+/// `(sum, count)` pair (exactly the holder shape the paper's Fig. 4
+/// discussion uses for non-invertible folds).
+struct MeanAgg;
+
+impl Aggregator<f64, (f64, i64), f64> for MeanAgg {
+    const ASSOCIATIVE: bool = true;
+    const COMMUTATIVE: bool = true;
+
+    fn init(&self) -> (f64, i64) {
+        (0.0, 0)
+    }
+
+    fn combine(&self, holder: &mut (f64, i64), value: f64) {
+        holder.0 += value;
+        holder.1 += 1;
+    }
+
+    fn finish(&self, holder: (f64, i64)) -> f64 {
+        holder.0 / holder.1 as f64
+    }
+
+    fn name(&self) -> &str {
+        "test.mean"
+    }
+}
+
+#[test]
+fn aggregate_by_key_is_mode_invariant() {
+    // One worker: float fold order is deterministic, so byte-identical
+    // across modes is a meaningful bar (i64 paths get it at any width).
+    let rt = rt(1);
+    let data: Vec<(i64, f64)> = (0..500).map(|i| (i % 7, (i % 23) as f64)).collect();
+    let run = |mode: OptimizeMode| {
+        rt.dataset(&data)
+            .optimize(mode)
+            .keyed()
+            .aggregate_by_key(MeanAgg)
+            .collect_sorted()
+    };
+    let auto = run(OptimizeMode::Auto);
+    let off = run(OptimizeMode::Off);
+    let generic = run(OptimizeMode::GenericOnly);
+    assert_eq!(auto.items, off.items, "declared combining changed results");
+    assert_eq!(auto.items, generic.items);
+    assert_eq!(auto.metrics().combiner_source, Some(CombinerSource::Declared));
+    assert_eq!(off.metrics().combiner_source, None);
+    assert_eq!(auto.items.len(), 7);
+}
+
+#[test]
+fn declared_combining_materializes_strictly_fewer_pairs() {
+    let lines = datagen::wordcount_text(0.0003, 312);
+    let rt = rt(4);
+    let auto = keyed_wc(&rt, &lines, OptimizeMode::Auto);
+    let off = keyed_wc(&rt, &lines, OptimizeMode::Off);
+    assert_eq!(auto.items, off.items, "sorted outputs must be byte-identical");
+
+    let m_auto = auto.metrics();
+    let m_off = off.metrics();
+    assert_eq!(m_auto.combiner_source, Some(CombinerSource::Declared));
+    assert_eq!(m_auto.shuffled_pairs, 0, "combining ships no raw pairs");
+    assert!(
+        m_auto.shuffled_holders < m_off.shuffled_pairs,
+        "holders {} must undercut pairs {}",
+        m_auto.shuffled_holders,
+        m_off.shuffled_pairs
+    );
+    assert!(
+        m_auto.shuffled_bytes < m_off.shuffled_bytes,
+        "holder bytes {} must undercut pair bytes {}",
+        m_auto.shuffled_bytes,
+        m_off.shuffled_bytes
+    );
+    // One holder per distinct key crosses the barrier.
+    assert_eq!(m_auto.shuffled_holders, m_auto.keys);
+    assert_eq!(m_off.shuffled_pairs, m_off.emits);
+}
+
+#[test]
+fn plan_report_names_the_semantic_channel() {
+    let lines = datagen::wordcount_text(0.0002, 313);
+    let rt = rt(2);
+    let declared = keyed_wc(&rt, &lines, OptimizeMode::Auto);
+    let inferred = inferred_wc(&rt, &lines, OptimizeMode::Auto);
+    assert_eq!(
+        declared.metrics().combiner_source,
+        Some(CombinerSource::Declared)
+    );
+    assert_eq!(
+        inferred.metrics().combiner_source,
+        Some(CombinerSource::Inferred)
+    );
+    // The inferred combine flow also ships holders, and reports so.
+    assert_eq!(inferred.metrics().shuffled_pairs, 0);
+    assert_eq!(inferred.metrics().shuffled_holders, inferred.metrics().keys);
+    let stats = rt.agent().stats();
+    assert_eq!(stats.declared_accepted, 1);
+    assert_eq!(stats.optimized, 1, "inferred channel still analyzes RIR");
+}
+
+#[test]
+fn join_produces_the_inner_join_and_co_group_keeps_unmatched() {
+    let rt = rt(2);
+    let orders: Vec<(i64, String)> = vec![
+        (1, "book".into()),
+        (2, "lamp".into()),
+        (1, "pen".into()),
+        (4, "desk".into()),
+    ];
+    let names: Vec<(i64, String)> = vec![
+        (1, "ada".into()),
+        (2, "grace".into()),
+        (3, "edsger".into()),
+    ];
+
+    let joined = rt
+        .dataset(&orders)
+        .keyed()
+        .join(rt.dataset(&names).keyed())
+        .collect();
+    let mut rows: Vec<(i64, (String, String))> = joined
+        .iter()
+        .map(|kv| (kv.key, kv.value.clone()))
+        .collect();
+    rows.sort();
+    assert_eq!(
+        rows,
+        vec![
+            (1, ("book".to_string(), "ada".to_string())),
+            (1, ("pen".to_string(), "ada".to_string())),
+            (2, ("lamp".to_string(), "grace".to_string())),
+        ],
+        "inner join: user 4 has no name row, user 3 has no orders"
+    );
+
+    let cg = rt
+        .dataset(&orders)
+        .keyed()
+        .co_group(rt.dataset(&names).keyed())
+        .collect_sorted();
+    assert_eq!(cg.items.len(), 4, "co-group keeps keys from either side");
+    let k3 = cg.items.iter().find(|kv| kv.key == 3).unwrap();
+    assert!(k3.value.0.is_empty());
+    assert_eq!(k3.value.1, vec!["edsger".to_string()]);
+    let k4 = cg.items.iter().find(|kv| kv.key == 4).unwrap();
+    assert_eq!(k4.value.0, vec!["desk".to_string()]);
+    assert!(k4.value.1.is_empty());
+}
+
+#[test]
+fn joined_plans_chain_into_keyed_aggregates() {
+    // The example's shape, as a test: join, re-key, declared aggregate —
+    // checked against a hand-computed rollup.
+    let rt = rt(2);
+    let clicks: Vec<(String, String)> = vec![
+        ("u1".into(), "/a".into()),
+        ("u1".into(), "/b".into()),
+        ("u2".into(), "/a".into()),
+        ("u3".into(), "/c".into()), // unknown user: dropped by the join
+    ];
+    let regions: Vec<(String, String)> = vec![
+        ("u1".into(), "eu".into()),
+        ("u2".into(), "us".into()),
+    ];
+    let out = rt
+        .dataset(&clicks)
+        .keyed()
+        .join(rt.dataset(&regions).keyed())
+        .map(|kv: &KeyValue<String, (String, String)>| (kv.value.1.clone(), 1i64))
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .collect_sorted();
+    assert_eq!(
+        out.items,
+        vec![
+            KeyValue::new("eu".to_string(), 2),
+            KeyValue::new("us".to_string(), 1),
+        ]
+    );
+    assert_eq!(out.metrics().combiner_source, Some(CombinerSource::Declared));
+}
+
+#[test]
+fn group_by_key_matches_an_explicit_reduce_grouping() {
+    // group_by_key never map-combines (declared non-commutative); its
+    // grouped lists must still contain exactly the emitted values (list
+    // order follows chunk scheduling, so compare as sorted multisets).
+    let rt = rt(2);
+    let data: Vec<(i64, i64)> = (0..40).map(|i| (i % 5, i)).collect();
+    let grouped = rt.dataset(&data).keyed().group_by_key().collect_sorted();
+    assert_eq!(grouped.metrics().flow, ExecutionFlow::Reduce);
+    assert_eq!(grouped.items.len(), 5);
+    for kv in &grouped {
+        let mut got = kv.value.clone();
+        got.sort_unstable();
+        let expect: Vec<i64> = (0..40).filter(|i| i % 5 == kv.key).collect();
+        assert_eq!(got, expect, "key {}", kv.key);
+    }
+}
+
+#[test]
+fn keyed_layer_frees_keys_from_the_ir_value_domain() {
+    // Tuple-keyed aggregation: impossible on the inferred channel (RIR
+    // keys must lift into the IR's value domain) — the declared channel
+    // only needs Hash + Eq + HeapSized.
+    let rt = rt(2);
+    let data: Vec<((String, i64), i64)> = vec![
+        (("a".into(), 1), 10),
+        (("a".into(), 1), 5),
+        (("a".into(), 2), 7),
+        (("b".into(), 1), 1),
+    ];
+    let out = rt
+        .dataset(&data)
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .collect_sorted();
+    assert_eq!(
+        out.items,
+        vec![
+            KeyValue::new(("a".to_string(), 1), 15),
+            KeyValue::new(("a".to_string(), 2), 7),
+            KeyValue::new(("b".to_string(), 1), 1),
+        ]
+    );
+    assert_eq!(out.metrics().flow, ExecutionFlow::Combine);
+}
+
+#[test]
+fn legacy_benchmark_entry_points_ride_the_keyed_api() {
+    // word_count::run_mr4r migrated to the keyed algebra; its digest and
+    // flows must still match the eager JobBuilder path (the shim the
+    // rest of the suite leans on).
+    let lines = datagen::wordcount_text(0.0002, 314);
+    let rt = rt(3);
+    for mode in MODES {
+        let cfg = JobConfig::fast().with_threads(3).with_optimize(mode);
+        let (keyed_out, m) = word_count::run_mr4r(&lines, &rt, &cfg);
+        let mut keyed_out: Vec<(String, i64)> =
+            keyed_out.into_iter().map(|kv| (kv.key, kv.value)).collect();
+        keyed_out.sort();
+        let job_out = rt
+            .job(word_count::map_line, word_count::reducer())
+            .with_config(cfg.clone())
+            .sorted()
+            .run(&lines);
+        let job_out: Vec<(String, i64)> = job_out.into_tuples();
+        assert_eq!(keyed_out, job_out, "{mode:?}");
+        match mode {
+            OptimizeMode::Off => assert_eq!(m.flow, ExecutionFlow::Reduce),
+            _ => {
+                assert_eq!(m.flow, ExecutionFlow::Combine);
+                assert_eq!(m.combiner_source, Some(CombinerSource::Declared));
+            }
+        }
+    }
+}
+
+#[test]
+fn count_by_key_equals_reduce_by_key_over_ones() {
+    let rt = rt(2);
+    let words: Vec<String> = datagen::wordcount_text(0.0002, 315)
+        .iter()
+        .flat_map(|l| l.split_ascii_whitespace().map(str::to_string).collect::<Vec<_>>())
+        .collect();
+    let counted = rt
+        .dataset(&words)
+        .key_by(|w| w.clone())
+        .count_by_key()
+        .collect_sorted();
+    let reduced = rt
+        .dataset(&words)
+        .map(|w| (w.clone(), 1i64))
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .collect_sorted();
+    assert_eq!(counted.items, reduced.items);
+}
+
+#[test]
+fn emitter_api_still_composes_with_keyed_plans() {
+    // A map_reduce stage (inferred) feeding a keyed aggregate (declared):
+    // both channels in one plan, each reported on its own stage.
+    let lines = datagen::wordcount_text(0.0002, 316);
+    let rt = rt(2);
+    let out = rt
+        .dataset(&lines)
+        .map_reduce(
+            |line: &String, em: &mut dyn Emitter<String, i64>| {
+                for w in line.split_ascii_whitespace() {
+                    em.emit(w.to_string(), 1);
+                }
+            },
+            word_count::reducer(),
+        )
+        .map(|kv: &KeyValue<String, i64>| (kv.value, 1i64))
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .collect_sorted();
+    assert_eq!(out.report.stage_metrics.len(), 2);
+    assert_eq!(
+        out.report.stage_metrics[0].combiner_source,
+        Some(CombinerSource::Inferred)
+    );
+    assert_eq!(
+        out.report.stage_metrics[1].combiner_source,
+        Some(CombinerSource::Declared)
+    );
+    let total: i64 = out.iter().map(|kv| kv.value).sum();
+    assert_eq!(total as usize, out.report.stage_metrics[0].results as usize);
+}
