@@ -20,9 +20,11 @@
 //!   with a user [`Aggregator`] triple, `group_by_key`, `count_by_key`,
 //!   and two-input `join`/`co_group` (see [`keyed`]).
 //! * [`Runtime`]/[`JobBuilder`] — the eager session API: a persistent
-//!   worker pool, a shared optimizer agent, streaming [`InputSource`]s,
-//!   output ordering contracts, and job chaining via
-//!   [`Runtime::pipeline`]. Now a thin shim over one-stage plans.
+//!   **multi-tenant** worker pool (concurrent jobs from many driver
+//!   threads share the workers fairly; see [`Runtime::spawn_plan`]), a
+//!   shared optimizer agent, streaming [`InputSource`]s, output ordering
+//!   contracts, and job chaining via [`Runtime::pipeline`]. Now a thin
+//!   shim over one-stage plans.
 //! * [`MapReduce`] — the paper's one-shot façade, kept as a thin shim
 //!   over a private session.
 
@@ -40,6 +42,6 @@ pub use job::{JobReport, MapReduce};
 pub use keyed::{Aggregator, KeyedDataset};
 pub use plan::{Dataset, PlanOutput, PlanReport, StageInfo, StageKind};
 pub use reducers::RirReducer;
-pub use runtime::{JobBuilder, JobOutput, Pipeline, Runtime};
+pub use runtime::{JobBuilder, JobOutput, Pipeline, PlanHandle, Runtime};
 pub use source::{ChunkedSource, Feed, InputSource, IterSource};
 pub use traits::{Emitter, HeapSized, KeyKind, KeyValue, Mapper, Reducer, VecEmitter};

@@ -38,6 +38,14 @@
 //! application records `map`/`map_reduce` calls; whether a stage fuses,
 //! streams, or combines is the agent's decision, never the caller's.
 //!
+//! Plans are **multi-tenant**: any number of driver threads may record
+//! and `collect()` plans against one shared [`Runtime`] concurrently.
+//! Each stage submits a tagged batch to the session's multi-tenant pool
+//! (workers round-robin across active batches, so short plans are not
+//! head-of-line blocked behind long ones), and every collect owns its
+//! own [`PlanReport`] — per-stage metrics never mix across tenants. See
+//! [`Runtime::spawn_plan`] for the joinable driver-thread entry point.
+//!
 //! ```ignore
 //! let rt = Runtime::new();
 //! let rollup = rt

@@ -46,8 +46,19 @@ use crate::optimizer::value::RirValue;
 
 /// A long-lived execution session: worker pool + optimizer agent + heap.
 ///
-/// Create one per application (or per tenant), submit many jobs to it.
-/// `Runtime` is `Send + Sync`; jobs are serialized on the pool.
+/// Create one per application, submit many jobs to it — from many driver
+/// threads at once. `Runtime` is `Send + Sync` and genuinely
+/// multi-tenant: each job phase submits a tagged batch to the shared
+/// pool, and workers pull round-robin across the active batches, so
+/// concurrent `collect()`/`run()` calls from different threads overlap
+/// on the same workers instead of head-of-line blocking each other (a
+/// short interactive plan is not stuck behind a long analytics plan).
+/// A panicking job fails only its own driver; concurrent jobs complete
+/// unaffected.
+///
+/// Drive concurrency either by sharing `&Runtime` across scoped threads,
+/// or with [`Runtime::spawn_plan`], which returns a joinable
+/// [`PlanHandle`].
 pub struct Runtime {
     pool: WorkerPool,
     agent: OptimizerAgent,
@@ -118,11 +129,12 @@ impl Runtime {
     /// reducer may borrow state that outlives the session borrow (e.g. a
     /// matrix tile table) — they need not be `'static`.
     ///
-    /// Jobs on one session are serialized on its worker pool. Do **not**
-    /// submit a job from inside another job's mapper or reducer on the
-    /// same `Runtime` — the inner run would wait on the pool the outer
-    /// job holds and deadlock. Chain jobs from the driver (see
-    /// [`Runtime::pipeline`]) instead.
+    /// Jobs submitted from different *driver threads* run concurrently
+    /// and share the pool fairly. Do **not** submit a job from inside
+    /// another job's mapper or reducer on the same `Runtime` — with every
+    /// worker blocked in a nested submission the pool has no thread left
+    /// to drain it. Chain jobs from driver threads (see
+    /// [`Runtime::pipeline`], [`Runtime::spawn_plan`]) instead.
     pub fn job<'rt, I, K, V>(
         &'rt self,
         mapper: impl Mapper<I, K, V> + 'rt,
@@ -159,11 +171,72 @@ impl Runtime {
     /// `map_reduce`) execute only at `collect()`, after the session
     /// agent's whole-plan pass has fused element-wise stages and arranged
     /// reduce handoffs to stream — see [`crate::api::plan`].
+    ///
+    /// `collect()` may be called from any number of threads sharing this
+    /// session concurrently; each plan gets its own isolated
+    /// [`crate::api::plan::PlanReport`] and per-stage
+    /// [`FlowMetrics`].
     pub fn dataset<'rt, I: 'rt>(
         &'rt self,
         source: impl InputSource<I> + 'rt,
     ) -> Dataset<'rt, I> {
         Dataset::over(self, Box::new(source), self.config.clone())
+    }
+
+    /// Spawn a dedicated **driver thread** running `f` over this shared
+    /// session and return a joinable [`PlanHandle`] — the multi-tenant
+    /// entry point when scoped threads are inconvenient. The closure gets
+    /// `&Runtime` and typically records and collects one plan (or a whole
+    /// pipeline); its jobs interleave fairly with every other tenant's on
+    /// the session pool.
+    ///
+    /// Panic isolation: if `f` panics (e.g. a mapper panics), the panic
+    /// is captured in the handle and re-raised only at
+    /// [`PlanHandle::join`] — concurrent plans on the same session are
+    /// unaffected. Use [`PlanHandle::try_join`] to observe the panic as a
+    /// value instead of propagating it.
+    ///
+    /// The receiver is an owned `Arc` (the driver thread keeps the
+    /// session alive); spawning several tenants from one handle is
+    /// `Arc::clone(&rt).spawn_plan(...)` — the clone is two atomic ops.
+    pub fn spawn_plan<T, F>(self: Arc<Self>, f: F) -> PlanHandle<T>
+    where
+        T: Send + 'static,
+        F: FnOnce(&Runtime) -> T + Send + 'static,
+    {
+        let thread = std::thread::Builder::new()
+            .name("mr4r-driver".into())
+            .spawn(move || f(&self))
+            .expect("spawn plan driver thread");
+        PlanHandle { thread }
+    }
+}
+
+/// A joinable handle to a plan driver spawned with [`Runtime::spawn_plan`].
+pub struct PlanHandle<T> {
+    thread: std::thread::JoinHandle<T>,
+}
+
+impl<T> PlanHandle<T> {
+    /// Whether the driver has finished (without blocking).
+    pub fn is_finished(&self) -> bool {
+        self.thread.is_finished()
+    }
+
+    /// Wait for the driver and return its result, propagating its panic
+    /// to the joiner (and only to the joiner — other tenants never see
+    /// it).
+    pub fn join(self) -> T {
+        match self.thread.join() {
+            Ok(v) => v,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    }
+
+    /// Wait for the driver, surfacing a tenant panic as `Err` instead of
+    /// resuming it — what panic-isolation tests assert on.
+    pub fn try_join(self) -> std::thread::Result<T> {
+        self.thread.join()
     }
 }
 
@@ -531,6 +604,29 @@ mod tests {
         assert_eq!(total, 6105);
         assert_eq!(pipe.jobs_run(), 3);
         assert_eq!(rt.agent().stats().cache_hits, 2);
+    }
+
+    #[test]
+    fn spawn_plan_drivers_share_one_session() {
+        let rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(2)));
+        let spawned = rt.spawned_threads();
+        let handles: Vec<_> = (0..3)
+            .map(|_| {
+                Arc::clone(&rt).spawn_plan(|rt| {
+                    rt.job(
+                        wc_mapper,
+                        RirReducer::<String, i64>::new(canon::sum_i64("rt.spawn")),
+                    )
+                    .sorted()
+                    .run(&lines())
+                    .into_tuples()
+                })
+            })
+            .collect();
+        let outs: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        assert!(outs.iter().all(|o| o == &outs[0]));
+        assert_eq!(outs[0].last().unwrap(), &("the".to_string(), 3));
+        assert_eq!(rt.spawned_threads(), spawned, "tenants share one pool");
     }
 
     #[test]

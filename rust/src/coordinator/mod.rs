@@ -8,8 +8,10 @@
 //!   ForkJoinPool stand-in; nothing like rayon exists in the offline vendor
 //!   set, and the paper's framing makes the scheduler part of the system
 //!   anyway), in two flavours: the batch-scoped [`TaskPool`] and the
-//!   persistent [`WorkerPool`] that [`crate::api::Runtime`] sessions reuse
-//!   across jobs.
+//!   persistent multi-tenant [`WorkerPool`] that [`crate::api::Runtime`]
+//!   sessions reuse across jobs — concurrent jobs submit tagged
+//!   [`scheduler::Batch`]es and share the workers round-robin at task
+//!   granularity.
 //! * [`splitter`] — input chunking: "the input is split and individually
 //!   passed as an argument to the map method".
 //! * [`collector`] — the thread-safe hash table of intermediate pairs, in
@@ -32,5 +34,5 @@ pub mod splitter;
 pub use collector::{HolderCollector, ListCollector};
 pub use pipeline::{run_job, run_job_on, run_job_sharded, FlowMetrics};
 pub use planner::{lower, PhysicalPlan};
-pub use scheduler::{TaskPool, WorkerPool};
+pub use scheduler::{Batch, BatchId, BatchSnapshot, PoolStats, TaskPool, WorkerPool};
 pub use splitter::split_indices;

@@ -19,20 +19,30 @@
 //! Result pairs are collected per shard and concatenated in shard index
 //! order, so output ordering does not depend on which reduce task finished
 //! first.
+//!
+//! Since the multi-tenant scheduler redesign, every job opens one tagged
+//! [`Batch`] on the pool and submits both of its phases through it, so
+//! concurrent jobs from different driver threads interleave fairly on the
+//! shared workers instead of serializing. Each job also charges
+//! **job-private** heap cohorts ([`crate::memsim::SimHeap::scoped_cohort`])
+//! rather than name-deduplicated session cohorts, so one job's
+//! end-of-job cohort release can never clobber a concurrently running
+//! job's live accounting, and [`FlowMetrics::gc`] reports allocation
+//! counts attributed exactly to this job even when tenants share a heap.
 
 use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use super::collector::{
     shard_count, AggregateCollector, CollectorCohorts, HolderCollector, ListCollector,
 };
-use super::scheduler::{PoolStats, WorkerPool};
+use super::scheduler::{Batch, BatchId, PoolStats, WorkerPool};
 use super::splitter::split_indices;
 use crate::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
 use crate::api::source::Feed;
 use crate::api::traits::{Emitter, HeapSized, KeyValue, Mapper, Reducer};
-use crate::memsim::{CohortId, GcStats, ThreadAlloc};
+use crate::memsim::{CohortId, GcStats, SimHeap, ThreadAlloc};
 use crate::optimizer::agent::{CombinerSource, Decision, OptimizerAgent};
 use crate::optimizer::value::RirValue;
 use crate::util::timer::Stopwatch;
@@ -76,29 +86,101 @@ pub struct FlowMetrics {
     pub keys: u64,
     /// Result pairs produced.
     pub results: u64,
-    /// GC activity during this job (delta of the shared heap's stats).
+    /// GC activity during this job. Collection/pause counters are the
+    /// delta of the (possibly shared) heap's stats over the job;
+    /// `allocated_bytes`/`allocated_objects` are attributed exactly to
+    /// this job via its private cohorts, so they stay correct when
+    /// concurrent jobs share one session heap.
     pub gc: GcStats,
     /// Map-phase scheduling stats.
     pub map_pool: PoolStats,
+    /// The pool batch this job's phases ran under — the per-tenant
+    /// scheduling tag ([`crate::coordinator::scheduler::Batch`]).
+    pub batch: BatchId,
+    /// Cumulative scheduling stats of this job's batch across both phases
+    /// (map + reduce/finalize). Per-batch values sum to
+    /// [`WorkerPool::totals`] between quiescent points.
+    pub batch_pool: PoolStats,
 }
 
-/// The memsim cohorts a job charges.
+/// The memsim cohorts a job charges, released on drop — on success *and*
+/// unwind: a panicking tenant must not leak its scoped cohort slots (or
+/// their live bytes) on a shared session heap, or every surviving
+/// tenant's GC accounting would degrade with each panic.
 struct JobCohorts {
+    heap: Arc<SimHeap>,
     collector: CollectorCohorts,
     scratch: CohortId,
     results: CohortId,
 }
 
+/// Register this job's **private** cohorts. Scoped (not name-deduplicated)
+/// registration is what makes shared-session GC accounting safe under
+/// concurrent jobs: two tenants both running word counts get disjoint
+/// cohort ids, so the end-of-job release only kills *this* job's bytes
+/// and per-job allocation attribution stays exact.
 fn job_cohorts(cfg: &JobConfig) -> JobCohorts {
     JobCohorts {
+        heap: Arc::clone(&cfg.heap),
         collector: CollectorCohorts {
-            keys: cfg.heap.cohort("mr4r.keys"),
-            intermediate: cfg.heap.cohort("mr4r.intermediate"),
-            holders: cfg.heap.cohort("mr4r.holders"),
+            keys: cfg.heap.scoped_cohort("mr4r.keys"),
+            intermediate: cfg.heap.scoped_cohort("mr4r.intermediate"),
+            holders: cfg.heap.scoped_cohort("mr4r.holders"),
         },
-        scratch: cfg.heap.cohort("mr4r.scratch"),
-        results: cfg.heap.cohort("mr4r.results"),
+        scratch: cfg.heap.scoped_cohort("mr4r.scratch"),
+        results: cfg.heap.scoped_cohort("mr4r.results"),
     }
+}
+
+impl JobCohorts {
+    fn ids(&self) -> [CohortId; 5] {
+        [
+            self.collector.keys,
+            self.collector.intermediate,
+            self.collector.holders,
+            self.scratch,
+            self.results,
+        ]
+    }
+
+    /// Sum this job's own allocation counters (its per-plan GC delta —
+    /// exact even when concurrent jobs share the session heap, unlike
+    /// the heap-global counters).
+    fn allocated(&self) -> (u64, u64) {
+        let mut bytes = 0u64;
+        let mut objects = 0u64;
+        for id in self.ids() {
+            let (b, o) = self.heap.cohort_allocated(id);
+            bytes += b;
+            objects += o;
+        }
+        (bytes, objects)
+    }
+}
+
+impl Drop for JobCohorts {
+    fn drop(&mut self) {
+        for id in self.ids() {
+            self.heap.release_cohort(id);
+        }
+    }
+}
+
+/// The end-of-job epilogue every flow shares: read the job's exact
+/// allocation attribution, release its cohorts (by consuming `cohorts`),
+/// and assemble the GC delta plus the batch tag for the flow's metrics.
+fn job_epilogue(
+    cfg: &JobConfig,
+    cohorts: JobCohorts,
+    gc_before: &GcStats,
+    batch: &Batch<'_>,
+) -> (GcStats, BatchId, PoolStats) {
+    let (alloc_bytes, alloc_objects) = cohorts.allocated();
+    drop(cohorts);
+    let mut gc = cfg.heap.stats().since(gc_before);
+    gc.allocated_bytes = alloc_bytes;
+    gc.allocated_objects = alloc_objects;
+    (gc, batch.id(), batch.stats())
 }
 
 /// Run a complete MapReduce job on a transient pool (the legacy slice
@@ -177,18 +259,21 @@ where
         }
     };
 
+    // One tagged batch per job: both phases submit through it, so this
+    // job's scheduling is observable (and fair against concurrent jobs).
+    let batch = pool.batch();
     match decision {
         Some(Decision::Combine(combiner)) => {
-            run_combine_flow(pool, mapper, feed, cfg, combiner)
+            run_combine_flow(&batch, mapper, feed, cfg, combiner)
         }
         Some(Decision::Fallback(reason)) => {
-            run_reduce_flow(pool, mapper, reducer, feed, cfg, Some(reason.to_string()))
+            run_reduce_flow(&batch, mapper, reducer, feed, cfg, Some(reason.to_string()))
         }
         Some(Decision::Opaque) => {
-            run_reduce_flow(pool, mapper, reducer, feed, cfg, Some("opaque reducer".into()))
+            run_reduce_flow(&batch, mapper, reducer, feed, cfg, Some("opaque reducer".into()))
         }
         None => {
-            run_reduce_flow(pool, mapper, reducer, feed, cfg, Some("optimizer off".into()))
+            run_reduce_flow(&batch, mapper, reducer, feed, cfg, Some("optimizer off".into()))
         }
     }
 }
@@ -261,9 +346,10 @@ impl<K, V> Emitter<K, V> for ResultEmitter<K, V> {
 /// ranges (one task each, work-stealing balances the rest); stream feeds
 /// run one puller task per worker, each looping "pull chunk → map chunk"
 /// so un-materialized inputs stay bounded in memory. `map_chunk` maps one
-/// chunk of inputs and returns its emit count.
+/// chunk of inputs and returns its emit count. Tasks submit through the
+/// job's tagged [`Batch`], never assuming exclusive pool ownership.
 fn map_phase<I: Send + Sync>(
-    pool: &WorkerPool,
+    batch: &Batch<'_>,
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     map_chunk: &(dyn Fn(&[I]) -> u64 + Sync),
@@ -272,7 +358,7 @@ fn map_phase<I: Send + Sync>(
     let stats = match feed {
         Feed::Slice(inputs) => {
             let chunks = split_indices(inputs.len(), cfg.threads * cfg.tasks_per_thread);
-            pool.run(
+            batch.run(
                 cfg.threads,
                 chunks
                     .into_iter()
@@ -287,7 +373,7 @@ fn map_phase<I: Send + Sync>(
         }
         Feed::Stream(puller) => {
             let puller = Mutex::new(puller);
-            pool.run(
+            batch.run(
                 cfg.threads,
                 (0..cfg.threads.max(1))
                     .map(|_| {
@@ -338,7 +424,7 @@ pub fn concat_shards<T>(shards: Vec<Vec<T>>) -> Vec<T> {
 // ---------------------------------------------------------------------
 
 fn run_reduce_flow<I, K, V>(
-    pool: &WorkerPool,
+    batch: &Batch<'_>,
     mapper: &dyn Mapper<I, K, V>,
     reducer: &dyn Reducer<K, V>,
     feed: Feed<'_, I>,
@@ -372,7 +458,7 @@ where
         em.alloc.flush();
         em.emits
     };
-    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
+    let (map_pool, emits) = map_phase(batch, feed, cfg, &map_chunk);
     let map_secs = map_sw.secs();
 
     // ---- Barrier; reduce phase over shards ----
@@ -382,7 +468,7 @@ where
     let shuffled_bytes = AtomicU64::new(0);
     let slots: Vec<Mutex<Vec<KeyValue<K, V>>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
-    pool.run(
+    batch.run(
         cfg.threads,
         shards
             .into_iter()
@@ -419,7 +505,7 @@ where
     let reduce_secs = reduce_sw.secs();
 
     let results = unwrap_slots(slots);
-    finish_job(cfg, &cohorts);
+    let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Reduce,
         combiner_source: None,
@@ -434,14 +520,16 @@ where
         emits,
         keys,
         results: results.iter().map(|s| s.len() as u64).sum(),
-        gc: cfg.heap.stats().since(&gc_before),
+        gc,
         map_pool,
+        batch: batch_id,
+        batch_pool,
     };
     (results, metrics)
 }
 
 fn run_combine_flow<I, K, V>(
-    pool: &WorkerPool,
+    batch: &Batch<'_>,
     mapper: &dyn Mapper<I, K, V>,
     feed: Feed<'_, I>,
     cfg: &JobConfig,
@@ -476,7 +564,7 @@ where
         em.alloc.flush();
         em.emits
     };
-    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
+    let (map_pool, emits) = map_phase(batch, feed, cfg, &map_chunk);
     let map_secs = map_sw.secs();
 
     // ---- Barrier; finalize phase (no reduce phase at all) ----
@@ -486,7 +574,7 @@ where
     let shuffled_bytes = AtomicU64::new(0);
     let slots: Vec<Mutex<Vec<KeyValue<K, V>>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
-    pool.run(
+    batch.run(
         cfg.threads,
         shards
             .into_iter()
@@ -522,7 +610,7 @@ where
     let reduce_secs = fin_sw.secs();
 
     let results = unwrap_slots(slots);
-    finish_job(cfg, &cohorts);
+    let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Combine,
         combiner_source: Some(CombinerSource::Inferred),
@@ -537,8 +625,10 @@ where
         emits,
         keys,
         results: results.iter().map(|s| s.len() as u64).sum(),
-        gc: cfg.heap.stats().since(&gc_before),
+        gc,
         map_pool,
+        batch: batch_id,
+        batch_pool,
     };
     (results, metrics)
 }
@@ -600,8 +690,10 @@ where
         OptimizeMode::Off => false,
         _ => agent.process_declared(class, associative, commutative),
     };
+    // One tagged batch per keyed stage, like `run_job_sharded`.
+    let batch = pool.batch();
     if combine {
-        run_declared_combine_flow(pool, pairs, &init, &fold, &finish, feed, cfg)
+        run_declared_combine_flow(&batch, pairs, &init, &fold, &finish, feed, cfg)
     } else {
         let reason = if matches!(cfg.optimize, OptimizeMode::Off) {
             "optimizer off"
@@ -610,14 +702,14 @@ where
         } else {
             "declared non-commutative"
         };
-        run_keyed_list_flow(pool, pairs, &init, &fold, &finish, feed, cfg, reason)
+        run_keyed_list_flow(&batch, pairs, &init, &fold, &finish, feed, cfg, reason)
     }
 }
 
 /// The declared combining flow: fold pairs into typed holders at emit
 /// time, ship one holder per key (mirrors [`run_combine_flow`]).
 fn run_declared_combine_flow<I, K, V, H, O>(
-    pool: &WorkerPool,
+    batch: &Batch<'_>,
     pairs: PairFn<'_, I, K, V>,
     init: &(dyn Fn() -> H + Sync),
     fold: &(dyn Fn(&mut H, V) + Sync),
@@ -655,7 +747,7 @@ where
         alloc.flush();
         emits
     };
-    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
+    let (map_pool, emits) = map_phase(batch, feed, cfg, &map_chunk);
     let map_secs = map_sw.secs();
 
     // ---- Barrier; finish phase (one holder per key) ----
@@ -665,7 +757,7 @@ where
     let shuffled_bytes = AtomicU64::new(0);
     let slots: Vec<Mutex<Vec<KeyValue<K, O>>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
-    pool.run(
+    batch.run(
         cfg.threads,
         shards
             .into_iter()
@@ -696,7 +788,7 @@ where
     let reduce_secs = fin_sw.secs();
 
     let results = unwrap_slots(slots);
-    finish_job(cfg, &cohorts);
+    let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Combine,
         combiner_source: Some(CombinerSource::Declared),
@@ -711,8 +803,10 @@ where
         emits,
         keys,
         results: results.iter().map(|s| s.len() as u64).sum(),
-        gc: cfg.heap.stats().since(&gc_before),
+        gc,
         map_pool,
+        batch: batch_id,
+        batch_pool,
     };
     (results, metrics)
 }
@@ -721,7 +815,7 @@ where
 /// sequentially per key after the barrier (mirrors [`run_reduce_flow`]).
 #[allow(clippy::too_many_arguments)]
 fn run_keyed_list_flow<I, K, V, H, O>(
-    pool: &WorkerPool,
+    batch: &Batch<'_>,
     pairs: PairFn<'_, I, K, V>,
     init: &(dyn Fn() -> H + Sync),
     fold: &(dyn Fn(&mut H, V) + Sync),
@@ -759,7 +853,7 @@ where
         alloc.flush();
         emits
     };
-    let (map_pool, emits) = map_phase(pool, feed, cfg, &map_chunk);
+    let (map_pool, emits) = map_phase(batch, feed, cfg, &map_chunk);
     let map_secs = map_sw.secs();
 
     // ---- Barrier; per-key fold over shards ----
@@ -769,7 +863,7 @@ where
     let shuffled_bytes = AtomicU64::new(0);
     let slots: Vec<Mutex<Vec<KeyValue<K, O>>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
-    pool.run(
+    batch.run(
         cfg.threads,
         shards
             .into_iter()
@@ -808,7 +902,7 @@ where
     let reduce_secs = reduce_sw.secs();
 
     let results = unwrap_slots(slots);
-    finish_job(cfg, &cohorts);
+    let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);
     let metrics = FlowMetrics {
         flow: ExecutionFlow::Reduce,
         combiner_source: None,
@@ -823,19 +917,12 @@ where
         emits,
         keys,
         results: results.iter().map(|s| s.len() as u64).sum(),
-        gc: cfg.heap.stats().since(&gc_before),
+        gc,
         map_pool,
+        batch: batch_id,
+        batch_pool,
     };
     (results, metrics)
-}
-
-/// End-of-job heap hygiene: every job-scoped cohort is dead now.
-fn finish_job(cfg: &JobConfig, cohorts: &JobCohorts) {
-    cfg.heap.release_cohort(cohorts.collector.keys);
-    cfg.heap.release_cohort(cohorts.collector.intermediate);
-    cfg.heap.release_cohort(cohorts.collector.holders);
-    cfg.heap.release_cohort(cohorts.scratch);
-    cfg.heap.release_cohort(cohorts.results);
 }
 
 #[cfg(test)]

@@ -19,7 +19,11 @@
 //! worker pool and agent (so every stage reuses one pool, like eager
 //! session jobs), the lowered plan, and the per-stage metrics + plan-wide
 //! materialization accounting that become the final
-//! [`crate::api::plan::PlanReport`].
+//! [`crate::api::plan::PlanReport`]. One `PlanExec` exists per `collect`
+//! call and owns all of that run's mutable state, so concurrent plans on
+//! one session report isolated metrics — each stage they run submits its
+//! own tagged batch ([`crate::coordinator::scheduler::Batch`]) to the
+//! shared multi-tenant pool.
 
 use std::ops::Range;
 

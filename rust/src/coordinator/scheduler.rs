@@ -1,22 +1,31 @@
-//! A work-stealing task pool — the ForkJoinPool stand-in (paper §2.4: "The
+//! Work-stealing task pools — the ForkJoinPool stand-in (paper §2.4: "The
 //! ForkJoinPool class ... provide\[s\] a clean, off-the-shelf scheduler
 //! focusing on lightweight tasks executing on worker threads accessed from
 //! a work-stealing queue").
 //!
-//! Shape: a run submits a flat batch of tasks; each worker owns a deque
-//! seeded round-robin; workers pop their own deque LIFO (cache-warm) and
-//! steal FIFO from victims when empty (cold end — classic Chase-Lev
-//! discipline, implemented with mutexed deques since task granularity here
-//! is a whole input chunk, thousands of map calls, so queue ops are far off
-//! the critical path).
+//! Two pools live here:
 //!
-//! Workers are OS threads scoped to the run (`std::thread::scope`), so
-//! tasks may borrow from the caller's stack — which is exactly how the
-//! pipeline hands collectors and mappers to workers without `Arc`ing the
-//! world.
+//! * [`TaskPool`] — the batch-scoped pool (threads spawned per `run`,
+//!   `std::thread::scope`), kept for the transient legacy path.
+//! * [`WorkerPool`] — the persistent session pool a
+//!   [`crate::api::Runtime`] owns. Since the multi-tenant redesign it is a
+//!   **tagged-batch** scheduler: every submission is a [`Submission`]
+//!   with its own deques and counters, and idle workers pick work
+//!   **round-robin across the active submissions** (work-stealing stays
+//!   *inside* a submission). Concurrent jobs from different driver
+//!   threads therefore interleave at task granularity — a 10 ms
+//!   interactive plan is not head-of-line blocked behind a 10 s analytics
+//!   plan — and a panicking task fails only its own batch.
+//!
+//! Scheduling discipline inside a submission matches the classic
+//! Chase-Lev shape: per-worker deques seeded round-robin, LIFO self-pop
+//! (cache-warm), FIFO steal from victims (cold end). Queue operations sit
+//! under one pool mutex — task granularity is a whole input chunk,
+//! thousands of map calls, so queue traffic is far off the critical path,
+//! and a single mutex keeps the sleep/wake protocol easy to reason about.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 /// Counters exposed for tests and the perf harness.
@@ -137,34 +146,95 @@ impl TaskPool {
 }
 
 // ---------------------------------------------------------------------
-// Persistent worker pool — the runtime-session scheduler
+// Persistent worker pool — the multi-tenant session scheduler
 // ---------------------------------------------------------------------
 
 /// A task queued on a persistent worker (lifetime-erased; see the safety
 /// argument on [`WorkerPool::run`]).
 type Job = Box<dyn FnOnce(usize) + Send + 'static>;
 
-struct PoolState {
-    /// One deque per spawned worker, seeded round-robin per batch.
+/// Identifies one tenant batch on a [`WorkerPool`]. Every submission made
+/// through one [`Batch`] handle (a job's map phase, then its
+/// reduce/finalize phase) carries the same id, so a tenant's scheduling
+/// activity is observable end to end ([`WorkerPool::snapshot`],
+/// [`crate::coordinator::pipeline::FlowMetrics`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct BatchId(pub u64);
+
+/// One in-flight submission: a flat set of tasks with its own deques and
+/// its own pending/executed/steals/panicked counters plus completion
+/// condvar. The whole-pool mutex guards the bookkeeping, but nothing
+/// serializes *across* submissions — concurrent tenants share the workers
+/// at task granularity.
+struct Submission {
+    /// Unique per submission (monotonic), the wait key.
+    sub: u64,
+    /// Tenant tag: shared by all submissions of one [`Batch`] handle.
+    id: BatchId,
+    /// One deque per eligible worker (`wid < workers`), seeded round-robin.
     queues: Vec<VecDeque<Job>>,
-    /// Workers allowed to execute the current batch (`wid < active`);
-    /// the rest keep sleeping, so a session pool sized for the machine can
-    /// still run a 1-thread ablation job.
-    active: usize,
-    /// Submitted-but-unfinished tasks of the current batch.
+    /// Worker-concurrency cap for this submission (a session pool sized
+    /// for the machine can still run a 1-thread ablation job).
+    workers: usize,
+    /// Queued-or-running tasks not yet finished.
     pending: usize,
     executed: usize,
     steals: usize,
     panicked: usize,
+    /// The submitting thread sleeps here until `pending == 0`.
+    done_cv: Arc<Condvar>,
+}
+
+struct PoolState {
+    /// Every in-flight submission, oldest first.
+    subs: Vec<Submission>,
+    /// Fairness cursor: the submission index an idle worker scans first,
+    /// advanced past each served submission so active batches take turns
+    /// at task granularity (no batch starves while another has queued
+    /// tasks).
+    rr: usize,
+    /// Pool-lifetime totals — per-batch stats sum to these (asserted by
+    /// the testkit fairness property).
+    total_executed: usize,
+    total_steals: usize,
     shutdown: bool,
+}
+
+impl PoolState {
+    /// The fair pick: scan submissions round-robin from the cursor; within
+    /// a submission prefer the worker's own deque (LIFO end, cache-warm),
+    /// then steal from victims (FIFO end). Returns the submission index,
+    /// the task, and whether it was stolen.
+    fn pick(&mut self, wid: usize) -> Option<(usize, Job, bool)> {
+        let n = self.subs.len();
+        if n == 0 {
+            return None;
+        }
+        let start = self.rr % n;
+        for off in 0..n {
+            let si = (start + off) % n;
+            let s = &mut self.subs[si];
+            if wid >= s.workers {
+                continue;
+            }
+            if let Some(t) = s.queues[wid].pop_back() {
+                return Some((si, t, false));
+            }
+            for soff in 1..s.workers {
+                let victim = (wid + soff) % s.workers;
+                if let Some(t) = s.queues[victim].pop_front() {
+                    return Some((si, t, true));
+                }
+            }
+        }
+        None
+    }
 }
 
 struct PoolShared {
     state: Mutex<PoolState>,
-    /// Workers sleep here between batches.
+    /// Workers sleep here when no submission has a task for them.
     work_cv: Condvar,
-    /// The submitting thread sleeps here until `pending == 0`.
-    done_cv: Condvar,
 }
 
 impl PoolShared {
@@ -176,26 +246,41 @@ impl PoolShared {
     }
 }
 
-/// A **persistent** work-stealing pool: worker OS threads are spawned once
-/// per session and reused by every job, unlike [`TaskPool`] which scopes a
-/// fresh set of threads to each `run` call.
+/// An observable view of one in-flight batch ([`WorkerPool::snapshot`]):
+/// the overlap evidence the concurrency tests assert (two tenants both
+/// report executed tasks while a long batch is still pending).
+#[derive(Clone, Copy, Debug)]
+pub struct BatchSnapshot {
+    pub id: BatchId,
+    pub pending: usize,
+    pub executed: usize,
+    pub steals: usize,
+    pub panicked: usize,
+}
+
+/// A **persistent, multi-tenant** work-stealing pool: worker OS threads
+/// are spawned once per session and shared by every concurrently running
+/// job, unlike [`TaskPool`] which scopes a fresh set of threads to each
+/// `run` call.
 ///
 /// This is the pool a [`crate::api::Runtime`] owns. A k-means pipeline
 /// running 5 Lloyd iterations pays thread-spawn cost once, not 10× (map +
 /// reduce per iteration); [`WorkerPool::spawned_threads`] makes the reuse
 /// observable to tests.
 ///
-/// Scheduling discipline matches [`TaskPool`]: per-worker deques seeded
-/// round-robin, LIFO self-pop, FIFO steal from victims. Queue operations
-/// sit under one pool mutex — task granularity is a whole input chunk, so
-/// queue traffic is far off the critical path, and a single mutex keeps
-/// the sleep/wake protocol (two condvars) easy to reason about.
+/// Concurrency model: each `run`/[`Batch::run`] call submits a tagged
+/// batch of tasks and blocks until *that batch* drains. Submissions from
+/// different threads proceed in parallel — workers pull round-robin
+/// across the active batches (fairness) and steal within a batch
+/// (balance). A task panic is caught on the worker, counted against its
+/// own batch, and re-raised only on that batch's submitting thread after
+/// the batch drains; other tenants are unaffected.
 pub struct WorkerPool {
     shared: Arc<PoolShared>,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
-    /// Serializes batches: one job phase owns the workers at a time.
-    batch: Mutex<()>,
     spawned: AtomicUsize,
+    next_batch: AtomicU64,
+    next_sub: AtomicU64,
 }
 
 impl WorkerPool {
@@ -205,20 +290,18 @@ impl WorkerPool {
         let pool = WorkerPool {
             shared: Arc::new(PoolShared {
                 state: Mutex::new(PoolState {
-                    queues: Vec::new(),
-                    active: 0,
-                    pending: 0,
-                    executed: 0,
-                    steals: 0,
-                    panicked: 0,
+                    subs: Vec::new(),
+                    rr: 0,
+                    total_executed: 0,
+                    total_steals: 0,
                     shutdown: false,
                 }),
                 work_cv: Condvar::new(),
-                done_cv: Condvar::new(),
             }),
             handles: Mutex::new(Vec::new()),
-            batch: Mutex::new(()),
             spawned: AtomicUsize::new(0),
+            next_batch: AtomicU64::new(0),
+            next_sub: AtomicU64::new(0),
         };
         pool.ensure_workers(threads.max(1));
         pool
@@ -237,10 +320,6 @@ impl WorkerPool {
         if current >= n {
             return;
         }
-        {
-            let mut state = self.shared.lock();
-            state.queues.resize_with(n, VecDeque::new);
-        }
         for wid in current..n {
             let shared = Arc::clone(&self.shared);
             handles.push(
@@ -253,65 +332,139 @@ impl WorkerPool {
         self.spawned.store(n, Ordering::SeqCst);
     }
 
+    /// Open a tagged batch handle: all submissions made through it share
+    /// one [`BatchId`] and accumulate into one [`Batch::stats`]. One
+    /// handle per job (or per plan stage) is the pipeline convention.
+    pub fn batch(&self) -> Batch<'_> {
+        Batch {
+            pool: self,
+            id: BatchId(self.next_batch.fetch_add(1, Ordering::Relaxed)),
+            executed: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
+        }
+    }
+
     /// Run every task to completion on at most `workers` of the pool's
-    /// threads; returns scheduling stats. Panics (after the whole batch
-    /// has drained) if any task panicked.
+    /// threads; returns this batch's scheduling stats. Panics (after the
+    /// whole batch has drained) if any task panicked — only on *this*
+    /// caller; concurrent batches are unaffected.
     ///
     /// Tasks may borrow non-`'static` state from the caller's stack, like
     /// [`TaskPool::run`]. Safety: each task is lifetime-erased to be
     /// queued on persistent threads, and this function does not return
-    /// until every queued task has finished executing (the `pending`
-    /// count reaches zero under the pool mutex), so no borrow outlives
-    /// the frame that owns it. Do not call `run` from inside a pool task:
-    /// batches are serialized and the nested call would deadlock.
+    /// until every queued task has finished executing (the batch's
+    /// `pending` count reaches zero under the pool mutex), so no borrow
+    /// outlives the frame that owns it.
+    ///
+    /// Concurrent `run` calls from different threads interleave fairly;
+    /// submitting from *inside* a pool task is still unsupported (with
+    /// every worker blocked in a nested submit the pool has no thread
+    /// left to drain it) — chain jobs from driver threads instead.
     pub fn run<'scope, F>(&self, workers: usize, tasks: Vec<F>) -> PoolStats
     where
         F: FnOnce(usize) + Send + 'scope,
     {
+        self.batch().run(workers, tasks)
+    }
+
+    /// The in-flight batches, for observability (tests assert overlap:
+    /// a short tenant's finished batch reported executed tasks while a
+    /// long tenant's batch still shows `pending > 0`).
+    pub fn snapshot(&self) -> Vec<BatchSnapshot> {
+        let state = self.shared.lock();
+        let mut out = Vec::with_capacity(state.subs.len());
+        for s in &state.subs {
+            out.push(BatchSnapshot {
+                id: s.id,
+                pending: s.pending,
+                executed: s.executed,
+                steals: s.steals,
+                panicked: s.panicked,
+            });
+        }
+        out
+    }
+
+    /// Number of in-flight batches right now.
+    pub fn active_batches(&self) -> usize {
+        self.shared.lock().subs.len()
+    }
+
+    /// Pool-lifetime totals across every batch ever run. Per-batch
+    /// [`PoolStats`] returned by `run` sum exactly to the delta of this
+    /// between any two quiescent points.
+    pub fn totals(&self) -> PoolStats {
+        let state = self.shared.lock();
+        PoolStats {
+            executed: state.total_executed,
+            steals: state.total_steals,
+        }
+    }
+
+    /// Submit one tagged task set and block until it drains. Returns the
+    /// submission's stats and panicked count (the caller decides how to
+    /// surface panics).
+    fn submit<'scope, F>(&self, id: BatchId, workers: usize, tasks: Vec<F>) -> (PoolStats, usize)
+    where
+        F: FnOnce(usize) + Send + 'scope,
+    {
         if tasks.is_empty() {
-            return PoolStats::default();
+            return (PoolStats::default(), 0);
         }
         let workers = workers.max(1).min(tasks.len());
         self.ensure_workers(workers);
-        let _batch = self.batch.lock().unwrap_or_else(|e| e.into_inner());
-
+        let sub = self.next_sub.fetch_add(1, Ordering::Relaxed);
+        let done_cv = Arc::new(Condvar::new());
+        let n_tasks = tasks.len();
+        // Box and seed the deques *before* taking the pool mutex: the
+        // enqueue work depends on nothing behind the lock, and stalling
+        // every worker while a large batch boxes its tasks would
+        // reintroduce cross-tenant head-of-line blocking.
+        let mut queues: Vec<VecDeque<Job>> = (0..workers).map(|_| VecDeque::new()).collect();
+        for (i, t) in tasks.into_iter().enumerate() {
+            let job: Box<dyn FnOnce(usize) + Send + 'scope> = Box::new(t);
+            // SAFETY: see above — the wait loop below keeps every
+            // borrow in `job` alive until the job has run.
+            let job: Job = unsafe { std::mem::transmute(job) };
+            queues[i % workers].push_back(job);
+        }
         {
             let mut state = self.shared.lock();
-            state.active = workers;
-            state.pending = tasks.len();
-            state.executed = 0;
-            state.steals = 0;
-            state.panicked = 0;
-            for (i, t) in tasks.into_iter().enumerate() {
-                let job: Box<dyn FnOnce(usize) + Send + 'scope> = Box::new(t);
-                // SAFETY: see above — the wait loop below keeps every
-                // borrow in `job` alive until the job has run.
-                let job: Job = unsafe { std::mem::transmute(job) };
-                state.queues[i % workers].push_back(job);
-            }
+            state.subs.push(Submission {
+                sub,
+                id,
+                queues,
+                workers,
+                pending: n_tasks,
+                executed: 0,
+                steals: 0,
+                panicked: 0,
+                done_cv: Arc::clone(&done_cv),
+            });
         }
         self.shared.work_cv.notify_all();
 
         let mut state = self.shared.lock();
-        while state.pending > 0 {
-            state = self
-                .shared
-                .done_cv
-                .wait(state)
-                .unwrap_or_else(|e| e.into_inner());
+        loop {
+            let idx = state
+                .subs
+                .iter()
+                .position(|s| s.sub == sub)
+                .expect("in-flight submission stays listed until removed here");
+            if state.subs[idx].pending == 0 {
+                let done = state.subs.remove(idx);
+                if !state.subs.is_empty() {
+                    state.rr %= state.subs.len();
+                }
+                drop(state);
+                let stats = PoolStats {
+                    executed: done.executed,
+                    steals: done.steals,
+                };
+                return (stats, done.panicked);
+            }
+            state = done_cv.wait(state).unwrap_or_else(|e| e.into_inner());
         }
-        let stats = PoolStats {
-            executed: state.executed,
-            steals: state.steals,
-        };
-        let panicked = state.panicked;
-        state.active = 0;
-        drop(state);
-        drop(_batch);
-        if panicked > 0 {
-            panic!("{panicked} worker-pool task(s) panicked");
-        }
-        stats
     }
 }
 
@@ -328,46 +481,89 @@ impl Drop for WorkerPool {
     }
 }
 
+/// A tagged batch handle on a [`WorkerPool`]: the per-tenant scheduling
+/// surface the pipeline threads through a job's phases. Each [`Batch::run`]
+/// is one submission under this handle's [`BatchId`]; [`Batch::stats`]
+/// accumulates across them (map + reduce/finalize), giving the per-batch
+/// `PoolStats` that the concurrency acceptance criteria observe.
+pub struct Batch<'p> {
+    pool: &'p WorkerPool,
+    id: BatchId,
+    executed: AtomicUsize,
+    steals: AtomicUsize,
+}
+
+impl<'p> Batch<'p> {
+    pub fn id(&self) -> BatchId {
+        self.id
+    }
+
+    pub fn pool(&self) -> &'p WorkerPool {
+        self.pool
+    }
+
+    /// Submit tasks under this batch's id and block until they drain; see
+    /// [`WorkerPool::run`] for the execution and panic contract.
+    pub fn run<'scope, F>(&self, workers: usize, tasks: Vec<F>) -> PoolStats
+    where
+        F: FnOnce(usize) + Send + 'scope,
+    {
+        let (stats, panicked) = self.pool.submit(self.id, workers, tasks);
+        self.executed.fetch_add(stats.executed, Ordering::Relaxed);
+        self.steals.fetch_add(stats.steals, Ordering::Relaxed);
+        if panicked > 0 {
+            panic!("{panicked} worker-pool task(s) panicked in batch {:?}", self.id);
+        }
+        stats
+    }
+
+    /// Cumulative stats across every submission made through this handle.
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            executed: self.executed.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+        }
+    }
+}
+
 fn worker_loop(shared: &PoolShared, wid: usize) {
     let mut state = shared.lock();
     loop {
         if state.shutdown {
             return;
         }
-        let mut task = None;
-        let mut stolen = false;
-        if wid < state.active {
-            // Own queue first: LIFO end (cache-warm).
-            task = state.queues[wid].pop_back();
-            if task.is_none() {
-                // Steal: scan victims from wid+1, take the FIFO end.
-                let n = state.active;
-                for off in 1..n {
-                    let victim = (wid + off) % n;
-                    if let Some(t) = state.queues[victim].pop_front() {
-                        task = Some(t);
-                        stolen = true;
-                        break;
-                    }
-                }
-            }
-        }
-        match task {
-            Some(t) => {
+        match state.pick(wid) {
+            Some((si, task, stolen)) => {
+                // Advance the fairness cursor past the served batch so the
+                // next seeker starts at the following one.
+                state.rr = (si + 1) % state.subs.len();
                 if stolen {
-                    state.steals += 1;
+                    state.total_steals += 1;
                 }
+                let s = &mut state.subs[si];
+                if stolen {
+                    s.steals += 1;
+                }
+                let sub = s.sub;
                 drop(state);
-                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| t(wid)))
+                // Panic isolation: catch here so one tenant's panicking
+                // mapper cannot take down the worker (or any other
+                // tenant); the count is re-raised on the owning batch's
+                // submitting thread after its drain.
+                let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(wid)))
                     .is_ok();
                 state = shared.lock();
-                state.executed += 1;
-                if !ok {
-                    state.panicked += 1;
-                }
-                state.pending -= 1;
-                if state.pending == 0 {
-                    shared.done_cv.notify_all();
+                state.total_executed += 1;
+                if let Some(s) = state.subs.iter_mut().find(|s| s.sub == sub) {
+                    s.executed += 1;
+                    if !ok {
+                        s.panicked += 1;
+                    }
+                    s.pending -= 1;
+                    if s.pending == 0 {
+                        let cv = Arc::clone(&s.done_cv);
+                        cv.notify_all();
+                    }
                 }
             }
             None => {
@@ -378,6 +574,80 @@ fn worker_loop(shared: &PoolShared, wid: usize) {
             }
         }
     }
+}
+
+/// Drain a synthetic set of batches through the pool's **real** pick
+/// policy, single-threaded and without any timing: batch `b` contributes
+/// `batch_sizes[b]` no-op tasks (each seeded round-robin over `workers`
+/// deques), one simulated worker executes tasks one at a time with its
+/// `wid` cycling through `0..workers`, and the return value records, per
+/// executed task, the ordinal of the batch it came from.
+///
+/// This is the deterministic substrate for the testkit fairness property:
+/// round-robin progress invariants can be asserted exactly, with no
+/// dependence on OS thread interleaving.
+#[doc(hidden)]
+pub fn simulate_pick_order(batch_sizes: &[usize], workers: usize) -> Vec<usize> {
+    let workers = workers.max(1);
+    let mut state = PoolState {
+        subs: Vec::new(),
+        rr: 0,
+        total_executed: 0,
+        total_steals: 0,
+        shutdown: false,
+    };
+    for (ord, &n) in batch_sizes.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        let mut queues: Vec<VecDeque<Job>> = (0..workers).map(|_| VecDeque::new()).collect();
+        for i in 0..n {
+            let job: Job = Box::new(|_wid| {});
+            queues[i % workers].push_back(job);
+        }
+        state.subs.push(Submission {
+            sub: ord as u64,
+            id: BatchId(ord as u64),
+            queues,
+            workers,
+            pending: n,
+            executed: 0,
+            steals: 0,
+            panicked: 0,
+            done_cv: Arc::new(Condvar::new()),
+        });
+    }
+    let mut order = Vec::new();
+    let mut wid = 0usize;
+    loop {
+        match state.pick(wid) {
+            Some((si, task, stolen)) => {
+                // Mirror `worker_loop`: cursor past the served batch, then
+                // bookkeeping, then execution, then drain handling.
+                state.rr = (si + 1) % state.subs.len();
+                let s = &mut state.subs[si];
+                if stolen {
+                    s.steals += 1;
+                }
+                s.executed += 1;
+                s.pending -= 1;
+                order.push(s.id.0 as usize);
+                let drained = s.pending == 0;
+                task(wid);
+                if drained {
+                    state.subs.remove(si);
+                    if !state.subs.is_empty() {
+                        state.rr %= state.subs.len();
+                    } else {
+                        state.rr = 0;
+                    }
+                }
+            }
+            None => break,
+        }
+        wid = (wid + 1) % workers;
+    }
+    order
 }
 
 #[cfg(test)]
@@ -613,5 +883,102 @@ mod tests {
         let counter = AtomicUsize::new(0);
         pool.run(2, counting_tasks(10, &counter));
         assert_eq!(counter.load(Ordering::Relaxed), 10);
+    }
+
+    // ---- Multi-tenant behaviour ----
+
+    #[test]
+    fn concurrent_batches_from_two_threads_both_complete() {
+        let pool = WorkerPool::new(4);
+        let a = AtomicUsize::new(0);
+        let b = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let a = &a;
+            let b = &b;
+            s.spawn(move || {
+                pool.run(4, counting_tasks(500, a));
+            });
+            s.spawn(move || {
+                pool.run(4, counting_tasks(500, b));
+            });
+        });
+        assert_eq!(a.load(Ordering::Relaxed), 500);
+        assert_eq!(b.load(Ordering::Relaxed), 500);
+        assert_eq!(pool.active_batches(), 0, "all batches drained");
+    }
+
+    #[test]
+    fn batch_handle_accumulates_phase_stats() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicUsize::new(0);
+        let batch = pool.batch();
+        batch.run(2, counting_tasks(30, &counter));
+        batch.run(2, counting_tasks(20, &counter));
+        assert_eq!(batch.stats().executed, 50);
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn panic_in_one_batch_leaves_concurrent_batch_intact() {
+        let pool = WorkerPool::new(2);
+        let good = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let pool = &pool;
+            let good = &good;
+            let bad = s.spawn(move || {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let mut tasks: Vec<Box<dyn FnOnce(usize) + Send>> = Vec::new();
+                    for i in 0..40 {
+                        tasks.push(Box::new(move |_w| {
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                            if i == 7 {
+                                panic!("tenant A boom");
+                            }
+                        }));
+                    }
+                    pool.run(2, tasks);
+                }))
+            });
+            let tasks: Vec<_> = (0..200)
+                .map(|_| {
+                    move |_w: usize| {
+                        std::thread::sleep(std::time::Duration::from_micros(100));
+                        good.fetch_add(1, Ordering::Relaxed);
+                    }
+                })
+                .collect();
+            let stats = pool.run(2, tasks);
+            assert_eq!(stats.executed, 200);
+            assert!(bad.join().unwrap().is_err(), "panic surfaces only at A's submit");
+        });
+        assert_eq!(good.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn totals_accumulate_across_batches() {
+        let pool = WorkerPool::new(2);
+        let before = pool.totals();
+        let counter = AtomicUsize::new(0);
+        let s1 = pool.run(2, counting_tasks(40, &counter));
+        let s2 = pool.run(2, counting_tasks(60, &counter));
+        let after = pool.totals();
+        assert_eq!(after.executed - before.executed, s1.executed + s2.executed);
+        assert_eq!(after.steals - before.steals, s1.steals + s2.steals);
+    }
+
+    #[test]
+    fn simulate_pick_order_is_round_robin() {
+        // Three batches of 4 tasks on one simulated worker: strict
+        // alternation until batches drain.
+        let order = simulate_pick_order(&[4, 4, 4], 1);
+        assert_eq!(order.len(), 12);
+        assert_eq!(&order[..6], &[0, 1, 2, 0, 1, 2]);
+        // Unequal batches: the longer one finishes last but is never
+        // served twice while another batch still has tasks queued.
+        let order = simulate_pick_order(&[8, 2], 1);
+        assert_eq!(order.len(), 10);
+        assert_eq!(&order[..4], &[0, 1, 0, 1]);
+        assert!(order[4..].iter().all(|&b| b == 0));
     }
 }

@@ -54,6 +54,6 @@ pub mod util;
 
 pub use api::{
     Dataset, Emitter, InputSource, JobBuilder, JobConfig, JobOutput, KeyValue, MapReduce,
-    Mapper, Pipeline, PlanOutput, PlanReport, Reducer, Runtime,
+    Mapper, Pipeline, PlanHandle, PlanOutput, PlanReport, Reducer, Runtime,
 };
 pub use optimizer::agent::OptimizerAgent;

@@ -10,6 +10,15 @@
 //! * [`CohortId`] — allocation group. Liveness is managed per cohort: the
 //!   framework frees intermediate-value bytes when the reduce phase consumes
 //!   them, holder bytes at finalization, scratch bytes immediately.
+//!
+//! Cohorts come in two flavours. **Named** cohorts ([`SimHeap::cohort`])
+//! deduplicate by name and live for the heap's lifetime — the harness's
+//! session-wide accounting. **Scoped** cohorts ([`SimHeap::scoped_cohort`])
+//! are always fresh (the slot is recycled after [`SimHeap::release_cohort`]),
+//! which is what makes one shared session heap safe under *concurrent*
+//! jobs: each job charges its own private cohorts, so an end-of-job bulk
+//! release can never clobber another in-flight job's live bytes, and
+//! [`SimHeap::cohort_allocated`] gives exact per-job allocation deltas.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -109,6 +118,9 @@ impl HeapParams {
 #[derive(Clone, Debug, Default)]
 struct Cohort {
     name: &'static str,
+    /// Job-private cohort: the slot is recycled after release (see the
+    /// module docs on the named/scoped split).
+    scoped: bool,
     /// Live bytes by age; `buckets[0]` is the most recent survivor epoch.
     buckets: [u64; MAX_TENURE],
     /// Live bytes promoted to the old generation.
@@ -118,6 +130,10 @@ struct Cohort {
     pending_alloc: u64,
     /// Bytes freed since the last minor GC (applied youngest-first then).
     pending_free: u64,
+    /// Lifetime allocation counters for this cohort registration (reset
+    /// when a scoped slot is recycled) — the per-job attribution source.
+    alloc_bytes: u64,
+    alloc_objects: u64,
 }
 
 impl Cohort {
@@ -129,6 +145,10 @@ impl Cohort {
 /// Shared heap internals (everything the collector must see atomically).
 struct HeapCore {
     cohorts: Vec<Cohort>,
+    /// Recyclable slots of released scoped cohorts (keeps a long-lived
+    /// session's cohort table bounded by its concurrency, not its job
+    /// count).
+    free_cohorts: Vec<usize>,
     /// Old-generation garbage awaiting a major collection.
     old_garbage: u64,
     /// Bytes promoted since the last major collection — the Parallel
@@ -162,6 +182,7 @@ impl SimHeap {
             old_fill: AtomicU64::new(0),
             core: Mutex::new(HeapCore {
                 cohorts: Vec::new(),
+                free_cohorts: Vec::new(),
                 old_garbage: 0,
                 promoted_since_major: 0,
                 stats: GcStats::default(),
@@ -190,10 +211,12 @@ impl SimHeap {
         self.params.enabled
     }
 
-    /// Register (or look up) a named allocation cohort.
+    /// Register (or look up) a named allocation cohort. Named cohorts are
+    /// deduplicated and never recycled; use [`SimHeap::scoped_cohort`] for
+    /// job-private accounting on a shared heap.
     pub fn cohort(&self, name: &'static str) -> CohortId {
         let mut core = self.core.lock().unwrap();
-        if let Some(idx) = core.cohorts.iter().position(|c| c.name == name) {
+        if let Some(idx) = core.cohorts.iter().position(|c| !c.scoped && c.name == name) {
             return CohortId(idx);
         }
         core.cohorts.push(Cohort {
@@ -201,6 +224,35 @@ impl SimHeap {
             ..Default::default()
         });
         CohortId(core.cohorts.len() - 1)
+    }
+
+    /// Register a **fresh** cohort, never deduplicated by name: two
+    /// concurrent jobs calling this with the same name get disjoint ids,
+    /// so their liveness and allocation accounting cannot interfere. The
+    /// slot is recycled once [`SimHeap::release_cohort`] runs; callers
+    /// must not use the id afterwards.
+    pub fn scoped_cohort(&self, name: &'static str) -> CohortId {
+        let mut core = self.core.lock().unwrap();
+        let fresh = Cohort {
+            name,
+            scoped: true,
+            ..Default::default()
+        };
+        if let Some(idx) = core.free_cohorts.pop() {
+            core.cohorts[idx] = fresh;
+            CohortId(idx)
+        } else {
+            core.cohorts.push(fresh);
+            CohortId(core.cohorts.len() - 1)
+        }
+    }
+
+    /// Lifetime `(bytes, objects)` allocated in a cohort since its
+    /// registration — the exact per-job delta when the cohort is scoped.
+    pub fn cohort_allocated(&self, id: CohortId) -> (u64, u64) {
+        let core = self.core.lock().unwrap();
+        let c = &core.cohorts[id.0];
+        (c.alloc_bytes, c.alloc_objects)
     }
 
     /// Create a per-thread allocation handle.
@@ -240,11 +292,9 @@ impl SimHeap {
     }
 
     /// Drop every live byte of a cohort (bulk free, e.g. when the reduce
-    /// phase has consumed all intermediate lists).
+    /// phase has consumed all intermediate lists). Scoped cohorts are
+    /// recycled afterwards; their id must not be used again.
     pub fn release_cohort(&self, id: CohortId) {
-        if !self.params.enabled {
-            return;
-        }
         let mut core = self.core.lock().unwrap();
         let c = &mut core.cohorts[id.0];
         // Young bytes become garbage (stay in young_fill until minor GC);
@@ -253,10 +303,12 @@ impl SimHeap {
         c.pending_free = 0;
         c.buckets = [0; MAX_TENURE];
         let old = std::mem::take(&mut c.old);
+        let scoped = c.scoped;
         core.old_garbage += old;
         // old_fill unchanged: garbage still occupies the old gen.
-        drop(core);
-        let _ = old;
+        if scoped {
+            core.free_cohorts.push(id.0);
+        }
     }
 
     /// Fold a batch of (cohort, alloc_bytes, alloc_objects, free_bytes) into
@@ -272,6 +324,8 @@ impl SimHeap {
                 let c = &mut core.cohorts[id.0];
                 c.pending_alloc += ab;
                 c.pending_free += fb;
+                c.alloc_bytes += ab;
+                c.alloc_objects += ao;
                 core.stats.allocated_bytes += ab;
                 core.stats.allocated_objects += ao;
                 alloc_total += ab;
@@ -665,6 +719,66 @@ mod tests {
             g1.minor_collections,
             par.minor_collections
         );
+    }
+
+    #[test]
+    fn scoped_cohorts_are_disjoint_and_recycled() {
+        let heap = tiny_heap(GcPolicy::Parallel);
+        // Same name, two registrations → two ids (the concurrent-job fix).
+        let a = heap.scoped_cohort("mr4r.intermediate");
+        let b = heap.scoped_cohort("mr4r.intermediate");
+        assert_ne!(a, b);
+        let mut alloc = heap.thread_alloc();
+        for _ in 0..16 {
+            alloc.alloc(a, 1024);
+        }
+        for _ in 0..8 {
+            alloc.alloc(b, 1024);
+        }
+        alloc.flush();
+        assert_eq!(heap.cohort_allocated(a), (16 * 1024, 16));
+        assert_eq!(heap.cohort_allocated(b), (8 * 1024, 8));
+        // Releasing one job's cohort leaves the other's live bytes alone.
+        heap.release_cohort(a);
+        assert_eq!(heap.cohort_live(b), 8 * 1024);
+        // The released slot is recycled with fresh counters.
+        let c = heap.scoped_cohort("mr4r.intermediate");
+        assert_eq!(c, a, "released scoped slot is reused");
+        assert_eq!(heap.cohort_allocated(c), (0, 0));
+        // Named cohorts are never recycled into scoped slots.
+        let named = heap.cohort("session");
+        heap.release_cohort(named);
+        let d = heap.scoped_cohort("x");
+        assert_ne!(d, named);
+    }
+
+    #[test]
+    fn concurrent_jobs_attribute_allocations_exactly() {
+        let heap = tiny_heap(GcPolicy::Parallel);
+        let threads = 4;
+        let per_thread = 512u64;
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                let heap = Arc::clone(&heap);
+                s.spawn(move || {
+                    // Each simulated job: private cohort, fixed traffic.
+                    let c = heap.scoped_cohort("job.inter");
+                    let mut a = heap.thread_alloc();
+                    for _ in 0..per_thread {
+                        a.alloc(c, 256);
+                    }
+                    a.flush();
+                    assert_eq!(
+                        heap.cohort_allocated(c),
+                        (per_thread * 256, per_thread),
+                        "per-job delta must be exact under concurrency"
+                    );
+                    heap.release_cohort(c);
+                });
+            }
+        });
+        let s = heap.stats();
+        assert_eq!(s.allocated_bytes, threads as u64 * per_thread * 256);
     }
 
     #[test]

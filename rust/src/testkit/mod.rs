@@ -1,7 +1,35 @@
 //! Test-support substrates.
 //!
-//! `proptest` is not in the offline vendor set, so [`prop`] provides a small
-//! property-testing kit with seeded generation and greedy case minimization.
-//! Used by the coordinator-invariant and optimizer-equivalence properties.
+//! * [`prop`] — a small property-testing kit with seeded generation and
+//!   greedy case minimization (`proptest` is not in the offline vendor
+//!   set). Used by the coordinator-invariant, optimizer-equivalence, and
+//!   scheduler-fairness properties.
+//! * [`scenario`] — the deterministic concurrency harness: seeded
+//!   N-driver × M-plan runs over the seven benchmark workloads on one
+//!   shared [`crate::api::Runtime`], checked pair-for-pair against serial
+//!   execution.
+//!
+//! # Seed reproducibility — the replay workflow
+//!
+//! Both kits are driven by the crate PRNG and print their seed on
+//! failure, so any red run is replayable exactly:
+//!
+//! 1. A failing property panics with `replay with MR4R_PROP_SEED=<seed>`;
+//!    a failing scenario panics with `replay with
+//!    MR4R_SCENARIO_SEED=<seed>`.
+//! 2. Re-run just that test with the printed variable set, e.g.
+//!    `MR4R_PROP_SEED=24150 cargo test -q failing_test_name` — the kit
+//!    reads the variable ([`prop::check_with_shrink`],
+//!    [`scenario::scenario_seed`]) and regenerates the identical case or
+//!    plan assignment.
+//! 3. `MR4R_PROP_CASES` optionally raises the case count when hunting
+//!    flakiness; `MR4R_THREADS` (read by the concurrency suite in
+//!    `rust/tests/concurrent_runtime.rs`) re-runs the same scenarios at a
+//!    different worker-pool width.
+//!
+//! Scenario replays regenerate the same *plan assignment*; OS thread
+//! interleaving stays nondeterministic by design — the invariant under
+//! test is that results must not depend on it.
 
 pub mod prop;
+pub mod scenario;

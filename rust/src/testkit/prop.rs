@@ -4,8 +4,10 @@
 //! * a [`Gen`] is a function from a PRNG + size budget to a value;
 //! * [`check`] runs N random cases and, on failure, greedily *shrinks* the
 //!   failing case via a user-supplied or combinator-derived shrinker;
-//! * the failing seed is printed so a case can be replayed exactly with
-//!   `check` with `MR4R_PROP_SEED` set.
+//! * the failing seed is printed so a case can be replayed exactly by
+//!   re-running the test with `MR4R_PROP_SEED=<seed>` in the environment
+//!   (and optionally `MR4R_PROP_CASES` to widen the search) — see the
+//!   replay workflow in the [module docs](crate::testkit).
 //!
 //! The goal is not proptest parity — it is covering the invariants listed in
 //! DESIGN.md §8 (routing, batching, state, RIR-slicing equivalence) with

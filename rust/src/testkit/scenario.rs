@@ -1,0 +1,325 @@
+//! Deterministic concurrency scenarios — the multi-tenant test harness.
+//!
+//! A [`Scenario`] describes a seeded shape: **N driver threads × M plans
+//! each**, drawn from the seven benchmark workloads (paper Table 2), all
+//! submitted to **one shared [`Runtime`] session**. The harness runs every
+//! plan twice:
+//!
+//! 1. **Serial baseline** — a fresh session, every plan in a fixed order,
+//!    one at a time;
+//! 2. **Concurrent phase** — a second fresh session shared by N OS driver
+//!    threads, each running its M plans back to back.
+//!
+//! and then checks **pair-for-pair equivalence**: each `(driver, slot)`
+//! plan's canonical result digest under concurrency must equal its serial
+//! digest. (Digests are the same order-independent canonical forms the
+//! cross-framework equivalence suite uses — exact for the integer
+//! workloads, 6-significant-digit canonical for the float ones, so
+//! summation-order variation never masks a real divergence.)
+//!
+//! # Determinism and replay
+//!
+//! Everything about a scenario derives from its `seed` (via the crate's
+//! own [`Xoshiro256`]): which benchmark each slot runs and under which
+//! optimizer mode. On failure the error message contains the seed;
+//! re-running with `MR4R_SCENARIO_SEED=<seed>` (see [`scenario_seed`])
+//! replays the exact same plan assignment. Thread *interleaving* is of
+//! course up to the OS — the point of the harness is that results must
+//! not depend on it.
+//!
+//! ```ignore
+//! let kit = ScenarioKit::prepare(0.0005, 42);
+//! let sc = Scenario {
+//!     seed: scenario_seed(0xC0FFEE),
+//!     drivers: 4,
+//!     plans_per_driver: 3,
+//!     threads: 4,
+//! };
+//! assert_scenario(&kit, &sc); // panics with the replay seed on mismatch
+//! ```
+
+use std::sync::Arc;
+
+use crate::api::config::{JobConfig, OptimizeMode};
+use crate::api::traits::KeyValue;
+use crate::api::Runtime;
+use crate::benchmarks::backend::Backend;
+use crate::benchmarks::{
+    datagen, digest_pairs, histogram, kmeans, linear_regression, matrix_multiply, pca,
+    string_match, word_count, BenchId,
+};
+use crate::util::prng::Xoshiro256;
+
+/// One plan slot in a scenario: which workload runs, under which
+/// optimizer mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanSpec {
+    pub bench: BenchId,
+    pub optimize: OptimizeMode,
+}
+
+/// Scenario shape: `drivers` OS threads × `plans_per_driver` plans each,
+/// on one shared session whose pool has `threads` workers.
+#[derive(Clone, Copy, Debug)]
+pub struct Scenario {
+    /// Master seed: fully determines the per-slot plan assignment.
+    pub seed: u64,
+    pub drivers: usize,
+    pub plans_per_driver: usize,
+    /// Worker threads of the shared session pool (and of every job).
+    pub threads: usize,
+}
+
+/// The scenario seed: `MR4R_SCENARIO_SEED` from the environment (the
+/// replay path printed by failing scenarios), else `default`.
+pub fn scenario_seed(default: u64) -> u64 {
+    std::env::var("MR4R_SCENARIO_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+fn kv_tuples<K, V>(kv: Vec<KeyValue<K, V>>) -> Vec<(K, V)> {
+    kv.into_iter().map(|p| (p.key, p.value)).collect()
+}
+
+/// A uniform plan runner: session + per-plan config in, canonical result
+/// digest out.
+type PlanFn = Box<dyn Fn(&Runtime, &JobConfig) -> u64 + Send + Sync>;
+
+/// Prepared workload catalog: tiny datasets for all seven benchmarks,
+/// wrapped as digest-returning runners. Prepare once, reuse across
+/// scenarios (datasets are immutable and shared by reference).
+pub struct ScenarioKit {
+    plans: Vec<(BenchId, PlanFn)>,
+}
+
+impl ScenarioKit {
+    /// Generate every benchmark's dataset at `scale` (keep it tiny —
+    /// 0.0005 runs the whole suite in well under a second per plan) with
+    /// the native compute backend.
+    pub fn prepare(scale: f64, seed: u64) -> ScenarioKit {
+        let backend = Backend::Native;
+        let mut plans: Vec<(BenchId, PlanFn)> = Vec::new();
+
+        let lines = Arc::new(datagen::wordcount_text(scale, seed));
+        plans.push((
+            BenchId::WC,
+            Box::new(move |rt, cfg| {
+                let (out, _m) = word_count::run_mr4r(&lines, rt, cfg);
+                digest_pairs(&kv_tuples(out))
+            }),
+        ));
+
+        let pixels = Arc::new(datagen::histogram_pixels(scale, seed));
+        let b = backend.clone();
+        plans.push((
+            BenchId::HG,
+            Box::new(move |rt, cfg| {
+                let (out, _m) = histogram::run_mr4r(&pixels, rt, cfg, &b);
+                digest_pairs(&kv_tuples(out))
+            }),
+        ));
+
+        let km = Arc::new(datagen::kmeans_points(scale, seed));
+        let b = backend.clone();
+        plans.push((
+            BenchId::KM,
+            Box::new(move |rt, cfg| {
+                let (cents, _m) = kmeans::run_mr4r(&km, rt, cfg, &b);
+                kmeans::digest_centroids(&cents)
+            }),
+        ));
+
+        let pts = Arc::new(datagen::linreg_points(scale, seed));
+        let n = pts.len();
+        let b = backend.clone();
+        plans.push((
+            BenchId::LR,
+            Box::new(move |rt, cfg| {
+                let (out, _m) = linear_regression::run_mr4r(&pts, rt, cfg, &b);
+                linear_regression::digest_fit(&kv_tuples(out), n)
+            }),
+        ));
+
+        let mm = matrix_multiply::prepare(scale, seed);
+        let b = backend.clone();
+        plans.push((
+            BenchId::MM,
+            Box::new(move |rt, cfg| {
+                let (out, _m) = matrix_multiply::run_mr4r(&mm.a, &mm.b, rt, cfg, &b);
+                digest_pairs(&kv_tuples(out))
+            }),
+        ));
+
+        let pc = pca::prepare(scale, seed);
+        let n = pc.matrix.n;
+        let b = backend.clone();
+        plans.push((
+            BenchId::PC,
+            Box::new(move |rt, cfg| {
+                let (out, _m) = pca::run_mr4r(&pc.matrix, &pc.pairs, rt, cfg, &b);
+                pca::digest_cov(&kv_tuples(out), n)
+            }),
+        ));
+
+        let sm = string_match::prepare(scale, seed);
+        plans.push((
+            BenchId::SM,
+            Box::new(move |rt, cfg| {
+                let (out, _m) = string_match::run_mr4r(&sm, rt, cfg);
+                digest_pairs(&kv_tuples(out))
+            }),
+        ));
+
+        ScenarioKit { plans }
+    }
+
+    /// The seeded per-driver plan assignment (public so a failing run's
+    /// specs can be inspected when replaying a seed).
+    pub fn specs(&self, sc: &Scenario) -> Vec<Vec<PlanSpec>> {
+        let mut rng = Xoshiro256::seeded(sc.seed);
+        (0..sc.drivers)
+            .map(|_| {
+                (0..sc.plans_per_driver)
+                    .map(|_| {
+                        let bench = self.plans[rng.below(self.plans.len() as u64) as usize].0;
+                        let optimize = if rng.below(2) == 0 {
+                            OptimizeMode::Auto
+                        } else {
+                            OptimizeMode::Off
+                        };
+                        PlanSpec { bench, optimize }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn run_one(&self, rt: &Runtime, base: &JobConfig, spec: PlanSpec) -> u64 {
+        let cfg = base.clone().with_optimize(spec.optimize);
+        let plan = self
+            .plans
+            .iter()
+            .find(|(b, _)| *b == spec.bench)
+            .expect("catalog covers all seven benchmarks");
+        (plan.1)(rt, &cfg)
+    }
+}
+
+/// Run the scenario end to end (serial baselines, then the concurrent
+/// phase, then the pair-for-pair comparison). `Err` carries a replayable
+/// description including the seed.
+pub fn run_scenario(kit: &ScenarioKit, sc: &Scenario) -> Result<(), String> {
+    let specs = kit.specs(sc);
+    let base = JobConfig::fast().with_threads(sc.threads.max(1));
+
+    // Serial baselines: one plan at a time on a fresh session.
+    let serial_rt = Runtime::with_config(base.clone());
+    let baseline: Vec<Vec<u64>> = specs
+        .iter()
+        .map(|driver_specs| {
+            driver_specs
+                .iter()
+                .map(|s| kit.run_one(&serial_rt, &base, *s))
+                .collect()
+        })
+        .collect();
+
+    // Concurrent phase: one fresh shared session, N drivers.
+    let rt = Runtime::with_config(base.clone());
+    let spawned_before = rt.spawned_threads();
+    let concurrent: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = specs
+            .iter()
+            .map(|driver_specs| {
+                let rt = &rt;
+                let base = &base;
+                scope.spawn(move || {
+                    driver_specs
+                        .iter()
+                        .map(|s| kit.run_one(rt, base, *s))
+                        .collect::<Vec<u64>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("scenario driver panicked"))
+            .collect()
+    });
+
+    if rt.spawned_threads() != spawned_before {
+        return Err(format!(
+            "session pool grew under concurrency: {} -> {} (replay with MR4R_SCENARIO_SEED={})",
+            spawned_before,
+            rt.spawned_threads(),
+            sc.seed
+        ));
+    }
+    if rt.pool().active_batches() != 0 {
+        return Err(format!(
+            "pool reports in-flight batches after all drivers joined \
+             (replay with MR4R_SCENARIO_SEED={})",
+            sc.seed
+        ));
+    }
+    for (d, (base_digests, conc_digests)) in baseline.iter().zip(&concurrent).enumerate() {
+        for (j, (serial, conc)) in base_digests.iter().zip(conc_digests).enumerate() {
+            if serial != conc {
+                let spec = specs[d][j];
+                return Err(format!(
+                    "driver {d} plan {j} ({:?} under {:?}): concurrent digest {conc:#018x} \
+                     != serial {serial:#018x} — replay with MR4R_SCENARIO_SEED={}",
+                    spec.bench, spec.optimize, sc.seed
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// [`run_scenario`], panicking with the replay seed on failure — the test
+/// entry point.
+pub fn assert_scenario(kit: &ScenarioKit, sc: &Scenario) {
+    if let Err(msg) = run_scenario(kit, sc) {
+        panic!("concurrency scenario failed: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn specs_are_seed_deterministic() {
+        let kit = ScenarioKit::prepare(0.0002, 7);
+        let sc = Scenario {
+            seed: 99,
+            drivers: 3,
+            plans_per_driver: 4,
+            threads: 2,
+        };
+        let a = kit.specs(&sc);
+        let b = kit.specs(&sc);
+        assert_eq!(a, b, "same seed, same assignment");
+        assert_eq!(a.len(), 3);
+        assert!(a.iter().all(|d| d.len() == 4));
+        assert!(
+            (100..108).any(|seed| kit.specs(&Scenario { seed, ..sc }) != a),
+            "assignment must depend on the seed"
+        );
+    }
+
+    #[test]
+    fn tiny_scenario_passes() {
+        let kit = ScenarioKit::prepare(0.0002, 7);
+        let sc = Scenario {
+            seed: 11,
+            drivers: 2,
+            plans_per_driver: 2,
+            threads: 2,
+        };
+        assert_scenario(&kit, &sc);
+    }
+}

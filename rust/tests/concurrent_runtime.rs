@@ -1,0 +1,455 @@
+//! Concurrent multi-plan runtime suite — the multi-tenant acceptance
+//! criteria:
+//!
+//! * two plans submitted from two threads on one `Runtime` **overlap** on
+//!   the shared pool (per-batch `PoolStats` show both batches executing
+//!   while the long batch is still pending);
+//! * every concurrent result is **pair-for-pair identical** to its
+//!   serial-execution baseline (seeded scenarios over the seven benchmark
+//!   workloads, plus an 8-driver × 25-job soak);
+//! * a panicking tenant fails **only its own plan**;
+//! * scheduler fairness invariants hold (round-robin progress, per-batch
+//!   stats summing to pool totals) — property-tested through
+//!   `testkit::prop` against the real pick policy.
+//!
+//! Worker-pool width comes from `MR4R_THREADS` (default 4) so CI can run
+//! the same suite at 2 and 8 workers. Failing properties/scenarios print
+//! `MR4R_PROP_SEED`/`MR4R_SCENARIO_SEED` replay lines — see the
+//! `mr4r::testkit` module docs for the replay workflow.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mr4r::api::config::{JobConfig, OptimizeMode};
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::{Emitter, Runtime};
+use mr4r::coordinator::scheduler::{simulate_pick_order, WorkerPool};
+use mr4r::memsim::{HeapParams, SimHeap};
+use mr4r::optimizer::builder::canon;
+use mr4r::testkit::prop;
+use mr4r::testkit::scenario::{self, Scenario, ScenarioKit};
+
+/// Worker threads for the shared session pools (CI stress matrix sets
+/// `MR4R_THREADS=2` and `=8`).
+fn threads() -> usize {
+    std::env::var("MR4R_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(1)
+}
+
+fn wc_mapper(line: &String, em: &mut dyn Emitter<String, i64>) {
+    for w in line.split_whitespace() {
+        em.emit(w.to_string(), 1);
+    }
+}
+
+fn wc_lines(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| format!("w{} w{} w{}", i % 13, i % 5, i % 29))
+        .collect()
+}
+
+fn run_wc_plan(rt: &Runtime, lines: &[String], mode: OptimizeMode) -> Vec<(String, i64)> {
+    rt.dataset(lines)
+        .optimize(mode)
+        .map_reduce(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("conc.soak.wc")),
+        )
+        .collect_sorted()
+        .into_tuples()
+}
+
+fn run_keyed_plan(rt: &Runtime, nums: &[i64], mode: OptimizeMode) -> Vec<(i64, i64)> {
+    rt.dataset(nums)
+        .optimize(mode)
+        .key_by(|x: &i64| *x % 7)
+        .reduce_by_key(|a, b| a + b)
+        .collect_sorted()
+        .into_tuples()
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: overlap on the shared pool
+// ---------------------------------------------------------------------
+
+#[test]
+fn interactive_plan_overlaps_long_analytics_batch() {
+    let t = threads().max(2);
+    let rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(t)));
+
+    // The long tenant: ~4 s of sleepy map tasks (2000 × 2 ms across t
+    // workers), split into many chunks so fairness operates at task
+    // granularity.
+    let analytics: Vec<i64> = (0..2000).collect();
+    let long = Arc::clone(&rt).spawn_plan(move |rt| {
+        rt.job(
+            |x: &i64, em: &mut dyn Emitter<i64, i64>| {
+                std::thread::sleep(Duration::from_millis(2));
+                em.emit(*x % 4, 1)
+            },
+            RirReducer::<i64, i64>::new(canon::sum_i64("conc.analytics")),
+        )
+        .tasks_per_thread(64)
+        .sorted()
+        .run(&analytics)
+        .into_tuples()
+    });
+
+    // Wait until the analytics batch is actually on the pool.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while rt.pool().active_batches() == 0 {
+        assert!(Instant::now() < deadline, "analytics batch never arrived");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+
+    // The interactive tenant: a short word count on the same session —
+    // must complete long before the analytics plan drains.
+    let lines = wc_lines(12);
+    let out = rt
+        .job(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("conc.interactive")),
+        )
+        .sorted()
+        .run(&lines);
+
+    // Overlap evidence, half 1: the interactive batch already reports its
+    // executed tasks while the long tenant is still running.
+    assert!(out.metrics().batch_pool.executed > 0, "interactive batch reports executed");
+    assert!(
+        !long.is_finished(),
+        "interactive plan must not be head-of-line blocked behind analytics"
+    );
+
+    // Half 2: the long batch is observable in flight with progress of its
+    // own. (Poll: between its map and reduce submissions the in-flight
+    // list can be momentarily empty.)
+    let mut observed_overlap = false;
+    while !long.is_finished() {
+        let snap = rt.pool().snapshot();
+        if snap.iter().any(|b| b.pending > 0 && b.executed > 0) {
+            observed_overlap = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert!(observed_overlap, "long batch never observed in flight with progress");
+
+    // Both tenants' results are correct.
+    let serial = Runtime::with_config(JobConfig::fast().with_threads(t));
+    let expect = serial
+        .job(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("conc.interactive.serial")),
+        )
+        .sorted()
+        .run(&lines)
+        .into_tuples();
+    assert_eq!(out.into_tuples(), expect);
+    assert_eq!(long.join(), vec![(0, 500), (1, 500), (2, 500), (3, 500)]);
+}
+
+// ---------------------------------------------------------------------
+// Panic isolation
+// ---------------------------------------------------------------------
+
+#[test]
+fn tenant_panic_leaves_concurrent_tenant_intact() {
+    let t = threads().max(2);
+    let rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(t)));
+
+    // Tenant A: a plan whose mapper panics partway through.
+    let bad_input: Vec<i64> = (0..64).collect();
+    let bad = Arc::clone(&rt).spawn_plan(move |rt| {
+        rt.job(
+            |x: &i64, em: &mut dyn Emitter<i64, i64>| {
+                std::thread::sleep(Duration::from_micros(300));
+                if *x == 13 {
+                    panic!("tenant A mapper panic");
+                }
+                em.emit(*x % 3, 1)
+            },
+            RirReducer::<i64, i64>::new(canon::sum_i64("conc.bad")),
+        )
+        .tasks_per_thread(16)
+        .run(&bad_input)
+        .into_tuples()
+    });
+
+    // Tenant B: a correct concurrent plan on the same session.
+    let lines = wc_lines(400);
+    let good = {
+        let lines = lines.clone();
+        Arc::clone(&rt).spawn_plan(move |rt| {
+            rt.job(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("conc.good")),
+            )
+            .sorted()
+            .run(&lines)
+            .into_tuples()
+        })
+    };
+
+    assert!(bad.try_join().is_err(), "tenant A's panic must surface at tenant A's join");
+    let got = good.join();
+
+    let serial = Runtime::with_config(JobConfig::fast().with_threads(t));
+    let expect = serial
+        .job(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("conc.good.serial")),
+        )
+        .sorted()
+        .run(&lines)
+        .into_tuples();
+    assert_eq!(got, expect, "tenant B must complete correctly despite A's panic");
+
+    // The shared session survives for subsequent jobs.
+    let again = rt
+        .job(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("conc.after-panic")),
+        )
+        .sorted()
+        .run(&lines)
+        .into_tuples();
+    assert_eq!(again, expect, "session must stay usable after a tenant panic");
+    assert_eq!(rt.pool().active_batches(), 0);
+}
+
+// ---------------------------------------------------------------------
+// Soak: 8 drivers × 25 mixed keyed/plan jobs on one Runtime
+// ---------------------------------------------------------------------
+
+#[test]
+fn soak_eight_drivers_mixed_keyed_and_plan_jobs() {
+    let t = threads();
+    let drivers = 8;
+    let jobs_per_driver = 25;
+
+    let lines = wc_lines(120);
+    let nums: Vec<i64> = (0..500).collect();
+
+    // Serial baselines (fresh session): Auto and Off must both match
+    // these — the flows are result-equivalent and collect_sorted makes
+    // the comparison pair-for-pair.
+    let srt = Runtime::with_config(JobConfig::fast().with_threads(t));
+    let wc_base = run_wc_plan(&srt, &lines, OptimizeMode::Auto);
+    let keyed_base = run_keyed_plan(&srt, &nums, OptimizeMode::Auto);
+    drop(srt);
+
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(t));
+    let spawned = rt.spawned_threads();
+    std::thread::scope(|s| {
+        for d in 0..drivers {
+            let rt = &rt;
+            let lines = &lines;
+            let nums = &nums;
+            let wc_base = &wc_base;
+            let keyed_base = &keyed_base;
+            s.spawn(move || {
+                for j in 0..jobs_per_driver {
+                    let mode = if j % 2 == 0 {
+                        OptimizeMode::Auto
+                    } else {
+                        OptimizeMode::Off
+                    };
+                    if (d + j) % 2 == 0 {
+                        let out = run_wc_plan(rt, lines, mode);
+                        assert_eq!(&out, wc_base, "driver {d} job {j} ({mode:?}) wc diverged");
+                    } else {
+                        let out = run_keyed_plan(rt, nums, mode);
+                        assert_eq!(&out, keyed_base, "driver {d} job {j} keyed diverged");
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(rt.spawned_threads(), spawned, "soak must not spawn extra workers");
+    assert_eq!(rt.pool().active_batches(), 0, "pool drained after the soak");
+    let totals = rt.pool().totals();
+    assert!(totals.executed > 0, "soak ran tasks on the shared pool");
+}
+
+// ---------------------------------------------------------------------
+// Scheduler fairness invariants (testkit::prop)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_round_robin_never_starves_a_batch() {
+    // Drive the pool's *real* pick policy deterministically (no OS
+    // threads, no timing): simulate_pick_order drains synthetic batches
+    // through PoolState::pick exactly as worker_loop does.
+    let gen = prop::Gen::new(|r, _s| {
+        let batches = r.range(2, 6); // 2..=5 batches
+        let workers = r.range(1, 5); // 1..=4 workers
+        let sizes: Vec<usize> = (0..batches).map(|_| r.range(1, 41)).collect();
+        (workers, sizes)
+    });
+    prop::assert_prop("rr-no-starvation", &gen, |case: &(usize, Vec<usize>)| {
+        let (workers, sizes) = case;
+        let order = simulate_pick_order(sizes, *workers);
+        let total: usize = sizes.iter().sum();
+        if order.len() != total {
+            return Err(format!(
+                "executed {} of {total} queued tasks",
+                order.len()
+            ));
+        }
+        // Per-batch totals must account for every task.
+        let mut counts = vec![0usize; sizes.len()];
+        for &b in &order {
+            counts[b] += 1;
+        }
+        if &counts != sizes {
+            return Err(format!("per-batch counts {counts:?} != sizes {sizes:?}"));
+        }
+        // No-starvation: while a batch still has queued tasks, it is
+        // served at least once within any window of 2·B+2 picks (strict
+        // round-robin serves it every B picks; the slack covers cursor
+        // shifts when a drained batch is removed).
+        let bound = 2 * sizes.len() + 2;
+        let mut remaining = sizes.clone();
+        let mut waited = vec![0usize; sizes.len()];
+        for &b in &order {
+            for (c, w) in waited.iter_mut().enumerate() {
+                if c != b && remaining[c] > 0 {
+                    *w += 1;
+                    if *w > bound {
+                        return Err(format!(
+                            "batch {c} starved for {w} consecutive picks \
+                             (bound {bound}) in {order:?}"
+                        ));
+                    }
+                }
+            }
+            waited[b] = 0;
+            remaining[b] -= 1;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn per_batch_pool_stats_sum_to_global_totals() {
+    let pool = WorkerPool::new(threads());
+    let before = pool.totals();
+    let batches = 6;
+    let tasks_per_batch = 100;
+    let results: Vec<_> = std::thread::scope(|s| {
+        let pool = &pool;
+        let handles: Vec<_> = (0..batches)
+            .map(|_| {
+                s.spawn(move || {
+                    let counter = AtomicUsize::new(0);
+                    let tasks: Vec<_> = (0..tasks_per_batch)
+                        .map(|_| {
+                            let c = &counter;
+                            move |_w: usize| {
+                                c.fetch_add(1, Ordering::Relaxed);
+                            }
+                        })
+                        .collect();
+                    let stats = pool.run(threads(), tasks);
+                    assert_eq!(counter.load(Ordering::Relaxed), tasks_per_batch);
+                    stats
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let after = pool.totals();
+    assert_eq!(
+        after.executed - before.executed,
+        results.iter().map(|r| r.executed).sum::<usize>(),
+        "per-batch executed must sum to the pool total"
+    );
+    assert_eq!(after.executed - before.executed, batches * tasks_per_batch);
+    assert_eq!(
+        after.steals - before.steals,
+        results.iter().map(|r| r.steals).sum::<usize>(),
+        "per-batch steals must sum to the pool total"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Deterministic scenarios over the seven benchmark workloads
+// ---------------------------------------------------------------------
+
+#[test]
+fn seeded_scenarios_match_serial_execution() {
+    let kit = ScenarioKit::prepare(0.0005, 1234);
+    for base_seed in [0xA11CEu64, 0xB0B] {
+        let sc = Scenario {
+            seed: scenario::scenario_seed(base_seed),
+            drivers: 4,
+            plans_per_driver: 3,
+            threads: threads(),
+        };
+        scenario::assert_scenario(&kit, &sc);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared-heap accounting under concurrency
+// ---------------------------------------------------------------------
+
+#[test]
+fn shared_heap_concurrent_jobs_report_exact_per_job_allocation() {
+    let lines = wc_lines(200);
+
+    // Serial reference on a private heap.
+    let ref_cfg = JobConfig::new()
+        .with_heap(SimHeap::new(HeapParams::no_injection()))
+        .with_threads(2);
+    let srt = Runtime::with_config(ref_cfg);
+    let expect = srt
+        .job(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("conc.heap")),
+        )
+        .sorted()
+        .run(&lines);
+    let m = expect.metrics();
+    let expect_alloc = (m.gc.allocated_bytes, m.gc.allocated_objects);
+    assert!(expect_alloc.1 > 0, "reference job must allocate");
+
+    // Four tenants sharing one session heap: each must report the same
+    // per-job allocation delta as the serial reference — concurrent
+    // tenants' traffic must not leak into each other's FlowMetrics.
+    let cfg = JobConfig::new()
+        .with_heap(SimHeap::new(HeapParams::no_injection()))
+        .with_threads(2);
+    let rt = Runtime::with_config(cfg);
+    std::thread::scope(|s| {
+        let rt = &rt;
+        let lines = &lines;
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(move || {
+                    rt.job(
+                        wc_mapper,
+                        RirReducer::<String, i64>::new(canon::sum_i64("conc.heap")),
+                    )
+                    .sorted()
+                    .run(lines)
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().unwrap();
+            assert_eq!(out.pairs, expect.pairs);
+            let gc = &out.metrics().gc;
+            assert_eq!(
+                (gc.allocated_bytes, gc.allocated_objects),
+                expect_alloc,
+                "per-job GC delta must be isolated from concurrent tenants"
+            );
+        }
+    });
+}
