@@ -43,6 +43,35 @@ impl ExecutionFlow {
     }
 }
 
+/// Materialization-cache configuration (see [`crate::cache`]). Governs
+/// how [`Dataset::cache`](crate::api::plan::Dataset::cache) cut points
+/// behave; plans that never mark a cut never touch the cache.
+#[derive(Clone, Debug)]
+pub struct CacheConfig {
+    /// Whether cut points store/read entries at all. When false,
+    /// `Dataset::cache()` is a no-op marker: the prefix recomputes on
+    /// every collect (the baseline the cache acceptance tests compare).
+    pub enabled: bool,
+    /// Simulated-heap occupancy fraction at which inserts start evicting:
+    /// when the producing job's heap is at or above
+    /// `watermark × total_bytes`, half the cached bytes are released
+    /// (LRU-first, cheapest-recompute first among equals).
+    pub watermark: f64,
+    /// Hard cap on total cached bytes, independent of heap pressure —
+    /// the backstop for disabled-heap (pure-speed) sessions.
+    pub max_bytes: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: true,
+            watermark: 0.85,
+            max_bytes: 256 << 20,
+        }
+    }
+}
+
 /// Per-job runtime configuration.
 #[derive(Clone)]
 pub struct JobConfig {
@@ -61,6 +90,8 @@ pub struct JobConfig {
     /// `toUpperCase`/`Matcher.group` strings in Figure 2's word count).
     /// Benchmark definitions set this per workload.
     pub scratch_per_emit: u64,
+    /// Materialization-cache behaviour at `Dataset::cache()` cut points.
+    pub cache: CacheConfig,
 }
 
 impl JobConfig {
@@ -74,6 +105,7 @@ impl JobConfig {
             optimize: OptimizeMode::Auto,
             heap: SimHeap::new(HeapParams::default()),
             scratch_per_emit: 0,
+            cache: CacheConfig::default(),
         }
     }
 
@@ -109,6 +141,32 @@ impl JobConfig {
         self.tasks_per_thread = t.max(1);
         self
     }
+
+    /// Replace the whole cache configuration.
+    pub fn with_cache(mut self, cache: CacheConfig) -> Self {
+        self.cache = cache;
+        self
+    }
+
+    /// Toggle `Dataset::cache()` cut points (disabled → every collect
+    /// recomputes the prefix; the structure of the plan is unchanged).
+    pub fn with_cache_enabled(mut self, enabled: bool) -> Self {
+        self.cache.enabled = enabled;
+        self
+    }
+
+    /// Set the heap-occupancy eviction watermark (fraction of the heap's
+    /// `total_bytes`; clamped to `0.0..=1.0`).
+    pub fn with_cache_watermark(mut self, watermark: f64) -> Self {
+        self.cache.watermark = watermark.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Set the hard cap on total cached bytes.
+    pub fn with_cache_max_bytes(mut self, bytes: u64) -> Self {
+        self.cache.max_bytes = bytes;
+        self
+    }
 }
 
 impl Default for JobConfig {
@@ -140,5 +198,22 @@ mod tests {
         let c = JobConfig::new().with_threads(0).with_tasks_per_thread(0);
         assert_eq!(c.threads, 1);
         assert_eq!(c.tasks_per_thread, 1);
+        let c = c.with_cache_watermark(7.0);
+        assert_eq!(c.cache.watermark, 1.0);
+    }
+
+    #[test]
+    fn cache_defaults_and_builders() {
+        let c = JobConfig::new();
+        assert!(c.cache.enabled);
+        assert!(c.cache.watermark > 0.0 && c.cache.watermark <= 1.0);
+        assert!(c.cache.max_bytes > 0);
+        let c = c
+            .with_cache_enabled(false)
+            .with_cache_watermark(0.25)
+            .with_cache_max_bytes(1024);
+        assert!(!c.cache.enabled);
+        assert_eq!(c.cache.watermark, 0.25);
+        assert_eq!(c.cache.max_bytes, 1024);
     }
 }

@@ -58,7 +58,7 @@ use std::sync::Arc;
 
 use super::config::{JobConfig, OptimizeMode};
 use super::plan::{
-    apply_chain, Base, Chain, Dataset, PlanOutput, PlanStage, StageInfo, StageKind,
+    apply_chain, Base, Chain, Dataset, PlanOutput, PlanStage, StageInfo, StageKind, StageToken,
 };
 use super::source::Feed;
 use super::traits::{HeapSized, KeyValue};
@@ -305,17 +305,24 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedDataset<'rt, K, V, B> {
             config,
         } = self.inner;
         let index = stages.len();
+        let agg = Arc::new(agg);
+        // Keyed stages identify by their aggregator `Arc` address (reuse
+        // the same handle across plans for matching prefix fingerprints,
+        // exactly like `map_reduce_shared`); the planner maps it to a
+        // session ordinal only if the plan actually marks a cache cut.
+        let token = StageToken::Address(fxhash(&(Arc::as_ptr(&agg) as *const () as usize)));
         stages.push(StageInfo {
             kind: StageKind::KeyedAggregate,
             name: agg.name().to_string(),
             optimize: config.optimize,
+            token: Some(token),
         });
         let stage = KeyedStage {
             base,
             chain,
             chain_range: chain_start..index,
             index,
-            agg: Arc::new(agg),
+            agg,
             cfg: config.clone(),
             _out: PhantomData,
         };
@@ -402,6 +409,9 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedDataset<'rt, K, V, B> {
                 kind: StageKind::CoGroup,
                 name: "co_group".to_string(),
                 optimize,
+                // A co-group plan owns no source of its own (both inputs
+                // run as sub-plans), so it is never a cacheable root.
+                token: None,
             }],
             chain_start: 1,
             config,

@@ -37,10 +37,10 @@ pub mod runtime;
 pub mod source;
 pub mod traits;
 
-pub use config::{ExecutionFlow, JobConfig, OptimizeMode};
+pub use config::{CacheConfig, ExecutionFlow, JobConfig, OptimizeMode};
 pub use job::{JobReport, MapReduce};
 pub use keyed::{Aggregator, KeyedDataset};
-pub use plan::{Dataset, PlanOutput, PlanReport, StageInfo, StageKind};
+pub use plan::{Dataset, PlanOutput, PlanReport, StageInfo, StageKind, StageToken};
 pub use reducers::RirReducer;
 pub use runtime::{JobBuilder, JobOutput, Pipeline, PlanHandle, Runtime};
 pub use source::{ChunkedSource, Feed, InputSource, IterSource};

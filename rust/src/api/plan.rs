@@ -38,6 +38,14 @@
 //! application records `map`/`map_reduce` calls; whether a stage fuses,
 //! streams, or combines is the agent's decision, never the caller's.
 //!
+//! A fourth, opt-in mechanism rides the same structural visibility:
+//! **prefix materialization caching** ([`Dataset::cache`]). A collect
+//! does *not* necessarily recompute from the source — a plan prefix
+//! marked with a cut point materializes once per session and is read
+//! back by any later plan (same driver's next iteration, or a
+//! concurrent tenant) whose prefix fingerprint matches; see
+//! [`crate::cache`].
+//!
 //! Plans are **multi-tenant**: any number of driver threads may record
 //! and `collect()` plans against one shared [`Runtime`] concurrently.
 //! Each stage submits a tagged batch to the session's multi-tenant pool
@@ -65,10 +73,14 @@ use std::sync::Arc;
 use super::config::{JobConfig, OptimizeMode};
 use super::runtime::Runtime;
 use super::source::{Feed, InputSource};
-use super::traits::{KeyValue, Mapper, Reducer};
+use super::traits::{HeapSized, KeyValue, Mapper, Reducer};
+use crate::cache::{fingerprint, CacheActivity, MaterializationCache, ENTRY_SLOT_BYTES};
+use crate::coordinator::collector::shard_count;
 use crate::coordinator::pipeline::{concat_shards, run_job_sharded, FlowMetrics};
 use crate::coordinator::planner::{self, PlanExec};
 use crate::optimizer::value::RirValue;
+use crate::util::hash::fxhash;
+use crate::util::timer::Stopwatch;
 
 /// What kind of logical stage a plan node records.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -89,6 +101,25 @@ pub enum StageKind {
     /// A two-input co-group barrier (`co_group`/`join`): both upstream
     /// plans execute as sub-plans and merge by key.
     CoGroup,
+    /// A materialization-cache cut point ([`Dataset::cache`]): the prefix
+    /// up to here materializes once per fingerprint and is reused by any
+    /// plan whose prefix fingerprint matches (see [`crate::cache`]).
+    Cache,
+}
+
+/// Identity of a stage for prefix fingerprinting (see
+/// [`crate::cache::fingerprint`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageToken {
+    /// A session-stable identity the caller declared ([`Dataset::tag`]) —
+    /// hashed as-is, valid forever.
+    Stable(u64),
+    /// A raw address identity (a source buffer, a mapper/reducer `Arc`):
+    /// mapped to a first-seen session ordinal during lowering, so
+    /// fingerprints are registration-order-stable rather than
+    /// address-bound. Valid only while the referent is alive — see the
+    /// aliasing note on [`Dataset::cache`].
+    Address(u64),
 }
 
 /// One recorded logical stage (what the planner lowers).
@@ -99,6 +130,11 @@ pub struct StageInfo {
     pub name: String,
     /// Optimizer mode captured when the stage was recorded.
     pub optimize: OptimizeMode,
+    /// Identity token for prefix fingerprinting: the stage's source (for
+    /// `Source` stages) or its mapper/reducer `Arc`s (for reduce stages).
+    /// `None` for stages whose identity the framework cannot observe
+    /// (anonymous element-wise closures, streaming sources).
+    pub token: Option<StageToken>,
 }
 
 /// An element-wise operator with its input type erased into the closure:
@@ -211,6 +247,7 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             kind,
             name: name.to_string(),
             optimize: self.config.optimize,
+            token: None,
         });
     }
 
@@ -368,10 +405,15 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             config,
         } = self;
         let index = stages.len();
+        // Identify the stage by its mapper/reducer `Arc`s: reusing the
+        // same handles across plans (an iterative driver hoisting them
+        // out of its loop) is what makes prefix fingerprints match.
+        let token = stage_token(Arc::as_ptr(&mapper), Arc::as_ptr(&reducer));
         stages.push(StageInfo {
             kind: StageKind::MapReduce,
             name: reducer.class_name().to_string(),
             optimize: config.optimize,
+            token: Some(token),
         });
         let stage = ReduceStage {
             base,
@@ -392,10 +434,121 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
         }
     }
 
+    /// Name the plan's **source identity** for prefix fingerprinting,
+    /// replacing the default address-derived token. Two plans tagged with
+    /// the same name are declared to read the same data, wherever it
+    /// lives — which makes cached prefixes shareable across source
+    /// *lifetimes* (a driver that rebuilds its input vector per run, two
+    /// tenants holding separate copies of one dataset).
+    ///
+    /// Prefer a content-derived name (dataset id + length + a sample
+    /// hash) over a constant: the default address token is only valid
+    /// while the source allocation lives, and an allocator reusing a
+    /// freed buffer for *different* data of the same length would alias
+    /// it — a tag makes the identity explicit instead. No-op on plans
+    /// not rooted at a source (co-group roots).
+    pub fn tag(mut self, name: &str) -> Self {
+        if let Some(first) = self.stages.first_mut() {
+            if first.kind == StageKind::Source {
+                first.token = Some(StageToken::Stable(fxhash(&("source-tag", name))));
+            }
+        }
+        self
+    }
+
+    /// Mark a **materialization-cache cut point**: when the plan
+    /// executes, the prefix up to here materializes once and is stored in
+    /// the session [`MaterializationCache`], keyed by the prefix's
+    /// structural fingerprint. Any later plan — this driver's next
+    /// iteration, or a concurrent tenant — whose prefix fingerprint
+    /// matches reads the stored shards instead of recomputing (two plans
+    /// racing on the same uncached prefix share one computation).
+    ///
+    /// For fingerprints to match across plans, reuse the *same*
+    /// mapper/reducer `Arc`s ([`Dataset::map_reduce_shared`]) and the
+    /// same source value: hoist them out of the iteration loop. Marking
+    /// `cache()` asserts the prefix is deterministic — the framework
+    /// identifies it structurally, never by closure bodies.
+    ///
+    /// **Aliasing caveat.** Address-derived identities
+    /// ([`StageToken::Address`] — source buffers and closure `Arc`s) are
+    /// valid only while their referent is alive: if a prefix's closures
+    /// are dropped while its entry is still cached, an allocator may
+    /// hand a *different* closure the same address later, and a
+    /// same-shaped plan (same stage kinds, names, and modes) would then
+    /// alias the stale entry. Keep shared prefix `Arc`s alive for as
+    /// long as their entries matter, give sources a content-derived
+    /// [`Dataset::tag`], and give semantically different reduce stages
+    /// different class names — the fingerprint covers all three.
+    ///
+    /// The cut is honest about memory: entry bytes are charged to a
+    /// dedicated scoped cohort on the producing job's simulated heap, and
+    /// evicted pressure-first (see
+    /// [`CacheConfig`](crate::api::config::CacheConfig)). With
+    /// [`CacheConfig::enabled`](crate::api::config::CacheConfig) false
+    /// the cut stays in the plan but stores and reads nothing — a cut
+    /// directly after a reduce barrier then adds no work at all, so
+    /// cached and uncached runs produce identical results.
+    pub fn cache(mut self) -> Dataset<'rt, T, T>
+    where
+        T: Clone + Send + Sync + HeapSized + 'static,
+        B: Send + Sync,
+    {
+        let index = self.stages.len();
+        self.push_stage(StageKind::Cache, "cache");
+        let stage = CacheStage {
+            base: self.base,
+            chain: self.chain,
+            index,
+            cfg: self.config.clone(),
+            cache: self.rt.cache(),
+        };
+        Dataset {
+            rt: self.rt,
+            base: Base::Stage(Box::new(stage)),
+            chain: Chain::direct(),
+            chain_start: self.stages.len(),
+            stages: self.stages,
+            config: self.config,
+        }
+    }
+
+    /// Drop the cached materialization of the **current prefix** (the
+    /// entry a [`Dataset::cache`] call here would read), releasing its
+    /// simulated-heap cohort. A no-op when nothing is cached. The plan
+    /// itself is unchanged — recording and collecting continue normally.
+    pub fn uncache(self) -> Self {
+        let mut probe = self.stages.clone();
+        probe.push(StageInfo {
+            kind: StageKind::Cache,
+            name: "cache".to_string(),
+            optimize: self.config.optimize,
+            token: None,
+        });
+        if fingerprint::cacheable(&probe) {
+            if let Some(&fp) =
+                fingerprint::prefix_fingerprints(&probe, self.rt.cache()).last()
+            {
+                self.rt.cache().remove(crate::cache::Fingerprint(fp));
+            }
+        }
+        self
+    }
+
+    /// A human-readable description of the lowered plan: stage kinds and
+    /// names, the whole-plan pass's fusion/streaming decisions, prefix
+    /// fingerprints, and cache cut points. Purely observational — nothing
+    /// executes and no optimizer statistics are recorded.
+    pub fn explain(&self) -> String {
+        planner::describe(&self.stages, self.rt.agent(), self.rt.cache())
+    }
+
     /// Execute the plan and materialize the output elements. This is the
     /// only place anything runs: the planner lowers the recorded stages,
     /// the agent's whole-plan pass picks placements, and every stage runs
-    /// on the session's persistent worker pool.
+    /// on the session's persistent worker pool — except prefixes behind a
+    /// [`Dataset::cache`] cut whose fingerprint hits the session
+    /// materialization cache, which are read back instead of recomputed.
     ///
     /// `T: Clone` is exercised only where the plan must turn borrowed
     /// chain outputs into owned results — no-op plans over borrowed
@@ -412,7 +565,7 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             chain_start,
             ..
         } = self;
-        let plan = planner::lower(&stages, rt.agent());
+        let plan = planner::lower(&stages, rt.agent(), rt.cache());
         let mut exec = PlanExec::new(rt.pool(), rt.agent(), plan);
         let chain_range = chain_start..stages.len();
         let fuse = exec.chain_fused(&chain_range);
@@ -485,6 +638,7 @@ impl<'rt, T: 'rt> Dataset<'rt, T> {
         config: JobConfig,
     ) -> Dataset<'rt, T> {
         let optimize = config.optimize;
+        let token = source.fingerprint_token().map(StageToken::Address);
         Dataset {
             rt,
             base: Base::Source(source),
@@ -493,11 +647,24 @@ impl<'rt, T: 'rt> Dataset<'rt, T> {
                 kind: StageKind::Source,
                 name: "source".to_string(),
                 optimize,
+                token,
             }],
             chain_start: 1,
             config,
         }
     }
+}
+
+/// Fingerprint identity of a reduce-shaped stage: both closure `Arc`
+/// addresses, mixed into one raw [`StageToken::Address`]. The planner
+/// maps the raw value to a first-seen session ordinal when it lowers a
+/// plan that actually marks a cache cut — plans that never cache
+/// register nothing — see [`crate::cache::fingerprint`].
+fn stage_token<M: ?Sized, R: ?Sized>(mapper: *const M, reducer: *const R) -> StageToken {
+    StageToken::Address(fxhash(&(
+        mapper as *const () as usize,
+        reducer as *const () as usize,
+    )))
 }
 
 // ---------------------------------------------------------------------
@@ -659,6 +826,170 @@ where
     }
 }
 
+/// A recorded cache cut point: the prefix (base + element-wise chain) it
+/// owns, plus the session cache it resolves through. Executing it either
+/// reads the stored shards (prefix fingerprint hit), waits on a
+/// concurrent plan computing the same prefix (in-flight dedup), or
+/// computes, stores, and publishes the prefix itself.
+struct CacheStage<'rt, B, T> {
+    base: Base<'rt, B>,
+    chain: Chain<'rt, B, T>,
+    /// Logical index of this cut point.
+    index: usize,
+    cfg: JobConfig,
+    cache: &'rt MaterializationCache,
+}
+
+impl<'rt, B, T> CacheStage<'rt, B, T>
+where
+    B: Send + Sync + 'rt,
+    T: Clone + Send + Sync + HeapSized + 'static,
+{
+    /// Materialize the prefix: run the upstream stages and apply the
+    /// element-wise chain, preserving (or creating) shard structure so a
+    /// downstream stage can stream the result.
+    fn compute(
+        base: Base<'rt, B>,
+        chain: Chain<'rt, B, T>,
+        cfg: &JobConfig,
+        exec: &mut PlanExec<'rt>,
+    ) -> Vec<Vec<T>> {
+        match base {
+            Base::Source(mut src) => {
+                let hint = src.len_hint();
+                let items = collect_source(src.feed(), &chain, hint);
+                if matches!(chain, Chain::Ops { .. }) {
+                    exec.note_materialized(items.len() as u64);
+                }
+                // Shard-split so a downstream streamed handoff
+                // parallelizes like a reduce stage's output would.
+                let shards = shard_count(cfg.threads);
+                let per = items.len().div_ceil(shards.max(1)).max(1);
+                let mut out: Vec<Vec<T>> = Vec::new();
+                let mut iter = items.into_iter();
+                loop {
+                    let shard: Vec<T> = iter.by_ref().take(per).collect();
+                    if shard.is_empty() {
+                        break;
+                    }
+                    out.push(shard);
+                }
+                out
+            }
+            Base::Stage(upstream) => {
+                let shards = upstream.execute(exec);
+                match chain {
+                    // Direct cut after a barrier: the upstream shards are
+                    // already the cut's value — pass them through.
+                    Chain::Direct { by_val, .. } => shards
+                        .into_iter()
+                        .map(|s| s.into_iter().map(by_val).collect())
+                        .collect(),
+                    Chain::Ops { op } => {
+                        let mut staged = 0u64;
+                        let out: Vec<Vec<T>> = shards
+                            .into_iter()
+                            .map(|shard| {
+                                let mut buf: Vec<T> = Vec::new();
+                                for b in &shard {
+                                    op(b, &mut |t: &T| buf.push(t.clone()));
+                                }
+                                staged += buf.len() as u64;
+                                buf
+                            })
+                            .collect();
+                        exec.note_materialized(staged);
+                        out
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl<'rt, B, T> PlanStage<'rt, T> for CacheStage<'rt, B, T>
+where
+    B: Send + Sync + 'rt,
+    T: Clone + Send + Sync + HeapSized + 'static,
+{
+    fn execute(self: Box<Self>, exec: &mut PlanExec<'rt>) -> Vec<Vec<T>> {
+        let CacheStage {
+            base,
+            chain,
+            index,
+            cfg,
+            cache,
+        } = *self;
+        let fp = if cfg.cache.enabled {
+            exec.cut_fingerprint(index)
+        } else {
+            None
+        };
+        let Some(fp) = fp else {
+            // Cache disabled, or the prefix has no observable identity
+            // (stream source): plain materialization, nothing stored.
+            return Self::compute(base, chain, &cfg, exec);
+        };
+        match cache.begin(fp) {
+            crate::cache::Begin::Ready { value, waited } => {
+                match value.downcast::<Vec<Vec<T>>>() {
+                    Ok(shards) => {
+                        cache.record_read(waited);
+                        exec.note_cache(CacheActivity {
+                            hits: if waited { 0 } else { 1 },
+                            shared_in_flight: if waited { 1 } else { 0 },
+                            ..CacheActivity::default()
+                        });
+                        // The clone is plain process memory (never
+                        // simulated-heap-charged) — the price of handing
+                        // the downstream stage owned shards instead of
+                        // re-running the prefix jobs.
+                        (*shards).clone()
+                    }
+                    // A fingerprint collision across element types:
+                    // compute without touching the stored entry.
+                    Err(_) => {
+                        cache.record_type_conflict();
+                        Self::compute(base, chain, &cfg, exec)
+                    }
+                }
+            }
+            crate::cache::Begin::Claimed(ticket) => {
+                let sw = Stopwatch::start();
+                let shards = Self::compute(base, chain, &cfg, exec);
+                let secs = sw.secs();
+                let mut bytes = 0u64;
+                let mut items = 0u64;
+                for shard in &shards {
+                    items += shard.len() as u64;
+                    bytes += shard
+                        .iter()
+                        .map(|t| t.heap_bytes() + ENTRY_SLOT_BYTES)
+                        .sum::<u64>();
+                }
+                let stored: Arc<Vec<Vec<T>>> = Arc::new(shards);
+                let stored_any: Arc<dyn std::any::Any + Send + Sync> = Arc::clone(&stored);
+                let evictions = cache.complete(
+                    ticket,
+                    stored_any,
+                    bytes,
+                    items,
+                    secs,
+                    &cfg.heap,
+                    &cfg.cache,
+                );
+                exec.note_cache(CacheActivity {
+                    misses: 1,
+                    evictions,
+                    bytes_inserted: bytes,
+                    ..CacheActivity::default()
+                });
+                (*stored).clone()
+            }
+        }
+    }
+}
+
 /// Run one physical reduce stage, recording its metrics (with the
 /// materialized-input count the acceptance criteria compare).
 fn run_stage<'rt, I, K, V>(
@@ -763,6 +1094,11 @@ pub struct PlanReport {
     /// [`FlowMetrics::materialized_in`](crate::coordinator::pipeline::FlowMetrics)
     /// plus any unfused terminal chain's input).
     pub materialized_pairs: u64,
+    /// What this plan did to the session materialization cache: prefix
+    /// hits, misses (prefixes it computed and stored), in-flight shares,
+    /// evictions its inserts triggered, bytes inserted. All zero for
+    /// plans without a [`Dataset::cache`] cut point.
+    pub cache: CacheActivity,
 }
 
 /// What a terminal collect returns: the materialized elements plus the
@@ -840,6 +1176,10 @@ impl<T> InputSource<T> for PlanOutput<T> {
 
     fn len_hint(&self) -> Option<usize> {
         Some(self.items.len())
+    }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        Some(fxhash(&(self.items.as_ptr() as usize, self.items.len())))
     }
 }
 

@@ -38,11 +38,13 @@ use super::job::JobReport;
 use super::plan::Dataset;
 use super::source::{Feed, InputSource};
 use super::traits::{KeyValue, Mapper, Reducer};
+use crate::cache::MaterializationCache;
 use crate::coordinator::pipeline::FlowMetrics;
 use crate::coordinator::scheduler::WorkerPool;
 use crate::memsim::SimHeap;
 use crate::optimizer::agent::OptimizerAgent;
 use crate::optimizer::value::RirValue;
+use crate::util::hash::fxhash;
 
 /// A long-lived execution session: worker pool + optimizer agent + heap.
 ///
@@ -63,6 +65,7 @@ pub struct Runtime {
     pool: WorkerPool,
     agent: OptimizerAgent,
     config: JobConfig,
+    cache: MaterializationCache,
 }
 
 impl Runtime {
@@ -91,6 +94,7 @@ impl Runtime {
             pool: WorkerPool::new(config.threads),
             agent,
             config,
+            cache: MaterializationCache::new(),
         }
     }
 
@@ -102,6 +106,18 @@ impl Runtime {
     /// The session-wide optimizer agent (per-class cache + timing stats).
     pub fn agent(&self) -> &OptimizerAgent {
         &self.agent
+    }
+
+    /// The session materialization cache: subplan results stored at
+    /// [`Dataset::cache`] cut points, shared by every plan and tenant on
+    /// this session (see [`crate::cache`]). Read
+    /// [`stats`](MaterializationCache::stats) for hit/miss/eviction
+    /// accounting, or [`clear`](MaterializationCache::clear) to drop all
+    /// entries.
+    ///
+    /// [`Dataset::cache`]: crate::api::plan::Dataset::cache
+    pub fn cache(&self) -> &MaterializationCache {
+        &self.cache
     }
 
     /// The session's *default* simulated heap. Jobs inherit it unless
@@ -170,7 +186,11 @@ impl Runtime {
     /// the returned [`Dataset`] (`map`, `filter`, `flat_map`,
     /// `map_reduce`) execute only at `collect()`, after the session
     /// agent's whole-plan pass has fused element-wise stages and arranged
-    /// reduce handoffs to stream — see [`crate::api::plan`].
+    /// reduce handoffs to stream — see [`crate::api::plan`]. A collect
+    /// need not recompute from the source: prefixes marked with
+    /// [`Dataset::cache`](crate::api::plan::Dataset::cache) are
+    /// materialized once and read back from the session cache on
+    /// fingerprint match ([`Runtime::cache`]).
     ///
     /// `collect()` may be called from any number of threads sharing this
     /// session concurrently; each plan gets its own isolated
@@ -392,6 +412,10 @@ impl<K, V> InputSource<KeyValue<K, V>> for JobOutput<K, V> {
 
     fn len_hint(&self) -> Option<usize> {
         Some(self.pairs.len())
+    }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        Some(fxhash(&(self.pairs.as_ptr() as usize, self.pairs.len())))
     }
 }
 

@@ -56,6 +56,20 @@ pub trait InputSource<I> {
     fn len_hint(&self) -> Option<usize> {
         None
     }
+
+    /// Raw identity of the backing data for plan-prefix fingerprinting
+    /// (see [`crate::cache::fingerprint`]): two sources with the same
+    /// token are the same data, so plans over them may share cached
+    /// materializations. Materialized sources report their buffer's
+    /// address + length; the session maps raw tokens to first-seen
+    /// registration ordinals before hashing, so fingerprints stay stable
+    /// across sessions. The `None` default (streaming generators, whose
+    /// contents the framework cannot identify without consuming them)
+    /// makes plans over the source uncacheable — a safe no-op, never an
+    /// error.
+    fn fingerprint_token(&self) -> Option<u64> {
+        None
+    }
 }
 
 impl<I, S: InputSource<I> + ?Sized> InputSource<I> for &mut S {
@@ -66,6 +80,16 @@ impl<I, S: InputSource<I> + ?Sized> InputSource<I> for &mut S {
     fn len_hint(&self) -> Option<usize> {
         (**self).len_hint()
     }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        (**self).fingerprint_token()
+    }
+}
+
+/// Identity of a materialized buffer: its address and length (mapped to
+/// a session registration ordinal before anything hashes it).
+fn slice_token<I>(items: &[I]) -> u64 {
+    crate::util::hash::fxhash(&(items.as_ptr() as usize, items.len()))
 }
 
 impl<I> InputSource<I> for &[I] {
@@ -75,6 +99,10 @@ impl<I> InputSource<I> for &[I] {
 
     fn len_hint(&self) -> Option<usize> {
         Some(self.len())
+    }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        Some(slice_token(self))
     }
 }
 
@@ -86,6 +114,10 @@ impl<I> InputSource<I> for Vec<I> {
     fn len_hint(&self) -> Option<usize> {
         Some(self.len())
     }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        Some(slice_token(self))
+    }
 }
 
 impl<I> InputSource<I> for &Vec<I> {
@@ -96,6 +128,10 @@ impl<I> InputSource<I> for &Vec<I> {
     fn len_hint(&self) -> Option<usize> {
         Some(self.len())
     }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        Some(slice_token(self))
+    }
 }
 
 impl<I, const N: usize> InputSource<I> for &[I; N] {
@@ -105,6 +141,10 @@ impl<I, const N: usize> InputSource<I> for &[I; N] {
 
     fn len_hint(&self) -> Option<usize> {
         Some(N)
+    }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        Some(slice_token(self.as_slice()))
     }
 }
 

@@ -13,14 +13,16 @@
 
 use std::sync::Arc;
 
+use crate::api::plan::PlanReport;
 use crate::api::reducers::RirReducer;
-use crate::api::traits::Emitter;
+use crate::api::traits::{Emitter, KeyValue, Mapper, Reducer};
 use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
 use crate::coordinator::pipeline::FlowMetrics;
 use crate::optimizer::builder::canon;
 use crate::runtime::artifacts::shapes::{KM_CENTROIDS, KM_DIMS, KM_POINTS};
+use crate::util::hash::FxHasher;
 
 use super::backend::Backend;
 use super::datagen::KmeansData;
@@ -67,14 +69,136 @@ pub fn normalize(sums: &[(i64, Vec<f64>)], prev: &[[f64; 3]]) -> Vec<[f64; 3]> {
     next
 }
 
+/// Fixed value dimension of the cached load stage: `[n, x0, y0, z0, …]`
+/// padded to the kernel block size, so the identity sum-reduce folds it.
+pub const BLOCK_VEC_DIM: usize = 1 + KM_POINTS * KM_DIMS;
+
+/// Pack one point block into the load stage's fixed-dimension value.
+fn pack_block(block: &[[f64; 3]]) -> Vec<f64> {
+    let mut v = vec![0.0; BLOCK_VEC_DIM];
+    v[0] = block.len() as f64;
+    for (i, p) in block.iter().enumerate() {
+        for d in 0..KM_DIMS {
+            v[1 + i * KM_DIMS + d] = p[d];
+        }
+    }
+    v
+}
+
+/// Recover a point block from its packed load-stage value.
+fn unpack_block(v: &[f64]) -> Vec<[f64; 3]> {
+    let n = v[0] as usize;
+    (0..n)
+        .map(|i| [v[1 + i * KM_DIMS], v[2 + i * KM_DIMS], v[3 + i * KM_DIMS]])
+        .collect()
+}
+
+/// Full-content digest of a point set (the cached prefix's source tag):
+/// every coordinate's bits, so distinct datasets always tag distinct.
+fn points_digest(points: &[[f64; 3]]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = FxHasher::default();
+    h.write_usize(points.len());
+    for p in points {
+        for v in p {
+            h.write_u64(v.to_bits());
+        }
+    }
+    h.finish()
+}
+
+/// Full MR4R K-Means on one session, with the per-iteration plan split at
+/// a [`Dataset::cache`](crate::api::plan::Dataset::cache) cut:
+///
+/// * **load stage** (`kmeans.points`, centroid-independent): blocks pack
+///   into fixed-dimension point vectors — the "parse the dataset" work a
+///   Lloyd driver otherwise redoes every iteration. The stage's
+///   mapper/reducer `Arc`s are hoisted out of the loop, so every
+///   iteration's prefix fingerprint matches and iterations ≥ 2 read the
+///   materialized blocks back from the session cache instead of
+///   re-running (and re-allocating) the load job.
+/// * **assignment stage** (`kmeans.sumvec`): depends on the evolving
+///   centroids, so it records a fresh mapper per iteration and always
+///   executes — the data dependency that forces the driver round-trip.
+///
+/// The reducer class `kmeans.sumvec` still transforms once and hits the
+/// agent's per-class cache on later iterations, exactly as before.
+/// Returns final centroids plus every iteration's [`PlanReport`]
+/// (cache hits/misses included). With
+/// [`CacheConfig::enabled`](crate::api::config::CacheConfig) false the
+/// same two-stage plan runs end to end every iteration — the uncached
+/// baseline the cache acceptance tests compare against.
+pub fn run_mr4r_traced(
+    data: &KmeansData,
+    rt: &Runtime,
+    cfg: &JobConfig,
+    backend: &Backend,
+) -> (Vec<[f64; 3]>, Vec<PlanReport>) {
+    let blocks: Vec<(i64, &[[f64; 3]])> = data
+        .points
+        .chunks(KM_POINTS)
+        .enumerate()
+        .map(|(i, b)| (i as i64, b))
+        .collect();
+    // Content-derived source identity (a digest over *every* point, so
+    // two different datasets can never alias a cached entry, whatever
+    // the allocator does) — see `Dataset::tag`.
+    let source_tag = format!("kmeans.blocks/{:016x}", points_digest(&data.points));
+    // Hoisted load-stage closures: reusing these Arcs (and the `blocks`
+    // source) across iterations is what makes the prefix fingerprints
+    // match — see `crate::cache::fingerprint`.
+    let load_mapper: Arc<dyn Mapper<(i64, &[[f64; 3]]), i64, Vec<f64>> + '_> =
+        Arc::new(|blk: &(i64, &[[f64; 3]]), em: &mut dyn Emitter<i64, Vec<f64>>| {
+            em.emit(blk.0, pack_block(blk.1));
+        });
+    let load_reducer: Arc<dyn Reducer<i64, Vec<f64>> + '_> = Arc::new(RirReducer::<
+        i64,
+        Vec<f64>,
+    >::new(canon::sum_vec(
+        "kmeans.points",
+        BLOCK_VEC_DIM,
+    )));
+    let mut centroids = data.initial_centroids.clone();
+    let mut reports = Vec::with_capacity(ITERATIONS);
+    for _ in 0..ITERATIONS {
+        let cpad = padded_centroids(&centroids);
+        let backend = backend.clone();
+        let mapper = move |kv: &KeyValue<i64, Vec<f64>>, em: &mut dyn Emitter<i64, Vec<f64>>| {
+            let pts = unpack_block(&kv.value);
+            let assign = assign_block(&backend, &pts, &cpad);
+            for (p, &c) in pts.iter().zip(&assign) {
+                // Value = [Σx, Σy, Σz, count] seed for one point.
+                em.emit(c as i64, vec![p[0], p[1], p[2], 1.0]);
+            }
+        };
+        let reducer: RirReducer<i64, Vec<f64>> =
+            RirReducer::new(canon::sum_vec("kmeans.sumvec", KM_DIMS + 1));
+        let sums = rt
+            .dataset(&blocks)
+            .with_config(cfg.clone().with_scratch_per_emit(24))
+            .tag(&source_tag)
+            .map_reduce_shared(Arc::clone(&load_mapper), Arc::clone(&load_reducer))
+            .cache()
+            .map_reduce(mapper, reducer)
+            .collect();
+        reports.push(sums.report.clone());
+        let pairs: Vec<(i64, Vec<f64>)> = sums.into_tuples();
+        centroids = normalize(&pairs, &centroids);
+    }
+    (centroids, reports)
+}
+
 /// Full MR4R K-Means as a sequence of one-stage plans on one session:
 /// each Lloyd iteration is `rt.dataset(blocks).map_reduce(..).collect()`
 /// (threads spawn once, the reducer class "kmeans.sumvec" transforms once
 /// and every later iteration hits the agent's per-class cache); returns
 /// final centroids plus the metrics of the last iteration (the
-/// steady-state job the figures use). The iterations stay separate plans
-/// because each one's mapper depends on the previous result (the
-/// centroids) — the data dependency that forces a driver round-trip.
+/// steady-state job the figures use).
+///
+/// This is the figure-harness path, byte-identical to the legacy per-job
+/// driver (`rust/tests/api_equivalence.rs`) and deliberately *without* a
+/// materialization-cache cut — figure sweeps must measure every
+/// iteration's work. The cache-aware driver is [`run_mr4r_traced`].
 pub fn run_mr4r(
     data: &KmeansData,
     rt: &Runtime,
@@ -263,6 +387,66 @@ mod tests {
         );
         assert_eq!(m_off.flow.label(), "reduce");
         assert_eq!(digest_centroids(&c_on), digest_centroids(&c_off));
+    }
+
+    #[test]
+    fn iterations_after_the_first_hit_the_prefix_cache() {
+        let data = datagen::kmeans_points(0.004, 25);
+        let rt = Runtime::fast();
+        let (_, reports) = run_mr4r_traced(
+            &data,
+            &rt,
+            &JobConfig::fast().with_threads(2),
+            &Backend::Native,
+        );
+        assert_eq!(reports.len(), ITERATIONS);
+        assert_eq!(reports[0].cache.misses, 1, "first iteration computes the load stage");
+        assert_eq!(reports[0].cache.hits, 0);
+        for (i, r) in reports.iter().enumerate().skip(1) {
+            assert_eq!(r.cache.hits, 1, "iteration {i} must reuse the cached points");
+            assert_eq!(r.cache.misses, 0, "iteration {i} recomputed the prefix");
+            // The load job itself was skipped: only the assignment stage
+            // reports metrics.
+            assert_eq!(r.stage_metrics.len(), 1, "iteration {i}");
+        }
+        let s = rt.cache().stats();
+        assert_eq!(s.hits, (ITERATIONS - 1) as u64);
+        assert!(s.bytes_cached > 0, "cached points must be accounted");
+    }
+
+    #[test]
+    fn cache_disabled_runs_the_same_plan_uncached() {
+        let data = datagen::kmeans_points(0.004, 26);
+        let rt = Runtime::with_config(JobConfig::fast().with_cache_enabled(false));
+        let (cents, reports) = run_mr4r_traced(
+            &data,
+            &rt,
+            &rt.config().clone().with_threads(2),
+            &Backend::Native,
+        );
+        for r in &reports {
+            assert_eq!(r.cache.hits + r.cache.misses, 0, "disabled cache must stay cold");
+            assert_eq!(r.stage_metrics.len(), 2, "both stages execute every iteration");
+        }
+        assert_eq!(rt.cache().stats().entries, 0);
+        // Same math either way.
+        let rt_cached = Runtime::fast();
+        let (cents_cached, _) = run_mr4r_traced(
+            &data,
+            &rt_cached,
+            &JobConfig::fast().with_threads(2),
+            &Backend::Native,
+        );
+        assert_eq!(digest_centroids(&cents), digest_centroids(&cents_cached));
+        // …and the same math as the figure-harness single-stage driver.
+        let rt_plain = Runtime::fast();
+        let (cents_plain, _) = run_mr4r(
+            &data,
+            &rt_plain,
+            &JobConfig::fast().with_threads(2),
+            &Backend::Native,
+        );
+        assert_eq!(digest_centroids(&cents), digest_centroids(&cents_plain));
     }
 
     #[test]

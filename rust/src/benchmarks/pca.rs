@@ -9,8 +9,9 @@
 
 use std::sync::Arc;
 
+use crate::api::plan::PlanReport;
 use crate::api::reducers::RirReducer;
-use crate::api::traits::{Emitter, KeyValue};
+use crate::api::traits::{Emitter, KeyValue, Mapper, Reducer};
 use crate::api::{JobConfig, Runtime};
 use crate::baselines::phoenixpp::Container;
 use crate::baselines::{HashContainer, PhoenixConfig, PhoenixJob, PppJob, SumOp};
@@ -97,6 +98,117 @@ pub fn run_mr4r(
         .collect();
     let metrics = out.metrics().clone();
     (out.items, metrics)
+}
+
+/// Power iterations per [`run_power`] call (matches the K-Means Lloyd
+/// count, so the two iterative workloads stress the cache alike).
+pub const POWER_ITERATIONS: usize = 5;
+
+/// Full-content digest of a PCA workload (the cached partials' source
+/// tag): matrix shape + every element + every sampled pair, so distinct
+/// workloads always tag distinct.
+fn workload_digest(m: &MatrixData, pairs: &[(usize, usize)]) -> u64 {
+    use std::hash::Hasher;
+    let mut h = crate::util::hash::FxHasher::default();
+    h.write_usize(m.n);
+    for v in &m.data {
+        h.write_u32(v.to_bits());
+    }
+    h.write_usize(pairs.len());
+    for &(i, j) in pairs {
+        h.write_usize(i);
+        h.write_usize(j);
+    }
+    h.finish()
+}
+
+/// Dominant-eigenvector estimation by power iteration over the sampled
+/// covariance entries — PCA's iterative driver loop, split at a
+/// [`Dataset::cache`](crate::api::plan::Dataset::cache) cut:
+///
+/// * **partials stage** (`pca.sumvec`, iteration-invariant): the same
+///   `[Σa, Σb, Σab]` computation [`run_mr4r`] performs, recorded through
+///   hoisted mapper/reducer `Arc`s so every iteration's prefix
+///   fingerprint matches — iterations ≥ 2 read the partials back from
+///   the session cache instead of re-running the whole map over the
+///   matrix;
+/// * **mat-vec stage** (`pca.power`): turns each partial into its
+///   covariance entry and emits `C[i][j] * x[j]` contributions per row
+///   (symmetrized), summed per row; the driver normalizes the new vector
+///   — the per-iteration state dependency that cannot be cached.
+///
+/// Returns the final unit eigenvector estimate plus every iteration's
+/// [`PlanReport`] (cache hits/misses included).
+pub fn run_power(
+    m: &MatrixData,
+    pairs: &[(usize, usize)],
+    rt: &Runtime,
+    cfg: &JobConfig,
+    backend: &Backend,
+    iters: usize,
+) -> (Vec<f64>, Vec<PlanReport>) {
+    let inputs = tasks(pairs, m.n);
+    let n = m.n;
+    let backend = backend.clone();
+    // Content-derived source identity (a digest over the whole matrix
+    // and pair sample, so different workloads can never alias a cached
+    // entry) — see `Dataset::tag`.
+    let source_tag = format!("pca.tasks/{:016x}", workload_digest(m, pairs));
+    // Hoisted partials closures: reusing these Arcs (and `inputs`) across
+    // iterations is what makes the prefix fingerprints match.
+    let partial_mapper: Arc<dyn Mapper<(usize, usize), i64, Vec<f64>> + '_> =
+        Arc::new(move |task: &(usize, usize), em: &mut dyn Emitter<i64, Vec<f64>>| {
+            map_block(m, pairs, &backend, *task, |k, v| em.emit(k, v));
+        });
+    let partial_reducer: Arc<dyn Reducer<i64, Vec<f64>> + '_> = Arc::new(reducer());
+    let mut x = vec![1.0 / (n as f64).sqrt(); n];
+    let mut reports = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let xv = x.clone();
+        let out = rt
+            .dataset(&inputs)
+            .with_config(cfg.clone().with_scratch_per_emit(24))
+            .tag(&source_tag)
+            .map_reduce_shared(Arc::clone(&partial_mapper), Arc::clone(&partial_reducer))
+            .cache()
+            .map_reduce(
+                move |kv: &KeyValue<i64, Vec<f64>>, em: &mut dyn Emitter<i64, f64>| {
+                    let (i, j) = ((kv.key as usize) / n, (kv.key as usize) % n);
+                    let c = covariance(&kv.value, n);
+                    em.emit(i as i64, c * xv[j]);
+                    if i != j {
+                        em.emit(j as i64, c * xv[i]);
+                    }
+                },
+                RirReducer::<i64, f64>::new(canon::sum_f64("pca.power")),
+            )
+            .collect();
+        reports.push(out.report.clone());
+        let mut y = vec![0.0; n];
+        for kv in &out {
+            y[kv.key as usize] = kv.value;
+        }
+        let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for v in &mut y {
+                *v /= norm;
+            }
+        }
+        x = y;
+    }
+    (x, reports)
+}
+
+/// Digest an eigenvector estimate (sign-normalized and quantized, so
+/// summation-order low bits never flip it).
+pub fn digest_eigvec(x: &[f64]) -> u64 {
+    let sign = if x.iter().sum::<f64>() < 0.0 { -1.0 } else { 1.0 };
+    let rows: Vec<(i64, f64)> = x
+        .iter()
+        .enumerate()
+        .map(|(i, v)| (i as i64, (sign * v * 1e4).round() / 1e4))
+        .collect();
+    super::digest_pairs(&rows)
 }
 
 pub fn run_phoenix(
@@ -237,6 +349,43 @@ mod tests {
         let unopt: Vec<(i64, Vec<f64>)> =
             unopt.into_iter().map(|kv| (kv.key, kv.value)).collect();
         assert_eq!(d, digest_cov(&unopt, m.n));
+    }
+
+    #[test]
+    fn power_iterations_hit_the_cached_partials() {
+        let m = datagen::square_matrix(0.0003, 55);
+        let pairs = sample_pairs(m.n, 56);
+        let rt = Runtime::fast();
+        let (x, reports) = run_power(
+            &m,
+            &pairs,
+            &rt,
+            &JobConfig::fast().with_threads(2),
+            &Backend::Native,
+            POWER_ITERATIONS,
+        );
+        assert_eq!(x.len(), m.n);
+        assert!((x.iter().map(|v| v * v).sum::<f64>() - 1.0).abs() < 1e-6, "unit vector");
+        assert_eq!(reports.len(), POWER_ITERATIONS);
+        assert_eq!(reports[0].cache.misses, 1);
+        for (i, r) in reports.iter().enumerate().skip(1) {
+            assert_eq!(r.cache.hits, 1, "iteration {i} must reuse the cached partials");
+            assert_eq!(r.stage_metrics.len(), 1, "iteration {i} re-ran the partials job");
+        }
+
+        // Cached ≡ uncached: the cut changes where the partials come
+        // from, never what the power method computes.
+        let rt_off = Runtime::with_config(JobConfig::fast().with_cache_enabled(false));
+        let (x_off, reports_off) = run_power(
+            &m,
+            &pairs,
+            &rt_off,
+            &rt_off.config().clone().with_threads(2),
+            &Backend::Native,
+            POWER_ITERATIONS,
+        );
+        assert!(reports_off.iter().all(|r| r.cache.hits + r.cache.misses == 0));
+        assert_eq!(digest_eigvec(&x), digest_eigvec(&x_off));
     }
 
     #[test]

@@ -1,0 +1,242 @@
+//! Structural fingerprints of plan-stage prefixes.
+//!
+//! A fingerprint identifies "the computation a plan performs up to stage
+//! `i`" well enough that two plans with equal prefix fingerprints may
+//! share one materialized result (see [`crate::cache`]). It is computed
+//! by the planner ([`crate::coordinator::planner::lower`]) from the
+//! recorded [`StageInfo`] list — never from closure bodies, which the
+//! framework cannot inspect (the same blind spot the paper's agent works
+//! around with bytecode analysis; here the plan structure *is* the
+//! inspectable artifact).
+//!
+//! A prefix fingerprint covers, in order, for every stage up to the cut:
+//!
+//! * the stage **kind** (`Source`/`Map`/`MapReduce`/`Cache`/…);
+//! * the stage **name** (reducer class name for reduce stages);
+//! * the **optimizer mode** the stage was recorded under — an
+//!   `OptimizeMode::Off` run never reads an `Auto` run's entries;
+//! * the stage's **identity token** ([`StageToken`]): either a
+//!   caller-declared stable value (`Dataset::tag`), or a raw address
+//!   (source buffer, mapper/reducer `Arc`s) that the planner maps to a
+//!   **first-seen session ordinal** while lowering — only for plans that
+//!   actually mark a cache cut, so plans that never cache register
+//!   nothing.
+//!
+//! Ordinals — not raw addresses — are what get hashed, so fingerprints
+//! are **stable across sessions**: an application that opens a new
+//! session and registers its sources and reducer classes in the same
+//! order reproduces the same fingerprints, while registering them in a
+//! different order changes every downstream fingerprint (the
+//! registration-order sensitivity that keeps distinct closures from
+//! colliding). Address identities are valid only while their referent is
+//! alive (see the aliasing note on [`Dataset::cache`]); stages whose
+//! identity the framework cannot observe (anonymous `map`/`filter`
+//! closures) hash by kind + name + mode + position only.
+//!
+//! [`Dataset::cache`]: crate::api::plan::Dataset::cache
+//! [`StageInfo`]: crate::api::plan::StageInfo
+//! [`StageToken`]: crate::api::plan::StageToken
+
+use std::hash::Hasher;
+
+use crate::api::config::OptimizeMode;
+use crate::api::plan::{StageInfo, StageKind, StageToken};
+use crate::util::hash::FxHasher;
+
+use super::MaterializationCache;
+
+/// A structural prefix fingerprint — the materialization-cache key.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fingerprint(pub u64);
+
+impl std::fmt::Debug for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Fingerprint({self})")
+    }
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+fn kind_code(k: StageKind) -> u64 {
+    match k {
+        StageKind::Source => 1,
+        StageKind::Map => 2,
+        StageKind::Filter => 3,
+        StageKind::FlatMap => 4,
+        StageKind::MapReduce => 5,
+        StageKind::KeyedAggregate => 6,
+        StageKind::CoGroup => 7,
+        StageKind::Cache => 8,
+    }
+}
+
+fn mode_code(m: OptimizeMode) -> u64 {
+    match m {
+        OptimizeMode::Auto => 1,
+        OptimizeMode::Off => 2,
+        OptimizeMode::GenericOnly => 3,
+    }
+}
+
+/// Cumulative structural hash after each stage: `out[i]` fingerprints the
+/// prefix `stages[0..=i]`. One pass, reused by the planner for every cut
+/// point in the plan. `registry` supplies the address → first-seen
+/// ordinal mapping ([`MaterializationCache::identity_ordinal`]).
+pub fn prefix_fingerprints(stages: &[StageInfo], registry: &MaterializationCache) -> Vec<u64> {
+    let mut h = FxHasher::default();
+    let mut out = Vec::with_capacity(stages.len());
+    for (i, s) in stages.iter().enumerate() {
+        h.write_u64(i as u64);
+        h.write_u64(kind_code(s.kind));
+        h.write(s.name.as_bytes());
+        h.write_u64(mode_code(s.optimize));
+        match s.token {
+            Some(StageToken::Stable(t)) => {
+                h.write_u64(1);
+                h.write_u64(t);
+            }
+            Some(StageToken::Address(raw)) => {
+                h.write_u64(2);
+                h.write_u64(registry.identity_ordinal(raw));
+            }
+            None => h.write_u64(0),
+        }
+        out.push(h.finish());
+    }
+    out
+}
+
+/// Whether a plan's prefixes can be cached at all: the plan must be
+/// rooted at a [`StageKind::Source`] whose identity the framework
+/// observed (slice/vec sources and plan/job outputs provide one;
+/// streaming generators do not, and co-group-rooted plans own no source).
+pub fn cacheable(stages: &[StageInfo]) -> bool {
+    stages
+        .first()
+        .is_some_and(|s| s.kind == StageKind::Source && s.token.is_some())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn info(
+        kind: StageKind,
+        name: &str,
+        mode: OptimizeMode,
+        token: Option<StageToken>,
+    ) -> StageInfo {
+        StageInfo {
+            kind,
+            name: name.into(),
+            optimize: mode,
+            token,
+        }
+    }
+
+    fn sample() -> Vec<StageInfo> {
+        vec![
+            info(
+                StageKind::Source,
+                "source",
+                OptimizeMode::Auto,
+                Some(StageToken::Stable(11)),
+            ),
+            info(
+                StageKind::MapReduce,
+                "wc",
+                OptimizeMode::Auto,
+                Some(StageToken::Address(0xBEEF)),
+            ),
+            info(StageKind::Cache, "cache", OptimizeMode::Auto, None),
+        ]
+    }
+
+    #[test]
+    fn identical_prefixes_fingerprint_equal() {
+        let reg = MaterializationCache::new();
+        assert_eq!(
+            prefix_fingerprints(&sample(), &reg),
+            prefix_fingerprints(&sample(), &reg)
+        );
+    }
+
+    #[test]
+    fn sensitive_to_every_component() {
+        let reg = MaterializationCache::new();
+        let base = prefix_fingerprints(&sample(), &reg);
+        // Stage kind.
+        let mut s = sample();
+        s[1].kind = StageKind::KeyedAggregate;
+        assert_ne!(prefix_fingerprints(&s, &reg)[2], base[2]);
+        // Stage name.
+        let mut s = sample();
+        s[1].name = "hist".into();
+        assert_ne!(prefix_fingerprints(&s, &reg)[2], base[2]);
+        // Optimizer mode.
+        let mut s = sample();
+        s[1].optimize = OptimizeMode::Off;
+        assert_ne!(prefix_fingerprints(&s, &reg)[2], base[2]);
+        // Closure identity (distinct addresses → distinct ordinals).
+        let mut s = sample();
+        s[1].token = Some(StageToken::Address(0xF00D));
+        assert_ne!(prefix_fingerprints(&s, &reg)[2], base[2]);
+        // Source identity.
+        let mut s = sample();
+        s[0].token = Some(StageToken::Stable(12));
+        assert_ne!(prefix_fingerprints(&s, &reg)[2], base[2]);
+        // Anonymous vs identified.
+        let mut s = sample();
+        s[1].token = None;
+        assert_ne!(prefix_fingerprints(&s, &reg)[2], base[2]);
+    }
+
+    #[test]
+    fn address_tokens_hash_by_registration_order() {
+        // Two registries that see the same addresses in the same order
+        // agree; a registry that saw them in the other order does not —
+        // the "stable across sessions, sensitive to registration order"
+        // contract.
+        let stages = sample();
+        let reg_a = MaterializationCache::new();
+        let fps_a = prefix_fingerprints(&stages, &reg_a);
+        let reg_b = MaterializationCache::new();
+        assert_eq!(prefix_fingerprints(&stages, &reg_b), fps_a);
+        let reg_c = MaterializationCache::new();
+        reg_c.identity_ordinal(0x5EED); // someone else registered first
+        assert_ne!(prefix_fingerprints(&stages, &reg_c), fps_a);
+    }
+
+    #[test]
+    fn fingerprints_are_cumulative() {
+        let reg = MaterializationCache::new();
+        let fps = prefix_fingerprints(&sample(), &reg);
+        assert_eq!(fps.len(), 3);
+        assert_ne!(fps[0], fps[1]);
+        assert_ne!(fps[1], fps[2]);
+        // A longer plan's prefixes match the shorter plan's stage for stage.
+        let mut longer = sample();
+        longer.push(info(
+            StageKind::MapReduce,
+            "tail",
+            OptimizeMode::Auto,
+            Some(StageToken::Address(0xCAFE)),
+        ));
+        assert_eq!(prefix_fingerprints(&longer, &reg)[..3], fps[..]);
+    }
+
+    #[test]
+    fn cacheable_requires_identified_source_root() {
+        assert!(cacheable(&sample()));
+        let mut anon = sample();
+        anon[0].token = None; // stream source: no identity
+        assert!(!cacheable(&anon));
+        let cogroup = vec![info(StageKind::CoGroup, "co_group", OptimizeMode::Auto, None)];
+        assert!(!cacheable(&cogroup));
+        assert!(!cacheable(&[]));
+    }
+}

@@ -1,0 +1,674 @@
+//! The plan-aware materialization cache — cross-plan reuse of computed
+//! subplan results, with pressure-aware eviction.
+//!
+//! The lazy [`Dataset`](crate::api::plan::Dataset) layer gave the
+//! framework something the paper's per-class agent never had: whole plans
+//! are structurally inspectable *before* they run. This module spends
+//! that semantic information on a second framework-level optimization
+//! (in the spirit of MANIMAL's pre-execution plan analysis and the reuse
+//! family in Rao & Wang's semantics-aware-optimization taxonomy):
+//! **identical plan prefixes are computed once**. A k-means driver that
+//! re-derives its point dataset every Lloyd iteration, or two concurrent
+//! tenants collecting the same source + stage chain, share one
+//! materialization instead of re-running — and re-allocating — the same
+//! subplan.
+//!
+//! Moving parts:
+//!
+//! * [`fingerprint`] — structural prefix fingerprints, computed by the
+//!   planner during lowering (source identity + stage kinds/names +
+//!   closure registration order + [`OptimizeMode`]).
+//! * [`MaterializationCache`] — one per [`Runtime`] session: finished
+//!   shard outputs keyed by fingerprint. Entries are charged to a
+//!   dedicated scoped [`SimHeap`] cohort (`"cache.entry"`), so cached
+//!   bytes are *live simulated heap* — the cache competes for the same
+//!   memory the paper's GC study measures, which is exactly why eviction
+//!   is pressure-aware.
+//! * **In-flight deduplication** — the first plan to miss a fingerprint
+//!   claims the entry and computes; concurrent plans racing on the same
+//!   uncached prefix block on the entry and reuse the one result
+//!   ([`CacheStats::shared_in_flight`] counts them). A claimant that
+//!   panics aborts its claim on unwind, so waiters recover and compute.
+//! * **Pressure-aware eviction** — when the producing job's simulated
+//!   heap occupancy crosses [`CacheConfig::watermark`] (or total cached
+//!   bytes exceed [`CacheConfig::max_bytes`]), least-recently-used
+//!   entries go first, cheapest-to-recompute first among equals, and
+//!   their cohorts are released back to the heap.
+//!
+//! The cache is populated and read **only at explicit
+//! [`Dataset::cache`](crate::api::plan::Dataset::cache) cut points**: a
+//! plan that never marks a cut never probes the cache, so eager jobs and
+//! un-annotated plans are byte-for-byte unaffected. Read-through is
+//! automatic *across* plans: any plan marking a cut whose prefix
+//! fingerprint matches a stored entry reuses it, whichever tenant stored
+//! it.
+//!
+//! [`OptimizeMode`]: crate::api::config::OptimizeMode
+//! [`Runtime`]: crate::api::Runtime
+//! [`SimHeap`]: crate::memsim::SimHeap
+
+pub mod fingerprint;
+
+use std::any::Any;
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::config::CacheConfig;
+use crate::memsim::{CohortId, SimHeap};
+
+pub use fingerprint::Fingerprint;
+
+/// Per-element bookkeeping overhead charged for a cached element beside
+/// its [`HeapSized`](crate::api::traits::HeapSized) payload (the shard
+/// slot, mirroring the collector's list-slot accounting).
+pub const ENTRY_SLOT_BYTES: u64 = 16;
+
+/// Session-cumulative cache statistics (the numbers the acceptance
+/// criteria and the harness report read).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Cut-point reads served from a ready entry without waiting.
+    pub hits: u64,
+    /// Cut-point reads that found no entry and computed the prefix.
+    pub misses: u64,
+    /// Cut-point reads that blocked on another plan's in-flight
+    /// computation and shared its result (the dedup observable).
+    pub shared_in_flight: u64,
+    /// Ready entries whose stored type did not match the reading cut's
+    /// element type (a fingerprint collision across types — the reader
+    /// recomputed without touching the entry).
+    pub type_conflicts: u64,
+    /// Entries evicted under pressure (cumulative).
+    pub evictions: u64,
+    /// Bytes currently cached (live `cache.entry` cohort bytes).
+    pub bytes_cached: u64,
+    /// Ready entries currently stored.
+    pub entries: usize,
+}
+
+/// What one plan did to the cache (the per-plan slice of [`CacheStats`],
+/// reported in [`PlanReport::cache`](crate::api::plan::PlanReport) and on
+/// the consuming stage's
+/// [`FlowMetrics::cache`](crate::coordinator::pipeline::FlowMetrics)).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheActivity {
+    pub hits: u64,
+    pub misses: u64,
+    pub shared_in_flight: u64,
+    /// Evictions this plan's inserts triggered.
+    pub evictions: u64,
+    /// Bytes this plan inserted into the cache.
+    pub bytes_inserted: u64,
+}
+
+impl CacheActivity {
+    pub(crate) fn add(&mut self, other: &CacheActivity) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.shared_in_flight += other.shared_in_flight;
+        self.evictions += other.evictions;
+        self.bytes_inserted += other.bytes_inserted;
+    }
+}
+
+/// Type-erased cached shard outputs (`Arc<Vec<Vec<T>>>` behind `Any`; the
+/// cut point downcasts back to its concrete element type).
+pub(crate) type Stored = Arc<dyn Any + Send + Sync>;
+
+enum EntryState {
+    /// A plan claimed this fingerprint and is computing the prefix.
+    InFlight,
+    Ready(Stored),
+}
+
+struct Entry {
+    state: EntryState,
+    bytes: u64,
+    /// Wall seconds the producing plan spent computing the prefix — the
+    /// recompute cost the eviction policy protects.
+    recompute_secs: f64,
+    /// LRU clock value of the last read/insert.
+    last_used: u64,
+    /// The simulated-heap cohort holding this entry's bytes live
+    /// (released on eviction/removal).
+    cohort: Option<(Arc<SimHeap>, CohortId)>,
+}
+
+struct CacheInner {
+    entries: HashMap<Fingerprint, Entry>,
+    /// Raw identity → first-seen registration ordinal (what fingerprints
+    /// hash, making them session-order-stable rather than address-bound).
+    identity: HashMap<u64, u64>,
+    next_ordinal: u64,
+    stats: CacheStats,
+    /// LRU clock.
+    tick: u64,
+}
+
+/// Outcome of [`MaterializationCache::begin`].
+pub(crate) enum Begin<'c> {
+    /// A ready entry was found (`waited` → only after blocking on another
+    /// plan's in-flight computation).
+    Ready { value: Stored, waited: bool },
+    /// This caller claimed the fingerprint: compute the prefix, then
+    /// [`MaterializationCache::complete`] the ticket (dropping it without
+    /// completing — e.g. on unwind — aborts the claim and wakes waiters).
+    Claimed(Ticket<'c>),
+}
+
+/// An in-flight claim on a fingerprint (see [`Begin::Claimed`]).
+pub(crate) struct Ticket<'c> {
+    cache: &'c MaterializationCache,
+    fp: Fingerprint,
+    done: bool,
+}
+
+impl Drop for Ticket<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            // The claimant unwound before completing: withdraw the
+            // in-flight entry so waiters recover and compute themselves.
+            let mut inner = self.cache.inner.lock().unwrap();
+            if matches!(
+                inner.entries.get(&self.fp),
+                Some(Entry {
+                    state: EntryState::InFlight,
+                    ..
+                })
+            ) {
+                inner.entries.remove(&self.fp);
+            }
+            drop(inner);
+            self.cache.ready.notify_all();
+        }
+    }
+}
+
+/// The session-level materialization cache (owned by
+/// [`Runtime`](crate::api::Runtime), shared by every plan on the
+/// session). See the [module docs](self).
+pub struct MaterializationCache {
+    inner: Mutex<CacheInner>,
+    ready: Condvar,
+}
+
+impl Default for MaterializationCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MaterializationCache {
+    pub fn new() -> Self {
+        MaterializationCache {
+            inner: Mutex::new(CacheInner {
+                entries: HashMap::new(),
+                identity: HashMap::new(),
+                next_ordinal: 0,
+                stats: CacheStats::default(),
+                tick: 0,
+            }),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Map a raw identity (a source address, a closure `Arc` pointer) to
+    /// its session registration ordinal, assigned in first-seen order.
+    /// Fingerprints hash ordinals, never raw addresses — see
+    /// [`fingerprint`].
+    pub fn identity_ordinal(&self, raw: u64) -> u64 {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(&ord) = inner.identity.get(&raw) {
+            return ord;
+        }
+        let ord = inner.next_ordinal;
+        inner.next_ordinal += 1;
+        inner.identity.insert(raw, ord);
+        ord
+    }
+
+    /// Snapshot the session-cumulative statistics.
+    pub fn stats(&self) -> CacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Whether a ready entry exists for `fp` (tests and diagnostics).
+    pub fn contains(&self, fp: Fingerprint) -> bool {
+        matches!(
+            self.inner.lock().unwrap().entries.get(&fp),
+            Some(Entry {
+                state: EntryState::Ready(_),
+                ..
+            })
+        )
+    }
+
+    /// Resolve a cut point: return the ready entry, wait out another
+    /// plan's in-flight computation, or claim the fingerprint for this
+    /// caller to compute. Misses are counted here; successful reads are
+    /// counted by the caller via [`MaterializationCache::record_read`]
+    /// *after* its typed downcast succeeds (a type conflict is not a
+    /// served read).
+    pub(crate) fn begin(&self, fp: Fingerprint) -> Begin<'_> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut waited = false;
+        loop {
+            let ready = match inner.entries.get(&fp) {
+                Some(Entry {
+                    state: EntryState::Ready(v),
+                    ..
+                }) => Some(Arc::clone(v)),
+                Some(Entry {
+                    state: EntryState::InFlight,
+                    ..
+                }) => {
+                    waited = true;
+                    inner = self.ready.wait(inner).unwrap();
+                    continue;
+                }
+                None => None,
+            };
+            return match ready {
+                Some(value) => {
+                    inner.tick += 1;
+                    let tick = inner.tick;
+                    if let Some(e) = inner.entries.get_mut(&fp) {
+                        e.last_used = tick;
+                    }
+                    Begin::Ready { value, waited }
+                }
+                None => {
+                    inner.entries.insert(
+                        fp,
+                        Entry {
+                            state: EntryState::InFlight,
+                            bytes: 0,
+                            recompute_secs: 0.0,
+                            last_used: 0,
+                            cohort: None,
+                        },
+                    );
+                    inner.stats.misses += 1;
+                    Begin::Claimed(Ticket {
+                        cache: self,
+                        fp,
+                        done: false,
+                    })
+                }
+            };
+        }
+    }
+
+    /// Count one successfully served read (`waited` → it shared another
+    /// plan's in-flight computation instead of finding the entry ready).
+    pub(crate) fn record_read(&self, waited: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if waited {
+            inner.stats.shared_in_flight += 1;
+        } else {
+            inner.stats.hits += 1;
+        }
+    }
+
+    /// Count one cross-type fingerprint collision (the reader recomputed
+    /// without being served).
+    pub(crate) fn record_type_conflict(&self) {
+        self.inner.lock().unwrap().stats.type_conflicts += 1;
+    }
+
+    /// Publish a claimed entry: charge its bytes to a fresh scoped cohort
+    /// on the producing job's heap (cached bytes are live simulated
+    /// heap), store the value, run pressure-aware eviction, and wake any
+    /// plans waiting on the fingerprint. Returns the number of entries
+    /// evicted by this insert.
+    pub(crate) fn complete(
+        &self,
+        mut ticket: Ticket<'_>,
+        value: Stored,
+        bytes: u64,
+        items: u64,
+        recompute_secs: f64,
+        heap: &Arc<SimHeap>,
+        cfg: &CacheConfig,
+    ) -> u64 {
+        ticket.done = true;
+        let fp = ticket.fp;
+        // Account before taking the cache lock: the allocation may run a
+        // simulated GC, which takes the heap lock (never the cache's).
+        let cohort = heap.scoped_cohort("cache.entry");
+        let mut alloc = heap.thread_alloc();
+        alloc.alloc_n(cohort, bytes, items.max(1));
+        alloc.flush();
+        drop(alloc);
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let entry = inner
+            .entries
+            .get_mut(&fp)
+            .expect("claimed entry present until completed or aborted");
+        entry.state = EntryState::Ready(value);
+        entry.bytes = bytes;
+        entry.recompute_secs = recompute_secs;
+        entry.last_used = tick;
+        entry.cohort = Some((Arc::clone(heap), cohort));
+        inner.stats.bytes_cached += bytes;
+        inner.stats.entries += 1;
+        let evicted = evict_under_pressure(&mut inner, fp, heap, cfg);
+        drop(inner);
+        self.ready.notify_all();
+        evicted
+    }
+
+    /// Drop the entry for `fp` if it is ready, releasing its heap cohort
+    /// — the [`Dataset::uncache`](crate::api::plan::Dataset::uncache)
+    /// path. In-flight entries are left to their claimant.
+    pub fn remove(&self, fp: Fingerprint) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if matches!(
+            inner.entries.get(&fp),
+            Some(Entry {
+                state: EntryState::Ready(_),
+                ..
+            })
+        ) {
+            release_entry(&mut inner, fp);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evict every ready entry (in-flight claims are left to their
+    /// owners). Cohorts are released; statistics other than
+    /// `bytes_cached`/`entries` are preserved.
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        let ready: Vec<Fingerprint> = inner
+            .entries
+            .iter()
+            .filter(|(_, e)| matches!(e.state, EntryState::Ready(_)))
+            .map(|(fp, _)| *fp)
+            .collect();
+        for fp in ready {
+            release_entry(&mut inner, fp);
+        }
+    }
+}
+
+/// Remove a ready entry and release its simulated-heap cohort.
+fn release_entry(inner: &mut CacheInner, fp: Fingerprint) {
+    if let Some(e) = inner.entries.remove(&fp) {
+        inner.stats.bytes_cached = inner.stats.bytes_cached.saturating_sub(e.bytes);
+        inner.stats.entries = inner.stats.entries.saturating_sub(1);
+        if let Some((heap, cohort)) = e.cohort {
+            heap.release_cohort(cohort);
+        }
+    }
+}
+
+/// Whether an entry's bytes are charged to `heap`.
+fn entry_on_heap(e: &Entry, heap: &Arc<SimHeap>) -> bool {
+    e.cohort.as_ref().is_some_and(|(h, _)| Arc::ptr_eq(h, heap))
+}
+
+/// Pick the next eviction victim: least-recently-used first,
+/// cheapest-to-recompute first among equals, never the protected (just
+/// inserted) entry, and — when `heap` is given — only entries charged to
+/// that heap (evicting another heap's entries would not relieve it).
+fn pick_victim(
+    inner: &CacheInner,
+    protect: Fingerprint,
+    heap: Option<&Arc<SimHeap>>,
+) -> Option<Fingerprint> {
+    inner
+        .entries
+        .iter()
+        .filter(|(fp, e)| {
+            **fp != protect
+                && matches!(e.state, EntryState::Ready(_))
+                && heap.is_none_or(|h| entry_on_heap(e, h))
+        })
+        .min_by(|(_, a), (_, b)| {
+            a.last_used
+                .cmp(&b.last_used)
+                .then(a.recompute_secs.total_cmp(&b.recompute_secs))
+        })
+        .map(|(fp, _)| *fp)
+}
+
+/// The eviction pass run after every insert. Two triggers:
+///
+/// * **capacity** — total cached bytes above [`CacheConfig::max_bytes`]:
+///   evict (any heap) until back under the cap;
+/// * **heap pressure** — the producing heap's occupancy at or above
+///   `watermark × total_bytes`: release half the bytes cached *on that
+///   heap*, giving its next minor/major collection real garbage to
+///   reclaim (entries charged to other heaps are left alone — evicting
+///   them would destroy warm state without relieving anything).
+fn evict_under_pressure(
+    inner: &mut CacheInner,
+    protect: Fingerprint,
+    heap: &Arc<SimHeap>,
+    cfg: &CacheConfig,
+) -> u64 {
+    let mut evicted = 0u64;
+    while inner.stats.bytes_cached > cfg.max_bytes {
+        match pick_victim(inner, protect, None) {
+            Some(fp) => {
+                release_entry(inner, fp);
+                evicted += 1;
+            }
+            None => break,
+        }
+    }
+    let pressure = heap.enabled()
+        && (heap.heap_used() as f64) >= cfg.watermark * heap.params().total_bytes as f64;
+    if pressure {
+        let on_heap = |inner: &CacheInner| -> u64 {
+            inner
+                .entries
+                .values()
+                .filter(|e| entry_on_heap(e, heap))
+                .map(|e| e.bytes)
+                .sum()
+        };
+        let target = on_heap(inner) / 2;
+        while on_heap(inner) > target {
+            match pick_victim(inner, protect, Some(heap)) {
+                Some(fp) => {
+                    release_entry(inner, fp);
+                    evicted += 1;
+                }
+                None => break,
+            }
+        }
+    }
+    inner.stats.evictions += evicted;
+    evicted
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::HeapParams;
+
+    fn store(v: Vec<Vec<i64>>) -> Stored {
+        Arc::new(v)
+    }
+
+    fn cfg() -> CacheConfig {
+        CacheConfig::default()
+    }
+
+    fn claim(cache: &MaterializationCache, fp: Fingerprint) -> Ticket<'_> {
+        match cache.begin(fp) {
+            Begin::Claimed(t) => t,
+            Begin::Ready { .. } => panic!("expected a claim for {fp}"),
+        }
+    }
+
+    #[test]
+    fn identity_ordinals_are_first_seen_order() {
+        let cache = MaterializationCache::new();
+        assert_eq!(cache.identity_ordinal(0xAAAA), 0);
+        assert_eq!(cache.identity_ordinal(0xBBBB), 1);
+        assert_eq!(cache.identity_ordinal(0xAAAA), 0, "stable on re-registration");
+    }
+
+    #[test]
+    fn miss_store_hit_roundtrip() {
+        let cache = MaterializationCache::new();
+        let heap = SimHeap::disabled();
+        let fp = Fingerprint(42);
+        let ticket = claim(&cache, fp);
+        cache.complete(ticket, store(vec![vec![1, 2], vec![3]]), 96, 3, 0.01, &heap, &cfg());
+        match cache.begin(fp) {
+            Begin::Ready { value, waited } => {
+                assert!(!waited);
+                // The caller confirms the read after its typed downcast
+                // succeeds (see `CacheStage::execute`).
+                cache.record_read(waited);
+                let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
+                assert_eq!(*shards, vec![vec![1, 2], vec![3]]);
+            }
+            Begin::Claimed(_) => panic!("stored entry must hit"),
+        }
+        let s = cache.stats();
+        assert_eq!((s.misses, s.hits, s.entries, s.bytes_cached), (1, 1, 1, 96));
+        assert_eq!(s.type_conflicts, 0);
+    }
+
+    #[test]
+    fn aborted_claim_recovers() {
+        let cache = MaterializationCache::new();
+        let fp = Fingerprint(7);
+        drop(claim(&cache, fp)); // claimant "panicked"
+        // The fingerprint is claimable again, not deadlocked in-flight.
+        let t = claim(&cache, fp);
+        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, &SimHeap::disabled(), &cfg());
+        assert!(cache.contains(fp));
+    }
+
+    #[test]
+    fn waiters_share_one_in_flight_computation() {
+        let cache = Arc::new(MaterializationCache::new());
+        let heap = SimHeap::disabled();
+        let fp = Fingerprint(9);
+        let ticket = claim(&cache, fp);
+        let waiter = {
+            let cache = Arc::clone(&cache);
+            std::thread::spawn(move || match cache.begin(fp) {
+                Begin::Ready { value, waited } => {
+                    cache.record_read(waited);
+                    let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
+                    (shards.len(), waited)
+                }
+                Begin::Claimed(_) => panic!("waiter must not recompute"),
+            })
+        };
+        // Give the waiter time to block on the in-flight entry.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        cache.complete(ticket, store(vec![vec![5], vec![6]]), 32, 2, 0.0, &heap, &cfg());
+        let (shards, waited) = waiter.join().unwrap();
+        assert_eq!(shards, 2);
+        assert!(waited);
+        let s = cache.stats();
+        assert_eq!((s.misses, s.shared_in_flight, s.hits), (1, 1, 0));
+    }
+
+    #[test]
+    fn type_conflicts_are_counted_not_served() {
+        let cache = MaterializationCache::new();
+        let fp = Fingerprint(77);
+        let t = claim(&cache, fp);
+        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, &SimHeap::disabled(), &cfg());
+        match cache.begin(fp) {
+            Begin::Ready { value, .. } => {
+                assert!(value.downcast::<Vec<Vec<String>>>().is_err());
+                cache.record_type_conflict();
+            }
+            Begin::Claimed(_) => panic!("stored entry must be found"),
+        }
+        let s = cache.stats();
+        assert_eq!((s.hits, s.type_conflicts), (0, 1));
+    }
+
+    #[test]
+    fn capacity_eviction_is_lru_first() {
+        let cache = MaterializationCache::new();
+        let heap = SimHeap::disabled();
+        let tight = CacheConfig {
+            max_bytes: 100,
+            ..CacheConfig::default()
+        };
+        let (a, b, c) = (Fingerprint(1), Fingerprint(2), Fingerprint(3));
+        let t = claim(&cache, a);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 0.5, &heap, &tight);
+        let t = claim(&cache, b);
+        cache.complete(t, store(vec![vec![2]]), 60, 1, 0.5, &heap, &tight);
+        // Inserting B overflowed the cap: A (older) was evicted.
+        assert!(!cache.contains(a));
+        assert!(cache.contains(b));
+        // Touch B, insert C: B is now most recent, but C is protected as
+        // the fresh insert, so B survives only if the cap allows one —
+        // it doesn't, and B is the only candidate.
+        let _ = cache.begin(b);
+        let t = claim(&cache, c);
+        let evicted = cache.complete(t, store(vec![vec![3]]), 60, 1, 0.5, &heap, &tight);
+        assert_eq!(evicted, 1);
+        assert!(!cache.contains(b));
+        assert!(cache.contains(c));
+        assert_eq!(cache.stats().evictions, 2);
+    }
+
+    #[test]
+    fn heap_pressure_halves_cached_bytes() {
+        // A tiny enabled heap filled past the watermark: the insert pass
+        // must release cached cohorts back to it.
+        let heap = SimHeap::new(HeapParams {
+            total_bytes: 4 << 20,
+            time_scale: 0.0,
+            sample_every: 1e9,
+            ..HeapParams::default()
+        });
+        let filler = heap.cohort("filler");
+        let mut a = heap.thread_alloc();
+        for _ in 0..3000 {
+            a.alloc(filler, 1024); // ~3 MiB live of 4 MiB total
+        }
+        a.flush();
+        let cache = MaterializationCache::new();
+        let low = CacheConfig {
+            watermark: 0.5,
+            ..CacheConfig::default()
+        };
+        for i in 0..4 {
+            let fp = Fingerprint(100 + i);
+            let t = claim(&cache, fp);
+            cache.complete(t, store(vec![vec![i as i64]]), 1000, 1, 0.1, &heap, &low);
+        }
+        let s = cache.stats();
+        assert!(s.evictions > 0, "pressure must evict: {s:?}");
+        assert!(s.bytes_cached < 4000, "cached bytes must shrink: {s:?}");
+    }
+
+    #[test]
+    fn remove_and_clear_release_cohort_bytes() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let fp = Fingerprint(55);
+        let t = claim(&cache, fp);
+        cache.complete(t, store(vec![vec![1]]), 4096, 1, 0.0, &heap, &cfg());
+        assert_eq!(cache.stats().bytes_cached, 4096);
+        assert!(cache.remove(fp));
+        assert!(!cache.remove(fp), "second removal finds nothing");
+        assert_eq!(cache.stats().bytes_cached, 0);
+        let t = claim(&cache, fp);
+        cache.complete(t, store(vec![vec![2]]), 64, 1, 0.0, &heap, &cfg());
+        cache.clear();
+        assert_eq!(cache.stats().entries, 0);
+        assert!(!cache.contains(fp));
+    }
+}

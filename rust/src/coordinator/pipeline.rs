@@ -42,6 +42,7 @@ use super::splitter::split_indices;
 use crate::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
 use crate::api::source::Feed;
 use crate::api::traits::{Emitter, HeapSized, KeyValue, Mapper, Reducer};
+use crate::cache::CacheActivity;
 use crate::memsim::{CohortId, GcStats, SimHeap, ThreadAlloc};
 use crate::optimizer::agent::{CombinerSource, Decision, OptimizerAgent};
 use crate::optimizer::value::RirValue;
@@ -101,6 +102,12 @@ pub struct FlowMetrics {
     /// (map + reduce/finalize). Per-batch values sum to
     /// [`WorkerPool::totals`] between quiescent points.
     pub batch_pool: PoolStats,
+    /// Materialization-cache activity involved in resolving this stage's
+    /// *input* (set by the plan executor on the stage downstream of a
+    /// [`Dataset::cache`](crate::api::plan::Dataset::cache) cut point:
+    /// a hit means the stage's input was read back instead of recomputed).
+    /// `None` for stages with no cut point upstream.
+    pub cache: Option<CacheActivity>,
 }
 
 /// The memsim cohorts a job charges, released on drop — on success *and*
@@ -524,6 +531,7 @@ where
         map_pool,
         batch: batch_id,
         batch_pool,
+        cache: None,
     };
     (results, metrics)
 }
@@ -629,6 +637,7 @@ where
         map_pool,
         batch: batch_id,
         batch_pool,
+        cache: None,
     };
     (results, metrics)
 }
@@ -807,6 +816,7 @@ where
         map_pool,
         batch: batch_id,
         batch_pool,
+        cache: None,
     };
     (results, metrics)
 }
@@ -921,6 +931,7 @@ where
         map_pool,
         batch: batch_id,
         batch_pool,
+        cache: None,
     };
     (results, metrics)
 }

@@ -29,6 +29,7 @@ use std::ops::Range;
 
 use crate::api::config::OptimizeMode;
 use crate::api::plan::{PlanReport, StageInfo, StageKind};
+use crate::cache::{fingerprint, CacheActivity, Fingerprint, MaterializationCache};
 use crate::coordinator::pipeline::FlowMetrics;
 use crate::coordinator::scheduler::WorkerPool;
 use crate::optimizer::agent::{OptimizerAgent, StageDecision, StageShape};
@@ -38,7 +39,8 @@ fn is_element_wise(kind: StageKind) -> bool {
 }
 
 /// The lowered plan: one placement per logical stage, plus the counts the
-/// report surfaces.
+/// report surfaces and the prefix fingerprints cache cut points resolve
+/// against.
 #[derive(Clone, Debug)]
 pub struct PhysicalPlan {
     /// Placement per logical stage, parallel to the recorded stage list.
@@ -47,6 +49,18 @@ pub struct PhysicalPlan {
     pub fused_ops: usize,
     /// Reduce→stage handoffs that stream shard outputs.
     pub streamed_handoffs: usize,
+    /// Cumulative structural fingerprint after each stage (see
+    /// [`crate::cache::fingerprint`]); `prefix_fps[i]` identifies the
+    /// prefix `stages[0..=i]`. Computed — and address identities
+    /// registered — only for cacheable plans that actually mark a cut
+    /// (empty otherwise, so plans that never cache cost the session
+    /// registry nothing).
+    pub prefix_fps: Vec<u64>,
+    /// Whether prefix fingerprints identify real computation: requires an
+    /// identity-bearing `Source` root (co-group-rooted plans and stream
+    /// sources lower with `cacheable: false`, and their cut points
+    /// materialize without touching the cache).
+    pub cacheable: bool,
 }
 
 /// Lower a logical stage list to a physical plan via the agent's
@@ -57,10 +71,27 @@ pub struct PhysicalPlan {
 /// would still materialize), so one optimizer-off stage demotes its whole
 /// contiguous run before the agent decides — keeping the decisions, the
 /// plan report, and the agent's statistics faithful to what the executor
-/// actually does under mixed per-stage modes.
-pub fn lower(stages: &[StageInfo], agent: &OptimizerAgent) -> PhysicalPlan {
+/// actually does under mixed per-stage modes. A chain feeding a
+/// [`StageKind::Cache`] cut is demoted the same way: the cut *is* a
+/// materialization point (that is what gets stored), so reporting those
+/// ops as fused would be dishonest.
+pub fn lower(
+    stages: &[StageInfo],
+    agent: &OptimizerAgent,
+    registry: &MaterializationCache,
+) -> PhysicalPlan {
+    lower_impl(stages, agent, registry, true)
+}
+
+fn lower_impl(
+    stages: &[StageInfo],
+    agent: &OptimizerAgent,
+    registry: &MaterializationCache,
+    record: bool,
+) -> PhysicalPlan {
     // Mark every element-wise stage whose contiguous run contains an
-    // optimizer-off stage.
+    // optimizer-off stage, or whose run feeds a cache cut (the chain
+    // materializes into the stored entry).
     let mut chain_off = vec![false; stages.len()];
     let mut i = 0;
     while i < stages.len() {
@@ -71,7 +102,8 @@ pub fn lower(stages: &[StageInfo], agent: &OptimizerAgent) -> PhysicalPlan {
                 any_off |= matches!(stages[i].optimize, OptimizeMode::Off);
                 i += 1;
             }
-            if any_off {
+            let feeds_cut = stages.get(i).is_some_and(|s| s.kind == StageKind::Cache);
+            if any_off || feeds_cut {
                 for flag in &mut chain_off[start..i] {
                     *flag = true;
                 }
@@ -117,9 +149,21 @@ pub fn lower(stages: &[StageInfo], agent: &OptimizerAgent) -> PhysicalPlan {
                     follows_reduce: false,
                 }
             }
+            // A cache cut holds sharded materialized data whichever way
+            // it resolves, so downstream reduces may stream from it; the
+            // cut itself needs no placement decision from the agent
+            // (source-shaped: nothing to decide).
+            StageKind::Cache => {
+                seen_reduce = true;
+                StageShape::Source
+            }
         });
     }
-    let decisions = agent.plan(&shapes);
+    let decisions = if record {
+        agent.plan(&shapes)
+    } else {
+        agent.plan_preview(&shapes)
+    };
     let fused_ops = decisions
         .iter()
         .filter(|d| matches!(d, StageDecision::Fuse))
@@ -128,11 +172,110 @@ pub fn lower(stages: &[StageInfo], agent: &OptimizerAgent) -> PhysicalPlan {
         .iter()
         .filter(|d| matches!(d, StageDecision::StreamInput))
         .count();
+    // Fingerprint only plans that can and do cache: a cacheable root AND
+    // at least one cut point. Everything else skips the hashing and,
+    // more importantly, never registers its address identities with the
+    // session registry.
+    let has_cut = stages.iter().any(|s| s.kind == StageKind::Cache);
+    let cacheable = has_cut && fingerprint::cacheable(stages);
+    let prefix_fps = if cacheable || !record {
+        // `!record` is the observational `describe()` pass, which shows
+        // fingerprints even for cut-less plans.
+        fingerprint::prefix_fingerprints(stages, registry)
+    } else {
+        Vec::new()
+    };
     PhysicalPlan {
         decisions,
         fused_ops,
         streamed_handoffs,
+        prefix_fps,
+        cacheable,
     }
+}
+
+fn kind_label(kind: StageKind) -> &'static str {
+    match kind {
+        StageKind::Source => "source",
+        StageKind::Map => "map",
+        StageKind::Filter => "filter",
+        StageKind::FlatMap => "flat_map",
+        StageKind::MapReduce => "map_reduce",
+        StageKind::KeyedAggregate => "keyed_aggregate",
+        StageKind::CoGroup => "co_group",
+        StageKind::Cache => "cache",
+    }
+}
+
+fn decision_label(d: &StageDecision) -> &'static str {
+    match d {
+        StageDecision::Input => "input",
+        StageDecision::Fuse => "fuse",
+        StageDecision::Materialize => "materialize",
+        StageDecision::StreamInput => "stream-input",
+        StageDecision::MaterializeInput => "materialize-input",
+    }
+}
+
+/// Render a lowered plan for humans ([`Dataset::explain`]): stage kinds
+/// and names, the whole-plan pass's decisions, prefix fingerprints, and
+/// cache cut points. Uses the agent's non-recording preview, so calling
+/// it leaves the optimizer statistics untouched.
+///
+/// [`Dataset::explain`]: crate::api::plan::Dataset::explain
+pub(crate) fn describe(
+    stages: &[StageInfo],
+    agent: &OptimizerAgent,
+    registry: &MaterializationCache,
+) -> String {
+    use std::fmt::Write;
+    let plan = lower_impl(stages, agent, registry, false);
+    // `plan.cacheable` additionally requires a cut; for display we care
+    // about whether the *root* is identifiable at all.
+    let root_identified = fingerprint::cacheable(stages);
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "plan: {} stage(s), prefix fingerprints {}",
+        stages.len(),
+        if root_identified {
+            "active"
+        } else {
+            "inactive (unidentified source)"
+        }
+    );
+    for (i, s) in stages.iter().enumerate() {
+        let decision = plan
+            .decisions
+            .get(i)
+            .map(decision_label)
+            .unwrap_or("?");
+        let fp = plan.prefix_fps.get(i).copied().unwrap_or(0);
+        if s.kind == StageKind::Cache {
+            let _ = writeln!(
+                out,
+                "  [{i}] cache            — cut point, prefix fp {}{}",
+                Fingerprint(fp),
+                if root_identified { "" } else { " (inactive)" },
+            );
+        } else {
+            let _ = writeln!(
+                out,
+                "  [{i}] {:<16} {:<24} {:<12} {:?}  fp {}",
+                kind_label(s.kind),
+                s.name,
+                decision,
+                s.optimize,
+                Fingerprint(fp),
+            );
+        }
+    }
+    let _ = writeln!(
+        out,
+        "fused element-wise ops: {}; streamed handoffs: {}",
+        plan.fused_ops, plan.streamed_handoffs
+    );
+    out
 }
 
 /// Execution context for one plan run (one `collect` call): the session
@@ -148,6 +291,11 @@ pub struct PlanExec<'rt> {
     /// each input as its own lowered plan and merge the accounting here).
     absorbed_fused: usize,
     absorbed_streamed: usize,
+    /// Cache activity since the last executed stage, attached to the next
+    /// stage's metrics (the stage that consumed the resolved input).
+    pending_cache: Option<CacheActivity>,
+    /// Plan-total cache activity (the [`PlanReport::cache`] field).
+    cache_total: CacheActivity,
 }
 
 impl<'rt> PlanExec<'rt> {
@@ -164,6 +312,8 @@ impl<'rt> PlanExec<'rt> {
             materialized: 0,
             absorbed_fused: 0,
             absorbed_streamed: 0,
+            pending_cache: None,
+            cache_total: CacheActivity::default(),
         }
     }
 
@@ -184,13 +334,35 @@ impl<'rt> PlanExec<'rt> {
         )
     }
 
+    /// The prefix fingerprint a cache cut at logical index `index`
+    /// resolves against, or `None` when the plan has no identified source
+    /// (the cut then materializes without touching the cache).
+    pub(crate) fn cut_fingerprint(&self, index: usize) -> Option<Fingerprint> {
+        if self.plan.cacheable {
+            self.plan.prefix_fps.get(index).map(|&h| Fingerprint(h))
+        } else {
+            None
+        }
+    }
+
+    /// Record cache activity from resolving a cut point: totalled into
+    /// the plan report, and attached to the next executed stage's metrics
+    /// (the stage that consumed the resolved input).
+    pub(crate) fn note_cache(&mut self, activity: CacheActivity) {
+        self.cache_total.add(&activity);
+        self.pending_cache
+            .get_or_insert_with(CacheActivity::default)
+            .add(&activity);
+    }
+
     /// Record `n` elements materialized into a plan-level intermediate.
     pub(crate) fn note_materialized(&mut self, n: u64) {
         self.materialized += n;
     }
 
     /// Record one executed reduce stage's metrics.
-    pub(crate) fn push_metrics(&mut self, metrics: FlowMetrics) {
+    pub(crate) fn push_metrics(&mut self, mut metrics: FlowMetrics) {
+        metrics.cache = self.pending_cache.take();
         self.stage_metrics.push(metrics);
     }
 
@@ -202,6 +374,7 @@ impl<'rt> PlanExec<'rt> {
         self.absorbed_fused += report.fused_ops;
         self.absorbed_streamed += report.streamed_handoffs;
         self.materialized += report.materialized_pairs;
+        self.cache_total.add(&report.cache);
         self.stage_metrics.extend(report.stage_metrics);
     }
 
@@ -211,6 +384,7 @@ impl<'rt> PlanExec<'rt> {
             fused_ops: self.plan.fused_ops + self.absorbed_fused,
             streamed_handoffs: self.plan.streamed_handoffs + self.absorbed_streamed,
             materialized_pairs: self.materialized,
+            cache: self.cache_total,
         }
     }
 }
@@ -225,7 +399,12 @@ mod tests {
             kind,
             name: "t".into(),
             optimize: mode,
+            token: Some(crate::api::plan::StageToken::Stable(1)),
         }
+    }
+
+    fn registry() -> MaterializationCache {
+        MaterializationCache::new()
     }
 
     #[test]
@@ -237,7 +416,7 @@ mod tests {
             info(StageKind::Filter, OptimizeMode::Auto),
             info(StageKind::MapReduce, OptimizeMode::Auto),
         ];
-        let plan = lower(&stages, &agent);
+        let plan = lower(&stages, &agent, &registry());
         assert_eq!(plan.fused_ops, 1);
         assert_eq!(plan.streamed_handoffs, 1);
         assert_eq!(plan.decisions[1], StageDecision::MaterializeInput);
@@ -253,7 +432,7 @@ mod tests {
             info(StageKind::Map, OptimizeMode::Off),
             info(StageKind::MapReduce, OptimizeMode::Off),
         ];
-        let plan = lower(&stages, &agent);
+        let plan = lower(&stages, &agent, &registry());
         assert_eq!(plan.fused_ops, 0);
         assert_eq!(plan.streamed_handoffs, 0);
     }
@@ -268,7 +447,7 @@ mod tests {
             info(StageKind::Filter, OptimizeMode::Off),
             info(StageKind::MapReduce, OptimizeMode::Auto),
         ];
-        let plan = lower(&stages, &agent);
+        let plan = lower(&stages, &agent, &registry());
         // One Off stage demotes the whole chain…
         assert_eq!(plan.decisions[2], StageDecision::Materialize);
         assert_eq!(plan.decisions[3], StageDecision::Materialize);
@@ -287,7 +466,7 @@ mod tests {
             info(StageKind::FlatMap, OptimizeMode::Auto),
             info(StageKind::KeyedAggregate, OptimizeMode::Auto),
         ];
-        let plan = lower(&stages, &agent);
+        let plan = lower(&stages, &agent, &registry());
         // The co-group materializes its own inputs (sub-plans), but its
         // sharded output streams into the downstream keyed aggregate.
         assert_eq!(plan.decisions[0], StageDecision::MaterializeInput);
@@ -297,13 +476,63 @@ mod tests {
     }
 
     #[test]
+    fn cache_cut_streams_downstream_and_demotes_its_chain() {
+        let agent = OptimizerAgent::new();
+        let stages = [
+            info(StageKind::Source, OptimizeMode::Auto),
+            info(StageKind::Map, OptimizeMode::Auto),
+            info(StageKind::Cache, OptimizeMode::Auto),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+        ];
+        let plan = lower(&stages, &agent, &registry());
+        // The chain feeding the cut materializes (into the entry)…
+        assert_eq!(plan.decisions[1], StageDecision::Materialize);
+        assert_eq!(plan.fused_ops, 0);
+        // …and the cut's sharded output streams into the downstream
+        // reduce like any barrier's would.
+        assert_eq!(plan.decisions[3], StageDecision::StreamInput);
+        assert!(plan.cacheable);
+        assert_eq!(plan.prefix_fps.len(), 4);
+    }
+
+    #[test]
+    fn unidentified_sources_lower_uncacheable() {
+        let agent = OptimizerAgent::new();
+        let mut stages = vec![
+            info(StageKind::Source, OptimizeMode::Auto),
+            info(StageKind::Cache, OptimizeMode::Auto),
+        ];
+        stages[0].token = None; // stream source
+        assert!(!lower(&stages, &agent, &registry()).cacheable);
+        let cogroup = [info(StageKind::CoGroup, OptimizeMode::Auto)];
+        assert!(!lower(&cogroup, &agent, &registry()).cacheable);
+    }
+
+    #[test]
+    fn describe_renders_decisions_and_cuts_without_stats() {
+        let agent = OptimizerAgent::new();
+        let stages = [
+            info(StageKind::Source, OptimizeMode::Auto),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+            info(StageKind::Cache, OptimizeMode::Auto),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+        ];
+        let text = describe(&stages, &agent, &registry());
+        assert!(text.contains("cache"), "{text}");
+        assert!(text.contains("cut point"), "{text}");
+        assert!(text.contains("stream-input"), "{text}");
+        assert!(text.contains("fp "), "{text}");
+        assert_eq!(agent.stats().plans, 0, "describe must not record a plan pass");
+    }
+
+    #[test]
     fn exec_chain_fused_is_vacuous_on_empty_ranges() {
         let agent = OptimizerAgent::new();
         let stages = [
             info(StageKind::Source, OptimizeMode::Off),
             info(StageKind::MapReduce, OptimizeMode::Off),
         ];
-        let plan = lower(&stages, &agent);
+        let plan = lower(&stages, &agent, &registry());
         let pool = WorkerPool::new(1);
         let exec = PlanExec::new(&pool, &agent, plan);
         assert!(exec.chain_fused(&(1..1)), "empty chain is a direct handoff");

@@ -25,6 +25,11 @@
 //! * [`coordinator`] — work-stealing scheduler (batch + persistent pools),
 //!   input splitter, sharded intermediate collector, and the two
 //!   execution flows (reduce vs combine).
+//! * [`cache`] — the plan-aware materialization cache: structural prefix
+//!   fingerprints (computed by the planner during lowering), cross-plan
+//!   subplan reuse at [`api::plan::Dataset::cache`] cut points with
+//!   in-flight deduplication, and pressure-aware eviction accounted
+//!   against the simulated heap.
 //! * [`optimizer`] — the paper's §3 contribution: reducers expressed in a
 //!   stack-machine IR (RIR, the bytecode stand-in), analyzed via a program
 //!   dependency graph and sliced into `initialize`/`combine`/`finalize`.
@@ -44,6 +49,7 @@
 pub mod api;
 pub mod baselines;
 pub mod benchmarks;
+pub mod cache;
 pub mod coordinator;
 pub mod harness;
 pub mod memsim;
@@ -56,4 +62,5 @@ pub use api::{
     Dataset, Emitter, InputSource, JobBuilder, JobConfig, JobOutput, KeyValue, MapReduce,
     Mapper, Pipeline, PlanHandle, PlanOutput, PlanReport, Reducer, Runtime,
 };
+pub use cache::{CacheActivity, CacheStats, MaterializationCache};
 pub use optimizer::agent::OptimizerAgent;

@@ -150,6 +150,16 @@ fn main() -> ExitCode {
                 m.gc.gc_seconds,
                 100.0 * m.gc.gc_seconds / o.secs.max(1e-9)
             );
+            match &m.cache {
+                Some(c) => println!(
+                    "  cache       : {} hit(s), {} miss(es), {} shared in-flight, {} evicted, {} B inserted",
+                    c.hits, c.misses, c.shared_in_flight, c.evictions, c.bytes_inserted
+                ),
+                None => println!(
+                    "  cache       : off (figure runs measure uncached execution; \
+                     see Dataset::cache)"
+                ),
+            }
             println!("  digest      : {:016x}", o.digest);
             ExitCode::SUCCESS
         }

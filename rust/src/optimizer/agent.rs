@@ -226,6 +226,24 @@ impl OptimizerAgent {
     /// application records `map`/`filter`/`map_reduce` calls and never
     /// sees the placement.
     pub fn plan(&self, stages: &[StageShape]) -> Vec<StageDecision> {
+        let (decisions, fused, streamed) = Self::decide(stages);
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.plans += 1;
+        inner.stats.fused_stages += fused;
+        inner.stats.streamed_handoffs += streamed;
+        decisions
+    }
+
+    /// [`OptimizerAgent::plan`] without the statistics side effects — the
+    /// observational pass behind `Dataset::explain()`, which must not
+    /// make a never-executed plan look like a run.
+    pub fn plan_preview(&self, stages: &[StageShape]) -> Vec<StageDecision> {
+        Self::decide(stages).0
+    }
+
+    /// The pure placement policy shared by [`OptimizerAgent::plan`] and
+    /// [`OptimizerAgent::plan_preview`].
+    fn decide(stages: &[StageShape]) -> (Vec<StageDecision>, usize, usize) {
         let mut decisions = Vec::with_capacity(stages.len());
         let mut fused = 0usize;
         let mut streamed = 0usize;
@@ -253,11 +271,7 @@ impl OptimizerAgent {
                 }
             });
         }
-        let mut inner = self.inner.lock().unwrap();
-        inner.stats.plans += 1;
-        inner.stats.fused_stages += fused;
-        inner.stats.streamed_handoffs += streamed;
-        decisions
+        (decisions, fused, streamed)
     }
 
     /// The declared-semantics channel: a keyed stage registers its

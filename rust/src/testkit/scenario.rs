@@ -20,8 +20,11 @@
 //! # Determinism and replay
 //!
 //! Everything about a scenario derives from its `seed` (via the crate's
-//! own [`Xoshiro256`]): which benchmark each slot runs and under which
-//! optimizer mode. On failure the error message contains the seed;
+//! own [`Xoshiro256`]): which benchmark each slot runs, under which
+//! optimizer mode, and whether its `Dataset::cache()` cut points are
+//! live ([`PlanSpec::cached`] — cached slots on the shared session
+//! exercise cross-tenant materialization reuse and must still match the
+//! serial baselines). On failure the error message contains the seed;
 //! re-running with `MR4R_SCENARIO_SEED=<seed>` (see [`scenario_seed`])
 //! replays the exact same plan assignment. Thread *interleaving* is of
 //! course up to the OS — the point of the harness is that results must
@@ -51,11 +54,18 @@ use crate::benchmarks::{
 use crate::util::prng::Xoshiro256;
 
 /// One plan slot in a scenario: which workload runs, under which
-/// optimizer mode.
+/// optimizer mode, and whether `Dataset::cache()` cut points are live.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PlanSpec {
     pub bench: BenchId,
     pub optimize: OptimizeMode,
+    /// Whether the plan's materialization-cache cut points store/read
+    /// entries (the K-Means slot runs the cache-aware
+    /// `kmeans::run_mr4r_traced` driver; for workloads without a cut
+    /// this is a no-op). Cached slots on a shared session exercise
+    /// cross-tenant reuse — and must still match their serial baselines
+    /// digest for digest.
+    pub cached: bool,
 }
 
 /// Scenario shape: `drivers` OS threads × `plans_per_driver` plans each,
@@ -126,7 +136,12 @@ impl ScenarioKit {
         plans.push((
             BenchId::KM,
             Box::new(move |rt, cfg| {
-                let (cents, _m) = kmeans::run_mr4r(&km, rt, cfg, &b);
+                // The cache-aware Lloyd driver: with `PlanSpec::cached`
+                // the iterations reuse the materialized point blocks
+                // (and concurrent KM tenants exercise cross-plan reuse);
+                // with it disabled the same two-stage plan recomputes —
+                // digests must match the serial baseline either way.
+                let (cents, _reports) = kmeans::run_mr4r_traced(&km, rt, cfg, &b);
                 kmeans::digest_centroids(&cents)
             }),
         ));
@@ -189,7 +204,12 @@ impl ScenarioKit {
                         } else {
                             OptimizeMode::Off
                         };
-                        PlanSpec { bench, optimize }
+                        let cached = rng.below(2) == 0;
+                        PlanSpec {
+                            bench,
+                            optimize,
+                            cached,
+                        }
                     })
                     .collect()
             })
@@ -197,7 +217,10 @@ impl ScenarioKit {
     }
 
     fn run_one(&self, rt: &Runtime, base: &JobConfig, spec: PlanSpec) -> u64 {
-        let cfg = base.clone().with_optimize(spec.optimize);
+        let cfg = base
+            .clone()
+            .with_optimize(spec.optimize)
+            .with_cache_enabled(spec.cached);
         let plan = self
             .plans
             .iter()

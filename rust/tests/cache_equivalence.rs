@@ -1,0 +1,344 @@
+//! Materialization-cache acceptance suite:
+//!
+//! * **cached ≡ uncached** — K-Means and PCA produce identical digests
+//!   with the cache on and off, under `OptimizeMode::Auto` and `Off`,
+//!   while the cached run reports ≥ iterations−1 prefix hits and strictly
+//!   fewer `mr4r.*` cohort allocation bytes;
+//! * **eviction-then-recompute** — entries evicted under a tight capacity
+//!   or a low heap watermark are recomputed correctly on the next read;
+//! * **in-flight dedup** — two concurrent plans racing on the same
+//!   uncached prefix perform exactly one materialization
+//!   (`CacheStats::shared_in_flight` proves the share);
+//! * **seeded scenarios** — N-driver × M-plan scenarios with cached plan
+//!   slots still match their serial baselines pair for pair.
+//!
+//! Worker-pool width comes from `MR4R_THREADS` (default 4); the eviction
+//! watermark from `MR4R_CACHE_WATERMARK` (default 0.85) — the CI
+//! cache-stress matrix runs this suite at 2/8 workers and at a low
+//! watermark that keeps the pressure-eviction path hot.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mr4r::api::config::OptimizeMode;
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::traits::{Emitter, KeyValue, Mapper, Reducer};
+use mr4r::benchmarks::{datagen, kmeans, pca, Backend};
+use mr4r::memsim::{HeapParams, SimHeap};
+use mr4r::optimizer::builder::canon;
+use mr4r::testkit::scenario::{assert_scenario, scenario_seed, Scenario, ScenarioKit};
+use mr4r::{JobConfig, PlanReport, Runtime};
+
+/// Worker threads for the session pools (CI matrix sets `MR4R_THREADS`).
+fn threads() -> usize {
+    std::env::var("MR4R_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(1)
+}
+
+/// Eviction watermark under test (CI's low-watermark job sets
+/// `MR4R_CACHE_WATERMARK=0.05`).
+fn watermark() -> f64 {
+    std::env::var("MR4R_CACHE_WATERMARK")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.85)
+        .clamp(0.0, 1.0)
+}
+
+/// Sum of the `mr4r.*` cohort allocation bytes attributed to every
+/// executed stage across a run's plan reports (cache-entry bytes are
+/// charged to their own `cache.entry` cohort and excluded by
+/// construction).
+fn job_cohort_bytes(reports: &[PlanReport]) -> u64 {
+    reports
+        .iter()
+        .flat_map(|r| r.stage_metrics.iter())
+        .map(|m| m.gc.allocated_bytes)
+        .sum()
+}
+
+#[test]
+fn kmeans_cached_matches_uncached_with_fewer_allocations() {
+    let data = datagen::kmeans_points(0.004, 31);
+    let backend = Backend::Native;
+    for mode in [OptimizeMode::Auto, OptimizeMode::Off] {
+        let cached_cfg = JobConfig::new()
+            .with_heap(SimHeap::new(HeapParams::no_injection()))
+            .with_threads(threads())
+            .with_optimize(mode)
+            .with_cache_watermark(watermark());
+        let rt_cached = Runtime::with_config(cached_cfg.clone());
+        let (c_cached, rep_cached) =
+            kmeans::run_mr4r_traced(&data, &rt_cached, &cached_cfg, &backend);
+
+        let uncached_cfg = JobConfig::new()
+            .with_heap(SimHeap::new(HeapParams::no_injection()))
+            .with_threads(threads())
+            .with_optimize(mode)
+            .with_cache_enabled(false);
+        let rt_uncached = Runtime::with_config(uncached_cfg.clone());
+        let (c_uncached, rep_uncached) =
+            kmeans::run_mr4r_traced(&data, &rt_uncached, &uncached_cfg, &backend);
+
+        assert_eq!(
+            kmeans::digest_centroids(&c_cached),
+            kmeans::digest_centroids(&c_uncached),
+            "{mode:?}: cached and uncached runs must agree"
+        );
+
+        let hits: u64 = rep_cached.iter().map(|r| r.cache.hits).sum();
+        assert!(
+            hits >= (kmeans::ITERATIONS - 1) as u64,
+            "{mode:?}: {hits} prefix hits over {} iterations",
+            kmeans::ITERATIONS
+        );
+        assert!(
+            rep_uncached.iter().all(|r| r.cache.hits + r.cache.misses == 0),
+            "{mode:?}: the uncached run must never touch the cache"
+        );
+
+        let (b_cached, b_uncached) =
+            (job_cohort_bytes(&rep_cached), job_cohort_bytes(&rep_uncached));
+        assert!(
+            b_cached < b_uncached,
+            "{mode:?}: cached run must allocate strictly fewer mr4r.* cohort bytes \
+             ({b_cached} !< {b_uncached})"
+        );
+    }
+}
+
+#[test]
+fn pca_power_cached_matches_uncached() {
+    let m = datagen::square_matrix(0.0003, 61);
+    let pairs = pca::sample_pairs(m.n, 62);
+    let backend = Backend::Native;
+    for mode in [OptimizeMode::Auto, OptimizeMode::Off] {
+        let cfg = JobConfig::fast()
+            .with_threads(threads())
+            .with_optimize(mode)
+            .with_cache_watermark(watermark());
+        let rt = Runtime::with_config(cfg.clone());
+        let (x, reports) =
+            pca::run_power(&m, &pairs, &rt, &cfg, &backend, pca::POWER_ITERATIONS);
+
+        let off_cfg = cfg.clone().with_cache_enabled(false);
+        let rt_off = Runtime::with_config(off_cfg.clone());
+        let (x_off, _) =
+            pca::run_power(&m, &pairs, &rt_off, &off_cfg, &backend, pca::POWER_ITERATIONS);
+
+        assert_eq!(
+            pca::digest_eigvec(&x),
+            pca::digest_eigvec(&x_off),
+            "{mode:?}: cached and uncached power iterations must agree"
+        );
+        let hits: u64 = reports.iter().map(|r| r.cache.hits).sum();
+        assert!(
+            hits >= (pca::POWER_ITERATIONS - 1) as u64,
+            "{mode:?}: {hits} partials hits"
+        );
+    }
+}
+
+#[test]
+fn eviction_forces_recompute_with_identical_results() {
+    // A 1-byte capacity cap: every insert evicts the other prefix's
+    // entry, so alternating two plans keeps the eviction path hot and
+    // every round recomputes from scratch.
+    let rt = Runtime::with_config(
+        JobConfig::fast()
+            .with_threads(threads())
+            .with_cache_max_bytes(1),
+    );
+    let data_a: Vec<i64> = (0..300).collect();
+    let data_b: Vec<i64> = (0..300).map(|x| x * 3).collect();
+    let mapper: Arc<dyn Mapper<i64, i64, i64>> =
+        Arc::new(|x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(*x % 7, 1));
+    let reducer: Arc<dyn Reducer<i64, i64>> =
+        Arc::new(RirReducer::<i64, i64>::new(canon::sum_i64("cachetest.mod7")));
+
+    let run = |data: &Vec<i64>| -> Vec<(i64, i64)> {
+        rt.dataset(data)
+            .map_reduce_shared(Arc::clone(&mapper), Arc::clone(&reducer))
+            .cache()
+            .map_reduce(
+                |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
+                    em.emit(kv.key, kv.value)
+                },
+                RirReducer::<i64, i64>::new(canon::sum_i64("cachetest.echo")),
+            )
+            .collect_sorted()
+            .into_tuples()
+    };
+    let expect = |data: &Vec<i64>| -> Vec<(i64, i64)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for x in data {
+            *counts.entry(x % 7).or_insert(0i64) += 1;
+        }
+        counts.into_iter().collect()
+    };
+
+    for round in 0..3 {
+        assert_eq!(run(&data_a), expect(&data_a), "round {round}, dataset a");
+        assert_eq!(run(&data_b), expect(&data_b), "round {round}, dataset b");
+    }
+    let s = rt.cache().stats();
+    assert_eq!(s.hits, 0, "a 1-byte cap must never retain a reusable entry");
+    assert_eq!(s.misses, 6, "every round recomputes both prefixes");
+    assert!(s.evictions >= 5, "alternating inserts must evict: {s:?}");
+}
+
+#[test]
+fn low_watermark_pressure_evicts_and_stays_correct() {
+    // A small heap with a permanently resident filler: at the CI job's
+    // low watermark every insert sees pressure and releases older
+    // entries; at the default watermark nothing evicts. Results must be
+    // identical either way.
+    let wm = watermark();
+    let heap = SimHeap::new(HeapParams {
+        total_bytes: 8 << 20,
+        time_scale: 0.0,
+        sample_every: 1e9,
+        ..HeapParams::default()
+    });
+    let resident = heap.cohort("resident");
+    let mut alloc = heap.thread_alloc();
+    for _ in 0..512 {
+        alloc.alloc(resident, 1024); // 512 KiB live for the whole test
+    }
+    alloc.flush();
+
+    let cfg = JobConfig::new()
+        .with_heap(Arc::clone(&heap))
+        .with_threads(threads())
+        .with_cache_watermark(wm);
+    let rt = Runtime::with_config(cfg.clone());
+    let backend = Backend::Native;
+    let data_a = datagen::kmeans_points(0.004, 33);
+    let data_b = datagen::kmeans_points(0.004, 34);
+
+    let (a1, _) = kmeans::run_mr4r_traced(&data_a, &rt, &cfg, &backend);
+    let (b1, _) = kmeans::run_mr4r_traced(&data_b, &rt, &cfg, &backend);
+    let (a2, _) = kmeans::run_mr4r_traced(&data_a, &rt, &cfg, &backend);
+    let (b2, _) = kmeans::run_mr4r_traced(&data_b, &rt, &cfg, &backend);
+    assert_eq!(kmeans::digest_centroids(&a1), kmeans::digest_centroids(&a2));
+    assert_eq!(kmeans::digest_centroids(&b1), kmeans::digest_centroids(&b2));
+
+    // 512 KiB resident / 8 MiB total = 6.25% occupancy floor: any
+    // watermark at or under 5% guarantees pressure at every insert.
+    if wm <= 0.05 {
+        let s = rt.cache().stats();
+        assert!(s.evictions > 0, "low watermark must evict under pressure: {s:?}");
+    }
+}
+
+#[test]
+fn concurrent_plans_share_one_in_flight_materialization() {
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(threads()));
+    let data: Vec<i64> = (0..16).collect();
+    // A deliberately slow prefix (~60 ms per element) so the second
+    // driver arrives while the first is still computing.
+    let slow_mapper: Arc<dyn Mapper<i64, i64, i64>> =
+        Arc::new(|x: &i64, em: &mut dyn Emitter<i64, i64>| {
+            std::thread::sleep(Duration::from_millis(60));
+            em.emit(*x % 3, 1);
+        });
+    let reducer: Arc<dyn Reducer<i64, i64>> =
+        Arc::new(RirReducer::<i64, i64>::new(canon::sum_i64("cachetest.race")));
+
+    let outcomes: Vec<(usize, mr4r::CacheActivity, Vec<(i64, i64)>)> =
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2)
+                .map(|i| {
+                    let rt = &rt;
+                    let data = &data;
+                    let mapper = Arc::clone(&slow_mapper);
+                    let reducer = Arc::clone(&reducer);
+                    scope.spawn(move || {
+                        if i == 1 {
+                            // Arrive mid-computation: the prefix takes
+                            // ≥ 120 ms of mapper sleep even on a wide pool.
+                            std::thread::sleep(Duration::from_millis(30));
+                        }
+                        let out = rt
+                            .dataset(data)
+                            .map_reduce_shared(mapper, reducer)
+                            .cache()
+                            .map_reduce(
+                                |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
+                                    em.emit(kv.key, kv.value * 10)
+                                },
+                                RirReducer::<i64, i64>::new(canon::sum_i64("cachetest.race2")),
+                            )
+                            .collect_sorted();
+                        (out.report.stage_metrics.len(), out.report.cache, out.into_tuples())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("race driver panicked"))
+                .collect()
+        });
+
+    assert_eq!(outcomes[0].2, outcomes[1].2, "both tenants see the same result");
+    // Exactly one materialization: one plan ran prefix + tail (2 stage
+    // reports), the other only the tail (1 stage report).
+    let total_stages: usize = outcomes.iter().map(|o| o.0).sum();
+    assert_eq!(total_stages, 3, "the shared prefix must execute exactly once");
+    let misses: u64 = outcomes.iter().map(|o| o.1.misses).sum();
+    let shared: u64 = outcomes.iter().map(|o| o.1.shared_in_flight).sum();
+    assert_eq!(misses, 1, "one plan computes");
+    assert_eq!(shared, 1, "the other shares the in-flight computation");
+    let s = rt.cache().stats();
+    assert_eq!((s.misses, s.shared_in_flight), (1, 1));
+}
+
+#[test]
+fn uncache_releases_the_entry_and_forces_recompute() {
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(2));
+    let data: Vec<i64> = (0..100).collect();
+    let mapper: Arc<dyn Mapper<i64, i64, i64>> =
+        Arc::new(|x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(*x % 5, 1));
+    let reducer: Arc<dyn Reducer<i64, i64>> =
+        Arc::new(RirReducer::<i64, i64>::new(canon::sum_i64("cachetest.uncache")));
+
+    let collect = || {
+        rt.dataset(&data)
+            .map_reduce_shared(Arc::clone(&mapper), Arc::clone(&reducer))
+            .cache()
+            .collect()
+    };
+    let first = collect();
+    assert_eq!(first.report.cache.misses, 1);
+    assert!(rt.cache().stats().bytes_cached > 0, "entry bytes must be accounted");
+
+    let second = collect();
+    assert_eq!(second.report.cache.hits, 1);
+    assert!(second.report.stage_metrics.is_empty(), "a full-prefix hit runs no job");
+    assert_eq!(first.items, second.items);
+
+    rt.dataset(&data)
+        .map_reduce_shared(Arc::clone(&mapper), Arc::clone(&reducer))
+        .uncache();
+    let s = rt.cache().stats();
+    assert_eq!((s.entries, s.bytes_cached), (0, 0), "uncache must release the entry");
+
+    let third = collect();
+    assert_eq!(third.report.cache.misses, 1, "after uncache the prefix recomputes");
+    assert_eq!(third.items, first.items);
+}
+
+#[test]
+fn cached_scenarios_match_serial_baselines() {
+    let kit = ScenarioKit::prepare(0.0002, 9);
+    let sc = Scenario {
+        seed: scenario_seed(2024),
+        drivers: 3,
+        plans_per_driver: 2,
+        threads: threads(),
+    };
+    assert_scenario(&kit, &sc);
+}
