@@ -1,34 +1,70 @@
-//! Log analytics — the kind of "smaller Big Data job" the paper's intro
-//! motivates (most cloud jobs fit one node; Appuswamy et al. [1]) — on
-//! the **lazy `Dataset` dataflow surface**.
+//! Streaming log analytics — rolling per-minute metrics over an
+//! unbounded access-log feed, the continuous version of the "smaller
+//! Big Data job" the paper's intro motivates (most cloud jobs fit one
+//! node; Appuswamy et al.).
 //!
 //! ```bash
 //! cargo run --release --example log_analytics
 //! ```
 //!
-//! One `Runtime` session, several plans over synthetic web-server logs
-//! (as a long-lived application would — one pool, one agent):
-//!
-//! 1. status-code counts — sum reducer → combining flow;
-//! 2. per-endpoint worst latency — max reducer → combining flow;
-//! 3. mean latency via the declarative reducer DSL;
-//! 4. a **multi-stage plan**: status counts → filter → status-class
-//!    rollup, recorded lazily; the whole-plan pass fuses the filter into
-//!    the second map phase and streams the first stage's shards straight
-//!    into the second stage's splitter — zero materialized intermediates;
-//! 5. a session-dedup job whose reducer has an early exit → the agent
-//!    *rejects* it and the reduce flow runs (transparently, correctly);
-//! 6. the same status count fed from a **streaming source** (chunked
-//!    generator) — identical results without materializing the input.
+//! A live [`StreamSource`] is fed chunk-by-chunk through its push
+//! handle while a standing query aggregates tumbling 1-minute windows
+//! per endpoint: request count, error count, worst latency. The
+//! per-window rollup is a declared associative + commutative
+//! [`Aggregator`] with a mergeable holder, so the window engine folds
+//! each event into its pane holder once and *merges* holders at fire —
+//! the paper's combining flow extended across event time (no buffered
+//! re-reduce). The batch twin (`Dataset::keyed().window_tumbling()`)
+//! runs the same plan over the materialized log and must agree window
+//! for window.
 
-use mr4r::api::config::OptimizeMode;
-use mr4r::api::reducers::RirReducer;
-use mr4r::api::{ChunkedSource, Emitter, JobConfig, KeyValue, Runtime};
-use mr4r::optimizer::ast::specs;
-use mr4r::optimizer::builder::canon;
+use mr4r::api::keyed::Aggregator;
+use mr4r::api::JobConfig;
 use mr4r::util::prng::Xoshiro256;
+use mr4r::{Runtime, StreamSource, WindowResult};
 
-/// One synthetic access-log line: "METHOD /path STATUS LATENCY_MS".
+/// One parsed event: `(ts, (latency_ms, is_error))`.
+type Ev = (u64, (i64, i64));
+
+/// Per-`(window, endpoint)` rollup: `(requests, worst_latency, errors)`.
+/// Declared associative + commutative with a mergeable holder — pane
+/// holders add component-wise, so overlapping/fired windows never
+/// re-fold raw events.
+struct Rollup;
+
+impl Aggregator<Ev, (i64, i64, i64), (i64, i64, i64)> for Rollup {
+    const ASSOCIATIVE: bool = true;
+    const COMMUTATIVE: bool = true;
+    const MERGEABLE: bool = true;
+
+    fn init(&self) -> (i64, i64, i64) {
+        (0, 0, 0)
+    }
+
+    fn combine(&self, holder: &mut (i64, i64, i64), value: Ev) {
+        let (lat, is_err) = value.1;
+        holder.0 += 1;
+        holder.1 = holder.1.max(lat);
+        holder.2 += is_err;
+    }
+
+    fn finish(&self, holder: (i64, i64, i64)) -> (i64, i64, i64) {
+        holder
+    }
+
+    fn merge_holders(&self, into: &mut (i64, i64, i64), other: (i64, i64, i64)) {
+        into.0 += other.0;
+        into.1 = into.1.max(other.1);
+        into.2 += other.2;
+    }
+
+    fn name(&self) -> &str {
+        "logs.endpoint_rollup"
+    }
+}
+
+/// Synthetic access-log lines `"TS /path STATUS LATENCY_MS"`, ~250
+/// requests per tick so `n` events span `n / (250 * 60)` minutes.
 fn synth_logs(n: usize, seed: u64) -> Vec<String> {
     let mut rng = Xoshiro256::seeded(seed);
     let endpoints = [
@@ -36,206 +72,107 @@ fn synth_logs(n: usize, seed: u64) -> Vec<String> {
     ];
     let statuses = [200u32, 200, 200, 200, 301, 404, 500];
     (0..n)
-        .map(|_| {
+        .map(|i| {
+            let ts = (i / 250) as u64;
             let ep = rng.pick(&endpoints);
             let st = rng.pick(&statuses);
             let lat = (rng.unit_f64() * rng.unit_f64() * 900.0 + 1.0) as u64;
-            format!("GET {ep} {st} {lat}")
+            format!("{ts} {ep} {st} {lat}")
         })
         .collect()
 }
 
+/// `"TS /path STATUS LATENCY_MS"` → `(endpoint, (ts, (lat, is_err)))`.
+fn parse(line: &str) -> (String, Ev) {
+    let mut it = line.split(' ');
+    let ts: u64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    let ep = it.next().unwrap_or("?").to_string();
+    let status: i64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    let lat: i64 = it.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+    (ep, (ts, (lat, i64::from(status >= 500))))
+}
+
+fn print_window(w: &WindowResult<String, (i64, i64, i64)>) {
+    let mut rows = w.pairs.clone();
+    rows.sort_by(|a, b| b.value.0.cmp(&a.value.0).then_with(|| a.key.cmp(&b.key)));
+    println!("minute {:>2} [{:>4}..{:>4}):", w.window, w.start, w.end);
+    for p in &rows {
+        println!(
+            "  {:<16} {:>6} req  {:>3} err  worst {:>4}ms",
+            p.key, p.value.0, p.value.2, p.value.1
+        );
+    }
+}
+
 fn main() {
-    let logs = synth_logs(200_000, 7);
-    let rt = Runtime::with_config(JobConfig::fast());
+    let logs = synth_logs(120_000, 7);
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(4));
 
-    // --- Plan 1: requests per status code (sum → optimizable) ---
-    let status_mapper = |line: &String, em: &mut dyn Emitter<i64, i64>| {
-        let mut it = line.split(' ');
-        let status: i64 = it.nth(2).and_then(|s| s.parse().ok()).unwrap_or(0);
-        em.emit(status, 1);
-    };
-    let by_status = rt
-        .dataset(&logs)
-        .map_reduce(
-            status_mapper,
-            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
-        )
-        .collect_sorted();
-    println!("requests by status ({} flow):", by_status.metrics().flow.label());
-    for kv in &by_status.items {
-        println!("  {}  {:>7}", kv.key, kv.value);
-    }
-    let flow1 = by_status.metrics().flow.label();
+    // The standing query: parse → key by endpoint → tumbling 1-minute
+    // (60-tick) windows → mergeable rollup. Nothing runs yet; the plan
+    // lowers once and waits on the feed.
+    let (source, handle) = StreamSource::unbounded();
+    let mut query = rt
+        .stream(source)
+        .map(|line: &String| parse(line))
+        .keyed()
+        .window_tumbling(60, |v: &Ev| v.0)
+        .aggregate_by_key(Rollup);
 
-    // --- Plan 2: worst latency per endpoint (max → optimizable) ---
-    let latency_mapper = |line: &String, em: &mut dyn Emitter<String, i64>| {
-        let mut it = line.split(' ');
-        let ep = it.nth(1).unwrap_or("?").to_string();
-        let lat: i64 = it.nth(1).and_then(|s| s.parse().ok()).unwrap_or(0);
-        em.emit(ep, lat);
-    };
-    let worst = rt
-        .dataset(&logs)
-        .map_reduce(
-            latency_mapper,
-            RirReducer::<String, i64>::new(canon::max_i64("logs.worst_latency")),
-        )
-        .collect();
-    let mut worst_pairs = worst.items.clone();
-    worst_pairs.sort_by(|a, b| b.value.cmp(&a.value));
-    println!("\nworst latency per endpoint ({} flow):", worst.metrics().flow.label());
-    for kv in &worst_pairs {
-        println!("  {:>5}ms  {}", kv.value, kv.key);
-    }
-    let flow2 = worst.metrics().flow.label();
-
-    // --- Plan 2b: mean latency per endpoint, written in the declarative
-    // reducer DSL (compiled to RIR, then transformed to a combiner —
-    // semantic information flowing from the API down, paper §6) ---
-    let mean_mapper = |line: &String, em: &mut dyn Emitter<String, f64>| {
-        let mut it = line.split(' ');
-        let ep = it.nth(1).unwrap_or("?").to_string();
-        let lat: f64 = it.nth(1).and_then(|s| s.parse().ok()).unwrap_or(0.0);
-        em.emit(ep, lat);
-    };
-    let means = rt
-        .dataset(&logs)
-        .map_reduce(
-            mean_mapper,
-            RirReducer::<String, f64>::new(
-                specs::mean_f64("logs.mean_latency").compile().expect("spec compiles"),
-            ),
-        )
-        .collect();
-    let mut mean_pairs = means.items.clone();
-    mean_pairs.sort_by(|a, b| b.value.partial_cmp(&a.value).unwrap());
-    println!(
-        "\nmean latency per endpoint ({} flow, DSL-compiled reducer):",
-        means.metrics().flow.label()
-    );
-    for kv in &mean_pairs {
-        println!("  {:>7.1}ms  {}", kv.value, kv.key);
-    }
-    assert_eq!(means.metrics().flow.label(), "combine");
-
-    // --- Plan 3: the multi-stage lazy plan. Status counts → drop the
-    // healthy 2xx bulk → roll up by status class, recorded as ONE plan.
-    // Nothing runs until collect(); the whole-plan pass then fuses the
-    // filter into stage 2's mapper and streams stage 1's shard outputs
-    // straight into stage 2's splitter — no JobOutput round-trip.
-    let error_classes = rt
-        .dataset(&logs)
-        .map_reduce(
-            status_mapper,
-            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
-        )
-        .filter(|kv: &KeyValue<i64, i64>| kv.key >= 300)
-        .map_reduce(
-            |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
-                em.emit(kv.key / 100, kv.value);
-            },
-            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_class")),
-        )
-        .collect_sorted();
-    println!("\nnon-2xx requests by status class (one lazy 2-stage plan):");
-    for kv in &error_classes.items {
-        println!("  {}xx  {:>7}", kv.key, kv.value);
-    }
-    println!(
-        "  plan: {} fused op(s), {} streamed handoff(s), {} materialized intermediates",
-        error_classes.report.fused_ops,
-        error_classes.report.streamed_handoffs,
-        error_classes.report.materialized_pairs,
-    );
-    assert_eq!(error_classes.report.fused_ops, 1);
-    assert_eq!(error_classes.report.streamed_handoffs, 1);
-    assert_eq!(error_classes.report.materialized_pairs, 0);
-
-    // The same plan with the optimizer off runs eagerly: every stage
-    // boundary materializes, and the report shows the round-trips.
-    let eager = rt
-        .dataset(&logs)
-        .optimize(OptimizeMode::Off)
-        .map_reduce(
-            status_mapper,
-            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
-        )
-        .filter(|kv: &KeyValue<i64, i64>| kv.key >= 300)
-        .map_reduce(
-            |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
-                em.emit(kv.key / 100, kv.value);
-            },
-            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_class")),
-        )
-        .collect_sorted();
-    assert_eq!(eager.items, error_classes.items, "plan rewrites change nothing");
-    assert!(eager.report.materialized_pairs > 0);
-    println!(
-        "  (optimizer off: {} materialized intermediates, same results)",
-        eager.report.materialized_pairs
-    );
-
-    // --- Plan 4: a non-transformable reducer (early exit) ---
-    let first_burst = rt
-        .dataset(&logs)
-        .map_reduce(
-            status_mapper,
-            RirReducer::<i64, i64>::new(canon::early_exit("logs.first_burst")),
-        )
-        .collect();
-    println!(
-        "\nnon-fold reducer: flow={} (agent said: {})",
-        first_burst.metrics().flow.label(),
-        first_burst
-            .metrics()
-            .fallback_reason
-            .as_deref()
-            .unwrap_or("-")
-    );
-    let flow3 = first_burst.metrics().flow.label();
-
-    // --- Plan 1c: streaming source — same counts without a materialized
-    // input slice (chunks generated on demand) ---
-    let mut served = 0usize;
-    let logs_for_stream = logs.clone();
-    let stream = ChunkedSource::new(move || {
-        if served >= logs_for_stream.len() {
-            return None;
+    // Feed the live handle chunk-by-chunk, draining fired windows as
+    // the event-time watermark passes each minute boundary — rolling
+    // metrics, not an end-of-job report.
+    let mut fired: Vec<WindowResult<String, (i64, i64, i64)>> = Vec::new();
+    for chunk in logs.chunks(8_192) {
+        handle.push(chunk.to_vec());
+        if let Some(windows) = query.step() {
+            for w in &windows {
+                print_window(w);
+            }
+            fired.extend(windows);
         }
-        let end = (served + 8192).min(logs_for_stream.len());
-        let chunk = logs_for_stream[served..end].to_vec();
-        served = end;
-        Some(chunk)
-    });
-    let streamed = rt
-        .dataset(stream)
-        .map_reduce(
-            status_mapper,
-            RirReducer::<i64, i64>::new(canon::sum_i64("logs.status_count")),
-        )
-        .collect_sorted();
-    assert_eq!(
-        streamed.items, by_status.items,
-        "streaming source must match the materialized run"
-    );
-    println!("\nstreamed status counts match materialized run: true");
+    }
+    handle.close();
 
-    let stats = rt.agent().stats();
+    // Drain whatever the close unblocked, then fire the tail window.
+    let out = query.run_to_close();
+    for w in &out.windows {
+        print_window(w);
+    }
+    let metrics = out.metrics().clone();
+    fired.extend(out.into_windows());
+
     println!(
-        "\nsession: {} threads spawned once; agent: {} classes optimized, {} rejected, \
-         {} cache hits, {} whole-plan passes ({} ops fused, {} handoffs streamed)",
-        rt.spawned_threads(),
-        stats.optimized,
-        stats.rejected,
-        stats.cache_hits,
-        stats.plans,
-        stats.fused_stages,
-        stats.streamed_handoffs
+        "\nstream: {} chunks, {} events, {} windows fired, {} pane holders merged, \
+         {} elements re-folded, {} late",
+        metrics.chunks_ingested,
+        metrics.elements_ingested,
+        metrics.windows_fired,
+        metrics.holders_merged,
+        metrics.elements_recomputed,
+        metrics.late_elements,
     );
-    assert_eq!(flow1, "combine");
-    assert_eq!(flow2, "combine");
-    assert_eq!(flow3, "reduce");
-    assert!(stats.cache_hits >= 2, "repeated classes must hit the cache");
-    assert!(stats.plans >= 7, "every collect runs the whole-plan pass");
+    assert!(metrics.merge_mode, "declared assoc+comm rollup must merge");
+    assert!(metrics.holders_merged > 0);
+    assert_eq!(metrics.elements_recomputed, 0, "merge path re-folds nothing");
+    assert_eq!(metrics.late_elements, 0, "feed is in event-time order");
+    assert_eq!(metrics.windows_fired as usize, fired.len());
+
+    // The batch twin over the materialized log must agree pane for pane.
+    let batch = rt
+        .dataset(&logs)
+        .map(|line: &String| parse(line))
+        .keyed()
+        .window_tumbling(60, |v: &Ev| v.0)
+        .aggregate_by_key(Rollup);
+    assert_eq!(fired.len(), batch.windows.len());
+    for (s, b) in fired.iter().zip(&batch.windows) {
+        assert_eq!((s.window, s.start, s.end), (b.window, b.start, b.end));
+        let mut srows = s.pairs.clone();
+        let mut brows = b.pairs.clone();
+        srows.sort_by(|a, b| a.key.cmp(&b.key));
+        brows.sort_by(|a, b| a.key.cmp(&b.key));
+        assert_eq!(srows, brows, "minute {} must match the batch twin", s.window);
+    }
+    println!("batch twin agrees on all {} windows: true", fired.len());
 }

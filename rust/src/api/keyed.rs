@@ -86,6 +86,13 @@ pub trait Aggregator<V, H, O>: Send + Sync {
     const ASSOCIATIVE: bool;
     /// `combine` may be reordered across values of one key.
     const COMMUTATIVE: bool;
+    /// Two partial holders for one key may be merged with
+    /// [`Aggregator::merge_holders`] — the declaration the streaming
+    /// window engine acts on (see [`crate::stream`]): panes keep one
+    /// holder per key and windows *merge* pane holders instead of
+    /// re-folding every buffered value. Defaults to `false`; declaring
+    /// it without overriding `merge_holders` panics at the first merge.
+    const MERGEABLE: bool = false;
 
     /// `initialize()` — a fresh holder (created once per distinct key).
     fn init(&self) -> H;
@@ -95,6 +102,18 @@ pub trait Aggregator<V, H, O>: Send + Sync {
 
     /// `finalize(holder)` — convert the holder into its final form.
     fn finish(&self, holder: H) -> O;
+
+    /// Merge another partial holder into `into` (only called when
+    /// [`Aggregator::MERGEABLE`] is declared). Must satisfy
+    /// `finish(merge(a, b)) ≡ finish(fold of both holders' values)` —
+    /// which is exactly what associativity + commutativity of `combine`
+    /// guarantee for holders built from disjoint value sets.
+    fn merge_holders(&self, _into: &mut H, _other: H) {
+        panic!(
+            "aggregator '{}' declares MERGEABLE but does not implement merge_holders",
+            self.name()
+        );
+    }
 
     /// Stable name for the agent's bookkeeping (the class-name analogue).
     fn name(&self) -> &str {
@@ -123,6 +142,7 @@ where
     // be associative and commutative (document-level, Spark-style).
     const ASSOCIATIVE: bool = true;
     const COMMUTATIVE: bool = true;
+    const MERGEABLE: bool = true;
 
     fn init(&self) -> Option<V> {
         None
@@ -137,6 +157,12 @@ where
 
     fn finish(&self, holder: Option<V>) -> V {
         holder.expect("holders are only created on first combine")
+    }
+
+    fn merge_holders(&self, into: &mut Option<V>, other: Option<V>) {
+        if let Some(v) = other {
+            self.combine(into, v);
+        }
     }
 
     fn name(&self) -> &str {
@@ -178,6 +204,7 @@ pub struct Count;
 impl<V: Send + Sync> Aggregator<V, i64, i64> for Count {
     const ASSOCIATIVE: bool = true;
     const COMMUTATIVE: bool = true;
+    const MERGEABLE: bool = true;
 
     fn init(&self) -> i64 {
         0
@@ -189,6 +216,10 @@ impl<V: Send + Sync> Aggregator<V, i64, i64> for Count {
 
     fn finish(&self, holder: i64) -> i64 {
         holder
+    }
+
+    fn merge_holders(&self, into: &mut i64, other: i64) {
+        *into += other;
     }
 
     fn name(&self) -> &str {
@@ -371,6 +402,37 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedDataset<'rt, K, V, B> {
         V: Clone + Send + Sync + HeapSized,
     {
         self.aggregate_by_key(Count)
+    }
+
+    /// Assign each pair to a **tumbling** (non-overlapping) event-time
+    /// window of `size` ticks, using `ts` to extract a value's timestamp.
+    /// The windowed view aggregates per `(window, key)` — see
+    /// [`Windowed`](crate::stream::Windowed) and the streaming twin on
+    /// [`KeyedStream`](crate::stream::KeyedStream).
+    pub fn window_tumbling(
+        self,
+        size: u64,
+        ts: impl Fn(&V) -> u64 + Send + Sync + 'rt,
+    ) -> crate::stream::Windowed<'rt, K, V, B> {
+        crate::stream::Windowed::over(self.inner, crate::stream::WindowSpec::tumbling(size), ts)
+    }
+
+    /// Assign each pair to every **sliding** window of `size` ticks that
+    /// covers its timestamp, windows advancing by `slide` ticks
+    /// (`size % slide == 0`). Pairs land in one pane of width `slide`;
+    /// each window spans `size / slide` consecutive panes, so a mergeable
+    /// aggregator folds each value once and windows merge pane holders.
+    pub fn window_sliding(
+        self,
+        size: u64,
+        slide: u64,
+        ts: impl Fn(&V) -> u64 + Send + Sync + 'rt,
+    ) -> crate::stream::Windowed<'rt, K, V, B> {
+        crate::stream::Windowed::over(
+            self.inner,
+            crate::stream::WindowSpec::sliding(size, slide),
+            ts,
+        )
     }
 
     /// Two-input co-group: for every key present in either input, the

@@ -76,7 +76,7 @@ use super::source::{Feed, InputSource};
 use super::traits::{HeapSized, KeyValue, Mapper, Reducer};
 use crate::cache::{fingerprint, CacheActivity, MaterializationCache, ENTRY_SLOT_BYTES};
 use crate::coordinator::collector::shard_count;
-use crate::coordinator::pipeline::{concat_shards, run_job_sharded, FlowMetrics};
+use crate::coordinator::pipeline::{concat_shards, run_job_sharded, FlowMetrics, StreamMetrics};
 use crate::coordinator::planner::{self, PlanExec};
 use crate::optimizer::value::RirValue;
 use crate::util::hash::fxhash;
@@ -550,6 +550,11 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     /// [`Dataset::cache`] cut whose fingerprint hits the session
     /// materialization cache, which are read back instead of recomputed.
     ///
+    /// A batch collect drains the plan's source feed as far as the feed
+    /// goes **right now** and returns — it never blocks waiting for more
+    /// input. To keep the same logical plan live over an unbounded feed,
+    /// open it with [`Runtime::stream`] instead (see [`crate::stream`]).
+    ///
     /// `T: Clone` is exercised only where the plan must turn borrowed
     /// chain outputs into owned results — no-op plans over borrowed
     /// slices and terminal element-wise chains; reduce outputs move.
@@ -905,6 +910,63 @@ where
             }
         }
     }
+
+    /// The Ready-with-growth path of [`Dataset::cache`]: the cached entry
+    /// recorded how many source elements it covers, and the source has
+    /// since been appended to. Run only the tail through the chain, merge
+    /// it into the cached entry (a CAS on the covered length, so racing
+    /// tenants never double-apply a delta), and hand back the full shard
+    /// set either way — the stored prefix is never recomputed.
+    #[allow(clippy::too_many_arguments)]
+    fn merge_append_delta(
+        src: &mut (dyn InputSource<B> + 'rt),
+        chain: &Chain<'rt, B, T>,
+        shards: &Arc<Vec<Vec<T>>>,
+        fp: crate::cache::Fingerprint,
+        have: u64,
+        total: usize,
+        waited: bool,
+        cfg: &JobConfig,
+        cache: &MaterializationCache,
+        exec: &mut PlanExec<'rt>,
+    ) -> Vec<Vec<T>> {
+        let tail: Vec<T> = collect_source(src.feed_tail(have as usize), chain, None);
+        let delta_items = tail.len() as u64;
+        let delta_bytes: u64 = tail
+            .iter()
+            .map(|t| t.heap_bytes() + ENTRY_SLOT_BYTES)
+            .sum();
+        if matches!(chain, Chain::Ops { .. }) {
+            exec.note_materialized(delta_items);
+        }
+        // The tail becomes one extra shard after the cached prefix shards,
+        // so downstream consumers still see the source's element order.
+        let mut merged: Vec<Vec<T>> = (**shards).clone();
+        if !tail.is_empty() {
+            merged.push(tail);
+        }
+        let stored: Arc<Vec<Vec<T>>> = Arc::new(merged);
+        let stored_any: Arc<dyn std::any::Any + Send + Sync> = Arc::clone(&stored);
+        let (installed, evictions) = cache.merge_delta(
+            fp,
+            have,
+            stored_any,
+            delta_bytes,
+            delta_items,
+            total as u64,
+            &cfg.heap,
+            &cfg.cache,
+        );
+        cache.record_read(waited);
+        exec.note_cache(CacheActivity {
+            hits: if waited { 0 } else { 1 },
+            shared_in_flight: if waited { 1 } else { 0 },
+            evictions,
+            bytes_inserted: if installed { delta_bytes } else { 0 },
+            ..CacheActivity::default()
+        });
+        (*stored).clone()
+    }
 }
 
 impl<'rt, B, T> PlanStage<'rt, T> for CacheStage<'rt, B, T>
@@ -914,7 +976,7 @@ where
 {
     fn execute(self: Box<Self>, exec: &mut PlanExec<'rt>) -> Vec<Vec<T>> {
         let CacheStage {
-            base,
+            mut base,
             chain,
             index,
             cfg,
@@ -931,9 +993,34 @@ where
             return Self::compute(base, chain, &cfg, exec);
         };
         match cache.begin(fp) {
-            crate::cache::Begin::Ready { value, waited } => {
+            crate::cache::Begin::Ready {
+                value,
+                waited,
+                seen,
+            } => {
                 match value.downcast::<Vec<Vec<T>>>() {
                     Ok(shards) => {
+                        // Incremental maintenance: an append-aware source
+                        // that has grown past what the entry covers takes
+                        // the delta-merge path instead of a plain read.
+                        if let Base::Source(src) = &mut base {
+                            if let (Some(total), Some(have)) = (src.append_len(), seen) {
+                                if (total as u64) > have {
+                                    return Self::merge_append_delta(
+                                        src.as_mut(),
+                                        &chain,
+                                        &shards,
+                                        fp,
+                                        have,
+                                        total,
+                                        waited,
+                                        &cfg,
+                                        cache,
+                                        exec,
+                                    );
+                                }
+                            }
+                        }
                         cache.record_read(waited);
                         exec.note_cache(CacheActivity {
                             hits: if waited { 0 } else { 1 },
@@ -955,6 +1042,12 @@ where
                 }
             }
             crate::cache::Begin::Claimed(ticket) => {
+                // How much of an append-aware source this entry will
+                // cover, recorded so later reads can delta-merge.
+                let seen = match &base {
+                    Base::Source(src) => src.append_len().map(|n| n as u64),
+                    Base::Stage(_) => None,
+                };
                 let sw = Stopwatch::start();
                 let shards = Self::compute(base, chain, &cfg, exec);
                 let secs = sw.secs();
@@ -975,6 +1068,7 @@ where
                     bytes,
                     items,
                     secs,
+                    seen,
                     &cfg.heap,
                     &cfg.cache,
                 );
@@ -1042,9 +1136,10 @@ pub(crate) fn apply_chain<'rt, B, T: Clone>(
     out
 }
 
-/// Drain a source feed through the terminal chain (plans with no reduce
-/// stage at all).
-fn collect_source<'rt, B, T: Clone>(
+/// Drain a feed through a chain, direct or composed (terminal collects
+/// of plans with no reduce stage, and the cache delta path's tail
+/// materialization).
+pub(crate) fn collect_source<'rt, B, T: Clone>(
     feed: Feed<'_, B>,
     chain: &Chain<'rt, B, T>,
     hint: Option<usize>,
@@ -1099,6 +1194,11 @@ pub struct PlanReport {
     /// evictions its inserts triggered, bytes inserted. All zero for
     /// plans without a [`Dataset::cache`] cut point.
     pub cache: CacheActivity,
+    /// Streaming execution metrics — populated only when this report was
+    /// produced by the streaming layer (a
+    /// [`StandingQuery`](crate::stream::StandingQuery) or a batch window
+    /// collect, see [`crate::stream`]). `None` for plain batch collects.
+    pub stream: Option<StreamMetrics>,
 }
 
 /// What a terminal collect returns: the materialized elements plus the

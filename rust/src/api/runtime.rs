@@ -203,6 +203,22 @@ impl Runtime {
         Dataset::over(self, Box::new(source), self.config.clone())
     }
 
+    /// Open a **standing** plan over an unbounded feed: the same lazy
+    /// stage-recording surface as [`Runtime::dataset`], but instead of
+    /// draining the source once at `collect()`, the plan re-fires for
+    /// every chunk the paired
+    /// [`StreamHandle`](crate::stream::StreamHandle) pushes. Keying and
+    /// windowing the returned [`StreamDataset`](crate::stream::StreamDataset)
+    /// yields a [`StandingQuery`](crate::stream::StandingQuery); see
+    /// [`crate::stream`] for the window model and the pane-holder merge
+    /// optimization.
+    pub fn stream<'rt, T: 'rt>(
+        &'rt self,
+        source: crate::stream::StreamSource<T>,
+    ) -> crate::stream::StreamDataset<'rt, T> {
+        crate::stream::StreamDataset::over(self, source, self.config.clone())
+    }
+
     /// Spawn a dedicated **driver thread** running `f` over this shared
     /// session and return a joinable [`PlanHandle`] — the multi-tenant
     /// entry point when scoped threads are inconvenient. The closure gets

@@ -70,6 +70,25 @@ pub trait InputSource<I> {
     fn fingerprint_token(&self) -> Option<u64> {
         None
     }
+
+    /// Current total length of an **append-only** source (see
+    /// [`crate::stream::AppendLog`]). `Some(n)` declares that the first
+    /// `n` items are a stable prefix: a source may grow at the tail but
+    /// never mutate what it already served. The cache uses this to
+    /// delta-maintain entries at `Dataset::cache()` cut points instead of
+    /// recomputing the whole prefix. The `None` default means "not
+    /// append-aware" — every existing source keeps full-recompute
+    /// semantics.
+    fn append_len(&self) -> Option<usize> {
+        None
+    }
+
+    /// Feed only the items at positions `start..` (the appended delta).
+    /// Only meaningful for sources whose [`InputSource::append_len`] is
+    /// `Some`; the default yields an empty feed.
+    fn feed_tail(&mut self, _start: usize) -> Feed<'_, I> {
+        Feed::Slice(&[])
+    }
 }
 
 impl<I, S: InputSource<I> + ?Sized> InputSource<I> for &mut S {
@@ -83,6 +102,14 @@ impl<I, S: InputSource<I> + ?Sized> InputSource<I> for &mut S {
 
     fn fingerprint_token(&self) -> Option<u64> {
         (**self).fingerprint_token()
+    }
+
+    fn append_len(&self) -> Option<usize> {
+        (**self).append_len()
+    }
+
+    fn feed_tail(&mut self, start: usize) -> Feed<'_, I> {
+        (**self).feed_tail(start)
     }
 }
 
@@ -194,7 +221,17 @@ where
 {
     fn feed(&mut self) -> Feed<'_, I> {
         let next = &mut self.next;
-        Feed::Stream(Box::new(move || next()))
+        // An empty chunk between non-empty ones is a pause, not the end
+        // of the feed (generators paging a sparse store legitimately
+        // return zero items for a section). Skip empties here so workers
+        // never mistake one for exhaustion or spin mapping nothing; only
+        // `None` terminates the stream.
+        Feed::Stream(Box::new(move || loop {
+            match next() {
+                Some(chunk) if chunk.is_empty() => continue,
+                other => return other,
+            }
+        }))
     }
 
     fn len_hint(&self) -> Option<usize> {
@@ -391,6 +428,50 @@ mod tests {
             assert!(count_job(&rt, IterSource::new(std::iter::empty::<i64>(), 4)).is_empty());
             let chunked: ChunkedSource<i64, _> = ChunkedSource::new(|| None);
             assert!(count_job(&rt, chunked).is_empty());
+        }
+
+        #[test]
+        fn interleaved_empty_chunks_are_not_end_of_feed() {
+            // A generator yielding `Some(vec![])` between non-empty
+            // chunks must keep streaming: every item after an empty
+            // chunk still reaches the job.
+            let rt = rt();
+            let data: Vec<i64> = (0..20).collect();
+            let expect = count_job(&rt, &data);
+            let script: Vec<Vec<i64>> = vec![
+                vec![],
+                data[0..5].to_vec(),
+                vec![],
+                vec![],
+                data[5..13].to_vec(),
+                vec![],
+                data[13..20].to_vec(),
+                vec![],
+            ];
+            let mut chunks = script.into_iter();
+            let src = ChunkedSource::new(move || chunks.next());
+            assert_eq!(count_job(&rt, src), expect);
+        }
+
+        #[test]
+        fn empty_chunks_are_skipped_at_the_feed_level() {
+            let mut served = 0u32;
+            let mut src = ChunkedSource::new(move || {
+                served += 1;
+                match served {
+                    1 | 3 => Some(Vec::new()),
+                    2 => Some(vec![1i64, 2]),
+                    4 => Some(vec![3]),
+                    _ => None,
+                }
+            });
+            let Feed::Stream(mut next) = src.feed() else {
+                panic!("chunked source must stream");
+            };
+            // Pulls only ever observe non-empty chunks or the end.
+            assert_eq!(next(), Some(vec![1, 2]));
+            assert_eq!(next(), Some(vec![3]));
+            assert_eq!(next(), None);
         }
 
         #[test]

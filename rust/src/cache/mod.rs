@@ -80,6 +80,14 @@ pub struct CacheStats {
     pub type_conflicts: u64,
     /// Entries evicted under pressure (cumulative).
     pub evictions: u64,
+    /// Append-delta merges: a cut point found a ready entry whose
+    /// append-aware source (see
+    /// [`InputSource::append_len`](crate::api::InputSource::append_len))
+    /// had grown, recomputed only the appended tail, and merged it into
+    /// the entry — a prefix hit *plus* a delta, never a full recompute.
+    pub delta_merges: u64,
+    /// Elements appended into existing entries via delta merges.
+    pub delta_items: u64,
     /// Bytes currently cached (live `cache.entry` cohort bytes).
     pub bytes_cached: u64,
     /// Ready entries currently stored.
@@ -129,9 +137,14 @@ struct Entry {
     recompute_secs: f64,
     /// LRU clock value of the last read/insert.
     last_used: u64,
-    /// The simulated-heap cohort holding this entry's bytes live
-    /// (released on eviction/removal).
-    cohort: Option<(Arc<SimHeap>, CohortId)>,
+    /// Source items this entry's value covers, when the producing cut's
+    /// source was append-aware — the high-water mark delta merges compare
+    /// against. `None` for fixed sources (no delta maintenance).
+    seen: Option<u64>,
+    /// The simulated-heap cohorts holding this entry's bytes live (the
+    /// original insert plus one per delta merge; all released on
+    /// eviction/removal).
+    cohorts: Vec<(Arc<SimHeap>, CohortId)>,
 }
 
 struct CacheInner {
@@ -148,8 +161,15 @@ struct CacheInner {
 /// Outcome of [`MaterializationCache::begin`].
 pub(crate) enum Begin<'c> {
     /// A ready entry was found (`waited` → only after blocking on another
-    /// plan's in-flight computation).
-    Ready { value: Stored, waited: bool },
+    /// plan's in-flight computation). `seen` is the entry's append
+    /// high-water mark, when its source was append-aware — the reader
+    /// compares it against the source's current length to decide whether
+    /// a delta merge is due.
+    Ready {
+        value: Stored,
+        waited: bool,
+        seen: Option<u64>,
+    },
     /// This caller claimed the fingerprint: compute the prefix, then
     /// [`MaterializationCache::complete`] the ticket (dropping it without
     /// completing — e.g. on unwind — aborts the claim and wakes waiters).
@@ -256,8 +276,9 @@ impl MaterializationCache {
             let ready = match inner.entries.get(&fp) {
                 Some(Entry {
                     state: EntryState::Ready(v),
+                    seen,
                     ..
-                }) => Some(Arc::clone(v)),
+                }) => Some((Arc::clone(v), *seen)),
                 Some(Entry {
                     state: EntryState::InFlight,
                     ..
@@ -269,13 +290,17 @@ impl MaterializationCache {
                 None => None,
             };
             return match ready {
-                Some(value) => {
+                Some((value, seen)) => {
                     inner.tick += 1;
                     let tick = inner.tick;
                     if let Some(e) = inner.entries.get_mut(&fp) {
                         e.last_used = tick;
                     }
-                    Begin::Ready { value, waited }
+                    Begin::Ready {
+                        value,
+                        waited,
+                        seen,
+                    }
                 }
                 None => {
                     inner.entries.insert(
@@ -285,7 +310,8 @@ impl MaterializationCache {
                             bytes: 0,
                             recompute_secs: 0.0,
                             last_used: 0,
-                            cohort: None,
+                            seen: None,
+                            cohorts: Vec::new(),
                         },
                     );
                     inner.stats.misses += 1;
@@ -319,8 +345,10 @@ impl MaterializationCache {
     /// Publish a claimed entry: charge its bytes to a fresh scoped cohort
     /// on the producing job's heap (cached bytes are live simulated
     /// heap), store the value, run pressure-aware eviction, and wake any
-    /// plans waiting on the fingerprint. Returns the number of entries
-    /// evicted by this insert.
+    /// plans waiting on the fingerprint. `seen` is the append high-water
+    /// mark for append-aware sources (`None` for fixed sources). Returns
+    /// the number of entries evicted by this insert.
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn complete(
         &self,
         mut ticket: Ticket<'_>,
@@ -328,6 +356,7 @@ impl MaterializationCache {
         bytes: u64,
         items: u64,
         recompute_secs: f64,
+        seen: Option<u64>,
         heap: &Arc<SimHeap>,
         cfg: &CacheConfig,
     ) -> u64 {
@@ -352,13 +381,72 @@ impl MaterializationCache {
         entry.bytes = bytes;
         entry.recompute_secs = recompute_secs;
         entry.last_used = tick;
-        entry.cohort = Some((Arc::clone(heap), cohort));
+        entry.seen = seen;
+        entry.cohorts = vec![(Arc::clone(heap), cohort)];
         inner.stats.bytes_cached += bytes;
         inner.stats.entries += 1;
         let evicted = evict_under_pressure(&mut inner, fp, heap, cfg);
         drop(inner);
         self.ready.notify_all();
         evicted
+    }
+
+    /// Merge an appended delta into a ready entry: the reading cut found
+    /// the entry at append mark `from`, recomputed only the tail, and
+    /// offers the extended value covering `new_seen` items. The install
+    /// is compare-and-swap on the mark — if another plan already merged
+    /// (or the entry was evicted/replaced) the offer is withdrawn and the
+    /// delta's heap charge released; the caller's own merged value is
+    /// still correct to use either way (same source, same prefix).
+    /// Returns `(merged, evictions)`.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn merge_delta(
+        &self,
+        fp: Fingerprint,
+        from: u64,
+        value: Stored,
+        bytes_delta: u64,
+        items_delta: u64,
+        new_seen: u64,
+        heap: &Arc<SimHeap>,
+        cfg: &CacheConfig,
+    ) -> (bool, u64) {
+        // Charge the delta before taking the cache lock (the heap lock is
+        // always taken before the cache's, as in `complete`).
+        let cohort = heap.scoped_cohort("cache.entry");
+        let mut alloc = heap.thread_alloc();
+        alloc.alloc_n(cohort, bytes_delta, items_delta.max(1));
+        alloc.flush();
+        drop(alloc);
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let merged = match inner.entries.get_mut(&fp) {
+            Some(e) if matches!(e.state, EntryState::Ready(_)) && e.seen == Some(from) => {
+                e.state = EntryState::Ready(value);
+                e.bytes += bytes_delta;
+                e.seen = Some(new_seen);
+                e.last_used = tick;
+                e.cohorts.push((Arc::clone(heap), cohort));
+                true
+            }
+            _ => false,
+        };
+        let evicted = if merged {
+            inner.stats.bytes_cached += bytes_delta;
+            inner.stats.delta_merges += 1;
+            inner.stats.delta_items += items_delta;
+            evict_under_pressure(&mut inner, fp, heap, cfg)
+        } else {
+            0
+        };
+        drop(inner);
+        if !merged {
+            // CAS failed: the charged delta bytes have no owning entry.
+            heap.release_cohort(cohort);
+        }
+        (merged, evicted)
     }
 
     /// Drop the entry for `fp` if it is ready, releasing its heap cohort
@@ -397,20 +485,20 @@ impl MaterializationCache {
     }
 }
 
-/// Remove a ready entry and release its simulated-heap cohort.
+/// Remove a ready entry and release its simulated-heap cohorts.
 fn release_entry(inner: &mut CacheInner, fp: Fingerprint) {
     if let Some(e) = inner.entries.remove(&fp) {
         inner.stats.bytes_cached = inner.stats.bytes_cached.saturating_sub(e.bytes);
         inner.stats.entries = inner.stats.entries.saturating_sub(1);
-        if let Some((heap, cohort)) = e.cohort {
+        for (heap, cohort) in e.cohorts {
             heap.release_cohort(cohort);
         }
     }
 }
 
-/// Whether an entry's bytes are charged to `heap`.
+/// Whether any of an entry's bytes are charged to `heap`.
 fn entry_on_heap(e: &Entry, heap: &Arc<SimHeap>) -> bool {
-    e.cohort.as_ref().is_some_and(|(h, _)| Arc::ptr_eq(h, heap))
+    e.cohorts.iter().any(|(h, _)| Arc::ptr_eq(h, heap))
 }
 
 /// Pick the next eviction victim: least-recently-used first,
@@ -523,9 +611,9 @@ mod tests {
         let heap = SimHeap::disabled();
         let fp = Fingerprint(42);
         let ticket = claim(&cache, fp);
-        cache.complete(ticket, store(vec![vec![1, 2], vec![3]]), 96, 3, 0.01, &heap, &cfg());
+        cache.complete(ticket, store(vec![vec![1, 2], vec![3]]), 96, 3, 0.01, None, &heap, &cfg());
         match cache.begin(fp) {
-            Begin::Ready { value, waited } => {
+            Begin::Ready { value, waited, .. } => {
                 assert!(!waited);
                 // The caller confirms the read after its typed downcast
                 // succeeds (see `CacheStage::execute`).
@@ -547,7 +635,7 @@ mod tests {
         drop(claim(&cache, fp)); // claimant "panicked"
         // The fingerprint is claimable again, not deadlocked in-flight.
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, &SimHeap::disabled(), &cfg());
+        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, None, &SimHeap::disabled(), &cfg());
         assert!(cache.contains(fp));
     }
 
@@ -560,7 +648,7 @@ mod tests {
         let waiter = {
             let cache = Arc::clone(&cache);
             std::thread::spawn(move || match cache.begin(fp) {
-                Begin::Ready { value, waited } => {
+                Begin::Ready { value, waited, .. } => {
                     cache.record_read(waited);
                     let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
                     (shards.len(), waited)
@@ -570,7 +658,7 @@ mod tests {
         };
         // Give the waiter time to block on the in-flight entry.
         std::thread::sleep(std::time::Duration::from_millis(50));
-        cache.complete(ticket, store(vec![vec![5], vec![6]]), 32, 2, 0.0, &heap, &cfg());
+        cache.complete(ticket, store(vec![vec![5], vec![6]]), 32, 2, 0.0, None, &heap, &cfg());
         let (shards, waited) = waiter.join().unwrap();
         assert_eq!(shards, 2);
         assert!(waited);
@@ -583,7 +671,7 @@ mod tests {
         let cache = MaterializationCache::new();
         let fp = Fingerprint(77);
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, &SimHeap::disabled(), &cfg());
+        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, None, &SimHeap::disabled(), &cfg());
         match cache.begin(fp) {
             Begin::Ready { value, .. } => {
                 assert!(value.downcast::<Vec<Vec<String>>>().is_err());
@@ -605,9 +693,9 @@ mod tests {
         };
         let (a, b, c) = (Fingerprint(1), Fingerprint(2), Fingerprint(3));
         let t = claim(&cache, a);
-        cache.complete(t, store(vec![vec![1]]), 60, 1, 0.5, &heap, &tight);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 0.5, None, &heap, &tight);
         let t = claim(&cache, b);
-        cache.complete(t, store(vec![vec![2]]), 60, 1, 0.5, &heap, &tight);
+        cache.complete(t, store(vec![vec![2]]), 60, 1, 0.5, None, &heap, &tight);
         // Inserting B overflowed the cap: A (older) was evicted.
         assert!(!cache.contains(a));
         assert!(cache.contains(b));
@@ -616,7 +704,7 @@ mod tests {
         // it doesn't, and B is the only candidate.
         let _ = cache.begin(b);
         let t = claim(&cache, c);
-        let evicted = cache.complete(t, store(vec![vec![3]]), 60, 1, 0.5, &heap, &tight);
+        let evicted = cache.complete(t, store(vec![vec![3]]), 60, 1, 0.5, None, &heap, &tight);
         assert_eq!(evicted, 1);
         assert!(!cache.contains(b));
         assert!(cache.contains(c));
@@ -647,7 +735,7 @@ mod tests {
         for i in 0..4 {
             let fp = Fingerprint(100 + i);
             let t = claim(&cache, fp);
-            cache.complete(t, store(vec![vec![i as i64]]), 1000, 1, 0.1, &heap, &low);
+            cache.complete(t, store(vec![vec![i as i64]]), 1000, 1, 0.1, None, &heap, &low);
         }
         let s = cache.stats();
         assert!(s.evictions > 0, "pressure must evict: {s:?}");
@@ -660,15 +748,48 @@ mod tests {
         let cache = MaterializationCache::new();
         let fp = Fingerprint(55);
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![1]]), 4096, 1, 0.0, &heap, &cfg());
+        cache.complete(t, store(vec![vec![1]]), 4096, 1, 0.0, None, &heap, &cfg());
         assert_eq!(cache.stats().bytes_cached, 4096);
         assert!(cache.remove(fp));
         assert!(!cache.remove(fp), "second removal finds nothing");
         assert_eq!(cache.stats().bytes_cached, 0);
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![2]]), 64, 1, 0.0, &heap, &cfg());
+        cache.complete(t, store(vec![vec![2]]), 64, 1, 0.0, None, &heap, &cfg());
         cache.clear();
         assert_eq!(cache.stats().entries, 0);
         assert!(!cache.contains(fp));
+    }
+
+    #[test]
+    fn delta_merge_extends_entry_and_cas_guards_races() {
+        let cache = MaterializationCache::new();
+        let heap = SimHeap::disabled();
+        let fp = Fingerprint(91);
+        let t = claim(&cache, fp);
+        cache.complete(t, store(vec![vec![1, 2]]), 32, 2, 0.0, Some(2), &heap, &cfg());
+        let seen = match cache.begin(fp) {
+            Begin::Ready { seen, waited, .. } => {
+                cache.record_read(waited);
+                seen
+            }
+            Begin::Claimed(_) => panic!("entry must be ready"),
+        };
+        assert_eq!(seen, Some(2), "append mark surfaces to readers");
+        let (merged, _) =
+            cache.merge_delta(fp, 2, store(vec![vec![1, 2], vec![3]]), 16, 1, 3, &heap, &cfg());
+        assert!(merged);
+        // A straggler still holding the pre-merge mark loses the CAS.
+        let (merged, _) = cache.merge_delta(fp, 2, store(vec![vec![9]]), 16, 1, 3, &heap, &cfg());
+        assert!(!merged, "stale mark must not clobber the merged entry");
+        let s = cache.stats();
+        assert_eq!((s.delta_merges, s.delta_items, s.bytes_cached), (1, 1, 48));
+        match cache.begin(fp) {
+            Begin::Ready { value, seen, .. } => {
+                assert_eq!(seen, Some(3), "mark advances with the merge");
+                let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
+                assert_eq!(*shards, vec![vec![1, 2], vec![3]]);
+            }
+            Begin::Claimed(_) => panic!("merged entry must stay ready"),
+        }
     }
 }

@@ -110,6 +110,49 @@ pub struct FlowMetrics {
     pub cache: Option<CacheActivity>,
 }
 
+/// Standing-query measurements — the streaming counterpart of
+/// [`FlowMetrics`], reported as
+/// [`PlanReport::stream`](crate::api::plan::PlanReport) by
+/// [`crate::stream`] queries and windowed batch collects. Counters are
+/// cumulative over the query's lifetime.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StreamMetrics {
+    /// Chunks the source delivered.
+    pub chunks_ingested: u64,
+    /// Elements across all ingested chunks.
+    pub elements_ingested: u64,
+    /// Windows fired (closed and emitted).
+    pub windows_fired: u64,
+    /// Panes retired after their last consuming window fired (each
+    /// retirement frees the pane's buffered bytes in the memsim).
+    pub panes_fired: u64,
+    /// Pane holders absorbed into window accumulators via
+    /// [`Aggregator::merge_holders`](crate::api::keyed::Aggregator) — the
+    /// mergeable path's unit of work: each pane's per-key holder is
+    /// folded exactly once per consuming window, never rebuilt from raw
+    /// values.
+    pub holders_merged: u64,
+    /// Holders rebuilt from scratch at window close on the buffered
+    /// fallback path (non-mergeable aggregator or optimizer off).
+    pub holders_recomputed: u64,
+    /// Raw values re-folded at window close on the buffered fallback
+    /// path. Zero on the mergeable path — the headline saving.
+    pub elements_recomputed: u64,
+    /// Elements whose pane had already been retired when they arrived
+    /// (dropped; their windows fired without them).
+    pub late_elements: u64,
+    /// Event-time distance between the watermark (max timestamp seen)
+    /// and the end of the last fired window — how far emission trails
+    /// ingestion.
+    pub watermark_lag: u64,
+    /// Whether the holder-merge path was granted (see `fallback_reason`
+    /// otherwise).
+    pub merge_mode: bool,
+    /// Why the merge path was refused, when it was (`"optimizer off"`,
+    /// a missing declared marker, or a non-mergeable holder).
+    pub fallback_reason: Option<String>,
+}
+
 /// The memsim cohorts a job charges, released on drop — on success *and*
 /// unwind: a panicking tenant must not leak its scoped cohort slots (or
 /// their live bytes) on a shared session heap, or every surviving

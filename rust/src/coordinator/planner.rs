@@ -385,6 +385,7 @@ impl<'rt> PlanExec<'rt> {
             streamed_handoffs: self.plan.streamed_handoffs + self.absorbed_streamed,
             materialized_pairs: self.materialized,
             cache: self.cache_total,
+            stream: None,
         }
     }
 }

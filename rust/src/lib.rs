@@ -35,6 +35,12 @@
 //!   dependency graph and sliced into `initialize`/`combine`/`finalize`.
 //! * [`memsim`] — a generational managed-heap simulator standing in for the
 //!   JVM GC, reproducing the allocation-lifetime mechanism behind Figs. 8–10.
+//! * [`stream`] — continuous dataflow over unbounded sources: standing
+//!   queries ([`api::Runtime::stream`]) with event-time tumbling/sliding
+//!   windows whose panes reuse the declared aggregation holders (merged
+//!   across overlapping windows instead of recomputed), plus incremental
+//!   delta maintenance of cached [`api::plan::Dataset::cache`] prefixes
+//!   over append-only sources ([`stream::AppendLog`]).
 //! * [`baselines`] — Phoenix- and Phoenix++-like comparator runtimes.
 //! * [`benchmarks`] — the seven-benchmark suite (Table 2) with scaled
 //!   synthetic data generators.
@@ -55,6 +61,7 @@ pub mod harness;
 pub mod memsim;
 pub mod optimizer;
 pub mod runtime;
+pub mod stream;
 pub mod testkit;
 pub mod util;
 
@@ -64,3 +71,7 @@ pub use api::{
 };
 pub use cache::{CacheActivity, CacheStats, MaterializationCache};
 pub use optimizer::agent::OptimizerAgent;
+pub use stream::{
+    AppendLog, KeyedStream, StandingQuery, StreamDataset, StreamHandle, StreamOutput,
+    StreamSource, WindowResult, WindowSpec, Windowed, WindowedStream,
+};

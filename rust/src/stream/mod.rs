@@ -1,0 +1,42 @@
+//! Continuous streaming dataflow: unbounded sources, standing queries,
+//! and event-time windowed keyed aggregation.
+//!
+//! The batch surface ([`crate::api::plan::Dataset`]) drains its source
+//! once at `collect()`. This module keeps the same logical plan **live**
+//! over a feed that never ends: [`crate::api::Runtime::stream`] opens a
+//! [`StreamDataset`] over a [`StreamSource`], element-wise stages record
+//! exactly as on the batch surface, and a windowed keyed aggregation
+//! turns the plan into a [`StandingQuery`] that re-fires per arriving
+//! chunk instead of returning once.
+//!
+//! The streaming optimization is the paper's combining flow extended
+//! across time. Each event-time **pane** (one window slide's worth of
+//! elements) folds values into per-key holders at ingest — the same
+//! `initialize`/`combine` holder triple the declared
+//! [`Aggregator`](crate::api::keyed::Aggregator) algebra uses for batch
+//! reduces. When a window fires, its panes' holders are **merged**
+//! ([`Aggregator::merge_holders`](crate::api::keyed::Aggregator::merge_holders))
+//! rather than its raw values re-folded, so sliding windows that share
+//! panes never recompute a value twice. The merge path is gated exactly
+//! like the batch combine path: the session agent must accept the
+//! aggregator's declared associativity + commutativity, the holder must
+//! declare [`MERGEABLE`](crate::api::keyed::Aggregator::MERGEABLE), and
+//! the optimizer must be on — otherwise panes buffer raw pairs and every
+//! window close re-folds them from scratch (correct, measured, slower;
+//! see [`StreamMetrics`](crate::coordinator::pipeline::StreamMetrics)).
+//!
+//! Batch plans get the same window algebra through
+//! [`KeyedDataset::window_tumbling`](crate::api::keyed::KeyedDataset::window_tumbling)
+//! (a [`Windowed`] view that collects once and fires all windows), and
+//! append-only batch sources get **incremental cache maintenance**: a
+//! [`Dataset::cache`](crate::api::plan::Dataset::cache) cut over an
+//! [`AppendLog`] recomputes only the appended tail on re-collect and
+//! merges it into the cached entry (see [`crate::cache`]).
+
+pub mod query;
+pub mod source;
+pub mod window;
+
+pub use query::{KeyedStream, StandingQuery, StreamDataset, WindowedStream};
+pub use source::{AppendLog, StreamHandle, StreamSource};
+pub use window::{StreamOutput, WindowResult, WindowSpec, Windowed};

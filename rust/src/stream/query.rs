@@ -1,0 +1,473 @@
+//! Standing queries: the lazy plan surface over an unbounded source,
+//! and the per-chunk execution loop behind it.
+//!
+//! A [`StreamDataset`] records element-wise stages exactly like the
+//! batch [`Dataset`](crate::api::plan::Dataset); keying and windowing it
+//! builds a [`StandingQuery`]. Lowering happens **once** at build time —
+//! the session agent's whole-plan pass fuses the element-wise chain into
+//! the per-chunk extraction closure, so each arriving chunk pays one
+//! fused pass plus pane folding, never a per-chunk re-plan.
+
+use std::hash::Hash;
+use std::sync::{Arc, Mutex};
+
+use crate::api::config::{JobConfig, OptimizeMode};
+use crate::api::keyed::{Aggregator, Count, Merge};
+use crate::api::plan::{Chain, PlanReport, StageInfo, StageKind};
+use crate::api::runtime::Runtime;
+use crate::api::traits::HeapSized;
+use crate::cache::CacheActivity;
+use crate::coordinator::pipeline::StreamMetrics;
+use crate::coordinator::planner;
+use crate::coordinator::splitter::split_indices;
+use crate::stream::source::StreamSource;
+use crate::stream::window::{
+    merge_gate, StreamOutput, TsFn, WindowEngine, WindowResult, WindowSpec,
+};
+
+/// Below this chunk size the per-chunk extraction runs inline — the
+/// pool handoff costs more than the fused pass saves.
+const PARALLEL_CHUNK_MIN: usize = 1024;
+
+/// A boxed fused extractor: barrier element in, stamped `(ts, key,
+/// value)` pairs out.
+type ExtractFn<'rt, B, K, V> = Box<dyn Fn(&B, &mut dyn FnMut(u64, K, V)) + Send + Sync + 'rt>;
+
+/// A lazy element-wise plan over an unbounded [`StreamSource`] — the
+/// streaming twin of [`Dataset`](crate::api::plan::Dataset). Recording
+/// stages executes nothing; keying and windowing it produces the
+/// [`StandingQuery`] that runs.
+pub struct StreamDataset<'rt, T, B = T> {
+    rt: &'rt Runtime,
+    source: StreamSource<B>,
+    chain: Chain<'rt, B, T>,
+    stages: Vec<StageInfo>,
+    config: JobConfig,
+}
+
+impl<'rt, T: 'rt> StreamDataset<'rt, T> {
+    pub(crate) fn over(
+        rt: &'rt Runtime,
+        source: StreamSource<T>,
+        config: JobConfig,
+    ) -> StreamDataset<'rt, T> {
+        let optimize = config.optimize;
+        StreamDataset {
+            rt,
+            source,
+            chain: Chain::direct(),
+            stages: vec![StageInfo {
+                kind: StageKind::Source,
+                name: "stream".to_string(),
+                optimize,
+                token: None,
+            }],
+            config,
+        }
+    }
+}
+
+impl<'rt, T: 'rt, B: 'rt> StreamDataset<'rt, T, B> {
+    /// Logical stages recorded so far.
+    pub fn stages(&self) -> &[StageInfo] {
+        &self.stages
+    }
+
+    /// Replace the configuration for subsequently recorded stages.
+    pub fn with_config(mut self, config: JobConfig) -> Self {
+        self.config = config;
+        self
+    }
+
+    pub fn optimize(mut self, mode: OptimizeMode) -> Self {
+        self.config = self.config.with_optimize(mode);
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.config = self.config.with_threads(n);
+        self
+    }
+
+    fn push_stage(&mut self, kind: StageKind, name: &str) {
+        self.stages.push(StageInfo {
+            kind,
+            name: name.to_string(),
+            optimize: self.config.optimize,
+            token: None,
+        });
+    }
+
+    /// Record a one-to-one element transform.
+    pub fn map<U: 'rt>(
+        self,
+        f: impl Fn(&T) -> U + Send + Sync + 'rt,
+    ) -> StreamDataset<'rt, U, B> {
+        self.map_named("map", f)
+    }
+
+    fn map_named<U: 'rt>(
+        mut self,
+        name: &str,
+        f: impl Fn(&T) -> U + Send + Sync + 'rt,
+    ) -> StreamDataset<'rt, U, B> {
+        self.push_stage(StageKind::Map, name);
+        let chain = match self.chain {
+            Chain::Direct { by_ref, .. } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    let u = f(by_ref(b));
+                    sink(&u);
+                }),
+            },
+            Chain::Ops { op } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    op(b, &mut |t: &T| {
+                        let u = f(t);
+                        sink(&u);
+                    })
+                }),
+            },
+        };
+        StreamDataset {
+            rt: self.rt,
+            source: self.source,
+            chain,
+            stages: self.stages,
+            config: self.config,
+        }
+    }
+
+    /// Record an element predicate.
+    pub fn filter(
+        mut self,
+        p: impl Fn(&T) -> bool + Send + Sync + 'rt,
+    ) -> StreamDataset<'rt, T, B> {
+        self.push_stage(StageKind::Filter, "filter");
+        let chain = match self.chain {
+            Chain::Direct { by_ref, .. } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
+                    let t = by_ref(b);
+                    if p(t) {
+                        sink(t);
+                    }
+                }),
+            },
+            Chain::Ops { op } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
+                    op(b, &mut |t: &T| {
+                        if p(t) {
+                            sink(t);
+                        }
+                    })
+                }),
+            },
+        };
+        StreamDataset {
+            rt: self.rt,
+            source: self.source,
+            chain,
+            stages: self.stages,
+            config: self.config,
+        }
+    }
+
+    /// Record a one-to-many element transform.
+    pub fn flat_map<U: 'rt>(
+        mut self,
+        f: impl Fn(&T, &mut dyn FnMut(U)) + Send + Sync + 'rt,
+    ) -> StreamDataset<'rt, U, B> {
+        self.push_stage(StageKind::FlatMap, "flat_map");
+        let chain = match self.chain {
+            Chain::Direct { by_ref, .. } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    f(by_ref(b), &mut |u: U| sink(&u))
+                }),
+            },
+            Chain::Ops { op } => Chain::Ops {
+                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
+                    op(b, &mut |t: &T| f(t, &mut |u: U| sink(&u)))
+                }),
+            },
+        };
+        StreamDataset {
+            rt: self.rt,
+            source: self.source,
+            chain,
+            stages: self.stages,
+            config: self.config,
+        }
+    }
+
+    /// Pair every element with a key — the keyed streaming view.
+    pub fn key_by<K: 'rt>(
+        self,
+        f: impl Fn(&T) -> K + Send + Sync + 'rt,
+    ) -> KeyedStream<'rt, K, T, B>
+    where
+        T: Clone,
+    {
+        KeyedStream {
+            inner: self.map_named("key_by", move |t| (f(t), t.clone())),
+        }
+    }
+}
+
+impl<'rt, K: 'rt, V: 'rt, B: 'rt> StreamDataset<'rt, (K, V), B> {
+    /// Treat a stream of pairs as keyed without re-mapping.
+    pub fn keyed(self) -> KeyedStream<'rt, K, V, B> {
+        KeyedStream { inner: self }
+    }
+}
+
+/// A keyed unbounded stream — pairs `(K, V)` awaiting a window
+/// assignment. The streaming twin of
+/// [`KeyedDataset`](crate::api::keyed::KeyedDataset); aggregation
+/// requires a window, because an unbounded feed has no "end" to
+/// aggregate at.
+pub struct KeyedStream<'rt, K, V, B = (K, V)> {
+    inner: StreamDataset<'rt, (K, V), B>,
+}
+
+impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedStream<'rt, K, V, B> {
+    /// Assign pairs to tumbling (non-overlapping) event-time windows of
+    /// `size` ticks, timestamps extracted by `ts`.
+    pub fn window_tumbling(
+        self,
+        size: u64,
+        ts: impl Fn(&V) -> u64 + Send + Sync + 'rt,
+    ) -> WindowedStream<'rt, K, V, B> {
+        WindowedStream {
+            inner: self.inner,
+            spec: WindowSpec::tumbling(size),
+            ts: Box::new(ts),
+        }
+    }
+
+    /// Assign pairs to sliding windows of `size` ticks advancing every
+    /// `slide` ticks (`size % slide == 0`).
+    pub fn window_sliding(
+        self,
+        size: u64,
+        slide: u64,
+        ts: impl Fn(&V) -> u64 + Send + Sync + 'rt,
+    ) -> WindowedStream<'rt, K, V, B> {
+        WindowedStream {
+            inner: self.inner,
+            spec: WindowSpec::sliding(size, slide),
+            ts: Box::new(ts),
+        }
+    }
+}
+
+/// A keyed stream with a window assignment — one aggregation call away
+/// from a running [`StandingQuery`]. The batch twin is
+/// [`Windowed`](crate::stream::Windowed).
+pub struct WindowedStream<'rt, K, V, B = (K, V)> {
+    inner: StreamDataset<'rt, (K, V), B>,
+    spec: WindowSpec,
+    ts: TsFn<'rt, V>,
+}
+
+impl<'rt, K: 'rt, V: 'rt, B: 'rt> WindowedStream<'rt, K, V, B> {
+    /// Turn the recorded plan into a standing query aggregating per
+    /// `(window, key)` with a declared [`Aggregator`]. The plan lowers
+    /// once, here; the merge-vs-recompute gate mirrors the batch combine
+    /// gate (see [`crate::stream`]).
+    pub fn aggregate_by_key<H, O, A>(self, agg: A) -> StandingQuery<'rt, B, K, V, H, O, A>
+    where
+        B: Send + Sync,
+        K: Hash + Eq + Clone + Send + HeapSized,
+        V: Clone + Send + HeapSized,
+        H: Clone,
+        A: Aggregator<V, H, O> + 'rt,
+    {
+        let WindowedStream { inner, spec, ts } = self;
+        let StreamDataset {
+            rt,
+            source,
+            chain,
+            mut stages,
+            config,
+        } = inner;
+        let agg = Arc::new(agg);
+        stages.push(StageInfo {
+            kind: StageKind::KeyedAggregate,
+            name: agg.name().to_string(),
+            optimize: config.optimize,
+            token: None,
+        });
+        // The single whole-plan pass: the agent sees the plan shape at
+        // build time, not once per chunk.
+        let plan = planner::lower(&stages, rt.agent(), rt.cache());
+        let (merge, fallback) = merge_gate::<V, H, O, A>(&config, rt.agent(), agg.name());
+        let engine =
+            WindowEngine::new(spec, Arc::clone(&agg), merge, fallback, Arc::clone(&config.heap));
+        let extract: ExtractFn<'rt, B, K, V> = match chain {
+            Chain::Direct { by_ref, .. } => {
+                Box::new(move |b: &B, sink: &mut dyn FnMut(u64, K, V)| {
+                    let pair = by_ref(b);
+                    sink(ts(&pair.1), pair.0.clone(), pair.1.clone());
+                })
+            }
+            Chain::Ops { op } => Box::new(move |b: &B, sink: &mut dyn FnMut(u64, K, V)| {
+                op(b, &mut |pair: &(K, V)| {
+                    sink(ts(&pair.1), pair.0.clone(), pair.1.clone());
+                });
+            }),
+        };
+        StandingQuery {
+            rt,
+            source,
+            extract,
+            engine,
+            config,
+            fused_ops: plan.fused_ops,
+            streamed_handoffs: plan.streamed_handoffs,
+        }
+    }
+
+    /// Count pairs per `(window, key)` (mergeable: pane counts add).
+    pub fn count_by_key(self) -> StandingQuery<'rt, B, K, V, i64, i64, Count>
+    where
+        B: Send + Sync,
+        K: Hash + Eq + Clone + Send + HeapSized,
+        V: Clone + Send + Sync + HeapSized,
+    {
+        self.aggregate_by_key(Count)
+    }
+
+    /// Reduce values per `(window, key)` with a binary merge function
+    /// declared associative + commutative (mergeable holders).
+    pub fn reduce_by_key<F>(
+        self,
+        merge: F,
+    ) -> StandingQuery<'rt, B, K, V, Option<V>, V, Merge<F>>
+    where
+        B: Send + Sync,
+        K: Hash + Eq + Clone + Send + HeapSized,
+        V: Clone + Send + Sync + HeapSized,
+        F: Fn(V, V) -> V + Send + Sync + 'rt,
+    {
+        self.aggregate_by_key(Merge::new(merge))
+    }
+}
+
+/// A live windowed aggregation over an unbounded feed: pull a chunk,
+/// run the fused extraction (in parallel on the session pool for large
+/// chunks), fold into panes, fire every window the watermark closed.
+///
+/// Drive it with [`StandingQuery::step`] for chunk-at-a-time results,
+/// or [`StandingQuery::run_to_close`] to drain the feed. Counters
+/// accumulate in [`StandingQuery::metrics`] and land in the final
+/// [`StreamOutput::report`].
+pub struct StandingQuery<'rt, B, K, V, H, O, A> {
+    rt: &'rt Runtime,
+    source: StreamSource<B>,
+    extract: ExtractFn<'rt, B, K, V>,
+    engine: WindowEngine<K, V, H, O, A>,
+    config: JobConfig,
+    fused_ops: usize,
+    streamed_handoffs: usize,
+}
+
+impl<'rt, B, K, V, H, O, A> StandingQuery<'rt, B, K, V, H, O, A>
+where
+    B: Send + Sync,
+    K: Hash + Eq + Clone + Send + HeapSized,
+    V: Clone + Send + HeapSized,
+    H: Clone,
+    A: Aggregator<V, H, O>,
+{
+    /// Block for the next chunk, ingest it, and return the windows it
+    /// closed (often empty — windows fire only when the watermark passes
+    /// them). `None` once the feed is closed and drained; call
+    /// [`StandingQuery::finish`] then for the force-fired tail.
+    pub fn step(&mut self) -> Option<Vec<WindowResult<K, O>>> {
+        let chunk = self.source.pull()?;
+        Some(self.ingest(&chunk))
+    }
+
+    /// The accumulated streaming counters so far.
+    pub fn metrics(&self) -> &StreamMetrics {
+        self.engine.metrics()
+    }
+
+    /// Force-fire every window still holding data (end-of-stream) and
+    /// return the output. Windows already returned by
+    /// [`StandingQuery::step`] are **not** repeated — the output holds
+    /// only the tail.
+    pub fn finish(mut self) -> StreamOutput<K, O> {
+        let tail = self.engine.finish();
+        self.into_output(tail)
+    }
+
+    /// Drain the feed to close, then force-fire: every window of the
+    /// whole stream, in order. Blocks until the producer closes the
+    /// handle.
+    pub fn run_to_close(mut self) -> StreamOutput<K, O> {
+        let mut windows = Vec::new();
+        while let Some(chunk) = self.source.pull() {
+            windows.extend(self.ingest(&chunk));
+        }
+        windows.extend(self.engine.finish());
+        self.into_output(windows)
+    }
+
+    fn ingest(&mut self, chunk: &[B]) -> Vec<WindowResult<K, O>> {
+        let stamped = self.extract_chunk(chunk);
+        self.engine.ingest_chunk(stamped)
+    }
+
+    /// Run the fused chain + timestamp stamping over one chunk. Large
+    /// chunks split into contiguous ranges across the session pool;
+    /// range-order concatenation preserves arrival order.
+    fn extract_chunk(&self, chunk: &[B]) -> Vec<(u64, K, V)> {
+        let threads = self.config.threads.max(1);
+        if threads <= 1 || chunk.len() < PARALLEL_CHUNK_MIN {
+            let mut out = Vec::with_capacity(chunk.len());
+            for element in chunk {
+                (self.extract)(element, &mut |ts, key, value| out.push((ts, key, value)));
+            }
+            return out;
+        }
+        let ranges = split_indices(chunk.len(), threads);
+        let slots: Vec<Mutex<Vec<(u64, K, V)>>> =
+            (0..ranges.len()).map(|_| Mutex::new(Vec::new())).collect();
+        let extract = &self.extract;
+        let tasks: Vec<_> = ranges
+            .into_iter()
+            .enumerate()
+            .map(|(slot_idx, range)| {
+                let slots = &slots;
+                move |_worker: usize| {
+                    let mut local = Vec::with_capacity(range.len());
+                    for element in &chunk[range] {
+                        extract(element, &mut |ts, key, value| local.push((ts, key, value)));
+                    }
+                    *slots[slot_idx].lock().unwrap() = local;
+                }
+            })
+            .collect();
+        self.rt.pool().batch().run(threads, tasks);
+        let mut out = Vec::with_capacity(chunk.len());
+        for slot in slots {
+            out.extend(slot.into_inner().unwrap());
+        }
+        out
+    }
+
+    fn into_output(self, windows: Vec<WindowResult<K, O>>) -> StreamOutput<K, O> {
+        let metrics = self.engine.metrics().clone();
+        StreamOutput {
+            windows,
+            report: PlanReport {
+                stage_metrics: Vec::new(),
+                fused_ops: self.fused_ops,
+                streamed_handoffs: self.streamed_handoffs,
+                materialized_pairs: 0,
+                cache: CacheActivity::default(),
+                stream: Some(metrics),
+            },
+        }
+    }
+}

@@ -1,0 +1,260 @@
+//! Stream inputs: the unbounded push/pull chunk queue behind
+//! [`StreamSource`], and the append-only [`AppendLog`] whose cached
+//! prefixes are maintained incrementally.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::api::source::{Feed, InputSource};
+use crate::util::hash::fxhash;
+
+struct QueueState<T> {
+    chunks: VecDeque<Vec<T>>,
+    closed: bool,
+}
+
+struct SharedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    ready: Condvar,
+}
+
+/// Blocking dequeue: the next non-empty chunk, or `None` once the queue
+/// is closed **and** drained. Empty chunks are skipped here, mirroring
+/// the [`ChunkedSource`](crate::api::ChunkedSource) feed contract — an
+/// empty push is a heartbeat, not end-of-stream.
+fn pull_chunk<T>(queue: &SharedQueue<T>) -> Option<Vec<T>> {
+    let mut state = queue.state.lock().unwrap();
+    loop {
+        match state.chunks.pop_front() {
+            Some(chunk) if chunk.is_empty() => continue,
+            Some(chunk) => return Some(chunk),
+            None if state.closed => return None,
+            None => state = queue.ready.wait(state).unwrap(),
+        }
+    }
+}
+
+/// The consuming end of an unbounded chunk feed — what
+/// [`Runtime::stream`](crate::api::Runtime::stream) opens a standing
+/// plan over.
+///
+/// Producers hold the paired [`StreamHandle`] and `push` chunks from any
+/// thread; the source blocks on pull until a chunk arrives or the handle
+/// closes. `StreamSource` also implements [`InputSource`], so it can
+/// feed a plain batch `collect()` — but a batch collect *blocks until
+/// the handle closes* (it drains the feed to completion). For
+/// chunk-at-a-time evaluation use a standing query instead.
+pub struct StreamSource<T> {
+    queue: Arc<SharedQueue<T>>,
+}
+
+/// The producing end of a [`StreamSource`]: `push` chunks, then `close`.
+/// Cloneable — any number of producer threads may share one feed.
+pub struct StreamHandle<T> {
+    queue: Arc<SharedQueue<T>>,
+}
+
+impl<T> Clone for StreamHandle<T> {
+    fn clone(&self) -> Self {
+        StreamHandle {
+            queue: Arc::clone(&self.queue),
+        }
+    }
+}
+
+impl<T> StreamSource<T> {
+    /// An open feed: the source blocks until the handle pushes or closes.
+    pub fn unbounded() -> (StreamSource<T>, StreamHandle<T>) {
+        let queue = Arc::new(SharedQueue {
+            state: Mutex::new(QueueState {
+                chunks: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+        });
+        let source = StreamSource {
+            queue: Arc::clone(&queue),
+        };
+        (source, StreamHandle { queue })
+    }
+
+    /// A pre-loaded, already-closed feed — replays `chunks` in order and
+    /// then reports end-of-stream. The deterministic-test twin of
+    /// [`StreamSource::unbounded`].
+    pub fn replay(chunks: Vec<Vec<T>>) -> StreamSource<T> {
+        StreamSource {
+            queue: Arc::new(SharedQueue {
+                state: Mutex::new(QueueState {
+                    chunks: chunks.into(),
+                    closed: true,
+                }),
+                ready: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Blocking pull of the next non-empty chunk (`None` = closed and
+    /// drained).
+    pub(crate) fn pull(&self) -> Option<Vec<T>> {
+        pull_chunk(&self.queue)
+    }
+}
+
+impl<T> StreamHandle<T> {
+    /// Enqueue one chunk. Pushes after [`StreamHandle::close`] are
+    /// dropped (the consumer may already have observed end-of-stream).
+    pub fn push(&self, chunk: Vec<T>) {
+        let mut state = self.queue.state.lock().unwrap();
+        if state.closed {
+            return;
+        }
+        state.chunks.push_back(chunk);
+        drop(state);
+        self.queue.ready.notify_all();
+    }
+
+    /// Mark end-of-stream: consumers drain what was pushed, then see
+    /// `None`. Idempotent.
+    pub fn close(&self) {
+        self.queue.state.lock().unwrap().closed = true;
+        self.queue.ready.notify_all();
+    }
+}
+
+impl<T: Send> InputSource<T> for StreamSource<T> {
+    fn feed(&mut self) -> Feed<'_, T> {
+        let queue = Arc::clone(&self.queue);
+        Feed::Stream(Box::new(move || pull_chunk(&queue)))
+    }
+}
+
+static NEXT_LOG_ORDINAL: AtomicU64 = AtomicU64::new(1);
+
+/// An append-only in-memory log with a **session-stable fingerprint
+/// identity**: appending grows the log but does not change its
+/// [`InputSource::fingerprint_token`], so a
+/// [`Dataset::cache`](crate::api::plan::Dataset::cache) cut over the log
+/// keeps hitting the same cache entry as the log grows. The cache layer
+/// reads [`InputSource::append_len`] to see how far the entry is behind,
+/// recomputes only the appended tail via [`InputSource::feed_tail`], and
+/// merges the delta into the stored entry instead of recomputing the
+/// whole prefix (counted by
+/// [`CacheStats::delta_merges`](crate::cache::CacheStats)).
+///
+/// Open plans over it with `rt.dataset(&mut log)` (a `&mut` borrow, so
+/// the log can be appended between collects).
+pub struct AppendLog<T> {
+    items: Vec<T>,
+    token: u64,
+}
+
+impl<T> AppendLog<T> {
+    /// A fresh, empty log. `label` seasons the fingerprint identity; a
+    /// session ordinal keeps two same-labelled logs distinct.
+    pub fn new(label: &str) -> AppendLog<T> {
+        let ordinal = NEXT_LOG_ORDINAL.fetch_add(1, Ordering::Relaxed);
+        AppendLog {
+            items: Vec::new(),
+            token: fxhash(&("append-log", label, ordinal)),
+        }
+    }
+
+    /// Append items to the tail. Existing items never change — that
+    /// immutability is what makes delta maintenance of cached prefixes
+    /// sound.
+    pub fn append(&mut self, items: impl IntoIterator<Item = T>) {
+        self.items.extend(items);
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The logged items, oldest first.
+    pub fn items(&self) -> &[T] {
+        &self.items
+    }
+}
+
+impl<T> InputSource<T> for AppendLog<T> {
+    fn feed(&mut self) -> Feed<'_, T> {
+        Feed::Slice(&self.items)
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.items.len())
+    }
+
+    fn fingerprint_token(&self) -> Option<u64> {
+        Some(self.token)
+    }
+
+    fn append_len(&self) -> Option<usize> {
+        Some(self.items.len())
+    }
+
+    fn feed_tail(&mut self, start: usize) -> Feed<'_, T> {
+        Feed::Slice(&self.items[start.min(self.items.len())..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replay_source_delivers_chunks_in_order_then_ends() {
+        let source = StreamSource::replay(vec![vec![1, 2], vec![], vec![3]]);
+        assert_eq!(source.pull(), Some(vec![1, 2]));
+        assert_eq!(source.pull(), Some(vec![3]));
+        assert_eq!(source.pull(), None);
+        assert_eq!(source.pull(), None);
+    }
+
+    #[test]
+    fn handle_push_close_wakes_blocked_pull() {
+        let (source, handle) = StreamSource::unbounded();
+        let producer = std::thread::spawn(move || {
+            handle.push(vec![7u32]);
+            handle.push(Vec::new()); // heartbeat, not end-of-stream
+            handle.push(vec![8, 9]);
+            handle.close();
+            handle.push(vec![10]); // after close: dropped
+        });
+        assert_eq!(source.pull(), Some(vec![7]));
+        assert_eq!(source.pull(), Some(vec![8, 9]));
+        assert_eq!(source.pull(), None);
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn append_log_keeps_token_and_exposes_tail() {
+        let mut log: AppendLog<i64> = AppendLog::new("t");
+        let before = log.fingerprint_token();
+        log.append([1, 2, 3]);
+        assert_eq!(log.fingerprint_token(), before);
+        assert_eq!(log.append_len(), Some(3));
+        log.append([4, 5]);
+        match log.feed_tail(3) {
+            Feed::Slice(tail) => assert_eq!(tail, &[4, 5]),
+            Feed::Stream(_) => panic!("append log tails are slices"),
+        }
+        // Out-of-range start clamps to empty rather than panicking.
+        match log.feed_tail(99) {
+            Feed::Slice(tail) => assert!(tail.is_empty()),
+            Feed::Stream(_) => panic!("append log tails are slices"),
+        }
+    }
+
+    #[test]
+    fn two_logs_with_same_label_have_distinct_tokens() {
+        let a: AppendLog<i64> = AppendLog::new("dup");
+        let b: AppendLog<i64> = AppendLog::new("dup");
+        assert_ne!(a.fingerprint_token(), b.fingerprint_token());
+    }
+}

@@ -1,0 +1,472 @@
+//! Event-time windows over keyed pairs: pane bookkeeping, the
+//! merge-vs-recompute window engine, and the batch [`Windowed`] view.
+//!
+//! The model is pane-based. A **pane** is one window slide's worth of
+//! event time (`slide` ticks); every element lands in exactly one pane
+//! (`pane = ts / slide`). A **window** `w` spans the `size / slide`
+//! consecutive panes `[w, w + size/slide)` — the event-time range
+//! `[w * slide, w * slide + size)` — and fires once the watermark (max
+//! timestamp seen) passes its end. Tumbling windows are the
+//! `slide == size` special case: one pane per window.
+//!
+//! On the merge path each pane folds values into per-key holders at
+//! ingest and a firing window merges its panes' holders; on the fallback
+//! path panes buffer raw pairs and a firing window re-folds them. A pane
+//! retires — its simulated-heap bytes are freed — as soon as the last
+//! window covering it has fired.
+
+use std::collections::hash_map::Entry as MapEntry;
+use std::collections::BTreeMap;
+use std::hash::Hash;
+use std::marker::PhantomData;
+use std::sync::Arc;
+
+use crate::api::config::{JobConfig, OptimizeMode};
+use crate::api::keyed::{Aggregator, Count, Merge};
+use crate::api::plan::Dataset;
+use crate::api::traits::{HeapSized, KeyValue};
+use crate::coordinator::pipeline::StreamMetrics;
+use crate::memsim::{CohortId, SimHeap, ThreadAlloc};
+use crate::optimizer::agent::OptimizerAgent;
+use crate::util::hash::FxHashMap;
+
+/// A boxed event-timestamp extractor (`&V -> u64` ticks).
+pub(crate) type TsFn<'rt, V> = Box<dyn Fn(&V) -> u64 + Send + Sync + 'rt>;
+
+/// Simulated bytes for one per-key holder slot on the merge path
+/// (holder object header + map slot).
+const HOLDER_SLOT_BYTES: u64 = 32;
+
+/// Simulated bytes for one buffered `(key, value)` slot on the fallback
+/// path, on top of the key's and value's own heap bytes.
+const PAIR_SLOT_BYTES: u64 = 16;
+
+/// An event-time window shape: `size` ticks wide, advancing by `slide`
+/// ticks. `size` must be a positive multiple of `slide`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowSpec {
+    /// Window width in event-time ticks.
+    pub size: u64,
+    /// Window advance in event-time ticks (pane width).
+    pub slide: u64,
+}
+
+impl WindowSpec {
+    /// Non-overlapping windows: `slide == size`.
+    pub fn tumbling(size: u64) -> WindowSpec {
+        WindowSpec::sliding(size, size)
+    }
+
+    /// Overlapping windows of `size` ticks every `slide` ticks.
+    ///
+    /// # Panics
+    /// If `size` or `slide` is zero, or `size % slide != 0` (windows
+    /// must cover whole panes).
+    pub fn sliding(size: u64, slide: u64) -> WindowSpec {
+        assert!(size > 0 && slide > 0, "window size and slide must be positive");
+        assert!(
+            size % slide == 0,
+            "window size ({size}) must be a multiple of slide ({slide})"
+        );
+        WindowSpec { size, slide }
+    }
+
+    pub(crate) fn panes_per_window(&self) -> u64 {
+        self.size / self.slide
+    }
+}
+
+/// One fired window: its ordinal, event-time bounds, and aggregated
+/// per-key results (unordered; digest or sort for deterministic output).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowResult<K, O> {
+    /// Window ordinal — the id of the first pane it covers.
+    pub window: u64,
+    /// Inclusive event-time start tick.
+    pub start: u64,
+    /// Exclusive event-time end tick.
+    pub end: u64,
+    /// Aggregated output per key seen in the window.
+    pub pairs: Vec<KeyValue<K, O>>,
+}
+
+/// What a finished windowed aggregation returns: every fired window in
+/// firing order, plus the plan report carrying
+/// [`StreamMetrics`](crate::coordinator::pipeline::StreamMetrics).
+#[derive(Clone, Debug)]
+pub struct StreamOutput<K, O> {
+    /// Fired windows, in window order.
+    pub windows: Vec<WindowResult<K, O>>,
+    /// Plan-level report; [`PlanReport::stream`](crate::api::PlanReport)
+    /// is always populated here.
+    pub report: crate::api::plan::PlanReport,
+}
+
+impl<K, O> StreamOutput<K, O> {
+    /// The streaming counters (always present on a stream output).
+    pub fn metrics(&self) -> &StreamMetrics {
+        self.report
+            .stream
+            .as_ref()
+            .expect("stream outputs always carry stream metrics")
+    }
+
+    pub fn into_windows(self) -> Vec<WindowResult<K, O>> {
+        self.windows
+    }
+}
+
+/// Decide whether a windowed aggregation may merge pane holders, exactly
+/// mirroring the batch combine gate: optimizer on, declared semantics
+/// accepted by the session agent, and a holder that declares
+/// [`Aggregator::MERGEABLE`]. Returns `(merge, fallback_reason)`.
+pub(crate) fn merge_gate<V, H, O, A>(
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    name: &str,
+) -> (bool, Option<String>)
+where
+    A: Aggregator<V, H, O>,
+{
+    if matches!(cfg.optimize, OptimizeMode::Off) {
+        return (false, Some("optimizer off".to_string()));
+    }
+    if !agent.process_declared(name, A::ASSOCIATIVE, A::COMMUTATIVE) {
+        let why = if A::ASSOCIATIVE {
+            "declared non-commutative"
+        } else {
+            "declared non-associative"
+        };
+        return (false, Some(why.to_string()));
+    }
+    if !A::MERGEABLE {
+        return (false, Some("holder not mergeable".to_string()));
+    }
+    (true, None)
+}
+
+/// One pane's state: per-key holders on the merge path, buffered raw
+/// pairs on the fallback path, plus its simulated-heap charge.
+struct Pane<K, V, H> {
+    holders: FxHashMap<K, H>,
+    buffer: Vec<(K, V)>,
+    bytes: u64,
+}
+
+impl<K, V, H> Default for Pane<K, V, H> {
+    fn default() -> Self {
+        Pane {
+            holders: FxHashMap::default(),
+            buffer: Vec::new(),
+            bytes: 0,
+        }
+    }
+}
+
+/// The window state machine shared by streaming standing queries and
+/// batch [`Windowed`] collects: ingest stamped pairs into panes, fire
+/// windows as the watermark passes them, retire panes whose last window
+/// fired.
+pub(crate) struct WindowEngine<K, V, H, O, A> {
+    spec: WindowSpec,
+    agg: Arc<A>,
+    merge_mode: bool,
+    panes: BTreeMap<u64, Pane<K, V, H>>,
+    /// The next window to fire; panes below it have retired, so elements
+    /// landing below it are late.
+    next_window: u64,
+    /// Watermark: the maximum event timestamp observed.
+    max_ts: Option<u64>,
+    last_fired_end: u64,
+    metrics: StreamMetrics,
+    heap: Arc<SimHeap>,
+    alloc: ThreadAlloc,
+    pane_cohort: CohortId,
+    _out: PhantomData<fn() -> O>,
+}
+
+impl<K, V, H, O, A> Drop for WindowEngine<K, V, H, O, A> {
+    fn drop(&mut self) {
+        self.alloc.flush();
+        self.heap.release_cohort(self.pane_cohort);
+    }
+}
+
+impl<K, V, H, O, A> WindowEngine<K, V, H, O, A>
+where
+    K: Hash + Eq + Clone + HeapSized,
+    V: Clone + HeapSized,
+    H: Clone,
+    A: Aggregator<V, H, O>,
+{
+    pub(crate) fn new(
+        spec: WindowSpec,
+        agg: Arc<A>,
+        merge_mode: bool,
+        fallback_reason: Option<String>,
+        heap: Arc<SimHeap>,
+    ) -> Self {
+        let pane_cohort = heap.scoped_cohort("stream.pane");
+        let alloc = heap.thread_alloc();
+        WindowEngine {
+            spec,
+            agg,
+            merge_mode,
+            panes: BTreeMap::new(),
+            next_window: 0,
+            max_ts: None,
+            last_fired_end: 0,
+            metrics: StreamMetrics {
+                merge_mode,
+                fallback_reason,
+                ..StreamMetrics::default()
+            },
+            heap,
+            alloc,
+            pane_cohort,
+            _out: PhantomData,
+        }
+    }
+
+    pub(crate) fn metrics(&self) -> &StreamMetrics {
+        &self.metrics
+    }
+
+    /// Ingest one stamped chunk, then fire every window the advanced
+    /// watermark closes. Returns the fired windows in window order.
+    pub(crate) fn ingest_chunk(&mut self, stamped: Vec<(u64, K, V)>) -> Vec<WindowResult<K, O>> {
+        self.metrics.chunks_ingested += 1;
+        for (ts, key, value) in stamped {
+            self.ingest_one(ts, key, value);
+        }
+        let mut fired = Vec::new();
+        self.fire_ready(false, &mut fired);
+        fired
+    }
+
+    /// Force-fire every window still holding data (end-of-stream).
+    pub(crate) fn finish(&mut self) -> Vec<WindowResult<K, O>> {
+        let mut fired = Vec::new();
+        self.fire_ready(true, &mut fired);
+        fired
+    }
+
+    fn ingest_one(&mut self, ts: u64, key: K, value: V) {
+        self.metrics.elements_ingested += 1;
+        let pane_id = ts / self.spec.slide;
+        if pane_id < self.next_window {
+            // Every window covering this pane has already fired.
+            self.metrics.late_elements += 1;
+            return;
+        }
+        self.max_ts = Some(self.max_ts.map_or(ts, |m| m.max(ts)));
+        let pane = self.panes.entry(pane_id).or_default();
+        let charged = if self.merge_mode {
+            match pane.holders.entry(key) {
+                MapEntry::Occupied(mut slot) => {
+                    self.agg.combine(slot.get_mut(), value);
+                    0
+                }
+                MapEntry::Vacant(slot) => {
+                    let bytes = slot.key().heap_bytes() + HOLDER_SLOT_BYTES;
+                    let mut holder = self.agg.init();
+                    self.agg.combine(&mut holder, value);
+                    slot.insert(holder);
+                    bytes
+                }
+            }
+        } else {
+            let bytes = key.heap_bytes() + value.heap_bytes() + PAIR_SLOT_BYTES;
+            pane.buffer.push((key, value));
+            bytes
+        };
+        if charged > 0 {
+            pane.bytes += charged;
+            self.alloc.alloc(self.pane_cohort, charged);
+        }
+    }
+
+    fn fire_ready(&mut self, force: bool, out: &mut Vec<WindowResult<K, O>>) {
+        let ppw = self.spec.panes_per_window();
+        loop {
+            let Some((&first_pane, _)) = self.panes.first_key_value() else {
+                break;
+            };
+            // Skip windows covering no remaining pane — they would be
+            // empty. The earliest non-empty window is the last one whose
+            // span still reaches the first live pane.
+            let earliest = first_pane.saturating_sub(ppw - 1);
+            if earliest > self.next_window {
+                self.next_window = earliest;
+            }
+            let window = self.next_window;
+            let end = window * self.spec.slide + self.spec.size;
+            let ready = force || self.max_ts.is_some_and(|ts| ts >= end);
+            if !ready {
+                break;
+            }
+            out.push(self.fire_window(window, ppw));
+            self.next_window = window + 1;
+            self.retire_through(window);
+        }
+    }
+
+    fn fire_window(&mut self, window: u64, ppw: u64) -> WindowResult<K, O> {
+        let mut acc: FxHashMap<K, H> = FxHashMap::default();
+        let span = window..window.saturating_add(ppw);
+        if self.merge_mode {
+            let mut merged = 0u64;
+            for (_, pane) in self.panes.range(span) {
+                for (key, holder) in &pane.holders {
+                    merged += 1;
+                    match acc.entry(key.clone()) {
+                        MapEntry::Occupied(mut slot) => {
+                            self.agg.merge_holders(slot.get_mut(), holder.clone());
+                        }
+                        MapEntry::Vacant(slot) => {
+                            slot.insert(holder.clone());
+                        }
+                    }
+                }
+            }
+            self.metrics.holders_merged += merged;
+        } else {
+            let mut refolded = 0u64;
+            for (_, pane) in self.panes.range(span) {
+                for (key, value) in &pane.buffer {
+                    refolded += 1;
+                    match acc.entry(key.clone()) {
+                        MapEntry::Occupied(mut slot) => {
+                            self.agg.combine(slot.get_mut(), value.clone());
+                        }
+                        MapEntry::Vacant(slot) => {
+                            let mut holder = self.agg.init();
+                            self.agg.combine(&mut holder, value.clone());
+                            slot.insert(holder);
+                        }
+                    }
+                }
+            }
+            self.metrics.elements_recomputed += refolded;
+            self.metrics.holders_recomputed += acc.len() as u64;
+        }
+        let pairs: Vec<KeyValue<K, O>> = acc
+            .into_iter()
+            .map(|(key, holder)| KeyValue::new(key, self.agg.finish(holder)))
+            .collect();
+        self.metrics.windows_fired += 1;
+        let start = window * self.spec.slide;
+        let end = start + self.spec.size;
+        self.last_fired_end = end;
+        self.metrics.watermark_lag = self
+            .max_ts
+            .unwrap_or(self.last_fired_end)
+            .saturating_sub(self.last_fired_end);
+        WindowResult {
+            window,
+            start,
+            end,
+            pairs,
+        }
+    }
+
+    /// Retire every pane the last fired window was the final consumer
+    /// of, freeing its simulated-heap charge.
+    fn retire_through(&mut self, through: u64) {
+        while self
+            .panes
+            .first_key_value()
+            .is_some_and(|(&id, _)| id <= through)
+        {
+            if let Some((_, pane)) = self.panes.pop_first() {
+                self.metrics.panes_fired += 1;
+                if pane.bytes > 0 {
+                    self.alloc.free(self.pane_cohort, pane.bytes);
+                }
+            }
+        }
+    }
+}
+
+/// A windowed view over a **batch** keyed plan (from
+/// [`KeyedDataset::window_tumbling`](crate::api::keyed::KeyedDataset::window_tumbling)
+/// /
+/// [`KeyedDataset::window_sliding`](crate::api::keyed::KeyedDataset::window_sliding)):
+/// collecting it runs the upstream plan once, routes every pair through
+/// the same pane engine a standing query uses, and fires all windows.
+/// The streaming twin is [`WindowedStream`](crate::stream::WindowedStream).
+pub struct Windowed<'rt, K, V, B = (K, V)> {
+    inner: Dataset<'rt, (K, V), B>,
+    spec: WindowSpec,
+    ts: TsFn<'rt, V>,
+}
+
+impl<'rt, K: 'rt, V: 'rt, B: 'rt> Windowed<'rt, K, V, B> {
+    pub(crate) fn over(
+        inner: Dataset<'rt, (K, V), B>,
+        spec: WindowSpec,
+        ts: impl Fn(&V) -> u64 + Send + Sync + 'rt,
+    ) -> Self {
+        Windowed {
+            inner,
+            spec,
+            ts: Box::new(ts),
+        }
+    }
+
+    /// The window shape this view applies.
+    pub fn spec(&self) -> WindowSpec {
+        self.spec
+    }
+
+    /// Execute the upstream plan and aggregate per `(window, key)` with
+    /// a declared [`Aggregator`]. The merge-vs-recompute decision follows
+    /// the same gate as the batch combine path; see
+    /// [`crate::stream`](crate::stream) for the semantics table.
+    pub fn aggregate_by_key<H, O, A>(self, agg: A) -> StreamOutput<K, O>
+    where
+        K: Hash + Eq + Clone + HeapSized,
+        V: Clone + HeapSized,
+        H: Clone,
+        A: Aggregator<V, H, O>,
+    {
+        let Windowed { inner, spec, ts } = self;
+        let rt = inner.rt;
+        let cfg = inner.config.clone();
+        let agg = Arc::new(agg);
+        let (merge, fallback) = merge_gate::<V, H, O, A>(&cfg, rt.agent(), agg.name());
+        let mut engine =
+            WindowEngine::new(spec, Arc::clone(&agg), merge, fallback, Arc::clone(&cfg.heap));
+        let collected = inner.collect();
+        let mut report = collected.report;
+        let stamped: Vec<(u64, K, V)> = collected
+            .items
+            .into_iter()
+            .map(|(key, value)| (ts(&value), key, value))
+            .collect();
+        let mut windows = engine.ingest_chunk(stamped);
+        windows.extend(engine.finish());
+        report.stream = Some(engine.metrics().clone());
+        StreamOutput { windows, report }
+    }
+
+    /// Count pairs per `(window, key)` (mergeable: pane counts add).
+    pub fn count_by_key(self) -> StreamOutput<K, i64>
+    where
+        K: Hash + Eq + Clone + HeapSized,
+        V: Clone + Send + Sync + HeapSized,
+    {
+        self.aggregate_by_key(Count)
+    }
+
+    /// Reduce values per `(window, key)` with a binary merge function
+    /// declared associative + commutative (mergeable holders).
+    pub fn reduce_by_key<F>(self, merge: F) -> StreamOutput<K, V>
+    where
+        K: Hash + Eq + Clone + HeapSized,
+        V: Clone + Send + Sync + HeapSized,
+        F: Fn(V, V) -> V + Send + Sync,
+    {
+        self.aggregate_by_key(Merge::new(merge))
+    }
+}

@@ -21,10 +21,14 @@
 //!
 //! Everything about a scenario derives from its `seed` (via the crate's
 //! own [`Xoshiro256`]): which benchmark each slot runs, under which
-//! optimizer mode, and whether its `Dataset::cache()` cut points are
+//! optimizer mode, whether its `Dataset::cache()` cut points are
 //! live ([`PlanSpec::cached`] — cached slots on the shared session
 //! exercise cross-tenant materialization reuse and must still match the
-//! serial baselines). On failure the error message contains the seed;
+//! serial baselines), and whether the slot runs the **streaming plan**
+//! instead ([`PlanSpec::stream`] — a seeded multi-chunk feed through a
+//! tumbling windowed count, interleaving standing-query chunks with the
+//! batch tenants on the same pool). On failure the error message
+//! contains the seed;
 //! re-running with `MR4R_SCENARIO_SEED=<seed>` (see [`scenario_seed`])
 //! replays the exact same plan assignment. Thread *interleaving* is of
 //! course up to the OS — the point of the harness is that results must
@@ -51,6 +55,7 @@ use crate::benchmarks::{
     datagen, digest_pairs, histogram, kmeans, linear_regression, matrix_multiply, pca,
     string_match, word_count, BenchId,
 };
+use crate::stream::StreamSource;
 use crate::util::prng::Xoshiro256;
 
 /// One plan slot in a scenario: which workload runs, under which
@@ -66,6 +71,12 @@ pub struct PlanSpec {
     /// cross-tenant reuse — and must still match their serial baselines
     /// digest for digest.
     pub cached: bool,
+    /// Whether this slot runs the **streaming** plan instead of `bench`:
+    /// a seeded multi-chunk event feed through a tumbling windowed count
+    /// ([`crate::stream`]) on the shared session, digested per
+    /// `(window, key)`. Streaming tenants interleave with batch tenants
+    /// on one pool and must still match their serial baseline digests.
+    pub stream: bool,
 }
 
 /// Scenario shape: `drivers` OS threads × `plans_per_driver` plans each,
@@ -102,6 +113,31 @@ type PlanFn = Box<dyn Fn(&Runtime, &JobConfig) -> u64 + Send + Sync>;
 /// scenarios (datasets are immutable and shared by reference).
 pub struct ScenarioKit {
     plans: Vec<(BenchId, PlanFn)>,
+    /// The streaming slot's runner (see [`PlanSpec::stream`]).
+    stream_plan: PlanFn,
+}
+
+/// Seeded event chunks for the streaming slot: `(key, ts)` pairs with
+/// non-decreasing event time, pre-split so replay preserves chunk
+/// boundaries (the serial and concurrent runs ingest identical feeds).
+fn stream_chunks(scale: f64, seed: u64) -> Vec<Vec<(u64, u64)>> {
+    let total = ((scale * 2_000_000.0) as usize).clamp(200, 20_000);
+    let chunk_len = (total / 8).max(1);
+    let mut rng = Xoshiro256::seeded(seed ^ 0x5745_4E44);
+    let mut out = Vec::new();
+    let mut chunk = Vec::with_capacity(chunk_len);
+    let mut ts = 0u64;
+    for _ in 0..total {
+        ts += rng.below(3);
+        chunk.push((rng.below(17), ts));
+        if chunk.len() == chunk_len {
+            out.push(std::mem::take(&mut chunk));
+        }
+    }
+    if !chunk.is_empty() {
+        out.push(chunk);
+    }
+    out
 }
 
 impl ScenarioKit {
@@ -187,7 +223,33 @@ impl ScenarioKit {
             }),
         ));
 
-        ScenarioKit { plans }
+        // The streaming slot: replay the seeded chunk feed through a
+        // tumbling windowed count on the shared session, digesting every
+        // fired window's per-key counts. Runs under the slot's optimizer
+        // mode, so both the holder-merge path and the buffered fallback
+        // are exercised against the same serial baseline.
+        let events = Arc::new(stream_chunks(scale, seed));
+        let stream_plan: PlanFn = Box::new(move |rt, cfg| {
+            let out = rt
+                .stream(StreamSource::replay((*events).clone()))
+                .with_config(cfg.clone())
+                .keyed()
+                .window_tumbling(64, |ts: &u64| *ts)
+                .count_by_key()
+                .run_to_close();
+            let rows: Vec<(String, i64)> = out
+                .windows
+                .iter()
+                .flat_map(|w| {
+                    w.pairs
+                        .iter()
+                        .map(move |p| (format!("w{}:k{}", w.window, p.key), p.value))
+                })
+                .collect();
+            digest_pairs(&rows)
+        });
+
+        ScenarioKit { plans, stream_plan }
     }
 
     /// The seeded per-driver plan assignment (public so a failing run's
@@ -205,10 +267,12 @@ impl ScenarioKit {
                             OptimizeMode::Off
                         };
                         let cached = rng.below(2) == 0;
+                        let stream = rng.below(4) == 0;
                         PlanSpec {
                             bench,
                             optimize,
                             cached,
+                            stream,
                         }
                     })
                     .collect()
@@ -221,6 +285,9 @@ impl ScenarioKit {
             .clone()
             .with_optimize(spec.optimize)
             .with_cache_enabled(spec.cached);
+        if spec.stream {
+            return (self.stream_plan)(rt, &cfg);
+        }
         let plan = self
             .plans
             .iter()
@@ -291,10 +358,15 @@ pub fn run_scenario(kit: &ScenarioKit, sc: &Scenario) -> Result<(), String> {
         for (j, (serial, conc)) in base_digests.iter().zip(conc_digests).enumerate() {
             if serial != conc {
                 let spec = specs[d][j];
+                let what = if spec.stream {
+                    "Streaming".to_string()
+                } else {
+                    format!("{:?}", spec.bench)
+                };
                 return Err(format!(
-                    "driver {d} plan {j} ({:?} under {:?}): concurrent digest {conc:#018x} \
+                    "driver {d} plan {j} ({what} under {:?}): concurrent digest {conc:#018x} \
                      != serial {serial:#018x} — replay with MR4R_SCENARIO_SEED={}",
-                    spec.bench, spec.optimize, sc.seed
+                    spec.optimize, sc.seed
                 ));
             }
         }

@@ -1,0 +1,378 @@
+//! Streaming acceptance suite:
+//!
+//! * **streaming ≡ batch ≡ reference** — the same stamped event feed
+//!   produces pane-for-pane identical window digests whether it runs as
+//!   a chunked standing query ([`Runtime::stream`]), as a batch windowed
+//!   plan ([`KeyedDataset::window_sliding`]), or through a plain
+//!   `BTreeMap` reference fold, under `OptimizeMode::Auto` and `Off`;
+//! * **merge gate** — an associative + commutative mergeable aggregator
+//!   merges pane holders across overlapping windows (`holders_merged >
+//!   0`, zero recomputed elements) while the optimizer-off and
+//!   non-mergeable runs take the buffered recompute fallback with more
+//!   per-element work and identical digests;
+//! * **incremental cache maintenance** — appending to an [`AppendLog`]
+//!   behind a `Dataset::cache()` cut recomputes only the delta chunk
+//!   (`CacheStats::delta_merges`), matching a full recompute;
+//! * **seeded scenarios** — concurrent scenario slots that draw the
+//!   streaming plan still match their serial baselines.
+//!
+//! Worker-pool width comes from `MR4R_THREADS` (default 4) — the CI
+//! stream-stress matrix runs this suite at 2/8 workers. Failing
+//! scenarios print an `MR4R_SCENARIO_SEED` replay line.
+//!
+//! [`Runtime::stream`]: mr4r::Runtime::stream
+//! [`KeyedDataset::window_sliding`]: mr4r::api::keyed::KeyedDataset::window_sliding
+//! [`AppendLog`]: mr4r::AppendLog
+//! [`CacheStats::delta_merges`]: mr4r::CacheStats
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use mr4r::api::config::OptimizeMode;
+use mr4r::api::keyed::Aggregator;
+use mr4r::benchmarks::digest_pairs;
+use mr4r::testkit::scenario::{assert_scenario, scenario_seed, Scenario, ScenarioKit};
+use mr4r::util::prng::Xoshiro256;
+use mr4r::{AppendLog, JobConfig, Runtime, StreamOutput, StreamSource, WindowResult};
+
+/// Worker threads for the session pools (CI matrix sets `MR4R_THREADS`).
+fn threads() -> usize {
+    std::env::var("MR4R_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(1)
+}
+
+/// Seeded `(ts, key, val)` events with non-decreasing event time (so a
+/// chunked replay fires exactly the windows a single-chunk batch run
+/// fires — no late drops).
+fn events(n: usize, seed: u64) -> Vec<(u64, u64, i64)> {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut ts = 0u64;
+    (0..n)
+        .map(|_| {
+            ts += rng.below(4);
+            (ts, rng.below(13), rng.below(41) as i64 - 20)
+        })
+        .collect()
+}
+
+/// Reference fold: element in pane `p = ts / slide` belongs to every
+/// window `w` with `p - ppw + 1 <= w <= p` (saturating at 0).
+fn reference_rows(evs: &[(u64, u64, i64)], size: u64, slide: u64) -> Vec<(String, i64)> {
+    let ppw = size / slide;
+    let mut by_window: BTreeMap<u64, BTreeMap<u64, i64>> = BTreeMap::new();
+    for &(ts, key, val) in evs {
+        let pane = ts / slide;
+        for w in pane.saturating_sub(ppw - 1)..=pane {
+            *by_window.entry(w).or_default().entry(key).or_insert(0) += val;
+        }
+    }
+    by_window
+        .into_iter()
+        .flat_map(|(w, keys)| {
+            keys.into_iter()
+                .map(move |(k, v)| (format!("w{w}:k{k}"), v))
+        })
+        .collect()
+}
+
+/// Digest rows for sum outputs carrying `(max_ts, sum)` values.
+fn sum_rows(windows: &[WindowResult<u64, (u64, i64)>]) -> Vec<(String, i64)> {
+    windows
+        .iter()
+        .flat_map(|w| {
+            w.pairs
+                .iter()
+                .map(move |p| (format!("w{}:k{}", w.window, p.key), p.value.1))
+        })
+        .collect()
+}
+
+/// Run the feed as a chunked standing query (per-key sum carried as
+/// `(max_ts, sum)` so the reduce stays associative + commutative).
+fn stream_windows(
+    evs: &[(u64, u64, i64)],
+    chunk: usize,
+    size: u64,
+    slide: u64,
+    mode: OptimizeMode,
+) -> StreamOutput<u64, (u64, i64)> {
+    let cfg = JobConfig::fast().with_threads(threads()).with_optimize(mode);
+    let rt = Runtime::with_config(cfg);
+    let chunks: Vec<Vec<(u64, u64, i64)>> = evs.chunks(chunk).map(<[_]>::to_vec).collect();
+    rt.stream(StreamSource::replay(chunks))
+        .map(|e: &(u64, u64, i64)| (e.1, (e.0, e.2)))
+        .keyed()
+        .window_sliding(size, slide, |v: &(u64, i64)| v.0)
+        .reduce_by_key(|a: (u64, i64), b: (u64, i64)| (a.0.max(b.0), a.1 + b.1))
+        .run_to_close()
+}
+
+/// Run the same feed as a batch windowed plan over a slice source.
+fn batch_windows(
+    evs: &[(u64, u64, i64)],
+    size: u64,
+    slide: u64,
+    mode: OptimizeMode,
+) -> StreamOutput<u64, (u64, i64)> {
+    let cfg = JobConfig::fast().with_threads(threads()).with_optimize(mode);
+    let rt = Runtime::with_config(cfg);
+    rt.dataset(evs)
+        .map(|e: &(u64, u64, i64)| (e.1, (e.0, e.2)))
+        .keyed()
+        .window_sliding(size, slide, |v: &(u64, i64)| v.0)
+        .reduce_by_key(|a: (u64, i64), b: (u64, i64)| (a.0.max(b.0), a.1 + b.1))
+}
+
+#[test]
+fn streaming_matches_batch_and_reference_windows() {
+    let evs = events(4_000, 0xA11CE);
+    for mode in [OptimizeMode::Auto, OptimizeMode::Off] {
+        for (size, slide) in [(40u64, 40u64), (60, 20)] {
+            let want = digest_pairs(&reference_rows(&evs, size, slide));
+            let stream = stream_windows(&evs, 257, size, slide, mode);
+            let batch = batch_windows(&evs, size, slide, mode);
+
+            assert_eq!(
+                digest_pairs(&sum_rows(&stream.windows)),
+                want,
+                "{mode:?} {size}/{slide}: streaming digest must match the reference fold"
+            );
+            assert_eq!(
+                digest_pairs(&sum_rows(&batch.windows)),
+                want,
+                "{mode:?} {size}/{slide}: batch digest must match the reference fold"
+            );
+
+            assert_eq!(
+                stream.windows.len(),
+                batch.windows.len(),
+                "{mode:?} {size}/{slide}: same fired-window sequence"
+            );
+            for (s, b) in stream.windows.iter().zip(&batch.windows) {
+                assert_eq!(
+                    (s.window, s.start, s.end),
+                    (b.window, b.start, b.end),
+                    "{mode:?} {size}/{slide}: window bounds must line up"
+                );
+                let srows: Vec<(u64, i64)> = s.pairs.iter().map(|p| (p.key, p.value.1)).collect();
+                let brows: Vec<(u64, i64)> = b.pairs.iter().map(|p| (p.key, p.value.1)).collect();
+                assert_eq!(
+                    digest_pairs(&srows),
+                    digest_pairs(&brows),
+                    "{mode:?} {size}/{slide}: window {} pane digest",
+                    s.window
+                );
+            }
+
+            let m = stream.metrics();
+            assert_eq!(m.late_elements, 0, "non-decreasing feed must drop nothing");
+            assert_eq!(m.elements_ingested, evs.len() as u64);
+            assert!(m.chunks_ingested > 1, "the replay must actually be chunked");
+        }
+    }
+}
+
+#[test]
+fn merge_gate_follows_the_optimizer_mode() {
+    let evs = events(6_000, 0xBEEF);
+    let merged = stream_windows(&evs, 193, 80, 20, OptimizeMode::Auto);
+    let fallback = stream_windows(&evs, 193, 80, 20, OptimizeMode::Off);
+
+    assert_eq!(
+        digest_pairs(&sum_rows(&merged.windows)),
+        digest_pairs(&sum_rows(&fallback.windows)),
+        "merge and recompute paths must agree"
+    );
+
+    let m = merged.metrics();
+    assert!(m.merge_mode, "Auto + declared assoc/comm must merge: {m:?}");
+    assert_eq!(m.fallback_reason, None);
+    assert!(m.holders_merged > 0, "pane holders must merge at fire: {m:?}");
+    assert_eq!(m.elements_recomputed, 0, "merge path refolds no values: {m:?}");
+
+    let f = fallback.metrics();
+    assert!(!f.merge_mode);
+    assert_eq!(f.fallback_reason.as_deref(), Some("optimizer off"));
+    assert!(
+        f.elements_recomputed >= evs.len() as u64,
+        "sliding recompute refolds every value at least once: {f:?}"
+    );
+    assert_eq!(m.windows_fired, f.windows_fired);
+    assert_eq!(f.holders_merged, 0, "fallback never touches merge_holders");
+}
+
+/// Declared associative + commutative sum whose holder **cannot** merge
+/// (`MERGEABLE` left at its default) — the gate must buffer + recompute.
+struct SumUnmergeable;
+
+impl Aggregator<(u64, i64), i64, i64> for SumUnmergeable {
+    const ASSOCIATIVE: bool = true;
+    const COMMUTATIVE: bool = true;
+
+    fn init(&self) -> i64 {
+        0
+    }
+
+    fn combine(&self, holder: &mut i64, value: (u64, i64)) {
+        *holder += value.1;
+    }
+
+    fn finish(&self, holder: i64) -> i64 {
+        holder
+    }
+
+    fn name(&self) -> &str {
+        "test.sum-unmergeable"
+    }
+}
+
+/// The same sum with a mergeable holder — pane sums add.
+struct SumMergeable;
+
+impl Aggregator<(u64, i64), i64, i64> for SumMergeable {
+    const ASSOCIATIVE: bool = true;
+    const COMMUTATIVE: bool = true;
+    const MERGEABLE: bool = true;
+
+    fn init(&self) -> i64 {
+        0
+    }
+
+    fn combine(&self, holder: &mut i64, value: (u64, i64)) {
+        *holder += value.1;
+    }
+
+    fn finish(&self, holder: i64) -> i64 {
+        holder
+    }
+
+    fn merge_holders(&self, into: &mut i64, other: i64) {
+        *into += other;
+    }
+
+    fn name(&self) -> &str {
+        "test.sum-mergeable"
+    }
+}
+
+fn run_sum<A>(evs: &[(u64, u64, i64)], agg: A) -> StreamOutput<u64, i64>
+where
+    A: Aggregator<(u64, i64), i64, i64> + 'static,
+{
+    let cfg = JobConfig::fast().with_threads(threads());
+    let rt = Runtime::with_config(cfg);
+    let chunks: Vec<Vec<(u64, u64, i64)>> = evs.chunks(311).map(<[_]>::to_vec).collect();
+    rt.stream(StreamSource::replay(chunks))
+        .map(|e: &(u64, u64, i64)| (e.1, (e.0, e.2)))
+        .keyed()
+        .window_sliding(60, 20, |v: &(u64, i64)| v.0)
+        .aggregate_by_key(agg)
+        .run_to_close()
+}
+
+#[test]
+fn unmergeable_holder_falls_back_and_still_agrees() {
+    let evs = events(5_000, 0xD00D);
+    let merged = run_sum(&evs, SumMergeable);
+    let buffered = run_sum(&evs, SumUnmergeable);
+
+    let rows = |out: &StreamOutput<u64, i64>| -> Vec<(String, i64)> {
+        out.windows
+            .iter()
+            .flat_map(|w| {
+                w.pairs
+                    .iter()
+                    .map(move |p| (format!("w{}:k{}", w.window, p.key), p.value))
+            })
+            .collect()
+    };
+    assert_eq!(digest_pairs(&rows(&merged)), digest_pairs(&rows(&buffered)));
+
+    let m = merged.metrics();
+    assert!(m.merge_mode && m.holders_merged > 0 && m.elements_recomputed == 0);
+
+    let b = buffered.metrics();
+    assert!(!b.merge_mode);
+    assert_eq!(b.fallback_reason.as_deref(), Some("holder not mergeable"));
+    assert!(b.holders_recomputed > 0);
+    assert!(
+        b.elements_recomputed > m.elements_recomputed,
+        "the fallback must refold strictly more values ({} !> {})",
+        b.elements_recomputed,
+        m.elements_recomputed
+    );
+}
+
+#[test]
+fn append_log_delta_merge_recomputes_only_the_tail() {
+    let cfg = JobConfig::fast().with_threads(threads());
+    let rt = Runtime::with_config(cfg.clone());
+    let mut log: AppendLog<i64> = AppendLog::new("stream-equivalence");
+    log.append(0..1_000);
+
+    let maps = Arc::new(AtomicUsize::new(0));
+
+    let m = Arc::clone(&maps);
+    let first = rt
+        .dataset(&mut log)
+        .map(move |x: &i64| {
+            m.fetch_add(1, Ordering::Relaxed);
+            x * 3 + 1
+        })
+        .cache()
+        .collect();
+    assert_eq!(first.items.len(), 1_000);
+    assert_eq!(maps.load(Ordering::Relaxed), 1_000);
+
+    log.append(1_000..1_100);
+
+    let m = Arc::clone(&maps);
+    let second = rt
+        .dataset(&mut log)
+        .map(move |x: &i64| {
+            m.fetch_add(1, Ordering::Relaxed);
+            x * 3 + 1
+        })
+        .cache()
+        .collect();
+    assert_eq!(second.items.len(), 1_100);
+    assert_eq!(
+        maps.load(Ordering::Relaxed),
+        1_100,
+        "the second collect must map only the 100 appended elements"
+    );
+
+    let stats = rt.cache().stats();
+    assert!(
+        stats.delta_merges >= 1,
+        "the append must take the delta-merge path: {stats:?}"
+    );
+    assert!(stats.delta_items >= 100, "{stats:?}");
+
+    // A fresh session recomputing everything must agree with the merged
+    // entry (order-independent comparison).
+    let rt_full = Runtime::with_config(cfg);
+    let full = rt_full.dataset(&mut log).map(|x: &i64| x * 3 + 1).collect();
+    assert_eq!(full.items.len(), 1_100);
+    let mut a = second.items.clone();
+    let mut b = full.items.clone();
+    a.sort_unstable();
+    b.sort_unstable();
+    assert_eq!(a, b, "delta-merged entry must equal a full recompute");
+}
+
+#[test]
+fn seeded_scenarios_with_streaming_slots_match_baselines() {
+    let kit = ScenarioKit::prepare(0.0003, 41);
+    let sc = Scenario {
+        seed: scenario_seed(6021),
+        drivers: 3,
+        plans_per_driver: 4,
+        threads: threads(),
+    };
+    assert_scenario(&kit, &sc);
+}
