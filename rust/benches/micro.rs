@@ -4,6 +4,7 @@
 //! * collector emit throughput: list vs holder vs shard counts
 //! * RIR: interpreted reduce vs interpreted combine vs fast-path combine
 //! * scheduler: per-task overhead and steal behaviour
+//! * governance: governed (QoS-counted, weighted) vs ungoverned batches
 //! * memsim: TLAB-batched accounting overhead
 //!
 //! `cargo bench --bench micro`
@@ -13,7 +14,7 @@ mod common;
 use std::sync::Arc;
 
 use mr4r::coordinator::collector::{CollectorCohorts, HolderCollector, ListCollector};
-use mr4r::coordinator::scheduler::TaskPool;
+use mr4r::coordinator::scheduler::{QosCounters, TaskPool, WorkerPool};
 use mr4r::memsim::SimHeap;
 use mr4r::optimizer::agent::OptimizerAgent;
 use mr4r::optimizer::builder::canon;
@@ -153,6 +154,38 @@ fn main() {
             format!("{:.2}", n as f64 / sw.secs() / 1e6),
             stats.steals.to_string(),
         ]);
+    }
+    println!("{}", t.render());
+
+    // --- Governed scheduling overhead ---
+    // The QoS hot path adds a per-pick quota check plus a handful of
+    // relaxed counter increments; this measures the per-task cost of a
+    // governed batch against an ungoverned one on the same shared pool.
+    let mut t = TextTable::new(vec!["threads", "mode", "Mtasks/s", "steals"]);
+    for threads in [1, 4, common::max_threads()] {
+        let pool = WorkerPool::new(threads);
+        let n = 200_000;
+        for (label, governed) in [("ungoverned", false), ("governed (quota 4)", true)] {
+            let counters = Arc::new(QosCounters::default());
+            let batch = if governed {
+                pool.batch_with(4, Some(Arc::clone(&counters)))
+            } else {
+                pool.batch()
+            };
+            let sw = Stopwatch::start();
+            let stats = batch.run(
+                threads,
+                (0..n)
+                    .map(|_| move |_w: usize| std::hint::black_box(()))
+                    .collect::<Vec<_>>(),
+            );
+            t.row(vec![
+                threads.to_string(),
+                label.to_string(),
+                format!("{:.2}", n as f64 / sw.secs() / 1e6),
+                stats.steals.to_string(),
+            ]);
+        }
     }
     println!("{}", t.render());
 

@@ -8,6 +8,7 @@
 
 use std::sync::Arc;
 
+use crate::govern::{TenantHandle, TenantId};
 use crate::memsim::{HeapParams, SimHeap};
 
 /// Whether the agent may rewrite reducers (Figures 7–10 compare
@@ -92,6 +93,13 @@ pub struct JobConfig {
     pub scratch_per_emit: u64,
     /// Materialization-cache behaviour at `Dataset::cache()` cut points.
     pub cache: CacheConfig,
+    /// Tenant this job runs as (see [`crate::govern`]). `None` runs
+    /// ungoverned — exactly the pre-governance behaviour.
+    pub tenant: Option<TenantId>,
+    /// Resolved governance handle for `tenant`, filled in by the owning
+    /// [`Runtime`](crate::api::Runtime) when the config is attached to a
+    /// plan, job, or stream.
+    pub(crate) govern: Option<Arc<TenantHandle>>,
 }
 
 impl JobConfig {
@@ -106,6 +114,8 @@ impl JobConfig {
             heap: SimHeap::new(HeapParams::default()),
             scratch_per_emit: 0,
             cache: CacheConfig::default(),
+            tenant: None,
+            govern: None,
         }
     }
 
@@ -167,6 +177,28 @@ impl JobConfig {
         self.cache.max_bytes = bytes;
         self
     }
+
+    /// Run jobs under a registered tenant (see
+    /// [`Runtime::register_tenant`](crate::api::Runtime::register_tenant)).
+    /// The owning runtime resolves the id to its governance handle when
+    /// the config is attached to a plan, job, or stream;
+    /// [`Runtime::config_for`](crate::api::Runtime::config_for) returns a
+    /// config with the handle already resolved.
+    pub fn with_tenant(mut self, tenant: TenantId) -> Self {
+        self.tenant = Some(tenant);
+        self
+    }
+
+    /// The optimizer mode this job actually runs with: the configured
+    /// mode, unless the tenant's degrade latch is set (admission under
+    /// pressure with `OverloadPolicy::Degrade`), which forces `Off` until
+    /// the tenant's next clean admission.
+    pub(crate) fn effective_optimize(&self) -> OptimizeMode {
+        match &self.govern {
+            Some(t) if t.degraded() => OptimizeMode::Off,
+            _ => self.optimize,
+        }
+    }
 }
 
 impl Default for JobConfig {
@@ -200,6 +232,17 @@ mod tests {
         assert_eq!(c.tasks_per_thread, 1);
         let c = c.with_cache_watermark(7.0);
         assert_eq!(c.cache.watermark, 1.0);
+    }
+
+    #[test]
+    fn tenant_defaults_off_and_effective_optimize_passthrough() {
+        let c = JobConfig::fast();
+        assert_eq!(c.tenant, None);
+        assert!(c.govern.is_none());
+        // Ungoverned configs never override the optimizer mode.
+        assert_eq!(c.effective_optimize(), OptimizeMode::Auto);
+        let c = c.with_tenant(crate::govern::TenantId(3));
+        assert_eq!(c.tenant, Some(crate::govern::TenantId(3)));
     }
 
     #[test]

@@ -68,6 +68,7 @@
 
 use std::hash::Hash;
 use std::ops::Range;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use super::config::{JobConfig, OptimizeMode};
@@ -78,6 +79,7 @@ use crate::cache::{fingerprint, CacheActivity, MaterializationCache, ENTRY_SLOT_
 use crate::coordinator::collector::shard_count;
 use crate::coordinator::pipeline::{concat_shards, run_job_sharded, FlowMetrics, StreamMetrics};
 use crate::coordinator::planner::{self, PlanExec};
+use crate::govern::{AdmissionError, GovernReport};
 use crate::optimizer::value::RirValue;
 use crate::util::hash::fxhash;
 use crate::util::timer::Stopwatch;
@@ -219,6 +221,7 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     /// already-recorded stages keep their snapshot.
     pub fn with_config(mut self, config: JobConfig) -> Self {
         self.config = config;
+        self.rt.resolve_govern(&mut self.config);
         self
     }
 
@@ -558,7 +561,53 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     /// `T: Clone` is exercised only where the plan must turn borrowed
     /// chain outputs into owned results — no-op plans over borrowed
     /// slices and terminal element-wise chains; reduce outputs move.
+    ///
+    /// # Panics
+    ///
+    /// If the plan runs under a tenant whose admission is hard-rejected
+    /// ([`OverloadPolicy`](crate::govern::OverloadPolicy) `Reject` under
+    /// pressure) — use [`Dataset::try_collect`] to observe the rejection
+    /// as a value instead.
     pub fn collect(self) -> PlanOutput<T>
+    where
+        T: Clone,
+    {
+        match self.try_collect() {
+            Ok(out) => out,
+            Err(e) => panic!("plan rejected by admission control: {e}"),
+        }
+    }
+
+    /// [`Dataset::collect`] behind the admission gate: when the plan runs
+    /// under a tenant (see [`crate::govern`]), the session governor
+    /// admits, defers, degrades, or rejects the plan **before anything
+    /// executes**; a hard rejection returns [`AdmissionError`] instead of
+    /// panicking. Ungoverned plans always admit cleanly. The admission
+    /// outcome rides the report as [`PlanReport::govern`].
+    pub fn try_collect(self) -> Result<PlanOutput<T>, AdmissionError>
+    where
+        T: Clone,
+    {
+        let govern = match &self.config.govern {
+            Some(tenant) => {
+                let admission = self.rt.governor().admit_job(tenant, &self.config.heap)?;
+                Some(GovernReport {
+                    tenant: tenant.id(),
+                    name: tenant.spec().name.clone(),
+                    priority: tenant.spec().priority,
+                    quota: tenant.quota(),
+                    admission,
+                })
+            }
+            None => None,
+        };
+        let mut out = self.collect_inner();
+        out.report.govern = govern;
+        Ok(out)
+    }
+
+    /// The execution half of a collect, past the admission gate.
+    fn collect_inner(self) -> PlanOutput<T>
     where
         T: Clone,
     {
@@ -945,6 +994,28 @@ where
         if !tail.is_empty() {
             merged.push(tail);
         }
+        // Tenant cache-budget gate, delta flavour: a merge whose delta
+        // bytes would overrun the reading tenant's budget is denied — the
+        // caller's merged value is still correct to use, the stored entry
+        // just does not grow.
+        if let Some(tenant) = &cfg.govern {
+            if let Some(budget) = tenant.spec().cache_budget {
+                let live = tenant.counters().cache_live_bytes.load(Ordering::Relaxed);
+                if live.saturating_add(delta_bytes) > budget {
+                    tenant
+                        .counters()
+                        .cache_denials
+                        .fetch_add(1, Ordering::Relaxed);
+                    cache.record_read(waited);
+                    exec.note_cache(CacheActivity {
+                        hits: if waited { 0 } else { 1 },
+                        shared_in_flight: if waited { 1 } else { 0 },
+                        ..CacheActivity::default()
+                    });
+                    return merged;
+                }
+            }
+        }
         let stored: Arc<Vec<Vec<T>>> = Arc::new(merged);
         let stored_any: Arc<dyn std::any::Any + Send + Sync> = Arc::clone(&stored);
         let (installed, evictions) = cache.merge_delta(
@@ -1060,6 +1131,27 @@ where
                         .map(|t| t.heap_bytes() + ENTRY_SLOT_BYTES)
                         .sum::<u64>();
                 }
+                // Tenant cache-budget gate: an insert that would push the
+                // tenant's live cached bytes past its budget is denied —
+                // the claim is withdrawn (waiters recover and compute
+                // themselves) and the computed value is returned unstored.
+                if let Some(tenant) = &cfg.govern {
+                    if let Some(budget) = tenant.spec().cache_budget {
+                        let live = tenant.counters().cache_live_bytes.load(Ordering::Relaxed);
+                        if live.saturating_add(bytes) > budget {
+                            tenant
+                                .counters()
+                                .cache_denials
+                                .fetch_add(1, Ordering::Relaxed);
+                            drop(ticket);
+                            exec.note_cache(CacheActivity {
+                                misses: 1,
+                                ..CacheActivity::default()
+                            });
+                            return shards;
+                        }
+                    }
+                }
                 let stored: Arc<Vec<Vec<T>>> = Arc::new(shards);
                 let stored_any: Arc<dyn std::any::Any + Send + Sync> = Arc::clone(&stored);
                 let evictions = cache.complete(
@@ -1071,6 +1163,7 @@ where
                     seen,
                     &cfg.heap,
                     &cfg.cache,
+                    cfg.govern.clone(),
                 );
                 exec.note_cache(CacheActivity {
                     misses: 1,
@@ -1199,6 +1292,10 @@ pub struct PlanReport {
     /// [`StandingQuery`](crate::stream::StandingQuery) or a batch window
     /// collect, see [`crate::stream`]). `None` for plain batch collects.
     pub stream: Option<StreamMetrics>,
+    /// Governance accounting — tenant identity, quota, and how the plan
+    /// was admitted (see [`crate::govern`]). `None` for ungoverned plans
+    /// (no tenant on the config).
+    pub govern: Option<GovernReport>,
 }
 
 /// What a terminal collect returns: the materialized elements plus the

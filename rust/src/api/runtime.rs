@@ -41,6 +41,7 @@ use super::traits::{KeyValue, Mapper, Reducer};
 use crate::cache::MaterializationCache;
 use crate::coordinator::pipeline::FlowMetrics;
 use crate::coordinator::scheduler::WorkerPool;
+use crate::govern::{Governor, Scoreboard, TenantId, TenantSpec};
 use crate::memsim::SimHeap;
 use crate::optimizer::agent::OptimizerAgent;
 use crate::optimizer::value::RirValue;
@@ -66,6 +67,7 @@ pub struct Runtime {
     agent: OptimizerAgent,
     config: JobConfig,
     cache: MaterializationCache,
+    governor: Governor,
 }
 
 impl Runtime {
@@ -95,6 +97,7 @@ impl Runtime {
             agent,
             config,
             cache: MaterializationCache::new(),
+            governor: Governor::new(),
         }
     }
 
@@ -118,6 +121,63 @@ impl Runtime {
     /// [`Dataset::cache`]: crate::api::plan::Dataset::cache
     pub fn cache(&self) -> &MaterializationCache {
         &self.cache
+    }
+
+    /// The session governor: tenant registry, admission knobs
+    /// ([`Governor::set_watermark`], [`Governor::set_defer_deadline`]),
+    /// and the scoreboard — see [`crate::govern`]. A session with no
+    /// registered tenants is ungoverned: every path behaves exactly as it
+    /// did before the governance subsystem existed.
+    pub fn governor(&self) -> &Governor {
+        &self.governor
+    }
+
+    /// Register a tenant on this session and get its id (shorthand for
+    /// `governor().register(spec)`). Attach the id to a config with
+    /// [`JobConfig::with_tenant`] — or just take [`Runtime::config_for`].
+    pub fn register_tenant(&self, spec: TenantSpec) -> TenantId {
+        self.governor.register(spec)
+    }
+
+    /// The session default config bound to a registered tenant, with its
+    /// governance handle already resolved — what a tenant's driver thread
+    /// attaches to its plans.
+    ///
+    /// # Panics
+    ///
+    /// If `tenant` was not registered on this session.
+    pub fn config_for(&self, tenant: TenantId) -> JobConfig {
+        let mut config = self.config.clone().with_tenant(tenant);
+        self.resolve_govern(&mut config);
+        assert!(
+            config.govern.is_some(),
+            "config_for: {tenant:?} is not registered on this session"
+        );
+        config
+    }
+
+    /// Snapshot every tenant's live counters mid-flight (see
+    /// [`crate::govern::Scoreboard`]). Empty when no tenant is registered.
+    pub fn scoreboard(&self) -> Scoreboard {
+        self.governor.scoreboard()
+    }
+
+    /// Fill in `config.govern` from `config.tenant` (idempotent; clears
+    /// the handle when no tenant is set). Called wherever a config is
+    /// attached to a plan, job, or stream, so a config built before its
+    /// tenant was registered still resolves at attach time.
+    pub(crate) fn resolve_govern(&self, config: &mut JobConfig) {
+        let Some(id) = config.tenant else {
+            config.govern = None;
+            return;
+        };
+        let resolved = match &config.govern {
+            Some(handle) => handle.id() == id,
+            None => false,
+        };
+        if !resolved {
+            config.govern = self.governor.lookup(id);
+        }
     }
 
     /// The session's *default* simulated heap. Jobs inherit it unless
@@ -165,11 +225,13 @@ impl Runtime {
         mapper: Arc<dyn Mapper<I, K, V> + 'rt>,
         reducer: Arc<dyn Reducer<K, V> + 'rt>,
     ) -> JobBuilder<'rt, I, K, V> {
+        let mut config = self.config.clone();
+        self.resolve_govern(&mut config);
         JobBuilder {
             rt: self,
             mapper,
             reducer,
-            config: self.config.clone(),
+            config,
             sorter: None,
         }
     }
@@ -200,7 +262,9 @@ impl Runtime {
         &'rt self,
         source: impl InputSource<I> + 'rt,
     ) -> Dataset<'rt, I> {
-        Dataset::over(self, Box::new(source), self.config.clone())
+        let mut config = self.config.clone();
+        self.resolve_govern(&mut config);
+        Dataset::over(self, Box::new(source), config)
     }
 
     /// Open a **standing** plan over an unbounded feed: the same lazy
@@ -216,7 +280,9 @@ impl Runtime {
         &'rt self,
         source: crate::stream::StreamSource<T>,
     ) -> crate::stream::StreamDataset<'rt, T> {
-        crate::stream::StreamDataset::over(self, source, self.config.clone())
+        let mut config = self.config.clone();
+        self.resolve_govern(&mut config);
+        crate::stream::StreamDataset::over(self, source, config)
     }
 
     /// Spawn a dedicated **driver thread** running `f` over this shared
@@ -300,6 +366,7 @@ impl<'rt, I, K, V> JobBuilder<'rt, I, K, V> {
     /// session).
     pub fn with_config(mut self, config: JobConfig) -> Self {
         self.config = config;
+        self.rt.resolve_govern(&mut self.config);
         self
     }
 
@@ -667,6 +734,33 @@ mod tests {
         assert!(outs.iter().all(|o| o == &outs[0]));
         assert_eq!(outs[0].last().unwrap(), &("the".to_string(), 3));
         assert_eq!(rt.spawned_threads(), spawned, "tenants share one pool");
+    }
+
+    #[test]
+    fn tenant_configs_resolve_and_scoreboard_attributes_work() {
+        use crate::govern::{Priority, TenantSpec};
+        let rt = Runtime::with_config(JobConfig::fast().with_threads(2));
+        assert!(rt.governor().is_empty());
+        let id = rt.register_tenant(TenantSpec::new("serving").with_priority(Priority::Interactive));
+        let cfg = rt.config_for(id);
+        assert_eq!(cfg.tenant, Some(id));
+        let out = rt
+            .job(
+                wc_mapper,
+                RirReducer::<String, i64>::new(canon::sum_i64("rt.gov")),
+            )
+            .with_config(cfg)
+            .sorted()
+            .run(&lines());
+        assert_eq!(out.pairs.last().unwrap().value, 3);
+        let board = rt.scoreboard();
+        let row = board.get(id).unwrap();
+        assert!(row.executed > 0, "tenant tasks attributed: {row:?}");
+        assert_eq!(row.executed, row.submitted, "no tasks lost: {row:?}");
+        assert_eq!(row.queue_depth, 0);
+        assert_eq!(row.jobs_completed, 1);
+        assert_eq!(row.admitted, 1);
+        assert_eq!(row.rejected, 0);
     }
 
     #[test]

@@ -51,9 +51,11 @@ pub mod fingerprint;
 
 use std::any::Any;
 use std::collections::HashMap;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::api::config::CacheConfig;
+use crate::govern::TenantHandle;
 use crate::memsim::{CohortId, SimHeap};
 
 pub use fingerprint::Fingerprint;
@@ -145,6 +147,11 @@ struct Entry {
     /// original insert plus one per delta merge; all released on
     /// eviction/removal).
     cohorts: Vec<(Arc<SimHeap>, CohortId)>,
+    /// The tenant whose plan produced this entry, when it ran governed:
+    /// the entry's bytes (including later delta merges) count against
+    /// that tenant's live-cache budget until release (see
+    /// [`crate::govern`]).
+    tenant: Option<Arc<TenantHandle>>,
 }
 
 struct CacheInner {
@@ -312,6 +319,7 @@ impl MaterializationCache {
                             last_used: 0,
                             seen: None,
                             cohorts: Vec::new(),
+                            tenant: None,
                         },
                     );
                     inner.stats.misses += 1;
@@ -346,8 +354,10 @@ impl MaterializationCache {
     /// on the producing job's heap (cached bytes are live simulated
     /// heap), store the value, run pressure-aware eviction, and wake any
     /// plans waiting on the fingerprint. `seen` is the append high-water
-    /// mark for append-aware sources (`None` for fixed sources). Returns
-    /// the number of entries evicted by this insert.
+    /// mark for append-aware sources (`None` for fixed sources). When the
+    /// producing plan ran governed, `tenant` owns the entry's bytes: they
+    /// are charged to its live-cache counter now and credited back on
+    /// release. Returns the number of entries evicted by this insert.
     #[allow(clippy::too_many_arguments)]
     pub(crate) fn complete(
         &self,
@@ -359,6 +369,7 @@ impl MaterializationCache {
         seen: Option<u64>,
         heap: &Arc<SimHeap>,
         cfg: &CacheConfig,
+        tenant: Option<Arc<TenantHandle>>,
     ) -> u64 {
         ticket.done = true;
         let fp = ticket.fp;
@@ -383,6 +394,12 @@ impl MaterializationCache {
         entry.last_used = tick;
         entry.seen = seen;
         entry.cohorts = vec![(Arc::clone(heap), cohort)];
+        if let Some(t) = &tenant {
+            t.counters()
+                .cache_live_bytes
+                .fetch_add(bytes, Ordering::Relaxed);
+        }
+        entry.tenant = tenant;
         inner.stats.bytes_cached += bytes;
         inner.stats.entries += 1;
         let evicted = evict_under_pressure(&mut inner, fp, heap, cfg);
@@ -429,6 +446,14 @@ impl MaterializationCache {
                 e.seen = Some(new_seen);
                 e.last_used = tick;
                 e.cohorts.push((Arc::clone(heap), cohort));
+                // Delta bytes stay attributed to the entry's producing
+                // tenant — the entry is one budget unit however many
+                // merges grow it.
+                if let Some(t) = &e.tenant {
+                    t.counters()
+                        .cache_live_bytes
+                        .fetch_add(bytes_delta, Ordering::Relaxed);
+                }
                 true
             }
             _ => false,
@@ -485,11 +510,21 @@ impl MaterializationCache {
     }
 }
 
-/// Remove a ready entry and release its simulated-heap cohorts.
+/// Remove a ready entry and release its simulated-heap cohorts, crediting
+/// the owning tenant's live-cache bytes (and counting the eviction on its
+/// scoreboard) when the entry was produced governed.
 fn release_entry(inner: &mut CacheInner, fp: Fingerprint) {
     if let Some(e) = inner.entries.remove(&fp) {
         inner.stats.bytes_cached = inner.stats.bytes_cached.saturating_sub(e.bytes);
         inner.stats.entries = inner.stats.entries.saturating_sub(1);
+        if let Some(t) = &e.tenant {
+            t.counters()
+                .cache_live_bytes
+                .fetch_sub(e.bytes, Ordering::Relaxed);
+            t.counters()
+                .cache_evicted_bytes
+                .fetch_add(e.bytes, Ordering::Relaxed);
+        }
         for (heap, cohort) in e.cohorts {
             heap.release_cohort(cohort);
         }
@@ -611,7 +646,8 @@ mod tests {
         let heap = SimHeap::disabled();
         let fp = Fingerprint(42);
         let ticket = claim(&cache, fp);
-        cache.complete(ticket, store(vec![vec![1, 2], vec![3]]), 96, 3, 0.01, None, &heap, &cfg());
+        let v = store(vec![vec![1, 2], vec![3]]);
+        cache.complete(ticket, v, 96, 3, 0.01, None, &heap, &cfg(), None);
         match cache.begin(fp) {
             Begin::Ready { value, waited, .. } => {
                 assert!(!waited);
@@ -635,7 +671,8 @@ mod tests {
         drop(claim(&cache, fp)); // claimant "panicked"
         // The fingerprint is claimable again, not deadlocked in-flight.
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, None, &SimHeap::disabled(), &cfg());
+        let v = store(vec![vec![1]]);
+        cache.complete(t, v, 16, 1, 0.0, None, &SimHeap::disabled(), &cfg(), None);
         assert!(cache.contains(fp));
     }
 
@@ -658,7 +695,8 @@ mod tests {
         };
         // Give the waiter time to block on the in-flight entry.
         std::thread::sleep(std::time::Duration::from_millis(50));
-        cache.complete(ticket, store(vec![vec![5], vec![6]]), 32, 2, 0.0, None, &heap, &cfg());
+        let v = store(vec![vec![5], vec![6]]);
+        cache.complete(ticket, v, 32, 2, 0.0, None, &heap, &cfg(), None);
         let (shards, waited) = waiter.join().unwrap();
         assert_eq!(shards, 2);
         assert!(waited);
@@ -671,7 +709,8 @@ mod tests {
         let cache = MaterializationCache::new();
         let fp = Fingerprint(77);
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![1]]), 16, 1, 0.0, None, &SimHeap::disabled(), &cfg());
+        let v = store(vec![vec![1]]);
+        cache.complete(t, v, 16, 1, 0.0, None, &SimHeap::disabled(), &cfg(), None);
         match cache.begin(fp) {
             Begin::Ready { value, .. } => {
                 assert!(value.downcast::<Vec<Vec<String>>>().is_err());
@@ -693,9 +732,9 @@ mod tests {
         };
         let (a, b, c) = (Fingerprint(1), Fingerprint(2), Fingerprint(3));
         let t = claim(&cache, a);
-        cache.complete(t, store(vec![vec![1]]), 60, 1, 0.5, None, &heap, &tight);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 0.5, None, &heap, &tight, None);
         let t = claim(&cache, b);
-        cache.complete(t, store(vec![vec![2]]), 60, 1, 0.5, None, &heap, &tight);
+        cache.complete(t, store(vec![vec![2]]), 60, 1, 0.5, None, &heap, &tight, None);
         // Inserting B overflowed the cap: A (older) was evicted.
         assert!(!cache.contains(a));
         assert!(cache.contains(b));
@@ -704,7 +743,8 @@ mod tests {
         // it doesn't, and B is the only candidate.
         let _ = cache.begin(b);
         let t = claim(&cache, c);
-        let evicted = cache.complete(t, store(vec![vec![3]]), 60, 1, 0.5, None, &heap, &tight);
+        let v = store(vec![vec![3]]);
+        let evicted = cache.complete(t, v, 60, 1, 0.5, None, &heap, &tight, None);
         assert_eq!(evicted, 1);
         assert!(!cache.contains(b));
         assert!(cache.contains(c));
@@ -735,7 +775,7 @@ mod tests {
         for i in 0..4 {
             let fp = Fingerprint(100 + i);
             let t = claim(&cache, fp);
-            cache.complete(t, store(vec![vec![i as i64]]), 1000, 1, 0.1, None, &heap, &low);
+            cache.complete(t, store(vec![vec![i as i64]]), 1000, 1, 0.1, None, &heap, &low, None);
         }
         let s = cache.stats();
         assert!(s.evictions > 0, "pressure must evict: {s:?}");
@@ -748,13 +788,13 @@ mod tests {
         let cache = MaterializationCache::new();
         let fp = Fingerprint(55);
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![1]]), 4096, 1, 0.0, None, &heap, &cfg());
+        cache.complete(t, store(vec![vec![1]]), 4096, 1, 0.0, None, &heap, &cfg(), None);
         assert_eq!(cache.stats().bytes_cached, 4096);
         assert!(cache.remove(fp));
         assert!(!cache.remove(fp), "second removal finds nothing");
         assert_eq!(cache.stats().bytes_cached, 0);
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![2]]), 64, 1, 0.0, None, &heap, &cfg());
+        cache.complete(t, store(vec![vec![2]]), 64, 1, 0.0, None, &heap, &cfg(), None);
         cache.clear();
         assert_eq!(cache.stats().entries, 0);
         assert!(!cache.contains(fp));
@@ -766,7 +806,7 @@ mod tests {
         let heap = SimHeap::disabled();
         let fp = Fingerprint(91);
         let t = claim(&cache, fp);
-        cache.complete(t, store(vec![vec![1, 2]]), 32, 2, 0.0, Some(2), &heap, &cfg());
+        cache.complete(t, store(vec![vec![1, 2]]), 32, 2, 0.0, Some(2), &heap, &cfg(), None);
         let seen = match cache.begin(fp) {
             Begin::Ready { seen, waited, .. } => {
                 cache.record_read(waited);

@@ -151,6 +151,12 @@ pub struct StreamMetrics {
     /// Why the merge path was refused, when it was (`"optimizer off"`,
     /// a missing declared marker, or a non-mergeable holder).
     pub fallback_reason: Option<String>,
+    /// Producer pushes that blocked on a bounded source's full queue
+    /// ([`StreamSource::bounded`](crate::stream::StreamSource::bounded))
+    /// — the backpressure observable.
+    pub pushes_blocked: u64,
+    /// Producer `try_push` chunks handed back at a full queue.
+    pub pushes_shed: u64,
 }
 
 /// The memsim cohorts a job charges, released on drop — on success *and*
@@ -218,7 +224,9 @@ impl Drop for JobCohorts {
 
 /// The end-of-job epilogue every flow shares: read the job's exact
 /// allocation attribution, release its cohorts (by consuming `cohorts`),
-/// and assemble the GC delta plus the batch tag for the flow's metrics.
+/// credit the job's tenant (when governed) with its exact footprint —
+/// the budget signal [`crate::govern`] admission reads — and assemble
+/// the GC delta plus the batch tag for the flow's metrics.
 fn job_epilogue(
     cfg: &JobConfig,
     cohorts: JobCohorts,
@@ -226,11 +234,26 @@ fn job_epilogue(
     batch: &Batch<'_>,
 ) -> (GcStats, BatchId, PoolStats) {
     let (alloc_bytes, alloc_objects) = cohorts.allocated();
+    if let Some(tenant) = &cfg.govern {
+        tenant.note_job(alloc_bytes, alloc_objects);
+    }
     drop(cohorts);
     let mut gc = cfg.heap.stats().since(gc_before);
     gc.allocated_bytes = alloc_bytes;
     gc.allocated_objects = alloc_objects;
     (gc, batch.id(), batch.stats())
+}
+
+/// Open a job's tagged batch on the pool. Governed configs (a resolved
+/// tenant on [`JobConfig`]) carry the tenant's weighted-round-robin
+/// quota and scheduler counters into the pool's pick loop; ungoverned
+/// configs open a plain weight-1 batch — bit-for-bit the pre-governance
+/// behaviour.
+pub(crate) fn batch_for<'p>(pool: &'p WorkerPool, cfg: &JobConfig) -> Batch<'p> {
+    match &cfg.govern {
+        Some(tenant) => pool.batch_with(tenant.quota(), Some(Arc::clone(tenant.qos()))),
+        None => pool.batch(),
+    }
 }
 
 /// Run a complete MapReduce job on a transient pool (the legacy slice
@@ -292,7 +315,10 @@ where
     V: RirValue,
 {
     // --- Flow decision (the "class load time" hook) -------------------
-    let decision = match (cfg.optimize, reducer.rir()) {
+    // `effective_optimize` honours the tenant degrade latch: a governed
+    // job admitted under pressure runs the reduce flow (results are
+    // rewrite-independent, so this sheds speed, never correctness).
+    let decision = match (cfg.effective_optimize(), reducer.rir()) {
         (OptimizeMode::Off, _) => None,
         (_, None) => {
             agent.note_opaque();
@@ -311,7 +337,7 @@ where
 
     // One tagged batch per job: both phases submit through it, so this
     // job's scheduling is observable (and fair against concurrent jobs).
-    let batch = pool.batch();
+    let batch = batch_for(pool, cfg);
     match decision {
         Some(Decision::Combine(combiner)) => {
             run_combine_flow(&batch, mapper, feed, cfg, combiner)
@@ -738,16 +764,17 @@ where
     FC: Fn(&mut H, V) + Sync,
     FF: Fn(H) -> O + Sync,
 {
-    let combine = match cfg.optimize {
+    let optimize = cfg.effective_optimize();
+    let combine = match optimize {
         OptimizeMode::Off => false,
         _ => agent.process_declared(class, associative, commutative),
     };
     // One tagged batch per keyed stage, like `run_job_sharded`.
-    let batch = pool.batch();
+    let batch = batch_for(pool, cfg);
     if combine {
         run_declared_combine_flow(&batch, pairs, &init, &fold, &finish, feed, cfg)
     } else {
-        let reason = if matches!(cfg.optimize, OptimizeMode::Off) {
+        let reason = if matches!(optimize, OptimizeMode::Off) {
             "optimizer off"
         } else if !associative {
             "declared non-associative"

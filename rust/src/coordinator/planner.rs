@@ -386,6 +386,7 @@ impl<'rt> PlanExec<'rt> {
             materialized_pairs: self.materialized,
             cache: self.cache_total,
             stream: None,
+            govern: None,
         }
     }
 }

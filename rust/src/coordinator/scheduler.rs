@@ -35,6 +35,27 @@ pub struct PoolStats {
     pub steals: usize,
 }
 
+/// Lock-cheap per-tenant scheduling counters, attached to every batch a
+/// governed tenant opens ([`WorkerPool::batch_with`]). Workers bump these
+/// with relaxed atomics while holding the pool mutex anyway, so the cost
+/// over an ungoverned batch is a handful of uncontended increments; the
+/// scoreboard ([`crate::govern`]) snapshots them mid-flight without
+/// stopping the pool.
+#[derive(Debug, Default)]
+pub struct QosCounters {
+    /// Tasks submitted under this tenant's batches.
+    pub submitted: AtomicU64,
+    /// Tasks finished (including panicked ones — they consumed a worker).
+    pub executed: AtomicU64,
+    /// Tasks taken from a sibling worker's deque.
+    pub steals: AtomicU64,
+    /// Times a worker skipped one of this tenant's submissions that had
+    /// queued work because its round-robin credit was exhausted — the
+    /// preemption-by-not-picking observable: higher-quota tenants were
+    /// served first.
+    pub preempted: AtomicU64,
+}
+
 /// A batch-mode work-stealing pool.
 #[derive(Debug)]
 pub struct TaskPool {
@@ -176,6 +197,16 @@ struct Submission {
     /// Worker-concurrency cap for this submission (a session pool sized
     /// for the machine can still run a 1-thread ablation job).
     workers: usize,
+    /// Weighted-round-robin share: how many tasks this submission may be
+    /// served per credit round (≥ 1; ungoverned batches get 1, governed
+    /// ones `priority multiplier × tenant weight` — see [`crate::govern`]).
+    quota: u32,
+    /// Remaining credit in the current round. Decremented per pick; when
+    /// every runnable submission is out of credit, all credits refresh to
+    /// their quotas (deficit round-robin), so no submission ever starves.
+    credit: u32,
+    /// Per-tenant scheduling counters, when the batch is governed.
+    counters: Option<Arc<QosCounters>>,
     /// Queued-or-running tasks not yet finished.
     pending: usize,
     executed: usize,
@@ -201,10 +232,32 @@ struct PoolState {
 }
 
 impl PoolState {
-    /// The fair pick: scan submissions round-robin from the cursor; within
-    /// a submission prefer the worker's own deque (LIFO end, cache-warm),
-    /// then steal from victims (FIFO end). Returns the submission index,
-    /// the task, and whether it was stolen.
+    /// Pop a task for `wid` from one submission: own deque first (LIFO
+    /// end, cache-warm), then steal from victims (FIFO end). Returns the
+    /// task and whether it was stolen.
+    fn take(s: &mut Submission, wid: usize) -> Option<(Job, bool)> {
+        if let Some(t) = s.queues[wid].pop_back() {
+            return Some((t, false));
+        }
+        for soff in 1..s.workers {
+            let victim = (wid + soff) % s.workers;
+            if let Some(t) = s.queues[victim].pop_front() {
+                return Some((t, true));
+            }
+        }
+        None
+    }
+
+    /// The fair pick — **weighted** round-robin with credits (deficit
+    /// round-robin): scan submissions ring-order from the cursor, serving
+    /// only those with remaining `credit`; a zero-credit submission that
+    /// still has queued work is skipped (preemption-by-not-picking,
+    /// counted on its [`QosCounters`]). When every submission runnable by
+    /// this worker is out of credit, all credits refresh to their quotas
+    /// and the scan repeats — so a pick is guaranteed whenever any
+    /// submission has work for this worker, and with uniform quotas the
+    /// order degenerates to the classic unweighted round-robin. Returns
+    /// the submission index, the task, and whether it was stolen.
     fn pick(&mut self, wid: usize) -> Option<(usize, Job, bool)> {
         let n = self.subs.len();
         if n == 0 {
@@ -217,14 +270,42 @@ impl PoolState {
             if wid >= s.workers {
                 continue;
             }
-            if let Some(t) = s.queues[wid].pop_back() {
-                return Some((si, t, false));
-            }
-            for soff in 1..s.workers {
-                let victim = (wid + soff) % s.workers;
-                if let Some(t) = s.queues[victim].pop_front() {
-                    return Some((si, t, true));
+            if s.credit == 0 {
+                if s.queues.iter().any(|q| !q.is_empty()) {
+                    if let Some(c) = &s.counters {
+                        c.preempted.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
+                continue;
+            }
+            if let Some((t, stolen)) = Self::take(s, wid) {
+                s.credit -= 1;
+                return Some((si, t, stolen));
+            }
+        }
+        // Every submission with credit left had no queued work for this
+        // worker. If none is runnable even ignoring credit, the worker
+        // sleeps; otherwise start a fresh credit round and rescan — the
+        // rescan always finds the work the credit check skipped.
+        let runnable = self
+            .subs
+            .iter()
+            .any(|s| wid < s.workers && s.queues.iter().any(|q| !q.is_empty()));
+        if !runnable {
+            return None;
+        }
+        for s in &mut self.subs {
+            s.credit = s.quota;
+        }
+        for off in 0..n {
+            let si = (start + off) % n;
+            let s = &mut self.subs[si];
+            if wid >= s.workers {
+                continue;
+            }
+            if let Some((t, stolen)) = Self::take(s, wid) {
+                s.credit -= 1;
+                return Some((si, t, stolen));
             }
         }
         None
@@ -256,6 +337,11 @@ pub struct BatchSnapshot {
     pub executed: usize,
     pub steals: usize,
     pub panicked: usize,
+    /// Tasks still sitting in the submission's deques right now — the
+    /// genuinely *queued* share of `pending` (the remainder is currently
+    /// running on workers). This is the live depth the governance
+    /// scoreboard reports per tenant.
+    pub queue_depth: usize,
 }
 
 /// A **persistent, multi-tenant** work-stealing pool: worker OS threads
@@ -335,12 +421,25 @@ impl WorkerPool {
     /// Open a tagged batch handle: all submissions made through it share
     /// one [`BatchId`] and accumulate into one [`Batch::stats`]. One
     /// handle per job (or per plan stage) is the pipeline convention.
+    /// Ungoverned: round-robin quota 1, no tenant counters.
     pub fn batch(&self) -> Batch<'_> {
+        self.batch_with(1, None)
+    }
+
+    /// [`WorkerPool::batch`] with an explicit weighted-round-robin `quota`
+    /// (clamped ≥ 1) and optional per-tenant [`QosCounters`] — the
+    /// governed entry point: the pipeline opens every job of a registered
+    /// tenant through this, so the tenant's priority class and weight
+    /// shape how often workers serve its submissions (see
+    /// [`crate::govern`]).
+    pub fn batch_with(&self, quota: u32, counters: Option<Arc<QosCounters>>) -> Batch<'_> {
         Batch {
             pool: self,
             id: BatchId(self.next_batch.fetch_add(1, Ordering::Relaxed)),
             executed: AtomicUsize::new(0),
             steals: AtomicUsize::new(0),
+            quota: quota.max(1),
+            counters,
         }
     }
 
@@ -380,6 +479,7 @@ impl WorkerPool {
                 executed: s.executed,
                 steals: s.steals,
                 panicked: s.panicked,
+                queue_depth: s.queues.iter().map(VecDeque::len).sum(),
             });
         }
         out
@@ -390,9 +490,10 @@ impl WorkerPool {
         self.shared.lock().subs.len()
     }
 
-    /// Pool-lifetime totals across every batch ever run. Per-batch
-    /// [`PoolStats`] returned by `run` sum exactly to the delta of this
-    /// between any two quiescent points.
+    /// Pool-lifetime totals across every batch ever run — governed
+    /// ([`WorkerPool::batch_with`]) and ungoverned batches alike count
+    /// here. Per-batch [`PoolStats`] returned by `run` sum exactly to the
+    /// delta of this between any two quiescent points.
     pub fn totals(&self) -> PoolStats {
         let state = self.shared.lock();
         PoolStats {
@@ -404,7 +505,14 @@ impl WorkerPool {
     /// Submit one tagged task set and block until it drains. Returns the
     /// submission's stats and panicked count (the caller decides how to
     /// surface panics).
-    fn submit<'scope, F>(&self, id: BatchId, workers: usize, tasks: Vec<F>) -> (PoolStats, usize)
+    fn submit<'scope, F>(
+        &self,
+        id: BatchId,
+        workers: usize,
+        quota: u32,
+        counters: Option<Arc<QosCounters>>,
+        tasks: Vec<F>,
+    ) -> (PoolStats, usize)
     where
         F: FnOnce(usize) + Send + 'scope,
     {
@@ -428,6 +536,9 @@ impl WorkerPool {
             let job: Job = unsafe { std::mem::transmute(job) };
             queues[i % workers].push_back(job);
         }
+        if let Some(c) = &counters {
+            c.submitted.fetch_add(n_tasks as u64, Ordering::Relaxed);
+        }
         {
             let mut state = self.shared.lock();
             state.subs.push(Submission {
@@ -435,6 +546,9 @@ impl WorkerPool {
                 id,
                 queues,
                 workers,
+                quota,
+                credit: quota,
+                counters,
                 pending: n_tasks,
                 executed: 0,
                 steals: 0,
@@ -491,6 +605,10 @@ pub struct Batch<'p> {
     id: BatchId,
     executed: AtomicUsize,
     steals: AtomicUsize,
+    /// Weighted-round-robin share each submission of this handle gets.
+    quota: u32,
+    /// Tenant counters threaded into each submission (governed batches).
+    counters: Option<Arc<QosCounters>>,
 }
 
 impl<'p> Batch<'p> {
@@ -508,7 +626,9 @@ impl<'p> Batch<'p> {
     where
         F: FnOnce(usize) + Send + 'scope,
     {
-        let (stats, panicked) = self.pool.submit(self.id, workers, tasks);
+        let (stats, panicked) =
+            self.pool
+                .submit(self.id, workers, self.quota, self.counters.clone(), tasks);
         self.executed.fetch_add(stats.executed, Ordering::Relaxed);
         self.steals.fetch_add(stats.steals, Ordering::Relaxed);
         if panicked > 0 {
@@ -543,6 +663,9 @@ fn worker_loop(shared: &PoolShared, wid: usize) {
                 let s = &mut state.subs[si];
                 if stolen {
                     s.steals += 1;
+                    if let Some(c) = &s.counters {
+                        c.steals.fetch_add(1, Ordering::Relaxed);
+                    }
                 }
                 let sub = s.sub;
                 drop(state);
@@ -556,6 +679,9 @@ fn worker_loop(shared: &PoolShared, wid: usize) {
                 state.total_executed += 1;
                 if let Some(s) = state.subs.iter_mut().find(|s| s.sub == sub) {
                     s.executed += 1;
+                    if let Some(c) = &s.counters {
+                        c.executed.fetch_add(1, Ordering::Relaxed);
+                    }
                     if !ok {
                         s.panicked += 1;
                     }
@@ -588,6 +714,17 @@ fn worker_loop(shared: &PoolShared, wid: usize) {
 /// dependence on OS thread interleaving.
 #[doc(hidden)]
 pub fn simulate_pick_order(batch_sizes: &[usize], workers: usize) -> Vec<usize> {
+    let weighted: Vec<(usize, u32)> = batch_sizes.iter().map(|&n| (n, 1)).collect();
+    simulate_pick_order_weighted(&weighted, workers)
+}
+
+/// [`simulate_pick_order`] with a per-batch weighted-round-robin quota:
+/// batch `b` contributes `batches[b].0` tasks and is served up to
+/// `batches[b].1` picks per credit round. With uniform quotas this is
+/// exactly the unweighted simulation; with mixed quotas it is the
+/// deterministic substrate for the QoS share property tests.
+#[doc(hidden)]
+pub fn simulate_pick_order_weighted(batches: &[(usize, u32)], workers: usize) -> Vec<usize> {
     let workers = workers.max(1);
     let mut state = PoolState {
         subs: Vec::new(),
@@ -596,10 +733,11 @@ pub fn simulate_pick_order(batch_sizes: &[usize], workers: usize) -> Vec<usize> 
         total_steals: 0,
         shutdown: false,
     };
-    for (ord, &n) in batch_sizes.iter().enumerate() {
+    for (ord, &(n, quota)) in batches.iter().enumerate() {
         if n == 0 {
             continue;
         }
+        let quota = quota.max(1);
         let mut queues: Vec<VecDeque<Job>> = (0..workers).map(|_| VecDeque::new()).collect();
         for i in 0..n {
             let job: Job = Box::new(|_wid| {});
@@ -610,6 +748,9 @@ pub fn simulate_pick_order(batch_sizes: &[usize], workers: usize) -> Vec<usize> 
             id: BatchId(ord as u64),
             queues,
             workers,
+            quota,
+            credit: quota,
+            counters: None,
             pending: n,
             executed: 0,
             steals: 0,
@@ -980,5 +1121,57 @@ mod tests {
         assert_eq!(order.len(), 10);
         assert_eq!(&order[..4], &[0, 1, 0, 1]);
         assert!(order[4..].iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn weighted_quota_biases_pick_order() {
+        // Quota 2 vs 1: in each credit round batch 0 is served twice for
+        // every one serve of batch 1 (deficit round-robin), and batch 1
+        // still progresses every round — weighted share without
+        // starvation.
+        let order = simulate_pick_order_weighted(&[(6, 2), (3, 1)], 1);
+        assert_eq!(order, vec![0, 1, 0, 1, 0, 0, 1, 0, 0]);
+        // Uniform quotas degenerate to the classic round-robin.
+        assert_eq!(
+            simulate_pick_order_weighted(&[(4, 1), (4, 1), (4, 1)], 1),
+            simulate_pick_order(&[4, 4, 4], 1),
+        );
+    }
+
+    #[test]
+    fn zero_credit_submissions_count_preemptions() {
+        // Direct PoolState surgery: a zero-credit submission with queued
+        // work must be skipped (and its preemption counted) in favour of a
+        // submission that still has credit.
+        let c0 = Arc::new(QosCounters::default());
+        let mk = |sub: u64, credit: u32, counters: Option<Arc<QosCounters>>| {
+            let mut queues: Vec<VecDeque<Job>> = vec![VecDeque::new()];
+            queues[0].push_back(Box::new(|_wid| {}) as Job);
+            Submission {
+                sub,
+                id: BatchId(sub),
+                queues,
+                workers: 1,
+                quota: 1,
+                credit,
+                counters,
+                pending: 1,
+                executed: 0,
+                steals: 0,
+                panicked: 0,
+                done_cv: Arc::new(Condvar::new()),
+            }
+        };
+        let mut state = PoolState {
+            subs: vec![mk(0, 0, Some(Arc::clone(&c0))), mk(1, 1, None)],
+            rr: 0,
+            total_executed: 0,
+            total_steals: 0,
+            shutdown: false,
+        };
+        let (si, _task, stolen) = state.pick(0).expect("sub 1 has credit and work");
+        assert_eq!(si, 1, "zero-credit sub 0 is passed over");
+        assert!(!stolen);
+        assert_eq!(c0.preempted.load(Ordering::Relaxed), 1);
     }
 }

@@ -1,0 +1,785 @@
+//! Tenant governance: admission control, QoS budgets, and the live
+//! scoreboard.
+//!
+//! PR 4 made concurrent plans on one [`Runtime`](crate::api::Runtime)
+//! *fair* (tagged-batch round-robin); this module makes them *governed*.
+//! A tenant is registered once per session
+//! ([`Runtime::register_tenant`](crate::api::Runtime::register_tenant))
+//! with a [`TenantSpec`] — priority class, worker-share weight, simulated
+//! heap budget, cache byte budget, and an overload policy — and from then
+//! on every job, plan stage, cache entry, and standing query that runs
+//! under a tenant-tagged [`JobConfig`](crate::api::config::JobConfig) is
+//! attributed to it:
+//!
+//! * **QoS scheduling.** The tenant's priority-class multiplier × weight
+//!   becomes its submissions' weighted-round-robin quota in the session
+//!   pool's pick loop (deficit round-robin — see
+//!   [`crate::coordinator::scheduler`]). Higher classes are served more
+//!   picks per credit round; lower classes are *preempted by not being
+//!   picked*, never descheduled mid-task, and never starved (credits
+//!   refresh whenever every runnable submission is out of credit).
+//! * **Admission control.** Each plan collect passes an admission gate
+//!   before anything executes. Pressure is detected from the framework's
+//!   own signals: the tenant's **previous job's exact simulated-heap
+//!   footprint** versus its byte budget, and global [`SimHeap`] occupancy
+//!   versus a watermark. The tenant's [`OverloadPolicy`] decides what an
+//!   over-pressure submission does: hard-reject, defer with a deadline,
+//!   or degrade (run with the optimizer forced off — results are
+//!   rewrite-independent, so this trades speed for admission, never
+//!   correctness).
+//! * **Scoreboard.** Every counter here is a relaxed atomic bumped on
+//!   paths that already hold the relevant lock or own the data, so
+//!   [`Runtime::scoreboard`](crate::api::Runtime::scoreboard) snapshots
+//!   the whole session mid-flight without stopping the pool.
+//!
+//! # How budgets map onto `SimHeap` cohorts
+//!
+//! The heap budget is *not* a reservation. Every job already charges its
+//! allocations to scoped cohorts on the session's simulated heap
+//! (`job.scratch`, `job.results`, collector cohorts — see
+//! [`crate::coordinator::pipeline`] and [`crate::memsim`]), and the job
+//! epilogue reads the exact per-cohort `(bytes, objects)` attribution
+//! before releasing them. Governance piggybacks on that attribution: the
+//! epilogue stores the job's total cohort bytes as the tenant's
+//! `heap_last_job_bytes`, and the *next* admission for the same tenant
+//! compares that exact figure against [`TenantSpec::heap_budget`]. A
+//! tenant whose last job overran its budget is therefore throttled on its
+//! next submission — feedback control on measured footprint, not a guess
+//! made before the job runs. Cache budgets work the same way against the
+//! bytes the cache layer charges to its `cache.entry` cohorts: an insert
+//! that would push the tenant's live cached bytes past
+//! [`TenantSpec::cache_budget`] is denied (the plan keeps its computed
+//! value; nothing is stored) and counted.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::scheduler::QosCounters;
+use crate::memsim::SimHeap;
+
+/// Identifies a registered tenant within one
+/// [`Runtime`](crate::api::Runtime) session (dense, assigned by
+/// [`Governor::register`] in registration order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TenantId(pub u64);
+
+/// QoS priority class: the coarse tier of a tenant's scheduling share.
+/// The class multiplier scales the tenant's weighted-round-robin quota
+/// (`multiplier × weight`), so an Interactive tenant with weight 1 is
+/// served four picks per credit round for every one pick of a Background
+/// tenant — and Background still progresses every round (deficit
+/// round-robin never starves).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive serving traffic (multiplier 4).
+    Interactive,
+    /// Ordinary analytics (multiplier 2) — the default class.
+    Batch,
+    /// Best-effort backfill (multiplier 1).
+    Background,
+}
+
+impl Priority {
+    /// The quota multiplier this class contributes.
+    pub fn multiplier(self) -> u32 {
+        match self {
+            Priority::Interactive => 4,
+            Priority::Batch => 2,
+            Priority::Background => 1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+            Priority::Background => "background",
+        }
+    }
+}
+
+/// What an over-pressure submission does at the admission gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OverloadPolicy {
+    /// Refuse the submission outright:
+    /// [`Dataset::try_collect`](crate::api::plan::Dataset::try_collect)
+    /// returns [`AdmissionError`] (and plain `collect()` panics). Nothing
+    /// runs; the rejection is counted on the scoreboard.
+    Reject,
+    /// Queue with a deadline: poll until the pressure clears or the
+    /// governor's defer deadline ([`Governor::set_defer_deadline`])
+    /// elapses, then admit either way — work is *delayed*, never lost.
+    Defer,
+    /// Admit immediately but force the tenant's jobs to run with the
+    /// optimizer off until a clean admission clears the latch. Rewrites
+    /// never change results (the equivalence suites pin that), so this
+    /// sheds optimizer speed, not correctness — the cheapest pressure
+    /// valve.
+    Degrade,
+}
+
+/// A tenant's registration: identity, QoS class, and budgets. Budgets
+/// left `None` are unlimited in that dimension.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Human-readable name (scoreboard rows, error messages).
+    pub name: String,
+    /// QoS priority class (default [`Priority::Batch`]).
+    pub priority: Priority,
+    /// Worker-share weight within the class (≥ 1; default 1). The
+    /// effective scheduler quota is `priority.multiplier() × weight`.
+    pub weight: u32,
+    /// Simulated-heap byte budget per job: admission pressure triggers
+    /// when the tenant's previous job allocated more cohort bytes than
+    /// this (see the module docs for the cohort mapping).
+    pub heap_budget: Option<u64>,
+    /// Cap on the tenant's live materialization-cache bytes: inserts
+    /// that would exceed it are denied (computed value kept, entry not
+    /// stored) and counted as `cache_denials`.
+    pub cache_budget: Option<u64>,
+    /// What happens when admission detects pressure (default
+    /// [`OverloadPolicy::Defer`]).
+    pub overload: OverloadPolicy,
+}
+
+impl TenantSpec {
+    /// A spec with defaults: Batch class, weight 1, unlimited budgets,
+    /// Defer on overload.
+    pub fn new(name: &str) -> Self {
+        TenantSpec {
+            name: name.to_string(),
+            priority: Priority::Batch,
+            weight: 1,
+            heap_budget: None,
+            cache_budget: None,
+            overload: OverloadPolicy::Defer,
+        }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> Self {
+        self.priority = priority;
+        self
+    }
+
+    pub fn with_weight(mut self, weight: u32) -> Self {
+        self.weight = weight.max(1);
+        self
+    }
+
+    pub fn with_heap_budget(mut self, bytes: u64) -> Self {
+        self.heap_budget = Some(bytes);
+        self
+    }
+
+    pub fn with_cache_budget(mut self, bytes: u64) -> Self {
+        self.cache_budget = Some(bytes);
+        self
+    }
+
+    pub fn with_overload(mut self, policy: OverloadPolicy) -> Self {
+        self.overload = policy;
+        self
+    }
+}
+
+/// The non-scheduler half of a tenant's live counters (the scheduler half
+/// is [`QosCounters`]). All relaxed atomics: each is bumped by exactly
+/// one logical writer at a time (the tenant's own job epilogue, admission
+/// gate, or cache insert), and the scoreboard tolerates torn cross-field
+/// reads — it is a monitoring surface, not a ledger.
+#[derive(Debug, Default)]
+pub struct TenantCounters {
+    /// Jobs (eager jobs and plan stages) completed under this tenant.
+    pub jobs_completed: AtomicU64,
+    /// Total simulated-heap cohort bytes attributed across all jobs.
+    pub heap_allocated_bytes: AtomicU64,
+    /// Total simulated-heap objects attributed across all jobs.
+    pub heap_allocated_objects: AtomicU64,
+    /// Exact cohort bytes of the most recent completed job — the budget
+    /// signal the next admission compares (see module docs).
+    pub heap_last_job_bytes: AtomicU64,
+    /// Admissions that went through (clean, deferred, or degraded).
+    pub admitted: AtomicU64,
+    /// Hard rejections ([`OverloadPolicy::Reject`] under pressure).
+    pub rejected: AtomicU64,
+    /// Admissions that waited at the gate ([`OverloadPolicy::Defer`]).
+    pub deferred: AtomicU64,
+    /// Total milliseconds spent waiting at the defer gate.
+    pub defer_wait_ms: AtomicU64,
+    /// Admissions that set the degrade latch
+    /// ([`OverloadPolicy::Degrade`] under pressure).
+    pub degraded: AtomicU64,
+    /// Cache inserts denied by the tenant's cache byte budget.
+    pub cache_denials: AtomicU64,
+    /// Live materialization-cache bytes currently charged to this tenant
+    /// (inserts add, evictions/removals subtract).
+    pub cache_live_bytes: AtomicU64,
+    /// Total cache bytes released from this tenant's entries (evictions,
+    /// explicit removals, session clears).
+    pub cache_evicted_bytes: AtomicU64,
+    /// Producer pushes that blocked on this tenant's bounded streams.
+    pub stream_pushes_blocked: AtomicU64,
+    /// Producer `try_push` calls shed by this tenant's bounded streams.
+    pub stream_pushes_shed: AtomicU64,
+    /// Standing-query chunk ingests delayed at the backpressure gate.
+    /// Stream ingest never *drops* data — dropping would break digest
+    /// identity with serial baselines — so Reject-policy tenants are
+    /// deferred here too.
+    pub ingest_deferred: AtomicU64,
+    /// Degrade latch: while set, the tenant's jobs run with the
+    /// optimizer forced off (the config layer consults it when choosing
+    /// the execution flow); cleared by the next clean admission.
+    degrade: AtomicBool,
+}
+
+/// One registered tenant: its spec plus every live counter surface. The
+/// runtime hands `Arc<TenantHandle>`s into job configs, batches, cache
+/// entries, and standing queries, so attribution costs one pointer per
+/// object and counter bumps are uncontended relaxed atomics.
+#[derive(Debug)]
+pub struct TenantHandle {
+    id: TenantId,
+    spec: TenantSpec,
+    qos: Arc<QosCounters>,
+    counters: TenantCounters,
+}
+
+impl TenantHandle {
+    pub fn id(&self) -> TenantId {
+        self.id
+    }
+
+    pub fn spec(&self) -> &TenantSpec {
+        &self.spec
+    }
+
+    /// The scheduler-side counters (shared with every batch this tenant
+    /// opens).
+    pub fn qos(&self) -> &Arc<QosCounters> {
+        &self.qos
+    }
+
+    pub fn counters(&self) -> &TenantCounters {
+        &self.counters
+    }
+
+    /// The weighted-round-robin quota this tenant's submissions carry:
+    /// priority-class multiplier × weight.
+    pub fn quota(&self) -> u32 {
+        self.spec
+            .priority
+            .multiplier()
+            .saturating_mul(self.spec.weight.max(1))
+    }
+
+    /// Whether the degrade latch is set (jobs run optimizer-off).
+    pub(crate) fn degraded(&self) -> bool {
+        self.counters.degrade.load(Ordering::Relaxed)
+    }
+
+    /// Job-epilogue attribution: one completed job's exact cohort
+    /// footprint.
+    pub(crate) fn note_job(&self, alloc_bytes: u64, alloc_objects: u64) {
+        self.counters.jobs_completed.fetch_add(1, Ordering::Relaxed);
+        self.counters
+            .heap_allocated_bytes
+            .fetch_add(alloc_bytes, Ordering::Relaxed);
+        self.counters
+            .heap_allocated_objects
+            .fetch_add(alloc_objects, Ordering::Relaxed);
+        self.counters
+            .heap_last_job_bytes
+            .store(alloc_bytes, Ordering::Relaxed);
+    }
+}
+
+/// How an admitted submission got through the gate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// No pressure: admitted immediately (clears any degrade latch).
+    Clean,
+    /// Pressure under [`OverloadPolicy::Defer`]: admitted after waiting
+    /// at the gate (until clear or deadline).
+    Deferred,
+    /// Pressure under [`OverloadPolicy::Degrade`]: admitted with the
+    /// optimizer forced off.
+    Degraded,
+}
+
+/// A hard admission rejection ([`OverloadPolicy::Reject`] under
+/// pressure). Returned by
+/// [`Dataset::try_collect`](crate::api::plan::Dataset::try_collect);
+/// plain `collect()` panics with it.
+#[derive(Clone, Debug)]
+pub struct AdmissionError {
+    pub tenant: TenantId,
+    /// The tenant's registered name.
+    pub name: String,
+    /// Which pressure signal fired.
+    pub reason: String,
+}
+
+impl fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "tenant `{}` ({:?}) not admitted: {}",
+            self.name, self.tenant, self.reason
+        )
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Per-plan governance accounting, attached to
+/// [`PlanReport`](crate::api::plan::PlanReport) when the plan ran under a
+/// tenant. For streaming outputs `admission` is [`Admission::Clean`]:
+/// streaming admission acts per-ingest at the backpressure gate, and its
+/// outcomes land on the scoreboard, not here.
+#[derive(Clone, Debug)]
+pub struct GovernReport {
+    pub tenant: TenantId,
+    pub name: String,
+    pub priority: Priority,
+    /// The weighted-round-robin quota the plan's batches carried.
+    pub quota: u32,
+    pub admission: Admission,
+}
+
+/// The session governor a [`Runtime`](crate::api::Runtime) owns: the
+/// tenant registry plus the admission knobs. Registration is append-only
+/// (`TenantId`s are dense indices); lookups clone an `Arc`, and the
+/// steady-state read path takes the registry `RwLock` only for reads.
+#[derive(Debug)]
+pub struct Governor {
+    tenants: RwLock<Vec<Arc<TenantHandle>>>,
+    /// Global heap-occupancy fraction at which admission sees pressure.
+    watermark: RwLock<f64>,
+    /// How long a [`OverloadPolicy::Defer`] admission may wait at the
+    /// gate before being admitted anyway.
+    defer_deadline: RwLock<Duration>,
+}
+
+impl Governor {
+    pub(crate) fn new() -> Self {
+        Governor {
+            tenants: RwLock::new(Vec::new()),
+            watermark: RwLock::new(0.9),
+            defer_deadline: RwLock::new(Duration::from_millis(25)),
+        }
+    }
+
+    /// Register a tenant; the returned id tags job configs
+    /// ([`JobConfig::with_tenant`](crate::api::config::JobConfig::with_tenant),
+    /// [`Runtime::config_for`](crate::api::Runtime::config_for)).
+    pub fn register(&self, spec: TenantSpec) -> TenantId {
+        let mut tenants = self.tenants.write().unwrap();
+        let id = TenantId(tenants.len() as u64);
+        tenants.push(Arc::new(TenantHandle {
+            id,
+            spec,
+            qos: Arc::new(QosCounters::default()),
+            counters: TenantCounters::default(),
+        }));
+        id
+    }
+
+    /// The handle for a registered tenant, if any.
+    pub fn lookup(&self, id: TenantId) -> Option<Arc<TenantHandle>> {
+        self.tenants
+            .read()
+            .unwrap()
+            .get(id.0 as usize)
+            .map(Arc::clone)
+    }
+
+    /// Number of registered tenants.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.read().unwrap().len()
+    }
+
+    /// True when no tenant is registered — the session is ungoverned and
+    /// every code path behaves exactly as before this subsystem existed.
+    pub fn is_empty(&self) -> bool {
+        self.tenant_count() == 0
+    }
+
+    /// Set the global heap-occupancy pressure watermark (fraction of the
+    /// heap's `total_bytes`; clamped to `0.0..=1.0`; default 0.9).
+    pub fn set_watermark(&self, watermark: f64) {
+        *self.watermark.write().unwrap() = watermark.clamp(0.0, 1.0);
+    }
+
+    /// Set how long Defer-policy admissions wait at the gate before
+    /// being admitted anyway (default 25 ms; soak tests shrink it).
+    pub fn set_defer_deadline(&self, deadline: Duration) {
+        *self.defer_deadline.write().unwrap() = deadline;
+    }
+
+    /// The pressure signal, if any: tenant heap budget exceeded by the
+    /// previous job's exact footprint, or global heap occupancy at/over
+    /// the watermark.
+    fn pressure(&self, tenant: &TenantHandle, heap: &SimHeap) -> Option<String> {
+        if let Some(budget) = tenant.spec.heap_budget {
+            let last = tenant.counters.heap_last_job_bytes.load(Ordering::Relaxed);
+            if last > budget {
+                return Some(format!(
+                    "heap budget exceeded: previous job allocated {last} B of a {budget} B budget"
+                ));
+            }
+        }
+        let watermark = *self.watermark.read().unwrap();
+        let occupancy = heap.occupancy();
+        if occupancy >= watermark {
+            return Some(format!(
+                "heap occupancy {:.0}% at/over the {:.0}% watermark",
+                occupancy * 100.0,
+                watermark * 100.0
+            ));
+        }
+        None
+    }
+
+    /// The admission gate for one job-shaped submission (a plan
+    /// collect). Applies the tenant's [`OverloadPolicy`] under pressure;
+    /// a clean admission clears the degrade latch.
+    pub(crate) fn admit_job(
+        &self,
+        tenant: &Arc<TenantHandle>,
+        heap: &SimHeap,
+    ) -> Result<Admission, AdmissionError> {
+        let Some(reason) = self.pressure(tenant, heap) else {
+            tenant.counters.degrade.store(false, Ordering::Relaxed);
+            tenant.counters.admitted.fetch_add(1, Ordering::Relaxed);
+            return Ok(Admission::Clean);
+        };
+        match tenant.spec.overload {
+            OverloadPolicy::Reject => {
+                tenant.counters.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(AdmissionError {
+                    tenant: tenant.id,
+                    name: tenant.spec.name.clone(),
+                    reason,
+                })
+            }
+            OverloadPolicy::Defer => {
+                let deadline = *self.defer_deadline.read().unwrap();
+                let start = Instant::now();
+                while start.elapsed() < deadline {
+                    std::thread::sleep(Duration::from_millis(1));
+                    if self.pressure(tenant, heap).is_none() {
+                        break;
+                    }
+                }
+                tenant.counters.deferred.fetch_add(1, Ordering::Relaxed);
+                tenant
+                    .counters
+                    .defer_wait_ms
+                    .fetch_add(start.elapsed().as_millis() as u64, Ordering::Relaxed);
+                tenant.counters.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Admission::Deferred)
+            }
+            OverloadPolicy::Degrade => {
+                tenant.counters.degrade.store(true, Ordering::Relaxed);
+                tenant.counters.degraded.fetch_add(1, Ordering::Relaxed);
+                tenant.counters.admitted.fetch_add(1, Ordering::Relaxed);
+                Ok(Admission::Degraded)
+            }
+        }
+    }
+
+    /// The streaming backpressure gate: under pressure, delay the ingest
+    /// (up to the defer deadline) but never drop it — dropping would
+    /// break digest identity with serial baselines, so Reject-policy
+    /// tenants are deferred here too. Counted as `ingest_deferred`.
+    pub(crate) fn gate_ingest(&self, tenant: &Arc<TenantHandle>, heap: &SimHeap) {
+        if self.pressure(tenant, heap).is_none() {
+            return;
+        }
+        tenant
+            .counters
+            .ingest_deferred
+            .fetch_add(1, Ordering::Relaxed);
+        let deadline = *self.defer_deadline.read().unwrap();
+        let start = Instant::now();
+        while start.elapsed() < deadline {
+            std::thread::sleep(Duration::from_millis(1));
+            if self.pressure(tenant, heap).is_none() {
+                break;
+            }
+        }
+    }
+
+    /// Snapshot every tenant's counters mid-flight (no pool pause; see
+    /// [`TenantCounters`] for the consistency contract).
+    pub fn scoreboard(&self) -> Scoreboard {
+        let tenants = self.tenants.read().unwrap();
+        Scoreboard {
+            tenants: tenants.iter().map(|t| TenantSnapshot::of(t)).collect(),
+        }
+    }
+}
+
+/// One tenant's row on the [`Scoreboard`]: spec identity plus every
+/// counter, read at snapshot time.
+#[derive(Clone, Debug)]
+pub struct TenantSnapshot {
+    pub id: TenantId,
+    pub name: String,
+    pub priority: Priority,
+    pub weight: u32,
+    /// Effective weighted-round-robin quota (multiplier × weight).
+    pub quota: u32,
+    /// Scheduler: tasks submitted under this tenant's batches.
+    pub submitted: u64,
+    /// Scheduler: tasks finished.
+    pub executed: u64,
+    /// Scheduler: tasks taken from a sibling worker's deque.
+    pub steals: u64,
+    /// Scheduler: picks skipped while out of round-robin credit.
+    pub preempted: u64,
+    /// Scheduler: tasks submitted but not yet finished (queued or
+    /// running) at snapshot time.
+    pub queue_depth: u64,
+    pub jobs_completed: u64,
+    pub heap_allocated_bytes: u64,
+    pub heap_allocated_objects: u64,
+    pub heap_last_job_bytes: u64,
+    pub admitted: u64,
+    pub rejected: u64,
+    pub deferred: u64,
+    pub defer_wait_ms: u64,
+    pub degraded: u64,
+    pub cache_denials: u64,
+    pub cache_live_bytes: u64,
+    pub cache_evicted_bytes: u64,
+    pub stream_pushes_blocked: u64,
+    pub stream_pushes_shed: u64,
+    pub ingest_deferred: u64,
+}
+
+impl TenantSnapshot {
+    fn of(t: &TenantHandle) -> TenantSnapshot {
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        let submitted = load(&t.qos.submitted);
+        let executed = load(&t.qos.executed);
+        TenantSnapshot {
+            id: t.id,
+            name: t.spec.name.clone(),
+            priority: t.spec.priority,
+            weight: t.spec.weight,
+            quota: t.quota(),
+            submitted,
+            executed,
+            steals: load(&t.qos.steals),
+            preempted: load(&t.qos.preempted),
+            queue_depth: submitted.saturating_sub(executed),
+            jobs_completed: load(&t.counters.jobs_completed),
+            heap_allocated_bytes: load(&t.counters.heap_allocated_bytes),
+            heap_allocated_objects: load(&t.counters.heap_allocated_objects),
+            heap_last_job_bytes: load(&t.counters.heap_last_job_bytes),
+            admitted: load(&t.counters.admitted),
+            rejected: load(&t.counters.rejected),
+            deferred: load(&t.counters.deferred),
+            defer_wait_ms: load(&t.counters.defer_wait_ms),
+            degraded: load(&t.counters.degraded),
+            cache_denials: load(&t.counters.cache_denials),
+            cache_live_bytes: load(&t.counters.cache_live_bytes),
+            cache_evicted_bytes: load(&t.counters.cache_evicted_bytes),
+            stream_pushes_blocked: load(&t.counters.stream_pushes_blocked),
+            stream_pushes_shed: load(&t.counters.stream_pushes_shed),
+            ingest_deferred: load(&t.counters.ingest_deferred),
+        }
+    }
+}
+
+/// A mid-flight snapshot of every tenant's counters
+/// ([`Runtime::scoreboard`](crate::api::Runtime::scoreboard)).
+#[derive(Clone, Debug)]
+pub struct Scoreboard {
+    /// One row per registered tenant, in registration (id) order.
+    pub tenants: Vec<TenantSnapshot>,
+}
+
+impl Scoreboard {
+    pub fn get(&self, id: TenantId) -> Option<&TenantSnapshot> {
+        self.tenants.get(id.0 as usize)
+    }
+
+    /// Render the scoreboard as a fixed-width text table (the `mr4r
+    /// govern` CLI output).
+    pub fn render(&self) -> String {
+        use std::fmt::Write;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "{:<4} {:<16} {:<12} {:>5} {:>9} {:>9} {:>6} {:>8} {:>8} {:>4} {:>4} {:>4} {:>6} {:>12}",
+            "id",
+            "tenant",
+            "class",
+            "quota",
+            "executed",
+            "submitted",
+            "steal",
+            "preempt",
+            "adm",
+            "rej",
+            "def",
+            "deg",
+            "deny$",
+            "heap B",
+        );
+        for t in &self.tenants {
+            let _ = writeln!(
+                out,
+                "{:<4} {:<16} {:<12} {:>5} {:>9} {:>9} {:>6} {:>8} {:>8} {:>4} {:>4} {:>4} {:>6} {:>12}",
+                t.id.0,
+                t.name,
+                t.priority.label(),
+                t.quota,
+                t.executed,
+                t.submitted,
+                t.steals,
+                t.preempted,
+                t.admitted,
+                t.rejected,
+                t.deferred,
+                t.degraded,
+                t.cache_denials,
+                t.heap_allocated_bytes,
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memsim::{HeapParams, SimHeap};
+
+    fn heap() -> Arc<SimHeap> {
+        SimHeap::new(HeapParams::no_injection())
+    }
+
+    #[test]
+    fn quota_is_class_multiplier_times_weight() {
+        let g = Governor::new();
+        let interactive =
+            g.register(TenantSpec::new("i").with_priority(Priority::Interactive).with_weight(3));
+        let background =
+            g.register(TenantSpec::new("b").with_priority(Priority::Background));
+        assert_eq!(g.lookup(interactive).unwrap().quota(), 12);
+        assert_eq!(g.lookup(background).unwrap().quota(), 1);
+        // Weight clamps at the builder, so quota is never 0.
+        let clamped = g.register(TenantSpec::new("c").with_weight(0));
+        assert_eq!(g.lookup(clamped).unwrap().quota(), 2);
+    }
+
+    #[test]
+    fn clean_admission_counts_and_clears_latch() {
+        let g = Governor::new();
+        let id = g.register(TenantSpec::new("t"));
+        let t = g.lookup(id).unwrap();
+        t.counters.degrade.store(true, Ordering::Relaxed);
+        let heap = heap();
+        assert_eq!(g.admit_job(&t, &heap).unwrap(), Admission::Clean);
+        assert!(!t.degraded(), "clean admission clears the degrade latch");
+        assert_eq!(t.counters.admitted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn reject_policy_errors_under_budget_pressure() {
+        let g = Governor::new();
+        let id = g.register(
+            TenantSpec::new("hog")
+                .with_heap_budget(10)
+                .with_overload(OverloadPolicy::Reject),
+        );
+        let t = g.lookup(id).unwrap();
+        let heap = heap();
+        // Under budget: clean.
+        assert!(g.admit_job(&t, &heap).is_ok());
+        // The "previous job" overran the budget → hard reject.
+        t.note_job(100, 5);
+        let err = g.admit_job(&t, &heap).unwrap_err();
+        assert_eq!(err.tenant, id);
+        assert!(err.reason.contains("heap budget"), "{}", err.reason);
+        assert_eq!(t.counters.rejected.load(Ordering::Relaxed), 1);
+        assert!(err.to_string().contains("hog"));
+    }
+
+    #[test]
+    fn defer_policy_waits_then_admits() {
+        let g = Governor::new();
+        g.set_defer_deadline(Duration::from_millis(2));
+        let id = g.register(TenantSpec::new("slow").with_heap_budget(1));
+        let t = g.lookup(id).unwrap();
+        t.note_job(50, 1);
+        let heap = heap();
+        assert_eq!(g.admit_job(&t, &heap).unwrap(), Admission::Deferred);
+        assert_eq!(t.counters.deferred.load(Ordering::Relaxed), 1);
+        assert_eq!(t.counters.admitted.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn degrade_policy_sets_latch_until_clean() {
+        let g = Governor::new();
+        let id = g.register(
+            TenantSpec::new("soft")
+                .with_heap_budget(1)
+                .with_overload(OverloadPolicy::Degrade),
+        );
+        let t = g.lookup(id).unwrap();
+        t.note_job(50, 1);
+        let heap = heap();
+        assert_eq!(g.admit_job(&t, &heap).unwrap(), Admission::Degraded);
+        assert!(t.degraded());
+        // A small job clears the pressure; the next admission is clean
+        // and lifts the latch.
+        t.note_job(0, 0);
+        assert_eq!(g.admit_job(&t, &heap).unwrap(), Admission::Clean);
+        assert!(!t.degraded());
+    }
+
+    #[test]
+    fn scoreboard_snapshots_counters_mid_flight() {
+        let g = Governor::new();
+        let a = g.register(TenantSpec::new("a").with_priority(Priority::Interactive));
+        let b = g.register(TenantSpec::new("b"));
+        let ta = g.lookup(a).unwrap();
+        ta.qos.submitted.fetch_add(10, Ordering::Relaxed);
+        ta.qos.executed.fetch_add(7, Ordering::Relaxed);
+        ta.note_job(4096, 32);
+        let board = g.scoreboard();
+        assert_eq!(board.tenants.len(), 2);
+        let row = board.get(a).unwrap();
+        assert_eq!(row.quota, 4);
+        assert_eq!(row.queue_depth, 3);
+        assert_eq!(row.heap_last_job_bytes, 4096);
+        assert_eq!(board.get(b).unwrap().submitted, 0);
+        let text = board.render();
+        assert!(text.contains("interactive"), "{text}");
+        assert!(text.contains('a'), "{text}");
+    }
+
+    #[test]
+    fn ingest_gate_defers_but_never_rejects() {
+        let g = Governor::new();
+        g.set_defer_deadline(Duration::from_millis(2));
+        let id = g.register(
+            TenantSpec::new("s")
+                .with_heap_budget(1)
+                .with_overload(OverloadPolicy::Reject),
+        );
+        let t = g.lookup(id).unwrap();
+        t.note_job(9, 1);
+        let heap = heap();
+        // Reject-policy tenant at the *ingest* gate: delayed, not refused.
+        g.gate_ingest(&t, &heap);
+        assert_eq!(t.counters.ingest_deferred.load(Ordering::Relaxed), 1);
+        assert_eq!(t.counters.rejected.load(Ordering::Relaxed), 0);
+    }
+}

@@ -30,6 +30,11 @@
 //!   subplan reuse at [`api::plan::Dataset::cache`] cut points with
 //!   in-flight deduplication, and pressure-aware eviction accounted
 //!   against the simulated heap.
+//! * [`govern`] — multi-tenant governance: a tenant registry with QoS
+//!   priority classes and weighted scheduler quotas, budget-keyed
+//!   admission control (reject / defer / degrade-to-Off), streaming
+//!   backpressure, and a live per-tenant [`govern::Scoreboard`]
+//!   ([`api::Runtime::scoreboard`]).
 //! * [`optimizer`] — the paper's §3 contribution: reducers expressed in a
 //!   stack-machine IR (RIR, the bytecode stand-in), analyzed via a program
 //!   dependency graph and sliced into `initialize`/`combine`/`finalize`.
@@ -57,6 +62,7 @@ pub mod baselines;
 pub mod benchmarks;
 pub mod cache;
 pub mod coordinator;
+pub mod govern;
 pub mod harness;
 pub mod memsim;
 pub mod optimizer;
@@ -70,6 +76,10 @@ pub use api::{
     Mapper, Pipeline, PlanHandle, PlanOutput, PlanReport, Reducer, Runtime,
 };
 pub use cache::{CacheActivity, CacheStats, MaterializationCache};
+pub use govern::{
+    Admission, AdmissionError, GovernReport, Governor, OverloadPolicy, Priority, Scoreboard,
+    TenantId, TenantSnapshot, TenantSpec,
+};
 pub use optimizer::agent::OptimizerAgent;
 pub use stream::{
     AppendLog, KeyedStream, StandingQuery, StreamDataset, StreamHandle, StreamOutput,

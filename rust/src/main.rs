@@ -7,16 +7,24 @@
 //! mr4r run --bench WC [--threads N] [--no-optimize] [--scale S]
 //! mr4r explain --bench WC          # show the reducer RIR + agent decision
 //! mr4r info                        # environment, artifacts, backend probe
+//! mr4r govern [--tenants N] [--plans N] [--threads N]
+//!                                  # multi-tenant QoS demo + live scoreboard
 //! ```
 
 use std::path::PathBuf;
 use std::process::ExitCode;
+use std::sync::Arc;
 
-use mr4r::api::config::OptimizeMode;
+use mr4r::api::config::{JobConfig, OptimizeMode};
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::runtime::Runtime;
+use mr4r::api::traits::Emitter;
 use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
 use mr4r::benchmarks::Backend;
+use mr4r::govern::{Priority, TenantSpec};
 use mr4r::harness::{self, HarnessOpts};
 use mr4r::optimizer::agent::{Decision, OptimizerAgent};
+use mr4r::optimizer::builder::canon;
 use mr4r::runtime::artifacts::KernelSet;
 use mr4r::util::cli::{Cli, CliError};
 
@@ -30,6 +38,8 @@ fn cli() -> Cli {
         .opt("backend", "auto", "numeric backend: auto | native | pjrt")
         .opt("out", "reports", "report output directory")
         .opt_no_default("bench", "benchmark code: HG KM LR MM PC SM WC")
+        .opt("tenants", "6", "tenant count for `govern`")
+        .opt("plans", "2", "word-count plans per tenant for `govern`")
         .switch("no-optimize", "disable the reducer optimizer")
         .switch("quiet", "suppress per-report console output")
 }
@@ -228,14 +238,75 @@ fn main() -> ExitCode {
             println!("backend      : {}", backend.name());
             ExitCode::SUCCESS
         }
+        "govern" => {
+            let n_tenants: usize = args.parse_or("tenants", 6);
+            let n_plans: usize = args.parse_or("plans", 2);
+            let rt = Arc::new(Runtime::with_config(
+                JobConfig::new().with_threads(opts.max_threads),
+            ));
+            let classes = [Priority::Interactive, Priority::Batch, Priority::Background];
+            let handles: Vec<_> = (0..n_tenants)
+                .map(|i| {
+                    let spec = TenantSpec::new(&format!("tenant-{i:02}"))
+                        .with_priority(classes[i % classes.len()]);
+                    let id = rt.register_tenant(spec);
+                    let seed = opts.seed.wrapping_add(i as u64);
+                    Arc::clone(&rt).spawn_plan(move |rt| {
+                        let cfg = rt.config_for(id);
+                        let lines = demo_lines(seed);
+                        let mut keys = 0;
+                        for _ in 0..n_plans {
+                            let out = rt
+                                .job(
+                                    wc_mapper,
+                                    RirReducer::<String, i64>::new(canon::sum_i64("govern.wc")),
+                                )
+                                .with_config(cfg.clone())
+                                .run(&lines);
+                            keys = out.pairs.len();
+                        }
+                        keys
+                    })
+                })
+                .collect();
+            let keys: Vec<usize> = handles.into_iter().map(|h| h.join()).collect();
+            println!(
+                "{} tenant(s) x {} word-count plan(s) each, {} distinct key(s) per plan",
+                n_tenants,
+                n_plans,
+                keys.first().copied().unwrap_or(0)
+            );
+            println!("{}", rt.scoreboard().render());
+            ExitCode::SUCCESS
+        }
         "" => {
             eprintln!("{}", cli().help_text());
-            eprintln!("commands: figures | run | explain | info");
+            eprintln!("commands: figures | run | explain | info | govern");
             ExitCode::FAILURE
         }
         other => {
-            eprintln!("unknown command `{other}` (try: figures, run, explain, info)");
+            eprintln!("unknown command `{other}` (try: figures, run, explain, info, govern)");
             ExitCode::FAILURE
         }
+    }
+}
+
+/// Deterministic word-count input for the `govern` demo — each tenant
+/// folds its seed into the line mix so concurrent plans differ without
+/// any runtime randomness.
+fn demo_lines(seed: u64) -> Vec<String> {
+    const WORDS: [&str; 8] = ["the", "quick", "brown", "fox", "jumps", "over", "lazy", "dog"];
+    (0..256u64)
+        .map(|i| {
+            let a = WORDS[(seed.wrapping_add(i) % 8) as usize];
+            let b = WORDS[(seed.wrapping_mul(31).wrapping_add(i * 7) % 8) as usize];
+            format!("{a} {b} the end")
+        })
+        .collect()
+}
+
+fn wc_mapper(line: &String, em: &mut dyn Emitter<String, i64>) {
+    for w in line.split_whitespace() {
+        em.emit(w.to_string(), 1);
     }
 }

@@ -284,6 +284,16 @@ impl SimHeap {
         self.young_fill.load(Ordering::Relaxed) + self.old_fill.load(Ordering::Relaxed)
     }
 
+    /// Current occupancy as a fraction of the configured heap size
+    /// (0.0 when the heap is disabled) — the watermark signal
+    /// [`crate::govern`] admission control reads.
+    pub fn occupancy(&self) -> f64 {
+        if !self.params.enabled || self.params.total_bytes == 0 {
+            return 0.0;
+        }
+        self.heap_used() as f64 / self.params.total_bytes as f64
+    }
+
     /// Live bytes in a cohort (young + old), for assertions in tests.
     pub fn cohort_live(&self, id: CohortId) -> u64 {
         let core = self.core.lock().unwrap();

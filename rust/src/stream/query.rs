@@ -9,6 +9,7 @@
 //! fused pass plus pane folding, never a per-chunk re-plan.
 
 use std::hash::Hash;
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 
 use crate::api::config::{JobConfig, OptimizeMode};
@@ -17,8 +18,9 @@ use crate::api::plan::{Chain, PlanReport, StageInfo, StageKind};
 use crate::api::runtime::Runtime;
 use crate::api::traits::HeapSized;
 use crate::cache::CacheActivity;
-use crate::coordinator::pipeline::StreamMetrics;
+use crate::coordinator::pipeline::{batch_for, StreamMetrics};
 use crate::coordinator::planner;
+use crate::govern::{Admission, GovernReport};
 use crate::coordinator::splitter::split_indices;
 use crate::stream::source::StreamSource;
 use crate::stream::window::{
@@ -76,6 +78,7 @@ impl<'rt, T: 'rt, B: 'rt> StreamDataset<'rt, T, B> {
     /// Replace the configuration for subsequently recorded stages.
     pub fn with_config(mut self, config: JobConfig) -> Self {
         self.config = config;
+        self.rt.resolve_govern(&mut self.config);
         self
     }
 
@@ -323,6 +326,8 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> WindowedStream<'rt, K, V, B> {
             config,
             fused_ops: plan.fused_ops,
             streamed_handoffs: plan.streamed_handoffs,
+            last_blocked: 0,
+            last_shed: 0,
         }
     }
 
@@ -368,6 +373,10 @@ pub struct StandingQuery<'rt, B, K, V, H, O, A> {
     config: JobConfig,
     fused_ops: usize,
     streamed_handoffs: usize,
+    /// Source-side backpressure counters already folded into the
+    /// tenant scoreboard (the sync is delta-based, once per ingest).
+    last_blocked: u64,
+    last_shed: u64,
 }
 
 impl<'rt, B, K, V, H, O, A> StandingQuery<'rt, B, K, V, H, O, A>
@@ -414,8 +423,33 @@ where
     }
 
     fn ingest(&mut self, chunk: &[B]) -> Vec<WindowResult<K, O>> {
+        // The streaming backpressure gate: a governed query under
+        // pressure *delays* the ingest (it never drops the chunk —
+        // results stay digest-identical to an ungoverned run).
+        if let Some(tenant) = &self.config.govern {
+            self.rt.governor().gate_ingest(tenant, &self.config.heap);
+        }
+        self.sync_backpressure();
         let stamped = self.extract_chunk(chunk);
         self.engine.ingest_chunk(stamped)
+    }
+
+    /// Fold the source-side backpressure counters into the tenant
+    /// scoreboard: the delta since the previous sync, so mid-flight
+    /// [`Runtime::scoreboard`](crate::api::Runtime::scoreboard) reads
+    /// stay current while the query runs.
+    fn sync_backpressure(&mut self) {
+        let blocked = self.source.pushes_blocked();
+        let shed = self.source.pushes_shed();
+        if let Some(tenant) = &self.config.govern {
+            let c = tenant.counters();
+            c.stream_pushes_blocked
+                .fetch_add(blocked.saturating_sub(self.last_blocked), Ordering::Relaxed);
+            c.stream_pushes_shed
+                .fetch_add(shed.saturating_sub(self.last_shed), Ordering::Relaxed);
+        }
+        self.last_blocked = blocked;
+        self.last_shed = shed;
     }
 
     /// Run the fused chain + timestamp stamping over one chunk. Large
@@ -448,7 +482,7 @@ where
                 }
             })
             .collect();
-        self.rt.pool().batch().run(threads, tasks);
+        batch_for(self.rt.pool(), &self.config).run(threads, tasks);
         let mut out = Vec::with_capacity(chunk.len());
         for slot in slots {
             out.extend(slot.into_inner().unwrap());
@@ -456,8 +490,21 @@ where
         out
     }
 
-    fn into_output(self, windows: Vec<WindowResult<K, O>>) -> StreamOutput<K, O> {
-        let metrics = self.engine.metrics().clone();
+    fn into_output(mut self, windows: Vec<WindowResult<K, O>>) -> StreamOutput<K, O> {
+        self.sync_backpressure();
+        let mut metrics = self.engine.metrics().clone();
+        metrics.pushes_blocked = self.source.pushes_blocked();
+        metrics.pushes_shed = self.source.pushes_shed();
+        // Streaming admission acts per-ingest at the backpressure gate
+        // (outcomes land on the scoreboard), so the report's admission is
+        // nominally clean — see [`GovernReport`].
+        let govern = self.config.govern.as_ref().map(|tenant| GovernReport {
+            tenant: tenant.id(),
+            name: tenant.spec().name.clone(),
+            priority: tenant.spec().priority,
+            quota: tenant.quota(),
+            admission: Admission::Clean,
+        });
         StreamOutput {
             windows,
             report: PlanReport {
@@ -467,6 +514,7 @@ where
                 materialized_pairs: 0,
                 cache: CacheActivity::default(),
                 stream: Some(metrics),
+                govern,
             },
         }
     }

@@ -1,6 +1,7 @@
-//! Stream inputs: the unbounded push/pull chunk queue behind
-//! [`StreamSource`], and the append-only [`AppendLog`] whose cached
-//! prefixes are maintained incrementally.
+//! Stream inputs: the push/pull chunk queue behind [`StreamSource`] —
+//! unbounded, or bounded with producer backpressure
+//! ([`StreamSource::bounded`]) — and the append-only [`AppendLog`] whose
+//! cached prefixes are maintained incrementally.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -17,6 +18,35 @@ struct QueueState<T> {
 struct SharedQueue<T> {
     state: Mutex<QueueState<T>>,
     ready: Condvar,
+    /// Backpressure bound, in **chunks**: while the queue holds this many,
+    /// `push` blocks and `try_push` sheds. `None` = unbounded.
+    capacity: Option<usize>,
+    /// Signalled when a pull frees a slot (or the feed closes).
+    space: Condvar,
+    /// Pushes that blocked waiting for space (once per blocking push).
+    blocked: AtomicU64,
+    /// `try_push` chunks handed back because the queue was full.
+    shed: AtomicU64,
+}
+
+impl<T> SharedQueue<T> {
+    fn new(capacity: Option<usize>, chunks: VecDeque<Vec<T>>, closed: bool) -> Arc<SharedQueue<T>> {
+        Arc::new(SharedQueue {
+            state: Mutex::new(QueueState { chunks, closed }),
+            ready: Condvar::new(),
+            capacity,
+            space: Condvar::new(),
+            blocked: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
+        })
+    }
+
+    fn full(&self, state: &QueueState<T>) -> bool {
+        match self.capacity {
+            Some(cap) => state.chunks.len() >= cap,
+            None => false,
+        }
+    }
 }
 
 /// Blocking dequeue: the next non-empty chunk, or `None` once the queue
@@ -27,8 +57,15 @@ fn pull_chunk<T>(queue: &SharedQueue<T>) -> Option<Vec<T>> {
     let mut state = queue.state.lock().unwrap();
     loop {
         match state.chunks.pop_front() {
-            Some(chunk) if chunk.is_empty() => continue,
-            Some(chunk) => return Some(chunk),
+            Some(chunk) if chunk.is_empty() => {
+                queue.space.notify_all();
+                continue;
+            }
+            Some(chunk) => {
+                drop(state);
+                queue.space.notify_all();
+                return Some(chunk);
+            }
             None if state.closed => return None,
             None => state = queue.ready.wait(state).unwrap(),
         }
@@ -66,13 +103,24 @@ impl<T> Clone for StreamHandle<T> {
 impl<T> StreamSource<T> {
     /// An open feed: the source blocks until the handle pushes or closes.
     pub fn unbounded() -> (StreamSource<T>, StreamHandle<T>) {
-        let queue = Arc::new(SharedQueue {
-            state: Mutex::new(QueueState {
-                chunks: VecDeque::new(),
-                closed: false,
-            }),
-            ready: Condvar::new(),
-        });
+        let queue = SharedQueue::new(None, VecDeque::new(), false);
+        let source = StreamSource {
+            queue: Arc::clone(&queue),
+        };
+        (source, StreamHandle { queue })
+    }
+
+    /// An open feed whose queue holds at most `capacity` chunks (clamped
+    /// to ≥ 1) — the backpressure twin of [`StreamSource::unbounded`],
+    /// closing the gap where a fast producer could outrun the pane engine
+    /// unboundedly. Once full, [`StreamHandle::push`] blocks the producer
+    /// until the consumer drains a chunk, and [`StreamHandle::try_push`]
+    /// hands the chunk back instead. Blocked and shed pushes are counted
+    /// ([`StreamSource::pushes_blocked`] / [`StreamSource::pushes_shed`])
+    /// and surface in a standing query's
+    /// [`StreamMetrics`](crate::coordinator::pipeline::StreamMetrics).
+    pub fn bounded(capacity: usize) -> (StreamSource<T>, StreamHandle<T>) {
+        let queue = SharedQueue::new(Some(capacity.max(1)), VecDeque::new(), false);
         let source = StreamSource {
             queue: Arc::clone(&queue),
         };
@@ -84,13 +132,7 @@ impl<T> StreamSource<T> {
     /// [`StreamSource::unbounded`].
     pub fn replay(chunks: Vec<Vec<T>>) -> StreamSource<T> {
         StreamSource {
-            queue: Arc::new(SharedQueue {
-                state: Mutex::new(QueueState {
-                    chunks: chunks.into(),
-                    closed: true,
-                }),
-                ready: Condvar::new(),
-            }),
+            queue: SharedQueue::new(None, chunks.into(), true),
         }
     }
 
@@ -99,13 +141,34 @@ impl<T> StreamSource<T> {
     pub(crate) fn pull(&self) -> Option<Vec<T>> {
         pull_chunk(&self.queue)
     }
+
+    /// Pushes that have blocked waiting for queue space so far (always 0
+    /// on unbounded feeds).
+    pub fn pushes_blocked(&self) -> u64 {
+        self.queue.blocked.load(Ordering::Relaxed)
+    }
+
+    /// `try_push` chunks handed back at a full queue so far (always 0 on
+    /// unbounded feeds).
+    pub fn pushes_shed(&self) -> u64 {
+        self.queue.shed.load(Ordering::Relaxed)
+    }
 }
 
 impl<T> StreamHandle<T> {
-    /// Enqueue one chunk. Pushes after [`StreamHandle::close`] are
-    /// dropped (the consumer may already have observed end-of-stream).
+    /// Enqueue one chunk. On a [`StreamSource::bounded`] feed a full
+    /// queue blocks the producer until the consumer drains a chunk
+    /// (counted once per blocking push). Pushes after
+    /// [`StreamHandle::close`] are dropped (the consumer may already have
+    /// observed end-of-stream).
     pub fn push(&self, chunk: Vec<T>) {
         let mut state = self.queue.state.lock().unwrap();
+        if self.queue.full(&state) && !state.closed {
+            self.queue.blocked.fetch_add(1, Ordering::Relaxed);
+            while self.queue.full(&state) && !state.closed {
+                state = self.queue.space.wait(state).unwrap();
+            }
+        }
         if state.closed {
             return;
         }
@@ -114,11 +177,42 @@ impl<T> StreamHandle<T> {
         self.queue.ready.notify_all();
     }
 
+    /// Non-blocking enqueue: `Err(chunk)` hands the chunk back when a
+    /// [`StreamSource::bounded`] queue is full (counted as shed). Like
+    /// [`StreamHandle::push`], chunks offered after close are silently
+    /// dropped (`Ok`).
+    pub fn try_push(&self, chunk: Vec<T>) -> Result<(), Vec<T>> {
+        let mut state = self.queue.state.lock().unwrap();
+        if state.closed {
+            return Ok(());
+        }
+        if self.queue.full(&state) {
+            drop(state);
+            self.queue.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(chunk);
+        }
+        state.chunks.push_back(chunk);
+        drop(state);
+        self.queue.ready.notify_all();
+        Ok(())
+    }
+
     /// Mark end-of-stream: consumers drain what was pushed, then see
-    /// `None`. Idempotent.
+    /// `None`. Unblocks any producer waiting for space. Idempotent.
     pub fn close(&self) {
         self.queue.state.lock().unwrap().closed = true;
         self.queue.ready.notify_all();
+        self.queue.space.notify_all();
+    }
+
+    /// Pushes that have blocked waiting for queue space so far.
+    pub fn pushes_blocked(&self) -> u64 {
+        self.queue.blocked.load(Ordering::Relaxed)
+    }
+
+    /// `try_push` chunks handed back at a full queue so far.
+    pub fn pushes_shed(&self) -> u64 {
+        self.queue.shed.load(Ordering::Relaxed)
     }
 }
 
@@ -230,6 +324,51 @@ mod tests {
         assert_eq!(source.pull(), Some(vec![8, 9]));
         assert_eq!(source.pull(), None);
         producer.join().unwrap();
+    }
+
+    #[test]
+    fn bounded_try_push_sheds_at_capacity() {
+        let (source, handle) = StreamSource::bounded(2);
+        assert!(handle.try_push(vec![1]).is_ok());
+        assert!(handle.try_push(vec![2]).is_ok());
+        let back = handle.try_push(vec![3]).unwrap_err();
+        assert_eq!(back, vec![3]);
+        assert_eq!(source.pushes_shed(), 1);
+        assert_eq!(source.pushes_blocked(), 0);
+        // Draining one chunk frees a slot for the handed-back chunk.
+        assert_eq!(source.pull(), Some(vec![1]));
+        assert!(handle.try_push(back).is_ok());
+        handle.close();
+        assert_eq!(source.pull(), Some(vec![2]));
+        assert_eq!(source.pull(), Some(vec![3]));
+        assert_eq!(source.pull(), None);
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_consumer_drains() {
+        let (source, handle) = StreamSource::bounded(1);
+        handle.push(vec![1u32]);
+        let h = handle.clone();
+        let producer = std::thread::spawn(move || {
+            h.push(vec![2]); // queue full: must block until a pull
+            h.close();
+        });
+        // Nothing is pulling yet, so the producer must block (and count
+        // the block) before it can enqueue.
+        let t0 = std::time::Instant::now();
+        while source.pushes_blocked() == 0 {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "producer never reached the full queue"
+            );
+            std::thread::yield_now();
+        }
+        assert_eq!(source.pull(), Some(vec![1]));
+        assert_eq!(source.pull(), Some(vec![2]));
+        assert_eq!(source.pull(), None);
+        producer.join().unwrap();
+        assert_eq!(source.pushes_blocked(), 1);
+        assert_eq!(source.pushes_shed(), 0);
     }
 
     #[test]

@@ -46,6 +46,7 @@
 //! ```
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::api::config::{JobConfig, OptimizeMode};
 use crate::api::traits::KeyValue;
@@ -55,6 +56,8 @@ use crate::benchmarks::{
     datagen, digest_pairs, histogram, kmeans, linear_regression, matrix_multiply, pca,
     string_match, word_count, BenchId,
 };
+use crate::govern::{OverloadPolicy, Priority, TenantId, TenantSpec};
+use crate::memsim::{HeapParams, SimHeap};
 use crate::stream::StreamSource;
 use crate::util::prng::Xoshiro256;
 
@@ -382,6 +385,225 @@ pub fn assert_scenario(kit: &ScenarioKit, sc: &Scenario) {
     }
 }
 
+/// Governed scenario shape: `drivers` OS threads, each driving
+/// `tenants_per_driver` registered tenants × `plans_per_tenant` seeded
+/// plans, all on one shared **governed** session
+/// ([`crate::govern`]).
+///
+/// Tenant specs derive from the tenant index (see [`tenant_spec_for`]):
+/// priority classes cycle Interactive → Batch → Background and weights
+/// alternate 1/2, so the weighted scheduler sees a genuinely mixed
+/// population; every fourth tenant is **over budget** — a 1-byte heap
+/// budget on a live accounting heap plus a 0-byte cache budget, so its
+/// first completed plan trips the feedback signal and every later
+/// admission sees pressure. Over-budget tenants alternate the Defer and
+/// Degrade overload policies (Reject would panic the plan; it gets its
+/// own `try_collect` coverage).
+///
+/// The harness checks the governance invariants *and* that every digest
+/// still matches an ungoverned serial baseline pair for pair:
+/// governance may delay or de-optimize a tenant's plans, never change
+/// their results.
+#[derive(Clone, Copy, Debug)]
+pub struct GovernedScenario {
+    /// Master seed (same per-slot plan derivation as [`Scenario`]).
+    pub seed: u64,
+    pub drivers: usize,
+    pub tenants_per_driver: usize,
+    /// Plans per tenant — keep ≥ 2 so over-budget tenants trip their
+    /// budget signal (plan 1 records the footprint plan 2's admission
+    /// compares).
+    pub plans_per_tenant: usize,
+    /// Worker threads of the shared session pool.
+    pub threads: usize,
+}
+
+/// Whether tenant `index` runs with the deliberately-unsatisfiable
+/// budgets (see [`GovernedScenario`]).
+pub fn over_budget(index: usize) -> bool {
+    index % 4 == 0
+}
+
+/// The per-index tenant spec derivation — public so tests can
+/// cross-check scoreboard rows against the spec that produced them.
+pub fn tenant_spec_for(index: usize) -> TenantSpec {
+    let classes = [Priority::Interactive, Priority::Batch, Priority::Background];
+    let mut spec = TenantSpec::new(&format!("t{index:03}"))
+        .with_priority(classes[index % classes.len()])
+        .with_weight(1 + (index % 2) as u32);
+    if over_budget(index) {
+        let policy = if (index / 4) % 2 == 0 {
+            OverloadPolicy::Defer
+        } else {
+            OverloadPolicy::Degrade
+        };
+        spec = spec
+            .with_heap_budget(1)
+            .with_cache_budget(0)
+            .with_overload(policy);
+    }
+    spec
+}
+
+/// Run a governed scenario end to end: ungoverned serial baselines,
+/// then the governed concurrent phase on a fresh session with every
+/// tenant registered, then digest and scoreboard checks. `Err` carries
+/// a replayable description including the seed.
+pub fn run_governed_scenario(kit: &ScenarioKit, sc: &GovernedScenario) -> Result<(), String> {
+    let n_tenants = sc.drivers * sc.tenants_per_driver;
+    let shape = Scenario {
+        seed: sc.seed,
+        drivers: n_tenants,
+        plans_per_driver: sc.plans_per_tenant,
+        threads: sc.threads,
+    };
+    let mut specs = kit.specs(&shape);
+    // Over-budget tenants must open with a *batch* plan: its epilogue
+    // records the footprint later admissions compare (a streaming first
+    // slot never reaches the job epilogue, leaving the signal unset).
+    for (t, row) in specs.iter_mut().enumerate() {
+        if over_budget(t) {
+            if let Some(first) = row.first_mut() {
+                first.stream = false;
+            }
+        }
+    }
+    let base = JobConfig::fast().with_threads(sc.threads.max(1));
+
+    // Ungoverned serial baselines: the digests governance must not
+    // change.
+    let serial_rt = Runtime::with_config(base.clone());
+    let baseline: Vec<Vec<u64>> = specs
+        .iter()
+        .map(|row| row.iter().map(|s| kit.run_one(&serial_rt, &base, *s)).collect())
+        .collect();
+
+    // Governed phase: a fresh shared session, every plan tagged with its
+    // tenant's config. The tiny defer deadline keeps throttled tenants
+    // moving (Defer admits after the deadline either way).
+    let rt = Runtime::with_config(base.clone());
+    rt.governor().set_defer_deadline(Duration::from_millis(2));
+    let ids: Vec<TenantId> = (0..n_tenants)
+        .map(|t| rt.register_tenant(tenant_spec_for(t)))
+        .collect();
+    let configs: Vec<JobConfig> = ids
+        .iter()
+        .enumerate()
+        .map(|(t, &id)| {
+            let cfg = rt.config_for(id);
+            if over_budget(t) {
+                // A live accounting heap (no wall-clock injection): the
+                // budget signal is the job's measured cohort footprint.
+                cfg.with_heap(SimHeap::new(HeapParams::no_injection()))
+            } else {
+                cfg
+            }
+        })
+        .collect();
+
+    let spawned_before = rt.spawned_threads();
+    let concurrent: Vec<Vec<u64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..sc.drivers)
+            .map(|d| {
+                let rt = &rt;
+                let specs = &specs;
+                let configs = &configs;
+                scope.spawn(move || {
+                    let lo = d * sc.tenants_per_driver;
+                    (lo..lo + sc.tenants_per_driver)
+                        .map(|t| {
+                            specs[t]
+                                .iter()
+                                .map(|s| kit.run_one(rt, &configs[t], *s))
+                                .collect::<Vec<u64>>()
+                        })
+                        .collect::<Vec<Vec<u64>>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .flat_map(|h| h.join().expect("governed driver panicked"))
+            .collect()
+    });
+
+    if rt.spawned_threads() != spawned_before {
+        return Err(format!(
+            "session pool grew under governance: {} -> {} (replay with MR4R_SCENARIO_SEED={})",
+            spawned_before,
+            rt.spawned_threads(),
+            sc.seed
+        ));
+    }
+    for (t, (base_digests, gov_digests)) in baseline.iter().zip(&concurrent).enumerate() {
+        for (j, (serial, gov)) in base_digests.iter().zip(gov_digests).enumerate() {
+            if serial != gov {
+                let spec = specs[t][j];
+                let what = if spec.stream {
+                    "Streaming".to_string()
+                } else {
+                    format!("{:?}", spec.bench)
+                };
+                return Err(format!(
+                    "tenant {t} plan {j} ({what} under {:?}): governed digest {gov:#018x} \
+                     != ungoverned serial {serial:#018x} — replay with MR4R_SCENARIO_SEED={}",
+                    spec.optimize, sc.seed
+                ));
+            }
+        }
+    }
+
+    let board = rt.scoreboard();
+    let mut background_executed = 0u64;
+    for (t, id) in ids.iter().enumerate() {
+        let row = board
+            .get(*id)
+            .ok_or_else(|| format!("tenant {t} missing from the scoreboard"))?;
+        if row.submitted == 0 || row.executed != row.submitted || row.queue_depth != 0 {
+            return Err(format!(
+                "tenant {t} lost work: {} executed of {} submitted, depth {} \
+                 (replay with MR4R_SCENARIO_SEED={})",
+                row.executed, row.submitted, row.queue_depth, sc.seed
+            ));
+        }
+        if row.rejected != 0 {
+            return Err(format!(
+                "tenant {t} rejected {} time(s) under Defer/Degrade policies \
+                 (replay with MR4R_SCENARIO_SEED={})",
+                row.rejected, sc.seed
+            ));
+        }
+        if row.priority == Priority::Background {
+            background_executed += row.executed;
+        }
+        if over_budget(t) && sc.plans_per_tenant >= 2 {
+            let throttled = row.deferred + row.degraded + row.ingest_deferred;
+            if throttled == 0 {
+                return Err(format!(
+                    "over-budget tenant {t} was never throttled: admitted {}, \
+                     last job {} B (replay with MR4R_SCENARIO_SEED={})",
+                    row.admitted, row.heap_last_job_bytes, sc.seed
+                ));
+            }
+        }
+    }
+    if n_tenants >= 3 && background_executed == 0 {
+        return Err(format!(
+            "Background tenants starved: 0 tasks executed (replay with MR4R_SCENARIO_SEED={})",
+            sc.seed
+        ));
+    }
+    Ok(())
+}
+
+/// [`run_governed_scenario`], panicking with the replay seed on failure
+/// — the test entry point.
+pub fn assert_governed_scenario(kit: &ScenarioKit, sc: &GovernedScenario) {
+    if let Err(msg) = run_governed_scenario(kit, sc) {
+        panic!("governed scenario failed: {msg}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -416,5 +638,31 @@ mod tests {
             threads: 2,
         };
         assert_scenario(&kit, &sc);
+    }
+
+    #[test]
+    fn tenant_spec_derivation_is_mixed() {
+        let classes: Vec<Priority> = (0..6).map(|i| tenant_spec_for(i).priority).collect();
+        assert!(classes.contains(&Priority::Interactive));
+        assert!(classes.contains(&Priority::Batch));
+        assert!(classes.contains(&Priority::Background));
+        assert!(over_budget(0) && !over_budget(1));
+        assert_eq!(tenant_spec_for(0).heap_budget, Some(1));
+        assert_eq!(tenant_spec_for(0).overload, OverloadPolicy::Defer);
+        assert_eq!(tenant_spec_for(4).overload, OverloadPolicy::Degrade);
+        assert_eq!(tenant_spec_for(1).heap_budget, None);
+    }
+
+    #[test]
+    fn tiny_governed_scenario_passes() {
+        let kit = ScenarioKit::prepare(0.0002, 7);
+        let sc = GovernedScenario {
+            seed: 13,
+            drivers: 2,
+            tenants_per_driver: 2,
+            plans_per_tenant: 2,
+            threads: 2,
+        };
+        assert_governed_scenario(&kit, &sc);
     }
 }

@@ -1,0 +1,279 @@
+//! Tenant governance suite — admission control, QoS budgets, and the
+//! live scoreboard (`mr4r::govern`) under real concurrency:
+//!
+//! * seeded governed scenarios: mixed-priority tenants sharing one
+//!   session, digest-identical pair for pair to ungoverned serial
+//!   baselines (governance may delay or de-optimize work, never change
+//!   results);
+//! * an `#[ignore]`d soak at 200 tenants — the CI `qos-stress` job runs
+//!   it with `--include-ignored`;
+//! * hard quota enforcement: an over-budget `Reject` tenant surfaces
+//!   `AdmissionError` from `try_collect` and the rejection is counted;
+//! * bounded-stream backpressure counters landing on both the stream
+//!   metrics and the tenant scoreboard;
+//! * weighted deficit-round-robin share properties, driven through the
+//!   scheduler's real pick policy (`simulate_pick_order_weighted`).
+//!
+//! Worker-pool width comes from `MR4R_THREADS` (default 4), like the
+//! concurrent-runtime suite; failing scenarios print an
+//! `MR4R_SCENARIO_SEED` replay line.
+
+use std::time::{Duration, Instant};
+
+use mr4r::api::config::JobConfig;
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::{Emitter, Runtime};
+use mr4r::coordinator::scheduler::simulate_pick_order_weighted;
+use mr4r::govern::{Admission, OverloadPolicy, TenantSpec};
+use mr4r::memsim::{HeapParams, SimHeap};
+use mr4r::optimizer::builder::canon;
+use mr4r::stream::StreamSource;
+use mr4r::testkit::prop;
+use mr4r::testkit::scenario::{self, GovernedScenario, ScenarioKit};
+
+/// Worker threads for the shared session pools (CI stress matrix sets
+/// `MR4R_THREADS=2` and `=8`).
+fn threads() -> usize {
+    std::env::var("MR4R_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(1)
+}
+
+fn wc_mapper(line: &String, em: &mut dyn Emitter<String, i64>) {
+    for w in line.split_whitespace() {
+        em.emit(w.to_string(), 1);
+    }
+}
+
+fn wc_lines(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| format!("w{} w{} w{}", i % 13, i % 5, i % 29))
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// Governed scenarios: digest identity + scoreboard invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn governed_scenario_matches_ungoverned_serial_execution() {
+    let kit = ScenarioKit::prepare(0.0005, 1234);
+    let sc = GovernedScenario {
+        seed: scenario::scenario_seed(0x60D5),
+        drivers: 4,
+        tenants_per_driver: 3,
+        plans_per_tenant: 2,
+        threads: threads(),
+    };
+    scenario::assert_governed_scenario(&kit, &sc);
+}
+
+/// The governance soak: 8 drivers × 25 tenants = 200 mixed-priority
+/// tenants, every fourth one over budget, two plans each — Background
+/// tenants must still progress, over-budget tenants must be throttled,
+/// and every digest must match the ungoverned serial baseline.
+#[test]
+#[ignore = "governance soak — run explicitly or via the CI qos-stress job"]
+fn soak_two_hundred_mixed_priority_tenants() {
+    let kit = ScenarioKit::prepare(0.0002, 99);
+    let sc = GovernedScenario {
+        seed: scenario::scenario_seed(0x5047),
+        drivers: 8,
+        tenants_per_driver: 25,
+        plans_per_tenant: 2,
+        threads: threads(),
+    };
+    scenario::assert_governed_scenario(&kit, &sc);
+}
+
+// ---------------------------------------------------------------------
+// Hard quota enforcement: Reject policy
+// ---------------------------------------------------------------------
+
+#[test]
+fn reject_policy_surfaces_admission_error_and_counts() {
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(threads()));
+    let id = rt.register_tenant(
+        TenantSpec::new("rejectable")
+            .with_heap_budget(1)
+            .with_overload(OverloadPolicy::Reject),
+    );
+    // A live accounting heap: the budget signal is the job's measured
+    // cohort footprint, so the 1-byte budget is unsatisfiable.
+    let cfg = rt
+        .config_for(id)
+        .with_heap(SimHeap::new(HeapParams::no_injection()));
+    let lines = wc_lines(64);
+
+    // Plan 1: no previous footprint, so no pressure — admitted clean,
+    // and its epilogue records a footprint far over the budget.
+    let out = rt
+        .dataset(&lines)
+        .with_config(cfg.clone())
+        .map_reduce(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("gov.rej.warm")),
+        )
+        .collect();
+    let report = out.report.govern.as_ref().expect("governed plan report");
+    assert_eq!(report.tenant, id);
+    assert_eq!(report.admission, Admission::Clean);
+
+    // Plan 2: over budget now — `try_collect` refuses before running
+    // anything.
+    let err = rt
+        .dataset(&lines)
+        .with_config(cfg.clone())
+        .map_reduce(
+            wc_mapper,
+            RirReducer::<String, i64>::new(canon::sum_i64("gov.rej.denied")),
+        )
+        .try_collect()
+        .err()
+        .expect("over-budget Reject tenant must be refused");
+    assert_eq!(err.tenant, id);
+    assert!(err.to_string().contains("heap budget"), "{err}");
+
+    let row = rt.scoreboard().get(id).expect("tenant row").clone();
+    assert_eq!(row.admitted, 1, "only the warm-up plan was admitted");
+    assert_eq!(row.rejected, 1);
+    assert_eq!(row.jobs_completed, 1, "the rejected plan never ran");
+}
+
+// ---------------------------------------------------------------------
+// Bounded-stream backpressure → metrics + scoreboard
+// ---------------------------------------------------------------------
+
+#[test]
+fn bounded_stream_backpressure_lands_on_metrics_and_scoreboard() {
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(threads()));
+    let id = rt.register_tenant(TenantSpec::new("streamer"));
+    let cfg = rt.config_for(id);
+
+    let (source, handle) = StreamSource::bounded(1);
+    handle.push(vec![(1u64, 0u64)]);
+    // Queue full: a non-blocking offer is handed back and counted shed.
+    let back = handle.try_push(vec![(9u64, 0u64)]).unwrap_err();
+    assert_eq!(back, vec![(9, 0)]);
+    assert_eq!(handle.pushes_shed(), 1);
+
+    // A producer thread pushes into the still-full queue: it must block
+    // (and be counted) until the standing query starts draining.
+    let h = handle.clone();
+    let producer = std::thread::spawn(move || {
+        h.push(vec![(1u64, 1u64)]);
+        h.push(vec![(1u64, 2u64)]);
+        h.close();
+    });
+    let t0 = Instant::now();
+    while handle.pushes_blocked() == 0 {
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "producer never reached the full queue"
+        );
+        std::thread::yield_now();
+    }
+
+    let out = rt
+        .stream(source)
+        .with_config(cfg)
+        .keyed()
+        .window_tumbling(64, |ts: &u64| *ts)
+        .count_by_key()
+        .run_to_close();
+    producer.join().unwrap();
+
+    // The shed chunk is gone; everything else is counted exactly once.
+    assert_eq!(out.windows.len(), 1);
+    assert_eq!(out.windows[0].pairs.len(), 1);
+    assert_eq!(out.windows[0].pairs[0].key, 1);
+    assert_eq!(out.windows[0].pairs[0].value, 3, "shed chunk must not be counted");
+
+    let m = out.report.stream.as_ref().expect("stream metrics");
+    assert_eq!(m.pushes_shed, 1);
+    assert_eq!(m.pushes_blocked, handle.pushes_blocked());
+    assert!(m.pushes_blocked >= 1, "the blocking push was counted");
+    let g = out.report.govern.as_ref().expect("governed stream report");
+    assert_eq!(g.tenant, id);
+
+    let row = rt.scoreboard().get(id).expect("tenant row").clone();
+    assert_eq!(row.stream_pushes_shed, 1);
+    assert_eq!(row.stream_pushes_blocked, handle.pushes_blocked());
+    assert!(row.submitted > 0, "chunk extraction ran on the tenant's batches");
+    assert_eq!(row.executed, row.submitted);
+}
+
+// ---------------------------------------------------------------------
+// Weighted deficit-round-robin share properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn weighted_share_ratio_holds_while_both_tenants_have_work() {
+    // One worker, two batches with plenty of work: while both are
+    // non-empty every credit round is Σ quotas picks long, so each
+    // aligned window of 4 serves the weight-3 tenant exactly 3 times.
+    let order = simulate_pick_order_weighted(&[(40, 3), (40, 1)], 1);
+    let mut served = [0usize; 2];
+    for round in order.chunks(4).take(10) {
+        let zeros = round.iter().filter(|&&b| b == 0).count();
+        assert_eq!(zeros, 3, "round {round:?} must serve the weight-3 tenant 3 of 4 picks");
+        served[0] += zeros;
+        served[1] += round.len() - zeros;
+    }
+    assert_eq!(served, [30, 10]);
+}
+
+#[test]
+fn prop_weighted_drr_never_starves_and_loses_nothing() {
+    // Drive the pool's real pick policy deterministically with mixed
+    // quotas: every task runs exactly once, and while a batch still has
+    // queued work it is served within two full credit rounds.
+    let gen = prop::Gen::new(|r, _s| {
+        let batches = r.range(2, 6); // 2..=5 batches
+        let workers = r.range(1, 5); // 1..=4 workers
+        let shapes: Vec<(usize, u32)> = (0..batches)
+            .map(|_| (r.range(1, 41), r.range(1, 5) as u32))
+            .collect();
+        (workers, shapes)
+    });
+    prop::assert_prop("weighted-drr", &gen, |case: &(usize, Vec<(usize, u32)>)| {
+        let (workers, shapes) = case;
+        let order = simulate_pick_order_weighted(shapes, *workers);
+        let total: usize = shapes.iter().map(|s| s.0).sum();
+        if order.len() != total {
+            return Err(format!("executed {} of {total} queued tasks", order.len()));
+        }
+        let mut counts = vec![0usize; shapes.len()];
+        for &b in &order {
+            counts[b] += 1;
+        }
+        if counts.iter().zip(shapes).any(|(&c, &(n, _))| c != n) {
+            return Err(format!("per-batch counts {counts:?} != sizes {shapes:?}"));
+        }
+        // Weighted no-starvation: a credit round is at most Σ quotas
+        // picks, and every batch with work is served each round, so no
+        // batch waits more than two rounds (plus removal slack).
+        let round: usize = shapes.iter().map(|s| s.1 as usize).sum();
+        let bound = 2 * round + 2;
+        let mut remaining: Vec<usize> = shapes.iter().map(|s| s.0).collect();
+        let mut waited = vec![0usize; shapes.len()];
+        for &b in &order {
+            for (c, w) in waited.iter_mut().enumerate() {
+                if c != b && remaining[c] > 0 {
+                    *w += 1;
+                    if *w > bound {
+                        return Err(format!(
+                            "batch {c} starved for {w} consecutive picks \
+                             (bound {bound}) in {order:?}"
+                        ));
+                    }
+                }
+            }
+            waited[b] = 0;
+            remaining[b] -= 1;
+        }
+        Ok(())
+    });
+}
