@@ -6,6 +6,9 @@
 //! * scheduler: per-task overhead and steal behaviour
 //! * governance: governed (QoS-counted, weighted) vs ungoverned batches
 //! * memsim: TLAB-batched accounting overhead
+//! * adaptive re-optimization: repeat runs of a skewed keyed reduce on
+//!   one session (the second lowering consults measured statistics) vs
+//!   a statically lowered baseline
 //!
 //! `cargo bench --bench micro`
 
@@ -13,6 +16,8 @@ mod common;
 
 use std::sync::Arc;
 
+use mr4r::api::config::JobConfig;
+use mr4r::api::Runtime;
 use mr4r::coordinator::collector::{CollectorCohorts, HolderCollector, ListCollector};
 use mr4r::coordinator::scheduler::{QosCounters, TaskPool, WorkerPool};
 use mr4r::memsim::SimHeap;
@@ -186,6 +191,66 @@ fn main() {
                 stats.steals.to_string(),
             ]);
         }
+    }
+    println!("{}", t.render());
+
+    // --- Adaptive re-optimization: repeat-run feedback ---
+    // A skewed keyed reduce (90% of emits on one hot key) run twice on
+    // one adaptive session: the first run records cardinalities and the
+    // key-frequency sketch, the second lowering consults them (hot-key
+    // split and shard sizing) — compared against a statically lowered
+    // run of the same plan. Results are digest-identical by contract;
+    // the interesting column is the wall time of run #2.
+    let mut t = TextTable::new(vec!["run", "secs", "decisions", "keys"]);
+    let threads = common::max_threads();
+    let skewed: Vec<(u64, i64)> = (0..400_000u64)
+        .map(|i| {
+            if i % 10 != 0 {
+                (0, 1)
+            } else {
+                (1 + (i / 10) % 256, 1)
+            }
+        })
+        .collect();
+    let static_cfg = JobConfig::fast().with_threads(threads).with_adaptive(false);
+    let static_rt = Runtime::with_config(static_cfg.clone());
+    let sw = Stopwatch::start();
+    let baseline = static_rt
+        .dataset(&skewed)
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .with_config(static_cfg.clone())
+        .collect();
+    t.row(vec![
+        "static".to_string(),
+        format!("{:.4}", sw.secs()),
+        "0".to_string(),
+        baseline.items.len().to_string(),
+    ]);
+    let adaptive_rt = Runtime::with_config(JobConfig::fast().with_threads(threads));
+    for run in 1..=2 {
+        let sw = Stopwatch::start();
+        let out = adaptive_rt
+            .dataset(&skewed)
+            .keyed()
+            .reduce_by_key(|a, b| a + b)
+            .collect();
+        let decisions = out
+            .report
+            .adaptation
+            .as_ref()
+            .map_or(0, |a| a.decisions.len());
+        t.row(vec![
+            format!("adaptive #{run}"),
+            format!("{:.4}", sw.secs()),
+            decisions.to_string(),
+            out.items.len().to_string(),
+        ]);
+        assert_eq!(
+            out.items.len(),
+            baseline.items.len(),
+            "adaptive run changed the key set"
+        );
     }
     println!("{}", t.render());
 

@@ -93,6 +93,14 @@ pub struct JobConfig {
     pub scratch_per_emit: u64,
     /// Materialization-cache behaviour at `Dataset::cache()` cut points.
     pub cache: CacheConfig,
+    /// Whether plan lowering may consult the session's optimizer feedback
+    /// store ([`crate::stats::StatsStore`]) and adapt the physical plan to
+    /// statistics measured on earlier runs of the same prefix. Off means
+    /// the store is neither read nor written for this job — exactly the
+    /// static pre-adaptive behaviour, which keeps adapted ≡ static digest
+    /// identity testable. (`OptimizeMode::Off` also bypasses the store
+    /// regardless of this switch.)
+    pub adaptive: bool,
     /// Tenant this job runs as (see [`crate::govern`]). `None` runs
     /// ungoverned — exactly the pre-governance behaviour.
     pub tenant: Option<TenantId>,
@@ -114,6 +122,7 @@ impl JobConfig {
             heap: SimHeap::new(HeapParams::default()),
             scratch_per_emit: 0,
             cache: CacheConfig::default(),
+            adaptive: true,
             tenant: None,
             govern: None,
         }
@@ -165,6 +174,14 @@ impl JobConfig {
         self
     }
 
+    /// Toggle adaptive re-optimization (see [`crate::stats`]). Disabled →
+    /// lowering never consults the feedback store and execution never
+    /// records into it: every run takes the static plan.
+    pub fn with_adaptive(mut self, adaptive: bool) -> Self {
+        self.adaptive = adaptive;
+        self
+    }
+
     /// Set the heap-occupancy eviction watermark (fraction of the heap's
     /// `total_bytes`; clamped to `0.0..=1.0`).
     pub fn with_cache_watermark(mut self, watermark: f64) -> Self {
@@ -199,6 +216,14 @@ impl JobConfig {
             _ => self.optimize,
         }
     }
+
+    /// Whether this job participates in adaptive re-optimization: the
+    /// `adaptive` switch, gated by the *effective* optimizer mode so that
+    /// `OptimizeMode::Off` (configured or forced by a tenant's degrade
+    /// latch) bypasses the feedback store entirely.
+    pub(crate) fn adaptive_enabled(&self) -> bool {
+        self.adaptive && self.effective_optimize() != OptimizeMode::Off
+    }
 }
 
 impl Default for JobConfig {
@@ -218,6 +243,15 @@ mod tests {
         assert!(c.tasks_per_thread >= 1);
         assert_eq!(c.optimize, OptimizeMode::Auto);
         assert!(c.heap.enabled());
+        assert!(c.adaptive, "adaptive re-optimization defaults on");
+    }
+
+    #[test]
+    fn adaptive_gate_respects_optimizer_off() {
+        let c = JobConfig::fast();
+        assert!(c.adaptive_enabled());
+        assert!(!c.clone().with_adaptive(false).adaptive_enabled());
+        assert!(!c.with_optimize(OptimizeMode::Off).adaptive_enabled());
     }
 
     #[test]

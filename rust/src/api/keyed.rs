@@ -63,7 +63,7 @@ use super::plan::{
 use super::source::Feed;
 use super::traits::{HeapSized, KeyValue};
 use crate::coordinator::collector::shard_count;
-use crate::coordinator::pipeline::{concat_shards, run_keyed_sharded};
+use crate::coordinator::pipeline::{concat_shards, run_keyed_sharded_adaptive, KeyedAdaptive};
 use crate::coordinator::planner::PlanExec;
 use crate::util::hash::{fxhash, FxHashMap};
 
@@ -334,7 +334,10 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedDataset<'rt, K, V, B> {
             mut stages,
             chain_start,
             config,
-        } = self.inner;
+            probes,
+            adapt_log,
+            ..
+        } = self.inner.flush_pending();
         let index = stages.len();
         let agg = Arc::new(agg);
         // Keyed stages identify by their aggregator `Arc` address (reuse
@@ -364,6 +367,9 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedDataset<'rt, K, V, B> {
             chain_start: stages.len(),
             stages,
             config,
+            pending: Vec::new(),
+            probes,
+            adapt_log,
         }
     }
 
@@ -477,6 +483,12 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> KeyedDataset<'rt, K, V, B> {
             }],
             chain_start: 1,
             config,
+            // Each co-group input is its own sub-plan: it flushes, probes,
+            // and records its filters and stages under its own prefix
+            // fingerprints when it collects.
+            pending: Vec::new(),
+            probes: Vec::new(),
+            adapt_log: Vec::new(),
         }
     }
 
@@ -572,7 +584,7 @@ where
         match base {
             Base::Source(mut src) => {
                 if fuse {
-                    run_keyed_stage(exec, fused_pairs, agg, src.feed(), &cfg, 0)
+                    run_keyed_stage(exec, fused_pairs, agg, src.feed(), &cfg, 0, index)
                 } else {
                     let hint = src.len_hint();
                     let staged = apply_chain(src.feed(), &chain, hint);
@@ -584,6 +596,7 @@ where
                         Feed::Slice(&staged),
                         &cfg,
                         staged_len,
+                        index,
                     )
                 }
             }
@@ -594,7 +607,7 @@ where
                     (true, true) => {
                         let mut iter = shards.into_iter();
                         let feed: Feed<'_, B> = Feed::Stream(Box::new(move || iter.next()));
-                        run_keyed_stage(exec, fused_pairs, agg, feed, &cfg, 0)
+                        run_keyed_stage(exec, fused_pairs, agg, feed, &cfg, 0, index)
                     }
                     (true, false) => {
                         let total: usize = shards.iter().map(Vec::len).sum();
@@ -609,6 +622,7 @@ where
                             Feed::Slice(&staged),
                             &cfg,
                             staged_len,
+                            index,
                         )
                     }
                     (false, fused_chain) => {
@@ -622,6 +636,7 @@ where
                                 Feed::Slice(&handoff),
                                 &cfg,
                                 materialized,
+                                index,
                             )
                         } else {
                             let staged =
@@ -634,6 +649,7 @@ where
                                 Feed::Slice(&staged),
                                 &cfg,
                                 materialized,
+                                index,
                             )
                         }
                     }
@@ -644,7 +660,12 @@ where
 }
 
 /// Run one physical keyed stage, recording its metrics (the keyed twin of
-/// `plan.rs`'s `run_stage`).
+/// `plan.rs`'s `run_stage`). Under adaptive re-optimization the stage
+/// receives the lowering's hints for its logical index, observes key
+/// skew into [`FlowMetrics::skew`](crate::coordinator::pipeline::FlowMetrics)
+/// when the aggregator's holders can merge, and hands over
+/// [`Aggregator::merge_holders`] so a split hot key's partial holders
+/// re-merge after the barrier.
 fn run_keyed_stage<'rt, I, K, V, H, O, A>(
     exec: &mut PlanExec<'rt>,
     pairs: &(dyn Fn(&I, &mut dyn FnMut(K, V)) + Sync),
@@ -652,6 +673,7 @@ fn run_keyed_stage<'rt, I, K, V, H, O, A>(
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     materialized_in: u64,
+    index: usize,
 ) -> Vec<Vec<KeyValue<K, O>>>
 where
     I: Send + Sync,
@@ -661,7 +683,14 @@ where
     O: Send + HeapSized,
     A: Aggregator<V, H, O>,
 {
-    let (shards, mut metrics) = run_keyed_sharded(
+    let adaptive = cfg.adaptive_enabled();
+    let merge_impl = |h: &mut H, o: H| agg.merge_holders(h, o);
+    let ctx = KeyedAdaptive {
+        adapt: if adaptive { exec.adaptive_for(index) } else { None },
+        observe: adaptive && A::MERGEABLE,
+        merge: if A::MERGEABLE { Some(&merge_impl) } else { None },
+    };
+    let (shards, mut metrics) = run_keyed_sharded_adaptive(
         exec.pool,
         agg.name(),
         A::ASSOCIATIVE,
@@ -673,6 +702,7 @@ where
         feed,
         cfg,
         exec.agent,
+        ctx,
     );
     metrics.materialized_in = materialized_in;
     exec.note_materialized(materialized_in);

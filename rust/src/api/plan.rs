@@ -46,6 +46,18 @@
 //! concurrent tenant) whose prefix fingerprint matches; see
 //! [`crate::cache`].
 //!
+//! A fifth mechanism closes the loop between runs: **adaptive
+//! re-optimization** (see [`crate::stats`]). Every collect records what
+//! it measured — per-filter selectivities, per-stage cardinalities, key
+//! skew — into the session's [`StatsStore`](crate::stats::StatsStore),
+//! keyed by the same structural prefix fingerprints the cache uses; the
+//! *next* lowering of a matching prefix consults the store and may
+//! reorder adjacent filters, shrink collector shard counts, demote a
+//! combining flow, or split a hot key. Every such decision is named in
+//! [`PlanReport::adaptation`] and previewed by [`Dataset::explain`];
+//! `JobConfig::with_adaptive(false)` or `OptimizeMode::Off` restores
+//! the static plan byte-for-byte.
+//!
 //! Plans are **multi-tenant**: any number of driver threads may record
 //! and `collect()` plans against one shared [`Runtime`] concurrently.
 //! Each stage submits a tagged batch to the session's multi-tenant pool
@@ -71,16 +83,22 @@ use std::ops::Range;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use super::config::{JobConfig, OptimizeMode};
+use super::config::{ExecutionFlow, JobConfig, OptimizeMode};
 use super::runtime::Runtime;
 use super::source::{Feed, InputSource};
 use super::traits::{HeapSized, KeyValue, Mapper, Reducer};
 use crate::cache::{fingerprint, CacheActivity, MaterializationCache, ENTRY_SLOT_BYTES};
 use crate::coordinator::collector::shard_count;
-use crate::coordinator::pipeline::{concat_shards, run_job_sharded, FlowMetrics, StreamMetrics};
-use crate::coordinator::planner::{self, PlanExec};
+use crate::coordinator::pipeline::{
+    concat_shards, run_job_sharded_adaptive, FlowMetrics, StreamMetrics,
+};
+use crate::coordinator::planner::{self, AdaptiveCtx, PlanExec};
 use crate::govern::{AdmissionError, GovernReport};
 use crate::optimizer::value::RirValue;
+use crate::stats::{
+    self, AdaptationReport, AdaptiveDecision, FilterProbe, FilterStats, FlowObservation,
+    StageAdapt,
+};
 use crate::util::hash::fxhash;
 use crate::util::timer::Stopwatch;
 
@@ -146,6 +164,13 @@ pub struct StageInfo {
 /// the fused hot path never does.)
 type ElementOp<'rt, B, T> = Box<dyn Fn(&B, &mut dyn FnMut(&T)) + Send + Sync + 'rt>;
 
+/// A recorded-but-not-yet-composed filter predicate, tagged with the
+/// logical index of its `Filter` stage. Buffering predicates until the
+/// next barrier lets one flush reorder a run of adjacent filters by
+/// measured selectivity before composition freezes their order (see
+/// [`crate::stats`]).
+type PendingFilter<'rt, T> = (usize, Box<dyn Fn(&T) -> bool + Send + Sync + 'rt>);
+
 /// The element-wise chain between the nearest stage barrier (source or
 /// upstream reduce output, element type `B`) and the dataset's current
 /// element type `T`.
@@ -203,6 +228,18 @@ pub struct Dataset<'rt, T, B = T> {
     pub(crate) chain_start: usize,
     /// Configuration snapshot applied to stages recorded from now on.
     pub(crate) config: JobConfig,
+    /// Filter predicates recorded since the last barrier, not yet
+    /// composed into the chain (see [`PendingFilter`]).
+    pub(crate) pending: Vec<PendingFilter<'rt, T>>,
+    /// Live selectivity probes wrapped around composed predicates, each
+    /// keyed by the prefix fingerprint of the filter's *original* stage
+    /// position. Drained into the session
+    /// [`StatsStore`](crate::stats::StatsStore) after the plan executes.
+    pub(crate) probes: Vec<(u64, Arc<FilterProbe>)>,
+    /// Adaptive decisions applied while composing the plan (filter
+    /// reorders happen at flush time, before lowering) — merged into
+    /// [`PlanReport::adaptation`] at collect time.
+    pub(crate) adapt_log: Vec<AdaptiveDecision>,
 }
 
 impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
@@ -265,12 +302,24 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     /// [`Dataset::map`] with an explicit stage name (the keyed layer
     /// records `key_by`/`map_values` through this).
     pub(crate) fn map_named<U: 'rt>(
-        mut self,
+        self,
         name: &str,
         f: impl Fn(&T) -> U + Send + Sync + 'rt,
     ) -> Dataset<'rt, U, B> {
-        self.push_stage(StageKind::Map, name);
-        let chain = match self.chain {
+        let mut this = self.flush_pending();
+        this.push_stage(StageKind::Map, name);
+        let Dataset {
+            rt,
+            base,
+            chain,
+            stages,
+            chain_start,
+            config,
+            probes,
+            adapt_log,
+            ..
+        } = this;
+        let chain = match chain {
             Chain::Direct { by_ref, .. } => Chain::Ops {
                 op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
                     let u = f(by_ref(b));
@@ -287,46 +336,32 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             },
         };
         Dataset {
-            rt: self.rt,
-            base: self.base,
+            rt,
+            base,
             chain,
-            stages: self.stages,
-            chain_start: self.chain_start,
-            config: self.config,
+            stages,
+            chain_start,
+            config,
+            pending: Vec::new(),
+            probes,
+            adapt_log,
         }
     }
 
     /// Record an element predicate. Kept elements flow through the fused
     /// chain by reference — no clones on the hot path.
+    ///
+    /// The predicate is *buffered* rather than composed immediately: at
+    /// the next barrier (or collect) the whole run of adjacent filters
+    /// composes at once, which is what lets adaptive re-optimization
+    /// execute a run in ascending measured-selectivity order (see
+    /// [`crate::stats`]). Recorded stage order — and therefore prefix
+    /// fingerprints and `explain()` — never changes.
     pub fn filter(mut self, p: impl Fn(&T) -> bool + Send + Sync + 'rt) -> Dataset<'rt, T, B> {
+        let index = self.stages.len();
         self.push_stage(StageKind::Filter, "filter");
-        let chain = match self.chain {
-            Chain::Direct { by_ref, .. } => Chain::Ops {
-                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
-                    let t = by_ref(b);
-                    if p(t) {
-                        sink(t);
-                    }
-                }),
-            },
-            Chain::Ops { op } => Chain::Ops {
-                op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
-                    op(b, &mut |t: &T| {
-                        if p(t) {
-                            sink(t);
-                        }
-                    })
-                }),
-            },
-        };
-        Dataset {
-            rt: self.rt,
-            base: self.base,
-            chain,
-            stages: self.stages,
-            chain_start: self.chain_start,
-            config: self.config,
-        }
+        self.pending.push((index, Box::new(p)));
+        self
     }
 
     /// Record a one-to-many element transform (`f` pushes any number of
@@ -341,12 +376,24 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     /// [`Dataset::flat_map`] with an explicit stage name (`join` records
     /// its cross-product expansion through this).
     pub(crate) fn flat_map_named<U: 'rt>(
-        mut self,
+        self,
         name: &str,
         f: impl Fn(&T, &mut dyn FnMut(U)) + Send + Sync + 'rt,
     ) -> Dataset<'rt, U, B> {
-        self.push_stage(StageKind::FlatMap, name);
-        let chain = match self.chain {
+        let mut this = self.flush_pending();
+        this.push_stage(StageKind::FlatMap, name);
+        let Dataset {
+            rt,
+            base,
+            chain,
+            stages,
+            chain_start,
+            config,
+            probes,
+            adapt_log,
+            ..
+        } = this;
+        let chain = match chain {
             Chain::Direct { by_ref, .. } => Chain::Ops {
                 op: Box::new(move |b: &B, sink: &mut dyn FnMut(&U)| {
                     f(by_ref(b), &mut |u: U| sink(&u))
@@ -359,12 +406,15 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             },
         };
         Dataset {
-            rt: self.rt,
-            base: self.base,
+            rt,
+            base,
             chain,
-            stages: self.stages,
-            chain_start: self.chain_start,
-            config: self.config,
+            stages,
+            chain_start,
+            config,
+            pending: Vec::new(),
+            probes,
+            adapt_log,
         }
     }
 
@@ -406,7 +456,10 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             mut stages,
             chain_start,
             config,
-        } = self;
+            probes,
+            adapt_log,
+            ..
+        } = self.flush_pending();
         let index = stages.len();
         // Identify the stage by its mapper/reducer `Arc`s: reusing the
         // same handles across plans (an iterative driver hoisting them
@@ -434,6 +487,9 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             chain_start: stages.len(),
             stages,
             config,
+            pending: Vec::new(),
+            probes,
+            adapt_log,
         }
     }
 
@@ -492,27 +548,31 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     /// the cut stays in the plan but stores and reads nothing — a cut
     /// directly after a reduce barrier then adds no work at all, so
     /// cached and uncached runs produce identical results.
-    pub fn cache(mut self) -> Dataset<'rt, T, T>
+    pub fn cache(self) -> Dataset<'rt, T, T>
     where
         T: Clone + Send + Sync + HeapSized + 'static,
         B: Send + Sync,
     {
-        let index = self.stages.len();
-        self.push_stage(StageKind::Cache, "cache");
+        let mut this = self.flush_pending();
+        let index = this.stages.len();
+        this.push_stage(StageKind::Cache, "cache");
         let stage = CacheStage {
-            base: self.base,
-            chain: self.chain,
+            base: this.base,
+            chain: this.chain,
             index,
-            cfg: self.config.clone(),
-            cache: self.rt.cache(),
+            cfg: this.config.clone(),
+            cache: this.rt.cache(),
         };
         Dataset {
-            rt: self.rt,
+            rt: this.rt,
             base: Base::Stage(Box::new(stage)),
             chain: Chain::direct(),
-            chain_start: self.stages.len(),
-            stages: self.stages,
-            config: self.config,
+            chain_start: this.stages.len(),
+            stages: this.stages,
+            config: this.config,
+            pending: Vec::new(),
+            probes: this.probes,
+            adapt_log: this.adapt_log,
         }
     }
 
@@ -540,10 +600,23 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
 
     /// A human-readable description of the lowered plan: stage kinds and
     /// names, the whole-plan pass's fusion/streaming decisions, prefix
-    /// fingerprints, and cache cut points. Purely observational — nothing
-    /// executes and no optimizer statistics are recorded.
+    /// fingerprints, cache cut points — and, for adaptive plans, the
+    /// re-optimization decisions the session feedback store would apply
+    /// right now. Purely observational — nothing executes and no
+    /// optimizer statistics are recorded. The preview consults the
+    /// *same* store through the same derivation as a collect, so its
+    /// adaptive footer matches what execution would do (modulo plans
+    /// finishing concurrently between the two calls).
     pub fn explain(&self) -> String {
-        planner::describe(&self.stages, self.rt.agent(), self.rt.cache())
+        if self.config.adaptive_enabled() {
+            let ctx = AdaptiveCtx {
+                store: self.rt.stats(),
+                threads: self.config.threads,
+            };
+            planner::describe_adaptive(&self.stages, self.rt.agent(), self.rt.cache(), Some(&ctx))
+        } else {
+            planner::describe(&self.stages, self.rt.agent(), self.rt.cache())
+        }
     }
 
     /// Execute the plan and materialize the output elements. This is the
@@ -617,9 +690,21 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             chain,
             stages,
             chain_start,
+            config,
+            probes,
+            adapt_log,
             ..
-        } = self;
-        let plan = planner::lower(&stages, rt.agent(), rt.cache());
+        } = self.flush_pending();
+        let adaptive = config.adaptive_enabled();
+        let plan = if adaptive {
+            let ctx = AdaptiveCtx {
+                store: rt.stats(),
+                threads: config.threads,
+            };
+            planner::lower_adaptive(&stages, rt.agent(), rt.cache(), Some(&ctx))
+        } else {
+            planner::lower(&stages, rt.agent(), rt.cache())
+        };
         let mut exec = PlanExec::new(rt.pool(), rt.agent(), plan);
         let chain_range = chain_start..stages.len();
         let fuse = exec.chain_fused(&chain_range);
@@ -662,9 +747,151 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
                 }
             }
         };
-        PlanOutput {
-            items,
-            report: exec.into_report(),
+        // Epilogue: feed what this run measured back into the session
+        // stats store, and reconcile the report's decision log with what
+        // actually executed.
+        let (stage_fps, applied): (Vec<Option<u64>>, Vec<Option<StageAdapt>>) = if adaptive {
+            (0..stages.len())
+                .map(|i| (exec.stage_fp(i), exec.adaptive_for(i).cloned()))
+                .unzip()
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let mut report = exec.into_report();
+        if adaptive {
+            record_observations(rt, &stages, &stage_fps, &applied, &probes, &report);
+            let adaptation = report.adaptation.get_or_insert_with(|| AdaptationReport {
+                consulted: true,
+                ..AdaptationReport::default()
+            });
+            // Filter reorders in the lowering's log are *predictions*
+            // (the store may move between the recording flush and the
+            // collect); `adapt_log` is the order that actually composed.
+            // Replace the former with the latter.
+            adaptation
+                .decisions
+                .retain(|d| !matches!(d, AdaptiveDecision::FilterReorder { .. }));
+            let mut decisions = adapt_log;
+            decisions.append(&mut adaptation.decisions);
+            adaptation.decisions = decisions;
+            if let Some(tenant) = &config.govern {
+                let n = adaptation.decisions.len() as u64;
+                if n > 0 {
+                    tenant.counters().adaptations.fetch_add(n, Ordering::Relaxed);
+                }
+            }
+        }
+        PlanOutput { items, report }
+    }
+
+    /// Compose every buffered filter predicate into the chain (no-op
+    /// when none are pending). Under adaptive re-optimization
+    /// ([`JobConfig::adaptive`], optimizer not `Off`) each maximal run
+    /// of adjacent non-`Off` filters is first reordered to ascending
+    /// measured selectivity when the session
+    /// [`StatsStore`](crate::stats::StatsStore) holds enough evidence
+    /// for this exact prefix, and every composed non-`Off` predicate is
+    /// wrapped in a [`FilterProbe`] so this run's selectivities feed the
+    /// next lowering. `Off` filters compose in recorded order, unprobed
+    /// — mirroring the planner's derivation, which is what keeps
+    /// [`Dataset::explain`] and execution in agreement.
+    pub(crate) fn flush_pending(self) -> Self {
+        if self.pending.is_empty() {
+            return self;
+        }
+        let Dataset {
+            rt,
+            base,
+            mut chain,
+            stages,
+            chain_start,
+            config,
+            pending,
+            mut probes,
+            mut adapt_log,
+        } = self;
+        let adaptive = config.adaptive_enabled();
+        let fps = if adaptive {
+            fingerprint::prefix_fingerprints(&stages, rt.cache())
+        } else {
+            Vec::new()
+        };
+        let stats_store = rt.stats();
+        // Pass 1 — decide the composition order. Pending filters split
+        // into maximal runs of consecutive non-`Off` stages; `Off`
+        // filters break runs and keep their recorded position (the
+        // static opt-out stays reachable per stage). Each run may be
+        // permuted by measured selectivity; the `bool` marks predicates
+        // to probe.
+        let flush_run = |mut seg: Vec<PendingFilter<'rt, T>>,
+                         ordered: &mut Vec<(PendingFilter<'rt, T>, bool)>,
+                         adapt_log: &mut Vec<AdaptiveDecision>| {
+            if adaptive && seg.len() >= 2 {
+                let observed: Vec<Option<FilterStats>> = seg
+                    .iter()
+                    .map(|(i, _)| fps.get(*i).and_then(|&fp| stats_store.filter(fp)))
+                    .collect();
+                if let Some(order) = stats::filter_order(&observed) {
+                    adapt_log.push(AdaptiveDecision::FilterReorder {
+                        first_stage: seg[0].0,
+                        order: order.clone(),
+                        selectivities: observed
+                            .iter()
+                            .map(|s| s.unwrap().selectivity())
+                            .collect(),
+                    });
+                    let mut slots: Vec<Option<PendingFilter<'rt, T>>> =
+                        seg.into_iter().map(Some).collect();
+                    seg = order
+                        .iter()
+                        .map(|&k| slots[k].take().expect("filter_order is a permutation"))
+                        .collect();
+                }
+            }
+            ordered.extend(seg.into_iter().map(|p| (p, adaptive)));
+        };
+        let mut ordered: Vec<(PendingFilter<'rt, T>, bool)> = Vec::new();
+        let mut run: Vec<PendingFilter<'rt, T>> = Vec::new();
+        for (index, pred) in pending {
+            if matches!(stages[index].optimize, OptimizeMode::Off) {
+                flush_run(std::mem::take(&mut run), &mut ordered, &mut adapt_log);
+                ordered.push(((index, pred), false));
+            } else {
+                run.push((index, pred));
+            }
+        }
+        flush_run(run, &mut ordered, &mut adapt_log);
+        // Pass 2 — compose, wrapping probed predicates in shared
+        // counters keyed by the filter's original stage position.
+        for ((index, pred), probed) in ordered {
+            let composed: Box<dyn Fn(&T) -> bool + Send + Sync + 'rt> = if probed {
+                let probe = Arc::new(FilterProbe::default());
+                if let Some(&fp) = fps.get(index) {
+                    probes.push((fp, Arc::clone(&probe)));
+                }
+                Box::new(move |t: &T| {
+                    probe.seen.fetch_add(1, Ordering::Relaxed);
+                    let keep = pred(t);
+                    if keep {
+                        probe.passed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    keep
+                })
+            } else {
+                pred
+            };
+            chain = compose_filter(chain, composed);
+        }
+        Dataset {
+            rt,
+            base,
+            chain,
+            stages,
+            chain_start,
+            config,
+            pending: Vec::new(),
+            probes,
+            adapt_log,
         }
     }
 }
@@ -705,7 +932,108 @@ impl<'rt, T: 'rt> Dataset<'rt, T> {
             }],
             chain_start: 1,
             config,
+            pending: Vec::new(),
+            probes: Vec::new(),
+            adapt_log: Vec::new(),
         }
+    }
+}
+
+/// Compose one filter predicate onto the end of an element-wise chain
+/// (the flush-time counterpart of what [`Dataset::filter`] used to do
+/// inline, split out so a flush can pick the composition order).
+fn compose_filter<'rt, B: 'rt, T: 'rt>(
+    chain: Chain<'rt, B, T>,
+    p: Box<dyn Fn(&T) -> bool + Send + Sync + 'rt>,
+) -> Chain<'rt, B, T> {
+    match chain {
+        Chain::Direct { by_ref, .. } => Chain::Ops {
+            op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
+                let t = by_ref(b);
+                if p(t) {
+                    sink(t);
+                }
+            }),
+        },
+        Chain::Ops { op } => Chain::Ops {
+            op: Box::new(move |b: &B, sink: &mut dyn FnMut(&T)| {
+                op(b, &mut |t: &T| {
+                    if p(t) {
+                        sink(t);
+                    }
+                })
+            }),
+        },
+    }
+}
+
+/// The adaptive epilogue of a collect: drain the plan's filter probes
+/// into the session stats store, then record one
+/// [`FlowObservation`](crate::stats::FlowObservation) per reduce-shaped
+/// stage — but only when the stage↔metrics pairing is unambiguous
+/// (co-group sub-plans interleave their metrics into the outer report,
+/// so plans containing one record no flow statistics).
+fn record_observations(
+    rt: &Runtime,
+    stages: &[StageInfo],
+    stage_fps: &[Option<u64>],
+    applied: &[Option<StageAdapt>],
+    probes: &[(u64, Arc<FilterProbe>)],
+    report: &PlanReport,
+) {
+    for (fp, probe) in probes {
+        rt.stats().record_filter(
+            *fp,
+            probe.seen.load(Ordering::Relaxed),
+            probe.passed.load(Ordering::Relaxed),
+        );
+    }
+    if stages.iter().any(|s| s.kind == StageKind::CoGroup) {
+        return;
+    }
+    let reduce_idx: Vec<usize> = stages
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| {
+            matches!(s.kind, StageKind::MapReduce | StageKind::KeyedAggregate)
+        })
+        .map(|(i, _)| i)
+        .collect();
+    if reduce_idx.len() != report.stage_metrics.len() {
+        return;
+    }
+    for (&i, m) in reduce_idx.iter().zip(&report.stage_metrics) {
+        let Some(Some(fp)) = stage_fps.get(i).copied() else {
+            continue;
+        };
+        // A stage that ran the list flow because of a `FlowSwitch` hint
+        // keeps its stored combine-flow evidence: overwriting it with
+        // the switched run's measurements would flip the hint off and
+        // oscillate between flows on alternate runs.
+        let switched = applied
+            .get(i)
+            .and_then(|a| a.as_ref())
+            .is_some_and(|a| a.prefer_list);
+        if switched {
+            continue;
+        }
+        rt.stats().record_flow(
+            fp,
+            FlowObservation {
+                emits: m.emits,
+                keys: m.keys,
+                results: m.results,
+                shuffled_bytes: m.shuffled_bytes,
+                combine_flow: m.flow == ExecutionFlow::Combine,
+                declared: stages[i].kind == StageKind::KeyedAggregate,
+                // `skew` doubles as the MERGEABLE witness: only keyed
+                // flows whose aggregator can merge holders collect a
+                // sketch (see `KeyedAdaptive::observe`).
+                mergeable: m.skew.is_some(),
+                total_secs: m.total_secs,
+                skew: m.skew,
+            },
+        );
     }
 }
 
@@ -787,7 +1115,7 @@ where
                         chain: &chain,
                         inner: mapper.as_ref(),
                     };
-                    run_stage(exec, &fused, reducer.as_ref(), src.feed(), &cfg, 0)
+                    run_stage(exec, &fused, reducer.as_ref(), src.feed(), &cfg, 0, index)
                 } else {
                     // Unfused: the chain materializes its output first (the
                     // eager API's behaviour between jobs).
@@ -801,6 +1129,7 @@ where
                         Feed::Slice(&staged),
                         &cfg,
                         staged_len,
+                        index,
                     )
                 }
             }
@@ -818,7 +1147,7 @@ where
                         };
                         let mut iter = shards.into_iter();
                         let feed: Feed<'_, B> = Feed::Stream(Box::new(move || iter.next()));
-                        run_stage(exec, &fused, reducer.as_ref(), feed, &cfg, 0)
+                        run_stage(exec, &fused, reducer.as_ref(), feed, &cfg, 0, index)
                     }
                     (true, false) => {
                         // Streamed handoff into an unfused chain: the
@@ -837,6 +1166,7 @@ where
                             Feed::Slice(&staged),
                             &cfg,
                             staged_len,
+                            index,
                         )
                     }
                     (false, fused_chain) => {
@@ -856,6 +1186,7 @@ where
                                 Feed::Slice(&handoff),
                                 &cfg,
                                 materialized,
+                                index,
                             )
                         } else {
                             let staged = apply_chain(
@@ -871,6 +1202,7 @@ where
                                 Feed::Slice(&staged),
                                 &cfg,
                                 materialized,
+                                index,
                             )
                         }
                     }
@@ -1186,14 +1518,20 @@ fn run_stage<'rt, I, K, V>(
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     materialized_in: u64,
+    index: usize,
 ) -> Vec<Vec<KeyValue<K, V>>>
 where
     I: Send + Sync,
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {
+    let adapt = if cfg.adaptive_enabled() {
+        exec.adaptive_for(index)
+    } else {
+        None
+    };
     let (shards, mut metrics) =
-        run_job_sharded(exec.pool, mapper, reducer, feed, cfg, exec.agent);
+        run_job_sharded_adaptive(exec.pool, mapper, reducer, feed, cfg, exec.agent, adapt);
     metrics.materialized_in = materialized_in;
     exec.note_materialized(materialized_in);
     exec.push_metrics(metrics);
@@ -1296,6 +1634,13 @@ pub struct PlanReport {
     /// was admitted (see [`crate::govern`]). `None` for ungoverned plans
     /// (no tenant on the config).
     pub govern: Option<GovernReport>,
+    /// Adaptive re-optimization accounting — whether lowering consulted
+    /// the session [`StatsStore`](crate::stats::StatsStore), the sample
+    /// count behind the consulted statistics, and every decision that
+    /// changed this plan relative to its static lowering (see
+    /// [`crate::stats`]). `None` when the plan lowered statically
+    /// ([`JobConfig::adaptive`] false, or the optimizer `Off`).
+    pub adaptation: Option<AdaptationReport>,
 }
 
 /// What a terminal collect returns: the materialized elements plus the
@@ -1597,6 +1942,50 @@ mod tests {
                 KeyValue::new(3, 1)
             ]
         );
+    }
+
+    #[test]
+    fn second_collect_adapts_shards_with_identical_results() {
+        let rt = rt();
+        let data: Vec<i64> = (0..6000).collect();
+        let mapper: Arc<dyn Mapper<i64, i64, i64>> =
+            Arc::new(|x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(x % 5, 1));
+        let reducer: Arc<dyn Reducer<i64, i64>> = Arc::new(RirReducer::<i64, i64>::new(
+            canon::sum_i64("plan.adapt.shards"),
+        ));
+        let run = || {
+            rt.dataset(&data)
+                .map_reduce_shared(Arc::clone(&mapper), Arc::clone(&reducer))
+                .collect_sorted()
+        };
+        let first = run();
+        let a1 = first.report.adaptation.as_ref().expect("adaptive lowering");
+        assert!(a1.consulted);
+        assert!(a1.decisions.is_empty(), "cold store: no adaptations yet");
+        let second = run();
+        let a2 = second.report.adaptation.as_ref().expect("adaptive lowering");
+        assert!(
+            a2.decisions
+                .iter()
+                .any(|d| matches!(d, AdaptiveDecision::ShardCount { .. })),
+            "5 keys observed over 6000 emits must shrink the shard count: {:?}",
+            a2.decisions
+        );
+        assert_eq!(
+            first.items, second.items,
+            "adaptation must not change results"
+        );
+        assert!(rt.stats().records() >= 1, "epilogue must record");
+        assert!(rt.stats().consults() >= 1, "second lowering must consult");
+
+        // The static opt-outs bypass the store entirely.
+        let frozen = rt
+            .dataset(&data)
+            .with_config(JobConfig::fast().with_threads(2).with_adaptive(false))
+            .map_reduce_shared(Arc::clone(&mapper), Arc::clone(&reducer))
+            .collect_sorted();
+        assert!(frozen.report.adaptation.is_none());
+        assert_eq!(frozen.items, second.items);
     }
 
     #[test]

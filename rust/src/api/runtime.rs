@@ -45,6 +45,7 @@ use crate::govern::{Governor, Scoreboard, TenantId, TenantSpec};
 use crate::memsim::SimHeap;
 use crate::optimizer::agent::OptimizerAgent;
 use crate::optimizer::value::RirValue;
+use crate::stats::StatsStore;
 use crate::util::hash::fxhash;
 
 /// A long-lived execution session: worker pool + optimizer agent + heap.
@@ -68,6 +69,7 @@ pub struct Runtime {
     config: JobConfig,
     cache: MaterializationCache,
     governor: Governor,
+    stats: StatsStore,
 }
 
 impl Runtime {
@@ -98,6 +100,7 @@ impl Runtime {
             config,
             cache: MaterializationCache::new(),
             governor: Governor::new(),
+            stats: StatsStore::new(),
         }
     }
 
@@ -121,6 +124,17 @@ impl Runtime {
     /// [`Dataset::cache`]: crate::api::plan::Dataset::cache
     pub fn cache(&self) -> &MaterializationCache {
         &self.cache
+    }
+
+    /// The session's optimizer feedback store (see [`crate::stats`]):
+    /// per-prefix-fingerprint statistics recorded by every adaptive plan
+    /// collect, consulted by the next lowering of the same prefix. Read
+    /// [`records`](StatsStore::records)/[`consults`](StatsStore::consults)
+    /// for the feedback-loop observables, or
+    /// [`clear`](StatsStore::clear) to return the session to a cold,
+    /// fully static state.
+    pub fn stats(&self) -> &StatsStore {
+        &self.stats
     }
 
     /// The session governor: tenant registry, admission knobs

@@ -33,6 +33,15 @@
 //! identity the framework cannot observe (anonymous `map`/`filter`
 //! closures) hash by kind + name + mode + position only.
 //!
+//! Since the adaptive re-optimization work, prefix fingerprints also key
+//! the session [`StatsStore`](crate::stats::StatsStore): plans that never
+//! cache still compute them so that measured runtime behavior can be
+//! recorded per prefix and consulted at the next lowering. For such
+//! non-caching plans an address-reuse collision (an `Arc` freed and a new
+//! one allocated at the same address) can at worst alias two prefixes'
+//! *statistics* — degrading a lowering hint, never correctness, because
+//! every adaptive rewrite is digest-preserving by construction.
+//!
 //! [`Dataset::cache`]: crate::api::plan::Dataset::cache
 //! [`StageInfo`]: crate::api::plan::StageInfo
 //! [`StageToken`]: crate::api::plan::StageToken

@@ -48,7 +48,7 @@ pub fn shard_count(threads: usize) -> usize {
 }
 
 #[inline]
-fn shard_of(hash: u64, n_shards: usize) -> usize {
+pub(crate) fn shard_of(hash: u64, n_shards: usize) -> usize {
     // High bits: FxHash's low bits are weaker.
     (hash >> 48) as usize & (n_shards - 1)
 }
@@ -217,7 +217,27 @@ impl<K: Hash + Eq + HeapSized, H: HeapSized> AggregateCollector<K, H> {
         cohorts: &CollectorCohorts,
     ) {
         let shard = shard_of(fxhash(&k), self.shards.len());
-        let mut map = self.shards[shard].lock().unwrap();
+        self.combine_at(shard, k, v, init, fold, alloc, cohorts);
+    }
+
+    /// [`AggregateCollector::combine`] with the shard chosen by the
+    /// caller instead of by key hash — the hot-key split path
+    /// ([`crate::stats`]): the map phase spreads a dominant key's emits
+    /// round-robin across shards to break the single-shard lock convoy,
+    /// and the reduce phase re-merges that key's partial holders after
+    /// the barrier. Allocation accounting is identical to `combine`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn combine_at<V>(
+        &self,
+        shard: usize,
+        k: K,
+        v: V,
+        init: impl FnOnce() -> H,
+        fold: impl FnOnce(&mut H, V),
+        alloc: &mut ThreadAlloc,
+        cohorts: &CollectorCohorts,
+    ) {
+        let mut map = self.shards[shard & (self.shards.len() - 1)].lock().unwrap();
         match map.entry(k) {
             std::collections::hash_map::Entry::Occupied(mut e) => {
                 let holder = e.get_mut();
@@ -380,6 +400,26 @@ mod tests {
             "declared combining must allocate per key: {} objects",
             s.allocated_objects
         );
+    }
+
+    #[test]
+    fn combine_at_routes_to_explicit_shards_preserving_totals() {
+        let heap = SimHeap::disabled();
+        let c = cohorts(&heap);
+        let mut a = heap.thread_alloc();
+        let col: AggregateCollector<i64, i64> = AggregateCollector::new(8);
+        // Round-robin one hot key across every shard (the split path);
+        // partial holders appear per shard, totals are preserved.
+        for i in 0..64usize {
+            col.combine_at(i, 7, 1i64, || 0i64, |h, v| *h += v, &mut a, &c);
+        }
+        assert_eq!(col.key_count(), 8, "one partial holder per shard");
+        let total: i64 = col
+            .into_shards()
+            .into_iter()
+            .flat_map(|m| m.into_values())
+            .sum();
+        assert_eq!(total, 64);
     }
 
     #[test]

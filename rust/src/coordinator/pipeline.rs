@@ -46,6 +46,8 @@ use crate::cache::CacheActivity;
 use crate::memsim::{CohortId, GcStats, SimHeap, ThreadAlloc};
 use crate::optimizer::agent::{CombinerSource, Decision, OptimizerAgent};
 use crate::optimizer::value::RirValue;
+use crate::stats::{KeySkew, MajorityTracker, SkewSketch, StageAdapt};
+use crate::util::hash::fxhash;
 use crate::util::timer::Stopwatch;
 
 /// Per-job measurements (the figures are built from these).
@@ -108,6 +110,12 @@ pub struct FlowMetrics {
     /// a hit means the stage's input was read back instead of recomputed).
     /// `None` for stages with no cut point upstream.
     pub cache: Option<CacheActivity>,
+    /// Key-frequency sketch of this stage's emit stream (Boyer–Moore
+    /// majority candidate + surplus), collected when the stage observes
+    /// for the adaptive feedback store ([`crate::stats`]). Only keyed
+    /// stages whose aggregator is `MERGEABLE` observe — the precondition
+    /// for acting on the sketch with a hot-key split.
+    pub skew: Option<KeySkew>,
 }
 
 /// Standing-query measurements — the streaming counterpart of
@@ -314,6 +322,33 @@ where
     K: Hash + Eq + Clone + Send + Sync + RirValue,
     V: RirValue,
 {
+    run_job_sharded_adaptive(pool, mapper, reducer, feed, cfg, agent, None)
+}
+
+/// [`run_job_sharded`] with per-stage adaptive hints from the session's
+/// feedback store ([`crate::stats`]). For RIR stages only the observed
+/// shard-count override applies (the combining rewrite itself stays on
+/// the agent's per-class path, and hot-key splitting needs a declared
+/// merge — see [`run_keyed_sharded_adaptive`]). `None` hints reproduce
+/// the static plan bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_job_sharded_adaptive<I, K, V>(
+    pool: &WorkerPool,
+    mapper: &dyn Mapper<I, K, V>,
+    reducer: &dyn Reducer<K, V>,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    adapt: Option<&StageAdapt>,
+) -> (Vec<Vec<KeyValue<K, V>>>, FlowMetrics)
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + RirValue,
+    V: RirValue,
+{
+    let n_shards = adapt
+        .and_then(|a| a.shard_override)
+        .unwrap_or_else(|| shard_count(cfg.threads));
     // --- Flow decision (the "class load time" hook) -------------------
     // `effective_optimize` honours the tenant degrade latch: a governed
     // job admitted under pressure runs the reduce flow (results are
@@ -340,17 +375,35 @@ where
     let batch = batch_for(pool, cfg);
     match decision {
         Some(Decision::Combine(combiner)) => {
-            run_combine_flow(&batch, mapper, feed, cfg, combiner)
+            run_combine_flow(&batch, mapper, feed, cfg, combiner, n_shards)
         }
-        Some(Decision::Fallback(reason)) => {
-            run_reduce_flow(&batch, mapper, reducer, feed, cfg, Some(reason.to_string()))
-        }
-        Some(Decision::Opaque) => {
-            run_reduce_flow(&batch, mapper, reducer, feed, cfg, Some("opaque reducer".into()))
-        }
-        None => {
-            run_reduce_flow(&batch, mapper, reducer, feed, cfg, Some("optimizer off".into()))
-        }
+        Some(Decision::Fallback(reason)) => run_reduce_flow(
+            &batch,
+            mapper,
+            reducer,
+            feed,
+            cfg,
+            Some(reason.to_string()),
+            n_shards,
+        ),
+        Some(Decision::Opaque) => run_reduce_flow(
+            &batch,
+            mapper,
+            reducer,
+            feed,
+            cfg,
+            Some("opaque reducer".into()),
+            n_shards,
+        ),
+        None => run_reduce_flow(
+            &batch,
+            mapper,
+            reducer,
+            feed,
+            cfg,
+            Some("optimizer off".into()),
+            n_shards,
+        ),
     }
 }
 
@@ -506,6 +559,7 @@ fn run_reduce_flow<I, K, V>(
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     fallback_reason: Option<String>,
+    n_shards: usize,
 ) -> (Vec<Vec<KeyValue<K, V>>>, FlowMetrics)
 where
     I: Send + Sync,
@@ -515,7 +569,7 @@ where
     let total_sw = Stopwatch::start();
     let cohorts = job_cohorts(cfg);
     let gc_before = cfg.heap.stats();
-    let collector: ListCollector<K, V> = ListCollector::new(shard_count(cfg.threads));
+    let collector: ListCollector<K, V> = ListCollector::new(n_shards);
 
     // ---- Map phase ----
     let map_sw = Stopwatch::start();
@@ -601,6 +655,7 @@ where
         batch: batch_id,
         batch_pool,
         cache: None,
+        skew: None,
     };
     (results, metrics)
 }
@@ -611,6 +666,7 @@ fn run_combine_flow<I, K, V>(
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     combiner: crate::optimizer::combiner::Combiner,
+    n_shards: usize,
 ) -> (Vec<Vec<KeyValue<K, V>>>, FlowMetrics)
 where
     I: Send + Sync,
@@ -620,8 +676,7 @@ where
     let total_sw = Stopwatch::start();
     let cohorts = job_cohorts(cfg);
     let gc_before = cfg.heap.stats();
-    let collector: HolderCollector<K> =
-        HolderCollector::new(shard_count(cfg.threads), combiner);
+    let collector: HolderCollector<K> = HolderCollector::new(n_shards, combiner);
 
     // ---- Map phase (combining at emit time) ----
     let map_sw = Stopwatch::start();
@@ -707,6 +762,7 @@ where
         batch: batch_id,
         batch_pool,
         cache: None,
+        skew: None,
     };
     (results, metrics)
 }
@@ -720,6 +776,32 @@ where
 /// the sink (the stage's fused element-wise chain lives inside this
 /// closure, exactly like [`crate::api::plan`]'s `FusedMapper`).
 pub type PairFn<'a, I, K, V> = &'a (dyn Fn(&I, &mut dyn FnMut(K, V)) + Sync);
+
+/// Adaptive context a keyed stage hands to
+/// [`run_keyed_sharded_adaptive`]: the lowering-time hints for this
+/// stage, whether to collect the key-frequency sketch for the feedback
+/// store, and the aggregator's declared holder merge (present only for
+/// `MERGEABLE` aggregators — the hot-key split's correctness
+/// precondition). The default reproduces the static executor.
+pub struct KeyedAdaptive<'a, H> {
+    /// Hints derived from the feedback store at lowering time.
+    pub adapt: Option<&'a StageAdapt>,
+    /// Collect the Boyer–Moore sketch into [`FlowMetrics::skew`].
+    pub observe: bool,
+    /// `Aggregator::merge_holders` as a closure, for re-merging a split
+    /// hot key's partial holders after the barrier.
+    pub merge: Option<&'a (dyn Fn(&mut H, H) + Sync)>,
+}
+
+impl<H> Default for KeyedAdaptive<'_, H> {
+    fn default() -> Self {
+        KeyedAdaptive {
+            adapt: None,
+            observe: false,
+            merge: None,
+        }
+    }
+}
 
 /// Run one keyed aggregation stage, sharded. The *declared* counterpart
 /// of [`run_job_sharded`]: instead of consulting the agent's RIR analysis,
@@ -764,29 +846,119 @@ where
     FC: Fn(&mut H, V) + Sync,
     FF: Fn(H) -> O + Sync,
 {
+    run_keyed_sharded_adaptive(
+        pool,
+        class,
+        associative,
+        commutative,
+        pairs,
+        init,
+        fold,
+        finish,
+        feed,
+        cfg,
+        agent,
+        KeyedAdaptive::default(),
+    )
+}
+
+/// [`run_keyed_sharded`] with adaptive execution: lowering-time hints may
+/// shrink the collector to the observed key cardinality, demote the
+/// declared combining flow to the list flow (measured holder growth), or
+/// split a dominant key round-robin across shards (partial holders
+/// re-merged by the aggregator's declared `merge_holders` after the
+/// barrier — only offered when `ctx.merge` is present). With
+/// `KeyedAdaptive::default()` this *is* [`run_keyed_sharded`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_keyed_sharded_adaptive<I, K, V, H, O, FI, FC, FF>(
+    pool: &WorkerPool,
+    class: &str,
+    associative: bool,
+    commutative: bool,
+    pairs: PairFn<'_, I, K, V>,
+    init: FI,
+    fold: FC,
+    finish: FF,
+    feed: Feed<'_, I>,
+    cfg: &JobConfig,
+    agent: &OptimizerAgent,
+    ctx: KeyedAdaptive<'_, H>,
+) -> (Vec<Vec<KeyValue<K, O>>>, FlowMetrics)
+where
+    I: Send + Sync,
+    K: Hash + Eq + Clone + Send + Sync + HeapSized,
+    V: Send + HeapSized,
+    H: Send + HeapSized,
+    O: Send + HeapSized,
+    FI: Fn() -> H + Sync,
+    FC: Fn(&mut H, V) + Sync,
+    FF: Fn(H) -> O + Sync,
+{
     let optimize = cfg.effective_optimize();
+    let prefer_list = ctx.adapt.is_some_and(|a| a.prefer_list);
     let combine = match optimize {
         OptimizeMode::Off => false,
-        _ => agent.process_declared(class, associative, commutative),
+        _ => agent.process_declared(class, associative, commutative) && !prefer_list,
     };
+    let n_shards = ctx
+        .adapt
+        .and_then(|a| a.shard_override)
+        .unwrap_or_else(|| shard_count(cfg.threads));
     // One tagged batch per keyed stage, like `run_job_sharded`.
     let batch = batch_for(pool, cfg);
     if combine {
-        run_declared_combine_flow(&batch, pairs, &init, &fold, &finish, feed, cfg)
+        // The split only applies where it is correct: a declared holder
+        // merge must be available to reunify the hot key's partials.
+        let hot_key = ctx.adapt.and_then(|a| a.hot_key).filter(|_| ctx.merge.is_some());
+        run_declared_combine_flow(
+            &batch,
+            pairs,
+            &init,
+            &fold,
+            &finish,
+            feed,
+            cfg,
+            n_shards,
+            ctx.observe,
+            hot_key,
+            ctx.merge,
+        )
     } else {
         let reason = if matches!(optimize, OptimizeMode::Off) {
             "optimizer off"
         } else if !associative {
             "declared non-associative"
-        } else {
+        } else if !commutative {
             "declared non-commutative"
+        } else {
+            "adaptive: measured holder growth prefers the list flow"
         };
-        run_keyed_list_flow(&batch, pairs, &init, &fold, &finish, feed, cfg, reason)
+        run_keyed_list_flow(
+            &batch,
+            pairs,
+            &init,
+            &fold,
+            &finish,
+            feed,
+            cfg,
+            reason,
+            n_shards,
+            ctx.observe,
+        )
     }
 }
 
 /// The declared combining flow: fold pairs into typed holders at emit
 /// time, ship one holder per key (mirrors [`run_combine_flow`]).
+///
+/// When `hot_key` is set (with its `merge` closure), emits of the
+/// matching key hash are spread round-robin across all shards instead of
+/// convoying on the one shard lock the hash owns; after the barrier the
+/// split key's partial holders are re-merged — by key *equality*, so a
+/// colliding cold key merges harmlessly into its own entry — into the
+/// key's canonical shard, preserving both results and the output's
+/// shard-order contract.
+#[allow(clippy::too_many_arguments)]
 fn run_declared_combine_flow<I, K, V, H, O>(
     batch: &Batch<'_>,
     pairs: PairFn<'_, I, K, V>,
@@ -795,6 +967,10 @@ fn run_declared_combine_flow<I, K, V, H, O>(
     finish: &(dyn Fn(H) -> O + Sync),
     feed: Feed<'_, I>,
     cfg: &JobConfig,
+    n_shards: usize,
+    observe: bool,
+    hot_key: Option<u64>,
+    merge: Option<&(dyn Fn(&mut H, H) + Sync)>,
 ) -> (Vec<Vec<KeyValue<K, O>>>, FlowMetrics)
 where
     I: Send + Sync,
@@ -806,24 +982,40 @@ where
     let total_sw = Stopwatch::start();
     let cohorts = job_cohorts(cfg);
     let gc_before = cfg.heap.stats();
-    let collector: AggregateCollector<K, H> =
-        AggregateCollector::new(shard_count(cfg.threads));
+    let collector: AggregateCollector<K, H> = AggregateCollector::new(n_shards);
+    let sketch = Mutex::new(SkewSketch::default());
+    let hot_rr = AtomicU64::new(0);
 
     // ---- Map phase (combining at emit time) ----
     let map_sw = Stopwatch::start();
     let map_chunk = |items: &[I]| -> u64 {
         let mut alloc = cfg.heap.thread_alloc();
         let mut emits = 0u64;
+        let mut tracker = MajorityTracker::new();
         for input in items {
             pairs(input, &mut |k, v| {
                 if cfg.scratch_per_emit > 0 {
                     alloc.scratch(cohorts.scratch, cfg.scratch_per_emit);
                 }
-                collector.combine(k, v, init, fold, &mut alloc, &cohorts.collector);
+                let hash = fxhash(&k);
+                if observe {
+                    tracker.hit(hash);
+                }
+                let shard = match hot_key {
+                    Some(hot) if hash == hot => {
+                        hot_rr.fetch_add(1, Ordering::Relaxed) as usize & (n_shards - 1)
+                    }
+                    _ => super::collector::shard_of(hash, n_shards),
+                };
+                collector.combine_at(shard, k, v, init, fold, &mut alloc, &cohorts.collector);
                 emits += 1;
             });
         }
         alloc.flush();
+        if observe {
+            let (cand, weight) = tracker.summary();
+            sketch.lock().unwrap().absorb(cand, weight);
+        }
         emits
     };
     let (map_pool, emits) = map_phase(batch, feed, cfg, &map_chunk);
@@ -831,8 +1023,53 @@ where
 
     // ---- Barrier; finish phase (one holder per key) ----
     let fin_sw = Stopwatch::start();
-    let keys = collector.key_count() as u64;
-    let shards = collector.into_shards();
+    let mut shards = collector.into_shards();
+    if let (Some(hot), Some(merge)) = (hot_key, merge) {
+        // Re-unify the split key: pull every hash-matching entry out of
+        // the non-canonical shards and merge it into the canonical one.
+        let canonical = super::collector::shard_of(hot, shards.len());
+        let mut partials = Vec::new();
+        for (si, shard) in shards.iter_mut().enumerate() {
+            if si == canonical {
+                continue;
+            }
+            let matching: Vec<K> = shard
+                .keys()
+                .filter(|k| fxhash(k) == hot)
+                .cloned()
+                .collect();
+            for k in matching {
+                if let Some(h) = shard.remove(&k) {
+                    partials.push((k, h));
+                }
+            }
+        }
+        let mut alloc = cfg.heap.thread_alloc();
+        for (k, h) in partials {
+            match shards[canonical].entry(k) {
+                std::collections::hash_map::Entry::Occupied(mut e) => {
+                    let into = e.get_mut();
+                    let absorbed = h.heap_bytes();
+                    let before = into.heap_bytes();
+                    merge(into, h);
+                    let after = into.heap_bytes();
+                    // The absorbed partial dies; the target's growth is
+                    // charged — the finish-phase free stays balanced.
+                    alloc.free(cohorts.collector.holders, absorbed);
+                    if after > before {
+                        alloc.alloc(cohorts.collector.holders, after - before);
+                    } else if before > after {
+                        alloc.free(cohorts.collector.holders, before - after);
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(h);
+                }
+            }
+        }
+        alloc.flush();
+    }
+    let keys = shards.iter().map(|m| m.len()).sum::<usize>() as u64;
     let shuffled_bytes = AtomicU64::new(0);
     let slots: Vec<Mutex<Vec<KeyValue<K, O>>>> =
         (0..shards.len()).map(|_| Mutex::new(Vec::new())).collect();
@@ -887,6 +1124,7 @@ where
         batch: batch_id,
         batch_pool,
         cache: None,
+        skew: sketch.into_inner().unwrap().finish(emits),
     };
     (results, metrics)
 }
@@ -903,6 +1141,8 @@ fn run_keyed_list_flow<I, K, V, H, O>(
     feed: Feed<'_, I>,
     cfg: &JobConfig,
     fallback_reason: &str,
+    n_shards: usize,
+    observe: bool,
 ) -> (Vec<Vec<KeyValue<K, O>>>, FlowMetrics)
 where
     I: Send + Sync,
@@ -914,23 +1154,32 @@ where
     let total_sw = Stopwatch::start();
     let cohorts = job_cohorts(cfg);
     let gc_before = cfg.heap.stats();
-    let collector: ListCollector<K, V> = ListCollector::new(shard_count(cfg.threads));
+    let collector: ListCollector<K, V> = ListCollector::new(n_shards);
+    let sketch = Mutex::new(SkewSketch::default());
 
     // ---- Map phase ----
     let map_sw = Stopwatch::start();
     let map_chunk = |items: &[I]| -> u64 {
         let mut alloc = cfg.heap.thread_alloc();
         let mut emits = 0u64;
+        let mut tracker = MajorityTracker::new();
         for input in items {
             pairs(input, &mut |k, v| {
                 if cfg.scratch_per_emit > 0 {
                     alloc.scratch(cohorts.scratch, cfg.scratch_per_emit);
+                }
+                if observe {
+                    tracker.hit(fxhash(&k));
                 }
                 collector.emit(k, v, &mut alloc, &cohorts.collector);
                 emits += 1;
             });
         }
         alloc.flush();
+        if observe {
+            let (cand, weight) = tracker.summary();
+            sketch.lock().unwrap().absorb(cand, weight);
+        }
         emits
     };
     let (map_pool, emits) = map_phase(batch, feed, cfg, &map_chunk);
@@ -1002,6 +1251,7 @@ where
         batch: batch_id,
         batch_pool,
         cache: None,
+        skew: sketch.into_inner().unwrap().finish(emits),
     };
     (results, metrics)
 }
@@ -1184,6 +1434,98 @@ mod tests {
         assert_eq!(sorted(from_slice), sorted(from_stream));
         assert_eq!(ms.emits, mm.emits);
         assert_eq!(ms.keys, mm.keys);
+    }
+
+    #[test]
+    fn hot_key_split_matches_static_declared_flow() {
+        let pool = WorkerPool::new(4);
+        let cfg = JobConfig::fast().with_threads(4);
+        // 90 % of the pairs hit key 0 — the shape the split targets.
+        let inputs: Vec<(i64, i64)> = (0..4096i64)
+            .map(|i| (if i % 10 == 0 { 1 + i % 7 } else { 0 }, 1))
+            .collect();
+        let pairs: PairFn<'_, (i64, i64), i64, i64> = &|p, sink| sink(p.0, p.1);
+        let run = |ctx: KeyedAdaptive<'_, i64>| {
+            let agent = OptimizerAgent::new();
+            run_keyed_sharded_adaptive(
+                &pool,
+                "sum",
+                true,
+                true,
+                pairs,
+                || 0i64,
+                |h: &mut i64, v: i64| *h += v,
+                |h| h,
+                Feed::Slice(&inputs),
+                &cfg,
+                &agent,
+                ctx,
+            )
+        };
+        let (static_out, m_static) = run(KeyedAdaptive::default());
+        assert_eq!(m_static.flow, ExecutionFlow::Combine);
+        assert!(m_static.skew.is_none(), "static run does not observe");
+
+        let merge: &(dyn Fn(&mut i64, i64) + Sync) = &|a, b| *a += b;
+        let adapt = StageAdapt {
+            hot_key: Some(fxhash(&0i64)),
+            samples: 1,
+            ..StageAdapt::default()
+        };
+        let (split_out, m_split) = run(KeyedAdaptive {
+            adapt: Some(&adapt),
+            observe: true,
+            merge: Some(merge),
+        });
+        assert_eq!(m_split.flow, ExecutionFlow::Combine);
+        assert_eq!(m_split.keys, m_static.keys, "split partials must re-merge");
+        let skew = m_split.skew.expect("observing run collects the sketch");
+        assert_eq!(skew.hot_hash, fxhash(&0i64));
+        assert!(skew.hot_support * 2 >= skew.emits);
+
+        let canonical = |out: Vec<Vec<KeyValue<i64, i64>>>| {
+            let mut v: Vec<(i64, i64)> = concat_shards(out)
+                .into_iter()
+                .map(|kv| (kv.key, kv.value))
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(canonical(static_out), canonical(split_out));
+    }
+
+    #[test]
+    fn shard_override_preserves_results() {
+        let inputs = lines();
+        let reducer: RirReducer<String, i64> = RirReducer::new(canon::sum_i64("wc7"));
+        let agent = OptimizerAgent::new();
+        let cfg = JobConfig::fast().with_threads(2);
+        let pool = WorkerPool::new(2);
+        let (r_static, _) = run_job_on(
+            &pool,
+            &wc_mapper,
+            &reducer,
+            Feed::Slice(&inputs),
+            &cfg,
+            &agent,
+        );
+        let adapt = StageAdapt {
+            shard_override: Some(16),
+            samples: 1,
+            ..StageAdapt::default()
+        };
+        let (shards, m) = run_job_sharded_adaptive(
+            &pool,
+            &wc_mapper,
+            &reducer,
+            Feed::Slice(&inputs),
+            &cfg,
+            &agent,
+            Some(&adapt),
+        );
+        assert_eq!(shards.len(), 16, "collector takes the observed shard count");
+        assert_eq!(m.keys, 6);
+        assert_eq!(sorted(r_static), sorted(concat_shards(shards)));
     }
 
     #[test]

@@ -30,9 +30,11 @@ use std::ops::Range;
 use crate::api::config::OptimizeMode;
 use crate::api::plan::{PlanReport, StageInfo, StageKind};
 use crate::cache::{fingerprint, CacheActivity, Fingerprint, MaterializationCache};
+use crate::coordinator::collector::shard_count;
 use crate::coordinator::pipeline::FlowMetrics;
 use crate::coordinator::scheduler::WorkerPool;
 use crate::optimizer::agent::{OptimizerAgent, StageDecision, StageShape};
+use crate::stats::{self, AdaptationReport, AdaptiveDecision, StageAdapt, StatsStore};
 
 fn is_element_wise(kind: StageKind) -> bool {
     matches!(kind, StageKind::Map | StageKind::Filter | StageKind::FlatMap)
@@ -61,6 +63,26 @@ pub struct PhysicalPlan {
     /// sources lower with `cacheable: false`, and their cut points
     /// materialize without touching the cache).
     pub cacheable: bool,
+    /// Per-stage adaptive execution hints derived from the feedback
+    /// store at lowering time (parallel to the stage list; all `None`
+    /// without an [`AdaptiveCtx`] or on a cold store).
+    pub adapt: Vec<Option<StageAdapt>>,
+    /// The adaptive section of the eventual plan report: whether the
+    /// store was consulted and every decision taken. `None` when
+    /// lowering ran without an [`AdaptiveCtx`].
+    pub adaptation: Option<AdaptationReport>,
+}
+
+/// Lowering-time adaptive context: the session's feedback store plus the
+/// thread count the static shard default derives from. Passing the same
+/// context to [`lower_adaptive`] and [`describe_adaptive`] is what pins
+/// `explain()` ≡ the executed plan — both derive hints through the same
+/// pure helpers in [`crate::stats`] against the same store.
+pub struct AdaptiveCtx<'a> {
+    /// The session [`StatsStore`] (see [`crate::api::Runtime::stats`]).
+    pub store: &'a StatsStore,
+    /// Worker threads the executing config will run with.
+    pub threads: usize,
 }
 
 /// Lower a logical stage list to a physical plan via the agent's
@@ -80,7 +102,21 @@ pub fn lower(
     agent: &OptimizerAgent,
     registry: &MaterializationCache,
 ) -> PhysicalPlan {
-    lower_impl(stages, agent, registry, true)
+    lower_impl(stages, agent, registry, true, None)
+}
+
+/// [`lower`] with adaptive re-optimization: consult the session feedback
+/// store for statistics recorded by earlier runs of the same structural
+/// prefixes and derive per-stage execution hints plus the
+/// [`AdaptationReport`] naming every decision. With `ctx: None` this *is*
+/// the static [`lower`].
+pub fn lower_adaptive(
+    stages: &[StageInfo],
+    agent: &OptimizerAgent,
+    registry: &MaterializationCache,
+    ctx: Option<&AdaptiveCtx<'_>>,
+) -> PhysicalPlan {
+    lower_impl(stages, agent, registry, true, ctx)
 }
 
 fn lower_impl(
@@ -88,6 +124,7 @@ fn lower_impl(
     agent: &OptimizerAgent,
     registry: &MaterializationCache,
     record: bool,
+    ctx: Option<&AdaptiveCtx<'_>>,
 ) -> PhysicalPlan {
     // Mark every element-wise stage whose contiguous run contains an
     // optimizer-off stage, or whose run feeds a cache cut (the chain
@@ -159,10 +196,107 @@ fn lower_impl(
             }
         });
     }
-    let decisions = if record {
-        agent.plan(&shapes)
+    // Fingerprint plans that can and do cache, plus every adaptive
+    // lowering: the feedback store shares the cache's fingerprint path,
+    // so non-caching adaptive plans pay the hashing (and register their
+    // address identities) too. Static, cut-less plans still skip it.
+    let has_cut = stages.iter().any(|s| s.kind == StageKind::Cache);
+    let cacheable = has_cut && fingerprint::cacheable(stages);
+    let prefix_fps = if cacheable || !record || ctx.is_some() {
+        // `!record` is the observational `describe()` pass, which shows
+        // fingerprints even for cut-less plans.
+        fingerprint::prefix_fingerprints(stages, registry)
     } else {
-        agent.plan_preview(&shapes)
+        Vec::new()
+    };
+
+    // Derive per-stage execution hints and the decision log from the
+    // feedback store. Stage-level `Off` stages are never adapted — the
+    // static opt-out must stay byte-for-byte reachable per stage too.
+    let mut adapt: Vec<Option<StageAdapt>> = vec![None; stages.len()];
+    let mut adaptation = None;
+    if let Some(ctx) = ctx {
+        let default_shards = shard_count(ctx.threads);
+        let mut samples = 0u64;
+        let mut decisions = Vec::new();
+        let mut i = 0usize;
+        while i < stages.len() {
+            let stage = &stages[i];
+            let off = matches!(stage.optimize, OptimizeMode::Off);
+            match stage.kind {
+                StageKind::Filter if !off => {
+                    // A run of consecutive (non-Off) filters: measured
+                    // selectivities, keyed by each predicate's original
+                    // recorded position, pick the execution order.
+                    let start = i;
+                    while i < stages.len()
+                        && stages[i].kind == StageKind::Filter
+                        && !matches!(stages[i].optimize, OptimizeMode::Off)
+                    {
+                        i += 1;
+                    }
+                    let run: Vec<Option<stats::FilterStats>> = (start..i)
+                        .map(|j| prefix_fps.get(j).and_then(|&fp| ctx.store.filter(fp)))
+                        .collect();
+                    for s in run.iter().flatten() {
+                        samples = samples.max(s.samples);
+                    }
+                    if let Some(order) = stats::filter_order(&run) {
+                        let selectivities = run.iter().map(|s| s.unwrap().selectivity()).collect();
+                        decisions.push(AdaptiveDecision::FilterReorder {
+                            first_stage: start,
+                            order,
+                            selectivities,
+                        });
+                    }
+                }
+                StageKind::MapReduce | StageKind::KeyedAggregate if !off => {
+                    if let Some(flow) = prefix_fps.get(i).and_then(|&fp| ctx.store.flow(fp)) {
+                        samples = samples.max(flow.samples);
+                        if let Some(hints) = stats::derive_stage_adapt(&flow, default_shards) {
+                            if let Some(to) = hints.shard_override {
+                                decisions.push(AdaptiveDecision::ShardCount {
+                                    stage: i,
+                                    from: default_shards,
+                                    to,
+                                    keys: flow.last.keys,
+                                });
+                            }
+                            if hints.prefer_list {
+                                decisions.push(AdaptiveDecision::FlowSwitch {
+                                    stage: i,
+                                    emits: flow.last.emits,
+                                    keys: flow.last.keys,
+                                });
+                            }
+                            if let Some(hot) = hints.hot_key {
+                                let skew = flow.last.skew.unwrap_or_default();
+                                decisions.push(AdaptiveDecision::HotKeySplit {
+                                    stage: i,
+                                    hot_hash: hot,
+                                    support: skew.hot_support,
+                                    emits: skew.emits,
+                                });
+                            }
+                            adapt[i] = Some(hints);
+                        }
+                    }
+                    i += 1;
+                }
+                _ => i += 1,
+            }
+        }
+        adaptation = Some(AdaptationReport {
+            consulted: true,
+            samples,
+            decisions,
+        });
+    }
+
+    let decisions = if record {
+        agent.plan_with(&shapes, &adapt)
+    } else {
+        agent.plan_preview_with(&shapes, &adapt)
     };
     let fused_ops = decisions
         .iter()
@@ -172,25 +306,14 @@ fn lower_impl(
         .iter()
         .filter(|d| matches!(d, StageDecision::StreamInput))
         .count();
-    // Fingerprint only plans that can and do cache: a cacheable root AND
-    // at least one cut point. Everything else skips the hashing and,
-    // more importantly, never registers its address identities with the
-    // session registry.
-    let has_cut = stages.iter().any(|s| s.kind == StageKind::Cache);
-    let cacheable = has_cut && fingerprint::cacheable(stages);
-    let prefix_fps = if cacheable || !record {
-        // `!record` is the observational `describe()` pass, which shows
-        // fingerprints even for cut-less plans.
-        fingerprint::prefix_fingerprints(stages, registry)
-    } else {
-        Vec::new()
-    };
     PhysicalPlan {
         decisions,
         fused_ops,
         streamed_handoffs,
         prefix_fps,
         cacheable,
+        adapt,
+        adaptation,
     }
 }
 
@@ -228,8 +351,20 @@ pub(crate) fn describe(
     agent: &OptimizerAgent,
     registry: &MaterializationCache,
 ) -> String {
+    describe_adaptive(stages, agent, registry, None)
+}
+
+/// [`describe`] with the adaptive context the real lowering would use, so
+/// the rendered plan includes the same [`AdaptationReport`] the executed
+/// plan will carry — preview ≡ plan by construction.
+pub(crate) fn describe_adaptive(
+    stages: &[StageInfo],
+    agent: &OptimizerAgent,
+    registry: &MaterializationCache,
+    ctx: Option<&AdaptiveCtx<'_>>,
+) -> String {
     use std::fmt::Write;
-    let plan = lower_impl(stages, agent, registry, false);
+    let plan = lower_impl(stages, agent, registry, false, ctx);
     // `plan.cacheable` additionally requires a cut; for display we care
     // about whether the *root* is identifiable at all.
     let root_identified = fingerprint::cacheable(stages);
@@ -275,6 +410,29 @@ pub(crate) fn describe(
         "fused element-wise ops: {}; streamed handoffs: {}",
         plan.fused_ops, plan.streamed_handoffs
     );
+    match &plan.adaptation {
+        None => {
+            let _ = writeln!(out, "adaptive: off (static plan)");
+        }
+        Some(a) if a.decisions.is_empty() => {
+            let _ = writeln!(
+                out,
+                "adaptive: feedback store consulted ({} sample(s)); no adaptations",
+                a.samples
+            );
+        }
+        Some(a) => {
+            let _ = writeln!(
+                out,
+                "adaptive: feedback store consulted ({} sample(s)); {} decision(s):",
+                a.samples,
+                a.decisions.len()
+            );
+            for d in &a.decisions {
+                let _ = writeln!(out, "  - {d}");
+            }
+        }
+    }
     out
 }
 
@@ -296,14 +454,18 @@ pub struct PlanExec<'rt> {
     pending_cache: Option<CacheActivity>,
     /// Plan-total cache activity (the [`PlanReport::cache`] field).
     cache_total: CacheActivity,
+    /// The adaptive section of the eventual report, taken off the plan at
+    /// construction (the report owns it; the plan keeps only the hints).
+    adaptation: Option<AdaptationReport>,
 }
 
 impl<'rt> PlanExec<'rt> {
     pub(crate) fn new(
         pool: &'rt WorkerPool,
         agent: &'rt OptimizerAgent,
-        plan: PhysicalPlan,
+        mut plan: PhysicalPlan,
     ) -> Self {
+        let adaptation = plan.adaptation.take();
         PlanExec {
             pool,
             agent,
@@ -314,6 +476,7 @@ impl<'rt> PlanExec<'rt> {
             absorbed_streamed: 0,
             pending_cache: None,
             cache_total: CacheActivity::default(),
+            adaptation,
         }
     }
 
@@ -343,6 +506,19 @@ impl<'rt> PlanExec<'rt> {
         } else {
             None
         }
+    }
+
+    /// The adaptive execution hints lowered for the stage at logical
+    /// index `index`, if any.
+    pub(crate) fn adaptive_for(&self, index: usize) -> Option<&StageAdapt> {
+        self.plan.adapt.get(index).and_then(|a| a.as_ref())
+    }
+
+    /// The prefix fingerprint identifying `stages[0..=index]` for the
+    /// feedback store, when this lowering computed fingerprints at all
+    /// (adaptive lowerings always do).
+    pub(crate) fn stage_fp(&self, index: usize) -> Option<u64> {
+        self.plan.prefix_fps.get(index).copied()
     }
 
     /// Record cache activity from resolving a cut point: totalled into
@@ -376,6 +552,12 @@ impl<'rt> PlanExec<'rt> {
         self.materialized += report.materialized_pairs;
         self.cache_total.add(&report.cache);
         self.stage_metrics.extend(report.stage_metrics);
+        if let Some(sub) = report.adaptation {
+            let a = self.adaptation.get_or_insert_with(AdaptationReport::default);
+            a.consulted |= sub.consulted;
+            a.samples = a.samples.max(sub.samples);
+            a.decisions.extend(sub.decisions);
+        }
     }
 
     pub(crate) fn into_report(self) -> PlanReport {
@@ -387,6 +569,7 @@ impl<'rt> PlanExec<'rt> {
             cache: self.cache_total,
             stream: None,
             govern: None,
+            adaptation: self.adaptation,
         }
     }
 }
@@ -525,6 +708,62 @@ mod tests {
         assert!(text.contains("stream-input"), "{text}");
         assert!(text.contains("fp "), "{text}");
         assert_eq!(agent.stats().plans, 0, "describe must not record a plan pass");
+    }
+
+    #[test]
+    fn adaptive_lowering_consults_store_and_derives_hints() {
+        let agent = OptimizerAgent::new();
+        let registry = registry();
+        let store = StatsStore::new();
+        let mut stages = vec![
+            info(StageKind::Source, OptimizeMode::Auto),
+            info(StageKind::MapReduce, OptimizeMode::Auto),
+        ];
+        stages[1].token = Some(crate::api::plan::StageToken::Stable(2));
+        let ctx = AdaptiveCtx {
+            store: &store,
+            threads: 8,
+        };
+        // Cold store: consulted, no decisions, no hints.
+        let cold = lower_adaptive(&stages, &agent, &registry, Some(&ctx));
+        assert_eq!(cold.prefix_fps.len(), 2, "adaptive lowering fingerprints");
+        let report = cold.adaptation.as_ref().unwrap();
+        assert!(report.consulted);
+        assert!(report.decisions.is_empty());
+        assert!(cold.adapt.iter().all(|a| a.is_none()));
+        // Record a low-cardinality run and lower again: the shard count
+        // shrinks and the decision is named.
+        store.record_flow(
+            cold.prefix_fps[1],
+            stats::FlowObservation {
+                emits: 100_000,
+                keys: 5,
+                results: 5,
+                combine_flow: true,
+                declared: false,
+                ..stats::FlowObservation::default()
+            },
+        );
+        let warm = lower_adaptive(&stages, &agent, &registry, Some(&ctx));
+        let hints = warm.adapt[1].as_ref().expect("hints derived");
+        assert_eq!(hints.shard_override, Some(16));
+        let report = warm.adaptation.as_ref().unwrap();
+        assert_eq!(report.samples, 1);
+        assert!(matches!(
+            report.decisions.as_slice(),
+            [AdaptiveDecision::ShardCount {
+                stage: 1,
+                from: 128,
+                to: 16,
+                keys: 5,
+            }]
+        ));
+        assert!(store.consults() > 0, "warm lowering hit the store");
+        // Static lowering of the same stages ignores the store entirely.
+        assert!(lower(&stages, &agent, &registry).adaptation.is_none());
+        // The preview path renders the same decision.
+        let text = describe_adaptive(&stages, &agent, &registry, Some(&ctx));
+        assert!(text.contains("shard count @ stage 1: 128 -> 16"), "{text}");
     }
 
     #[test]

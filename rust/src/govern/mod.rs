@@ -228,6 +228,10 @@ pub struct TenantCounters {
     /// identity with serial baselines — so Reject-policy tenants are
     /// deferred here too.
     pub ingest_deferred: AtomicU64,
+    /// Adaptive re-optimization decisions applied to this tenant's plans
+    /// (filter reorders, shard resizes, flow switches, hot-key splits —
+    /// see [`AdaptationReport`](crate::stats::AdaptationReport)).
+    pub adaptations: AtomicU64,
     /// Degrade latch: while set, the tenant's jobs run with the
     /// optimizer forced off (the config layer consults it when choosing
     /// the execution flow); cleared by the next clean admission.
@@ -558,6 +562,8 @@ pub struct TenantSnapshot {
     pub stream_pushes_blocked: u64,
     pub stream_pushes_shed: u64,
     pub ingest_deferred: u64,
+    /// Adaptive re-optimization decisions applied to this tenant's plans.
+    pub adaptations: u64,
 }
 
 impl TenantSnapshot {
@@ -591,6 +597,7 @@ impl TenantSnapshot {
             stream_pushes_blocked: load(&t.counters.stream_pushes_blocked),
             stream_pushes_shed: load(&t.counters.stream_pushes_shed),
             ingest_deferred: load(&t.counters.ingest_deferred),
+            adaptations: load(&t.counters.adaptations),
         }
     }
 }
@@ -652,6 +659,47 @@ impl Scoreboard {
             );
         }
         out
+    }
+
+    /// Serialize the scoreboard as a JSON document (the `mr4r govern
+    /// --json` CLI output) — one object per tenant, every snapshot
+    /// field, deterministic key order, so the output is scriptable and
+    /// diffs cleanly between polls.
+    pub fn snapshot_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut rows = Json::arr();
+        for t in &self.tenants {
+            rows.push(
+                Json::obj()
+                    .set("id", t.id.0)
+                    .set("name", t.name.as_str())
+                    .set("priority", t.priority.label())
+                    .set("weight", t.weight)
+                    .set("quota", t.quota)
+                    .set("submitted", t.submitted)
+                    .set("executed", t.executed)
+                    .set("steals", t.steals)
+                    .set("preempted", t.preempted)
+                    .set("queue_depth", t.queue_depth)
+                    .set("jobs_completed", t.jobs_completed)
+                    .set("heap_allocated_bytes", t.heap_allocated_bytes)
+                    .set("heap_allocated_objects", t.heap_allocated_objects)
+                    .set("heap_last_job_bytes", t.heap_last_job_bytes)
+                    .set("admitted", t.admitted)
+                    .set("rejected", t.rejected)
+                    .set("deferred", t.deferred)
+                    .set("defer_wait_ms", t.defer_wait_ms)
+                    .set("degraded", t.degraded)
+                    .set("cache_denials", t.cache_denials)
+                    .set("cache_live_bytes", t.cache_live_bytes)
+                    .set("cache_evicted_bytes", t.cache_evicted_bytes)
+                    .set("stream_pushes_blocked", t.stream_pushes_blocked)
+                    .set("stream_pushes_shed", t.stream_pushes_shed)
+                    .set("ingest_deferred", t.ingest_deferred)
+                    .set("adaptations", t.adaptations),
+            );
+        }
+        Json::obj().set("tenants", rows)
     }
 }
 
@@ -763,6 +811,23 @@ mod tests {
         let text = board.render();
         assert!(text.contains("interactive"), "{text}");
         assert!(text.contains('a'), "{text}");
+    }
+
+    #[test]
+    fn scoreboard_json_mirrors_snapshot_fields() {
+        let g = Governor::new();
+        let a = g.register(TenantSpec::new("alpha").with_priority(Priority::Interactive));
+        let ta = g.lookup(a).unwrap();
+        ta.qos.submitted.fetch_add(5, Ordering::Relaxed);
+        ta.qos.executed.fetch_add(5, Ordering::Relaxed);
+        ta.counters.adaptations.fetch_add(3, Ordering::Relaxed);
+        let json = g.scoreboard().snapshot_json().to_string();
+        assert!(json.contains("\"name\":\"alpha\""), "{json}");
+        assert!(json.contains("\"priority\":\"interactive\""), "{json}");
+        assert!(json.contains("\"executed\":5"), "{json}");
+        assert!(json.contains("\"adaptations\":3"), "{json}");
+        // Deterministic key order: tenants array leads the document.
+        assert!(json.starts_with("{\"tenants\":["), "{json}");
     }
 
     #[test]

@@ -35,6 +35,13 @@
 //!   admission control (reject / defer / degrade-to-Off), streaming
 //!   backpressure, and a live per-tenant [`govern::Scoreboard`]
 //!   ([`api::Runtime::scoreboard`]).
+//! * [`stats`] — adaptive re-optimization: a per-prefix-fingerprint
+//!   [`stats::StatsStore`] owned by the [`api::Runtime`]. Every plan
+//!   execution records measured cardinalities, filter selectivities,
+//!   holder growth, and a key-frequency sketch; the next lowering of the
+//!   same structural prefix consults them to reorder filters, right-size
+//!   shard counts, switch keyed flows, and split hot keys — each decision
+//!   reported in [`PlanReport::adaptation`].
 //! * [`optimizer`] — the paper's §3 contribution: reducers expressed in a
 //!   stack-machine IR (RIR, the bytecode stand-in), analyzed via a program
 //!   dependency graph and sliced into `initialize`/`combine`/`finalize`.
@@ -67,6 +74,7 @@ pub mod harness;
 pub mod memsim;
 pub mod optimizer;
 pub mod runtime;
+pub mod stats;
 pub mod stream;
 pub mod testkit;
 pub mod util;
@@ -81,6 +89,7 @@ pub use govern::{
     TenantId, TenantSnapshot, TenantSpec,
 };
 pub use optimizer::agent::OptimizerAgent;
+pub use stats::{AdaptationReport, AdaptiveDecision, StatsStore};
 pub use stream::{
     AppendLog, KeyedStream, StandingQuery, StreamDataset, StreamHandle, StreamOutput,
     StreamSource, WindowResult, WindowSpec, Windowed, WindowedStream,

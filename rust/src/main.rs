@@ -7,7 +7,7 @@
 //! mr4r run --bench WC [--threads N] [--no-optimize] [--scale S]
 //! mr4r explain --bench WC          # show the reducer RIR + agent decision
 //! mr4r info                        # environment, artifacts, backend probe
-//! mr4r govern [--tenants N] [--plans N] [--threads N]
+//! mr4r govern [--tenants N] [--plans N] [--threads N] [--json]
 //!                                  # multi-tenant QoS demo + live scoreboard
 //! ```
 
@@ -41,6 +41,7 @@ fn cli() -> Cli {
         .opt("tenants", "6", "tenant count for `govern`")
         .opt("plans", "2", "word-count plans per tenant for `govern`")
         .switch("no-optimize", "disable the reducer optimizer")
+        .switch("json", "emit the `govern` scoreboard as JSON")
         .switch("quiet", "suppress per-report console output")
 }
 
@@ -270,6 +271,10 @@ fn main() -> ExitCode {
                 })
                 .collect();
             let keys: Vec<usize> = handles.into_iter().map(|h| h.join()).collect();
+            if args.flag("json") {
+                println!("{}", rt.scoreboard().snapshot_json().pretty());
+                return ExitCode::SUCCESS;
+            }
             println!(
                 "{} tenant(s) x {} word-count plan(s) each, {} distinct key(s) per plan",
                 n_tenants,

@@ -18,6 +18,7 @@ use super::combiner::Combiner;
 use super::rir::Program;
 use super::transform::transform;
 use crate::api::config::OptimizeMode;
+use crate::stats::StageAdapt;
 use crate::util::timer::{Samples, Stopwatch};
 
 /// Outcome of processing one reducer class.
@@ -226,7 +227,26 @@ impl OptimizerAgent {
     /// application records `map`/`filter`/`map_reduce` calls and never
     /// sees the placement.
     pub fn plan(&self, stages: &[StageShape]) -> Vec<StageDecision> {
-        let (decisions, fused, streamed) = Self::decide(stages);
+        self.plan_with(stages, &[])
+    }
+
+    /// [`OptimizerAgent::plan`] with per-stage adaptive hints from the
+    /// session's feedback store ([`crate::stats::StatsStore`]), as
+    /// derived by the planner. This is the *single* planning authority:
+    /// the real lowering pass and the `explain()` preview both funnel
+    /// through the same pure policy with the same hints, which is what
+    /// pins preview ≡ executed decisions. Placement itself is
+    /// deliberately hint-independent today — adaptive hints tune
+    /// *execution* (shard counts, flow choice, hot-key routing), not
+    /// fusion or handoff streaming, so hinted and unhinted placements
+    /// coincide — but every future hint-sensitive placement rule must
+    /// land here, behind both entry points at once.
+    pub fn plan_with(
+        &self,
+        stages: &[StageShape],
+        hints: &[Option<StageAdapt>],
+    ) -> Vec<StageDecision> {
+        let (decisions, fused, streamed) = Self::decide_with(stages, hints);
         let mut inner = self.inner.lock().unwrap();
         inner.stats.plans += 1;
         inner.stats.fused_stages += fused;
@@ -238,11 +258,33 @@ impl OptimizerAgent {
     /// observational pass behind `Dataset::explain()`, which must not
     /// make a never-executed plan look like a run.
     pub fn plan_preview(&self, stages: &[StageShape]) -> Vec<StageDecision> {
-        Self::decide(stages).0
+        self.plan_preview_with(stages, &[])
     }
 
-    /// The pure placement policy shared by [`OptimizerAgent::plan`] and
-    /// [`OptimizerAgent::plan_preview`].
+    /// [`OptimizerAgent::plan_with`] without the statistics side effects
+    /// — the preview twin, guaranteed to see the identical hint slice.
+    pub fn plan_preview_with(
+        &self,
+        stages: &[StageShape],
+        hints: &[Option<StageAdapt>],
+    ) -> Vec<StageDecision> {
+        Self::decide_with(stages, hints).0
+    }
+
+    /// The pure placement policy shared by the plan and preview entry
+    /// points, hints included.
+    fn decide_with(
+        stages: &[StageShape],
+        hints: &[Option<StageAdapt>],
+    ) -> (Vec<StageDecision>, usize, usize) {
+        debug_assert!(
+            hints.is_empty() || hints.len() == stages.len(),
+            "hint slice must be empty or stage-aligned"
+        );
+        Self::decide(stages)
+    }
+
+    /// The hint-independent core of the placement policy.
     fn decide(stages: &[StageShape]) -> (Vec<StageDecision>, usize, usize) {
         let mut decisions = Vec::with_capacity(stages.len());
         let mut fused = 0usize;
@@ -442,6 +484,35 @@ mod tests {
         assert!(!agent.process_declared("sub", false, true));
         let s = agent.stats();
         assert_eq!((s.declared_accepted, s.declared_rejected), (1, 2));
+    }
+
+    #[test]
+    fn hinted_plan_and_preview_agree() {
+        use crate::api::config::OptimizeMode;
+        let agent = OptimizerAgent::new();
+        let shape = [
+            StageShape::Source,
+            StageShape::ElementWise {
+                mode: OptimizeMode::Auto,
+            },
+            StageShape::Reduce {
+                mode: OptimizeMode::Auto,
+                follows_reduce: false,
+            },
+        ];
+        let hints = vec![
+            None,
+            None,
+            Some(StageAdapt {
+                shard_override: Some(16),
+                ..StageAdapt::default()
+            }),
+        ];
+        let preview = agent.plan_preview_with(&shape, &hints);
+        assert_eq!(agent.stats().plans, 0, "preview must not count as a run");
+        let ran = agent.plan_with(&shape, &hints);
+        assert_eq!(preview, ran, "preview and plan share one policy");
+        assert_eq!(ran, agent.plan_preview(&shape), "hints never move placement");
     }
 
     #[test]

@@ -1,0 +1,775 @@
+//! The optimizer feedback store — adaptive, statistics-fed
+//! re-optimization.
+//!
+//! The whole-plan optimizer ([`crate::coordinator::planner`]) decides
+//! fusion, combining, and sharding *statically*. This module closes the
+//! loop: after every plan collect, the executor records what actually
+//! happened — map-phase cardinalities, per-filter selectivities, a
+//! key-frequency sketch for skew, holder growth, wall time — into a
+//! [`StatsStore`] owned by the session [`Runtime`](crate::api::Runtime),
+//! keyed by the same structural prefix fingerprints the materialization
+//! cache uses ([`crate::cache::fingerprint`]). The *next* lowering of an
+//! identical plan prefix consults the store and may:
+//!
+//! * **reorder filters** — compose buffered consecutive filter
+//!   predicates cheapest-first (ascending measured selectivity), so
+//!   low-pass filters run before expensive ones ([`filter_order`]);
+//! * **pick shard counts from observed cardinality** — a stage whose
+//!   last run produced few distinct keys gets a smaller collector
+//!   ([`StageAdapt::shard_override`]);
+//! * **switch declared-vs-list keyed flows** — when measured holder
+//!   growth contradicts the static choice (in-map combining collapsed
+//!   almost nothing: fewer than two pairs per key), prefer the list
+//!   flow ([`StageAdapt::prefer_list`]);
+//! * **split hot keys** — when the sketch shows one key dominating the
+//!   emit stream of a mergeable declared aggregation, spread that key
+//!   round-robin across shards in the map phase and merge its partial
+//!   holders after the barrier ([`StageAdapt::hot_key`]).
+//!
+//! Every decision taken is reported in
+//! [`PlanReport::adaptation`](crate::api::plan::PlanReport) as an
+//! [`AdaptationReport`] and rendered by
+//! [`Dataset::explain`](crate::api::plan::Dataset::explain). The preview
+//! path consults the *same* store through the *same* pure helpers in
+//! this module, so `explain()` never shows a different plan than the one
+//! that runs.
+//!
+//! # Correctness envelope
+//!
+//! Every adaptation is rewrite-safe by construction: filters commute
+//! with each other, shard assignment and hot-key routing only move keys
+//! between result shards (canonical digests are order-independent), the
+//! list flow is the measured baseline the combining flows are pinned
+//! against, and hot-key partial holders are merged with the aggregator's
+//! own declared `merge_holders` — only granted for `MERGEABLE`
+//! (associative + commutative) aggregators. `OptimizeMode::Off` or
+//! [`JobConfig::with_adaptive(false)`](crate::api::config::JobConfig::with_adaptive)
+//! bypasses the store entirely, so static behavior stays reachable and
+//! adapted ≡ static digest identity is testable
+//! (`rust/tests/adaptive_equivalence.rs`).
+//!
+//! # Caveats
+//!
+//! Fingerprints of unnamed closures come from `Arc` addresses mapped to
+//! first-seen session ordinals (the same identity channel the
+//! materialization cache uses): a freed-and-reused allocation can alias
+//! two unrelated stages onto one fingerprint. Aliasing degrades
+//! *optimality* only — a stale hint may fire or fail to fire — never
+//! correctness, since every adaptation preserves results. Measured
+//! filter selectivities are *conditional* on the order the filters ran
+//! in; the store keeps the latest observation per original stage
+//! position, so repeated runs converge but a reorder can shift the
+//! measured values once.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Minimum recorded samples before any adaptive decision fires. One
+/// completed run is enough: the acceptance contract is that the *second*
+/// lowering of an identical prefix may differ.
+pub const MIN_SAMPLES: u64 = 1;
+
+/// Minimum observed map-phase emits before shard-count or flow-switch
+/// adaptations fire — floors that keep tiny pinned workloads (unit tests,
+/// smoke runs) byte-for-byte on the static plan.
+pub const MIN_FLOW_EMITS: u64 = 4096;
+
+/// Minimum observed emits before a hot-key split fires.
+pub const MIN_SPLIT_EMITS: u64 = 1024;
+
+/// Minimum elements a filter must have seen before its measured
+/// selectivity participates in reordering.
+pub const MIN_FILTER_SEEN: u64 = 1024;
+
+// ---------------------------------------------------------------------
+// Observations
+// ---------------------------------------------------------------------
+
+/// Key-frequency skew summary of one map phase: the Boyer–Moore majority
+/// candidate and its surplus. `hot_support` is a *lower bound* on the
+/// candidate's surplus over all other keys combined (`(2f − 1)·n` for a
+/// key with frequency `f` of `n` emits), so `hot_support ≥ n/2`
+/// guarantees the candidate covers at least 75 % of emits.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KeySkew {
+    /// FxHash of the dominant key candidate.
+    pub hot_hash: u64,
+    /// Merged majority surplus (see type docs).
+    pub hot_support: u64,
+    /// Emits the sketch summarized.
+    pub emits: u64,
+}
+
+/// One reduce-shaped stage's observed execution, distilled from its
+/// [`FlowMetrics`](crate::coordinator::pipeline::FlowMetrics) by the plan
+/// executor's epilogue.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlowObservation {
+    /// Map-phase emits (input pairs of the aggregation).
+    pub emits: u64,
+    /// Distinct intermediate keys.
+    pub keys: u64,
+    /// Result pairs produced.
+    pub results: u64,
+    /// Payload bytes shipped across the barrier (holder footprints for
+    /// combining flows — the measured holder-growth signal).
+    pub shuffled_bytes: u64,
+    /// Whether the combining flow ran.
+    pub combine_flow: bool,
+    /// Whether the stage ran the *declared* channel (a keyed
+    /// [`Aggregator`](crate::api::keyed::Aggregator) stage).
+    pub declared: bool,
+    /// Whether the stage's aggregator declared `MERGEABLE` — the
+    /// precondition for hot-key splitting.
+    pub mergeable: bool,
+    /// Stage wall time.
+    pub total_secs: f64,
+    /// Key-frequency sketch, when the flow collected one.
+    pub skew: Option<KeySkew>,
+}
+
+/// Accumulated per-prefix flow statistics: the latest observation plus a
+/// sample count gating confidence.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlowStats {
+    /// Completed runs recorded for this prefix.
+    pub samples: u64,
+    /// The most recent observation (last write wins; the sample count
+    /// carries the confidence).
+    pub last: FlowObservation,
+}
+
+/// Accumulated per-filter-prefix selectivity statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FilterStats {
+    /// Completed runs recorded for this filter position.
+    pub samples: u64,
+    /// Elements the predicate saw on the last run.
+    pub seen: u64,
+    /// Elements it passed.
+    pub passed: u64,
+}
+
+impl FilterStats {
+    /// Measured pass fraction (1.0 when nothing was seen).
+    pub fn selectivity(&self) -> f64 {
+        if self.seen == 0 {
+            1.0
+        } else {
+            self.passed as f64 / self.seen as f64
+        }
+    }
+}
+
+/// Shared-counter probe wrapped around an executing filter predicate:
+/// the executor counts seen/passed elements and records them into the
+/// store under the filter's *original stage position* fingerprint, so a
+/// reordered predicate keeps feeding the measurement that identifies it.
+#[derive(Debug, Default)]
+pub struct FilterProbe {
+    pub seen: AtomicU64,
+    pub passed: AtomicU64,
+}
+
+// ---------------------------------------------------------------------
+// Skew sketch
+// ---------------------------------------------------------------------
+
+/// Per-chunk Boyer–Moore majority tracker (one per map task, no
+/// synchronization): constant space, one branch per emit.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MajorityTracker {
+    cand: u64,
+    weight: u64,
+}
+
+impl MajorityTracker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed one emitted key's hash.
+    #[inline]
+    pub fn hit(&mut self, hash: u64) {
+        if self.weight == 0 {
+            self.cand = hash;
+            self.weight = 1;
+        } else if hash == self.cand {
+            self.weight += 1;
+        } else {
+            self.weight -= 1;
+        }
+    }
+
+    /// The chunk's `(candidate, surplus)` summary.
+    pub fn summary(&self) -> (u64, u64) {
+        (self.cand, self.weight)
+    }
+}
+
+/// Mergeable majority sketch: per-chunk `(candidate, surplus)` summaries
+/// merge pairwise under a lock, preserving the lower-bound property of
+/// the Boyer–Moore surplus. Order of merges does not affect whether a
+/// true majority key survives as the candidate.
+#[derive(Debug, Default)]
+pub struct SkewSketch {
+    cand: u64,
+    weight: u64,
+}
+
+impl SkewSketch {
+    /// Merge one chunk summary.
+    pub fn absorb(&mut self, cand: u64, weight: u64) {
+        if weight == 0 {
+            return;
+        }
+        if self.weight == 0 || cand == self.cand {
+            self.cand = cand;
+            self.weight += weight;
+        } else if self.weight >= weight {
+            self.weight -= weight;
+        } else {
+            self.cand = cand;
+            self.weight = weight - self.weight;
+        }
+    }
+
+    /// The merged sketch over `emits` total emits, if any candidate
+    /// survived.
+    pub fn finish(&self, emits: u64) -> Option<KeySkew> {
+        (self.weight > 0 && emits > 0).then_some(KeySkew {
+            hot_hash: self.cand,
+            hot_support: self.weight,
+            emits,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Hints and decisions
+// ---------------------------------------------------------------------
+
+/// Per-stage adaptive execution hints derived from the store at lowering
+/// time and carried on the physical plan. Every field is advisory and
+/// result-preserving; `None`/`false` means "run the static plan".
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StageAdapt {
+    /// Collector shard count picked from observed key cardinality
+    /// (always smaller than the static default; never below 16).
+    pub shard_override: Option<usize>,
+    /// Run the keyed list flow even though the declared channel would
+    /// grant combining — measured holder growth showed combining
+    /// collapsed almost nothing.
+    pub prefer_list: bool,
+    /// FxHash of a dominant key to spread round-robin across shards in
+    /// the map phase (partial holders merged after the barrier). Only
+    /// derived for `MERGEABLE` aggregations.
+    pub hot_key: Option<u64>,
+    /// Sample count behind these hints.
+    pub samples: u64,
+}
+
+impl StageAdapt {
+    /// Whether any hint is active.
+    pub fn is_active(&self) -> bool {
+        self.shard_override.is_some() || self.prefer_list || self.hot_key.is_some()
+    }
+}
+
+/// One adaptive decision taken during lowering, named for the report and
+/// `explain()`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum AdaptiveDecision {
+    /// Consecutive filter predicates composed in ascending measured
+    /// selectivity order instead of recorded order.
+    FilterReorder {
+        /// Stage index of the first filter in the reordered run.
+        first_stage: usize,
+        /// Execution order as offsets into the run (recorded order is
+        /// `[0, 1, ..]`).
+        order: Vec<usize>,
+        /// Measured selectivities, in recorded order.
+        selectivities: Vec<f64>,
+    },
+    /// Collector shard count picked from observed cardinality.
+    ShardCount {
+        stage: usize,
+        from: usize,
+        to: usize,
+        keys: u64,
+    },
+    /// Declared combining flow demoted to the list flow on measured
+    /// holder growth.
+    FlowSwitch { stage: usize, emits: u64, keys: u64 },
+    /// Dominant key spread across shards and re-merged after the
+    /// barrier.
+    HotKeySplit {
+        stage: usize,
+        hot_hash: u64,
+        support: u64,
+        emits: u64,
+    },
+}
+
+impl fmt::Display for AdaptiveDecision {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AdaptiveDecision::FilterReorder {
+                first_stage,
+                order,
+                selectivities,
+            } => {
+                let sels: Vec<String> =
+                    selectivities.iter().map(|s| format!("{s:.3}")).collect();
+                write!(
+                    f,
+                    "filter reorder @ stage {first_stage}: order {order:?}, \
+                     measured selectivities [{}]",
+                    sels.join(", ")
+                )
+            }
+            AdaptiveDecision::ShardCount {
+                stage,
+                from,
+                to,
+                keys,
+            } => write!(
+                f,
+                "shard count @ stage {stage}: {from} -> {to} ({keys} observed key(s))"
+            ),
+            AdaptiveDecision::FlowSwitch { stage, emits, keys } => write!(
+                f,
+                "flow switch @ stage {stage}: declared combine -> list \
+                 ({emits} emit(s) over {keys} key(s))"
+            ),
+            AdaptiveDecision::HotKeySplit {
+                stage,
+                hot_hash,
+                support,
+                emits,
+            } => write!(
+                f,
+                "hot key split @ stage {stage}: key hash {hot_hash:016x} \
+                 (surplus {support} of {emits} emit(s))"
+            ),
+        }
+    }
+}
+
+/// The adaptive section of a
+/// [`PlanReport`](crate::api::plan::PlanReport): whether the store was
+/// consulted, how much evidence backed the hints, and every decision
+/// taken.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct AdaptationReport {
+    /// Whether lowering consulted the feedback store at all (adaptive
+    /// config, optimizer not Off).
+    pub consulted: bool,
+    /// Maximum sample count among the consulted prefix statistics (0 on
+    /// a cold store).
+    pub samples: u64,
+    /// Decisions taken, in stage order.
+    pub decisions: Vec<AdaptiveDecision>,
+}
+
+// ---------------------------------------------------------------------
+// Pure derivation helpers (shared by plan and preview)
+// ---------------------------------------------------------------------
+
+/// Derive a stage's execution hints from its accumulated statistics.
+/// Pure: `plan` and `plan_preview` both call this with the same store
+/// snapshot, which is what pins `explain()` ≡ executed plan.
+pub fn derive_stage_adapt(stats: &FlowStats, default_shards: usize) -> Option<StageAdapt> {
+    if stats.samples < MIN_SAMPLES {
+        return None;
+    }
+    let obs = &stats.last;
+    let mut adapt = StageAdapt {
+        samples: stats.samples,
+        ..StageAdapt::default()
+    };
+    if obs.emits >= MIN_FLOW_EMITS && obs.keys > 0 {
+        let want = (obs.keys as usize).next_power_of_two().max(16);
+        if want < default_shards {
+            adapt.shard_override = Some(want);
+        }
+    }
+    if obs.declared && obs.combine_flow && obs.emits >= MIN_FLOW_EMITS {
+        // Holder growth contradicting the static choice: fewer than two
+        // pairs per key means one holder was allocated, grown, and
+        // shipped for nearly every pair — the list flow is cheaper.
+        if obs.emits < obs.keys.saturating_mul(2) {
+            adapt.prefer_list = true;
+        }
+    }
+    if obs.mergeable && !adapt.prefer_list {
+        if let Some(skew) = obs.skew {
+            if skew.emits >= MIN_SPLIT_EMITS && skew.hot_support * 2 >= skew.emits {
+                adapt.hot_key = Some(skew.hot_hash);
+            }
+        }
+    }
+    adapt.is_active().then_some(adapt)
+}
+
+/// Choose an execution order for a run of consecutive filters from their
+/// measured selectivities: ascending pass fraction, stable on ties.
+/// `None` unless every filter in the run has enough evidence
+/// ([`MIN_SAMPLES`], [`MIN_FILTER_SEEN`]) *and* the chosen order differs
+/// from the recorded one.
+pub fn filter_order(stats: &[Option<FilterStats>]) -> Option<Vec<usize>> {
+    if stats.len() < 2 {
+        return None;
+    }
+    let mut sels = Vec::with_capacity(stats.len());
+    for s in stats {
+        let s = (*s)?;
+        if s.samples < MIN_SAMPLES || s.seen < MIN_FILTER_SEEN {
+            return None;
+        }
+        sels.push(s.selectivity());
+    }
+    let mut order: Vec<usize> = (0..sels.len()).collect();
+    order.sort_by(|&a, &b| {
+        sels[a]
+            .partial_cmp(&sels[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    if order.iter().enumerate().all(|(i, &j)| i == j) {
+        None
+    } else {
+        Some(order)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The store
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct StoreInner {
+    flows: HashMap<u64, FlowStats>,
+    filters: HashMap<u64, FilterStats>,
+}
+
+/// The per-session optimizer feedback store, owned by
+/// [`Runtime`](crate::api::Runtime) and shared by every plan the session
+/// lowers. Keys are structural prefix fingerprints
+/// ([`crate::cache::fingerprint::prefix_fingerprints`]); flow statistics
+/// are keyed by the reduce-shaped stage's prefix, filter statistics by
+/// the filter stage's *original* (recorded) position prefix.
+#[derive(Debug, Default)]
+pub struct StatsStore {
+    inner: Mutex<StoreInner>,
+    records: AtomicU64,
+    consult_hits: AtomicU64,
+}
+
+impl StatsStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one reduce-shaped stage's observed execution.
+    pub fn record_flow(&self, fp: u64, obs: FlowObservation) {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.flows.entry(fp).or_default();
+        entry.samples += 1;
+        entry.last = obs;
+        drop(inner);
+        self.records.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one filter position's observed selectivity. Zero-seen
+    /// observations (the filter never executed — e.g. its prefix was
+    /// served from the materialization cache) are discarded.
+    pub fn record_filter(&self, fp: u64, seen: u64, passed: u64) {
+        if seen == 0 {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.filters.entry(fp).or_default();
+        entry.samples += 1;
+        entry.seen = seen;
+        entry.passed = passed;
+        drop(inner);
+        self.records.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Look up a prefix's flow statistics (a hit counts as a consult).
+    pub fn flow(&self, fp: u64) -> Option<FlowStats> {
+        let hit = self.inner.lock().unwrap().flows.get(&fp).copied();
+        if hit.is_some() {
+            self.consult_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Look up a filter position's statistics (a hit counts as a
+    /// consult).
+    pub fn filter(&self, fp: u64) -> Option<FilterStats> {
+        let hit = self.inner.lock().unwrap().filters.get(&fp).copied();
+        if hit.is_some() {
+            self.consult_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Observations recorded so far.
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found prior statistics — the "second lowering
+    /// consulted the store" observable.
+    pub fn consults(&self) -> u64 {
+        self.consult_hits.load(Ordering::Relaxed)
+    }
+
+    /// Distinct prefixes with recorded statistics.
+    pub fn len(&self) -> usize {
+        let inner = self.inner.lock().unwrap();
+        inner.flows.len() + inner.filters.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every recorded statistic (counters included).
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.flows.clear();
+        inner.filters.clear();
+        drop(inner);
+        self.records.store(0, Ordering::Relaxed);
+        self.consult_hits.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn big_flow() -> FlowObservation {
+        FlowObservation {
+            emits: 100_000,
+            keys: 5,
+            results: 5,
+            shuffled_bytes: 80,
+            combine_flow: true,
+            declared: true,
+            mergeable: true,
+            total_secs: 0.01,
+            skew: None,
+        }
+    }
+
+    #[test]
+    fn store_round_trips_and_counts() {
+        let s = StatsStore::new();
+        assert!(s.flow(1).is_none());
+        assert_eq!(s.consults(), 0, "misses are not consults");
+        s.record_flow(1, big_flow());
+        s.record_flow(1, big_flow());
+        let got = s.flow(1).unwrap();
+        assert_eq!(got.samples, 2);
+        assert_eq!(got.last.emits, 100_000);
+        assert_eq!(s.records(), 2);
+        assert_eq!(s.consults(), 1);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.consults(), 0);
+    }
+
+    #[test]
+    fn zero_seen_filter_observations_are_discarded() {
+        let s = StatsStore::new();
+        s.record_filter(7, 0, 0);
+        assert!(s.filter(7).is_none());
+        s.record_filter(7, 2000, 100);
+        assert_eq!(s.filter(7).unwrap().passed, 100);
+    }
+
+    #[test]
+    fn shard_override_shrinks_to_observed_cardinality() {
+        let stats = FlowStats {
+            samples: 1,
+            last: big_flow(),
+        };
+        let adapt = derive_stage_adapt(&stats, 128).unwrap();
+        assert_eq!(adapt.shard_override, Some(16), "clamped to >= 16");
+        // Default already small: no override.
+        let none = derive_stage_adapt(&stats, 16);
+        assert!(none.is_none_or(|a| a.shard_override.is_none()));
+    }
+
+    #[test]
+    fn flow_switch_requires_holder_growth_evidence() {
+        let mut obs = big_flow();
+        obs.keys = 99_000; // < 2 pairs per key: combining collapsed nothing
+        let adapt = derive_stage_adapt(&FlowStats { samples: 1, last: obs }, 16).unwrap();
+        assert!(adapt.prefer_list);
+        // Plenty of collapse: stays combining.
+        let adapt = derive_stage_adapt(
+            &FlowStats {
+                samples: 1,
+                last: big_flow(),
+            },
+            16,
+        );
+        assert!(adapt.is_none_or(|a| !a.prefer_list));
+    }
+
+    #[test]
+    fn hot_key_split_requires_majority_surplus_and_mergeable() {
+        let mut obs = big_flow();
+        obs.skew = Some(KeySkew {
+            hot_hash: 0xABCD,
+            hot_support: 80_000,
+            emits: 100_000,
+        });
+        let adapt = derive_stage_adapt(&FlowStats { samples: 1, last: obs }, 16).unwrap();
+        assert_eq!(adapt.hot_key, Some(0xABCD));
+        // Below the surplus threshold: no split.
+        obs.skew = Some(KeySkew {
+            hot_hash: 0xABCD,
+            hot_support: 10_000,
+            emits: 100_000,
+        });
+        let adapt = derive_stage_adapt(&FlowStats { samples: 1, last: obs }, 16);
+        assert!(adapt.is_none_or(|a| a.hot_key.is_none()));
+        // Not mergeable: no split even with a dominant key.
+        obs.skew = Some(KeySkew {
+            hot_hash: 0xABCD,
+            hot_support: 80_000,
+            emits: 100_000,
+        });
+        obs.mergeable = false;
+        let adapt = derive_stage_adapt(&FlowStats { samples: 1, last: obs }, 16);
+        assert!(adapt.is_none_or(|a| a.hot_key.is_none()));
+    }
+
+    #[test]
+    fn tiny_workloads_never_adapt() {
+        let obs = FlowObservation {
+            emits: 10,
+            keys: 6,
+            declared: true,
+            combine_flow: true,
+            mergeable: true,
+            skew: Some(KeySkew {
+                hot_hash: 1,
+                hot_support: 9,
+                emits: 10,
+            }),
+            ..FlowObservation::default()
+        };
+        assert!(derive_stage_adapt(&FlowStats { samples: 5, last: obs }, 128).is_none());
+    }
+
+    #[test]
+    fn filter_order_sorts_ascending_and_gates_on_evidence() {
+        let hi = FilterStats {
+            samples: 1,
+            seen: 10_000,
+            passed: 9_000,
+        };
+        let lo = FilterStats {
+            samples: 1,
+            seen: 10_000,
+            passed: 500,
+        };
+        assert_eq!(filter_order(&[Some(hi), Some(lo)]), Some(vec![1, 0]));
+        // Already cheapest-first: no decision.
+        assert_eq!(filter_order(&[Some(lo), Some(hi)]), None);
+        // Missing evidence on one filter: no decision.
+        assert_eq!(filter_order(&[Some(hi), None]), None);
+        // Under the seen floor: no decision.
+        let tiny = FilterStats {
+            samples: 1,
+            seen: 10,
+            passed: 1,
+        };
+        assert_eq!(filter_order(&[Some(hi), Some(tiny)]), None);
+        // Ties are stable.
+        assert_eq!(filter_order(&[Some(hi), Some(hi)]), None);
+    }
+
+    #[test]
+    fn majority_sketch_finds_a_dominant_key() {
+        // 90 % of emits are key 7: the merged surplus must clear the
+        // split threshold regardless of chunking.
+        let hashes: Vec<u64> = (0..10_000u64).map(|i| if i % 10 == 0 { i } else { 7 }).collect();
+        let mut sketch = SkewSketch::default();
+        for chunk in hashes.chunks(997) {
+            let mut t = MajorityTracker::new();
+            for h in chunk {
+                t.hit(*h);
+            }
+            let (c, w) = t.summary();
+            sketch.absorb(c, w);
+        }
+        let skew = sketch.finish(hashes.len() as u64).unwrap();
+        assert_eq!(skew.hot_hash, 7);
+        assert!(
+            skew.hot_support * 2 >= skew.emits,
+            "surplus {} of {}",
+            skew.hot_support,
+            skew.emits
+        );
+        // Near-uniform keys: no candidate clears the threshold.
+        let mut sketch = SkewSketch::default();
+        for chunk in (0..10_000u64).collect::<Vec<_>>().chunks(997) {
+            let mut t = MajorityTracker::new();
+            for h in chunk {
+                t.hit(*h);
+            }
+            let (c, w) = t.summary();
+            sketch.absorb(c, w);
+        }
+        let ok = match sketch.finish(10_000) {
+            None => true,
+            Some(s) => s.hot_support * 2 < s.emits,
+        };
+        assert!(ok, "uniform stream must not elect a hot key");
+    }
+
+    #[test]
+    fn decisions_render_for_explain() {
+        let d = AdaptiveDecision::ShardCount {
+            stage: 2,
+            from: 128,
+            to: 16,
+            keys: 5,
+        };
+        assert_eq!(
+            d.to_string(),
+            "shard count @ stage 2: 128 -> 16 (5 observed key(s))"
+        );
+        assert!(AdaptiveDecision::HotKeySplit {
+            stage: 1,
+            hot_hash: 0xABCD,
+            support: 10,
+            emits: 20,
+        }
+        .to_string()
+        .contains("000000000000abcd"));
+        assert!(AdaptiveDecision::FilterReorder {
+            first_stage: 1,
+            order: vec![1, 0],
+            selectivities: vec![0.9, 0.05],
+        }
+        .to_string()
+        .contains("[0.900, 0.050]"));
+        assert!(AdaptiveDecision::FlowSwitch {
+            stage: 3,
+            emits: 10,
+            keys: 9,
+        }
+        .to_string()
+        .contains("declared combine -> list"));
+    }
+}

@@ -22,6 +22,7 @@ use crate::coordinator::pipeline::{batch_for, StreamMetrics};
 use crate::coordinator::planner;
 use crate::govern::{Admission, GovernReport};
 use crate::coordinator::splitter::split_indices;
+use crate::stats::{AdaptationReport, FlowObservation};
 use crate::stream::source::StreamSource;
 use crate::stream::window::{
     merge_gate, StreamOutput, TsFn, WindowEngine, WindowResult, WindowSpec,
@@ -300,8 +301,26 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> WindowedStream<'rt, K, V, B> {
             token: None,
         });
         // The single whole-plan pass: the agent sees the plan shape at
-        // build time, not once per chunk.
-        let plan = planner::lower(&stages, rt.agent(), rt.cache());
+        // build time, not once per chunk. Adaptive configs consult the
+        // session feedback store here — once per query, never per chunk.
+        let mut plan = if config.adaptive_enabled() {
+            let ctx = planner::AdaptiveCtx {
+                store: rt.stats(),
+                threads: config.threads,
+            };
+            planner::lower_adaptive(&stages, rt.agent(), rt.cache(), Some(&ctx))
+        } else {
+            planner::lower(&stages, rt.agent(), rt.cache())
+        };
+        let adaptation = plan.adaptation.take();
+        // The aggregate stage's prefix fingerprint, under which each
+        // `step()` feeds the engine's window-pane counters back to the
+        // store (adaptive lowerings always compute fingerprints).
+        let stats_fp = if config.adaptive_enabled() {
+            plan.prefix_fps.last().copied()
+        } else {
+            None
+        };
         let (merge, fallback) = merge_gate::<V, H, O, A>(&config, rt.agent(), agg.name());
         let engine =
             WindowEngine::new(spec, Arc::clone(&agg), merge, fallback, Arc::clone(&config.heap));
@@ -326,6 +345,8 @@ impl<'rt, K: 'rt, V: 'rt, B: 'rt> WindowedStream<'rt, K, V, B> {
             config,
             fused_ops: plan.fused_ops,
             streamed_handoffs: plan.streamed_handoffs,
+            adaptation,
+            stats_fp,
             last_blocked: 0,
             last_shed: 0,
         }
@@ -373,6 +394,12 @@ pub struct StandingQuery<'rt, B, K, V, H, O, A> {
     config: JobConfig,
     fused_ops: usize,
     streamed_handoffs: usize,
+    /// What build-time adaptive lowering decided (rides the final
+    /// report as [`PlanReport::adaptation`]). `None` on static configs.
+    adaptation: Option<AdaptationReport>,
+    /// The aggregate stage's prefix fingerprint, under which each ingest
+    /// records window-pane statistics. `None` on static configs.
+    stats_fp: Option<u64>,
     /// Source-side backpressure counters already folded into the
     /// tenant scoreboard (the sync is delta-based, once per ingest).
     last_blocked: u64,
@@ -431,7 +458,38 @@ where
         }
         self.sync_backpressure();
         let stamped = self.extract_chunk(chunk);
-        self.engine.ingest_chunk(stamped)
+        let fired = self.engine.ingest_chunk(stamped);
+        self.record_pane_stats();
+        fired
+    }
+
+    /// Feed the engine's cumulative window-pane counters back to the
+    /// session [`StatsStore`](crate::stats::StatsStore) under the
+    /// aggregate stage's prefix fingerprint.
+    ///
+    /// Pane observations are reporting-grade: keys are unknown at pane
+    /// granularity (recorded as zero), so no lowering hint ever derives
+    /// from them — they surface in [`StatsStore`](crate::stats::StatsStore)
+    /// record counts and diagnostics only. Stream sources fingerprint as
+    /// `"stream"` (batch plans use `"source"`), so stream observations
+    /// can never alias a batch prefix.
+    fn record_pane_stats(&self) {
+        let Some(fp) = self.stats_fp else { return };
+        let m = self.engine.metrics();
+        self.rt.stats().record_flow(
+            fp,
+            FlowObservation {
+                emits: m.elements_ingested,
+                keys: 0,
+                results: m.windows_fired,
+                shuffled_bytes: 0,
+                combine_flow: m.merge_mode,
+                declared: true,
+                mergeable: m.merge_mode,
+                total_secs: 0.0,
+                skew: None,
+            },
+        );
     }
 
     /// Fold the source-side backpressure counters into the tenant
@@ -515,6 +573,7 @@ where
                 cache: CacheActivity::default(),
                 stream: Some(metrics),
                 govern,
+                adaptation: self.adaptation.take(),
             },
         }
     }

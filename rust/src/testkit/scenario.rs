@@ -24,10 +24,14 @@
 //! optimizer mode, whether its `Dataset::cache()` cut points are
 //! live ([`PlanSpec::cached`] — cached slots on the shared session
 //! exercise cross-tenant materialization reuse and must still match the
-//! serial baselines), and whether the slot runs the **streaming plan**
+//! serial baselines), whether the slot runs the **streaming plan**
 //! instead ([`PlanSpec::stream`] — a seeded multi-chunk feed through a
 //! tumbling windowed count, interleaving standing-query chunks with the
-//! batch tenants on the same pool). On failure the error message
+//! batch tenants on the same pool), and whether the slot feeds and
+//! consults the session's **adaptive statistics store**
+//! ([`PlanSpec::adaptive`] — repeated slots then re-lower under measured
+//! statistics, which must never change results; [`run_adaptive_repeat`]
+//! drives that loop explicitly). On failure the error message
 //! contains the seed;
 //! re-running with `MR4R_SCENARIO_SEED=<seed>` (see [`scenario_seed`])
 //! replays the exact same plan assignment. Thread *interleaving* is of
@@ -80,6 +84,11 @@ pub struct PlanSpec {
     /// `(window, key)`. Streaming tenants interleave with batch tenants
     /// on one pool and must still match their serial baseline digests.
     pub stream: bool,
+    /// Whether the slot's plans feed and consult the session's adaptive
+    /// statistics store ([`crate::stats`]). Repeated slots on a shared
+    /// session then re-lower under measured statistics — and must still
+    /// match their (statically lowered) serial baseline digests.
+    pub adaptive: bool,
 }
 
 /// Scenario shape: `drivers` OS threads × `plans_per_driver` plans each,
@@ -271,11 +280,13 @@ impl ScenarioKit {
                         };
                         let cached = rng.below(2) == 0;
                         let stream = rng.below(4) == 0;
+                        let adaptive = rng.below(2) == 0;
                         PlanSpec {
                             bench,
                             optimize,
                             cached,
                             stream,
+                            adaptive,
                         }
                     })
                     .collect()
@@ -283,11 +294,16 @@ impl ScenarioKit {
             .collect()
     }
 
-    fn run_one(&self, rt: &Runtime, base: &JobConfig, spec: PlanSpec) -> u64 {
+    /// Run one slot's plan against `rt` under `base` narrowed to the
+    /// spec's knobs, returning the canonical result digest (public so
+    /// repeat harnesses like [`run_adaptive_repeat`] can drive single
+    /// slots).
+    pub fn run_one(&self, rt: &Runtime, base: &JobConfig, spec: PlanSpec) -> u64 {
         let cfg = base
             .clone()
             .with_optimize(spec.optimize)
-            .with_cache_enabled(spec.cached);
+            .with_cache_enabled(spec.cached)
+            .with_adaptive(spec.adaptive);
         if spec.stream {
             return (self.stream_plan)(rt, &cfg);
         }
@@ -382,6 +398,80 @@ pub fn run_scenario(kit: &ScenarioKit, sc: &Scenario) -> Result<(), String> {
 pub fn assert_scenario(kit: &ScenarioKit, sc: &Scenario) {
     if let Err(msg) = run_scenario(kit, sc) {
         panic!("concurrency scenario failed: {msg}");
+    }
+}
+
+/// Run one seeded batch slot **twice** on a shared adaptive session and
+/// once statically on a fresh one, checking the feedback loop's contract
+/// end to end: the first run records statistics into the session
+/// [`StatsStore`](crate::stats::StatsStore), the second lowering of the
+/// identical prefix *consults* them, and neither the feedback nor any
+/// rewrite it drives changes the result digest.
+pub fn run_adaptive_repeat(kit: &ScenarioKit, seed: u64, threads: usize) -> Result<(), String> {
+    let shape = Scenario {
+        seed,
+        drivers: 1,
+        plans_per_driver: 1,
+        threads,
+    };
+    let mut spec = kit.specs(&shape)[0][0];
+    // Pin the knobs the check depends on — the seed still picks the
+    // workload. Batch + Auto + uncached keeps prefix fingerprints purely
+    // structural, so both runs land on identical store keys.
+    spec.optimize = OptimizeMode::Auto;
+    spec.cached = false;
+    spec.stream = false;
+    spec.adaptive = true;
+    let base = JobConfig::fast().with_threads(threads.max(1));
+
+    let rt = Runtime::with_config(base.clone());
+    let first = kit.run_one(&rt, &base, spec);
+    if rt.stats().records() == 0 {
+        return Err(format!(
+            "{:?}: first run recorded no statistics (replay with MR4R_SCENARIO_SEED={seed})",
+            spec.bench
+        ));
+    }
+    let consulted_before = rt.stats().consults();
+    let second = kit.run_one(&rt, &base, spec);
+    if rt.stats().consults() == consulted_before {
+        return Err(format!(
+            "{:?}: second lowering never consulted the statistics store \
+             (replay with MR4R_SCENARIO_SEED={seed})",
+            spec.bench
+        ));
+    }
+    if first != second {
+        return Err(format!(
+            "{:?}: adapted repeat digest {second:#018x} != first run {first:#018x} \
+             (replay with MR4R_SCENARIO_SEED={seed})",
+            spec.bench
+        ));
+    }
+    let static_rt = Runtime::with_config(base.clone());
+    let baseline = kit.run_one(
+        &static_rt,
+        &base,
+        PlanSpec {
+            adaptive: false,
+            ..spec
+        },
+    );
+    if baseline != first {
+        return Err(format!(
+            "{:?}: adaptive digest {first:#018x} != static baseline {baseline:#018x} \
+             (replay with MR4R_SCENARIO_SEED={seed})",
+            spec.bench
+        ));
+    }
+    Ok(())
+}
+
+/// [`run_adaptive_repeat`], panicking with the replay seed on failure —
+/// the test entry point.
+pub fn assert_adaptive_repeat(kit: &ScenarioKit, seed: u64, threads: usize) {
+    if let Err(msg) = run_adaptive_repeat(kit, seed, threads) {
+        panic!("adaptive repeat scenario failed: {msg}");
     }
 }
 
@@ -651,6 +741,12 @@ mod tests {
         assert_eq!(tenant_spec_for(0).overload, OverloadPolicy::Defer);
         assert_eq!(tenant_spec_for(4).overload, OverloadPolicy::Degrade);
         assert_eq!(tenant_spec_for(1).heap_budget, None);
+    }
+
+    #[test]
+    fn tiny_adaptive_repeat_passes() {
+        let kit = ScenarioKit::prepare(0.0002, 7);
+        assert_adaptive_repeat(&kit, scenario_seed(23), 2);
     }
 
     #[test]

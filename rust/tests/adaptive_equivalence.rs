@@ -1,0 +1,337 @@
+//! Adaptive re-optimization equivalence — feedback may change *plans*,
+//! never *results*.
+//!
+//! The statistics store ([`mr4r::stats`]) closes the loop between runs:
+//! a plan's epilogue records measured cardinalities, selectivities, and
+//! key skew per structural prefix fingerprint, and the next lowering of
+//! the same prefix consults them to reorder filters, right-size shard
+//! counts, switch keyed flows, and split hot keys. Every test here holds
+//! the same bar: the adapted second run must name its decisions in
+//! [`PlanReport::adaptation`](mr4r::PlanReport) *and* stay digest- (or
+//! item-) identical to both the first run and a statically lowered
+//! baseline, across all seven benchmark workloads and the targeted
+//! presets that force each rewrite to fire.
+
+use mr4r::api::config::{ExecutionFlow, JobConfig, OptimizeMode};
+use mr4r::api::Runtime;
+use mr4r::benchmarks::BenchId;
+use mr4r::stats::AdaptiveDecision;
+use mr4r::stream::StreamSource;
+use mr4r::testkit::scenario::{assert_adaptive_repeat, scenario_seed, PlanSpec, ScenarioKit};
+
+fn rt(threads: usize) -> Runtime {
+    Runtime::with_config(JobConfig::fast().with_threads(threads))
+}
+
+const ALL_BENCHES: [BenchId; 7] = [
+    BenchId::WC,
+    BenchId::HG,
+    BenchId::KM,
+    BenchId::LR,
+    BenchId::MM,
+    BenchId::PC,
+    BenchId::SM,
+];
+
+#[test]
+fn adapted_runs_match_static_digests_across_all_benchmarks() {
+    let threads: usize = std::env::var("MR4R_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let kit = ScenarioKit::prepare(0.0002, 41);
+    let base = JobConfig::fast().with_threads(threads);
+    for bench in ALL_BENCHES {
+        for optimize in [OptimizeMode::Auto, OptimizeMode::Off] {
+            let spec = PlanSpec {
+                bench,
+                optimize,
+                cached: false,
+                stream: false,
+                adaptive: true,
+            };
+            // Shared adaptive session: the second run re-lowers under
+            // whatever statistics the first recorded.
+            let shared = Runtime::with_config(base.clone());
+            let first = kit.run_one(&shared, &base, spec);
+            let second = kit.run_one(&shared, &base, spec);
+            // Fresh static session: the feedback loop never engages.
+            let static_rt = Runtime::with_config(base.clone());
+            let baseline = kit.run_one(
+                &static_rt,
+                &base,
+                PlanSpec {
+                    adaptive: false,
+                    ..spec
+                },
+            );
+            assert_eq!(
+                first, second,
+                "{bench:?} under {optimize:?}: adapted repeat changed the digest"
+            );
+            assert_eq!(
+                first, baseline,
+                "{bench:?} under {optimize:?}: adaptive digest diverged from static"
+            );
+            if optimize == OptimizeMode::Off {
+                // `Off` bypasses the store even with the adaptive flag on.
+                assert_eq!(
+                    shared.stats().records(),
+                    0,
+                    "{bench:?}: Off-mode run fed the statistics store"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn skewed_reduce_splits_the_hot_key_with_digest_identity() {
+    let rt = rt(2);
+    // 90% of emits land on key 0; the rest spread over 64 cold keys, so
+    // no other rewrite (shard shrink, flow switch) competes.
+    let pairs: Vec<(u64, i64)> = (0..40_000u64)
+        .map(|i| {
+            if i % 10 != 0 {
+                (0, 1)
+            } else {
+                (1 + (i / 10) % 64, 1)
+            }
+        })
+        .collect();
+    let run = || {
+        rt.dataset(&pairs)
+            .keyed()
+            .reduce_by_key(|a, b| a + b)
+            .collect_sorted()
+    };
+
+    let first = run();
+    let a1 = first.report.adaptation.as_ref().expect("adaptive report");
+    assert!(a1.consulted, "adaptive run must consult the store");
+    assert!(a1.decisions.is_empty(), "cold store cannot decide anything");
+
+    let second = run();
+    let a2 = second.report.adaptation.as_ref().unwrap();
+    assert!(
+        a2.decisions
+            .iter()
+            .any(|d| matches!(d, AdaptiveDecision::HotKeySplit { .. })),
+        "skewed repeat must split the hot key, got {:?}",
+        a2.decisions
+    );
+    assert_eq!(first.items, second.items, "hot-key split changed results");
+
+    let static_rt = rt(2);
+    let baseline = static_rt
+        .dataset(&pairs)
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .with_config(JobConfig::fast().with_threads(2).with_adaptive(false))
+        .collect_sorted();
+    assert!(baseline.report.adaptation.is_none());
+    assert_eq!(baseline.items, first.items);
+}
+
+#[test]
+fn unique_key_aggregate_switches_to_list_flow() {
+    let rt = rt(2);
+    // Every key appears exactly once: holder-per-key combining buys
+    // nothing, and the measured emits < 2×keys evidence flips the flow.
+    let pairs: Vec<(u64, i64)> = (0..6000u64).map(|i| (i, 1)).collect();
+    let run = || {
+        rt.dataset(&pairs)
+            .keyed()
+            .reduce_by_key(|a, b| a + b)
+            .collect_sorted()
+    };
+
+    let first = run();
+    assert_eq!(first.metrics().flow, ExecutionFlow::Combine);
+
+    let second = run();
+    let a2 = second.report.adaptation.as_ref().unwrap();
+    assert!(
+        a2.decisions.iter().any(|d| matches!(
+            d,
+            AdaptiveDecision::FlowSwitch {
+                emits: 6000,
+                keys: 6000,
+                ..
+            }
+        )),
+        "unique-key repeat must switch flows, got {:?}",
+        a2.decisions
+    );
+    assert_eq!(
+        second.metrics().flow,
+        ExecutionFlow::Reduce,
+        "the switched run must take the list flow"
+    );
+    assert_eq!(first.items, second.items, "flow switch changed results");
+
+    // Anti-oscillation: the switched run records no flow observation, so
+    // the stored combine-flow evidence stands and the hint persists
+    // instead of flip-flopping every other run.
+    let third = run();
+    assert_eq!(third.metrics().flow, ExecutionFlow::Reduce);
+    assert_eq!(third.items, first.items);
+}
+
+#[test]
+fn low_cardinality_reduce_shrinks_shards_and_preview_matches() {
+    let rt = rt(2);
+    let data: Vec<i64> = (0..8192).collect();
+    let build = || {
+        rt.dataset(&data)
+            .map(|x: &i64| (*x % 8, 1i64))
+            .keyed()
+            .reduce_by_key(|a, b| a + b)
+    };
+
+    let first = build().collect_sorted();
+    assert!(first
+        .report
+        .adaptation
+        .as_ref()
+        .is_some_and(|a| a.consulted && a.decisions.is_empty()));
+
+    // `explain()` between the runs must preview exactly what the next
+    // `collect()` executes — both consult the same feedback store.
+    let preview = build().explain();
+    let second = build().collect_sorted();
+    let a2 = second.report.adaptation.as_ref().unwrap();
+    assert!(
+        a2.decisions.iter().any(|d| matches!(
+            d,
+            AdaptiveDecision::ShardCount {
+                to: 16,
+                keys: 8,
+                ..
+            }
+        )),
+        "8 observed keys must shrink the shard fan-out, got {:?}",
+        a2.decisions
+    );
+    for d in &a2.decisions {
+        assert!(
+            preview.contains(&d.to_string()),
+            "preview diverged from execution: missing `{d}` in\n{preview}"
+        );
+    }
+    assert_eq!(first.items, second.items, "shard shrink changed results");
+}
+
+#[test]
+fn measured_selectivities_reorder_filter_runs() {
+    let rt = rt(2);
+    let data: Vec<i64> = (0..8192).collect();
+    // Recorded order is expensive-first: the opening filter keeps 50%,
+    // the second keeps 12.5% of what it sees. Measured selectivities
+    // must hoist the cheaper second predicate to the front.
+    let build = || {
+        rt.dataset(&data)
+            .filter(|x: &i64| x % 2 == 0)
+            .filter(|x: &i64| x % 16 < 2)
+    };
+
+    let first = build().collect();
+    let a1 = first.report.adaptation.as_ref().expect("adaptive report");
+    assert!(a1.consulted && a1.decisions.is_empty());
+
+    let preview = build().explain();
+    let second = build().collect();
+    let a2 = second.report.adaptation.as_ref().unwrap();
+    let reorder = a2
+        .decisions
+        .iter()
+        .find_map(|d| match d {
+            AdaptiveDecision::FilterReorder {
+                first_stage, order, ..
+            } => Some((*first_stage, order.clone())),
+            _ => None,
+        })
+        .expect("measured selectivities must reorder the filter run");
+    assert_eq!(
+        reorder,
+        (1, vec![1, 0]),
+        "the more selective second filter runs first"
+    );
+    for d in &a2.decisions {
+        assert!(
+            preview.contains(&d.to_string()),
+            "preview diverged from execution: missing `{d}` in\n{preview}"
+        );
+    }
+    assert_eq!(first.items, second.items, "filter reorder changed results");
+    assert_eq!(second.items.len(), 512);
+
+    // Probes stay keyed by each predicate's *recorded* position, so the
+    // reordered run refreshes the same statistics and the third lowering
+    // reaches the same order — no oscillation.
+    let third = build().collect();
+    let a3 = third.report.adaptation.as_ref().unwrap();
+    assert!(
+        a3.decisions
+            .iter()
+            .any(|d| matches!(d, AdaptiveDecision::FilterReorder { .. })),
+        "reorder must persist across runs, got {:?}",
+        a3.decisions
+    );
+    assert_eq!(third.items, first.items);
+}
+
+#[test]
+fn off_mode_and_adaptive_flag_bypass_the_store() {
+    let rt = rt(2);
+    let data: Vec<i64> = (0..4096).collect();
+    let static_out = rt
+        .dataset(&data)
+        .map(|x: &i64| (*x % 4, 1i64))
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .with_config(JobConfig::fast().with_threads(2).with_adaptive(false))
+        .collect_sorted();
+    assert!(static_out.report.adaptation.is_none());
+    assert_eq!(rt.stats().records(), 0, "adaptive=false must not record");
+
+    let off = rt
+        .dataset(&data)
+        .optimize(OptimizeMode::Off)
+        .map(|x: &i64| (*x % 4, 1i64))
+        .keyed()
+        .reduce_by_key(|a, b| a + b)
+        .collect_sorted();
+    assert!(off.report.adaptation.is_none(), "Off bypasses the store");
+    assert_eq!(rt.stats().records(), 0);
+    assert_eq!(static_out.items, off.items);
+}
+
+#[test]
+fn standing_queries_feed_pane_statistics_per_step() {
+    let rt = rt(2);
+    let chunks: Vec<Vec<(u64, u64)>> = vec![
+        vec![(1, 0), (2, 1), (1, 2)],
+        vec![(2, 5), (3, 6), (1, 9)],
+    ];
+    let out = rt
+        .stream(StreamSource::replay(chunks))
+        .keyed()
+        .window_tumbling(4, |ts: &u64| *ts)
+        .count_by_key()
+        .run_to_close();
+    assert!(
+        out.report.adaptation.is_some(),
+        "adaptive standing query must carry its lowering report"
+    );
+    assert!(
+        rt.stats().records() > 0,
+        "each ingested chunk must record window-pane statistics"
+    );
+}
+
+#[test]
+fn seeded_scenario_slot_consults_the_store_on_repeat() {
+    let kit = ScenarioKit::prepare(0.0002, 11);
+    assert_adaptive_repeat(&kit, scenario_seed(0xADA_97), 2);
+}
