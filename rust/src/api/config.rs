@@ -58,17 +58,52 @@ pub struct CacheConfig {
     /// `watermark × total_bytes`, half the cached bytes are released
     /// (LRU-first, cheapest-recompute first among equals).
     pub watermark: f64,
-    /// Hard cap on total cached bytes, independent of heap pressure —
-    /// the backstop for disabled-heap (pure-speed) sessions.
+    /// Hard cap on total *hot-tier* cached bytes, independent of heap
+    /// pressure — the backstop for disabled-heap (pure-speed) sessions.
     pub max_bytes: u64,
+    /// Capacity of the cold spill tier, bytes. Entries evicted from the
+    /// hot tier whose (staleness-decayed) recompute cost exceeds their
+    /// reload cost are *spilled* here instead of dropped: their simulated
+    /// heap cohorts are released (spilled bytes leave the heap), and the
+    /// next read reloads them at `bytes × reload_secs_per_byte` instead
+    /// of recomputing the prefix. `0` disables the spill tier entirely —
+    /// the pre-tiered blind LRU-drop behaviour.
+    pub spill_bytes: u64,
+    /// Simulated reload latency per spilled byte, seconds. The default
+    /// models ~500 MB/s sequential read. Reload traffic is charged to
+    /// the reading job's heap (a transient `cache.reload` cohort) so the
+    /// GC-pressure metric sees it.
+    pub reload_secs_per_byte: f64,
+    /// Staleness half-life for the keep/spill/drop heuristic, in cache
+    /// LRU ticks: an entry unused for `decay_ticks` reads counts only
+    /// half its observed recompute cost. `0` disables decay.
+    pub decay_ticks: u64,
 }
 
 impl Default for CacheConfig {
     fn default() -> Self {
+        // The spill-tier knobs double as deployment/CI environment
+        // switches: `MR4R_CACHE_SPILL_BYTES` sizes (or, at `0`, disables)
+        // the cold tier and `MR4R_CACHE_RELOAD_SECS_PER_BYTE` prices it,
+        // so the whole suite can run at both extremes without code
+        // changes (see the cache-stress CI matrix). Builders still
+        // override these per job.
+        let spill_bytes = std::env::var("MR4R_CACHE_SPILL_BYTES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(256 << 20);
+        let reload_secs_per_byte = std::env::var("MR4R_CACHE_RELOAD_SECS_PER_BYTE")
+            .ok()
+            .and_then(|v| v.parse::<f64>().ok())
+            .filter(|v| v.is_finite() && *v >= 0.0)
+            .unwrap_or(2e-9);
         CacheConfig {
             enabled: true,
             watermark: 0.85,
             max_bytes: 256 << 20,
+            spill_bytes,
+            reload_secs_per_byte,
+            decay_ticks: 32,
         }
     }
 }
@@ -189,9 +224,33 @@ impl JobConfig {
         self
     }
 
-    /// Set the hard cap on total cached bytes.
+    /// Set the hard cap on total hot-tier cached bytes.
     pub fn with_cache_max_bytes(mut self, bytes: u64) -> Self {
         self.cache.max_bytes = bytes;
+        self
+    }
+
+    /// Set the cold spill tier's capacity in bytes (`0` disables the
+    /// spill tier: evicted entries are dropped outright, the pre-tiered
+    /// baseline behaviour).
+    pub fn with_cache_spill_bytes(mut self, bytes: u64) -> Self {
+        self.cache.spill_bytes = bytes;
+        self
+    }
+
+    /// Set the simulated reload latency per spilled byte, seconds
+    /// (clamped non-negative). Lower values bias the keep/spill/drop
+    /// heuristic toward spilling; `f64::INFINITY` makes every eviction
+    /// a drop even with the spill tier enabled.
+    pub fn with_cache_reload_cost(mut self, secs_per_byte: f64) -> Self {
+        self.cache.reload_secs_per_byte = secs_per_byte.max(0.0);
+        self
+    }
+
+    /// Set the staleness half-life of the eviction heuristic in cache
+    /// LRU ticks (`0` disables decay).
+    pub fn with_cache_decay_ticks(mut self, ticks: u64) -> Self {
+        self.cache.decay_ticks = ticks;
         self
     }
 
@@ -292,5 +351,26 @@ mod tests {
         assert!(!c.cache.enabled);
         assert_eq!(c.cache.watermark, 0.25);
         assert_eq!(c.cache.max_bytes, 1024);
+    }
+
+    #[test]
+    fn tier_defaults_and_builders() {
+        let c = JobConfig::new();
+        // The env knobs override the compiled-in defaults, so only pin
+        // them down when the environment leaves them alone.
+        if std::env::var_os("MR4R_CACHE_SPILL_BYTES").is_none() {
+            assert!(c.cache.spill_bytes > 0, "spill tier defaults on");
+        }
+        if std::env::var_os("MR4R_CACHE_RELOAD_SECS_PER_BYTE").is_none() {
+            assert!(c.cache.reload_secs_per_byte > 0.0);
+        }
+        assert!(c.cache.decay_ticks > 0);
+        let c = c
+            .with_cache_spill_bytes(0)
+            .with_cache_reload_cost(-1.0)
+            .with_cache_decay_ticks(0);
+        assert_eq!(c.cache.spill_bytes, 0);
+        assert_eq!(c.cache.reload_secs_per_byte, 0.0, "reload cost clamps at zero");
+        assert_eq!(c.cache.decay_ticks, 0);
     }
 }

@@ -1332,7 +1332,11 @@ where
         // just does not grow.
         if let Some(tenant) = &cfg.govern {
             if let Some(budget) = tenant.spec().cache_budget {
-                let live = tenant.counters().cache_live_bytes.load(Ordering::Relaxed);
+                let live = tenant
+                    .counters()
+                    .cache_live_bytes
+                    .load(Ordering::Relaxed)
+                    .saturating_add(tenant.counters().cache_spill_bytes.load(Ordering::Relaxed));
                 if live.saturating_add(delta_bytes) > budget {
                     tenant
                         .counters()
@@ -1444,6 +1448,55 @@ where
                     }
                 }
             }
+            crate::cache::Begin::Spilled {
+                value,
+                seen,
+                bytes,
+                items,
+            } => {
+                match value.downcast::<Vec<Vec<T>>>() {
+                    Ok(shards) => {
+                        // Cold-tier read: simulate the reload traffic
+                        // (`bytes × reload_secs_per_byte` of heap churn)
+                        // and promote the entry back to the hot tier —
+                        // still far cheaper than recomputing the prefix.
+                        let (_, evictions) =
+                            cache.complete_reload(fp, bytes, items, &cfg.heap, &cfg.cache);
+                        exec.note_cache(CacheActivity {
+                            reloads: 1,
+                            reload_bytes: bytes,
+                            evictions,
+                            ..CacheActivity::default()
+                        });
+                        if let Base::Source(src) = &mut base {
+                            if let (Some(total), Some(have)) = (src.append_len(), seen) {
+                                if (total as u64) > have {
+                                    return Self::merge_append_delta(
+                                        src.as_mut(),
+                                        &chain,
+                                        &shards,
+                                        fp,
+                                        have,
+                                        total,
+                                        false,
+                                        &cfg,
+                                        cache,
+                                        exec,
+                                    );
+                                }
+                            }
+                        }
+                        (*shards).clone()
+                    }
+                    // Cross-type fingerprint collision against the spill
+                    // tier: never serve (or reload) the mistyped entry —
+                    // recompute, exactly like the hot-tier conflict path.
+                    Err(_) => {
+                        cache.record_type_conflict();
+                        Self::compute(base, chain, &cfg, exec)
+                    }
+                }
+            }
             crate::cache::Begin::Claimed(ticket) => {
                 // How much of an append-aware source this entry will
                 // cover, recorded so later reads can delta-merge.
@@ -1463,13 +1516,27 @@ where
                         .map(|t| t.heap_bytes() + ENTRY_SLOT_BYTES)
                         .sum::<u64>();
                 }
+                // Feed the observed materialization cost to the eviction
+                // heuristic's stats store (adaptive sessions only, like
+                // every other feedback-store write).
+                if cfg.adaptive_enabled() {
+                    cache.note_prefix_cost(fp, secs, bytes);
+                }
                 // Tenant cache-budget gate: an insert that would push the
                 // tenant's live cached bytes past its budget is denied —
                 // the claim is withdrawn (waiters recover and compute
                 // themselves) and the computed value is returned unstored.
+                // Spilled bytes still count against the budget: the cold
+                // tier is capacity the tenant occupies, not a free ride.
                 if let Some(tenant) = &cfg.govern {
                     if let Some(budget) = tenant.spec().cache_budget {
-                        let live = tenant.counters().cache_live_bytes.load(Ordering::Relaxed);
+                        let live = tenant
+                            .counters()
+                            .cache_live_bytes
+                            .load(Ordering::Relaxed)
+                            .saturating_add(
+                                tenant.counters().cache_spill_bytes.load(Ordering::Relaxed),
+                            );
                         if live.saturating_add(bytes) > budget {
                             tenant
                                 .counters()

@@ -69,7 +69,7 @@ pub struct Runtime {
     config: JobConfig,
     cache: MaterializationCache,
     governor: Governor,
-    stats: StatsStore,
+    stats: Arc<StatsStore>,
 }
 
 impl Runtime {
@@ -94,13 +94,18 @@ impl Runtime {
     /// A session sharing an externally-owned agent (the legacy façade
     /// uses this so `MapReduce::with_agent` keeps its meaning).
     pub fn with_config_and_agent(config: JobConfig, agent: OptimizerAgent) -> Self {
+        let stats = Arc::new(StatsStore::new());
+        let cache = MaterializationCache::new();
+        // Tiered eviction weighs observed per-prefix compute time when
+        // choosing between spill and drop (see `cache::tier`).
+        cache.attach_cost_feed(Arc::clone(&stats));
         Runtime {
             pool: WorkerPool::new(config.threads),
             agent,
             config,
-            cache: MaterializationCache::new(),
+            cache,
             governor: Governor::new(),
-            stats: StatsStore::new(),
+            stats,
         }
     }
 

@@ -55,7 +55,8 @@ use crate::util::hash::FxHasher;
 use super::MaterializationCache;
 
 /// A structural prefix fingerprint — the materialization-cache key.
-#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+/// Ordered so eviction tie-breaks are deterministic across runs.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct Fingerprint(pub u64);
 
 impl std::fmt::Debug for Fingerprint {

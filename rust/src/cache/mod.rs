@@ -29,11 +29,24 @@
 //!   uncached prefix block on the entry and reuse the one result
 //!   ([`CacheStats::shared_in_flight`] counts them). A claimant that
 //!   panics aborts its claim on unwind, so waiters recover and compute.
-//! * **Pressure-aware eviction** — when the producing job's simulated
-//!   heap occupancy crosses [`CacheConfig::watermark`] (or total cached
-//!   bytes exceed [`CacheConfig::max_bytes`]), least-recently-used
-//!   entries go first, cheapest-to-recompute first among equals, and
-//!   their cohorts are released back to the heap.
+//! * **Cost-aware tiered eviction** (see [`tier`]) — when the producing
+//!   job's simulated heap occupancy crosses [`CacheConfig::watermark`]
+//!   (or hot-tier bytes exceed [`CacheConfig::max_bytes`]), victims are
+//!   chosen by lowest *keep score* — staleness-decayed recompute cost
+//!   per resident byte — and each victim is then either **spilled** to
+//!   the cold tier (its heap cohorts are released, so spilled bytes
+//!   genuinely relieve the heap, and the next read *reloads* it at a
+//!   simulated `bytes × reload_secs_per_byte` cost) or **dropped**
+//!   outright when recomputing is cheaper than reloading. Evicted
+//!   entries are therefore *not* discarded unconditionally any more:
+//!   only entries the heuristic judges cheap or stale die; expensive
+//!   prefixes survive on the spill tier. Recompute costs prefer the
+//!   per-fingerprint observed compute times in the session's
+//!   [`StatsStore`](crate::stats::StatsStore) (attached as the cache's
+//!   cost feed) over the wall time measured at materialization, and
+//!   survivors of a triggered pass are counted as explicit keep
+//!   decisions, so the keep/spill/drop mix is observable in
+//!   [`CacheStats`].
 //!
 //! The cache is populated and read **only at explicit
 //! [`Dataset::cache`](crate::api::plan::Dataset::cache) cut points**: a
@@ -48,17 +61,22 @@
 //! [`SimHeap`]: crate::memsim::SimHeap
 
 pub mod fingerprint;
+pub mod tier;
 
 use std::any::Any;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use crate::api::config::CacheConfig;
 use crate::govern::TenantHandle;
 use crate::memsim::{CohortId, SimHeap};
+use crate::stats::StatsStore;
+
+use tier::{decide, keep_score, EntryCost, SpillEntry, SpillStore};
 
 pub use fingerprint::Fingerprint;
+pub use tier::{Residency, TierDecision};
 
 /// Per-element bookkeeping overhead charged for a cached element beside
 /// its [`HeapSized`](crate::api::traits::HeapSized) payload (the shard
@@ -80,8 +98,44 @@ pub struct CacheStats {
     /// element type (a fingerprint collision across types — the reader
     /// recomputed without touching the entry).
     pub type_conflicts: u64,
-    /// Entries evicted under pressure (cumulative).
+    /// Entries that left the hot tier under pressure (cumulative;
+    /// spills + drops — see `spills` for the split).
     pub evictions: u64,
+    /// Hot-tier victims moved to the cold spill tier instead of being
+    /// dropped (a subset of `evictions`).
+    pub spills: u64,
+    /// Reads served from the spill tier at simulated reload cost
+    /// instead of recomputing the prefix.
+    pub reloads: u64,
+    /// Payload bytes re-charged to the heap by reloads (cumulative).
+    pub reload_bytes: u64,
+    /// Entries dropped *from the cold tier* to make room for newer
+    /// spills (not counted in `evictions`, which tracks hot-tier
+    /// departures only).
+    pub spill_evictions: u64,
+    /// Bytes currently resident in the spill tier (these bytes hold no
+    /// heap cohorts — spilling released them).
+    pub bytes_spilled: u64,
+    /// Entries currently resident in the spill tier.
+    pub spill_entries: usize,
+    /// Fingerprints recomputed through the claim path after pressure
+    /// dropped them from either tier — the recomputation a better
+    /// keep/spill decision would have avoided (explicit `remove`/
+    /// `clear` calls do not count).
+    pub rematerializations: u64,
+    /// Elements recomputed by those rematerializations.
+    pub remat_items: u64,
+    /// Keep decisions: entries examined by a triggered eviction pass
+    /// that survived it.
+    pub decisions_keep: u64,
+    /// Spill decisions made by the tier heuristic.
+    pub decisions_spill: u64,
+    /// Drop decisions made by the tier heuristic (hot-tier victims).
+    pub decisions_drop: u64,
+    /// Victim decisions whose recompute-cost input came from a
+    /// [`StatsStore`] observed-compute-time sample rather than only the
+    /// cache's own materialization stopwatch.
+    pub stats_fed_decisions: u64,
     /// Append-delta merges: a cut point found a ready entry whose
     /// append-aware source (see
     /// [`InputSource::append_len`](crate::api::InputSource::append_len))
@@ -90,9 +144,10 @@ pub struct CacheStats {
     pub delta_merges: u64,
     /// Elements appended into existing entries via delta merges.
     pub delta_items: u64,
-    /// Bytes currently cached (live `cache.entry` cohort bytes).
+    /// Bytes currently cached in the hot tier (live `cache.entry`
+    /// cohort bytes).
     pub bytes_cached: u64,
-    /// Ready entries currently stored.
+    /// Ready hot-tier entries currently stored.
     pub entries: usize,
 }
 
@@ -109,6 +164,12 @@ pub struct CacheActivity {
     pub evictions: u64,
     /// Bytes this plan inserted into the cache.
     pub bytes_inserted: u64,
+    /// Reads this plan served from the spill tier (each promoted the
+    /// entry back to the hot tier, or found a racing reader already
+    /// had).
+    pub reloads: u64,
+    /// Payload bytes this plan's reloads re-charged to its heap.
+    pub reload_bytes: u64,
 }
 
 impl CacheActivity {
@@ -118,7 +179,32 @@ impl CacheActivity {
         self.shared_in_flight += other.shared_in_flight;
         self.evictions += other.evictions;
         self.bytes_inserted += other.bytes_inserted;
+        self.reloads += other.reloads;
+        self.reload_bytes += other.reload_bytes;
     }
+}
+
+/// A consistency snapshot for tests ([`MaterializationCache::audit`]):
+/// tier byte totals recomputed from the ground truth rather than the
+/// running [`CacheStats`] counters.
+#[doc(hidden)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheAudit {
+    /// Σ bytes across ready hot-tier entries.
+    pub hot_bytes: u64,
+    pub hot_entries: usize,
+    /// Claimed fingerprints currently being computed.
+    pub in_flight: usize,
+    /// Σ bytes across cold-tier entries.
+    pub spill_bytes: u64,
+    pub spill_entries: usize,
+    /// Σ live bytes across hot entries' heap cohorts — equals
+    /// `hot_bytes` exactly on an enabled heap (spilled entries hold no
+    /// cohorts).
+    pub cohort_bytes: u64,
+    /// Fingerprints resident in both tiers (the tier invariant: always
+    /// zero).
+    pub double_resident: usize,
 }
 
 /// Type-erased cached shard outputs (`Arc<Vec<Vec<T>>>` behind `Any`; the
@@ -134,8 +220,13 @@ enum EntryState {
 struct Entry {
     state: EntryState,
     bytes: u64,
+    /// Elements stored in the entry's value (Σ shard lengths) — what a
+    /// future rematerialization would have to recompute if pressure
+    /// drops this entry.
+    items: u64,
     /// Wall seconds the producing plan spent computing the prefix — the
-    /// recompute cost the eviction policy protects.
+    /// recompute cost the eviction policy protects (the cost feed's
+    /// observed per-prefix compute time overrides it when larger).
     recompute_secs: f64,
     /// LRU clock value of the last read/insert.
     last_used: u64,
@@ -156,6 +247,14 @@ struct Entry {
 
 struct CacheInner {
     entries: HashMap<Fingerprint, Entry>,
+    /// The cold tier (see [`tier`]). Lives under the same mutex as the
+    /// hot map, so tier membership is atomic: a fingerprint is never
+    /// resident in both.
+    spill: SpillStore,
+    /// Fingerprints pressure dropped from either tier (→ items at drop
+    /// time): when one comes back through the claim path, the recompute
+    /// is counted as a rematerialization.
+    dropped: HashMap<Fingerprint, u64>,
     /// Raw identity → first-seen registration ordinal (what fingerprints
     /// hash, making them session-order-stable rather than address-bound).
     identity: HashMap<u64, u64>,
@@ -176,6 +275,18 @@ pub(crate) enum Begin<'c> {
         value: Stored,
         waited: bool,
         seen: Option<u64>,
+    },
+    /// The fingerprint is resident in the cold spill tier: the caller
+    /// gets the value immediately and — after its typed downcast
+    /// succeeds — calls [`MaterializationCache::complete_reload`] to
+    /// charge the simulated reload and promote the entry back to the
+    /// hot tier. A failed downcast takes the `type_conflicts` recompute
+    /// path instead: a mistyped entry is never served, spilled or not.
+    Spilled {
+        value: Stored,
+        seen: Option<u64>,
+        bytes: u64,
+        items: u64,
     },
     /// This caller claimed the fingerprint: compute the prefix, then
     /// [`MaterializationCache::complete`] the ticket (dropping it without
@@ -217,6 +328,10 @@ impl Drop for Ticket<'_> {
 pub struct MaterializationCache {
     inner: Mutex<CacheInner>,
     ready: Condvar,
+    /// The session's statistics store, attached once by the owning
+    /// `Runtime`: keep/spill/drop decisions prefer its per-fingerprint
+    /// observed compute times over the cache's own stopwatch.
+    cost_feed: OnceLock<Arc<StatsStore>>,
 }
 
 impl Default for MaterializationCache {
@@ -230,12 +345,30 @@ impl MaterializationCache {
         MaterializationCache {
             inner: Mutex::new(CacheInner {
                 entries: HashMap::new(),
+                spill: SpillStore::default(),
+                dropped: HashMap::new(),
                 identity: HashMap::new(),
                 next_ordinal: 0,
                 stats: CacheStats::default(),
                 tick: 0,
             }),
             ready: Condvar::new(),
+            cost_feed: OnceLock::new(),
+        }
+    }
+
+    /// Attach the session's statistics store as the eviction cost feed
+    /// (see [`StatsStore::prefix_cost`]). Set once by the owning
+    /// [`Runtime`](crate::api::Runtime); later calls are ignored.
+    pub fn attach_cost_feed(&self, stats: Arc<StatsStore>) {
+        let _ = self.cost_feed.set(stats);
+    }
+
+    /// Record one observed prefix materialization into the cost feed
+    /// (no-op when no feed is attached).
+    pub(crate) fn note_prefix_cost(&self, fp: Fingerprint, compute_secs: f64, output_bytes: u64) {
+        if let Some(stats) = self.cost_feed.get() {
+            stats.record_prefix_cost(fp.0, compute_secs, output_bytes);
         }
     }
 
@@ -259,7 +392,9 @@ impl MaterializationCache {
         self.inner.lock().unwrap().stats
     }
 
-    /// Whether a ready entry exists for `fp` (tests and diagnostics).
+    /// Whether a ready *hot-tier* entry exists for `fp` (tests and
+    /// diagnostics; spilled entries answer false — see
+    /// [`MaterializationCache::residency`]).
     pub fn contains(&self, fp: Fingerprint) -> bool {
         matches!(
             self.inner.lock().unwrap().entries.get(&fp),
@@ -268,6 +403,51 @@ impl MaterializationCache {
                 ..
             })
         )
+    }
+
+    /// Where `fp` currently lives in the two-tier store (surfaced in
+    /// `explain()` cut-point lines).
+    pub fn residency(&self, fp: Fingerprint) -> Residency {
+        let inner = self.inner.lock().unwrap();
+        match inner.entries.get(&fp) {
+            Some(Entry {
+                state: EntryState::Ready(_),
+                ..
+            }) => Residency::Hot,
+            Some(Entry {
+                state: EntryState::InFlight,
+                ..
+            }) => Residency::InFlight,
+            None if inner.spill.contains(&fp) => Residency::Spilled,
+            None => Residency::Absent,
+        }
+    }
+
+    /// A consistency snapshot recomputed from ground truth (the entry
+    /// maps and live cohort bytes) rather than the running counters —
+    /// what the tier-invariant property tests check `stats()` against.
+    #[doc(hidden)]
+    pub fn audit(&self) -> CacheAudit {
+        let inner = self.inner.lock().unwrap();
+        let mut a = CacheAudit::default();
+        for (fp, e) in &inner.entries {
+            match &e.state {
+                EntryState::Ready(_) => {
+                    a.hot_bytes += e.bytes;
+                    a.hot_entries += 1;
+                    for (heap, cohort) in &e.cohorts {
+                        a.cohort_bytes += heap.cohort_live(*cohort);
+                    }
+                }
+                EntryState::InFlight => a.in_flight += 1,
+            }
+            if inner.spill.contains(fp) {
+                a.double_resident += 1;
+            }
+        }
+        a.spill_bytes = inner.spill.bytes;
+        a.spill_entries = inner.spill.entries.len();
+        a
     }
 
     /// Resolve a cut point: return the ready entry, wait out another
@@ -309,12 +489,27 @@ impl MaterializationCache {
                         seen,
                     }
                 }
+                None if inner.spill.contains(&fp) => {
+                    // Cold but resident: serve from the spill tier (not
+                    // a miss — the prefix will not recompute).
+                    inner.tick += 1;
+                    let tick = inner.tick;
+                    let s = inner.spill.get_mut(&fp).expect("spill residency checked");
+                    s.last_used = tick;
+                    Begin::Spilled {
+                        value: Arc::clone(&s.value),
+                        seen: s.seen,
+                        bytes: s.bytes,
+                        items: s.items,
+                    }
+                }
                 None => {
                     inner.entries.insert(
                         fp,
                         Entry {
                             state: EntryState::InFlight,
                             bytes: 0,
+                            items: 0,
                             recompute_secs: 0.0,
                             last_used: 0,
                             seen: None,
@@ -390,6 +585,7 @@ impl MaterializationCache {
             .expect("claimed entry present until completed or aborted");
         entry.state = EntryState::Ready(value);
         entry.bytes = bytes;
+        entry.items = items;
         entry.recompute_secs = recompute_secs;
         entry.last_used = tick;
         entry.seen = seen;
@@ -402,10 +598,98 @@ impl MaterializationCache {
         entry.tenant = tenant;
         inner.stats.bytes_cached += bytes;
         inner.stats.entries += 1;
-        let evicted = evict_under_pressure(&mut inner, fp, heap, cfg);
+        if inner.dropped.remove(&fp).is_some() {
+            // Pressure dropped this fingerprint earlier and the claim
+            // path just recomputed it — the cost a keep or spill
+            // decision would have avoided.
+            inner.stats.rematerializations += 1;
+            inner.stats.remat_items += items;
+        }
+        let feed = self.cost_feed.get().map(|s| s.as_ref());
+        let evicted = evict_under_pressure(&mut inner, fp, heap, cfg, feed);
         drop(inner);
         self.ready.notify_all();
         evicted
+    }
+
+    /// Serve a read from the spill tier: charge the simulated reload —
+    /// the payload re-enters the heap as a fresh `cache.entry` cohort,
+    /// plus transient `cache.reload` scratch traffic of the same size
+    /// (the deserialization garbage), so the GC-pressure metric sees
+    /// the reload — then promote the entry back to the hot tier. Racing
+    /// readers may each see [`Begin::Spilled`] for the same
+    /// fingerprint: the first promotes; later ones find the entry
+    /// already hot (or gone) and release their duplicate charge. Every
+    /// caller counts as one reload — each physically simulated one.
+    /// Returns `(promoted, evictions)`.
+    pub(crate) fn complete_reload(
+        &self,
+        fp: Fingerprint,
+        bytes: u64,
+        items: u64,
+        heap: &Arc<SimHeap>,
+        cfg: &CacheConfig,
+    ) -> (bool, u64) {
+        // Charge before taking the cache lock (heap before cache, as in
+        // `complete`: the allocation may run a simulated GC, which
+        // takes the heap lock and never the cache's).
+        let cohort = heap.scoped_cohort("cache.entry");
+        let scratch = heap.cohort("cache.reload");
+        let mut alloc = heap.thread_alloc();
+        alloc.alloc_n(cohort, bytes, items.max(1));
+        alloc.scratch(scratch, bytes);
+        alloc.flush();
+        drop(alloc);
+
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.stats.reloads += 1;
+        inner.stats.reload_bytes += bytes;
+        let promoted = match inner.spill.take(&fp) {
+            Some(s) => {
+                inner.stats.bytes_spilled = inner.stats.bytes_spilled.saturating_sub(s.bytes);
+                inner.stats.spill_entries = inner.stats.spill_entries.saturating_sub(1);
+                if let Some(t) = &s.tenant {
+                    t.counters()
+                        .cache_spill_bytes
+                        .fetch_sub(s.bytes, Ordering::Relaxed);
+                    t.counters()
+                        .cache_live_bytes
+                        .fetch_add(s.bytes, Ordering::Relaxed);
+                }
+                inner.stats.bytes_cached += s.bytes;
+                inner.stats.entries += 1;
+                inner.entries.insert(
+                    fp,
+                    Entry {
+                        state: EntryState::Ready(s.value),
+                        bytes: s.bytes,
+                        items: s.items,
+                        recompute_secs: s.recompute_secs,
+                        last_used: tick,
+                        seen: s.seen,
+                        cohorts: vec![(Arc::clone(heap), cohort)],
+                        tenant: s.tenant,
+                    },
+                );
+                true
+            }
+            None => false,
+        };
+        let evicted = if promoted {
+            let feed = self.cost_feed.get().map(|s| s.as_ref());
+            evict_under_pressure(&mut inner, fp, heap, cfg, feed)
+        } else {
+            0
+        };
+        drop(inner);
+        if !promoted {
+            // Lost the promotion race (or the entry was cold-dropped in
+            // between): the duplicate charge has no owning entry.
+            heap.release_cohort(cohort);
+        }
+        (promoted, evicted)
     }
 
     /// Merge an appended delta into a ready entry: the reading cut found
@@ -443,6 +727,7 @@ impl MaterializationCache {
             Some(e) if matches!(e.state, EntryState::Ready(_)) && e.seen == Some(from) => {
                 e.state = EntryState::Ready(value);
                 e.bytes += bytes_delta;
+                e.items += items_delta;
                 e.seen = Some(new_seen);
                 e.last_used = tick;
                 e.cohorts.push((Arc::clone(heap), cohort));
@@ -462,7 +747,8 @@ impl MaterializationCache {
             inner.stats.bytes_cached += bytes_delta;
             inner.stats.delta_merges += 1;
             inner.stats.delta_items += items_delta;
-            evict_under_pressure(&mut inner, fp, heap, cfg)
+            let feed = self.cost_feed.get().map(|s| s.as_ref());
+            evict_under_pressure(&mut inner, fp, heap, cfg, feed)
         } else {
             0
         };
@@ -474,9 +760,12 @@ impl MaterializationCache {
         (merged, evicted)
     }
 
-    /// Drop the entry for `fp` if it is ready, releasing its heap cohort
-    /// — the [`Dataset::uncache`](crate::api::plan::Dataset::uncache)
-    /// path. In-flight entries are left to their claimant.
+    /// Drop the entry for `fp` from whichever tier holds it, releasing
+    /// any heap cohorts — the
+    /// [`Dataset::uncache`](crate::api::plan::Dataset::uncache) path.
+    /// In-flight entries are left to their claimant. A deliberate
+    /// removal is not a pressure drop: a later recompute does not count
+    /// as a rematerialization.
     pub fn remove(&self, fp: Fingerprint) -> bool {
         let mut inner = self.inner.lock().unwrap();
         if matches!(
@@ -488,14 +777,17 @@ impl MaterializationCache {
         ) {
             release_entry(&mut inner, fp);
             true
+        } else if inner.spill.contains(&fp) {
+            release_spilled(&mut inner, fp);
+            true
         } else {
             false
         }
     }
 
-    /// Evict every ready entry (in-flight claims are left to their
-    /// owners). Cohorts are released; statistics other than
-    /// `bytes_cached`/`entries` are preserved.
+    /// Evict every ready entry from both tiers (in-flight claims are
+    /// left to their owners). Cohorts are released; statistics other
+    /// than the residency gauges are preserved.
     pub fn clear(&self) {
         let mut inner = self.inner.lock().unwrap();
         let ready: Vec<Fingerprint> = inner
@@ -507,6 +799,11 @@ impl MaterializationCache {
         for fp in ready {
             release_entry(&mut inner, fp);
         }
+        let cold: Vec<Fingerprint> = inner.spill.entries.keys().copied().collect();
+        for fp in cold {
+            release_spilled(&mut inner, fp);
+        }
+        inner.dropped.clear();
     }
 }
 
@@ -531,19 +828,67 @@ fn release_entry(inner: &mut CacheInner, fp: Fingerprint) {
     }
 }
 
+/// Remove a cold-tier entry, crediting the owning tenant's spill bytes
+/// (and counting the departure as evicted bytes on its scoreboard).
+/// Returns the entry's item count for the caller's remat bookkeeping.
+fn release_spilled(inner: &mut CacheInner, fp: Fingerprint) -> Option<u64> {
+    let s = inner.spill.take(&fp)?;
+    inner.stats.bytes_spilled = inner.stats.bytes_spilled.saturating_sub(s.bytes);
+    inner.stats.spill_entries = inner.stats.spill_entries.saturating_sub(1);
+    if let Some(t) = &s.tenant {
+        t.counters()
+            .cache_spill_bytes
+            .fetch_sub(s.bytes, Ordering::Relaxed);
+        t.counters()
+            .cache_evicted_bytes
+            .fetch_add(s.bytes, Ordering::Relaxed);
+    }
+    Some(s.items)
+}
+
 /// Whether any of an entry's bytes are charged to `heap`.
 fn entry_on_heap(e: &Entry, heap: &Arc<SimHeap>) -> bool {
     e.cohorts.iter().any(|(h, _)| Arc::ptr_eq(h, heap))
 }
 
-/// Pick the next eviction victim: least-recently-used first,
-/// cheapest-to-recompute first among equals, never the protected (just
-/// inserted) entry, and — when `heap` is given — only entries charged to
-/// that heap (evicting another heap's entries would not relieve it).
+/// The heuristic inputs for one hot entry: the recompute cost is the
+/// larger of the cache's own materialization stopwatch and the cost
+/// feed's per-fingerprint observed compute time (when a sample exists).
+fn entry_cost(fp: Fingerprint, e: &Entry, tick: u64, feed: Option<&StatsStore>) -> EntryCost {
+    let mut recompute_secs = e.recompute_secs;
+    let mut stats_fed = false;
+    if let Some(store) = feed {
+        if let Some(pc) = store.prefix_cost(fp.0) {
+            if pc.samples > 0 {
+                // Conservative: protect the prefix by its worst observed
+                // materialization, not just the latest.
+                recompute_secs = recompute_secs.max(pc.peak_secs);
+                stats_fed = true;
+            }
+        }
+    }
+    EntryCost {
+        recompute_secs,
+        bytes: e.bytes,
+        age: tick.saturating_sub(e.last_used),
+        stats_fed,
+    }
+}
+
+/// Pick the next eviction victim: the lowest keep score — staleness-
+/// decayed recompute cost per resident byte — never the protected (just
+/// inserted) entry, never an in-flight claim, and — when `heap` is
+/// given — only entries charged to that heap (evicting another heap's
+/// entries would not relieve it). Among equal costs and sizes the decay
+/// term makes this least-recently-used first, and among equal ages the
+/// cheapest-to-recompute goes first: the pre-tiered ordering is the
+/// degenerate case. Ties break on the fingerprint for determinism.
 fn pick_victim(
     inner: &CacheInner,
     protect: Fingerprint,
     heap: Option<&Arc<SimHeap>>,
+    cfg: &CacheConfig,
+    feed: Option<&StatsStore>,
 ) -> Option<Fingerprint> {
     inner
         .entries
@@ -553,34 +898,129 @@ fn pick_victim(
                 && matches!(e.state, EntryState::Ready(_))
                 && heap.is_none_or(|h| entry_on_heap(e, h))
         })
-        .min_by(|(_, a), (_, b)| {
-            a.last_used
-                .cmp(&b.last_used)
-                .then(a.recompute_secs.total_cmp(&b.recompute_secs))
+        .map(|(fp, e)| {
+            let cost = entry_cost(*fp, e, inner.tick, feed);
+            (keep_score(&cost, cfg.decay_ticks), e.last_used, *fp)
         })
-        .map(|(fp, _)| *fp)
+        .min_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)))
+        .map(|(_, _, fp)| fp)
 }
 
-/// The eviction pass run after every insert. Two triggers:
+/// Move a hot victim to the cold tier: its simulated-heap cohorts are
+/// released (spilled bytes relieve the heap — that is the point of
+/// spilling), its bytes migrate from the owning tenant's live-cache
+/// counter to its spill counter, and the cold tier makes room by
+/// dropping its own lowest-value entries first (each cold drop is a
+/// `spill_evictions` and marks the fingerprint for remat accounting).
+fn spill_entry(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig) {
+    if !matches!(
+        inner.entries.get(&fp),
+        Some(Entry {
+            state: EntryState::Ready(_),
+            ..
+        })
+    ) {
+        return;
+    }
+    let e = inner.entries.remove(&fp).expect("presence checked above");
+    let EntryState::Ready(value) = e.state else {
+        unreachable!("readiness checked above")
+    };
+    inner.stats.bytes_cached = inner.stats.bytes_cached.saturating_sub(e.bytes);
+    inner.stats.entries = inner.stats.entries.saturating_sub(1);
+    if let Some(t) = &e.tenant {
+        t.counters()
+            .cache_live_bytes
+            .fetch_sub(e.bytes, Ordering::Relaxed);
+        t.counters()
+            .cache_spill_bytes
+            .fetch_add(e.bytes, Ordering::Relaxed);
+    }
+    for (heap, cohort) in &e.cohorts {
+        heap.release_cohort(*cohort);
+    }
+    // Make room in the cold tier. `decide` only spills entries that fit
+    // the tier's capacity, so this never needs to touch the incoming
+    // entry itself.
+    while inner.spill.bytes + e.bytes > cfg.spill_bytes {
+        match inner.spill.victim(cfg.decay_ticks) {
+            Some(victim) => {
+                if let Some(items) = release_spilled(inner, victim) {
+                    inner.dropped.insert(victim, items);
+                    inner.stats.spill_evictions += 1;
+                }
+            }
+            None => break,
+        }
+    }
+    inner.spill.insert(
+        fp,
+        SpillEntry {
+            value,
+            bytes: e.bytes,
+            items: e.items,
+            recompute_secs: e.recompute_secs,
+            last_used: e.last_used,
+            seen: e.seen,
+            tenant: e.tenant,
+        },
+    );
+    inner.stats.spills += 1;
+    inner.stats.decisions_spill += 1;
+    inner.stats.bytes_spilled += e.bytes;
+    inner.stats.spill_entries += 1;
+}
+
+/// Execute the tier heuristic on a chosen victim: spill it or drop it.
+/// Either way the entry leaves the hot tier — only its fate differs.
+fn evict_one(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig, feed: Option<&StatsStore>) {
+    let cost = match inner.entries.get(&fp) {
+        Some(e) => entry_cost(fp, e, inner.tick, feed),
+        None => return,
+    };
+    if cost.stats_fed {
+        inner.stats.stats_fed_decisions += 1;
+    }
+    match decide(&cost, cfg) {
+        TierDecision::Spill => spill_entry(inner, fp, cfg),
+        _ => {
+            if let Some(e) = inner.entries.get(&fp) {
+                inner.dropped.insert(fp, e.items);
+            }
+            release_entry(inner, fp);
+            inner.stats.decisions_drop += 1;
+        }
+    }
+}
+
+/// The eviction pass run after every insert (and reload promotion). Two
+/// triggers:
 ///
-/// * **capacity** — total cached bytes above [`CacheConfig::max_bytes`]:
+/// * **capacity** — hot-tier bytes above [`CacheConfig::max_bytes`]:
 ///   evict (any heap) until back under the cap;
 /// * **heap pressure** — the producing heap's occupancy at or above
 ///   `watermark × total_bytes`: release half the bytes cached *on that
 ///   heap*, giving its next minor/major collection real garbage to
 ///   reclaim (entries charged to other heaps are left alone — evicting
 ///   them would destroy warm state without relieving anything).
+///
+/// Each victim then goes through the keep/spill/drop heuristic
+/// ([`evict_one`]); survivors of a triggered pass count as keep
+/// decisions. Returns the number of hot-tier departures.
 fn evict_under_pressure(
     inner: &mut CacheInner,
     protect: Fingerprint,
     heap: &Arc<SimHeap>,
     cfg: &CacheConfig,
+    feed: Option<&StatsStore>,
 ) -> u64 {
     let mut evicted = 0u64;
+    let mut triggered = false;
     while inner.stats.bytes_cached > cfg.max_bytes {
-        match pick_victim(inner, protect, None) {
+        triggered = true;
+        match pick_victim(inner, protect, None, cfg, feed) {
             Some(fp) => {
-                release_entry(inner, fp);
+                evict_one(inner, fp, cfg, feed);
                 evicted += 1;
             }
             None => break,
@@ -589,6 +1029,7 @@ fn evict_under_pressure(
     let pressure = heap.enabled()
         && (heap.heap_used() as f64) >= cfg.watermark * heap.params().total_bytes as f64;
     if pressure {
+        triggered = true;
         let on_heap = |inner: &CacheInner| -> u64 {
             inner
                 .entries
@@ -599,14 +1040,23 @@ fn evict_under_pressure(
         };
         let target = on_heap(inner) / 2;
         while on_heap(inner) > target {
-            match pick_victim(inner, protect, Some(heap)) {
+            match pick_victim(inner, protect, Some(heap), cfg, feed) {
                 Some(fp) => {
-                    release_entry(inner, fp);
+                    evict_one(inner, fp, cfg, feed);
                     evicted += 1;
                 }
                 None => break,
             }
         }
+    }
+    if triggered {
+        // Survivors were examined and retained — explicit keep
+        // decisions, so the keep/spill/drop mix is observable.
+        inner.stats.decisions_keep += inner
+            .entries
+            .values()
+            .filter(|e| matches!(e.state, EntryState::Ready(_)))
+            .count() as u64;
     }
     inner.stats.evictions += evicted;
     evicted
@@ -831,5 +1281,325 @@ mod tests {
             }
             Begin::Claimed(_) => panic!("merged entry must stay ready"),
         }
+    }
+
+    /// A tight hot tier with a near-free reload: every eviction spills.
+    fn tiered(max_bytes: u64) -> CacheConfig {
+        CacheConfig {
+            max_bytes,
+            spill_bytes: 1 << 20,
+            reload_secs_per_byte: 1e-12,
+            ..CacheConfig::default()
+        }
+    }
+
+    #[test]
+    fn spill_reload_roundtrip_preserves_value_and_accounting() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let tight = tiered(100);
+        let (a, b) = (Fingerprint(1), Fingerprint(2));
+        let t = claim(&cache, a);
+        cache.complete(t, store(vec![vec![1, 2]]), 60, 2, 0.5, None, &heap, &tight, None);
+        let t = claim(&cache, b);
+        cache.complete(t, store(vec![vec![9]]), 60, 1, 0.5, None, &heap, &tight, None);
+        // A was evicted by capacity, but its recompute cost beat the
+        // near-zero reload cost: it spilled instead of dropping.
+        assert_eq!(cache.residency(a), Residency::Spilled);
+        assert_eq!(cache.residency(b), Residency::Hot);
+        let s = cache.stats();
+        assert_eq!((s.evictions, s.spills, s.decisions_spill), (1, 1, 1));
+        assert_eq!((s.bytes_spilled, s.spill_entries), (60, 1));
+        let audit = cache.audit();
+        assert_eq!(audit.hot_bytes, 60);
+        assert_eq!(audit.cohort_bytes, 60, "spilled bytes left the heap");
+        assert_eq!(audit.spill_bytes, 60);
+        assert_eq!(audit.double_resident, 0);
+        // Reading A serves it from the spill tier: digest-identical
+        // value, promoted hot, reload traffic charged.
+        match cache.begin(a) {
+            Begin::Spilled {
+                value,
+                seen,
+                bytes,
+                items,
+            } => {
+                assert_eq!(seen, None);
+                let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
+                assert_eq!(*shards, vec![vec![1, 2]]);
+                let (promoted, _) = cache.complete_reload(a, bytes, items, &heap, &tight);
+                assert!(promoted);
+            }
+            _ => panic!("entry must be served from the spill tier"),
+        }
+        assert_eq!(cache.residency(a), Residency::Hot);
+        let s = cache.stats();
+        assert_eq!((s.reloads, s.reload_bytes), (1, 60));
+        assert_eq!(s.hits, 0, "a reload is not a hot-tier hit");
+        // Promoting A overflowed the cap again: B spilled in turn.
+        assert_eq!(cache.residency(b), Residency::Spilled);
+        assert_eq!(cache.audit().double_resident, 0);
+    }
+
+    #[test]
+    fn cheap_entries_drop_and_remats_are_counted() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let dear_reload = CacheConfig {
+            max_bytes: 100,
+            spill_bytes: 1 << 20,
+            reload_secs_per_byte: 1e9, // reloading is absurdly dear: never spill
+            ..CacheConfig::default()
+        };
+        let (a, b) = (Fingerprint(1), Fingerprint(2));
+        let t = claim(&cache, a);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 1e-6, None, &heap, &dear_reload, None);
+        let t = claim(&cache, b);
+        cache.complete(t, store(vec![vec![2]]), 60, 1, 1e-6, None, &heap, &dear_reload, None);
+        assert_eq!(cache.residency(a), Residency::Absent, "dropped, not spilled");
+        let s = cache.stats();
+        assert_eq!((s.evictions, s.spills, s.decisions_drop), (1, 0, 1));
+        // Recomputing A goes through the claim path and counts as a
+        // rematerialization that pressure caused.
+        let t = claim(&cache, a);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 1e-6, None, &heap, &dear_reload, None);
+        let s = cache.stats();
+        assert_eq!((s.rematerializations, s.remat_items), (1, 1));
+    }
+
+    #[test]
+    fn spilled_entries_never_serve_cross_type_readers() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let tight = tiered(100);
+        let (a, b) = (Fingerprint(1), Fingerprint(2));
+        let t = claim(&cache, a);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 0.5, None, &heap, &tight, None);
+        let t = claim(&cache, b);
+        cache.complete(t, store(vec![vec![2]]), 60, 1, 0.5, None, &heap, &tight, None);
+        assert_eq!(cache.residency(a), Residency::Spilled);
+        // A reader expecting a different element type must not be
+        // served the spilled entry: the downcast fails, the reader
+        // records the collision and recomputes (`CacheStage`
+        // behaviour), and the entry stays where it was.
+        match cache.begin(a) {
+            Begin::Spilled { value, .. } => {
+                assert!(value.downcast::<Vec<Vec<String>>>().is_err());
+                cache.record_type_conflict();
+            }
+            _ => panic!("entry must be found in the spill tier"),
+        }
+        assert_eq!(cache.residency(a), Residency::Spilled, "a conflict must not promote");
+        let s = cache.stats();
+        assert_eq!((s.type_conflicts, s.reloads), (1, 0));
+    }
+
+    #[test]
+    fn eviction_never_victimizes_an_in_flight_claim() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let tight = tiered(50);
+        let claimed = Fingerprint(7);
+        let ticket = claim(&cache, claimed);
+        // Inserting over the cap triggers a pass while the claim is
+        // pending; only ready entries are candidates.
+        let t = claim(&cache, Fingerprint(8));
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 0.5, None, &heap, &tight, None);
+        assert_eq!(cache.residency(claimed), Residency::InFlight);
+        cache.complete(ticket, store(vec![vec![2]]), 60, 1, 0.5, None, &heap, &tight, None);
+        assert!(cache.contains(claimed));
+    }
+
+    #[test]
+    fn cold_tier_overflow_drops_lowest_value_spills() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let tight = CacheConfig {
+            max_bytes: 100,
+            spill_bytes: 100, // holds one 60 B spill, not two
+            reload_secs_per_byte: 1e-12,
+            ..CacheConfig::default()
+        };
+        for i in 0..3u64 {
+            let t = claim(&cache, Fingerprint(i));
+            cache.complete(t, store(vec![vec![i as i64]]), 60, 1, 0.5, None, &heap, &tight, None);
+        }
+        let s = cache.stats();
+        assert_eq!(s.spills, 2, "two hot victims spilled");
+        assert_eq!(s.spill_evictions, 1, "the older spill was dropped for the newer");
+        assert_eq!((s.bytes_spilled, s.spill_entries), (60, 1));
+        assert_eq!(cache.residency(Fingerprint(0)), Residency::Absent);
+        assert_eq!(cache.residency(Fingerprint(1)), Residency::Spilled);
+    }
+
+    #[test]
+    fn cost_feed_turns_a_drop_into_a_spill() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let stats = Arc::new(StatsStore::new());
+        // The store observed this prefix taking real time to compute,
+        // even though the cache's own stopwatch saw almost nothing.
+        stats.record_prefix_cost(1, 2.0, 60);
+        cache.attach_cost_feed(Arc::clone(&stats));
+        let cfg = CacheConfig {
+            max_bytes: 100,
+            spill_bytes: 1 << 20,
+            reload_secs_per_byte: 1e-3, // reload costs 0.06 s for 60 B
+            ..CacheConfig::default()
+        };
+        let t = claim(&cache, Fingerprint(1));
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 1e-9, None, &heap, &cfg, None);
+        let t = claim(&cache, Fingerprint(2));
+        cache.complete(t, store(vec![vec![2]]), 60, 1, 1e-9, None, &heap, &cfg, None);
+        let s = cache.stats();
+        assert!(s.stats_fed_decisions >= 1, "{s:?}");
+        // On the stopwatch alone (1 ns ≪ 60 ms reload) the victim would
+        // have dropped; the observed 2 s recompute made it spill.
+        assert_eq!(cache.residency(Fingerprint(1)), Residency::Spilled);
+        assert!(s.decisions_keep >= 1, "the survivor counts as a keep: {s:?}");
+    }
+
+    /// Satellite: seeded random insert/read/pressure sequences uphold
+    /// the tier invariants — no double residency, counters match the
+    /// ground truth (including live cohort bytes), in-flight claims
+    /// survive every pass, and served values (hot, spilled, or
+    /// reloaded) are byte-identical to what was stored.
+    #[test]
+    fn tier_invariants_hold_under_random_op_sequences() {
+        use crate::testkit::prop::{assert_prop_shrink, shrink_vec, usize_in, vec_of, Gen};
+
+        const KEYS: u64 = 6;
+        #[derive(Clone, Debug)]
+        enum Op {
+            Insert(u64),
+            Read(u64),
+            Remove(u64),
+            Claim(u64),
+            Abort(u64),
+        }
+
+        fn payload(key: u64) -> Vec<Vec<i64>> {
+            vec![vec![key as i64, key as i64 + 1], vec![-(key as i64)]]
+        }
+        fn bytes_of(key: u64) -> u64 {
+            64 + key * 8
+        }
+        // Even keys are trivially cheap (pressure drops them), odd keys
+        // are expensive (pressure spills them) — both heuristic arms
+        // run in every long sequence.
+        fn secs_of(key: u64) -> f64 {
+            if key % 2 == 0 {
+                1e-12
+            } else {
+                0.5
+            }
+        }
+
+        let ops = vec_of(
+            Gen::new(|rng, _| {
+                let key = rng.below(KEYS);
+                match rng.below(10) {
+                    0 => Op::Remove(key),
+                    1 => Op::Claim(key),
+                    2 => Op::Abort(key),
+                    3 | 4 | 5 => Op::Insert(key),
+                    _ => Op::Read(key),
+                }
+            }),
+            40,
+        );
+
+        assert_prop_shrink("cache tier invariants", &ops, |v| shrink_vec(v), |ops| {
+            let cfg = CacheConfig {
+                max_bytes: 150,
+                spill_bytes: 220,
+                reload_secs_per_byte: 1e-6,
+                ..CacheConfig::default()
+            };
+            let heap = SimHeap::new(HeapParams::no_injection());
+            let cache = MaterializationCache::new();
+            let mut claims: HashMap<u64, Ticket<'_>> = HashMap::new();
+            let served = |value: &Stored, key: u64| -> Result<(), String> {
+                let shards = Arc::clone(value)
+                    .downcast::<Vec<Vec<i64>>>()
+                    .map_err(|_| format!("key {key}: stored type mismatch"))?;
+                if *shards != payload(key) {
+                    return Err(format!("key {key}: served value diverged: {shards:?}"));
+                }
+                Ok(())
+            };
+            for op in ops {
+                match op {
+                    Op::Insert(k) | Op::Read(k) if claims.contains_key(k) => {
+                        // `begin` on a fingerprint we hold in-flight
+                        // would deadlock; complete the claim instead.
+                        let ticket = claims.remove(k).unwrap();
+                        let v: Stored = Arc::new(payload(*k));
+                        cache.complete(
+                            ticket, v, bytes_of(*k), 3, secs_of(*k), None, &heap, &cfg, None,
+                        );
+                    }
+                    Op::Insert(k) | Op::Read(k) => match cache.begin(Fingerprint(*k)) {
+                        Begin::Ready { value, waited, .. } => {
+                            served(&value, *k)?;
+                            cache.record_read(waited);
+                        }
+                        Begin::Spilled {
+                            value,
+                            bytes,
+                            items,
+                            ..
+                        } => {
+                            served(&value, *k)?;
+                            cache.complete_reload(Fingerprint(*k), bytes, items, &heap, &cfg);
+                        }
+                        Begin::Claimed(ticket) => {
+                            let v: Stored = Arc::new(payload(*k));
+                            cache.complete(
+                                ticket, v, bytes_of(*k), 3, secs_of(*k), None, &heap, &cfg, None,
+                            );
+                        }
+                    },
+                    Op::Claim(k) => {
+                        if !claims.contains_key(k) {
+                            if let Begin::Claimed(t) = cache.begin(Fingerprint(*k)) {
+                                claims.insert(*k, t);
+                            }
+                        }
+                    }
+                    Op::Abort(k) => {
+                        claims.remove(k);
+                    }
+                    Op::Remove(k) => {
+                        if !claims.contains_key(k) {
+                            cache.remove(Fingerprint(*k));
+                        }
+                    }
+                }
+                // Invariants after every op.
+                let a = cache.audit();
+                let s = cache.stats();
+                if a.double_resident != 0 {
+                    return Err(format!("double residency: {a:?}"));
+                }
+                if a.hot_bytes != s.bytes_cached || a.hot_entries != s.entries {
+                    return Err(format!("hot accounting drifted: {a:?} vs {s:?}"));
+                }
+                if a.spill_bytes != s.bytes_spilled || a.spill_entries != s.spill_entries {
+                    return Err(format!("spill accounting drifted: {a:?} vs {s:?}"));
+                }
+                if a.cohort_bytes != a.hot_bytes {
+                    return Err(format!("cohort bytes diverged from hot bytes: {a:?}"));
+                }
+                if a.in_flight != claims.len() {
+                    return Err(format!(
+                        "{} claims held but {} in flight — a pass victimized a claim",
+                        claims.len(),
+                        a.in_flight
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -1,0 +1,285 @@
+//! Two-tier residency and the DTR-style keep/spill/drop heuristic.
+//!
+//! The paper's headline claim is that semantic information lets the
+//! framework trade recomputation against memory pressure automatically
+//! (§4: the combining optimizer's GC-pressure cut is where the 2.0×
+//! comes from). The hot tier is the original PR 5 store — shard outputs
+//! charged to `cache.entry` SimHeap cohorts. This module adds the cold
+//! tier and the decision model: on pressure, each victim's *staleness-
+//! decayed observed recompute cost* is weighed against its *reload
+//! cost* (`bytes × reload_secs_per_byte`), echoing the
+//! evict/rematerialize decision Dynamic Tensor Rematerialization makes
+//! across a two-level memory. Expensive-to-recompute entries spill —
+//! their heap cohorts are released, so spilled bytes genuinely relieve
+//! simulated GC pressure — while cheap or stale entries drop.
+//!
+//! Recompute costs come from two sources, and the larger wins: the wall
+//! time the cache itself measured when the entry materialized, and the
+//! per-fingerprint observed compute time exported by the session's
+//! [`StatsStore`](crate::stats::StatsStore) (the PR 8 feedback store),
+//! so repeated materializations sharpen the estimate.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::Arc;
+
+use crate::api::config::CacheConfig;
+use crate::cache::fingerprint::Fingerprint;
+use crate::cache::Stored;
+use crate::govern::TenantHandle;
+
+/// Where a fingerprint currently lives in the two-tier store
+/// (surfaced by [`MaterializationCache::residency`](crate::cache::MaterializationCache::residency)
+/// and in `explain()` cut-point lines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// Ready in the hot tier: a read is a hit, served at zero cost.
+    Hot,
+    /// A claim holder is materializing it right now; readers wait.
+    InFlight,
+    /// Resident in the cold spill tier: a read reloads it (simulated
+    /// `bytes × reload_secs_per_byte` heap traffic) instead of
+    /// recomputing the prefix.
+    Spilled,
+    /// Not cached anywhere: a read rematerializes through the claim
+    /// path.
+    Absent,
+}
+
+impl Residency {
+    pub fn label(self) -> &'static str {
+        match self {
+            Residency::Hot => "hot",
+            Residency::InFlight => "in-flight",
+            Residency::Spilled => "spilled",
+            Residency::Absent => "absent",
+        }
+    }
+}
+
+impl fmt::Display for Residency {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// What the heuristic chose for one entry under pressure. `Keep` never
+/// applies to a chosen victim — the victim picker only offers entries
+/// the pass must shrink past — but survivors of a triggered pass are
+/// counted as explicit keep decisions in `CacheStats`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TierDecision {
+    Keep,
+    Spill,
+    Drop,
+}
+
+/// The inputs to one keep/spill/drop decision.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct EntryCost {
+    /// Best recompute-cost estimate, seconds: the max of the wall time
+    /// measured at materialization and the `StatsStore` per-prefix
+    /// observed compute time (when a sample exists).
+    pub recompute_secs: f64,
+    /// Resident bytes (hot) or reload payload bytes (cold).
+    pub bytes: u64,
+    /// LRU ticks since the entry was last read.
+    pub age: u64,
+    /// Whether `recompute_secs` was informed by a `StatsStore` sample
+    /// (vs. only the cache's own materialization stopwatch).
+    pub stats_fed: bool,
+}
+
+/// Staleness multiplier: `0.5^(age / half_life)`. `half_life == 0`
+/// disables decay (multiplier 1).
+pub(crate) fn decay(age: u64, half_life: u64) -> f64 {
+    if half_life == 0 {
+        return 1.0;
+    }
+    0.5f64.powf(age as f64 / half_life as f64)
+}
+
+/// Value-per-byte of keeping an entry resident: decayed recompute cost
+/// divided by the bytes it occupies. The victim picker evicts the
+/// lowest score first — among equal costs, older entries score lower
+/// (LRU order), and among equal ages, cheaper-to-recompute entries
+/// score lower, preserving the pre-tiered ordering as the degenerate
+/// case.
+pub(crate) fn keep_score(cost: &EntryCost, half_life: u64) -> f64 {
+    decay(cost.age, half_life) * cost.recompute_secs / cost.bytes.max(1) as f64
+}
+
+/// Decide a chosen victim's fate: spill when the decayed recompute cost
+/// exceeds the simulated reload cost and the entry fits the cold tier,
+/// otherwise drop. With `spill_bytes == 0` every eviction is a drop —
+/// the pre-tiered LRU-drop baseline.
+pub(crate) fn decide(cost: &EntryCost, cfg: &CacheConfig) -> TierDecision {
+    if cfg.spill_bytes == 0 || cost.bytes > cfg.spill_bytes {
+        return TierDecision::Drop;
+    }
+    let reload_secs = cost.bytes as f64 * cfg.reload_secs_per_byte;
+    if decay(cost.age, cfg.decay_ticks) * cost.recompute_secs > reload_secs {
+        TierDecision::Spill
+    } else {
+        TierDecision::Drop
+    }
+}
+
+/// One cold-tier resident: the value survives (simulating a serialized
+/// copy on spill storage) but its heap cohorts were released when it
+/// left the hot tier, so it costs the simulated heap nothing until a
+/// reload re-charges it.
+pub(crate) struct SpillEntry {
+    pub value: Stored,
+    pub bytes: u64,
+    pub items: u64,
+    pub recompute_secs: f64,
+    pub last_used: u64,
+    pub seen: Option<u64>,
+    pub tenant: Option<Arc<TenantHandle>>,
+}
+
+/// The cold tier. Lives inside `CacheInner` under the cache's single
+/// mutex — no new lock ordering to reason about.
+#[derive(Default)]
+pub(crate) struct SpillStore {
+    pub entries: HashMap<Fingerprint, SpillEntry>,
+    /// Σ entry bytes — maintained by insert/take, checked by `audit()`.
+    pub bytes: u64,
+}
+
+impl SpillStore {
+    pub fn contains(&self, fp: &Fingerprint) -> bool {
+        self.entries.contains_key(fp)
+    }
+
+    pub fn get_mut(&mut self, fp: &Fingerprint) -> Option<&mut SpillEntry> {
+        self.entries.get_mut(fp)
+    }
+
+    pub fn insert(&mut self, fp: Fingerprint, entry: SpillEntry) {
+        self.bytes += entry.bytes;
+        if let Some(old) = self.entries.insert(fp, entry) {
+            self.bytes = self.bytes.saturating_sub(old.bytes);
+        }
+    }
+
+    pub fn take(&mut self, fp: &Fingerprint) -> Option<SpillEntry> {
+        let e = self.entries.remove(fp)?;
+        self.bytes = self.bytes.saturating_sub(e.bytes);
+        Some(e)
+    }
+
+    /// The cold victim to drop when the tier itself is over capacity:
+    /// lowest keep-score first, deterministic fingerprint tie-break.
+    pub fn victim(&self, half_life: u64) -> Option<Fingerprint> {
+        self.entries
+            .iter()
+            .map(|(fp, e)| {
+                let cost = EntryCost {
+                    recompute_secs: e.recompute_secs,
+                    bytes: e.bytes,
+                    age: 0, // ages relative to each other via last_used below
+                    stats_fed: false,
+                };
+                (keep_score(&cost, half_life), e.last_used, *fp)
+            })
+            .min_by(|a, b| {
+                a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2))
+            })
+            .map(|(_, _, fp)| fp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> CacheConfig {
+        CacheConfig {
+            spill_bytes: 1 << 20,
+            reload_secs_per_byte: 1e-6, // 1 s per MiB-ish: easy to straddle
+            decay_ticks: 4,
+            ..CacheConfig::default()
+        }
+    }
+
+    fn cost(secs: f64, bytes: u64, age: u64) -> EntryCost {
+        EntryCost { recompute_secs: secs, bytes, age, stats_fed: false }
+    }
+
+    #[test]
+    fn decay_halves_per_half_life_and_zero_disables() {
+        assert_eq!(decay(0, 4), 1.0);
+        assert!((decay(4, 4) - 0.5).abs() < 1e-12);
+        assert!((decay(8, 4) - 0.25).abs() < 1e-12);
+        assert_eq!(decay(1_000_000, 0), 1.0);
+    }
+
+    #[test]
+    fn expensive_recompute_spills_cheap_drops() {
+        // 1000 B at 1 µs/B → reload costs 1 ms.
+        assert_eq!(decide(&cost(1.0, 1000, 0), &cfg()), TierDecision::Spill);
+        assert_eq!(decide(&cost(1e-6, 1000, 0), &cfg()), TierDecision::Drop);
+    }
+
+    #[test]
+    fn staleness_decay_turns_spill_into_drop() {
+        // Fresh: 4 ms recompute > 1 ms reload → spill. After 2 half
+        // lives the decayed cost (1 ms) no longer beats the reload.
+        let c = cfg();
+        assert_eq!(decide(&cost(4e-3, 1000, 0), &c), TierDecision::Spill);
+        assert_eq!(decide(&cost(4e-3, 1000, 8), &c), TierDecision::Drop);
+    }
+
+    #[test]
+    fn disabled_or_oversized_spill_always_drops() {
+        let mut c = cfg();
+        c.spill_bytes = 0;
+        assert_eq!(decide(&cost(100.0, 8, 0), &c), TierDecision::Drop);
+        let mut c = cfg();
+        c.spill_bytes = 100;
+        assert_eq!(decide(&cost(100.0, 101, 0), &c), TierDecision::Drop);
+    }
+
+    #[test]
+    fn keep_score_orders_lru_first_among_equals_then_cheapest() {
+        // Equal cost and size: the older entry scores lower (goes
+        // first) — the pre-tiered LRU ordering.
+        let newer = keep_score(&cost(0.5, 60, 0), 32);
+        let older = keep_score(&cost(0.5, 60, 5), 32);
+        assert!(older < newer);
+        // Equal age and size: cheaper-to-recompute scores lower.
+        let cheap = keep_score(&cost(0.1, 60, 0), 32);
+        let dear = keep_score(&cost(0.9, 60, 0), 32);
+        assert!(cheap < dear);
+        // Bigger entries score lower per byte at equal cost.
+        assert!(keep_score(&cost(0.5, 600, 0), 32) < keep_score(&cost(0.5, 60, 0), 32));
+    }
+
+    #[test]
+    fn spill_store_accounts_bytes_and_picks_cheapest_victim() {
+        let mut s = SpillStore::default();
+        let entry = |bytes, secs, used| SpillEntry {
+            value: Arc::new(Vec::<Vec<i64>>::new()) as Stored,
+            bytes,
+            items: 1,
+            recompute_secs: secs,
+            last_used: used,
+            seen: None,
+            tenant: None,
+        };
+        s.insert(Fingerprint(1), entry(100, 0.5, 1));
+        s.insert(Fingerprint(2), entry(100, 0.1, 2));
+        s.insert(Fingerprint(3), entry(100, 0.5, 3));
+        assert_eq!(s.bytes, 300);
+        // Cheapest recompute first.
+        assert_eq!(s.victim(32), Some(Fingerprint(2)));
+        assert!(s.take(&Fingerprint(2)).is_some());
+        assert_eq!(s.bytes, 200);
+        // Equal scores: least-recently-used breaks the tie.
+        assert_eq!(s.victim(32), Some(Fingerprint(1)));
+        assert!(s.take(&Fingerprint(9)).is_none());
+        assert_eq!(s.bytes, 200);
+    }
+}

@@ -107,8 +107,11 @@ pub struct FlowMetrics {
     /// Materialization-cache activity involved in resolving this stage's
     /// *input* (set by the plan executor on the stage downstream of a
     /// [`Dataset::cache`](crate::api::plan::Dataset::cache) cut point:
-    /// a hit means the stage's input was read back instead of recomputed).
-    /// `None` for stages with no cut point upstream.
+    /// a hit means the stage's input was read back instead of recomputed;
+    /// a reload means it was promoted back from the cold spill tier at
+    /// simulated `reload_bytes` of heap traffic — see
+    /// [`crate::cache::tier`]). `None` for stages with no cut point
+    /// upstream.
     pub cache: Option<CacheActivity>,
     /// Key-frequency sketch of this stage's emit stream (Boyer–Moore
     /// majority candidate + surplus), collected when the stage observes

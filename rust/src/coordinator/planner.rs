@@ -387,11 +387,18 @@ pub(crate) fn describe_adaptive(
             .unwrap_or("?");
         let fp = plan.prefix_fps.get(i).copied().unwrap_or(0);
         if s.kind == StageKind::Cache {
+            // Live cuts also show where the prefix currently resides in
+            // the two-tier store (hot / in-flight / spilled / absent).
+            let status = if root_identified {
+                format!(", {}", registry.residency(Fingerprint(fp)))
+            } else {
+                " (inactive)".to_string()
+            };
             let _ = writeln!(
                 out,
                 "  [{i}] cache            — cut point, prefix fp {}{}",
                 Fingerprint(fp),
-                if root_identified { "" } else { " (inactive)" },
+                status,
             );
         } else {
             let _ = writeln!(

@@ -219,6 +219,10 @@ pub struct TenantCounters {
     /// Total cache bytes released from this tenant's entries (evictions,
     /// explicit removals, session clears).
     pub cache_evicted_bytes: AtomicU64,
+    /// Bytes this tenant currently holds in the cache's cold spill tier
+    /// (spills add, reloads and cold-tier drops subtract). Counts
+    /// against `cache_budget` together with `cache_live_bytes`.
+    pub cache_spill_bytes: AtomicU64,
     /// Producer pushes that blocked on this tenant's bounded streams.
     pub stream_pushes_blocked: AtomicU64,
     /// Producer `try_push` calls shed by this tenant's bounded streams.
@@ -559,6 +563,7 @@ pub struct TenantSnapshot {
     pub cache_denials: u64,
     pub cache_live_bytes: u64,
     pub cache_evicted_bytes: u64,
+    pub cache_spill_bytes: u64,
     pub stream_pushes_blocked: u64,
     pub stream_pushes_shed: u64,
     pub ingest_deferred: u64,
@@ -594,6 +599,7 @@ impl TenantSnapshot {
             cache_denials: load(&t.counters.cache_denials),
             cache_live_bytes: load(&t.counters.cache_live_bytes),
             cache_evicted_bytes: load(&t.counters.cache_evicted_bytes),
+            cache_spill_bytes: load(&t.counters.cache_spill_bytes),
             stream_pushes_blocked: load(&t.counters.stream_pushes_blocked),
             stream_pushes_shed: load(&t.counters.stream_pushes_shed),
             ingest_deferred: load(&t.counters.ingest_deferred),
@@ -693,6 +699,7 @@ impl Scoreboard {
                     .set("cache_denials", t.cache_denials)
                     .set("cache_live_bytes", t.cache_live_bytes)
                     .set("cache_evicted_bytes", t.cache_evicted_bytes)
+                    .set("cache_spill_bytes", t.cache_spill_bytes)
                     .set("stream_pushes_blocked", t.stream_pushes_blocked)
                     .set("stream_pushes_shed", t.stream_pushes_shed)
                     .set("ingest_deferred", t.ingest_deferred)

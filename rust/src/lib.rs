@@ -83,13 +83,13 @@ pub use api::{
     Dataset, Emitter, InputSource, JobBuilder, JobConfig, JobOutput, KeyValue, MapReduce,
     Mapper, Pipeline, PlanHandle, PlanOutput, PlanReport, Reducer, Runtime,
 };
-pub use cache::{CacheActivity, CacheStats, MaterializationCache};
+pub use cache::{CacheActivity, CacheStats, MaterializationCache, Residency, TierDecision};
 pub use govern::{
     Admission, AdmissionError, GovernReport, Governor, OverloadPolicy, Priority, Scoreboard,
     TenantId, TenantSnapshot, TenantSpec,
 };
 pub use optimizer::agent::OptimizerAgent;
-pub use stats::{AdaptationReport, AdaptiveDecision, StatsStore};
+pub use stats::{AdaptationReport, AdaptiveDecision, PrefixCost, StatsStore};
 pub use stream::{
     AppendLog, KeyedStream, StandingQuery, StreamDataset, StreamHandle, StreamOutput,
     StreamSource, WindowResult, WindowSpec, Windowed, WindowedStream,

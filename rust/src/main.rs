@@ -163,8 +163,8 @@ fn main() -> ExitCode {
             );
             match &m.cache {
                 Some(c) => println!(
-                    "  cache       : {} hit(s), {} miss(es), {} shared in-flight, {} evicted, {} B inserted",
-                    c.hits, c.misses, c.shared_in_flight, c.evictions, c.bytes_inserted
+                    "  cache       : {} hit(s), {} miss(es), {} shared in-flight, {} evicted, {} reload(s) ({} B), {} B inserted",
+                    c.hits, c.misses, c.shared_in_flight, c.evictions, c.reloads, c.reload_bytes, c.bytes_inserted
                 ),
                 None => println!(
                     "  cache       : off (figure runs measure uncached execution; \

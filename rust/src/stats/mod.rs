@@ -452,6 +452,29 @@ pub fn filter_order(stats: &[Option<FilterStats>]) -> Option<Vec<usize>> {
 struct StoreInner {
     flows: HashMap<u64, FlowStats>,
     filters: HashMap<u64, FilterStats>,
+    prefix_costs: HashMap<u64, PrefixCost>,
+}
+
+/// Observed materialization cost of one plan prefix — the cost-model
+/// export the materialization cache's keep/spill/drop heuristic
+/// consults ([`MaterializationCache::attach_cost_feed`]). Recorded by
+/// cache cut points whenever a claimed prefix actually computes, so a
+/// fingerprint that materialized even once has a measured recompute
+/// cost from then on — sharper than the single stopwatch sample an
+/// individual cache entry carries.
+///
+/// [`MaterializationCache::attach_cost_feed`]: crate::cache::MaterializationCache::attach_cost_feed
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixCost {
+    /// Materializations observed.
+    pub samples: u64,
+    /// Most recent observed wall seconds to compute the prefix.
+    pub compute_secs: f64,
+    /// Largest observed wall seconds across all samples — the
+    /// conservative estimate the eviction heuristic uses.
+    pub peak_secs: f64,
+    /// Most recent observed output bytes (cache payload).
+    pub output_bytes: u64,
 }
 
 /// The per-session optimizer feedback store, owned by
@@ -498,6 +521,29 @@ impl StatsStore {
         self.records.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one observed prefix materialization: the wall seconds a
+    /// cache cut point spent computing its prefix and the bytes it
+    /// produced.
+    pub fn record_prefix_cost(&self, fp: u64, compute_secs: f64, output_bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let entry = inner.prefix_costs.entry(fp).or_default();
+        entry.samples += 1;
+        entry.compute_secs = compute_secs;
+        entry.peak_secs = entry.peak_secs.max(compute_secs);
+        entry.output_bytes = output_bytes;
+        drop(inner);
+        self.records.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Look up a prefix's observed materialization cost. Unlike
+    /// [`StatsStore::flow`]/[`StatsStore::filter`], a hit does *not*
+    /// count as a consult: this is read internally by every eviction
+    /// pass, and counting those would drown the "second lowering
+    /// consulted the store" observable the adaptive tests pin.
+    pub fn prefix_cost(&self, fp: u64) -> Option<PrefixCost> {
+        self.inner.lock().unwrap().prefix_costs.get(&fp).copied()
+    }
+
     /// Look up a prefix's flow statistics (a hit counts as a consult).
     pub fn flow(&self, fp: u64) -> Option<FlowStats> {
         let hit = self.inner.lock().unwrap().flows.get(&fp).copied();
@@ -531,7 +577,7 @@ impl StatsStore {
     /// Distinct prefixes with recorded statistics.
     pub fn len(&self) -> usize {
         let inner = self.inner.lock().unwrap();
-        inner.flows.len() + inner.filters.len()
+        inner.flows.len() + inner.filters.len() + inner.prefix_costs.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -543,6 +589,7 @@ impl StatsStore {
         let mut inner = self.inner.lock().unwrap();
         inner.flows.clear();
         inner.filters.clear();
+        inner.prefix_costs.clear();
         drop(inner);
         self.records.store(0, Ordering::Relaxed);
         self.consult_hits.store(0, Ordering::Relaxed);
@@ -582,6 +629,27 @@ mod tests {
         s.clear();
         assert!(s.is_empty());
         assert_eq!(s.consults(), 0);
+    }
+
+    #[test]
+    fn prefix_costs_track_peak_without_counting_consults() {
+        let s = StatsStore::new();
+        assert!(s.prefix_cost(9).is_none());
+        s.record_prefix_cost(9, 0.5, 1000);
+        s.record_prefix_cost(9, 0.1, 800);
+        let pc = s.prefix_cost(9).unwrap();
+        assert_eq!(pc.samples, 2);
+        assert_eq!(pc.compute_secs, 0.1, "latest sample");
+        assert_eq!(pc.peak_secs, 0.5, "worst observed materialization");
+        assert_eq!(pc.output_bytes, 800);
+        assert_eq!(s.records(), 2);
+        assert_eq!(s.len(), 1);
+        // Eviction passes read costs constantly; they must not drown
+        // the lowering-consult observable.
+        assert_eq!(s.consults(), 0);
+        s.clear();
+        assert!(s.prefix_cost(9).is_none());
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -144,13 +144,15 @@ fn pca_power_cached_matches_uncached() {
 
 #[test]
 fn eviction_forces_recompute_with_identical_results() {
-    // A 1-byte capacity cap: every insert evicts the other prefix's
-    // entry, so alternating two plans keeps the eviction path hot and
-    // every round recomputes from scratch.
+    // A 1-byte capacity cap with the spill tier pinned off (the
+    // LRU-drop baseline): every insert evicts the other prefix's entry,
+    // so alternating two plans keeps the eviction path hot and every
+    // round recomputes from scratch.
     let rt = Runtime::with_config(
         JobConfig::fast()
             .with_threads(threads())
-            .with_cache_max_bytes(1),
+            .with_cache_max_bytes(1)
+            .with_cache_spill_bytes(0),
     );
     let data_a: Vec<i64> = (0..300).collect();
     let data_b: Vec<i64> = (0..300).map(|x| x * 3).collect();
@@ -188,6 +190,64 @@ fn eviction_forces_recompute_with_identical_results() {
     assert_eq!(s.hits, 0, "a 1-byte cap must never retain a reusable entry");
     assert_eq!(s.misses, 6, "every round recomputes both prefixes");
     assert!(s.evictions >= 5, "alternating inserts must evict: {s:?}");
+    assert_eq!(s.spills, 0, "spill tier off: every eviction is a drop");
+    assert_eq!(s.reloads, 0, "nothing spilled, nothing to reload");
+}
+
+#[test]
+fn spill_tier_turns_evictions_into_reloads_with_identical_results() {
+    // Same 1-byte cap, but with the spill tier on and the reload cost
+    // pinned to zero: every eviction spills instead of dropping, so
+    // after the first round each prefix reloads from the cold tier —
+    // the rounds stay digest-identical while recomputation disappears.
+    let rt = Runtime::with_config(
+        JobConfig::fast()
+            .with_threads(threads())
+            .with_cache_max_bytes(1)
+            .with_cache_spill_bytes(256 << 20)
+            .with_cache_reload_cost(0.0),
+    );
+    let data_a: Vec<i64> = (0..300).collect();
+    let data_b: Vec<i64> = (0..300).map(|x| x * 3).collect();
+    let mapper: Arc<dyn Mapper<i64, i64, i64>> =
+        Arc::new(|x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(*x % 7, 1));
+    let reducer: Arc<dyn Reducer<i64, i64>> =
+        Arc::new(RirReducer::<i64, i64>::new(canon::sum_i64("cachetest.spill7")));
+
+    let run = |data: &Vec<i64>| -> Vec<(i64, i64)> {
+        rt.dataset(data)
+            .map_reduce_shared(Arc::clone(&mapper), Arc::clone(&reducer))
+            .cache()
+            .map_reduce(
+                |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
+                    em.emit(kv.key, kv.value)
+                },
+                RirReducer::<i64, i64>::new(canon::sum_i64("cachetest.spillecho")),
+            )
+            .collect_sorted()
+            .into_tuples()
+    };
+    let expect = |data: &Vec<i64>| -> Vec<(i64, i64)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for x in data {
+            *counts.entry(x % 7).or_insert(0i64) += 1;
+        }
+        counts.into_iter().collect()
+    };
+
+    for round in 0..3 {
+        assert_eq!(run(&data_a), expect(&data_a), "round {round}, dataset a");
+        assert_eq!(run(&data_b), expect(&data_b), "round {round}, dataset b");
+    }
+    let s = rt.cache().stats();
+    assert_eq!(s.misses, 2, "only the first round materializes: {s:?}");
+    assert_eq!(s.reloads, 4, "later rounds read back from the spill tier: {s:?}");
+    assert!(s.spills >= 2, "both prefixes must have spilled: {s:?}");
+    assert!(s.reload_bytes > 0, "reloads simulate nonzero traffic: {s:?}");
+    assert_eq!(
+        s.rematerializations, 0,
+        "with a free reload nothing is ever recomputed: {s:?}"
+    );
 }
 
 #[test]
