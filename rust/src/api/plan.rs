@@ -99,6 +99,7 @@ use crate::stats::{
     self, AdaptationReport, AdaptiveDecision, FilterProbe, FilterStats, FlowObservation,
     StageAdapt,
 };
+use crate::trace::SpanKind;
 use crate::util::hash::fxhash;
 use crate::util::timer::Stopwatch;
 
@@ -663,13 +664,22 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
     {
         let govern = match &self.config.govern {
             Some(tenant) => {
-                let admission = self.rt.governor().admit_job(tenant, &self.config.heap)?;
+                let obs = self.rt.obs();
+                let wait_start = obs.tracer.now_us();
+                let verdict = self.rt.governor().admit_job(tenant, &self.config.heap);
+                let waited_us = obs.tracer.now_us().saturating_sub(wait_start);
+                obs.metrics.histogram("govern.admission_wait_us").record(waited_us);
+                obs.tracer.instant(
+                    SpanKind::Admission,
+                    u64::from(verdict.is_ok()),
+                    tenant.id().0,
+                );
                 Some(GovernReport {
                     tenant: tenant.id(),
                     name: tenant.spec().name.clone(),
                     priority: tenant.spec().priority,
                     quota: tenant.quota(),
-                    admission,
+                    admission: verdict?,
                 })
             }
             None => None,
@@ -696,6 +706,8 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             ..
         } = self.flush_pending();
         let adaptive = config.adaptive_enabled();
+        let obs = rt.obs();
+        let collect_start = obs.tracer.now_us();
         let plan = if adaptive {
             let ctx = AdaptiveCtx {
                 store: rt.stats(),
@@ -705,6 +717,12 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
         } else {
             planner::lower(&stages, rt.agent(), rt.cache())
         };
+        obs.tracer.record_since(
+            SpanKind::PlanLower,
+            collect_start,
+            stages.len() as u64,
+            u64::from(adaptive),
+        );
         let mut exec = PlanExec::new(rt.pool(), rt.agent(), plan);
         let chain_range = chain_start..stages.len();
         let fuse = exec.chain_fused(&chain_range);
@@ -774,12 +792,18 @@ impl<'rt, T: 'rt, B: 'rt> Dataset<'rt, T, B> {
             let mut decisions = adapt_log;
             decisions.append(&mut adaptation.decisions);
             adaptation.decisions = decisions;
+            for (i, _) in adaptation.decisions.iter().enumerate() {
+                obs.tracer.instant(SpanKind::AdaptiveDecision, i as u64, 0);
+            }
             if let Some(tenant) = &config.govern {
                 let n = adaptation.decisions.len() as u64;
                 if n > 0 {
                     tenant.counters().adaptations.fetch_add(n, Ordering::Relaxed);
                 }
             }
+        }
+        if obs.tracer.enabled() {
+            report.trace = Some(obs.tracer.summary_since(collect_start));
         }
         PlanOutput { items, report }
     }
@@ -981,6 +1005,10 @@ fn record_observations(
     probes: &[(u64, Arc<FilterProbe>)],
     report: &PlanReport,
 ) {
+    // One staleness tick per completed collect: statistics the workload
+    // stops refreshing age toward expiry and stop feeding hints
+    // ([`StatsStore::advance_tick`](crate::stats::StatsStore)).
+    rt.stats().advance_tick();
     for (fp, probe) in probes {
         rt.stats().record_filter(
             *fp,
@@ -1708,6 +1736,13 @@ pub struct PlanReport {
     /// [`crate::stats`]). `None` when the plan lowered statically
     /// ([`JobConfig::adaptive`] false, or the optimizer `Off`).
     pub adaptation: Option<AdaptationReport>,
+    /// Span-timeline digest of this collect — per-phase span counts and
+    /// busy time plus the critical path, distilled from the session
+    /// [`Tracer`](crate::trace::Tracer) (see [`crate::trace`]). `None`
+    /// unless tracing was enabled on the session (`MR4R_TRACE=1` or
+    /// [`Runtime::tracer`](crate::api::Runtime::tracer)
+    /// `set_enabled(true)`).
+    pub trace: Option<crate::trace::TraceSummary>,
 }
 
 /// What a terminal collect returns: the materialized elements plus the

@@ -46,6 +46,7 @@ use crate::memsim::SimHeap;
 use crate::optimizer::agent::OptimizerAgent;
 use crate::optimizer::value::RirValue;
 use crate::stats::StatsStore;
+use crate::trace::{MetricsSnapshot, Obs, Tracer};
 use crate::util::hash::fxhash;
 
 /// A long-lived execution session: worker pool + optimizer agent + heap.
@@ -70,6 +71,10 @@ pub struct Runtime {
     cache: MaterializationCache,
     governor: Governor,
     stats: Arc<StatsStore>,
+    /// The session observability handle: one [`Tracer`] plus one metrics
+    /// registry, attached to the pool, cache, and default heap at
+    /// construction (see [`crate::trace`]).
+    obs: Obs,
 }
 
 impl Runtime {
@@ -99,13 +104,25 @@ impl Runtime {
         // Tiered eviction weighs observed per-prefix compute time when
         // choosing between spill and drop (see `cache::tier`).
         cache.attach_cost_feed(Arc::clone(&stats));
+        // One observability handle for the whole session; recording is
+        // off unless `MR4R_TRACE=1` or `Tracer::set_enabled` flips it,
+        // but the metrics registry is always live.
+        let obs = Obs::new();
+        if std::env::var("MR4R_TRACE").map(|v| v == "1").unwrap_or(false) {
+            obs.tracer.set_enabled(true);
+        }
+        cache.attach_obs(obs.clone());
+        config.heap.attach_obs(obs.clone());
+        let pool = WorkerPool::new(config.threads);
+        pool.attach_obs(obs.clone());
         Runtime {
-            pool: WorkerPool::new(config.threads),
+            pool,
             agent,
             config,
             cache,
             governor: Governor::new(),
             stats,
+            obs,
         }
     }
 
@@ -176,9 +193,34 @@ impl Runtime {
     }
 
     /// Snapshot every tenant's live counters mid-flight (see
-    /// [`crate::govern::Scoreboard`]). Empty when no tenant is registered.
+    /// [`crate::govern::Scoreboard`]), with the session metrics registry
+    /// attached as the scoreboard's `metrics` block. Tenant rows are
+    /// empty when no tenant is registered.
     pub fn scoreboard(&self) -> Scoreboard {
-        self.governor.scoreboard()
+        self.governor
+            .scoreboard()
+            .with_metrics(self.obs.metrics.snapshot())
+    }
+
+    /// The session tracer (see [`crate::trace`]): disabled by default;
+    /// `tracer().set_enabled(true)` — or `MR4R_TRACE=1` in the
+    /// environment — starts recording spans from every subsystem.
+    /// Export with [`Tracer::export_chrome_trace`].
+    pub fn tracer(&self) -> &Tracer {
+        &self.obs.tracer
+    }
+
+    /// A point-in-time snapshot of every named session metric (task
+    /// latency, queue depth, cache reload latency, admission waits, pane
+    /// watermark lag, …) — see [`crate::trace::metrics`] for the naming
+    /// scheme.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.obs.metrics.snapshot()
+    }
+
+    /// The observability handle plan internals thread through.
+    pub(crate) fn obs(&self) -> &Obs {
+        &self.obs
     }
 
     /// Fill in `config.govern` from `config.tenant` (idempotent; clears

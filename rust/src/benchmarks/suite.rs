@@ -208,6 +208,22 @@ fn kv_to_pairs<K, V>(kv: Vec<KeyValue<K, V>>) -> Vec<(K, V)> {
 /// `RunParams.threads` grows it on demand.
 pub fn prepare(id: BenchId, scale: f64, seed: u64, backend: Backend) -> Workload {
     let rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(1)));
+    prepare_on(rt, id, scale, seed, backend)
+}
+
+/// [`prepare`], but running every MR4R execution of the workload on the
+/// caller's [`Runtime`] session instead of a private one. The caller
+/// keeps the handle, so session-wide observability — the
+/// [`Tracer`](crate::trace::Tracer) timeline, the metrics registry, the
+/// feedback store — stays inspectable after runs; `mr4r trace` uses this
+/// to export the session timeline once the workload finishes.
+pub fn prepare_on(
+    rt: Arc<Runtime>,
+    id: BenchId,
+    scale: f64,
+    seed: u64,
+    backend: Backend,
+) -> Workload {
     match id {
         BenchId::WC => {
             let lines = Arc::new(super::datagen::wordcount_text(scale, seed));

@@ -72,6 +72,8 @@ use crate::api::config::CacheConfig;
 use crate::govern::TenantHandle;
 use crate::memsim::{CohortId, SimHeap};
 use crate::stats::StatsStore;
+use crate::trace::metrics::Histogram;
+use crate::trace::{Obs, SpanKind};
 
 use tier::{decide, keep_score, EntryCost, SpillEntry, SpillStore};
 
@@ -132,6 +134,12 @@ pub struct CacheStats {
     pub decisions_spill: u64,
     /// Drop decisions made by the tier heuristic (hot-tier victims).
     pub decisions_drop: u64,
+    /// Cold-tier entries aged out: their staleness-decayed recompute
+    /// value fell below their reload cost, so keeping them spilled no
+    /// longer paid for the tier bytes they held (see
+    /// [`tier::SpillStore`]). Not counted in `spill_evictions`, which
+    /// tracks capacity-driven cold drops.
+    pub decisions_aged_out: u64,
     /// Victim decisions whose recompute-cost input came from a
     /// [`StatsStore`] observed-compute-time sample rather than only the
     /// cache's own materialization stopwatch.
@@ -332,6 +340,19 @@ pub struct MaterializationCache {
     /// `Runtime`: keep/spill/drop decisions prefer its per-fingerprint
     /// observed compute times over the cache's own stopwatch.
     cost_feed: OnceLock<Arc<StatsStore>>,
+    /// The session's observability handles (see [`crate::trace`]),
+    /// attached once by the owning `Runtime`. Every tier transition
+    /// emits a trace event at the exact line that bumps the matching
+    /// [`CacheStats`] counter, so span counts reconcile with the stats.
+    obs: OnceLock<CacheObs>,
+}
+
+/// Pre-resolved instruments so the hot paths never touch the registry
+/// map: the shared [`Obs`] plus the cache's own metric handles.
+struct CacheObs {
+    obs: Obs,
+    /// `cache.reload_us` — simulated reload latency per cold-tier read.
+    reload_us: Arc<Histogram>,
 }
 
 impl Default for MaterializationCache {
@@ -354,7 +375,16 @@ impl MaterializationCache {
             }),
             ready: Condvar::new(),
             cost_feed: OnceLock::new(),
+            obs: OnceLock::new(),
         }
+    }
+
+    /// Attach the session's tracer + metrics registry (see
+    /// [`crate::trace`]). Set once by the owning
+    /// [`Runtime`](crate::api::Runtime); later calls are ignored.
+    pub fn attach_obs(&self, obs: Obs) {
+        let reload_us = obs.metrics.histogram("cache.reload_us");
+        let _ = self.obs.set(CacheObs { obs, reload_us });
     }
 
     /// Attach the session's statistics store as the eviction cost feed
@@ -518,6 +548,9 @@ impl MaterializationCache {
                         },
                     );
                     inner.stats.misses += 1;
+                    if let Some(o) = self.obs.get() {
+                        o.obs.tracer.instant(SpanKind::CacheMiss, fp.0, 0);
+                    }
                     Begin::Claimed(Ticket {
                         cache: self,
                         fp,
@@ -536,6 +569,15 @@ impl MaterializationCache {
             inner.stats.shared_in_flight += 1;
         } else {
             inner.stats.hits += 1;
+        }
+        drop(inner);
+        if let Some(o) = self.obs.get() {
+            let kind = if waited {
+                SpanKind::CacheShared
+            } else {
+                SpanKind::CacheHit
+            };
+            o.obs.tracer.instant(kind, 0, 0);
         }
     }
 
@@ -606,9 +648,17 @@ impl MaterializationCache {
             inner.stats.remat_items += items;
         }
         let feed = self.cost_feed.get().map(|s| s.as_ref());
-        let evicted = evict_under_pressure(&mut inner, fp, heap, cfg, feed);
+        let obs = self.obs.get();
+        let evicted = evict_under_pressure(&mut inner, fp, heap, cfg, feed, obs);
         drop(inner);
         self.ready.notify_all();
+        if let Some(o) = obs {
+            // One materialize span per completed claim, with the
+            // simulated duration the producing plan measured.
+            o.obs
+                .tracer
+                .record_with_dur(SpanKind::CacheMaterialize, recompute_secs, bytes, items);
+        }
         evicted
     }
 
@@ -679,7 +729,7 @@ impl MaterializationCache {
         };
         let evicted = if promoted {
             let feed = self.cost_feed.get().map(|s| s.as_ref());
-            evict_under_pressure(&mut inner, fp, heap, cfg, feed)
+            evict_under_pressure(&mut inner, fp, heap, cfg, feed, self.obs.get())
         } else {
             0
         };
@@ -688,6 +738,12 @@ impl MaterializationCache {
             // Lost the promotion race (or the entry was cold-dropped in
             // between): the duplicate charge has no owning entry.
             heap.release_cohort(cohort);
+        }
+        if let Some(o) = self.obs.get() {
+            // One reload event per physically simulated reload — the
+            // same per-call granularity as `CacheStats::reloads`.
+            o.reload_us.record_secs(bytes as f64 * cfg.reload_secs_per_byte);
+            o.obs.tracer.instant(SpanKind::CacheReload, bytes, items);
         }
         (promoted, evicted)
     }
@@ -748,7 +804,7 @@ impl MaterializationCache {
             inner.stats.delta_merges += 1;
             inner.stats.delta_items += items_delta;
             let feed = self.cost_feed.get().map(|s| s.as_ref());
-            evict_under_pressure(&mut inner, fp, heap, cfg, feed)
+            evict_under_pressure(&mut inner, fp, heap, cfg, feed, self.obs.get())
         } else {
             0
         };
@@ -912,7 +968,7 @@ fn pick_victim(
 /// counter to its spill counter, and the cold tier makes room by
 /// dropping its own lowest-value entries first (each cold drop is a
 /// `spill_evictions` and marks the fingerprint for remat accounting).
-fn spill_entry(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig) {
+fn spill_entry(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig, obs: Option<&CacheObs>) {
     if !matches!(
         inner.entries.get(&fp),
         Some(Entry {
@@ -943,7 +999,7 @@ fn spill_entry(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig) {
     // the tier's capacity, so this never needs to touch the incoming
     // entry itself.
     while inner.spill.bytes + e.bytes > cfg.spill_bytes {
-        match inner.spill.victim(cfg.decay_ticks) {
+        match inner.spill.victim(inner.tick, cfg.decay_ticks) {
             Some(victim) => {
                 if let Some(items) = release_spilled(inner, victim) {
                     inner.dropped.insert(victim, items);
@@ -969,11 +1025,20 @@ fn spill_entry(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig) {
     inner.stats.decisions_spill += 1;
     inner.stats.bytes_spilled += e.bytes;
     inner.stats.spill_entries += 1;
+    if let Some(o) = obs {
+        o.obs.tracer.instant(SpanKind::CacheSpill, e.bytes, e.items);
+    }
 }
 
 /// Execute the tier heuristic on a chosen victim: spill it or drop it.
 /// Either way the entry leaves the hot tier — only its fate differs.
-fn evict_one(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig, feed: Option<&StatsStore>) {
+fn evict_one(
+    inner: &mut CacheInner,
+    fp: Fingerprint,
+    cfg: &CacheConfig,
+    feed: Option<&StatsStore>,
+    obs: Option<&CacheObs>,
+) {
     let cost = match inner.entries.get(&fp) {
         Some(e) => entry_cost(fp, e, inner.tick, feed),
         None => return,
@@ -982,13 +1047,66 @@ fn evict_one(inner: &mut CacheInner, fp: Fingerprint, cfg: &CacheConfig, feed: O
         inner.stats.stats_fed_decisions += 1;
     }
     match decide(&cost, cfg) {
-        TierDecision::Spill => spill_entry(inner, fp, cfg),
+        TierDecision::Spill => spill_entry(inner, fp, cfg, obs),
         _ => {
             if let Some(e) = inner.entries.get(&fp) {
                 inner.dropped.insert(fp, e.items);
             }
             release_entry(inner, fp);
             inner.stats.decisions_drop += 1;
+        }
+    }
+}
+
+/// Age out cold-tier entries whose staleness-decayed recompute value no
+/// longer beats their reload cost — the same comparison
+/// [`tier::decide`] made when it spilled them, re-evaluated at the
+/// current LRU tick. An entry that was worth spilling while warm stops
+/// paying for its tier bytes once it has gone unread long enough;
+/// dropping it then is exactly what `decide` would do today. Runs at
+/// the head of every eviction pass. Aged-out fingerprints are marked
+/// for rematerialization accounting, counted in
+/// [`CacheStats::decisions_aged_out`], and emit a `cache.age_out`
+/// trace event each.
+fn age_out_spill(
+    inner: &mut CacheInner,
+    cfg: &CacheConfig,
+    feed: Option<&StatsStore>,
+    obs: Option<&CacheObs>,
+) {
+    if cfg.decay_ticks == 0 || inner.spill.entries.is_empty() {
+        return;
+    }
+    let now = inner.tick;
+    let stale: Vec<(Fingerprint, u64)> = inner
+        .spill
+        .entries
+        .iter()
+        .filter(|(fp, s)| {
+            // Protect by the worst observed materialization, exactly as
+            // the keep/spill/drop heuristic did when it spilled this
+            // entry (see `entry_cost`).
+            let mut recompute_secs = s.recompute_secs;
+            if let Some(store) = feed {
+                if let Some(pc) = store.prefix_cost(fp.0) {
+                    if pc.samples > 0 {
+                        recompute_secs = recompute_secs.max(pc.peak_secs);
+                    }
+                }
+            }
+            let age = now.saturating_sub(s.last_used);
+            let reload_secs = s.bytes as f64 * cfg.reload_secs_per_byte;
+            tier::decay(age, cfg.decay_ticks) * recompute_secs < reload_secs
+        })
+        .map(|(fp, s)| (*fp, s.bytes))
+        .collect();
+    for (fp, bytes) in stale {
+        if let Some(items) = release_spilled(inner, fp) {
+            inner.dropped.insert(fp, items);
+            inner.stats.decisions_aged_out += 1;
+            if let Some(o) = obs {
+                o.obs.tracer.instant(SpanKind::CacheAgeOut, bytes, items);
+            }
         }
     }
 }
@@ -1013,14 +1131,16 @@ fn evict_under_pressure(
     heap: &Arc<SimHeap>,
     cfg: &CacheConfig,
     feed: Option<&StatsStore>,
+    obs: Option<&CacheObs>,
 ) -> u64 {
+    age_out_spill(inner, cfg, feed, obs);
     let mut evicted = 0u64;
     let mut triggered = false;
     while inner.stats.bytes_cached > cfg.max_bytes {
         triggered = true;
         match pick_victim(inner, protect, None, cfg, feed) {
             Some(fp) => {
-                evict_one(inner, fp, cfg, feed);
+                evict_one(inner, fp, cfg, feed, obs);
                 evicted += 1;
             }
             None => break,
@@ -1042,7 +1162,7 @@ fn evict_under_pressure(
         while on_heap(inner) > target {
             match pick_victim(inner, protect, Some(heap), cfg, feed) {
                 Some(fp) => {
-                    evict_one(inner, fp, cfg, feed);
+                    evict_one(inner, fp, cfg, feed, obs);
                     evicted += 1;
                 }
                 None => break,
@@ -1078,7 +1198,7 @@ mod tests {
     fn claim(cache: &MaterializationCache, fp: Fingerprint) -> Ticket<'_> {
         match cache.begin(fp) {
             Begin::Claimed(t) => t,
-            Begin::Ready { .. } => panic!("expected a claim for {fp}"),
+            _ => panic!("expected a claim for {fp}"),
         }
     }
 
@@ -1107,7 +1227,7 @@ mod tests {
                 let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
                 assert_eq!(*shards, vec![vec![1, 2], vec![3]]);
             }
-            Begin::Claimed(_) => panic!("stored entry must hit"),
+            _ => panic!("stored entry must hit"),
         }
         let s = cache.stats();
         assert_eq!((s.misses, s.hits, s.entries, s.bytes_cached), (1, 1, 1, 96));
@@ -1140,7 +1260,7 @@ mod tests {
                     let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
                     (shards.len(), waited)
                 }
-                Begin::Claimed(_) => panic!("waiter must not recompute"),
+                _ => panic!("waiter must not recompute"),
             })
         };
         // Give the waiter time to block on the in-flight entry.
@@ -1166,7 +1286,7 @@ mod tests {
                 assert!(value.downcast::<Vec<Vec<String>>>().is_err());
                 cache.record_type_conflict();
             }
-            Begin::Claimed(_) => panic!("stored entry must be found"),
+            _ => panic!("stored entry must be found"),
         }
         let s = cache.stats();
         assert_eq!((s.hits, s.type_conflicts), (0, 1));
@@ -1262,7 +1382,7 @@ mod tests {
                 cache.record_read(waited);
                 seen
             }
-            Begin::Claimed(_) => panic!("entry must be ready"),
+            _ => panic!("entry must be ready"),
         };
         assert_eq!(seen, Some(2), "append mark surfaces to readers");
         let (merged, _) =
@@ -1279,7 +1399,7 @@ mod tests {
                 let shards = value.downcast::<Vec<Vec<i64>>>().unwrap();
                 assert_eq!(*shards, vec![vec![1, 2], vec![3]]);
             }
-            Begin::Claimed(_) => panic!("merged entry must stay ready"),
+            _ => panic!("merged entry must stay ready"),
         }
     }
 
@@ -1430,6 +1550,51 @@ mod tests {
         assert_eq!((s.bytes_spilled, s.spill_entries), (60, 1));
         assert_eq!(cache.residency(Fingerprint(0)), Residency::Absent);
         assert_eq!(cache.residency(Fingerprint(1)), Residency::Spilled);
+    }
+
+    #[test]
+    fn stale_spill_ages_out_once_decayed_value_falls_below_reload() {
+        let heap = SimHeap::new(HeapParams::no_injection());
+        let cache = MaterializationCache::new();
+        let cfg = CacheConfig {
+            max_bytes: 100,
+            spill_bytes: 1 << 20,
+            reload_secs_per_byte: 1e-6, // 60 B → 60 µs reload
+            decay_ticks: 4,
+            ..CacheConfig::default()
+        };
+        let (a, b) = (Fingerprint(1), Fingerprint(2));
+        // 1 ms recompute > 60 µs reload → pressure spills A, keeps it.
+        let t = claim(&cache, a);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 1e-3, None, &heap, &cfg, None);
+        let t = claim(&cache, b);
+        cache.complete(t, store(vec![vec![2]]), 60, 1, 1e-3, None, &heap, &cfg, None);
+        assert_eq!(cache.residency(a), Residency::Spilled);
+        assert_eq!(cache.stats().decisions_aged_out, 0);
+        // A goes unread for ~5 half-lives while B stays warm: its
+        // decayed value (1 ms × 0.5^(20/4) ≈ 31 µs) falls below the
+        // 60 µs reload cost.
+        for _ in 0..20 {
+            match cache.begin(b) {
+                Begin::Ready { value, waited, .. } => {
+                    drop(value);
+                    cache.record_read(waited);
+                }
+                _ => panic!("B must stay hot"),
+            }
+        }
+        // The next eviction pass opens with the age-out sweep.
+        let t = claim(&cache, Fingerprint(3));
+        cache.complete(t, store(vec![vec![3]]), 60, 1, 1e-3, None, &heap, &cfg, None);
+        assert_eq!(cache.residency(a), Residency::Absent, "stale spill aged out");
+        let s = cache.stats();
+        assert_eq!(s.decisions_aged_out, 1);
+        assert_eq!(s.spill_evictions, 0, "aging out is not a capacity drop");
+        // Recomputing the aged-out prefix counts as a rematerialization
+        // — the cost the sweep judged cheaper than holding the bytes.
+        let t = claim(&cache, a);
+        cache.complete(t, store(vec![vec![1]]), 60, 1, 1e-3, None, &heap, &cfg, None);
+        assert!(cache.stats().rematerializations >= 1);
     }
 
     #[test]

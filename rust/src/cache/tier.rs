@@ -172,14 +172,18 @@ impl SpillStore {
 
     /// The cold victim to drop when the tier itself is over capacity:
     /// lowest keep-score first, deterministic fingerprint tie-break.
-    pub fn victim(&self, half_life: u64) -> Option<Fingerprint> {
+    /// Ages are real — `now_tick` minus the entry's last read — so a
+    /// long-unread spill decays toward zero value and is preferred over
+    /// a recently-reloadable one even when its recompute cost was
+    /// higher at spill time (decayed-value aging, not FIFO-cheapest).
+    pub fn victim(&self, now_tick: u64, half_life: u64) -> Option<Fingerprint> {
         self.entries
             .iter()
             .map(|(fp, e)| {
                 let cost = EntryCost {
                     recompute_secs: e.recompute_secs,
                     bytes: e.bytes,
-                    age: 0, // ages relative to each other via last_used below
+                    age: now_tick.saturating_sub(e.last_used),
                     stats_fed: false,
                 };
                 (keep_score(&cost, half_life), e.last_used, *fp)
@@ -273,13 +277,37 @@ mod tests {
         s.insert(Fingerprint(2), entry(100, 0.1, 2));
         s.insert(Fingerprint(3), entry(100, 0.5, 3));
         assert_eq!(s.bytes, 300);
-        // Cheapest recompute first.
-        assert_eq!(s.victim(32), Some(Fingerprint(2)));
+        // Near-equal ages: cheapest recompute goes first.
+        assert_eq!(s.victim(3, 32), Some(Fingerprint(2)));
         assert!(s.take(&Fingerprint(2)).is_some());
         assert_eq!(s.bytes, 200);
-        // Equal scores: least-recently-used breaks the tie.
-        assert_eq!(s.victim(32), Some(Fingerprint(1)));
+        // Equal costs: the older entry has decayed further and goes
+        // first (the LRU ordering falls out of the decay term).
+        assert_eq!(s.victim(3, 32), Some(Fingerprint(1)));
         assert!(s.take(&Fingerprint(9)).is_none());
         assert_eq!(s.bytes, 200);
+    }
+
+    #[test]
+    fn victim_aging_outranks_recompute_cost() {
+        let mut s = SpillStore::default();
+        let entry = |bytes, secs, used| SpillEntry {
+            value: Arc::new(Vec::<Vec<i64>>::new()) as Stored,
+            bytes,
+            items: 1,
+            recompute_secs: secs,
+            last_used: used,
+            seen: None,
+            tenant: None,
+        };
+        // An expensive spill nobody has read for ~25 half-lives versus
+        // a recompute 5× cheaper read one tick ago: the decayed value
+        // of the stale one is lower, so *it* is the victim — FIFO-
+        // cheapest would have picked Fingerprint(2).
+        s.insert(Fingerprint(1), entry(100, 0.5, 1));
+        s.insert(Fingerprint(2), entry(100, 0.1, 99));
+        assert_eq!(s.victim(100, 4), Some(Fingerprint(1)));
+        // With decay disabled the raw cost ordering comes back.
+        assert_eq!(s.victim(100, 0), Some(Fingerprint(2)));
     }
 }

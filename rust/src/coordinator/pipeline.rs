@@ -47,10 +47,18 @@ use crate::memsim::{CohortId, GcStats, SimHeap, ThreadAlloc};
 use crate::optimizer::agent::{CombinerSource, Decision, OptimizerAgent};
 use crate::optimizer::value::RirValue;
 use crate::stats::{KeySkew, MajorityTracker, SkewSketch, StageAdapt};
+use crate::trace::SpanKind;
 use crate::util::hash::fxhash;
 use crate::util::timer::Stopwatch;
 
 /// Per-job measurements (the figures are built from these).
+///
+/// This is the *aggregate* view — one summary per executed job. The
+/// event-level view (when individual tasks ran, on which worker, and
+/// what the cache/heap did in between) lives on the session
+/// [`Tracer`](crate::trace::Tracer) and the
+/// [`MetricsRegistry`](crate::trace::MetricsRegistry); see
+/// [`crate::trace`].
 #[derive(Clone, Debug)]
 pub struct FlowMetrics {
     /// Which flow ran.
@@ -486,10 +494,14 @@ fn map_phase<I: Send + Sync>(
     cfg: &JobConfig,
     map_chunk: &(dyn Fn(&[I]) -> u64 + Sync),
 ) -> (PoolStats, u64) {
+    let obs = batch.pool().obs();
+    let map_start = obs.map(|o| o.tracer.now_us());
     let emits = AtomicU64::new(0);
+    let n_tasks;
     let stats = match feed {
         Feed::Slice(inputs) => {
             let chunks = split_indices(inputs.len(), cfg.threads * cfg.tasks_per_thread);
+            n_tasks = chunks.len() as u64;
             batch.run(
                 cfg.threads,
                 chunks
@@ -505,6 +517,7 @@ fn map_phase<I: Send + Sync>(
         }
         Feed::Stream(puller) => {
             let puller = Mutex::new(puller);
+            n_tasks = cfg.threads.max(1) as u64;
             batch.run(
                 cfg.threads,
                 (0..cfg.threads.max(1))
@@ -528,6 +541,10 @@ fn map_phase<I: Send + Sync>(
             )
         }
     };
+    if let Some(o) = obs {
+        o.tracer
+            .record_since(SpanKind::MapPhase, map_start.unwrap_or(0), batch.id().0, n_tasks);
+    }
     (stats, emits.load(Ordering::Relaxed))
 }
 
@@ -636,6 +653,10 @@ where
             .collect::<Vec<_>>(),
     );
     let reduce_secs = reduce_sw.secs();
+    if let Some(o) = batch.pool().obs() {
+        o.tracer
+            .record_with_dur(SpanKind::ReducePhase, reduce_secs, batch.id().0, slots.len() as u64);
+    }
 
     let results = unwrap_slots(slots);
     let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);
@@ -743,6 +764,10 @@ where
             .collect::<Vec<_>>(),
     );
     let reduce_secs = fin_sw.secs();
+    if let Some(o) = batch.pool().obs() {
+        o.tracer
+            .record_with_dur(SpanKind::ReducePhase, reduce_secs, batch.id().0, slots.len() as u64);
+    }
 
     let results = unwrap_slots(slots);
     let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);
@@ -1105,6 +1130,10 @@ where
             .collect::<Vec<_>>(),
     );
     let reduce_secs = fin_sw.secs();
+    if let Some(o) = batch.pool().obs() {
+        o.tracer
+            .record_with_dur(SpanKind::ReducePhase, reduce_secs, batch.id().0, slots.len() as u64);
+    }
 
     let results = unwrap_slots(slots);
     let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);
@@ -1232,6 +1261,10 @@ where
             .collect::<Vec<_>>(),
     );
     let reduce_secs = reduce_sw.secs();
+    if let Some(o) = batch.pool().obs() {
+        o.tracer
+            .record_with_dur(SpanKind::ReducePhase, reduce_secs, batch.id().0, slots.len() as u64);
+    }
 
     let results = unwrap_slots(slots);
     let (gc, batch_id, batch_pool) = job_epilogue(cfg, cohorts, &gc_before, batch);

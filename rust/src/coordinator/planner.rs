@@ -577,6 +577,7 @@ impl<'rt> PlanExec<'rt> {
             stream: None,
             govern: None,
             adaptation: self.adaptation,
+            trace: None,
         }
     }
 }

@@ -26,7 +26,10 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+use crate::trace::metrics::{Gauge, Histogram};
+use crate::trace::{self, Obs, SpanKind};
 
 /// Counters exposed for tests and the perf harness.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -312,10 +315,25 @@ impl PoolState {
     }
 }
 
+/// Observability handles the pool publishes into once attached
+/// ([`WorkerPool::attach_obs`]): the session tracer plus pre-resolved
+/// instrument `Arc`s, so the per-task hot path never touches the
+/// registry map.
+struct PoolObs {
+    obs: Obs,
+    /// `pool.task_us` — per-task wall time histogram.
+    task_us: Arc<Histogram>,
+    /// `pool.queue_depth` — tasks sitting in submission deques right now.
+    queue_depth: Arc<Gauge>,
+}
+
 struct PoolShared {
     state: Mutex<PoolState>,
     /// Workers sleep here when no submission has a task for them.
     work_cv: Condvar,
+    /// Late-bound observability (unattached pools — tests, baselines —
+    /// pay one `OnceLock` load per task and nothing else).
+    obs: OnceLock<PoolObs>,
 }
 
 impl PoolShared {
@@ -383,6 +401,7 @@ impl WorkerPool {
                     shutdown: false,
                 }),
                 work_cv: Condvar::new(),
+                obs: OnceLock::new(),
             }),
             handles: Mutex::new(Vec::new()),
             spawned: AtomicUsize::new(0),
@@ -397,6 +416,25 @@ impl WorkerPool {
     /// observable: two jobs on one pool leave this unchanged.
     pub fn spawned_threads(&self) -> usize {
         self.spawned.load(Ordering::SeqCst)
+    }
+
+    /// Attach the session observability handle (idempotent; first caller
+    /// wins). Workers then record a [`SpanKind::Task`] span per executed
+    /// task, submits record [`SpanKind::Batch`] spans, and the pool
+    /// publishes `pool.task_us` / `pool.queue_depth` metrics.
+    pub fn attach_obs(&self, obs: Obs) {
+        let task_us = obs.metrics.histogram("pool.task_us");
+        let queue_depth = obs.metrics.gauge("pool.queue_depth");
+        let _ = self.shared.obs.set(PoolObs {
+            obs,
+            task_us,
+            queue_depth,
+        });
+    }
+
+    /// The attached observability handle, if any.
+    pub fn obs(&self) -> Option<&Obs> {
+        self.shared.obs.get().map(|o| &o.obs)
     }
 
     /// Spawn workers until at least `n` exist.
@@ -519,6 +557,13 @@ impl WorkerPool {
         if tasks.is_empty() {
             return (PoolStats::default(), 0);
         }
+        // One `Batch` span per submission, submit → drain; args learn the
+        // executed-task count at drain (a = batch id, b = executed).
+        let mut batch_span = self
+            .shared
+            .obs
+            .get()
+            .map(|o| o.obs.tracer.span(SpanKind::Batch, id.0, 0));
         let workers = workers.max(1).min(tasks.len());
         self.ensure_workers(workers);
         let sub = self.next_sub.fetch_add(1, Ordering::Relaxed);
@@ -555,6 +600,15 @@ impl WorkerPool {
                 panicked: 0,
                 done_cv: Arc::clone(&done_cv),
             });
+            if let Some(o) = self.shared.obs.get() {
+                let depth: usize = state
+                    .subs
+                    .iter()
+                    .flat_map(|s| s.queues.iter())
+                    .map(VecDeque::len)
+                    .sum();
+                o.queue_depth.set(depth as u64);
+            }
         }
         self.shared.work_cv.notify_all();
 
@@ -571,6 +625,9 @@ impl WorkerPool {
                     state.rr %= state.subs.len();
                 }
                 drop(state);
+                if let Some(span) = batch_span.as_mut() {
+                    span.set_args(id.0, done.executed as u64);
+                }
                 let stats = PoolStats {
                     executed: done.executed,
                     steals: done.steals,
@@ -647,6 +704,9 @@ impl<'p> Batch<'p> {
 }
 
 fn worker_loop(shared: &PoolShared, wid: usize) {
+    // Chrome-trace rows key on tid: pin this thread's tid to the worker
+    // index before anything records.
+    trace::set_thread_tid(wid as u64);
     let mut state = shared.lock();
     loop {
         if state.shutdown {
@@ -668,13 +728,26 @@ fn worker_loop(shared: &PoolShared, wid: usize) {
                     }
                 }
                 let sub = s.sub;
+                let bid = s.id;
                 drop(state);
+                let obs = shared.obs.get();
+                let start_us = obs.map(|o| o.obs.tracer.now_us());
                 // Panic isolation: catch here so one tenant's panicking
                 // mapper cannot take down the worker (or any other
                 // tenant); the count is re-raised on the owning batch's
                 // submitting thread after its drain.
                 let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(wid)))
                     .is_ok();
+                if let (Some(o), Some(start)) = (obs, start_us) {
+                    // Exactly one `Task` span per executed task — the
+                    // reconciliation invariant the trace tests assert
+                    // against the scheduler's `executed` totals.
+                    o.task_us
+                        .record(o.obs.tracer.now_us().saturating_sub(start));
+                    o.obs
+                        .tracer
+                        .record_since(SpanKind::Task, start, bid.0, u64::from(!ok));
+                }
                 state = shared.lock();
                 state.total_executed += 1;
                 if let Some(s) = state.subs.iter_mut().find(|s| s.sub == sub) {

@@ -526,6 +526,7 @@ impl Governor {
         let tenants = self.tenants.read().unwrap();
         Scoreboard {
             tenants: tenants.iter().map(|t| TenantSnapshot::of(t)).collect(),
+            metrics: None,
         }
     }
 }
@@ -614,11 +615,23 @@ impl TenantSnapshot {
 pub struct Scoreboard {
     /// One row per registered tenant, in registration (id) order.
     pub tenants: Vec<TenantSnapshot>,
+    /// The session metrics registry at snapshot time
+    /// ([`Runtime::metrics`](crate::api::Runtime::metrics)) — filled by
+    /// the runtime wrapper; `None` when the scoreboard came straight
+    /// from [`Governor::scoreboard`].
+    pub metrics: Option<crate::trace::MetricsSnapshot>,
 }
 
 impl Scoreboard {
     pub fn get(&self, id: TenantId) -> Option<&TenantSnapshot> {
         self.tenants.get(id.0 as usize)
+    }
+
+    /// Attach a session metrics snapshot, surfaced as the `metrics`
+    /// object in [`Scoreboard::snapshot_json`].
+    pub fn with_metrics(mut self, metrics: crate::trace::MetricsSnapshot) -> Self {
+        self.metrics = Some(metrics);
+        self
     }
 
     /// Render the scoreboard as a fixed-width text table (the `mr4r
@@ -706,7 +719,11 @@ impl Scoreboard {
                     .set("adaptations", t.adaptations),
             );
         }
-        Json::obj().set("tenants", rows)
+        let mut doc = Json::obj().set("tenants", rows);
+        if let Some(metrics) = &self.metrics {
+            doc = doc.set("metrics", metrics.to_json());
+        }
+        doc
     }
 }
 
@@ -835,6 +852,49 @@ mod tests {
         assert!(json.contains("\"adaptations\":3"), "{json}");
         // Deterministic key order: tenants array leads the document.
         assert!(json.starts_with("{\"tenants\":["), "{json}");
+    }
+
+    #[test]
+    fn scoreboard_json_round_trips_through_the_parser() {
+        use crate::util::json::Json;
+        let g = Governor::new();
+        let a = g.register(TenantSpec::new("alpha").with_priority(Priority::Interactive));
+        let _b = g.register(TenantSpec::new("beta").with_priority(Priority::Background));
+        let ta = g.lookup(a).unwrap();
+        ta.qos.submitted.fetch_add(7, Ordering::Relaxed);
+        ta.counters.cache_spill_bytes.fetch_add(4096, Ordering::Relaxed);
+        ta.counters.adaptations.fetch_add(2, Ordering::Relaxed);
+
+        let registry = crate::trace::MetricsRegistry::new();
+        registry.counter("plans.completed").add(3);
+        registry.histogram("pool.task_us").record(250);
+
+        let doc = g.scoreboard().with_metrics(registry.snapshot()).snapshot_json();
+        let parsed = Json::parse(&doc.to_string()).expect("snapshot_json must emit valid JSON");
+
+        let tenants = parsed.get("tenants").and_then(Json::as_arr).expect("tenants array");
+        assert_eq!(tenants.len(), 2);
+        let alpha = &tenants[0];
+        assert_eq!(alpha.get("id").and_then(Json::as_u64), Some(a.0));
+        assert_eq!(alpha.get("name").and_then(Json::as_str), Some("alpha"));
+        assert_eq!(alpha.get("submitted").and_then(Json::as_u64), Some(7));
+        assert_eq!(alpha.get("cache_spill_bytes").and_then(Json::as_u64), Some(4096));
+        assert_eq!(alpha.get("adaptations").and_then(Json::as_u64), Some(2));
+        let beta = &tenants[1];
+        assert_eq!(beta.get("name").and_then(Json::as_str), Some("beta"));
+        assert_eq!(beta.get("cache_spill_bytes").and_then(Json::as_u64), Some(0));
+        assert_eq!(beta.get("adaptations").and_then(Json::as_u64), Some(0));
+
+        let metrics = parsed.get("metrics").expect("metrics block when attached");
+        assert_eq!(metrics.get("plans.completed").and_then(Json::as_u64), Some(3));
+        let hist = metrics.get("pool.task_us").expect("histogram entry");
+        assert_eq!(hist.get("count").and_then(Json::as_u64), Some(1));
+        assert!(hist.get("p95").and_then(Json::as_u64).is_some());
+
+        // Without an attached session snapshot the metrics key is absent
+        // (a governor-only scoreboard stays exactly the legacy shape).
+        let bare = Json::parse(&g.scoreboard().snapshot_json().to_string()).unwrap();
+        assert!(bare.get("metrics").is_none());
     }
 
     #[test]

@@ -42,6 +42,13 @@
 //!   same structural prefix consults them to reorder filters, right-size
 //!   shard counts, switch keyed flows, and split hot keys — each decision
 //!   reported in [`PlanReport::adaptation`].
+//! * [`trace`] — the unified observability layer: a session-wide
+//!   [`trace::Tracer`] recording spans from every subsystem (lowering,
+//!   admission, batch/task scheduling, cache traffic, streaming panes,
+//!   simulated GC) into per-thread lock-free ring buffers, exported as
+//!   Chrome `trace_event` JSON (`mr4r trace <preset>`), plus the
+//!   [`trace::MetricsRegistry`] of named counters/gauges/histograms
+//!   surfaced by [`api::Runtime::metrics`] and the scoreboard.
 //! * [`optimizer`] — the paper's §3 contribution: reducers expressed in a
 //!   stack-machine IR (RIR, the bytecode stand-in), analyzed via a program
 //!   dependency graph and sliced into `initialize`/`combine`/`finalize`.
@@ -77,6 +84,7 @@ pub mod runtime;
 pub mod stats;
 pub mod stream;
 pub mod testkit;
+pub mod trace;
 pub mod util;
 
 pub use api::{
@@ -94,3 +102,4 @@ pub use stream::{
     AppendLog, KeyedStream, StandingQuery, StreamDataset, StreamHandle, StreamOutput,
     StreamSource, WindowResult, WindowSpec, Windowed, WindowedStream,
 };
+pub use trace::{MetricValue, MetricsRegistry, MetricsSnapshot, SpanKind, TraceSummary, Tracer};

@@ -9,6 +9,9 @@
 //! mr4r info                        # environment, artifacts, backend probe
 //! mr4r govern [--tenants N] [--plans N] [--threads N] [--json]
 //!                                  # multi-tenant QoS demo + live scoreboard
+//! mr4r trace WC [--scale S] [--threads N] [--out DIR]
+//!                                  # run once with the session tracer on and
+//!                                  # write a Chrome trace_event JSON timeline
 //! ```
 
 use std::path::PathBuf;
@@ -19,7 +22,7 @@ use mr4r::api::config::{JobConfig, OptimizeMode};
 use mr4r::api::reducers::RirReducer;
 use mr4r::api::runtime::Runtime;
 use mr4r::api::traits::Emitter;
-use mr4r::benchmarks::suite::{prepare, BenchId, Framework, RunParams};
+use mr4r::benchmarks::suite::{prepare, prepare_on, BenchId, Framework, RunParams};
 use mr4r::benchmarks::Backend;
 use mr4r::govern::{Priority, TenantSpec};
 use mr4r::harness::{self, HarnessOpts};
@@ -284,13 +287,72 @@ fn main() -> ExitCode {
             println!("{}", rt.scoreboard().render());
             ExitCode::SUCCESS
         }
+        "trace" => {
+            // Accept the bench positionally (`mr4r trace wc`) or via --bench.
+            let code = if target.is_empty() {
+                args.get("bench").unwrap_or("")
+            } else {
+                target
+            };
+            let Some(id) = BenchId::from_code(code) else {
+                eprintln!("`trace` needs a benchmark code: mr4r trace <HG|KM|LR|MM|PC|SM|WC>");
+                return ExitCode::FAILURE;
+            };
+            let mode = if args.flag("no-optimize") {
+                OptimizeMode::Off
+            } else {
+                OptimizeMode::Auto
+            };
+            // An accounting heap (not `fast`) so the timeline includes the
+            // memsim's cohort and GC events, and the runtime's own heap in
+            // the run params so those events land on the session tracer.
+            let rt = Arc::new(Runtime::with_config(
+                JobConfig::new().with_threads(opts.max_threads),
+            ));
+            rt.tracer().set_enabled(true);
+            let params = RunParams::fast(opts.max_threads)
+                .with_optimize(mode)
+                .with_heap(Arc::clone(rt.heap()));
+            let w = prepare_on(Arc::clone(&rt), id, opts.scale, opts.seed, backend.clone());
+            let o = w.run(Framework::Mr4r, &params);
+            let events = rt.tracer().total_events();
+            if events == 0 {
+                eprintln!("error: traced run recorded no events");
+                return ExitCode::FAILURE;
+            }
+            let trace = rt.tracer().export_chrome_trace();
+            if let Err(e) = std::fs::create_dir_all(&out_dir) {
+                eprintln!("error creating {}: {e}", out_dir.display());
+                return ExitCode::FAILURE;
+            }
+            let path = out_dir.join(format!("{}.trace.json", id.code().to_lowercase()));
+            if let Err(e) = std::fs::write(&path, trace.to_string()) {
+                eprintln!("error writing {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+            println!(
+                "{} ({}): {} trace event(s), {} dropped, digest {:016x}",
+                id.code(),
+                id.name(),
+                events,
+                rt.tracer().dropped(),
+                o.digest
+            );
+            println!(
+                "wrote {} — load it in chrome://tracing or https://ui.perfetto.dev",
+                path.display()
+            );
+            ExitCode::SUCCESS
+        }
         "" => {
             eprintln!("{}", cli().help_text());
-            eprintln!("commands: figures | run | explain | info | govern");
+            eprintln!("commands: figures | run | explain | info | govern | trace");
             ExitCode::FAILURE
         }
         other => {
-            eprintln!("unknown command `{other}` (try: figures, run, explain, info, govern)");
+            eprintln!(
+                "unknown command `{other}` (try: figures, run, explain, info, govern, trace)"
+            );
             ExitCode::FAILURE
         }
     }

@@ -21,12 +21,13 @@
 //! [`SimHeap::cohort_allocated`] gives exact per-job allocation deltas.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
 use super::policy::{CostModel, GcPolicy};
 use super::stats::GcStats;
 use super::timeline::{Timeline, TimelineEvent, TimelinePoint};
+use crate::trace::{Obs, SpanKind};
 
 /// Maximum supported tenuring threshold (age buckets are a fixed array).
 pub const MAX_TENURE: usize = 8;
@@ -172,6 +173,11 @@ pub struct SimHeap {
     old_fill: AtomicU64,
     core: Mutex<HeapCore>,
     epoch: Instant,
+    /// The session's observability handles (see [`crate::trace`]),
+    /// attached once by the owning [`Runtime`](crate::api::Runtime):
+    /// cohort registration/release and every simulated collection emit
+    /// trace events. Unset (standalone heaps, unit tests) → no events.
+    obs: OnceLock<Obs>,
 }
 
 impl SimHeap {
@@ -190,7 +196,21 @@ impl SimHeap {
                 last_sample_t: 0.0,
             }),
             epoch: Instant::now(),
+            obs: OnceLock::new(),
         })
+    }
+
+    /// Attach the session's tracer + metrics registry (see
+    /// [`crate::trace`]). Set once by the owning
+    /// [`Runtime`](crate::api::Runtime); later calls are ignored.
+    pub fn attach_obs(&self, obs: Obs) {
+        let _ = self.obs.set(obs);
+    }
+
+    /// The attached observability handles, if any (used by subsystems —
+    /// e.g. streaming windows — that reach the session through its heap).
+    pub(crate) fn obs(&self) -> Option<&Obs> {
+        self.obs.get()
     }
 
     /// Convenience: default params.
@@ -223,7 +243,12 @@ impl SimHeap {
             name,
             ..Default::default()
         });
-        CohortId(core.cohorts.len() - 1)
+        let id = CohortId(core.cohorts.len() - 1);
+        drop(core);
+        if let Some(o) = self.obs.get() {
+            o.tracer.instant(SpanKind::CohortAlloc, id.0 as u64, 0);
+        }
+        id
     }
 
     /// Register a **fresh** cohort, never deduplicated by name: two
@@ -238,13 +263,18 @@ impl SimHeap {
             scoped: true,
             ..Default::default()
         };
-        if let Some(idx) = core.free_cohorts.pop() {
+        let id = if let Some(idx) = core.free_cohorts.pop() {
             core.cohorts[idx] = fresh;
             CohortId(idx)
         } else {
             core.cohorts.push(fresh);
             CohortId(core.cohorts.len() - 1)
+        };
+        drop(core);
+        if let Some(o) = self.obs.get() {
+            o.tracer.instant(SpanKind::CohortAlloc, id.0 as u64, 0);
         }
+        id
     }
 
     /// Lifetime `(bytes, objects)` allocated in a cohort since its
@@ -318,6 +348,10 @@ impl SimHeap {
         // old_fill unchanged: garbage still occupies the old gen.
         if scoped {
             core.free_cohorts.push(id.0);
+        }
+        drop(core);
+        if let Some(o) = self.obs.get() {
+            o.tracer.instant(SpanKind::CohortRelease, id.0 as u64, old);
         }
     }
 
@@ -442,8 +476,16 @@ impl SimHeap {
         let need_major = self.old_fill.load(Ordering::Relaxed)
             >= (old_cap as f64 * 0.9) as u64
             || core.promoted_since_major >= (old_cap as f64 * 0.25) as u64;
+        let pressure_promoted = core.promoted_since_major;
         drop(core);
 
+        if let Some(o) = self.obs.get() {
+            o.tracer
+                .record_with_dur(SpanKind::GcMinor, pause, promoted, live_young_after);
+            if need_major {
+                o.tracer.instant(SpanKind::GcPressure, pressure_promoted, 0);
+            }
+        }
         self.inject(pause);
         if need_major {
             self.major_gc();
@@ -477,6 +519,10 @@ impl SimHeap {
             event: TimelineEvent::MajorGc,
         });
         drop(core);
+        if let Some(o) = self.obs.get() {
+            o.tracer
+                .record_with_dur(SpanKind::GcMajor, pause, live_old + live_young, 0);
+        }
         self.inject(pause);
     }
 

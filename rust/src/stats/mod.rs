@@ -83,6 +83,14 @@ pub const MIN_SPLIT_EMITS: u64 = 1024;
 /// selectivity participates in reordering.
 pub const MIN_FILTER_SEEN: u64 = 1024;
 
+/// Default staleness TTL for flow and filter statistics, in store ticks.
+/// The plan executor advances the store's clock once per completed
+/// collect ([`StatsStore::advance_tick`]); an entry not re-recorded for
+/// this many ticks is considered obsolete — the workload's distribution
+/// may have shifted — and expires lazily at its next lookup. Override
+/// with `MR4R_STATS_TTL` (0 disables expiry).
+pub const DEFAULT_TTL_TICKS: u64 = 512;
+
 // ---------------------------------------------------------------------
 // Observations
 // ---------------------------------------------------------------------
@@ -448,10 +456,16 @@ pub fn filter_order(stats: &[Option<FilterStats>]) -> Option<Vec<usize>> {
 // The store
 // ---------------------------------------------------------------------
 
+/// Flow and filter entries carry the tick they were last recorded at, so
+/// lookups can expire measurements the workload stopped refreshing.
+/// Prefix costs deliberately do not age: `peak_secs` is a conservative
+/// worst-case bound, and the cache's own decay
+/// ([`crate::cache::tier::decay`]) already discounts stale recompute
+/// value per entry.
 #[derive(Debug, Default)]
 struct StoreInner {
-    flows: HashMap<u64, FlowStats>,
-    filters: HashMap<u64, FilterStats>,
+    flows: HashMap<u64, (FlowStats, u64)>,
+    filters: HashMap<u64, (FilterStats, u64)>,
     prefix_costs: HashMap<u64, PrefixCost>,
 }
 
@@ -483,11 +497,27 @@ pub struct PrefixCost {
 /// ([`crate::cache::fingerprint::prefix_fingerprints`]); flow statistics
 /// are keyed by the reduce-shaped stage's prefix, filter statistics by
 /// the filter stage's *original* (recorded) position prefix.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct StatsStore {
     inner: Mutex<StoreInner>,
     records: AtomicU64,
     consult_hits: AtomicU64,
+    expired: AtomicU64,
+    /// Staleness clock: one tick per completed plan collect.
+    tick: AtomicU64,
+    /// Ticks an un-refreshed flow/filter entry stays consultable
+    /// (0 = never expire).
+    ttl: u64,
+}
+
+impl Default for StatsStore {
+    fn default() -> Self {
+        let ttl = std::env::var("MR4R_STATS_TTL")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(DEFAULT_TTL_TICKS);
+        StatsStore::with_ttl(ttl)
+    }
 }
 
 impl StatsStore {
@@ -495,12 +525,35 @@ impl StatsStore {
         Self::default()
     }
 
+    /// A store whose flow/filter entries expire after going `ttl` ticks
+    /// without a fresh recording (0 disables expiry).
+    pub fn with_ttl(ttl: u64) -> Self {
+        StatsStore {
+            inner: Mutex::new(StoreInner::default()),
+            records: AtomicU64::new(0),
+            consult_hits: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+            ttl,
+        }
+    }
+
+    /// Advance the staleness clock one tick. The plan executor calls
+    /// this once per collect epilogue, so entry age is measured in
+    /// completed plans — the same unit the materialization cache's decay
+    /// uses — not wall time.
+    pub fn advance_tick(&self) {
+        self.tick.fetch_add(1, Ordering::Relaxed);
+    }
+
     /// Record one reduce-shaped stage's observed execution.
     pub fn record_flow(&self, fp: u64, obs: FlowObservation) {
+        let now = self.tick.load(Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap();
         let entry = inner.flows.entry(fp).or_default();
-        entry.samples += 1;
-        entry.last = obs;
+        entry.0.samples += 1;
+        entry.0.last = obs;
+        entry.1 = now;
         drop(inner);
         self.records.fetch_add(1, Ordering::Relaxed);
     }
@@ -512,11 +565,13 @@ impl StatsStore {
         if seen == 0 {
             return;
         }
+        let now = self.tick.load(Ordering::Relaxed);
         let mut inner = self.inner.lock().unwrap();
         let entry = inner.filters.entry(fp).or_default();
-        entry.samples += 1;
-        entry.seen = seen;
-        entry.passed = passed;
+        entry.0.samples += 1;
+        entry.0.seen = seen;
+        entry.0.passed = passed;
+        entry.1 = now;
         drop(inner);
         self.records.fetch_add(1, Ordering::Relaxed);
     }
@@ -545,8 +600,22 @@ impl StatsStore {
     }
 
     /// Look up a prefix's flow statistics (a hit counts as a consult).
+    /// An entry past the staleness TTL expires here instead of hitting:
+    /// acting on measurements from a distribution the workload left
+    /// behind is worse than running the static plan.
     pub fn flow(&self, fp: u64) -> Option<FlowStats> {
-        let hit = self.inner.lock().unwrap().flows.get(&fp).copied();
+        let now = self.tick.load(Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let hit = match inner.flows.get(&fp) {
+            Some(&(_, stamp)) if self.ttl > 0 && now.saturating_sub(stamp) > self.ttl => {
+                inner.flows.remove(&fp);
+                self.expired.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Some(&(stats, _)) => Some(stats),
+            None => None,
+        };
+        drop(inner);
         if hit.is_some() {
             self.consult_hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -554,9 +623,20 @@ impl StatsStore {
     }
 
     /// Look up a filter position's statistics (a hit counts as a
-    /// consult).
+    /// consult). Stale entries expire exactly like [`StatsStore::flow`].
     pub fn filter(&self, fp: u64) -> Option<FilterStats> {
-        let hit = self.inner.lock().unwrap().filters.get(&fp).copied();
+        let now = self.tick.load(Ordering::Relaxed);
+        let mut inner = self.inner.lock().unwrap();
+        let hit = match inner.filters.get(&fp) {
+            Some(&(_, stamp)) if self.ttl > 0 && now.saturating_sub(stamp) > self.ttl => {
+                inner.filters.remove(&fp);
+                self.expired.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Some(&(stats, _)) => Some(stats),
+            None => None,
+        };
+        drop(inner);
         if hit.is_some() {
             self.consult_hits.fetch_add(1, Ordering::Relaxed);
         }
@@ -572,6 +652,12 @@ impl StatsStore {
     /// consulted the store" observable.
     pub fn consults(&self) -> u64 {
         self.consult_hits.load(Ordering::Relaxed)
+    }
+
+    /// Flow/filter entries that aged past the TTL and were dropped at
+    /// lookup instead of feeding a hint.
+    pub fn expired(&self) -> u64 {
+        self.expired.load(Ordering::Relaxed)
     }
 
     /// Distinct prefixes with recorded statistics.
@@ -593,6 +679,7 @@ impl StatsStore {
         drop(inner);
         self.records.store(0, Ordering::Relaxed);
         self.consult_hits.store(0, Ordering::Relaxed);
+        self.expired.store(0, Ordering::Relaxed);
     }
 }
 
@@ -650,6 +737,58 @@ mod tests {
         s.clear();
         assert!(s.prefix_cost(9).is_none());
         assert!(s.is_empty());
+    }
+
+    #[test]
+    fn stale_filter_reorder_hint_expires_after_the_ttl() {
+        // A workload phase with one expensive high-pass filter ahead of a
+        // cheap low-pass one: the measurements justify a reorder.
+        let s = StatsStore::with_ttl(4);
+        s.record_filter(1, 10_000, 9_000);
+        s.record_filter(2, 10_000, 500);
+        assert_eq!(
+            filter_order(&[s.filter(1), s.filter(2)]),
+            Some(vec![1, 0]),
+            "fresh selectivities drive the reorder hint"
+        );
+        // The distribution shifts and those filters never run again
+        // (e.g. their prefix is now served by the materialization
+        // cache): after TTL+1 collect epilogues the evidence is stale.
+        for _ in 0..5 {
+            s.advance_tick();
+        }
+        assert!(s.filter(1).is_none(), "stale selectivity must expire");
+        assert!(s.filter(2).is_none());
+        assert_eq!(s.expired(), 2);
+        assert_eq!(
+            filter_order(&[s.filter(1), s.filter(2)]),
+            None,
+            "the obsolete reorder hint dies with its evidence"
+        );
+    }
+
+    #[test]
+    fn flow_statistics_expire_and_restart_cold() {
+        let s = StatsStore::with_ttl(4);
+        s.record_flow(3, big_flow());
+        s.advance_tick();
+        assert_eq!(s.flow(3).unwrap().samples, 1, "within the TTL: consultable");
+        for _ in 0..5 {
+            s.advance_tick();
+        }
+        assert!(s.flow(3).is_none());
+        assert_eq!(s.expired(), 1);
+        // A fresh recording restarts the entry's clock and confidence.
+        s.record_flow(3, big_flow());
+        assert_eq!(s.flow(3).unwrap().samples, 1, "expired entries restart cold");
+        // TTL 0 disables expiry entirely.
+        let forever = StatsStore::with_ttl(0);
+        forever.record_flow(4, big_flow());
+        for _ in 0..100 {
+            forever.advance_tick();
+        }
+        assert!(forever.flow(4).is_some());
+        assert_eq!(forever.expired(), 0);
     }
 
     #[test]

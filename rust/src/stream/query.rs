@@ -574,6 +574,7 @@ where
                 stream: Some(metrics),
                 govern,
                 adaptation: self.adaptation.take(),
+                trace: None,
             },
         }
     }

@@ -28,6 +28,7 @@ use crate::api::traits::{HeapSized, KeyValue};
 use crate::coordinator::pipeline::StreamMetrics;
 use crate::memsim::{CohortId, SimHeap, ThreadAlloc};
 use crate::optimizer::agent::OptimizerAgent;
+use crate::trace::SpanKind;
 use crate::util::hash::FxHashMap;
 
 /// A boxed event-timestamp extractor (`&V -> u64` ticks).
@@ -312,11 +313,18 @@ where
     }
 
     fn fire_window(&mut self, window: u64, ppw: u64) -> WindowResult<K, O> {
+        let fire_start = self.heap.obs().map(|o| o.tracer.now_us());
         let mut acc: FxHashMap<K, H> = FxHashMap::default();
         let span = window..window.saturating_add(ppw);
+        let mut panes_covered = 0u64;
         if self.merge_mode {
             let mut merged = 0u64;
-            for (_, pane) in self.panes.range(span) {
+            for (&pane_id, pane) in self.panes.range(span) {
+                panes_covered += 1;
+                if let Some(o) = self.heap.obs() {
+                    o.tracer
+                        .instant(SpanKind::PaneMerge, pane_id * self.spec.slide, 0);
+                }
                 for (key, holder) in &pane.holders {
                     merged += 1;
                     match acc.entry(key.clone()) {
@@ -333,6 +341,7 @@ where
         } else {
             let mut refolded = 0u64;
             for (_, pane) in self.panes.range(span) {
+                panes_covered += 1;
                 for (key, value) in &pane.buffer {
                     refolded += 1;
                     match acc.entry(key.clone()) {
@@ -362,6 +371,13 @@ where
             .max_ts
             .unwrap_or(self.last_fired_end)
             .saturating_sub(self.last_fired_end);
+        if let Some(o) = self.heap.obs() {
+            o.tracer
+                .record_since(SpanKind::PaneFire, fire_start.unwrap_or(0), end, panes_covered);
+            o.metrics
+                .gauge("stream.watermark_lag_ms")
+                .set(self.metrics.watermark_lag);
+        }
         WindowResult {
             window,
             start,

@@ -1,0 +1,404 @@
+//! The queryable metrics registry: named counters, gauges, and
+//! log-bucketed histograms behind one
+//! [`Runtime::metrics`](crate::api::Runtime::metrics) snapshot.
+//!
+//! Naming scheme: `<subsystem>.<measure>[_<unit>]` — e.g.
+//! `pool.task_us` (task latency histogram, microseconds),
+//! `pool.queue_depth` (gauge), `cache.reload_us`, `govern.admission_wait_us`,
+//! `stream.watermark_lag_ms`. Instruments are created on first use and
+//! live for the registry's lifetime; publishers hold the returned `Arc`
+//! so steady-state recording is a couple of relaxed atomic ops with no
+//! map lookup.
+//!
+//! Histograms are log2-bucketed (`bucket = ⌈log2(v+1)⌉`, 64 buckets):
+//! coarse but constant-space and lock-free, good enough for the
+//! p50/p95/p99 tail shape the scoreboard reports. Percentile estimates
+//! return the upper bound of the bucket the rank falls in.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::json::Json;
+
+/// A monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value.
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, n: u64) {
+        self.v.store(n, Ordering::Relaxed);
+    }
+
+    /// Set only if `n` is larger (high-watermark gauges).
+    pub fn set_max(&self, n: u64) {
+        self.v.fetch_max(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Log2 buckets: values up to 2^63, plus bucket 0 for value 0.
+const BUCKETS: usize = 64;
+
+/// A lock-free log2-bucketed histogram.
+#[derive(Debug)]
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+impl Histogram {
+    fn bucket_of(value: u64) -> usize {
+        (64 - value.leading_zeros() as usize).min(BUCKETS - 1)
+    }
+
+    /// Upper bound of a bucket (the percentile estimate it reports).
+    fn bucket_upper(bucket: usize) -> u64 {
+        if bucket == 0 {
+            0
+        } else {
+            (1u64 << bucket).saturating_sub(1).max(1)
+        }
+    }
+
+    pub fn record(&self, value: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(value, Ordering::Relaxed);
+        self.buckets[Self::bucket_of(value)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a duration in microseconds.
+    pub fn record_secs(&self, secs: f64) {
+        self.record((secs.max(0.0) * 1e6) as u64);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Estimated `q`-quantile (`0.0..=1.0`): upper bound of the bucket
+    /// the rank lands in. 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= rank {
+                return Self::bucket_upper(i);
+            }
+        }
+        Self::bucket_upper(BUCKETS - 1)
+    }
+}
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+impl Instrument {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Instrument::Counter(_) => "counter",
+            Instrument::Gauge(_) => "gauge",
+            Instrument::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// The session metrics registry: get-or-create named instruments,
+/// snapshot them all at once. Owned by
+/// [`Runtime`](crate::api::Runtime); every subsystem publishes into the
+/// same instance via the attached [`Obs`](super::Obs) handle.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<HashMap<String, Instrument>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    ///
+    /// # Panics
+    ///
+    /// If `name` is already registered as a different instrument type —
+    /// a naming bug that should fail loudly in tests.
+    pub fn counter(&self, name: &str) -> Arc<Counter> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = inner
+            .entry(name.to_string())
+            .or_insert_with(|| Instrument::Counter(Arc::new(Counter::default())));
+        match entry {
+            Instrument::Counter(c) => Arc::clone(c),
+            other => panic!("metric `{name}` is a {}, not a counter", other.type_name()),
+        }
+    }
+
+    /// Get or create a gauge (panics on a type conflict, like
+    /// [`MetricsRegistry::counter`]).
+    pub fn gauge(&self, name: &str) -> Arc<Gauge> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = inner
+            .entry(name.to_string())
+            .or_insert_with(|| Instrument::Gauge(Arc::new(Gauge::default())));
+        match entry {
+            Instrument::Gauge(g) => Arc::clone(g),
+            other => panic!("metric `{name}` is a {}, not a gauge", other.type_name()),
+        }
+    }
+
+    /// Get or create a histogram (panics on a type conflict, like
+    /// [`MetricsRegistry::counter`]).
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let entry = inner
+            .entry(name.to_string())
+            .or_insert_with(|| Instrument::Histogram(Arc::new(Histogram::default())));
+        match entry {
+            Instrument::Histogram(h) => Arc::clone(h),
+            other => panic!("metric `{name}` is a {}, not a histogram", other.type_name()),
+        }
+    }
+
+    /// Registered instrument count.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// A consistent point-in-time view of every instrument, sorted by
+    /// name.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        let mut entries: Vec<MetricEntry> = inner
+            .iter()
+            .map(|(name, inst)| MetricEntry {
+                name: name.clone(),
+                value: match inst {
+                    Instrument::Counter(c) => MetricValue::Counter(c.get()),
+                    Instrument::Gauge(g) => MetricValue::Gauge(g.get()),
+                    Instrument::Histogram(h) => MetricValue::Histogram {
+                        count: h.count(),
+                        sum: h.sum(),
+                        p50: h.quantile(0.50),
+                        p95: h.quantile(0.95),
+                        p99: h.quantile(0.99),
+                    },
+                },
+            })
+            .collect();
+        entries.sort_by(|a, b| a.name.cmp(&b.name));
+        MetricsSnapshot { entries }
+    }
+}
+
+/// One instrument's snapshotted value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(u64),
+    Histogram {
+        count: u64,
+        sum: u64,
+        p50: u64,
+        p95: u64,
+        p99: u64,
+    },
+}
+
+/// One named instrument in a snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricEntry {
+    pub name: String,
+    pub value: MetricValue,
+}
+
+/// A point-in-time view of the whole registry, sorted by name.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub entries: Vec<MetricEntry>,
+}
+
+impl MetricsSnapshot {
+    /// Look up one instrument by name.
+    pub fn get(&self, name: &str) -> Option<&MetricValue> {
+        self.entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| &e.value)
+    }
+
+    /// Render as a JSON object: counters and gauges as numbers,
+    /// histograms as `{count, sum, p50, p95, p99}` objects.
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        for e in &self.entries {
+            obj = match &e.value {
+                MetricValue::Counter(v) | MetricValue::Gauge(v) => obj.set(&e.name, *v),
+                MetricValue::Histogram {
+                    count,
+                    sum,
+                    p50,
+                    p95,
+                    p99,
+                } => obj.set(
+                    &e.name,
+                    Json::obj()
+                        .set("count", *count)
+                        .set("sum", *sum)
+                        .set("p50", *p50)
+                        .set("p95", *p95)
+                        .set("p99", *p99),
+                ),
+            };
+        }
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_round_trip() {
+        let m = MetricsRegistry::new();
+        let c = m.counter("cache.reloads");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same name returns the same instrument.
+        assert_eq!(m.counter("cache.reloads").get(), 5);
+        let g = m.gauge("pool.queue_depth");
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        g.set_max(2);
+        assert_eq!(g.get(), 3);
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a gauge")]
+    fn type_conflicts_fail_loudly() {
+        let m = MetricsRegistry::new();
+        m.counter("x");
+        m.gauge("x");
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_the_distribution() {
+        let m = MetricsRegistry::new();
+        let h = m.histogram("pool.task_us");
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 1000);
+        assert_eq!(h.sum(), 500_500);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        // Log2 buckets: estimates are upper bounds of the right bucket.
+        assert!((511..=1023).contains(&p50), "p50 {p50}");
+        assert!(p99 >= 1000, "p99 {p99}");
+        assert!(p50 <= p99);
+        assert_eq!(m.histogram("pool.task_us").count(), 1000);
+        // Empty histogram reports zeros.
+        assert_eq!(m.histogram("empty").quantile(0.5), 0);
+    }
+
+    #[test]
+    fn snapshot_sorts_and_serializes() {
+        let m = MetricsRegistry::new();
+        m.counter("b.count").add(2);
+        m.gauge("a.depth").set(9);
+        m.histogram("c.lat_us").record(100);
+        let snap = m.snapshot();
+        let names: Vec<&str> = snap.entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(names, vec!["a.depth", "b.count", "c.lat_us"]);
+        assert_eq!(snap.get("b.count"), Some(&MetricValue::Counter(2)));
+        let json = snap.to_json().to_string();
+        assert!(json.contains("\"a.depth\":9"));
+        assert!(json.contains("\"count\":1"));
+        assert!(json.contains("\"p95\""));
+    }
+
+    #[test]
+    fn concurrent_publishers_do_not_lose_counts() {
+        let m = Arc::new(MetricsRegistry::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = Arc::clone(&m);
+                s.spawn(move || {
+                    let c = m.counter("hits");
+                    let h = m.histogram("lat");
+                    for i in 0..1000u64 {
+                        c.inc();
+                        h.record(i);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("hits").get(), 8000);
+        assert_eq!(m.histogram("lat").count(), 8000);
+    }
+}

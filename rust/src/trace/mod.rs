@@ -1,0 +1,845 @@
+//! Unified session tracing: a low-overhead span/event timeline plus the
+//! [`MetricsRegistry`] (see [`metrics`]) behind one `Runtime`-owned
+//! handle.
+//!
+//! The paper's optimizer exists because someone *observed* runtime
+//! behavior — map-phase time, GC pressure — and fed it back into the
+//! framework. This module is that observation layer for the whole
+//! session: every subsystem (planner lowering, admission, batch
+//! scheduling, per-shard task execution, the two-tier cache, streaming
+//! panes, the simulated heap) records spans and instant events into
+//! per-thread lock-free ring buffers owned by one [`Tracer`].
+//!
+//! # Design constraints
+//!
+//! * **Tracing off ≈ one atomic load.** [`Tracer::span`] reads a single
+//!   `AtomicBool`; when disabled it returns an inert guard without
+//!   touching the clock, allocating, or taking any lock.
+//! * **No locks on the hot path when enabled.** Each thread records
+//!   into its own single-producer ring ([`Ring`]); the only lock is
+//!   taken once per thread at ring registration. Slots carry per-slot
+//!   sequence numbers (seqlock style) so the exporter can snapshot from
+//!   another thread and skip torn slots instead of blocking writers.
+//! * **Bounded, drop-oldest.** Rings hold [`Tracer::capacity`] events;
+//!   the wrapping write cursor overwrites the oldest, and
+//!   [`Ring::dropped`] counts the overwritten events so an export can
+//!   say "this timeline is missing its head".
+//! * **Complete events, not begin/end pairs.** A span is recorded as
+//!   one Chrome `"X"` event at guard drop (start + duration), so a
+//!   dropped slot loses one span — never an unmatched begin.
+//!
+//! # Export
+//!
+//! [`Tracer::export_chrome_trace`] emits the Chrome `trace_event` JSON
+//! array format (load the file in `chrome://tracing` or
+//! [Perfetto](https://ui.perfetto.dev)) with `pid` = session and `tid` =
+//! worker index (worker threads pre-register their id; other threads get
+//! stable synthetic tids). [`Tracer::summary_since`] distills the same
+//! ring contents into a [`TraceSummary`] for
+//! [`PlanReport::trace`](crate::api::plan::PlanReport).
+
+pub mod metrics;
+
+pub use metrics::{MetricValue, MetricsRegistry, MetricsSnapshot};
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// What a span or instant event describes. The two `u64` args on each
+/// event are kind-specific (documented per variant).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// Whole-plan lowering (a = stage count, b = 1 if adaptive).
+    PlanLower,
+    /// One adaptive decision applied to a collect (a = decision index
+    /// within the plan's [`AdaptationReport`](crate::stats::AdaptationReport)).
+    AdaptiveDecision,
+    /// An admission verdict (a = 1 admitted / 0 rejected, b = tenant).
+    Admission,
+    /// One tagged batch from submit to drain (a = batch id,
+    /// b = executed tasks).
+    Batch,
+    /// One task executed by a worker (a = batch id, b = 1 if panicked).
+    Task,
+    /// A map phase of one reduce-shaped stage (a = batch id, b = chunks).
+    MapPhase,
+    /// A reduce/finalize phase (a = batch id, b = shards).
+    ReducePhase,
+    /// Cache read served from a ready hot-tier entry (confirmed after
+    /// the reader's typed downcast; no args).
+    CacheHit,
+    /// Cache read that claimed a materialization (a = fingerprint).
+    CacheMiss,
+    /// Cache read that waited on an in-flight claim and shared its
+    /// result (no args).
+    CacheShared,
+    /// A claimed prefix computed and inserted (a = bytes, b = items);
+    /// the duration is the producing plan's measured recompute time.
+    CacheMaterialize,
+    /// A hot entry demoted to the spill tier (a = bytes, b = items).
+    CacheSpill,
+    /// A spilled entry reloaded into the hot tier (a = bytes,
+    /// b = items).
+    CacheReload,
+    /// A spilled entry aged out: decayed value below reload cost
+    /// (a = bytes, b = items).
+    CacheAgeOut,
+    /// One window fired: its panes merged and finalized (a = window end
+    /// event-time, b = panes merged).
+    PaneFire,
+    /// One pane's holders merged into a firing window (a = pane start).
+    PaneMerge,
+    /// A heap cohort registered (a = cohort slot).
+    CohortAlloc,
+    /// A heap cohort bulk-released (a = cohort slot, b = old-gen bytes
+    /// turned to garbage).
+    CohortRelease,
+    /// A minor collection (a = promoted bytes, b = live young after).
+    GcMinor,
+    /// A major collection (a = live bytes scanned).
+    GcMajor,
+    /// Promotion pressure crossed the major-GC trigger
+    /// (a = promoted-since-major bytes).
+    GcPressure,
+}
+
+impl SpanKind {
+    /// Stable display name (Chrome trace `name`).
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::PlanLower => "plan.lower",
+            SpanKind::AdaptiveDecision => "plan.adaptive_decision",
+            SpanKind::Admission => "govern.admission",
+            SpanKind::Batch => "pool.batch",
+            SpanKind::Task => "pool.task",
+            SpanKind::MapPhase => "flow.map_phase",
+            SpanKind::ReducePhase => "flow.reduce_phase",
+            SpanKind::CacheHit => "cache.hit",
+            SpanKind::CacheMiss => "cache.miss",
+            SpanKind::CacheShared => "cache.shared_in_flight",
+            SpanKind::CacheMaterialize => "cache.materialize",
+            SpanKind::CacheSpill => "cache.spill",
+            SpanKind::CacheReload => "cache.reload",
+            SpanKind::CacheAgeOut => "cache.age_out",
+            SpanKind::PaneFire => "stream.pane_fire",
+            SpanKind::PaneMerge => "stream.pane_merge",
+            SpanKind::CohortAlloc => "memsim.cohort_alloc",
+            SpanKind::CohortRelease => "memsim.cohort_release",
+            SpanKind::GcMinor => "memsim.minor_gc",
+            SpanKind::GcMajor => "memsim.major_gc",
+            SpanKind::GcPressure => "memsim.gc_pressure",
+        }
+    }
+
+    /// Coarse phase bucket (Chrome trace `cat`, [`TraceSummary`] rows).
+    pub fn phase(self) -> &'static str {
+        match self {
+            SpanKind::PlanLower | SpanKind::AdaptiveDecision => "plan",
+            SpanKind::Admission => "govern",
+            SpanKind::Batch | SpanKind::Task => "schedule",
+            SpanKind::MapPhase | SpanKind::ReducePhase => "flow",
+            SpanKind::CacheHit
+            | SpanKind::CacheMiss
+            | SpanKind::CacheShared
+            | SpanKind::CacheMaterialize
+            | SpanKind::CacheSpill
+            | SpanKind::CacheReload
+            | SpanKind::CacheAgeOut => "cache",
+            SpanKind::PaneFire | SpanKind::PaneMerge => "stream",
+            SpanKind::CohortAlloc
+            | SpanKind::CohortRelease
+            | SpanKind::GcMinor
+            | SpanKind::GcMajor
+            | SpanKind::GcPressure => "memsim",
+        }
+    }
+
+    fn from_code(code: u64) -> Option<SpanKind> {
+        use SpanKind::*;
+        const ALL: [SpanKind; 21] = [
+            PlanLower,
+            AdaptiveDecision,
+            Admission,
+            Batch,
+            Task,
+            MapPhase,
+            ReducePhase,
+            CacheHit,
+            CacheMiss,
+            CacheShared,
+            CacheMaterialize,
+            CacheSpill,
+            CacheReload,
+            CacheAgeOut,
+            PaneFire,
+            PaneMerge,
+            CohortAlloc,
+            CohortRelease,
+            GcMinor,
+            GcMajor,
+            GcPressure,
+        ];
+        ALL.get(code as usize).copied()
+    }
+
+    fn code(self) -> u64 {
+        use SpanKind::*;
+        match self {
+            PlanLower => 0,
+            AdaptiveDecision => 1,
+            Admission => 2,
+            Batch => 3,
+            Task => 4,
+            MapPhase => 5,
+            ReducePhase => 6,
+            CacheHit => 7,
+            CacheMiss => 8,
+            CacheShared => 9,
+            CacheMaterialize => 10,
+            CacheSpill => 11,
+            CacheReload => 12,
+            CacheAgeOut => 13,
+            PaneFire => 14,
+            PaneMerge => 15,
+            CohortAlloc => 16,
+            CohortRelease => 17,
+            GcMinor => 18,
+            GcMajor => 19,
+            GcPressure => 20,
+        }
+    }
+}
+
+/// One recorded span (`dur_us > 0`) or instant event (`dur_us == 0`).
+/// Timestamps are microseconds since the tracer's epoch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub kind: SpanKind,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific argument (see [`SpanKind`] variant docs).
+    pub a: u64,
+    /// Second kind-specific argument.
+    pub b: u64,
+}
+
+/// Words per ring slot: per-slot sequence + the five event words.
+const SLOT_WORDS: usize = 6;
+
+/// One thread's bounded single-producer event ring. Only the owning
+/// thread writes; the exporter reads concurrently and skips slots whose
+/// sequence word shows a write in progress (seqlock per slot).
+struct Ring {
+    /// Chrome `tid`: the worker id for pool threads (pre-registered via
+    /// [`set_thread_tid`]), a stable synthetic id otherwise.
+    tid: u64,
+    name: String,
+    /// Monotonic write cursor; slot index is `head % capacity`.
+    head: AtomicU64,
+    /// `capacity * SLOT_WORDS` atomics: per slot `[seq, kind, start_us,
+    /// dur_us, a, b]`. `seq == 2*gen + 2` marks generation `gen` fully
+    /// written; odd values mark a write in progress.
+    slots: Box<[AtomicU64]>,
+    capacity: usize,
+}
+
+impl Ring {
+    fn new(tid: u64, name: String, capacity: usize) -> Ring {
+        let words = (0..capacity * SLOT_WORDS)
+            .map(|_| AtomicU64::new(0))
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring {
+            tid,
+            name,
+            head: AtomicU64::new(0),
+            slots: words,
+            capacity,
+        }
+    }
+
+    /// Record one event. Caller must be the owning thread.
+    fn push(&self, kind: SpanKind, start_us: u64, dur_us: u64, a: u64, b: u64) {
+        let gen = self.head.load(Ordering::Relaxed);
+        let base = (gen as usize % self.capacity) * SLOT_WORDS;
+        let s = &self.slots;
+        s[base].store(2 * gen + 1, Ordering::Release);
+        s[base + 1].store(kind.code(), Ordering::Relaxed);
+        s[base + 2].store(start_us, Ordering::Relaxed);
+        s[base + 3].store(dur_us, Ordering::Relaxed);
+        s[base + 4].store(a, Ordering::Relaxed);
+        s[base + 5].store(b, Ordering::Relaxed);
+        s[base].store(2 * gen + 2, Ordering::Release);
+        self.head.store(gen + 1, Ordering::Release);
+    }
+
+    /// Events overwritten so far (drop-oldest).
+    fn dropped(&self) -> u64 {
+        self.head
+            .load(Ordering::Acquire)
+            .saturating_sub(self.capacity as u64)
+    }
+
+    /// Snapshot the resident events, oldest first, skipping torn slots.
+    fn drain(&self) -> Vec<Event> {
+        let head = self.head.load(Ordering::Acquire);
+        let start = head.saturating_sub(self.capacity as u64);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for gen in start..head {
+            let base = (gen as usize % self.capacity) * SLOT_WORDS;
+            let s = &self.slots;
+            if s[base].load(Ordering::Acquire) != 2 * gen + 2 {
+                continue; // torn or already overwritten by a newer lap
+            }
+            let kind = s[base + 1].load(Ordering::Relaxed);
+            let ev = Event {
+                kind: match SpanKind::from_code(kind) {
+                    Some(k) => k,
+                    None => continue,
+                },
+                start_us: s[base + 2].load(Ordering::Relaxed),
+                dur_us: s[base + 3].load(Ordering::Relaxed),
+                a: s[base + 4].load(Ordering::Relaxed),
+                b: s[base + 5].load(Ordering::Relaxed),
+            };
+            if s[base].load(Ordering::Acquire) != 2 * gen + 2 {
+                continue; // overwritten while we read
+            }
+            out.push(ev);
+        }
+        out
+    }
+}
+
+thread_local! {
+    /// Per-thread `(tracer id, ring)` registry — one ring per tracer a
+    /// thread has recorded into.
+    static THREAD_RINGS: RefCell<Vec<(u64, Arc<Ring>)>> = const { RefCell::new(Vec::new()) };
+    /// Worker-id override installed by pool worker threads so their
+    /// Chrome `tid` is the worker index, not a synthetic id.
+    static THREAD_TID: std::cell::Cell<Option<u64>> = const { std::cell::Cell::new(None) };
+}
+
+/// Pin the calling thread's trace `tid` (worker threads call this once
+/// with their worker index before recording anything).
+pub fn set_thread_tid(tid: u64) {
+    THREAD_TID.with(|t| t.set(Some(tid)));
+}
+
+static NEXT_TRACER_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Synthetic tid base for threads that never called [`set_thread_tid`]
+/// (drivers, tests): far above any plausible worker index.
+const SYNTHETIC_TID_BASE: u64 = 1000;
+
+struct TracerInner {
+    id: u64,
+    enabled: AtomicBool,
+    epoch: Instant,
+    capacity: usize,
+    rings: Mutex<Vec<Arc<Ring>>>,
+}
+
+/// The session tracer: cheap to clone (`Arc` inner), safe to record
+/// into from any thread. Disabled by default — [`Tracer::set_enabled`]
+/// or the `MR4R_TRACE=1` environment switch turn it on.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<TracerInner>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    /// Default ring capacity per thread, in events. Override with
+    /// `MR4R_TRACE_CAPACITY`.
+    pub const DEFAULT_CAPACITY: usize = 16 * 1024;
+
+    pub fn new() -> Tracer {
+        let capacity = std::env::var("MR4R_TRACE_CAPACITY")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&c| c > 0)
+            .unwrap_or(Self::DEFAULT_CAPACITY);
+        Tracer::with_capacity(capacity)
+    }
+
+    /// A tracer with an explicit per-thread ring capacity (events).
+    pub fn with_capacity(capacity: usize) -> Tracer {
+        Tracer {
+            inner: Arc::new(TracerInner {
+                id: NEXT_TRACER_ID.fetch_add(1, Ordering::Relaxed),
+                enabled: AtomicBool::new(false),
+                epoch: Instant::now(),
+                capacity: capacity.max(16),
+                rings: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Per-thread ring capacity, events.
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Whether events are being recorded — the one hot-path check.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on or off (off is the default).
+    pub fn set_enabled(&self, on: bool) {
+        self.inner.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Microseconds since the tracer epoch.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.inner.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span; the event is recorded when the guard drops. When
+    /// tracing is off this is one atomic load and an inert guard.
+    #[inline]
+    pub fn span(&self, kind: SpanKind, a: u64, b: u64) -> SpanGuard<'_> {
+        if !self.enabled() {
+            return SpanGuard {
+                tracer: None,
+                kind,
+                start_us: 0,
+                a,
+                b,
+            };
+        }
+        SpanGuard {
+            tracer: Some(self),
+            kind,
+            start_us: self.now_us(),
+            a,
+            b,
+        }
+    }
+
+    /// Record an instant event (duration 0). No-op when disabled.
+    #[inline]
+    pub fn instant(&self, kind: SpanKind, a: u64, b: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let now = self.now_us();
+        self.record(kind, now, 0, a, b);
+    }
+
+    /// Record a span that started at `start_us` (from [`Tracer::now_us`])
+    /// and ends now. No-op when disabled.
+    #[inline]
+    pub fn record_since(&self, kind: SpanKind, start_us: u64, a: u64, b: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let dur = self.now_us().saturating_sub(start_us);
+        self.record(kind, start_us, dur, a, b);
+    }
+
+    /// Record a span with an externally measured duration ending now —
+    /// for subsystems that already hold a stopwatch value (e.g. the
+    /// cache's materialization wall time, the memsim's injected pauses).
+    #[inline]
+    pub fn record_with_dur(&self, kind: SpanKind, dur_secs: f64, a: u64, b: u64) {
+        if !self.enabled() {
+            return;
+        }
+        let dur_us = (dur_secs.max(0.0) * 1e6) as u64;
+        let now = self.now_us();
+        self.record(kind, now.saturating_sub(dur_us), dur_us, a, b);
+    }
+
+    fn record(&self, kind: SpanKind, start_us: u64, dur_us: u64, a: u64, b: u64) {
+        THREAD_RINGS.with(|cell| {
+            let mut rings = cell.borrow_mut();
+            let ring = match rings.iter().find(|(id, _)| *id == self.inner.id) {
+                Some((_, r)) => Arc::clone(r),
+                None => {
+                    let mut registry = self.inner.rings.lock().unwrap_or_else(|e| e.into_inner());
+                    let tid = THREAD_TID
+                        .with(|t| t.get())
+                        .unwrap_or(SYNTHETIC_TID_BASE + registry.len() as u64);
+                    let name = std::thread::current()
+                        .name()
+                        .unwrap_or("thread")
+                        .to_string();
+                    let ring = Arc::new(Ring::new(tid, name, self.inner.capacity));
+                    registry.push(Arc::clone(&ring));
+                    drop(registry);
+                    rings.push((self.inner.id, Arc::clone(&ring)));
+                    ring
+                }
+            };
+            ring.push(kind, start_us, dur_us, a, b);
+        });
+    }
+
+    /// Snapshot every thread's resident events (plus tid / thread name /
+    /// dropped count), oldest first within each thread.
+    pub fn snapshot(&self) -> Vec<ThreadEvents> {
+        let rings = self.inner.rings.lock().unwrap_or_else(|e| e.into_inner());
+        rings
+            .iter()
+            .map(|r| ThreadEvents {
+                tid: r.tid,
+                name: r.name.clone(),
+                dropped: r.dropped(),
+                events: r.drain(),
+            })
+            .collect()
+    }
+
+    /// Total events recorded of one kind (across all threads, resident
+    /// only — dropped events are gone).
+    pub fn count(&self, kind: SpanKind) -> u64 {
+        self.snapshot()
+            .iter()
+            .flat_map(|t| t.events.iter())
+            .filter(|e| e.kind == kind)
+            .count() as u64
+    }
+
+    /// Total resident events across all threads.
+    pub fn total_events(&self) -> u64 {
+        self.snapshot().iter().map(|t| t.events.len() as u64).sum()
+    }
+
+    /// Total events lost to ring overwrites.
+    pub fn dropped(&self) -> u64 {
+        let rings = self.inner.rings.lock().unwrap_or_else(|e| e.into_inner());
+        rings.iter().map(|r| r.dropped()).sum()
+    }
+
+    /// The full session timeline in Chrome `trace_event` JSON object
+    /// format: load the serialized string in `chrome://tracing` or
+    /// Perfetto. `pid` is the session (always 1), `tid` the worker.
+    pub fn export_chrome_trace(&self) -> Json {
+        let mut events = Json::arr();
+        for t in self.snapshot() {
+            // Thread-name metadata record so the UI labels rows.
+            events.push(
+                Json::obj()
+                    .set("name", "thread_name")
+                    .set("ph", "M")
+                    .set("pid", 1u64)
+                    .set("tid", t.tid)
+                    .set("args", Json::obj().set("name", t.name.as_str())),
+            );
+            for e in &t.events {
+                let args = Json::obj().set("a", e.a).set("b", e.b);
+                let mut obj = Json::obj()
+                    .set("name", e.kind.label())
+                    .set("cat", e.kind.phase())
+                    .set("ph", if e.dur_us > 0 { "X" } else { "i" })
+                    .set("ts", e.start_us)
+                    .set("pid", 1u64)
+                    .set("tid", t.tid);
+                if e.dur_us > 0 {
+                    obj = obj.set("dur", e.dur_us);
+                } else {
+                    obj = obj.set("s", "t");
+                }
+                events.push(obj.set("args", args));
+            }
+        }
+        Json::obj()
+            .set("traceEvents", events)
+            .set("displayTimeUnit", "ms")
+            .set("otherData", Json::obj().set("dropped_events", self.dropped()))
+    }
+
+    /// Summarize every event in the window `[since_us, now]` — what the
+    /// plan epilogue attaches to
+    /// [`PlanReport::trace`](crate::api::plan::PlanReport). Under
+    /// concurrent plans the window also contains other plans' events, so
+    /// the summary is an *attribution estimate*, exact when one plan
+    /// runs at a time.
+    pub fn summary_since(&self, since_us: u64) -> TraceSummary {
+        let mut summary = TraceSummary {
+            dropped: self.dropped(),
+            ..TraceSummary::default()
+        };
+        let mut busy_per_tid: Vec<(u64, f64)> = Vec::new();
+        for t in self.snapshot() {
+            let mut tid_busy = 0.0f64;
+            for e in t.events.iter().filter(|e| e.start_us >= since_us) {
+                summary.spans += 1;
+                let secs = e.dur_us as f64 / 1e6;
+                let phase = e.kind.phase();
+                match summary.phases.iter_mut().find(|p| p.phase == phase) {
+                    Some(p) => {
+                        p.count += 1;
+                        p.busy_secs += secs;
+                    }
+                    None => summary.phases.push(PhaseSummary {
+                        phase,
+                        count: 1,
+                        busy_secs: secs,
+                    }),
+                }
+                // Worker-busy kinds only: the Batch span is a driver's
+                // submit-to-drain wait and would double-count its tasks.
+                if matches!(
+                    e.kind,
+                    SpanKind::Task
+                        | SpanKind::CacheMaterialize
+                        | SpanKind::GcMinor
+                        | SpanKind::GcMajor
+                        | SpanKind::PaneFire
+                ) {
+                    tid_busy += secs;
+                }
+            }
+            if tid_busy > 0.0 {
+                busy_per_tid.push((t.tid, tid_busy));
+            }
+        }
+        summary.phases.sort_by(|x, y| x.phase.cmp(y.phase));
+        summary.critical_path_secs = busy_per_tid.iter().map(|(_, b)| *b).fold(0.0, f64::max);
+        summary
+    }
+}
+
+/// One thread's snapshot slice (see [`Tracer::snapshot`]).
+#[derive(Clone, Debug)]
+pub struct ThreadEvents {
+    pub tid: u64,
+    pub name: String,
+    pub dropped: u64,
+    pub events: Vec<Event>,
+}
+
+/// Per-phase rollup inside a [`TraceSummary`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PhaseSummary {
+    /// Phase bucket ([`SpanKind::phase`]).
+    pub phase: &'static str,
+    /// Events recorded in the window.
+    pub count: u64,
+    /// Σ span durations, seconds (instants contribute 0).
+    pub busy_secs: f64,
+}
+
+/// Span-count and wall-time rollup of a trace window — the
+/// [`PlanReport`](crate::api::plan::PlanReport) attachment.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSummary {
+    /// Events in the window (spans + instants).
+    pub spans: u64,
+    /// Session-wide events lost to ring overwrites (not window-scoped:
+    /// a nonzero value means *some* timeline head is missing).
+    pub dropped: u64,
+    /// Per-phase counts and busy time, sorted by phase name.
+    pub phases: Vec<PhaseSummary>,
+    /// Longest per-thread busy time in the window — a lower-bound
+    /// critical-path estimate (a thread can't finish before its own
+    /// recorded work).
+    pub critical_path_secs: f64,
+}
+
+impl TraceSummary {
+    /// The rollup row for one phase bucket, if any event landed there.
+    pub fn phase(&self, name: &str) -> Option<&PhaseSummary> {
+        self.phases.iter().find(|p| p.phase == name)
+    }
+}
+
+/// A pending span; records one complete event at drop. Inert (no clock
+/// read, nothing recorded) when the tracer was disabled at creation.
+pub struct SpanGuard<'a> {
+    tracer: Option<&'a Tracer>,
+    kind: SpanKind,
+    start_us: u64,
+    a: u64,
+    b: u64,
+}
+
+impl SpanGuard<'_> {
+    /// Update the span's args before it records (e.g. a batch span
+    /// learning its executed-task count at drain).
+    pub fn set_args(&mut self, a: u64, b: u64) {
+        self.a = a;
+        self.b = b;
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(t) = self.tracer {
+            let dur = t.now_us().saturating_sub(self.start_us);
+            t.record(self.kind, self.start_us, dur, self.a, self.b);
+        }
+    }
+}
+
+/// The observability handle subsystems attach: the session tracer plus
+/// its metrics registry. Cloneable; attached once per subsystem via
+/// `OnceLock` (the same late-binding pattern as
+/// [`MaterializationCache::attach_cost_feed`](crate::cache::MaterializationCache::attach_cost_feed)).
+#[derive(Clone)]
+pub struct Obs {
+    pub tracer: Tracer,
+    pub metrics: Arc<MetricsRegistry>,
+}
+
+impl Obs {
+    pub fn new() -> Obs {
+        Obs {
+            tracer: Tracer::new(),
+            metrics: Arc::new(MetricsRegistry::new()),
+        }
+    }
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new();
+        assert!(!t.enabled());
+        {
+            let _s = t.span(SpanKind::Task, 1, 2);
+        }
+        t.instant(SpanKind::CacheHit, 0, 0);
+        t.record_with_dur(SpanKind::GcMinor, 0.5, 0, 0);
+        assert_eq!(t.total_events(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn spans_and_instants_record_with_args() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        {
+            let mut s = t.span(SpanKind::Batch, 7, 0);
+            s.set_args(7, 42);
+        }
+        t.instant(SpanKind::CacheMiss, 9, 0);
+        let snap = t.snapshot();
+        let events: Vec<&Event> = snap.iter().flat_map(|t| t.events.iter()).collect();
+        assert_eq!(events.len(), 2);
+        let batch = events.iter().find(|e| e.kind == SpanKind::Batch).unwrap();
+        assert_eq!((batch.a, batch.b), (7, 42));
+        let miss = events.iter().find(|e| e.kind == SpanKind::CacheMiss).unwrap();
+        assert_eq!(miss.dur_us, 0);
+        assert_eq!(t.count(SpanKind::CacheMiss), 1);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let t = Tracer::with_capacity(16);
+        t.set_enabled(true);
+        for i in 0..40u64 {
+            t.instant(SpanKind::Task, i, 0);
+        }
+        assert_eq!(t.total_events(), 16);
+        assert_eq!(t.dropped(), 24);
+        // Survivors are the newest events.
+        let snap = t.snapshot();
+        let first = snap[0].events.first().unwrap();
+        assert_eq!(first.a, 24);
+    }
+
+    #[test]
+    fn concurrent_writers_keep_per_thread_rings() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        std::thread::scope(|s| {
+            for w in 0..4u64 {
+                let t = t.clone();
+                s.spawn(move || {
+                    set_thread_tid(w);
+                    for _ in 0..100 {
+                        t.instant(SpanKind::Task, w, 0);
+                    }
+                });
+            }
+        });
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 4);
+        let mut tids: Vec<u64> = snap.iter().map(|r| r.tid).collect();
+        tids.sort();
+        assert_eq!(tids, vec![0, 1, 2, 3]);
+        assert_eq!(t.count(SpanKind::Task), 400);
+    }
+
+    #[test]
+    fn exporter_is_safe_under_concurrent_writes() {
+        let t = Tracer::with_capacity(64);
+        t.set_enabled(true);
+        std::thread::scope(|s| {
+            let writer = t.clone();
+            s.spawn(move || {
+                for i in 0..20_000u64 {
+                    writer.instant(SpanKind::Task, i, i);
+                }
+            });
+            for _ in 0..50 {
+                // Every snapshotted event must be internally consistent
+                // (a == b by construction; torn slots are skipped).
+                for te in t.snapshot() {
+                    for e in te.events {
+                        assert_eq!(e.a, e.b, "torn slot leaked");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn chrome_export_shape() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        {
+            let _s = t.span(SpanKind::PlanLower, 3, 1);
+        }
+        t.instant(SpanKind::Admission, 1, 0);
+        let json = t.export_chrome_trace().to_string();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"name\":\"plan.lower\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"pid\":1"));
+        assert!(json.contains("\"displayTimeUnit\":\"ms\""));
+    }
+
+    #[test]
+    fn summary_rolls_up_phases_and_critical_path() {
+        let t = Tracer::new();
+        t.set_enabled(true);
+        t.record_with_dur(SpanKind::Task, 0.010, 1, 0);
+        t.record_with_dur(SpanKind::Task, 0.020, 1, 0);
+        t.instant(SpanKind::CacheHit, 0, 0);
+        let s = t.summary_since(0);
+        assert_eq!(s.spans, 3);
+        let sched = s.phase("schedule").unwrap();
+        assert_eq!(sched.count, 2);
+        assert!(sched.busy_secs >= 0.029, "busy {}", sched.busy_secs);
+        assert_eq!(s.phase("cache").unwrap().count, 1);
+        assert!(s.critical_path_secs >= 0.029);
+        // A later window excludes the earlier events.
+        let later = t.summary_since(t.now_us() + 1_000_000);
+        assert_eq!(later.spans, 0);
+    }
+}

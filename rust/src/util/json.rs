@@ -1,8 +1,11 @@
-//! Minimal JSON document builder (serde is not in the offline vendor set).
+//! Minimal JSON document builder and parser (serde is not in the
+//! offline vendor set).
 //!
-//! Only what the report writer needs: objects, arrays, strings, numbers,
-//! booleans. Output is deterministic (insertion order preserved) so report
-//! files diff cleanly between runs.
+//! Only what the report writer and the observability round-trip tests
+//! need: objects, arrays, strings, numbers, booleans. Output is
+//! deterministic (insertion order preserved) so report files diff
+//! cleanly between runs; [`Json::parse`] reads the same dialect back
+//! (full JSON, including `\uXXXX` escapes and surrogate pairs).
 
 use std::fmt::Write as _;
 
@@ -42,6 +45,55 @@ impl Json {
             Json::Arr(items) => items.push(val.into()),
             _ => panic!("Json::push on non-array"),
         }
+    }
+
+    /// Parse a JSON document (rejects trailing garbage).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let value = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            return Err(format!("trailing garbage at byte {pos}"));
+        }
+        Ok(value)
+    }
+
+    /// Object field lookup (`None` on non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The array items, if this is an array.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// The string value, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The numeric value, if this is a number.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// The numeric value as an integer (rounds toward zero).
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|n| n as u64)
     }
 
     /// Serialize compactly.
@@ -124,6 +176,168 @@ impl Json {
             other => other.write(out),
         }
     }
+}
+
+fn skip_ws(bytes: &[u8], pos: &mut usize) {
+    while *pos < bytes.len() && matches!(bytes[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn expect(bytes: &[u8], pos: &mut usize, lit: &str) -> Result<(), String> {
+    if bytes[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        Err(format!("expected `{lit}` at byte {pos}", pos = *pos))
+    }
+}
+
+fn parse_value(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
+    skip_ws(bytes, pos);
+    match bytes.get(*pos) {
+        None => Err("unexpected end of input".to_string()),
+        Some(b'n') => expect(bytes, pos, "null").map(|_| Json::Null),
+        Some(b't') => expect(bytes, pos, "true").map(|_| Json::Bool(true)),
+        Some(b'f') => expect(bytes, pos, "false").map(|_| Json::Bool(false)),
+        Some(b'"') => parse_string(bytes, pos).map(Json::Str),
+        Some(b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(bytes, pos)?);
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => return Err(format!("expected `,` or `]` at byte {pos}", pos = *pos)),
+                }
+            }
+        }
+        Some(b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(bytes, pos);
+            if bytes.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(bytes, pos);
+                let key = parse_string(bytes, pos)?;
+                skip_ws(bytes, pos);
+                expect(bytes, pos, ":")?;
+                let value = parse_value(bytes, pos)?;
+                fields.push((key, value));
+                skip_ws(bytes, pos);
+                match bytes.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => return Err(format!("expected `,` or `}}` at byte {pos}", pos = *pos)),
+                }
+            }
+        }
+        Some(_) => parse_number(bytes, pos).map(Json::Num),
+    }
+}
+
+fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<f64, String> {
+    let start = *pos;
+    if bytes.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    while *pos < bytes.len()
+        && matches!(bytes[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+    {
+        *pos += 1;
+    }
+    std::str::from_utf8(&bytes[start..*pos])
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .ok_or_else(|| format!("bad number at byte {start}"))
+}
+
+fn parse_string(bytes: &[u8], pos: &mut usize) -> Result<String, String> {
+    if bytes.get(*pos) != Some(&b'"') {
+        return Err(format!("expected string at byte {pos}", pos = *pos));
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match bytes.get(*pos) {
+            None => return Err("unterminated string".to_string()),
+            Some(b'"') => {
+                *pos += 1;
+                return Ok(out);
+            }
+            Some(b'\\') => {
+                *pos += 1;
+                let esc = *bytes.get(*pos).ok_or("unterminated escape")?;
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'b' => out.push('\u{0008}'),
+                    b'f' => out.push('\u{000c}'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'u' => {
+                        let mut unit = parse_hex4(bytes, pos)?;
+                        // Surrogate pair: combine the low half.
+                        if (0xD800..0xDC00).contains(&unit) && bytes[*pos..].starts_with(b"\\u") {
+                            let save = *pos;
+                            *pos += 2;
+                            let low = parse_hex4(bytes, pos)?;
+                            if (0xDC00..0xE000).contains(&low) {
+                                let c = 0x10000
+                                    + ((unit as u32 - 0xD800) << 10)
+                                    + (low as u32 - 0xDC00);
+                                out.push(char::from_u32(c).ok_or("bad surrogate pair")?);
+                                continue;
+                            }
+                            *pos = save;
+                            unit = 0xFFFD; // lone high surrogate
+                        }
+                        out.push(char::from_u32(unit as u32).unwrap_or('\u{FFFD}'));
+                    }
+                    other => return Err(format!("bad escape `\\{}`", other as char)),
+                }
+            }
+            Some(_) => {
+                // Consume one UTF-8 scalar (input is a &str, so slicing
+                // at char boundaries is safe).
+                let rest = std::str::from_utf8(&bytes[*pos..])
+                    .map_err(|_| "invalid utf-8".to_string())?;
+                let c = rest.chars().next().unwrap();
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_hex4(bytes: &[u8], pos: &mut usize) -> Result<u16, String> {
+    let end = *pos + 4;
+    if end > bytes.len() {
+        return Err("truncated \\u escape".to_string());
+    }
+    let hex = std::str::from_utf8(&bytes[*pos..end]).map_err(|_| "bad \\u escape")?;
+    let v = u16::from_str_radix(hex, 16).map_err(|_| "bad \\u escape")?;
+    *pos = end;
+    Ok(v)
 }
 
 fn write_num(out: &mut String, n: f64) {
@@ -245,5 +459,49 @@ mod tests {
         let p = doc.pretty();
         assert!(p.contains("\"a\": 1"));
         assert!(p.contains("\"b\": []"));
+    }
+
+    #[test]
+    fn parse_round_trips_builder_output() {
+        let mut arr = Json::arr();
+        arr.push(1u64);
+        arr.push(Json::Null);
+        let doc = Json::obj()
+            .set("name", "wc \"quoted\"\n")
+            .set("speedup", 1.9)
+            .set("neg", -3i64)
+            .set("ok", true)
+            .set("items", arr)
+            .set("empty", Json::obj());
+        for text in [doc.to_string(), doc.pretty()] {
+            assert_eq!(Json::parse(&text).unwrap(), doc, "failed on {text}");
+        }
+    }
+
+    #[test]
+    fn parse_accessors_walk_documents() {
+        let doc = Json::parse(r#"{"tenants":[{"name":"a","executed":7}],"n":2.5}"#).unwrap();
+        let tenants = doc.get("tenants").unwrap().as_arr().unwrap();
+        assert_eq!(tenants.len(), 1);
+        assert_eq!(tenants[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(tenants[0].get("executed").unwrap().as_u64(), Some(7));
+        assert_eq!(doc.get("n").unwrap().as_f64(), Some(2.5));
+        assert!(doc.get("missing").is_none());
+    }
+
+    #[test]
+    fn parse_handles_escapes_and_unicode() {
+        let doc = Json::parse("\"a\\u0041\\t\\ud83d\\ude00é\"").unwrap();
+        assert_eq!(doc.as_str(), Some("aA\t😀é"));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_documents() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\":1} extra").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+        assert!(Json::parse("nul").is_err());
     }
 }

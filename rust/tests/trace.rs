@@ -1,0 +1,229 @@
+//! Tracing acceptance suite — the reconciliation contract between the
+//! span timeline and the counters every other subsystem already keeps:
+//!
+//! * **task ≡ scheduler** — every `Batch` span's executed-task arg
+//!   equals the number of `Task` spans recorded under its batch id, and
+//!   the session-total `Task` count matches the plan report's scheduler
+//!   totals;
+//! * **cache ≡ stats** — `CacheHit`/`CacheMiss`/`CacheMaterialize`/
+//!   `CacheShared`/`CacheReload`/`CacheSpill` event counts equal the
+//!   corresponding `CacheStats` fields after a hit-producing cached
+//!   plan;
+//! * **off ≡ on** — a run with the tracer disabled is digest-identical
+//!   to a traced run and records zero events;
+//! * **export shape** — `Tracer::export_chrome_trace` emits parseable
+//!   Chrome `trace_event` JSON with >0 complete spans for the WC and
+//!   K-Means presets.
+//!
+//! Worker-pool width comes from `MR4R_THREADS` (default 4); the CI
+//! trace-stress matrix runs this suite at 2/8 workers.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use mr4r::api::reducers::RirReducer;
+use mr4r::api::traits::{Emitter, KeyValue, Mapper, Reducer};
+use mr4r::benchmarks::suite::{prepare_on, BenchId, Framework, RunParams};
+use mr4r::benchmarks::Backend;
+use mr4r::optimizer::builder::canon;
+use mr4r::trace::{Event, SpanKind};
+use mr4r::util::json::Json;
+use mr4r::{JobConfig, Runtime};
+
+/// Worker threads for the session pools (CI matrix sets `MR4R_THREADS`).
+fn threads() -> usize {
+    std::env::var("MR4R_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4)
+        .max(1)
+}
+
+/// Every resident event across all per-thread rings.
+fn all_events(rt: &Runtime) -> Vec<Event> {
+    rt.tracer()
+        .snapshot()
+        .into_iter()
+        .flat_map(|t| t.events)
+        .collect()
+}
+
+#[test]
+fn task_spans_reconcile_with_scheduler_executed_counts() {
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(threads()));
+    rt.tracer().set_enabled(true);
+    let data: Vec<i64> = (0..4000).collect();
+    let out = rt
+        .dataset(&data)
+        .map_reduce(
+            |x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(*x % 13, 1),
+            RirReducer::<i64, i64>::new(canon::sum_i64("trace.mod13")),
+        )
+        .collect();
+    assert_eq!(out.items.len(), 13);
+
+    let events = all_events(&rt);
+    assert_eq!(rt.tracer().dropped(), 0, "ring must hold this tiny run");
+
+    // Per-batch invariant: each `Batch` span learned its executed-task
+    // count at drain (arg b); the workers recorded exactly one `Task`
+    // span per executed task under the same batch id (arg a). A batch
+    // id covers both of a job's phases, so sum spans per id.
+    let mut batch_executed: HashMap<u64, u64> = HashMap::new();
+    let mut task_spans: HashMap<u64, u64> = HashMap::new();
+    for e in &events {
+        match e.kind {
+            SpanKind::Batch => *batch_executed.entry(e.a).or_insert(0) += e.b,
+            SpanKind::Task => *task_spans.entry(e.a).or_insert(0) += 1,
+            _ => {}
+        }
+    }
+    assert!(!batch_executed.is_empty(), "the collect must open a batch");
+    assert_eq!(
+        batch_executed, task_spans,
+        "per-batch executed args must match per-batch Task span counts"
+    );
+
+    // Session total against the plan report's scheduler accounting.
+    let report_executed: u64 = out
+        .report
+        .stage_metrics
+        .iter()
+        .map(|m| m.batch_pool.executed as u64)
+        .sum();
+    let total_tasks: u64 = task_spans.values().sum();
+    assert_eq!(
+        total_tasks, report_executed,
+        "session Task spans must equal the report's executed totals"
+    );
+
+    // The collect itself left its lowering span and a trace summary.
+    assert!(rt.tracer().count(SpanKind::PlanLower) >= 1);
+    let summary = out.report.trace.as_ref().expect("traced collect attaches a summary");
+    assert!(summary.spans > 0);
+    assert!(summary.phase("schedule").is_some(), "{summary:?}");
+
+    // The pool published its task-latency histogram regardless of the
+    // tracer switch; every executed task recorded one sample.
+    match rt.metrics().get("pool.task_us") {
+        Some(mr4r::trace::MetricValue::Histogram { count, .. }) => {
+            assert_eq!(*count, report_executed, "one pool.task_us sample per task")
+        }
+        other => panic!("pool.task_us must be a histogram, got {other:?}"),
+    }
+}
+
+#[test]
+fn cache_events_reconcile_with_cache_stats() {
+    let rt = Runtime::with_config(JobConfig::fast().with_threads(threads()));
+    rt.tracer().set_enabled(true);
+    let data: Vec<i64> = (0..600).collect();
+    let mapper: Arc<dyn Mapper<i64, i64, i64>> =
+        Arc::new(|x: &i64, em: &mut dyn Emitter<i64, i64>| em.emit(*x % 11, *x));
+    let reducer: Arc<dyn Reducer<i64, i64>> =
+        Arc::new(RirReducer::<i64, i64>::new(canon::sum_i64("trace.mod11")));
+    let run = || -> Vec<(i64, i64)> {
+        rt.dataset(&data)
+            .map_reduce_shared(Arc::clone(&mapper), Arc::clone(&reducer))
+            .cache()
+            .map_reduce(
+                |kv: &KeyValue<i64, i64>, em: &mut dyn Emitter<i64, i64>| {
+                    em.emit(kv.key, kv.value)
+                },
+                RirReducer::<i64, i64>::new(canon::sum_i64("trace.echo11")),
+            )
+            .collect_sorted()
+            .into_tuples()
+    };
+
+    let first = run();
+    let second = run();
+    assert_eq!(first, second, "the cached round must agree with the cold one");
+
+    let s = rt.cache().stats();
+    assert!(s.misses >= 1, "the first round materializes: {s:?}");
+    assert!(s.hits >= 1, "the second round reads the entry back: {s:?}");
+
+    // Events are emitted at the exact lines that bump the stats, so the
+    // counts reconcile one to one.
+    let t = rt.tracer();
+    assert_eq!(t.count(SpanKind::CacheHit), s.hits);
+    assert_eq!(t.count(SpanKind::CacheMiss), s.misses);
+    assert_eq!(
+        t.count(SpanKind::CacheMaterialize),
+        s.misses,
+        "every claim in this run completed its materialization"
+    );
+    assert_eq!(t.count(SpanKind::CacheShared), s.shared_in_flight);
+    assert_eq!(t.count(SpanKind::CacheReload), s.reloads);
+    assert_eq!(t.count(SpanKind::CacheSpill), s.spills);
+}
+
+#[test]
+fn tracing_off_is_digest_identical_and_recordless() {
+    let params = RunParams::fast(threads());
+    let traced_rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(threads())));
+    traced_rt.tracer().set_enabled(true);
+    let traced = prepare_on(Arc::clone(&traced_rt), BenchId::WC, 0.0005, 91, Backend::Native)
+        .run(Framework::Mr4r, &params);
+
+    let plain_rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(threads())));
+    let plain = prepare_on(Arc::clone(&plain_rt), BenchId::WC, 0.0005, 91, Backend::Native)
+        .run(Framework::Mr4r, &params);
+
+    assert_eq!(
+        traced.digest, plain.digest,
+        "tracing must never change what a run computes"
+    );
+    assert!(
+        traced_rt.tracer().total_events() > 0,
+        "the traced session must have recorded the run"
+    );
+    assert_eq!(
+        plain_rt.tracer().total_events(),
+        0,
+        "a disabled tracer records nothing"
+    );
+    assert_eq!(plain_rt.tracer().dropped(), 0);
+}
+
+#[test]
+fn chrome_export_parses_with_spans_for_wc_and_kmeans() {
+    for id in [BenchId::WC, BenchId::KM] {
+        let rt = Arc::new(Runtime::with_config(JobConfig::fast().with_threads(threads())));
+        rt.tracer().set_enabled(true);
+        let w = prepare_on(Arc::clone(&rt), id, 0.0005, 92, Backend::Native);
+        let o = w.run(Framework::Mr4r, &RunParams::fast(threads()));
+        assert!(o.secs > 0.0);
+
+        let doc = rt.tracer().export_chrome_trace();
+        let parsed = Json::parse(&doc.to_string())
+            .unwrap_or_else(|e| panic!("{}: export must be valid JSON: {e}", id.code()));
+        let events = parsed
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .unwrap_or_else(|| panic!("{}: traceEvents array missing", id.code()));
+        let spans = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .count();
+        assert!(spans > 0, "{}: no complete spans in the export", id.code());
+        for e in events {
+            assert!(
+                e.get("name").and_then(Json::as_str).is_some(),
+                "{}: every record is named",
+                id.code()
+            );
+            assert_eq!(e.get("pid").and_then(Json::as_u64), Some(1));
+            assert!(e.get("tid").and_then(Json::as_u64).is_some());
+        }
+        assert!(
+            parsed
+                .get("otherData")
+                .and_then(|o| o.get("dropped_events"))
+                .is_some(),
+            "{}: the export reports its drop count",
+            id.code()
+        );
+    }
+}
